@@ -1,0 +1,150 @@
+//! Fig. 3 reproduction: the experimental digital twin of the HP memristor.
+//!
+//! * Fig. 3c-e — deployment statistics of the three analogue arrays
+//!   (2x14, 14x14, 14x1 + bias rows);
+//! * Fig. 3f/i — waveform tracking under the four stimuli (prints MRE per
+//!   stimulus and the I-V Lissajous extrema);
+//! * Fig. 3j  — modelling error of our system vs the recurrent-ResNet
+//!   digital twin (MRE + normalized DTW, averaged over the stimuli).
+//!
+//! Run: `cargo run --release --example hp_twin [-- --reps 3 --steps 500]`
+
+use memode::analog::system::AnalogNoise;
+use memode::config::SystemConfig;
+use memode::device::hp;
+use memode::metrics::dtw::dtw_normalized;
+use memode::metrics::mre::mre;
+use memode::twin::hp::HpTwin;
+use memode::twin::setup::TrainedWeights;
+use memode::util::cli::Args;
+use memode::util::stats;
+use memode::workload::stimuli::Waveform;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::new("hp_twin", "Fig. 3 reproduction")
+        .opt("steps", "500", "trajectory samples (paper: 500)")
+        .opt("reps", "3", "repetitions per stimulus (analog re-deploys)")
+        .opt("seed", "42", "base seed")
+        .parse_env();
+    let steps = args.get_usize("steps");
+    let reps = args.get_u64("reps");
+    let seed = args.get_u64("seed");
+
+    let cfg = SystemConfig::default();
+    let weights = TrainedWeights::load(&cfg)?;
+
+    // ---- Fig. 3c-e: deployment statistics -------------------------------
+    println!("== Fig. 3c-e: analogue deployment of the 3-layer field ==");
+    {
+        use memode::analog::system::{AnalogMlp, LayerWeights};
+        let layers: Vec<LayerWeights> = weights
+            .hp_node
+            .layers
+            .iter()
+            .map(|(w, b)| LayerWeights::new(w, b))
+            .collect();
+        let mlp = AnalogMlp::deploy(
+            &layers,
+            &cfg.device,
+            AnalogNoise::hardware(),
+            seed,
+        );
+        for (l, (w, _)) in weights.hp_node.layers.iter().enumerate() {
+            let eff = mlp.layer_weights(l);
+            let mut errs = Vec::new();
+            // `eff` carries the bias as an extra final row; compare the
+            // weight rows only, index-aligned.
+            let w_max = w
+                .data
+                .iter()
+                .fold(0.0f64, |m, &x| m.max(x.abs()))
+                .max(1e-12);
+            for r in 0..w.rows {
+                for c in 0..w.cols {
+                    errs.push((eff.at(r, c) - w.at(r, c)).abs() / w_max);
+                }
+            }
+            let s = stats::summary(&errs);
+            println!(
+                "  layer {l} ({}x{}): mean |dW|/Wmax {:.2} %, max {:.2} %",
+                w.rows,
+                w.cols,
+                s.mean * 100.0,
+                s.max * 100.0
+            );
+        }
+        println!("  (paper Fig. 3e: ~2.2 % average programming error)\n");
+    }
+
+    // ---- Fig. 3f/i/j: waveform tracking ---------------------------------
+    println!(
+        "== Fig. 3f/j: tracking + error vs recurrent ResNet ({} samples, {} reps) ==",
+        steps, reps
+    );
+    println!(
+        "{:<14} {:>12} {:>12} {:>12} {:>12}",
+        "stimulus", "ours MRE", "ours DTW", "resnet MRE", "resnet DTW"
+    );
+    let mut ours_mre_all = Vec::new();
+    let mut ours_dtw_all = Vec::new();
+    let mut res_mre_all = Vec::new();
+    let mut res_dtw_all = Vec::new();
+    for (name, wave) in Waveform::paper_set() {
+        let truth = hp::simulate(&|t| wave.eval(t), steps, hp::DT, hp::H0, 8);
+        // Our system: analogue memristive solver, re-deployed per rep.
+        let mut ours_mre = Vec::new();
+        let mut ours_dtw = Vec::new();
+        for r in 0..reps {
+            let mut twin = HpTwin::analog(
+                &weights.hp_node,
+                &cfg.device,
+                AnalogNoise::hardware(),
+                seed + 1000 * r + 7,
+            );
+            let h = twin.simulate(&wave, hp::H0, steps)?;
+            ours_mre.push(mre(&h, &truth.h));
+            ours_dtw.push(dtw_normalized(&h, &truth.h));
+        }
+        // Baseline: recurrent ResNet on digital hardware (deterministic).
+        let mut resnet = HpTwin::resnet(&weights.hp_resnet);
+        let hb = resnet.simulate(&wave, hp::H0, steps)?;
+        let (rm, rd) = (mre(&hb, &truth.h), dtw_normalized(&hb, &truth.h));
+        let (om, od) = (
+            stats::summary(&ours_mre).mean,
+            stats::summary(&ours_dtw).mean,
+        );
+        println!(
+            "{:<14} {:>12.4} {:>12.4} {:>12.4} {:>12.4}",
+            name, om, od, rm, rd
+        );
+        ours_mre_all.push(om);
+        ours_dtw_all.push(od);
+        res_mre_all.push(rm);
+        res_dtw_all.push(rd);
+
+        // Fig. 3i flavour: Lissajous extrema of the I-V loop.
+        if name == "sine" {
+            let i_max = truth
+                .i
+                .iter()
+                .fold(0.0f64, |m, &x| m.max(x.abs()));
+            println!(
+                "    (Fig. 3i: |I|max {:.2} mA, state swing {:.2}..{:.2})",
+                i_max * 1e3,
+                truth.h.iter().cloned().fold(f64::INFINITY, f64::min),
+                truth.h.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+            );
+        }
+    }
+    let mean = |v: &[f64]| stats::summary(v).mean;
+    println!(
+        "\nFig. 3j summary (mean over stimuli):\n\
+         \x20 ours   MRE {:.3} DTW {:.3}   (paper: 0.17 / 0.15)\n\
+         \x20 resnet MRE {:.3} DTW {:.3}   (paper: 0.61 / 0.39)",
+        mean(&ours_mre_all),
+        mean(&ours_dtw_all),
+        mean(&res_mre_all),
+        mean(&res_dtw_all)
+    );
+    Ok(())
+}

@@ -1,0 +1,217 @@
+//! Fig. 4 reproduction — the end-to-end driver of this repository.
+//!
+//! Runs the full 48 s Lorenz96 workload (2400 samples at 0.02 s; 1800
+//! interpolation + 600 extrapolation, the paper's split) through every
+//! backend and reports:
+//!
+//! * Fig. 4d-f — per-phase L1 error of our (analogue) system;
+//! * Fig. 4g  — interpolation/extrapolation L1 across ours / LSTM / GRU /
+//!   RNN, mean ± std over `--reps` trials;
+//! * Lyapunov horizon — valid prediction time in Lyapunov times (the
+//!   paper's "seven largest Lyapunov times" claim);
+//! * Fig. 4j  — read-noise x programming-noise robustness grid
+//!   (`--noise-grid`).
+//!
+//! All states and errors are in the paper's *normalized* units (see
+//! `workload::lorenz96::SCALE`).
+//!
+//! Run: `cargo run --release --example lorenz96_twin [-- --reps 3 --noise-grid]`
+
+use memode::analog::system::AnalogNoise;
+use memode::config::SystemConfig;
+use memode::device::noise::{FIG4J_PROG_LEVELS, FIG4J_READ_LEVELS};
+use memode::device::taox::DeviceConfig;
+use memode::metrics::l1::mean_l1_multi;
+use memode::metrics::lyapunov;
+use memode::twin::lorenz96::Lorenz96Twin;
+use memode::twin::setup::TrainedWeights;
+use memode::util::cli::Args;
+use memode::util::stats;
+use memode::workload::lorenz96 as l96;
+
+fn split_l1(
+    pred: &[Vec<f64>],
+    truth: &[Vec<f64>],
+) -> (f64, f64) {
+    let k = l96::TRAIN_POINTS.min(pred.len());
+    let interp = mean_l1_multi(&pred[..k], &truth[..k]);
+    let extrap = if pred.len() > k {
+        mean_l1_multi(&pred[k..], &truth[k..])
+    } else {
+        f64::NAN
+    };
+    (interp, extrap)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::new("lorenz96_twin", "Fig. 4 reproduction (e2e driver)")
+        .opt("reps", "3", "trials per model (paper: 10)")
+        .opt("steps", "2400", "total samples (paper: 2400)")
+        .opt("seed", "42", "base seed")
+        .flag("noise-grid", "run the Fig. 4j noise robustness grid")
+        .parse_env();
+    let reps = args.get_u64("reps");
+    let steps = args.get_usize("steps");
+    let seed = args.get_u64("seed");
+
+    let cfg = SystemConfig::default();
+    // Fig. 4 convention: the paper's Lorenz96 analogue system is an
+    // experimentally grounded *simulation* — read/programming noise, no
+    // yield faults (those belong to the physically deployed Fig. 2/3).
+    let device = DeviceConfig { fault_rate: 0.0, ..cfg.device.clone() };
+    let weights = TrainedWeights::load(&cfg)?;
+    let truth = l96::simulate_normalized(steps);
+    let mle = l96::max_lyapunov_exponent(l96::FORCING, l96::DIM, 1);
+    println!(
+        "Lorenz96 d={} F={}: MLE {:.3} (Lyapunov time {:.2} s); {} samples",
+        l96::DIM,
+        l96::FORCING,
+        mle,
+        1.0 / mle,
+        steps
+    );
+
+    // ---- Fig. 4d-g: error comparison across models ----------------------
+    println!(
+        "\n== Fig. 4g: interpolation (0-36 s) / extrapolation (36-48 s) L1 ==",
+    );
+    println!(
+        "{:<22} {:>10} {:>8} {:>10} {:>8} {:>9}",
+        "model", "interp", "±", "extrap", "±", "VPT (LT)"
+    );
+
+    // Ours: analogue memristive solver, re-deployed per rep.
+    let run_ours = |rep: u64| -> anyhow::Result<Vec<Vec<f64>>> {
+        let mut twin = Lorenz96Twin::analog(
+            &weights.l96_node,
+            &device,
+            AnalogNoise::hardware(),
+            seed + rep * 1000 + 3,
+        );
+        twin.simulate(&l96::Y0, steps)
+    };
+    // Digital node + recurrent baselines (deterministic -> 1 trial each,
+    // but re-run for symmetric reporting).
+    type Runner<'a> = Box<dyn Fn(u64) -> anyhow::Result<Vec<Vec<f64>>> + 'a>;
+    let models: Vec<(&str, Runner)> = vec![
+        ("memristive node (ours)", Box::new(run_ours)),
+        (
+            "neural-ode (digital)",
+            Box::new(|_r| {
+                Lorenz96Twin::digital(&weights.l96_node)
+                    .simulate(&l96::Y0, steps)
+            }),
+        ),
+        (
+            "lstm",
+            Box::new(|_r| {
+                Lorenz96Twin::recurrent(&weights.l96_lstm)?
+                    .simulate(&l96::Y0, steps)
+            }),
+        ),
+        (
+            "gru",
+            Box::new(|_r| {
+                Lorenz96Twin::recurrent(&weights.l96_gru)?
+                    .simulate(&l96::Y0, steps)
+            }),
+        ),
+        (
+            "rnn",
+            Box::new(|_r| {
+                Lorenz96Twin::recurrent(&weights.l96_rnn)?
+                    .simulate(&l96::Y0, steps)
+            }),
+        ),
+    ];
+    let mut ours_sample: Option<Vec<Vec<f64>>> = None;
+    for (name, run) in &models {
+        let mut interp = Vec::new();
+        let mut extrap = Vec::new();
+        let mut vpt = Vec::new();
+        for r in 0..reps {
+            let pred = run(r)?;
+            let (i, e) = split_l1(&pred, &truth);
+            interp.push(i);
+            extrap.push(e);
+            vpt.push(lyapunov::horizon_in_lyapunov_times(
+                lyapunov::valid_prediction_time(&pred, &truth, l96::DT, 0.4),
+                mle,
+            ));
+            if *name == "memristive node (ours)" && ours_sample.is_none() {
+                ours_sample = Some(pred);
+            }
+        }
+        let (si, se, sv) = (
+            stats::summary(&interp),
+            stats::summary(&extrap),
+            stats::summary(&vpt),
+        );
+        println!(
+            "{:<22} {:>10.3} {:>8.3} {:>10.3} {:>8.3} {:>9.2}",
+            name, si.mean, si.std, se.mean, se.std, sv.mean
+        );
+    }
+    println!(
+        "(paper: ours 0.512 interp / 0.321 extrap; LSTM/GRU/RNN larger; \
+         valid across ~7 Lyapunov times)"
+    );
+
+    // ---- Fig. 4d-f: phase error profile of our system -------------------
+    if let Some(pred) = &ours_sample {
+        println!("\n== Fig. 4d: error over time (ours, dim-averaged L1) ==");
+        let window = 200; // 4 s buckets
+        for start in (0..pred.len()).step_by(window) {
+            let end = (start + window).min(pred.len());
+            let e = mean_l1_multi(&pred[start..end], &truth[start..end]);
+            let phase = if start < l96::TRAIN_POINTS { "interp" } else { "extrap" };
+            println!(
+                "  {:>5.1}-{:>5.1} s [{}]: L1 {:>7.3} {}",
+                start as f64 * l96::DT,
+                end as f64 * l96::DT,
+                phase,
+                e,
+                "#".repeat((e * 40.0).min(60.0) as usize)
+            );
+        }
+    }
+
+    // ---- Fig. 4j: noise robustness grid ----------------------------------
+    if args.get_bool("noise-grid") {
+        println!(
+            "\n== Fig. 4j: extrapolation L1 under read x programming noise \
+             ({} reps) ==",
+            reps
+        );
+        print!("{:>12}", "read\\prog");
+        for p in FIG4J_PROG_LEVELS {
+            print!("{:>9.0}%", p * 100.0);
+        }
+        println!();
+        for read in FIG4J_READ_LEVELS {
+            print!("{:>11.0}%", read * 100.0);
+            for prog in FIG4J_PROG_LEVELS {
+                let mut errs = Vec::new();
+                for r in 0..reps {
+                    let mut twin = Lorenz96Twin::analog(
+                        &weights.l96_node,
+                        &device,
+                        AnalogNoise { read, prog },
+                        seed + r * 5000 + (read * 1e4) as u64 * 17
+                            + (prog * 1e4) as u64 * 31,
+                    );
+                    let pred = twin.simulate(&l96::Y0, steps)?;
+                    let (_, e) = split_l1(&pred, &truth);
+                    errs.push(e);
+                }
+                print!("{:>10.3}", stats::summary(&errs).mean);
+            }
+            println!();
+        }
+        println!(
+            "(paper: read noise is benign — 2 % read / 0 % prog gave L1 \
+             0.317 vs 0.322 noise-free)"
+        );
+    }
+    Ok(())
+}

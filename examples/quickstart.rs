@@ -1,0 +1,63 @@
+//! Quickstart: the three-layer stack in ~60 lines.
+//!
+//! 1. load the trained weights exported by `make artifacts`;
+//! 2. run the HP-memristor twin on the *digital* backend (Rust RK4);
+//! 3. run the same twin on the *analogue* backend (simulated memristive
+//!    solver) and compare both against the physical ground truth;
+//! 4. if the PJRT artifacts are built, execute the AOT crossbar kernel.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use memode::analog::system::AnalogNoise;
+use memode::config::SystemConfig;
+use memode::device::hp;
+use memode::metrics::mre::mre;
+use memode::runtime::service::PjrtService;
+use memode::runtime::TensorF32;
+use memode::twin::hp::HpTwin;
+use memode::twin::setup::TrainedWeights;
+use memode::workload::stimuli::Waveform;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = SystemConfig::default();
+    let weights = TrainedWeights::load(&cfg)?;
+
+    // Ground truth: the physical HP memristor under a sine stimulus.
+    let wave = Waveform::sine(1.0, 4.0);
+    let truth = hp::simulate_default(&|t| wave.eval(t));
+    println!("ground truth: {} samples at {} s", truth.h.len(), hp::DT);
+
+    // Digital twin (Rust RK4 over the trained field).
+    let mut digital = HpTwin::digital(&weights.hp_node);
+    let h_dig = digital.simulate(&wave, hp::H0, hp::N_POINTS)?;
+    println!("digital twin  MRE vs truth: {:.4}", mre(&h_dig, &truth.h));
+
+    // Analogue twin (simulated memristive solver at the paper's hardware
+    // noise operating point).
+    let mut analog = HpTwin::analog(
+        &weights.hp_node,
+        &cfg.device,
+        AnalogNoise::hardware(),
+        cfg.seed,
+    );
+    let h_ana = analog.simulate(&wave, hp::H0, hp::N_POINTS)?;
+    println!("analogue twin MRE vs truth: {:.4}", mre(&h_ana, &truth.h));
+
+    // PJRT path (optional: needs `make artifacts`).
+    match PjrtService::start(&cfg.artifacts_dir) {
+        Ok(svc) => {
+            let h = svc.handle();
+            let v = TensorF32::from_f64(vec![32], &[0.2; 32]);
+            let gp = TensorF32::new(vec![32, 32], vec![5e-5; 1024]);
+            let gn = TensorF32::new(vec![32, 32], vec![1e-5; 1024]);
+            let out = h.execute("crossbar_vmm", vec![v, gp, gn])?;
+            // Every column current: 32 rows * 0.2 V * 40 µS = 256 µA.
+            println!(
+                "pjrt crossbar_vmm: column current {:.1} µA (expect 256.0)",
+                out.data[0] * 1e6
+            );
+        }
+        Err(e) => println!("pjrt path skipped: {e}"),
+    }
+    Ok(())
+}

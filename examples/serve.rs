@@ -1,0 +1,116 @@
+//! End-to-end serving driver: the L3 coordinator under batched client load.
+//!
+//! Starts the PJRT runtime (if artifacts exist), registers every twin
+//! route, then drives concurrent clients against a mix of routes and
+//! reports accepted/completed counts, latency percentiles and throughput —
+//! the serving-side view of the paper's system.
+//!
+//! Run: `cargo run --release --example serve [-- --requests 128 --clients 4]`
+
+use std::sync::Arc;
+
+use memode::config::SystemConfig;
+use memode::coordinator::service::Coordinator;
+use memode::runtime::service::PjrtService;
+use memode::twin::setup::{build_registry, TrainedWeights};
+use memode::twin::TwinRequest;
+use memode::util::cli::Args;
+use memode::workload::stimuli::Waveform;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::new("serve", "coordinator under batched load")
+        .opt("requests", "128", "requests per client")
+        .opt("clients", "4", "concurrent client threads")
+        .opt("steps", "100", "samples per request")
+        .flag("no-pjrt", "skip the PJRT runtime even if artifacts exist")
+        .parse_env();
+    let n_req = args.get_usize("requests");
+    let n_clients = args.get_usize("clients");
+    let steps = args.get_usize("steps");
+
+    let cfg = SystemConfig::default();
+    let weights = TrainedWeights::load(&cfg)?;
+    let pjrt = if args.get_bool("no-pjrt") {
+        None
+    } else {
+        match PjrtService::start(&cfg.artifacts_dir) {
+            Ok(svc) => {
+                svc.handle().preload(&["l96_step_b1", "l96_rollout"])?;
+                Some(svc)
+            }
+            Err(e) => {
+                eprintln!("pjrt unavailable ({e}); continuing without");
+                None
+            }
+        }
+    };
+    let reg =
+        build_registry(&cfg, &weights, pjrt.as_ref().map(|s| s.handle()))?;
+    println!("routes: {}", reg.keys().join(", "));
+    let coord = Arc::new(Coordinator::start(reg, &cfg.serve));
+
+    // Client mix: mostly digital (fast), some analogue and recurrent; HP
+    // twins exercise the driven path.
+    let mix = [
+        "lorenz96/digital",
+        "lorenz96/digital",
+        "lorenz96/lstm",
+        "lorenz96/gru",
+        "hp/digital",
+        "hp/resnet",
+    ];
+    let t0 = std::time::Instant::now();
+    let mut clients = Vec::new();
+    for c in 0..n_clients {
+        let coord = Arc::clone(&coord);
+        clients.push(std::thread::spawn(move || {
+            let mut ok = 0usize;
+            let mut shed = 0usize;
+            for k in 0..n_req {
+                let route = mix[(c + k) % mix.len()];
+                let req = if route.starts_with("hp/") {
+                    TwinRequest::driven(
+                        vec![],
+                        steps,
+                        Waveform::sine(1.0, 4.0),
+                    )
+                } else {
+                    TwinRequest::autonomous(vec![], steps)
+                };
+                match coord.submit(route, req) {
+                    Ok(pending) => {
+                        if pending
+                            .wait()
+                            .map(|r| r.result.is_ok())
+                            .unwrap_or(false)
+                        {
+                            ok += 1;
+                        }
+                    }
+                    Err(_) => shed += 1,
+                }
+            }
+            (ok, shed)
+        }));
+    }
+    let mut total_ok = 0;
+    let mut total_shed = 0;
+    for c in clients {
+        let (ok, shed) = c.join().expect("client thread");
+        total_ok += ok;
+        total_shed += shed;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let issued = n_clients * n_req;
+    println!(
+        "\n{} clients x {} requests ({} samples each):\n\
+         \x20 completed {total_ok}/{issued} (shed {total_shed}) in {wall:.2} s \
+         -> {:.1} req/s",
+        n_clients,
+        n_req,
+        steps,
+        total_ok as f64 / wall
+    );
+    println!("telemetry: {}", coord.stats());
+    Ok(())
+}

@@ -1,0 +1,268 @@
+"""AOT entry point: train (cached), export weights, lower HLO artifacts.
+
+Run as ``python -m compile.aot --outdir ../artifacts`` (the Makefile's
+``artifacts`` target). Produces:
+
+* ``weights/*.json``      — trained parameters for the Rust analogue backend
+                            and the Rust-native baseline models;
+* ``*.hlo.txt``           — HLO **text** modules (the interchange format the
+                            ``xla`` crate's 0.5.1 extension can parse; jax's
+                            serialized protos use 64-bit ids it rejects);
+* ``manifest.json``       — artifact index (entry names, shapes, dtypes)
+                            consumed by ``rust/src/runtime/artifacts.rs``.
+
+Python runs ONCE at build time; the Rust binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import datasets, model, train
+
+# Trajectory lengths baked into the rollout executables.
+HP_STEPS = datasets.HP_NPOINTS - 1  # 499 RK4 steps -> 500-sample trajectory
+L96_STEPS = datasets.L96_NPOINTS - 1  # 2399 steps -> 2400-sample trajectory
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is ESSENTIAL: the default printer elides
+    # big literals as `constant({...})`, which the xla_extension 0.5.1 text
+    # parser silently reads back as zeros — the baked weights vanish.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Weight training / caching
+# ---------------------------------------------------------------------------
+
+
+def ensure_weights(outdir: str, retrain: bool) -> dict:
+    wdir = os.path.join(outdir, "weights")
+    os.makedirs(wdir, exist_ok=True)
+    report_path = os.path.join(wdir, "training_report.json")
+    report = {}
+    if os.path.exists(report_path) and not retrain:
+        with open(report_path) as f:
+            report = json.load(f)
+
+    def cached(name, trainer, to_json):
+        path = os.path.join(wdir, f"{name}.json")
+        if os.path.exists(path) and not retrain:
+            with open(path) as f:
+                return json.load(f)
+        print(f"[aot] training {name} ...")
+        params, metrics = trainer()
+        obj = to_json(params, metrics)
+        train.save_json(obj, path)
+        report[name] = metrics
+        return obj
+
+    hp_node = cached(
+        "hp_node",
+        train.train_hp_node,
+        lambda p, m: train.params_to_json(
+            p,
+            {
+                "kind": "node",
+                "task": "hp",
+                "layers": list(model.HP_LAYERS),
+                "dt": datasets.HP_DT,
+                "metrics": m,
+            },
+        ),
+    )
+    hp_resnet = cached(
+        "hp_resnet",
+        train.train_hp_resnet,
+        lambda p, m: train.params_to_json(
+            p,
+            {
+                "kind": "resnet",
+                "task": "hp",
+                "layers": list(model.HP_LAYERS),
+                "dt": datasets.HP_DT,
+                "metrics": m,
+            },
+        ),
+    )
+    l96_node = cached(
+        "l96_node",
+        train.train_l96_node,
+        lambda p, m: train.params_to_json(
+            p,
+            {
+                "kind": "node",
+                "task": "l96",
+                "layers": [datasets.L96_DIM, 64, 64, datasets.L96_DIM],
+                "dt": datasets.L96_DT,
+                "metrics": m,
+            },
+        ),
+    )
+    baselines = {}
+    for kind in ("rnn", "gru", "lstm"):
+        baselines[kind] = cached(
+            f"l96_{kind}",
+            lambda kind=kind: train.train_l96_rnn(kind),
+            lambda p, m, kind=kind: train.rnn_to_json(
+                p,
+                {
+                    "kind": kind,
+                    "task": "l96",
+                    "hidden": 64,
+                    "d_in": datasets.L96_DIM,
+                    "dt": datasets.L96_DT,
+                    "metrics": m,
+                },
+            ),
+        )
+    with open(report_path, "w") as f:
+        json.dump(report, f, indent=2)
+    return {
+        "hp_node": hp_node,
+        "hp_resnet": hp_resnet,
+        "l96_node": l96_node,
+        **{f"l96_{k}": v for k, v in baselines.items()},
+    }
+
+
+# ---------------------------------------------------------------------------
+# HLO lowering
+# ---------------------------------------------------------------------------
+
+
+def build_entries(weights: dict):
+    """Each entry: (name, jitted fn with weights baked, example arg specs).
+
+    All step/rollout entries lower through the Pallas kernels (L1 fuses
+    into the exported HLO). Historical note: these artifacts once executed
+    wrongly in Rust because `as_hlo_text()` elides large constants by
+    default (`constant({...})`) and the 0.5.1 text parser zero-fills them
+    — fixed by `print_large_constants=True` in `to_hlo_text`.
+    """
+    hp_params = train.json_to_params(weights["hp_node"])
+    l96_params = train.json_to_params(weights["l96_node"])
+    hp_dt = float(weights["hp_node"]["meta"]["dt"])
+    l96_dt = float(weights["l96_node"]["meta"]["dt"])
+    d = datasets.L96_DIM
+
+    def hp_step(h, x0, xh, x1):
+        return (model.step_driven(hp_params, h, x0, xh, x1, hp_dt),)
+
+    def hp_rollout(h0, xs_half):
+        return (model.rollout_driven(hp_params, h0, xs_half, hp_dt),)
+
+    def l96_step_b1(h):
+        return (model.step_autonomous(l96_params, h, l96_dt),)
+
+    def l96_step_b32(h):
+        return (model.step_autonomous(l96_params, h, l96_dt),)
+
+    def l96_rollout(h0):
+        return (model.rollout_autonomous(l96_params, h0, L96_STEPS, l96_dt),)
+
+    def crossbar_vmm(v, gp, gn):
+        from compile.kernels import crossbar
+
+        return (crossbar.crossbar_vmm(v, gp, gn),)
+
+    return [
+        ("hp_step", hp_step, [_spec((1,)), _spec((1,)), _spec((1,)), _spec((1,))]),
+        (
+            "hp_rollout",
+            hp_rollout,
+            [_spec((1,)), _spec((2 * HP_STEPS + 1, 1))],
+        ),
+        ("l96_step_b1", l96_step_b1, [_spec((d,))]),
+        ("l96_step_b32", l96_step_b32, [_spec((32, d))]),
+        ("l96_rollout", l96_rollout, [_spec((d,))]),
+        (
+            "crossbar_vmm",
+            crossbar_vmm,
+            [_spec((32,)), _spec((32, 32)), _spec((32, 32))],
+        ),
+    ]
+
+
+def lower_all(outdir: str, weights: dict) -> dict:
+    manifest = {"artifacts": []}
+    for name, fn, specs in build_entries(weights):
+        print(f"[aot] lowering {name} ...")
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(outdir, fname), "w") as f:
+            f.write(text)
+        out_shapes = [
+            list(o.shape) for o in jax.eval_shape(fn, *specs)
+        ]
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": [list(s.shape) for s in specs],
+                "outputs": out_shapes,
+                "dtype": "f32",
+                "return_tuple": True,
+            }
+        )
+    manifest["hp"] = {
+        "dt": datasets.HP_DT,
+        "n_points": datasets.HP_NPOINTS,
+        "layers": list(model.HP_LAYERS),
+    }
+    manifest["l96"] = {
+        "dt": datasets.L96_DT,
+        "n_points": datasets.L96_NPOINTS,
+        "train_points": datasets.L96_TRAIN_POINTS,
+        "dim": datasets.L96_DIM,
+        # Normalized-space initial condition (the paper's convention: state
+        # = physical / scale; see datasets.py).
+        "y0": datasets.L96_Y0.tolist(),
+        "scale": datasets.L96_SCALE,
+        "forcing": datasets.L96_F,
+    }
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument(
+        "--retrain", action="store_true", help="ignore cached weights"
+    )
+    ap.add_argument(
+        "--skip-hlo",
+        action="store_true",
+        help="only train/export weights (used by fast CI loops)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+    weights = ensure_weights(args.outdir, args.retrain)
+    if not args.skip_hlo:
+        manifest = lower_all(args.outdir, weights)
+        n = len(manifest["artifacts"])
+        print(f"[aot] wrote {n} HLO artifacts + manifest to {args.outdir}")
+
+
+if __name__ == "__main__":
+    main()

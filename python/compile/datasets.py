@@ -1,0 +1,240 @@
+"""Ground-truth dynamical systems and stimulation waveforms.
+
+Implements the two physical assets the paper builds digital twins of:
+
+* the HP (Hewlett-Packard) current-controlled memristor, Eqs. (2)-(3) of the
+  paper (Strukov et al. 2008; Radwan et al. 2010 model for periodic signals),
+  with a Joglekar window to keep the state bounded, and
+* the Lorenz96 atmospheric dynamics, Eq. (4), with periodic boundary
+  conditions.
+
+Both are integrated with a classic RK4 scheme at fine resolution; these
+trajectories are the *ground truth* for training and for every accuracy
+figure (Fig. 3f-j, Fig. 4d-g).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# HP memristor ground truth (the twinned asset of Fig. 3)
+# ---------------------------------------------------------------------------
+
+# Canonical HP-memristor constants (Strukov 2008). The state is normalised to
+# h = w/D in [0, 1]; the drift rate constant follows from
+# dh/dt = mu_v * R_ON / D^2 * i  with  mu_v = 1e-14 m^2 s^-1 V^-1,
+# R_ON = 100 Ohm, D ~ 3.2 nm  ->  mu_v * R_ON / D^2 ~ 1e5 (1/(Ohm s)).
+# (D = 3.2 nm rather than Strukov's 10 nm so the Fig. 3 stimuli sweep a wide
+# hysteresis loop within the paper's 0.5 s observation window.)
+HP_R_ON = 100.0  # Ohm, fully-doped resistance
+HP_R_OFF = 16_000.0  # Ohm, undoped resistance
+HP_K = 1.0e5  # mu_v * R_ON / D^2  [1/(Ohm s)] drift prefactor
+HP_DT = 1.0e-3  # s, paper samples 500 points at dt = 1e-3 s
+HP_NPOINTS = 500  # paper: 500-point training trajectories
+HP_H0 = 0.1  # initial boundary position w/D
+
+
+def hp_resistance(h: np.ndarray) -> np.ndarray:
+    """Eq. (2): two-resistor series model, R(h) = R_ON h + R_OFF (1 - h)."""
+    return HP_R_ON * h + HP_R_OFF * (1.0 - h)
+
+
+def hp_field(h: np.ndarray, v: np.ndarray) -> np.ndarray:
+    """Eq. (3) with a Joglekar p=1 window 4h(1-h).
+
+    The window keeps the doped-region boundary inside the device (h in
+    [0, 1]) exactly as physical HP memristors saturate at their terminals;
+    the factor 4 normalises the window peak to 1 at h = 1/2.
+    """
+    window = 4.0 * h * (1.0 - h)
+    return HP_K * v / hp_resistance(h) * window
+
+
+def hp_current(h: np.ndarray, v: np.ndarray) -> np.ndarray:
+    """Ohmic conduction: i = v / R(h)."""
+    return v / hp_resistance(h)
+
+
+def simulate_hp(
+    v_fn,
+    n_points: int = HP_NPOINTS,
+    dt: float = HP_DT,
+    h0: float = HP_H0,
+    substeps: int = 8,
+):
+    """Integrate the HP memristor under a voltage stimulus.
+
+    Returns (t, v, h, i): time stamps, applied voltage, state trajectory and
+    device current, each of length ``n_points``. RK4 with ``substeps``
+    sub-intervals per sample keeps the ground truth far below the twin's own
+    truncation error.
+    """
+    t = np.arange(n_points) * dt
+    h = np.empty(n_points)
+    h[0] = h0
+    hd = dt / substeps
+    for k in range(n_points - 1):
+        x = h[k]
+        tk = t[k]
+        for s in range(substeps):
+            ts = tk + s * hd
+            k1 = hp_field(x, v_fn(ts))
+            k2 = hp_field(x + 0.5 * hd * k1, v_fn(ts + 0.5 * hd))
+            k3 = hp_field(x + 0.5 * hd * k2, v_fn(ts + 0.5 * hd))
+            k4 = hp_field(x + hd * k3, v_fn(ts + hd))
+            x = x + hd / 6.0 * (k1 + 2 * k2 + 2 * k3 + k4)
+            x = min(max(x, 0.0), 1.0)
+        h[k + 1] = x
+    v = v_fn(t)
+    return t, v, h, v / hp_resistance(h)
+
+
+# ---------------------------------------------------------------------------
+# Stimulation waveforms (Fig. 3f/j: sine, triangular, rectangular, mod-sine)
+# ---------------------------------------------------------------------------
+
+
+def sine_wave(amp: float = 1.0, freq: float = 4.0, phase: float = 0.0):
+    def v(t):
+        return amp * np.sin(2.0 * np.pi * freq * np.asarray(t) + phase)
+
+    return v
+
+
+def triangular_wave(amp: float = 1.0, freq: float = 4.0):
+    def v(t):
+        ph = (np.asarray(t) * freq) % 1.0
+        return amp * (4.0 * np.abs(ph - 0.5) - 1.0)
+
+    return v
+
+
+def rectangular_wave(amp: float = 1.0, freq: float = 4.0, duty: float = 0.5):
+    def v(t):
+        ph = (np.asarray(t) * freq) % 1.0
+        return np.where(ph < duty, amp, -amp)
+
+    return v
+
+
+def modulated_sine_wave(amp: float = 1.0, freq: float = 4.0, mod_freq: float = 1.0):
+    """Amplitude-modulated sine, the paper's fourth stimulus."""
+
+    def v(t):
+        t = np.asarray(t)
+        envelope = 0.5 * (1.0 + np.sin(2.0 * np.pi * mod_freq * t))
+        return amp * envelope * np.sin(2.0 * np.pi * freq * t)
+
+    return v
+
+
+STIMULI = {
+    "sine": sine_wave(),
+    "triangular": triangular_wave(),
+    "rectangular": rectangular_wave(),
+    "modulated": modulated_sine_wave(),
+}
+
+
+# ---------------------------------------------------------------------------
+# Lorenz96 dynamics (the twinned asset of Fig. 4)
+# ---------------------------------------------------------------------------
+
+L96_DIM = 6  # paper trains a d = 6 twin
+L96_F = 8.0  # canonical forcing; chaotic regime for n >= 5
+L96_DT = 0.02  # s; 2400 samples span the paper's 48 s window
+L96_NPOINTS = 2400  # sequence length (1800 interpolation + 600 extrapolation)
+L96_TRAIN_POINTS = 1800
+# Initial condition quoted verbatim in the paper's Methods. Its ~[-1.6, 1.2]
+# range reveals the paper works in *normalized* units: the F = 8 attractor
+# spans ~[-8, 13], so states are scaled by 1/F. The twin (and all error
+# metrics: L1 0.512 interp / 0.321 extrap) live in normalized space; the
+# physical trajectory is SCALE * normalized.
+L96_SCALE = 8.0
+L96_Y0 = np.array([-1.2061, 0.0617, 1.1632, -1.5008, -1.5944, -0.0187])
+
+
+def simulate_lorenz96_normalized(
+    n_points: int = L96_NPOINTS,
+    dt: float = L96_DT,
+    forcing: float = L96_F,
+    substeps: int = 4,
+) -> np.ndarray:
+    """Paper-convention trajectory: integrate the physical dynamics from
+    SCALE * Y0 and return states divided by SCALE (shape [n_points, d])."""
+    phys = simulate_lorenz96(
+        L96_SCALE * L96_Y0, n_points, dt, forcing, substeps
+    )
+    return phys / L96_SCALE
+
+
+def lorenz96_field_normalized(
+    xn: np.ndarray, forcing: float = L96_F
+) -> np.ndarray:
+    """Vector field in normalized coordinates: d(x/S)/dt = f(S x_n)/S."""
+    return lorenz96_field(L96_SCALE * xn, forcing) / L96_SCALE
+
+
+def lorenz96_field(x: np.ndarray, forcing: float = L96_F) -> np.ndarray:
+    """Eq. (4): dx_i/dt = (x_{i+1} - x_{i-2}) x_{i-1} - x_i + F, periodic.
+
+    Vectorised over leading axes (the state index is the last axis).
+    """
+    return (
+        (np.roll(x, -1, axis=-1) - np.roll(x, 2, axis=-1))
+        * np.roll(x, 1, axis=-1)
+        - x
+        + forcing
+    )
+
+
+def simulate_lorenz96(
+    x0: np.ndarray = L96_Y0,
+    n_points: int = L96_NPOINTS,
+    dt: float = L96_DT,
+    forcing: float = L96_F,
+    substeps: int = 4,
+) -> np.ndarray:
+    """RK4-integrate Lorenz96; returns trajectory of shape (n_points, d)."""
+    x = np.array(x0, dtype=np.float64)
+    out = np.empty((n_points, x.size))
+    out[0] = x
+    hd = dt / substeps
+    for k in range(1, n_points):
+        for _ in range(substeps):
+            k1 = lorenz96_field(x, forcing)
+            k2 = lorenz96_field(x + 0.5 * hd * k1, forcing)
+            k3 = lorenz96_field(x + 0.5 * hd * k2, forcing)
+            k4 = lorenz96_field(x + hd * k3, forcing)
+            x = x + hd / 6.0 * (k1 + 2 * k2 + 2 * k3 + k4)
+        out[k] = x
+    return out
+
+
+def lorenz96_mle(forcing: float = L96_F, dim: int = L96_DIM) -> float:
+    """Benettin estimate of the maximal Lyapunov exponent (Methods, Eq. 10).
+
+    Used to express extrapolation horizons in Lyapunov times.
+    """
+    rng = np.random.default_rng(0)
+    x = L96_Y0[:dim].copy()
+    d0 = 1e-8
+    y = x + d0 * rng.standard_normal(dim) / np.sqrt(dim)
+    dt, n_steps, warmup = 0.01, 20_000, 2_000
+    acc = 0.0
+
+    def step(z):
+        k1 = lorenz96_field(z, forcing)
+        k2 = lorenz96_field(z + 0.5 * dt * k1, forcing)
+        k3 = lorenz96_field(z + 0.5 * dt * k2, forcing)
+        k4 = lorenz96_field(z + dt * k3, forcing)
+        return z + dt / 6.0 * (k1 + 2 * k2 + 2 * k3 + k4)
+
+    for k in range(n_steps):
+        x, y = step(x), step(y)
+        d = np.linalg.norm(y - x)
+        if k >= warmup:
+            acc += np.log(d / d0)
+        y = x + (y - x) * (d0 / d)
+    return acc / ((n_steps - warmup) * dt)

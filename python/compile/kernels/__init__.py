@@ -1,0 +1,6 @@
+"""L1: Pallas kernels for the paper's compute hot-spot.
+
+``crossbar``  — differential-pair crossbar VMM (Fig. 2f);
+``odestep``   — fused RK4 neural-ODE step (the whole solver in one kernel);
+``ref``       — pure-jnp oracles used by pytest and the training path.
+"""

@@ -1,0 +1,74 @@
+"""Pallas kernel: differential-pair crossbar vector-matrix multiply.
+
+This is the paper's compute hot-spot expressed for a TPU-style memory
+hierarchy. The analogue array computes I = V.G in-place in the crossbar; the
+TPU analogue is to keep the conductance matrices resident in VMEM for the
+whole invocation and stream only the (batched) voltage vectors, tiling the
+batch dimension with a BlockSpec grid so each grid step works on one
+VMEM-sized tile of inputs while the weights are pinned (index_map constant in
+the grid index).
+
+Lowered with ``interpret=True`` everywhere: the CPU PJRT plugin cannot run
+Mosaic custom-calls; real-TPU numbers are projected from the VMEM footprint
+and MXU shapes in DESIGN.md / EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _vmm_kernel(v_ref, gp_ref, gn_ref, o_ref):
+    """One batch tile: o = v @ (gp - gn).
+
+    ``gp/gn`` arrive as whole-array blocks (weights stay resident across the
+    grid); ``v``/``o`` are [tile, n] / [tile, m] batch tiles. The subtraction
+    and the matmul both map onto the VPU/MXU; accumulation is in f32
+    regardless of input dtype, mirroring how column currents sum linearly in
+    the analogue array.
+    """
+    v = v_ref[...].astype(jnp.float32)
+    g = gp_ref[...].astype(jnp.float32) - gn_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.dot(v, g, preferred_element_type=jnp.float32).astype(
+        o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_batch",))
+def crossbar_vmm(v, gp, gn, *, block_batch: int = 128):
+    """Batched differential crossbar VMM via pallas_call.
+
+    v:  [b, n] or [n]   input voltages
+    gp: [n, m]          positive-pair conductances
+    gn: [n, m]          negative-pair conductances
+    returns [b, m] (or [m]) column currents, same dtype as ``v``.
+    """
+    squeeze = v.ndim == 1
+    if squeeze:
+        v = v[None, :]
+    b, n = v.shape
+    m = gp.shape[1]
+    tile = min(block_batch, b)
+    # Pad the batch to a whole number of tiles; pallas grids are static.
+    pad = (-b) % tile
+    if pad:
+        v = jnp.pad(v, ((0, pad), (0, 0)))
+    grid = (v.shape[0] // tile,)
+    out = pl.pallas_call(
+        _vmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, m), lambda i: (0, 0)),  # weights pinned
+            pl.BlockSpec((n, m), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((v.shape[0], m), v.dtype),
+        interpret=True,
+    )(v, gp, gn)
+    out = out[:b]
+    return out[0] if squeeze else out

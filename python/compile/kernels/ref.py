@@ -1,0 +1,68 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has an exact reference here; pytest
+(``python/tests/``) asserts allclose between kernel and oracle across a
+hypothesis-driven sweep of shapes and dtypes. The oracles are also the L2
+fallback path (``use_pallas=False`` in ``model.py``).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def crossbar_vmm(v, gp, gn):
+    """Differential-pair crossbar vector-matrix multiply.
+
+    The analogue array realises ``i_j = sum_i v_i (Gp_ij - Gn_ij)`` via Ohm's
+    law (per-cell multiplication) and Kirchhoff's current law (per-column
+    summation); adjacent columns carry +v and -v so a conductance *pair*
+    encodes a signed weight (paper Fig. 2f).
+
+    v:  [..., n]  input voltages (rows / bit lines)
+    gp: [n, m]    positive-column conductances
+    gn: [n, m]    negative-column conductances
+    returns [..., m] column currents.
+    """
+    return jnp.matmul(v, gp - gn)
+
+
+def mlp_field(params, u):
+    """Three-layer MLP vector field f(u) with ReLU hidden activations.
+
+    ``params`` is a list of (w, b) with w: [fan_in, fan_out]. The final layer
+    is linear (the paper uses ReLU everywhere except the output layer).
+    """
+    h = u
+    for w, b in params[:-1]:
+        h = jnp.maximum(jnp.matmul(h, w) + b, 0.0)
+    w, b = params[-1]
+    return jnp.matmul(h, w) + b
+
+
+def rk4_step_autonomous(params, h, dt):
+    """One classic RK4 step of dh/dt = f(h) (Lorenz96 twin: no stimulus)."""
+    k1 = mlp_field(params, h)
+    k2 = mlp_field(params, h + 0.5 * dt * k1)
+    k3 = mlp_field(params, h + 0.5 * dt * k2)
+    k4 = mlp_field(params, h + dt * k3)
+    return h + dt / 6.0 * (k1 + 2.0 * k2 + 2.0 * k3 + k4)
+
+
+def rk4_step_driven(params, h, x0, xh, x1, dt):
+    """One RK4 step of dh/dt = f([x(t); h]) with external stimulus x.
+
+    x0 / xh / x1 are the stimulus samples at t, t + dt/2 and t + dt
+    (the half-step sample is what distinguishes a genuinely continuous-time
+    solver from the recurrent-ResNet Euler baseline).
+    Shapes: h [..., d_state], x* [..., d_in].
+    """
+
+    def f(hh, xx):
+        return mlp_field(params, jnp.concatenate([xx, hh], axis=-1))
+
+    k1 = f(h, x0)
+    k2 = f(h + 0.5 * dt * k1, xh)
+    k3 = f(h + 0.5 * dt * k2, xh)
+    k4 = f(h + dt * k3, x1)
+    return h + dt / 6.0 * (k1 + 2.0 * k2 + 2.0 * k3 + k4)

@@ -1,0 +1,134 @@
+"""L2: the neural-ODE compute graphs for both digital twins.
+
+Defines the MLP vector field, the fused-kernel RK4 steps (delegating the
+hot-spot to the Pallas kernels in ``kernels/``) and full trajectory rollouts
+as ``lax.scan`` loops so the AOT-lowered HLO contains a single compiled loop
+body instead of an unrolled graph.
+
+Everything here is build-time Python: ``aot.py`` lowers these functions once
+to HLO text, and the Rust runtime executes the artifacts on the request path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import odestep, ref
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+# The paper's two architectures (Fig. 3b and Fig. 4b / Methods).
+HP_LAYERS = (2, 14, 14, 1)  # [v; h] -> dh/dt
+L96_LAYERS = (6, 64, 64, 6)  # h -> dh/dt (autonomous)
+
+
+def init_params(layers, key, scale: float | None = None):
+    """He-uniform init for a ReLU MLP; params as [(w, b), ...] f32."""
+    params = []
+    for fan_in, fan_out in zip(layers[:-1], layers[1:]):
+        key, sub = jax.random.split(key)
+        bound = scale if scale is not None else float(np.sqrt(2.0 / fan_in))
+        w = jax.random.uniform(
+            sub, (fan_in, fan_out), jnp.float32, -bound, bound
+        )
+        params.append((w, jnp.zeros((fan_out,), jnp.float32)))
+    return params
+
+
+def params_to_pytree(params):
+    return {f"w{i}": w for i, (w, _) in enumerate(params)} | {
+        f"b{i}": b for i, (_, b) in enumerate(params)
+    }
+
+
+def pytree_to_params(tree):
+    n = len(tree) // 2
+    return [(tree[f"w{i}"], tree[f"b{i}"]) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Vector fields and single steps
+# ---------------------------------------------------------------------------
+
+
+def field_autonomous(params, h):
+    """dh/dt = f(h), pure-jnp (training path: differentiable, no pallas)."""
+    return ref.mlp_field(params, h)
+
+
+def field_driven(params, h, x):
+    """dh/dt = f([x; h]), pure-jnp."""
+    return ref.mlp_field(params, jnp.concatenate([x, h], axis=-1))
+
+
+def step_autonomous(params, h, dt: float, use_pallas: bool = True):
+    """One RK4 step of the autonomous twin (Lorenz96)."""
+    if use_pallas:
+        return odestep.rk4_step_autonomous(params, h, dt=dt)
+    return ref.rk4_step_autonomous(params, h, dt)
+
+
+def step_driven(params, h, x0, xh, x1, dt: float, use_pallas: bool = True):
+    """One RK4 step of the driven twin (HP memristor)."""
+    if use_pallas:
+        return odestep.rk4_step_driven(params, h, x0, xh, x1, dt=dt)
+    return ref.rk4_step_driven(params, h, x0, xh, x1, dt)
+
+
+# ---------------------------------------------------------------------------
+# Rollouts (lax.scan — one fused loop in the lowered HLO)
+# ---------------------------------------------------------------------------
+
+
+def rollout_autonomous(params, h0, n_steps: int, dt: float, use_pallas=True):
+    """Integrate the autonomous twin for ``n_steps``; returns [n_steps+1, d].
+
+    The scan carries only the state vector; weights are loop-invariant and
+    XLA hoists them out of the while-loop body, matching the "weights stay in
+    the array" analogue execution model.
+    """
+
+    def body(h, _):
+        h2 = step_autonomous(params, h, dt, use_pallas)
+        return h2, h2
+
+    _, hs = jax.lax.scan(body, h0, None, length=n_steps)
+    return jnp.concatenate([h0[None], hs], axis=0)
+
+
+def rollout_driven(params, h0, xs_half, dt: float, use_pallas=True):
+    """Integrate the driven twin against a stimulus sampled at dt/2.
+
+    xs_half: [2*n_steps + 1, d_in] stimulus at t = 0, dt/2, dt, ... so each
+    RK4 step sees x(t), x(t+dt/2), x(t+dt) without interpolation error.
+    Returns [n_steps+1, d_state].
+    """
+    n_steps = (xs_half.shape[0] - 1) // 2
+    x0s = xs_half[0 : 2 * n_steps : 2]
+    xhs = xs_half[1 : 2 * n_steps : 2]
+    x1s = xs_half[2 : 2 * n_steps + 1 : 2]
+
+    def body(h, xs):
+        x0, xh, x1 = xs
+        h2 = step_driven(params, h, x0, xh, x1, dt, use_pallas)
+        return h2, h2
+
+    _, hs = jax.lax.scan(body, h0, (x0s, xhs, x1s))
+    return jnp.concatenate([h0[None], hs], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable (training) variants — pure jnp, used by train.py.
+# ---------------------------------------------------------------------------
+
+
+def rollout_autonomous_ref(params, h0, n_steps: int, dt: float):
+    return rollout_autonomous(params, h0, n_steps, dt, use_pallas=False)
+
+
+def rollout_driven_ref(params, h0, xs_half, dt: float):
+    return rollout_driven(params, h0, xs_half, dt, use_pallas=False)

@@ -1,0 +1,98 @@
+"""Ground-truth generators: physical invariants and paper constants."""
+
+import numpy as np
+import pytest
+
+from compile import datasets
+
+
+# ---------------------------------------------------------------------------
+# HP memristor
+# ---------------------------------------------------------------------------
+
+
+def test_hp_resistance_endpoints():
+    assert datasets.hp_resistance(np.array(0.0)) == datasets.HP_R_OFF
+    assert datasets.hp_resistance(np.array(1.0)) == datasets.HP_R_ON
+
+
+def test_hp_field_window_vanishes_at_boundaries():
+    assert datasets.hp_field(np.array(0.0), np.array(1.0)) == 0.0
+    assert datasets.hp_field(np.array(1.0), np.array(1.0)) == 0.0
+    assert datasets.hp_field(np.array(0.5), np.array(1.0)) > 0.0
+
+
+def test_hp_simulation_stays_physical():
+    t, v, h, i = datasets.simulate_hp(datasets.STIMULI["sine"])
+    assert len(t) == datasets.HP_NPOINTS
+    assert np.all((h >= 0.0) & (h <= 1.0))
+    assert np.all(np.isfinite(i))
+
+
+def test_hp_sine_sweeps_wide_hysteresis():
+    # With HP_K = 1e5 the sine stimulus must sweep a wide loop (this is the
+    # Fig. 3i Lissajous requirement).
+    _, _, h, _ = datasets.simulate_hp(datasets.STIMULI["sine"])
+    assert h.max() - h.min() > 0.3, f"state swing {h.max() - h.min()}"
+
+
+def test_hp_dc_zero_is_stationary():
+    _, _, h, _ = datasets.simulate_hp(lambda t: np.zeros_like(np.asarray(t)),
+                                      n_points=50)
+    np.testing.assert_allclose(h, datasets.HP_H0)
+
+
+@pytest.mark.parametrize("name", list(datasets.STIMULI))
+def test_stimuli_bounded(name):
+    t = np.linspace(0.0, 1.0, 2000)
+    v = datasets.STIMULI[name](t)
+    assert np.all(np.abs(v) <= 1.0 + 1e-12)
+
+
+def test_rectangular_duty_cycle():
+    v = datasets.rectangular_wave(freq=1.0, duty=0.25)(np.linspace(0, 0.99, 100))
+    assert (v > 0).sum() == 25
+
+
+# ---------------------------------------------------------------------------
+# Lorenz96
+# ---------------------------------------------------------------------------
+
+
+def test_l96_field_equilibrium():
+    x = np.full(6, datasets.L96_F)
+    np.testing.assert_allclose(datasets.lorenz96_field(x), 0.0, atol=1e-12)
+
+
+def test_l96_field_vectorised_over_batch():
+    xs = np.random.default_rng(0).standard_normal((10, 6))
+    batch = datasets.lorenz96_field(xs)
+    rows = np.stack([datasets.lorenz96_field(r) for r in xs])
+    np.testing.assert_allclose(batch, rows)
+
+
+def test_l96_trajectory_shape_and_boundedness():
+    traj = datasets.simulate_lorenz96(n_points=500)
+    assert traj.shape == (500, 6)
+    assert np.all(np.abs(traj) < 25.0)
+
+
+def test_l96_normalized_convention():
+    traj = datasets.simulate_lorenz96_normalized(n_points=100)
+    np.testing.assert_allclose(traj[0], datasets.L96_Y0)
+    assert np.all(np.abs(traj) < 3.0)
+    # Normalized field consistency.
+    xn = traj[50]
+    fn = datasets.lorenz96_field_normalized(xn)
+    fp = datasets.lorenz96_field(datasets.L96_SCALE * xn)
+    np.testing.assert_allclose(fn * datasets.L96_SCALE, fp)
+
+
+def test_l96_chaotic_mle_positive():
+    mle = datasets.lorenz96_mle()
+    assert 0.3 < mle < 2.0, mle
+
+
+def test_l96_splits_match_figure_windows():
+    assert datasets.L96_TRAIN_POINTS * datasets.L96_DT == pytest.approx(36.0)
+    assert datasets.L96_NPOINTS * datasets.L96_DT == pytest.approx(48.0)

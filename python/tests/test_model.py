@@ -1,0 +1,91 @@
+"""L2 model graphs: rollout shapes, pallas/ref agreement, solver accuracy."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import datasets, model
+
+
+def test_init_params_shapes():
+    params = model.init_params(model.HP_LAYERS, jax.random.PRNGKey(0))
+    shapes = [(w.shape, b.shape) for w, b in params]
+    assert shapes == [((2, 14), (14,)), ((14, 14), (14,)), ((14, 1), (1,))]
+
+
+def test_params_pytree_roundtrip():
+    params = model.init_params((3, 5, 2), jax.random.PRNGKey(1))
+    tree = model.params_to_pytree(params)
+    back = model.pytree_to_params(tree)
+    for (w1, b1), (w2, b2) in zip(params, back):
+        np.testing.assert_array_equal(w1, w2)
+        np.testing.assert_array_equal(b1, b2)
+
+
+def test_rollout_autonomous_shapes_and_pallas_parity():
+    key = jax.random.PRNGKey(2)
+    params = model.init_params((6, 16, 16, 6), key)
+    h0 = jax.random.normal(key, (6,))
+    a = model.rollout_autonomous(params, h0, 20, 0.02, use_pallas=True)
+    b = model.rollout_autonomous(params, h0, 20, 0.02, use_pallas=False)
+    assert a.shape == (21, 6)
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)
+
+
+def test_rollout_driven_shapes_and_pallas_parity():
+    key = jax.random.PRNGKey(3)
+    params = model.init_params(model.HP_LAYERS, key)
+    n_steps = 25
+    xs_half = jax.random.normal(key, (2 * n_steps + 1, 1)) * 0.5
+    h0 = jnp.array([0.3], jnp.float32)
+    a = model.rollout_driven(params, h0, xs_half, 1e-3, use_pallas=True)
+    b = model.rollout_driven(params, h0, xs_half, 1e-3, use_pallas=False)
+    assert a.shape == (n_steps + 1, 1)
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-5)
+
+
+def test_rollout_first_row_is_h0():
+    params = model.init_params((4, 8, 4), jax.random.PRNGKey(4))
+    h0 = jnp.array([1.0, -1.0, 0.5, 0.0], jnp.float32)
+    traj = model.rollout_autonomous(params, h0, 5, 0.1, use_pallas=False)
+    np.testing.assert_array_equal(traj[0], h0)
+
+
+def test_rk4_rollout_solves_true_l96_when_field_is_exact():
+    """Integrate the *true* normalized field with our scan-RK4 and compare
+    against the numpy reference integrator: validates solver wiring
+    independently of learning."""
+    traj_ref = datasets.simulate_lorenz96_normalized(n_points=40)
+
+    # Wrap the true normalized field as a "network": monkeypatch via a
+    # custom param-free field using the ref path of step_autonomous is not
+    # directly possible, so integrate manually with jax here.
+    def step(h):
+        dt = datasets.L96_DT
+        f = lambda x: jnp.asarray(
+            datasets.lorenz96_field_normalized(np.asarray(x)), jnp.float32
+        )
+        k1 = f(h)
+        k2 = f(h + 0.5 * dt * k1)
+        k3 = f(h + 0.5 * dt * k2)
+        k4 = f(h + dt * k3)
+        return h + dt / 6 * (k1 + 2 * k2 + 2 * k3 + k4)
+
+    h = jnp.asarray(datasets.L96_Y0, jnp.float32)
+    out = [np.asarray(h)]
+    for _ in range(39):
+        h = step(h)
+        out.append(np.asarray(h))
+    np.testing.assert_allclose(np.stack(out), traj_ref, atol=2e-3)
+
+
+def test_field_driven_concat_order():
+    # field_driven concatenates [x; h]: check against manual mlp_field.
+    from compile.kernels import ref
+
+    params = model.init_params((3, 6, 2), jax.random.PRNGKey(5))
+    h = jnp.array([[0.1, 0.2]], jnp.float32)
+    x = jnp.array([[0.9]], jnp.float32)
+    got = model.field_driven(params, h, x)
+    want = ref.mlp_field(params, jnp.array([[0.9, 0.1, 0.2]], jnp.float32))
+    np.testing.assert_allclose(got, want, rtol=1e-6)

@@ -1,0 +1,121 @@
+//! Hot-path microbenchmarks: the crossbar VMM engine and the closed-loop
+//! analogue solver — the targets of the EXPERIMENTS.md §Perf iteration.
+//!
+//! Covers:
+//! * VMM across sizes and noise modes (Off / Fast moment-matched /
+//!   PerCell reference) — quantifies what the moment-matched path buys;
+//! * full analogue MLP forward (deploy + eval);
+//! * closed-loop solve throughput (circuit steps / s);
+//! * PJRT single-step execute round-trip (if artifacts are built).
+//!
+//! Run: `cargo bench --bench crossbar_hotpath`
+
+use memode::analog::system::{AnalogMlp, AnalogNeuralOde, AnalogNoise, LayerWeights};
+use memode::config::SystemConfig;
+use memode::crossbar::differential::DifferentialArray;
+use memode::crossbar::vmm::{NoiseMode, VmmEngine};
+use memode::device::noise::NoiseSource;
+use memode::device::taox::DeviceConfig;
+use memode::util::bench::{black_box, print_table, Bencher};
+use memode::util::rng::Pcg64;
+use memode::util::tensor::Mat;
+
+fn main() {
+    let bench = Bencher::default();
+    let mut results = Vec::new();
+    let cfg = DeviceConfig { fault_rate: 0.0, ..Default::default() };
+
+    // ---- VMM engine across sizes and noise modes -------------------------
+    for &n in &[16usize, 32] {
+        let mut rng = Pcg64::seeded(1);
+        let w = Mat::from_fn(n, n, |r, c| {
+            ((r * n + c) as f64 / (n * n) as f64) - 0.5
+        });
+        let arr = DifferentialArray::deploy(&w, &cfg, &mut rng);
+        let v: Vec<f64> = (0..n).map(|k| (k as f64 / n as f64) - 0.4).collect();
+        let mut y = vec![0.0; n];
+        for (mode, label) in [
+            (NoiseMode::Off, "off"),
+            (NoiseMode::Fast, "fast"),
+            (NoiseMode::PerCell, "percell"),
+        ] {
+            let mut eng =
+                VmmEngine::new(&arr, NoiseSource::new(0.01), mode);
+            let mut rng2 = Pcg64::seeded(2);
+            results.push(bench.run(
+                &format!("vmm {n}x{n} noise={label}"),
+                || {
+                    eng.vmm_into(black_box(&v), &mut y, &mut rng2);
+                    y[0]
+                },
+            ));
+        }
+    }
+
+    // ---- Analogue MLP forward (the L96 64-hidden field) -------------------
+    let mut rng = Pcg64::seeded(3);
+    let dims = [(6usize, 64usize), (64, 64), (64, 6)];
+    let layers: Vec<LayerWeights> = dims
+        .iter()
+        .map(|&(r, c)| {
+            LayerWeights::new(
+                &Mat::from_fn(r, c, |_, _| rng.uniform_in(-0.2, 0.2)),
+                &vec![0.0; c],
+            )
+        })
+        .collect();
+    let sys_cfg = SystemConfig::default();
+    let mut amlp = AnalogMlp::deploy(
+        &layers,
+        &sys_cfg.device,
+        AnalogNoise::hardware(),
+        4,
+    );
+    let u = [0.5, -0.2, 0.1, 0.3, -0.4, 0.2];
+    let mut out = vec![0.0; 6];
+    results.push(bench.run("analog-mlp fwd 6-64-64-6", || {
+        amlp.eval_into(black_box(&u), &mut out);
+        out[0]
+    }));
+
+    // ---- Closed-loop solve (circuit steps / s) ----------------------------
+    let mlp2 = AnalogMlp::deploy(
+        &layers,
+        &sys_cfg.device,
+        AnalogNoise::hardware(),
+        5,
+    );
+    let mut ode = AnalogNeuralOde::new(mlp2, 6, 0.001);
+    let r = bench.run("closed-loop 100 samples x 20 substeps", || {
+        ode.solve(black_box(&u), &mut |_t| vec![], 0.02, 100)
+    });
+    let steps_per_s = (100.0 * 20.0) / r.median.as_secs_f64();
+    results.push(r);
+    println!("closed-loop throughput: {steps_per_s:.0} circuit steps/s");
+
+    // ---- PJRT round-trip (optional) ---------------------------------------
+    if let Ok(svc) =
+        memode::runtime::service::PjrtService::start(&sys_cfg.artifacts_dir)
+    {
+        let h = svc.handle();
+        if h.preload(&["l96_step_b1", "l96_step_b32"]).is_ok() {
+            use memode::runtime::TensorF32;
+            let one = TensorF32::from_f64(vec![6], &u);
+            results.push(bench.run("pjrt l96_step b=1", || {
+                h.execute("l96_step_b1", vec![one.clone()]).unwrap().data[0]
+            }));
+            let batch = TensorF32::from_f64(
+                vec![32, 6],
+                &(0..192).map(|k| (k % 7) as f64 * 0.1).collect::<Vec<_>>(),
+            );
+            results.push(bench.run("pjrt l96_step b=32", || {
+                h.execute("l96_step_b32", vec![batch.clone()]).unwrap().data
+                    [0]
+            }));
+        }
+    } else {
+        println!("(pjrt section skipped: artifacts not built)");
+    }
+
+    print_table("crossbar hot path", &results);
+}

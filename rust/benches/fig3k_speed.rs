@@ -1,0 +1,90 @@
+//! Fig. 3k: HP-twin speed scaling — projected memristive solver vs the
+//! neural ODE on digital hardware, across hidden sizes {8, 16, 32, 64}.
+//!
+//! Two sections:
+//! 1. the paper-comparable *projection* (the analytic latency models of
+//!    `energy::{digital, analogue}`, anchored at the paper's 4.2x @64);
+//! 2. *measured* wall-clock of this repo's own executables per field
+//!    evaluation: Rust-digital MLP vs the analogue circuit simulator
+//!    (simulator time, NOT hardware time — labelled as such).
+//!
+//! Run: `cargo bench --bench fig3k_speed`
+
+use memode::analog::system::{AnalogMlp, AnalogNoise, LayerWeights};
+use memode::config::SystemConfig;
+use memode::energy::analogue::{self, AnalogParams};
+use memode::energy::digital::{GpuParams, ModelKind};
+use memode::models::mlp::Mlp;
+use memode::util::bench::{black_box, Bencher};
+use memode::util::rng::Pcg64;
+use memode::util::tensor::Mat;
+
+fn field_layers(hidden: usize) -> Vec<(Mat, Vec<f64>)> {
+    let mut rng = Pcg64::seeded(7);
+    let dims = [(2, hidden), (hidden, hidden), (hidden, 1)];
+    dims.iter()
+        .map(|&(r, c)| {
+            (
+                Mat::from_fn(r, c, |_, _| rng.uniform_in(-0.5, 0.5)),
+                vec![0.0; c],
+            )
+        })
+        .collect()
+}
+
+fn main() {
+    let hidden_sizes = [8usize, 16, 32, 64];
+    let gpu = GpuParams::default();
+    let ana = AnalogParams::board();
+
+    println!("== Fig. 3k (projection): HP field-eval latency vs hidden size ==");
+    println!(
+        "{:>8} {:>16} {:>16} {:>10}",
+        "hidden", "digital node", "memristive", "speedup"
+    );
+    for &h in &hidden_sizes {
+        // One field evaluation: 5 sequential kernels on GPU (paper's
+        // Fig. 3k comparator), one settle chain on the analogue system.
+        let dig = 5.0 * gpu.t_kernel_floor
+            + ModelKind::RecurrentResNet.macs_per_step(2, h) / gpu.macs_per_s;
+        let ours = analogue::project_step(3, h, &ana).t_step;
+        println!(
+            "{:>8} {:>13.1} µs {:>13.1} µs {:>9.2}x",
+            h,
+            dig * 1e6,
+            ours * 1e6,
+            dig / ours
+        );
+    }
+    println!("(paper anchor: 4.2x at hidden 64)");
+
+    println!("\n== Measured (this repo's simulators, per field eval) ==");
+    let bench = Bencher::default();
+    let cfg = SystemConfig::default();
+    let mut results = Vec::new();
+    for &h in &hidden_sizes {
+        let layers = field_layers(h);
+        // Digital: Rust MLP forward.
+        let lw: Vec<LayerWeights> =
+            layers.iter().map(|(w, b)| LayerWeights::new(w, b)).collect();
+        let mut mlp = Mlp::new(layers.clone());
+        let mut out = vec![0.0; 1];
+        results.push(bench.run(&format!("digital-mlp fwd h={h}"), || {
+            mlp.forward_into(black_box(&[0.5, 0.2]), &mut out);
+            out[0]
+        }));
+        // Analogue simulator: deployed arrays + noisy reads.
+        let mut amlp = AnalogMlp::deploy(
+            &lw,
+            &cfg.device,
+            AnalogNoise::hardware(),
+            11,
+        );
+        let mut aout = vec![0.0; 1];
+        results.push(bench.run(&format!("analog-sim fwd h={h}"), || {
+            amlp.eval_into(black_box(&[0.5, 0.2]), &mut aout);
+            aout[0]
+        }));
+    }
+    memode::util::bench::print_table("fig3k measured", &results);
+}

@@ -1,0 +1,105 @@
+//! Fig. 4h: Lorenz96 execution time per inference sample across hidden
+//! sizes {64, 128, 256, 512} for neural ODE / LSTM / GRU / RNN on digital
+//! hardware vs the (projected integrated) memristive solver.
+//!
+//! Paper anchors @512: node 505.8 µs, LSTM 392.5, GRU 294.9, RNN 98.8,
+//! ours 40.1 µs (12.6x / 9.8x / 7.4x / 2.5x).
+//!
+//! Also measures this repo's Rust-native per-step wall-clock for the same
+//! architectures (simulator time, labelled as such).
+//!
+//! Run: `cargo bench --bench fig4h_speed`
+
+use memode::energy::analogue::AnalogParams;
+use memode::energy::digital::GpuParams;
+use memode::energy::report;
+use memode::models::gru::Gru;
+use memode::models::loader::RnnWeights;
+use memode::models::lstm::Lstm;
+use memode::models::mlp::{Mlp, MlpField};
+use memode::models::rnn::{Recurrent, VanillaRnn};
+use memode::ode::rk4::Rk4;
+use memode::ode::VectorField;
+use memode::util::bench::{black_box, Bencher};
+use memode::util::rng::Pcg64;
+use memode::util::tensor::Mat;
+
+fn rnn_weights(kind: &str, hidden: usize, gates: usize) -> RnnWeights {
+    let d = 6;
+    let mut rng = Pcg64::seeded(13);
+    let mut m = |r: usize, c: usize| {
+        Mat::from_fn(r, c, |_, _| rng.uniform_in(-0.1, 0.1))
+    };
+    RnnWeights {
+        wx: m(d, gates * hidden),
+        wh: m(hidden, gates * hidden),
+        b: vec![0.0; gates * hidden],
+        wo: m(hidden, d),
+        bo: vec![0.0; d],
+        hidden,
+        d_in: d,
+        dt: 0.02,
+        kind: kind.into(),
+    }
+}
+
+fn node_mlp(hidden: usize) -> Mlp {
+    let mut rng = Pcg64::seeded(17);
+    let dims = [(6, hidden), (hidden, hidden), (hidden, 6)];
+    Mlp::new(
+        dims.iter()
+            .map(|&(r, c)| {
+                (
+                    Mat::from_fn(r, c, |_, _| rng.uniform_in(-0.1, 0.1)),
+                    vec![0.0; c],
+                )
+            })
+            .collect(),
+    )
+}
+
+fn main() {
+    let hidden_sizes = [64usize, 128, 256, 512];
+    let rows = report::comparison_table(
+        &hidden_sizes,
+        &GpuParams::default(),
+        &AnalogParams::integrated(),
+    );
+    report::print_rows(
+        "Fig. 4h (projection): latency per inference sample",
+        &rows,
+    );
+    println!(
+        "(paper anchors @512: node 505.8 µs 12.6x, LSTM 392.5 9.8x, \
+         GRU 294.9 7.4x, RNN 98.8 2.5x, ours 40.1 µs)"
+    );
+
+    println!("\n== Measured (Rust-native per step, simulator time) ==");
+    let bench = Bencher::default();
+    let mut results = Vec::new();
+    let x0 = [0.5, -0.2, 0.1, 0.3, -0.4, 0.2];
+    for &h in &hidden_sizes {
+        // Neural ODE: one RK4 step.
+        let mut field = MlpField { mlp: node_mlp(h) };
+        let mut stepper = Rk4::new(field.dim());
+        let mut state = x0.to_vec();
+        results.push(bench.run(&format!("node rk4-step h={h}"), || {
+            stepper.step(&mut field, 0.0, black_box(&mut state), 0.02);
+            state[0]
+        }));
+        // Recurrent cells.
+        let mut lstm = Lstm::new(rnn_weights("lstm", h, 4));
+        results.push(bench.run(&format!("lstm step h={h}"), || {
+            black_box(lstm.step(&x0))
+        }));
+        let mut gru = Gru::new(rnn_weights("gru", h, 3));
+        results.push(bench.run(&format!("gru step h={h}"), || {
+            black_box(gru.step(&x0))
+        }));
+        let mut rnn = VanillaRnn::new(rnn_weights("rnn", h, 1));
+        results.push(bench.run(&format!("rnn step h={h}"), || {
+            black_box(rnn.step(&x0))
+        }));
+    }
+    memode::util::bench::print_table("fig4h measured", &results);
+}

@@ -1,0 +1,88 @@
+//! Over-voltage protection clamp (Fig. 2d).
+//!
+//! Protects downstream stages (and, in the physical system, the memristor
+//! bit lines) from excursions beyond a safe window. Ideal hard clamp plus a
+//! soft (diode-string) variant; the system uses the hard clamp by default
+//! and reports clamp activations so experiments can verify the signal chain
+//! was gain-staged correctly (a clamp that engages during normal inference
+//! distorts the ODE flow — worth telemetry).
+
+/// Protection clamp with activation counting.
+#[derive(Debug, Clone)]
+pub struct Clamp {
+    /// Clamp window: output in [-limit, limit].
+    pub limit: f64,
+    /// Number of samples clamped since construction/reset.
+    pub activations: u64,
+}
+
+impl Clamp {
+    pub fn new(limit: f64) -> Self {
+        assert!(limit > 0.0, "clamp limit must be positive");
+        Self { limit, activations: 0 }
+    }
+
+    /// Clamp one value (counts activations).
+    #[inline]
+    pub fn apply(&mut self, x: f64) -> f64 {
+        if x > self.limit {
+            self.activations += 1;
+            self.limit
+        } else if x < -self.limit {
+            self.activations += 1;
+            -self.limit
+        } else {
+            x
+        }
+    }
+
+    /// Clamp a vector in place.
+    pub fn apply_slice(&mut self, xs: &mut [f64]) {
+        for x in xs {
+            *x = self.apply(*x);
+        }
+    }
+
+    /// Reset the activation counter.
+    pub fn reset(&mut self) {
+        self.activations = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_in_band() {
+        let mut c = Clamp::new(5.0);
+        assert_eq!(c.apply(3.0), 3.0);
+        assert_eq!(c.apply(-4.9), -4.9);
+        assert_eq!(c.activations, 0);
+    }
+
+    #[test]
+    fn clamps_and_counts() {
+        let mut c = Clamp::new(1.0);
+        assert_eq!(c.apply(2.0), 1.0);
+        assert_eq!(c.apply(-3.0), -1.0);
+        assert_eq!(c.activations, 2);
+        c.reset();
+        assert_eq!(c.activations, 0);
+    }
+
+    #[test]
+    fn slice_application() {
+        let mut c = Clamp::new(1.0);
+        let mut xs = vec![0.5, 1.5, -2.0];
+        c.apply_slice(&mut xs);
+        assert_eq!(xs, vec![0.5, 1.0, -1.0]);
+        assert_eq!(c.activations, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_limit_rejected() {
+        let _ = Clamp::new(0.0);
+    }
+}

@@ -1,0 +1,180 @@
+//! The IVP integrator (Fig. 2b-c): the circuit block that turns the
+//! crossbar MLP into an ODE *solver*.
+//!
+//! An op-amp integrating capacitor accumulates the (inverted) network
+//! output; analogue muxes switch between two modes:
+//!
+//! * **initial conditioning** — S1/S2 open, S3/S4 closed: the capacitor is
+//!   pre-charged to the initial state h(t0);
+//! * **current integration** — all muxes toggled: the capacitor integrates
+//!   the network output, closing the loop dh/dt = f(h, x, t).
+//!
+//! Behavioural model: ideal integration dv/dt = u / tau with rail
+//! saturation and a finite leak (op-amp bias current + capacitor
+//! dielectric absorption), integrated with RK4 *inside the circuit
+//! simulator* at a time step far below the signal bandwidth.
+
+use crate::analog::mux::{AnalogMux, MuxState};
+
+/// Operating mode (mirrors the oscilloscope phases of Fig. 2c).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IntegratorMode {
+    InitialConditioning,
+    Integrating,
+}
+
+/// Behavioural IVP integrator.
+#[derive(Debug, Clone)]
+pub struct IvpIntegrator {
+    /// Integration time constant tau = R*C (s of circuit time per unit of
+    /// input); logical designs use tau = 1 so circuit time equals ODE time.
+    pub tau: f64,
+    /// Output saturation (op-amp rails).
+    pub v_sat: f64,
+    /// Leak rate (1/s): dv/dt includes -leak * v.
+    pub leak: f64,
+    /// Capacitor voltage = the ODE state component.
+    pub v: f64,
+    pub mode: IntegratorMode,
+    /// Mode-switch mux (its settling gates integration start).
+    pub mux: AnalogMux,
+}
+
+impl IvpIntegrator {
+    /// A logical integrator: tau = 1, generous rails, tiny leak.
+    pub fn logical(v_sat: f64) -> Self {
+        Self {
+            tau: 1.0,
+            v_sat,
+            leak: 1e-6,
+            v: 0.0,
+            mode: IntegratorMode::InitialConditioning,
+            mux: AnalogMux::default(),
+        }
+    }
+
+    /// Pre-charge the capacitor (initial-conditioning phase).
+    pub fn set_initial(&mut self, v0: f64) {
+        assert!(
+            self.mode == IntegratorMode::InitialConditioning,
+            "must be in initial-conditioning mode to pre-charge"
+        );
+        self.v = v0.clamp(-self.v_sat, self.v_sat);
+    }
+
+    /// Toggle into integration mode (flips the analogue muxes).
+    pub fn start_integration(&mut self) {
+        self.mode = IntegratorMode::Integrating;
+        self.mux.switch_to(MuxState::B);
+    }
+
+    /// Back to conditioning (stops integrating, holds the state).
+    pub fn stop(&mut self) {
+        self.mode = IntegratorMode::InitialConditioning;
+        self.mux.switch_to(MuxState::A);
+    }
+
+    /// Advance circuit time by `dt` with constant input `u` over the step
+    /// (the system simulator calls this at sub-signal-bandwidth steps, so
+    /// zero-order hold on u is accurate).
+    pub fn step(&mut self, u: f64, dt: f64) {
+        self.mux.advance(dt);
+        if self.mode != IntegratorMode::Integrating {
+            return;
+        }
+        // dv/dt = u/tau - leak*v  (linear ODE; exact solution per step).
+        let a = -self.leak;
+        let b = u / self.tau;
+        if self.leak.abs() < 1e-12 {
+            self.v += b * dt;
+        } else {
+            // v(t+dt) = (v + b/a)(e^{a dt}) - b/a
+            let e = (a * dt).exp();
+            self.v = (self.v + b / a) * e - b / a;
+        }
+        self.v = self.v.clamp(-self.v_sat, self.v_sat);
+    }
+
+    /// Whether the output has railed (diagnostic).
+    pub fn saturated(&self) -> bool {
+        self.v.abs() >= self.v_sat
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn integrates_constant_input_linearly() {
+        let mut i = IvpIntegrator::logical(100.0);
+        i.set_initial(0.0);
+        i.start_integration();
+        for _ in 0..1000 {
+            i.step(2.0, 1e-3);
+        }
+        assert!((i.v - 2.0).abs() < 1e-3, "v={}", i.v);
+    }
+
+    #[test]
+    fn conditioning_mode_holds_state() {
+        let mut i = IvpIntegrator::logical(10.0);
+        i.set_initial(1.5);
+        for _ in 0..100 {
+            i.step(5.0, 1e-3); // input ignored while conditioning
+        }
+        assert_eq!(i.v, 1.5);
+    }
+
+    #[test]
+    fn initial_condition_respects_rails() {
+        let mut i = IvpIntegrator::logical(2.0);
+        i.set_initial(5.0);
+        assert_eq!(i.v, 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "initial-conditioning")]
+    fn precharge_while_integrating_panics() {
+        let mut i = IvpIntegrator::logical(2.0);
+        i.start_integration();
+        i.set_initial(1.0);
+    }
+
+    #[test]
+    fn saturation_bounds_output() {
+        let mut i = IvpIntegrator::logical(1.0);
+        i.set_initial(0.0);
+        i.start_integration();
+        for _ in 0..10_000 {
+            i.step(10.0, 1e-3);
+        }
+        assert_eq!(i.v, 1.0);
+        assert!(i.saturated());
+    }
+
+    #[test]
+    fn leak_decays_state() {
+        let mut i = IvpIntegrator::logical(10.0);
+        i.leak = 0.5;
+        i.set_initial(1.0);
+        i.start_integration();
+        for _ in 0..1000 {
+            i.step(0.0, 1e-3); // 1 s total
+        }
+        // v = e^{-0.5} ≈ 0.6065
+        assert!((i.v - (-0.5f64).exp()).abs() < 1e-3, "v={}", i.v);
+    }
+
+    #[test]
+    fn stop_freezes_integration() {
+        let mut i = IvpIntegrator::logical(10.0);
+        i.set_initial(0.0);
+        i.start_integration();
+        i.step(1.0, 0.5);
+        i.stop();
+        let v = i.v;
+        i.step(1.0, 0.5);
+        assert_eq!(i.v, v);
+    }
+}

@@ -1,0 +1,21 @@
+//! Peripheral analogue circuits and the closed-loop solver (Fig. 2a-e).
+//!
+//! * [`tia`]        — trans-impedance amplifier (current -> voltage, with
+//!   rail saturation); its gain folds the weight-mapping slope so the loop
+//!   operates in logical units end to end
+//! * [`relu`]       — dual-diode analogue ReLU (ideal + behavioural knee)
+//! * [`clamp`]      — over-voltage protection clamp
+//! * [`mux`]        — analogue multiplexer with mode switching + settling
+//! * [`integrator`] — the IVP integrator (initial-conditioning /
+//!   current-integration modes, Fig. 2b-c)
+//! * [`system`]     — the full memristive neural-ODE solver: crossbar MLP
+//!   + peripherals + integrators in closed loop (Fig. 3b / 4b)
+
+pub mod clamp;
+pub mod integrator;
+pub mod mux;
+pub mod relu;
+pub mod system;
+pub mod tia;
+
+pub use system::{AnalogMlp, AnalogNeuralOde, AnalogNoise};

@@ -1,0 +1,120 @@
+//! Analogue multiplexer (TMUX1134-class) used to switch the IVP integrator
+//! between its two modes (Fig. 2c) and to route programming vs.
+//! multiplication paths (Methods).
+//!
+//! Behavioural model: finite on-resistance, a settling time constant after
+//! each mode switch, and an off-isolation leak. The settling model matters
+//! for the timing budget: the paper's initial-conditioning phase must wait
+//! for the mux + capacitor network to settle before integration starts.
+
+/// Routing state of a 2:1 analogue mux.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MuxState {
+    /// Path A selected (e.g. initial-conditioning supply).
+    A,
+    /// Path B selected (e.g. crossbar output into the integrator).
+    B,
+}
+
+/// Behavioural 2:1 analogue multiplexer.
+#[derive(Debug, Clone)]
+pub struct AnalogMux {
+    pub state: MuxState,
+    /// On-resistance of the selected channel (Ohm).
+    pub r_on: f64,
+    /// Settling time constant after a switch (s).
+    pub tau_settle: f64,
+    /// Time since the last switch (s).
+    since_switch: f64,
+    /// Off-channel isolation leak fraction (0 = perfect isolation).
+    pub leak: f64,
+}
+
+impl Default for AnalogMux {
+    fn default() -> Self {
+        // TMUX1134: ~5 Ohm on-resistance, sub-µs settling.
+        Self {
+            state: MuxState::A,
+            r_on: 5.0,
+            tau_settle: 2e-7,
+            since_switch: 1.0,
+            leak: 1e-5,
+        }
+    }
+}
+
+impl AnalogMux {
+    /// Switch to a state; resets the settling clock if the state changed.
+    pub fn switch_to(&mut self, s: MuxState) {
+        if self.state != s {
+            self.state = s;
+            self.since_switch = 0.0;
+        }
+    }
+
+    /// Advance time.
+    pub fn advance(&mut self, dt: f64) {
+        self.since_switch += dt.max(0.0);
+    }
+
+    /// Whether the channel has settled to within `eps` of its final value.
+    pub fn settled(&self, eps: f64) -> bool {
+        (-self.since_switch / self.tau_settle).exp() < eps
+    }
+
+    /// Route the two inputs: output follows the selected channel through a
+    /// first-order settling transient, plus off-channel leak.
+    pub fn route(&self, a: f64, b: f64) -> f64 {
+        let alpha = 1.0 - (-self.since_switch / self.tau_settle).exp();
+        let (sel, other) = match self.state {
+            MuxState::A => (a, b),
+            MuxState::B => (b, a),
+        };
+        // During settling the output blends from the *previous* channel.
+        let blended = other + alpha * (sel - other);
+        blended + self.leak * other
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn settled_mux_routes_selected_channel() {
+        let mut m = AnalogMux::default();
+        m.switch_to(MuxState::B);
+        m.advance(1e-3); // >> tau
+        let out = m.route(1.0, 2.0);
+        assert!((out - 2.0).abs() < 1e-3, "out={out}");
+    }
+
+    #[test]
+    fn switching_resets_settling() {
+        let mut m = AnalogMux::default();
+        m.advance(1.0);
+        assert!(m.settled(1e-6));
+        m.switch_to(MuxState::B);
+        assert!(!m.settled(1e-6));
+        m.advance(10.0 * m.tau_settle);
+        assert!(m.settled(1e-4));
+    }
+
+    #[test]
+    fn mid_settling_output_is_blend() {
+        let mut m = AnalogMux::default();
+        m.advance(1.0);
+        m.switch_to(MuxState::B);
+        m.advance(m.tau_settle); // one time constant: ~63 %
+        let out = m.route(0.0, 1.0);
+        assert!(out > 0.5 && out < 0.75, "out={out}");
+    }
+
+    #[test]
+    fn redundant_switch_does_not_reset() {
+        let mut m = AnalogMux::default();
+        m.advance(1.0);
+        m.switch_to(MuxState::A); // already A
+        assert!(m.settled(1e-6));
+    }
+}

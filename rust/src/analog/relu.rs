@@ -1,0 +1,102 @@
+//! Analogue ReLU (dual-diode rectifier, Fig. 2d-e).
+//!
+//! The paper realises activation with a 1N4148 dual-diode stage inside the
+//! TIA loop. A real diode has a soft exponential knee and a small reverse
+//! leakage; the behavioural model exposes both, plus the ideal limit used
+//! for fast logical simulation.
+
+/// Behavioural diode-ReLU.
+#[derive(Debug, Clone)]
+pub struct DiodeRelu {
+    /// Knee sharpness (V): 0 gives the ideal max(0, x).
+    /// Physical 1N4148-in-feedback stages have effective knees of a few mV.
+    pub knee: f64,
+    /// Reverse-leakage slope for x < 0 (ideal: 0).
+    pub leakage: f64,
+}
+
+impl DiodeRelu {
+    /// Ideal rectifier.
+    pub fn ideal() -> Self {
+        Self { knee: 0.0, leakage: 0.0 }
+    }
+
+    /// Representative behavioural values for the paper's board.
+    pub fn behavioural() -> Self {
+        Self { knee: 5e-3, leakage: 1e-4 }
+    }
+
+    /// Activation: softplus-shaped knee blending into linear, with leakage.
+    #[inline]
+    pub fn activate(&self, x: f64) -> f64 {
+        let pos = if self.knee == 0.0 {
+            x.max(0.0)
+        } else {
+            // Numerically-stable softplus scaled by the knee width.
+            let t = x / self.knee;
+            if t > 30.0 {
+                x
+            } else if t < -30.0 {
+                0.0
+            } else {
+                self.knee * (1.0 + t.exp()).ln()
+            }
+        };
+        pos + self.leakage * x.min(0.0)
+    }
+
+    /// Activate a vector in place.
+    pub fn activate_slice(&self, xs: &mut [f64]) {
+        for x in xs {
+            *x = self.activate(*x);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_is_max_zero() {
+        let r = DiodeRelu::ideal();
+        assert_eq!(r.activate(2.0), 2.0);
+        assert_eq!(r.activate(-2.0), 0.0);
+        assert_eq!(r.activate(0.0), 0.0);
+    }
+
+    #[test]
+    fn behavioural_close_to_ideal_away_from_knee() {
+        let r = DiodeRelu::behavioural();
+        assert!((r.activate(1.0) - 1.0).abs() < 1e-3);
+        assert!(r.activate(-1.0).abs() < 2e-4); // only leakage
+    }
+
+    #[test]
+    fn knee_is_smooth_and_monotone() {
+        let r = DiodeRelu::behavioural();
+        let mut prev = r.activate(-0.05);
+        let mut x = -0.05;
+        while x < 0.05 {
+            x += 1e-3;
+            let y = r.activate(x);
+            assert!(y >= prev - 1e-12, "non-monotone at {x}");
+            prev = y;
+        }
+    }
+
+    #[test]
+    fn extreme_inputs_do_not_overflow() {
+        let r = DiodeRelu::behavioural();
+        assert!(r.activate(1e6).is_finite());
+        assert!(r.activate(-1e6).is_finite());
+    }
+
+    #[test]
+    fn slice_matches_scalar() {
+        let r = DiodeRelu::ideal();
+        let mut xs = vec![-1.0, 0.5, 2.0];
+        r.activate_slice(&mut xs);
+        assert_eq!(xs, vec![0.0, 0.5, 2.0]);
+    }
+}

@@ -1,0 +1,431 @@
+//! The closed-loop memristive neural-ODE solver (Fig. 2a, 3b, 4b).
+//!
+//! Wires the deployed crossbar layers, peripheral stages (TIA -> diode
+//! ReLU -> clamp) and one IVP integrator per state dimension into the
+//! continuous-time loop
+//!
+//!   dh/dt = f([x(t); h(t)]),
+//!
+//! where f is the analogue MLP. The circuit simulator advances at
+//! `dt_circuit` (far below the signal bandwidth); each step performs fresh
+//! noisy analogue reads — exactly how the physical system continuously
+//! re-samples the crossbar — and feeds the integrators, whose capacitor
+//! voltages *are* the twin state.
+
+use crate::analog::clamp::Clamp;
+use crate::analog::integrator::IvpIntegrator;
+use crate::analog::relu::DiodeRelu;
+use crate::analog::tia::Tia;
+use crate::crossbar::tiling::TiledMatrix;
+use crate::crossbar::vmm::{NoiseMode, VmmEngine};
+use crate::device::noise::NoiseSource;
+use crate::device::taox::DeviceConfig;
+use crate::util::rng::Pcg64;
+use crate::util::tensor::Mat;
+
+/// Noise operating point (the Fig. 4j grid axes).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AnalogNoise {
+    /// Dynamic read noise, relative sigma per analogue read.
+    pub read: f64,
+    /// Static programming noise, relative sigma frozen at deployment.
+    pub prog: f64,
+}
+
+impl AnalogNoise {
+    pub fn off() -> Self {
+        Self { read: 0.0, prog: 0.0 }
+    }
+
+    /// The paper's hardware operating point. Programming error is already
+    /// produced physically by the write-verify deployment (Fig. 2k/3e
+    /// statistics); `prog` here is the *additional* static perturbation of
+    /// the Fig. 4j sweep, so it is zero at the hardware point.
+    pub fn hardware() -> Self {
+        Self { read: 0.01, prog: 0.0 }
+    }
+}
+
+/// One trained layer: weights with the bias folded in as an extra input row
+/// driven by a constant 1 (the standard crossbar bias-row trick).
+#[derive(Debug, Clone)]
+pub struct LayerWeights {
+    /// [fan_in + 1, fan_out]; last row is the bias.
+    pub w_aug: Mat,
+}
+
+impl LayerWeights {
+    pub fn new(w: &Mat, b: &[f64]) -> Self {
+        assert_eq!(w.cols, b.len(), "bias length mismatch");
+        let mut w_aug = Mat::zeros(w.rows + 1, w.cols);
+        for r in 0..w.rows {
+            for c in 0..w.cols {
+                *w_aug.at_mut(r, c) = w.at(r, c);
+            }
+        }
+        for c in 0..w.cols {
+            *w_aug.at_mut(w.rows, c) = b[c];
+        }
+        Self { w_aug }
+    }
+}
+
+/// The analogue MLP: per-layer crossbar VMM + TIA + (hidden) ReLU + clamp.
+#[derive(Debug, Clone)]
+pub struct AnalogMlp {
+    engines: Vec<VmmEngine>,
+    relu: DiodeRelu,
+    tia: Tia,
+    clamp: Clamp,
+    /// Per-layer input scratch (with bias slot), preallocated.
+    scratch_in: Vec<Vec<f64>>,
+    /// Per-layer output scratch.
+    scratch_out: Vec<Vec<f64>>,
+    rng: Pcg64,
+}
+
+impl AnalogMlp {
+    /// Deploy trained layers onto simulated hardware.
+    ///
+    /// * `prog` static noise perturbs the logical weights before the
+    ///   write-verify deployment (Fig. 4j "programming noise" axis);
+    /// * `read` dynamic noise is applied on every analogue read through the
+    ///   moment-matched fast path;
+    /// * `cfg` carries the device statistics (pulse sigma, yield, window).
+    pub fn deploy(
+        layers: &[LayerWeights],
+        cfg: &DeviceConfig,
+        noise: AnalogNoise,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Pcg64::seeded(seed);
+        let mut engines = Vec::with_capacity(layers.len());
+        for layer in layers {
+            let mut w = layer.w_aug.clone();
+            if noise.prog > 0.0 {
+                for x in &mut w.data {
+                    *x *= 1.0 + noise.prog * rng.normal();
+                }
+            }
+            let tiled = TiledMatrix::deploy(&w, cfg, &mut rng);
+            engines.push(VmmEngine::from_tiled(
+                &tiled,
+                NoiseSource::new(noise.read),
+                if noise.read > 0.0 {
+                    NoiseMode::Fast
+                } else {
+                    NoiseMode::Off
+                },
+            ));
+        }
+        Self::from_engines(engines, rng)
+    }
+
+    /// Ideal (no hardware sampling) MLP — the digital reference path and
+    /// the fast ablation baseline.
+    pub fn ideal(layers: &[LayerWeights], seed: u64) -> Self {
+        let engines = layers
+            .iter()
+            .map(|l| VmmEngine::ideal(l.w_aug.clone()))
+            .collect();
+        Self::from_engines(engines, Pcg64::seeded(seed))
+    }
+
+    fn from_engines(engines: Vec<VmmEngine>, rng: Pcg64) -> Self {
+        let scratch_in: Vec<Vec<f64>> =
+            engines.iter().map(|e| vec![0.0; e.rows()]).collect();
+        let scratch_out: Vec<Vec<f64>> =
+            engines.iter().map(|e| vec![0.0; e.cols()]).collect();
+        Self {
+            engines,
+            relu: DiodeRelu::ideal(),
+            tia: Tia::logical(1e3),
+            clamp: Clamp::new(1e3),
+            scratch_in,
+            scratch_out,
+            rng,
+        }
+    }
+
+    /// Use behavioural (soft-knee, leaky) peripherals instead of ideal ones.
+    pub fn with_behavioural_peripherals(mut self, v_sat: f64) -> Self {
+        self.relu = DiodeRelu::behavioural();
+        self.tia = Tia::logical(v_sat);
+        self.clamp = Clamp::new(v_sat);
+        self
+    }
+
+    /// Input dimension (excluding the bias slot).
+    pub fn d_in(&self) -> usize {
+        self.engines[0].rows() - 1
+    }
+
+    /// Output dimension.
+    pub fn d_out(&self) -> usize {
+        self.engines.last().expect("empty mlp").cols()
+    }
+
+    /// Forward pass `y = f(u)` with fresh analogue reads; writes into `out`.
+    pub fn eval_into(&mut self, u: &[f64], out: &mut [f64]) {
+        let n_layers = self.engines.len();
+        debug_assert_eq!(u.len(), self.d_in());
+        for l in 0..n_layers {
+            // Fill the input scratch: previous activation + bias 1.
+            {
+                let src: &[f64] = if l == 0 { u } else { &self.scratch_out[l - 1] };
+                let (head, tail) =
+                    self.scratch_in[l].split_at_mut(src.len());
+                head.copy_from_slice(src);
+                tail[0] = 1.0;
+            }
+            // Split borrows: engine + in/out scratch.
+            let (inp, outp) = {
+                // Safety-free split via index juggling: clone input slice
+                // is avoided by using raw indices into self fields.
+                let inp = std::mem::take(&mut self.scratch_in[l]);
+                let mut outp = std::mem::take(&mut self.scratch_out[l]);
+                self.engines[l].vmm_into(&inp, &mut outp, &mut self.rng);
+                (inp, outp)
+            };
+            self.scratch_in[l] = inp;
+            self.scratch_out[l] = outp;
+            let is_last = l + 1 == n_layers;
+            let buf = &mut self.scratch_out[l];
+            self.tia.convert_slice(buf);
+            if !is_last {
+                self.relu.activate_slice(buf);
+            }
+            self.clamp.apply_slice(buf);
+        }
+        out.copy_from_slice(&self.scratch_out[n_layers - 1]);
+    }
+
+    /// Allocating convenience wrapper.
+    pub fn eval(&mut self, u: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.d_out()];
+        self.eval_into(u, &mut y);
+        y
+    }
+
+    /// Effective logical weights of layer `l` (diagnostics).
+    pub fn layer_weights(&self, l: usize) -> &Mat {
+        self.engines[l].weights()
+    }
+}
+
+/// The closed-loop solver: analogue MLP + one IVP integrator per state dim.
+#[derive(Debug, Clone)]
+pub struct AnalogNeuralOde {
+    pub mlp: AnalogMlp,
+    pub integrators: Vec<IvpIntegrator>,
+    /// External input dimension (0 for autonomous twins).
+    pub d_drive: usize,
+    /// Circuit-time step (s) — the continuous-solver resolution.
+    pub dt_circuit: f64,
+    /// Scratch: [x(t); h(t)] input vector.
+    u: Vec<f64>,
+    /// Scratch: MLP output (dh/dt).
+    dh: Vec<f64>,
+}
+
+impl AnalogNeuralOde {
+    /// Build a solver around a deployed MLP.
+    ///
+    /// `d_state` integrators are created; `d_drive = mlp.d_in() - d_state`
+    /// input lines remain externally driven. `dt_circuit` is the circuit
+    /// integration step — callers pick `dt_out / substeps`.
+    pub fn new(mlp: AnalogMlp, d_state: usize, dt_circuit: f64) -> Self {
+        assert_eq!(
+            mlp.d_out(),
+            d_state,
+            "MLP output dim must equal state dim"
+        );
+        assert!(mlp.d_in() >= d_state, "MLP input must include the state");
+        let d_drive = mlp.d_in() - d_state;
+        let integrators = (0..d_state)
+            .map(|_| IvpIntegrator::logical(1e3))
+            .collect();
+        let u = vec![0.0; mlp.d_in()];
+        let dh = vec![0.0; d_state];
+        Self { mlp, integrators, d_drive, dt_circuit, u, dh }
+    }
+
+    /// Current state (integrator capacitor voltages).
+    pub fn state(&self) -> Vec<f64> {
+        self.integrators.iter().map(|i| i.v).collect()
+    }
+
+    /// Initial-conditioning phase: pre-charge all integrators.
+    pub fn set_initial(&mut self, h0: &[f64]) {
+        assert_eq!(h0.len(), self.integrators.len());
+        for (i, &v0) in self.integrators.iter_mut().zip(h0) {
+            i.stop();
+            i.set_initial(v0);
+        }
+    }
+
+    /// Solve the IVP, sampling the state every `dt_out` for `n_points`
+    /// samples (the first sample is h0 itself). `drive(t)` supplies the
+    /// external stimulus (must return `d_drive` values; pass `|_| vec![]`
+    /// for autonomous systems).
+    pub fn solve(
+        &mut self,
+        h0: &[f64],
+        drive: &mut dyn FnMut(f64) -> Vec<f64>,
+        dt_out: f64,
+        n_points: usize,
+    ) -> Vec<Vec<f64>> {
+        self.set_initial(h0);
+        for i in &mut self.integrators {
+            i.start_integration();
+        }
+        let substeps =
+            ((dt_out / self.dt_circuit).round() as usize).max(1);
+        let dt = dt_out / substeps as f64;
+        let mut out = Vec::with_capacity(n_points);
+        out.push(self.state());
+        let mut t = 0.0;
+        for _ in 1..n_points {
+            for _ in 0..substeps {
+                // Assemble u = [x(t); h(t)].
+                let x = drive(t);
+                debug_assert_eq!(x.len(), self.d_drive);
+                self.u[..self.d_drive].copy_from_slice(&x);
+                for (slot, integ) in self.u[self.d_drive..]
+                    .iter_mut()
+                    .zip(&self.integrators)
+                {
+                    *slot = integ.v;
+                }
+                // Analogue forward pass (fresh reads).
+                let dh = &mut self.dh;
+                self.mlp.eval_into(&self.u, dh);
+                // Feed the integrators.
+                for (integ, &d) in self.integrators.iter_mut().zip(dh.iter())
+                {
+                    integ.step(d, dt);
+                }
+                t += dt;
+            }
+            out.push(self.state());
+        }
+        for i in &mut self.integrators {
+            i.stop();
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Layers implementing f(h) = -h exactly with ReLU hidden layer:
+    /// hidden = relu([h, -h]) (2 units), out = -hidden[0] + hidden[1] = -h.
+    fn linear_decay_layers() -> Vec<LayerWeights> {
+        let w1 = Mat::from_vec(1, 2, vec![1.0, -1.0]);
+        let b1 = vec![0.0, 0.0];
+        let w2 = Mat::from_vec(2, 1, vec![-1.0, 1.0]);
+        let b2 = vec![0.0];
+        vec![LayerWeights::new(&w1, &b1), LayerWeights::new(&w2, &b2)]
+    }
+
+    #[test]
+    fn ideal_mlp_computes_expected_field() {
+        let mut mlp = AnalogMlp::ideal(&linear_decay_layers(), 1);
+        assert_eq!(mlp.d_in(), 1);
+        assert_eq!(mlp.d_out(), 1);
+        for h in [-2.0, -0.5, 0.0, 0.7, 3.0] {
+            let y = mlp.eval(&[h]);
+            assert!((y[0] + h).abs() < 1e-12, "f({h}) = {}", y[0]);
+        }
+    }
+
+    #[test]
+    fn closed_loop_solves_exponential_decay() {
+        // dh/dt = -h from h0 = 1 -> h(t) = e^{-t}.
+        let mlp = AnalogMlp::ideal(&linear_decay_layers(), 2);
+        let mut ode = AnalogNeuralOde::new(mlp, 1, 1e-4);
+        let traj = ode.solve(&[1.0], &mut |_t| vec![], 0.1, 11);
+        assert_eq!(traj.len(), 11);
+        for (k, row) in traj.iter().enumerate() {
+            let want = (-(k as f64) * 0.1).exp();
+            assert!(
+                (row[0] - want).abs() < 2e-3,
+                "t={k}: {} vs {want}",
+                row[0]
+            );
+        }
+    }
+
+    #[test]
+    fn driven_loop_tracks_input() {
+        // f([x; h]) = x - h  ->  h follows a step input with tau = 1.
+        let w1 = Mat::from_vec(2, 2, vec![1.0, -1.0, -1.0, 1.0]);
+        let b1 = vec![0.0, 0.0];
+        let w2 = Mat::from_vec(2, 1, vec![1.0, -1.0]);
+        let b2 = vec![0.0];
+        let layers =
+            vec![LayerWeights::new(&w1, &b1), LayerWeights::new(&w2, &b2)];
+        let mlp = AnalogMlp::ideal(&layers, 3);
+        let mut ode = AnalogNeuralOde::new(mlp, 1, 1e-4);
+        let traj = ode.solve(&[0.0], &mut |_t| vec![1.0], 0.5, 11);
+        // After 5 time constants h ~ 1.
+        let h_end = traj.last().unwrap()[0];
+        assert!((h_end - 1.0).abs() < 0.01, "h_end={h_end}");
+    }
+
+    #[test]
+    fn deployed_mlp_close_to_ideal() {
+        let cfg = DeviceConfig { fault_rate: 0.0, ..Default::default() };
+        let layers = linear_decay_layers();
+        let mut ideal = AnalogMlp::ideal(&layers, 1);
+        let mut real =
+            AnalogMlp::deploy(&layers, &cfg, AnalogNoise::off(), 7);
+        for h in [-1.0, 0.3, 0.9] {
+            let yi = ideal.eval(&[h]);
+            let yr = real.eval(&[h]);
+            assert!(
+                (yi[0] - yr[0]).abs() < 0.1,
+                "ideal {} vs deployed {}",
+                yi[0],
+                yr[0]
+            );
+        }
+    }
+
+    #[test]
+    fn read_noise_perturbs_but_preserves_mean() {
+        let cfg = DeviceConfig {
+            fault_rate: 0.0,
+            pulse_sigma: 0.0,
+            ..Default::default()
+        };
+        let layers = linear_decay_layers();
+        let mut mlp = AnalogMlp::deploy(
+            &layers,
+            &cfg,
+            AnalogNoise { read: 0.05, prog: 0.0 },
+            11,
+        );
+        let samples: Vec<f64> =
+            (0..2000).map(|_| mlp.eval(&[1.0])[0]).collect();
+        let s = crate::util::stats::summary(&samples);
+        assert!((s.mean + 1.0).abs() < 0.02, "mean {}", s.mean);
+        assert!(s.std > 1e-4, "noise inert");
+    }
+
+    #[test]
+    fn autonomous_solver_rejects_drive_mismatch() {
+        let mlp = AnalogMlp::ideal(&linear_decay_layers(), 1);
+        let ode = AnalogNeuralOde::new(mlp, 1, 1e-3);
+        assert_eq!(ode.d_drive, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "state dim")]
+    fn wrong_state_dim_panics() {
+        let mlp = AnalogMlp::ideal(&linear_decay_layers(), 1);
+        let _ = AnalogNeuralOde::new(mlp, 2, 1e-3);
+    }
+}

@@ -1,0 +1,86 @@
+//! Trans-impedance amplifier (TIA).
+//!
+//! Converts crossbar column currents to voltages for the next stage
+//! (OPA4990 in the paper's board). Behavioural model: linear gain with
+//! supply-rail saturation and an input-referred offset. In the logical
+//! signal chain the TIA gain is chosen as 1/slope of the weight mapping, so
+//! a column current slope*w*v reads back as w*v — this is where the
+//! "digital rescale" of other mixed-signal systems happens *in the analogue
+//! domain* here, as in the paper.
+
+/// Behavioural TIA.
+#[derive(Debug, Clone)]
+pub struct Tia {
+    /// Trans-impedance gain (V/A) — logical designs use 1/slope.
+    pub gain: f64,
+    /// Supply rails (V); output saturates at ±v_sat.
+    pub v_sat: f64,
+    /// Input-referred offset current (A).
+    pub i_offset: f64,
+}
+
+impl Tia {
+    pub fn new(gain: f64, v_sat: f64) -> Self {
+        Self { gain, v_sat, i_offset: 0.0 }
+    }
+
+    /// Ideal logical TIA: unit gain, generous rails.
+    pub fn logical(v_sat: f64) -> Self {
+        Self { gain: 1.0, v_sat, i_offset: 0.0 }
+    }
+
+    /// v = clamp(gain * (i + i_offset), ±v_sat). The paper's inverting TIA
+    /// sign is absorbed by the subsequent inverter stage, so the logical
+    /// chain is non-inverting.
+    #[inline]
+    pub fn convert(&self, i: f64) -> f64 {
+        (self.gain * (i + self.i_offset)).clamp(-self.v_sat, self.v_sat)
+    }
+
+    /// Convert a column-current vector in place.
+    pub fn convert_slice(&self, xs: &mut [f64]) {
+        for x in xs {
+            *x = self.convert(*x);
+        }
+    }
+
+    /// True if any value would saturate (diagnostic for gain staging).
+    pub fn would_saturate(&self, xs: &[f64]) -> bool {
+        xs.iter()
+            .any(|&x| (self.gain * (x + self.i_offset)).abs() >= self.v_sat)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_in_band() {
+        let t = Tia::new(1e4, 5.0);
+        assert!((t.convert(1e-4) - 1.0).abs() < 1e-12);
+        assert!((t.convert(-2e-4) + 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn saturates_at_rails() {
+        let t = Tia::new(1e4, 5.0);
+        assert_eq!(t.convert(1.0), 5.0);
+        assert_eq!(t.convert(-1.0), -5.0);
+    }
+
+    #[test]
+    fn offset_shifts_output() {
+        let t = Tia { gain: 1e3, v_sat: 5.0, i_offset: 1e-3 };
+        assert!((t.convert(0.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slice_conversion_and_saturation_detect() {
+        let t = Tia::new(10.0, 1.0);
+        let mut xs = vec![0.05, 0.2, -0.3];
+        assert!(t.would_saturate(&xs));
+        t.convert_slice(&mut xs);
+        assert_eq!(xs, vec![0.5, 1.0, -1.0]);
+    }
+}

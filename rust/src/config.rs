@@ -1,0 +1,214 @@
+//! Typed configuration for the whole system, with JSON round-trip.
+//!
+//! One [`SystemConfig`] drives the CLI, the examples and the coordinator:
+//! device statistics, noise operating point, solver resolutions, artifact
+//! location and serving parameters. `memode --config path.json` loads it;
+//! every field has a paper-calibrated default so an empty config works.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::analog::system::AnalogNoise;
+use crate::device::taox::DeviceConfig;
+use crate::util::json::{self, Json};
+
+/// Serving-layer parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    /// Worker threads (each owns private twin instances).
+    pub workers: usize,
+    /// Maximum batch the batcher will coalesce.
+    pub max_batch: usize,
+    /// Batching window (s): wait this long to fill a batch.
+    pub batch_window_s: f64,
+    /// Bounded queue depth per worker (backpressure threshold).
+    pub queue_depth: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            max_batch: 32,
+            batch_window_s: 2e-3,
+            queue_depth: 128,
+        }
+    }
+}
+
+/// Top-level configuration.
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    /// Directory containing `*.hlo.txt`, `manifest.json`, `weights/`.
+    pub artifacts_dir: PathBuf,
+    /// Device statistics for the simulated hardware.
+    pub device: DeviceConfig,
+    /// Noise operating point for analogue twins.
+    pub noise: AnalogNoise,
+    /// Circuit substeps per output sample (analogue solver resolution).
+    pub analog_substeps: usize,
+    /// Master seed for all stochastic components.
+    pub seed: u64,
+    /// Serving parameters.
+    pub serve: ServeConfig,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: PathBuf::from(crate::DEFAULT_ARTIFACTS_DIR),
+            device: DeviceConfig::default(),
+            noise: AnalogNoise::hardware(),
+            analog_substeps: 20,
+            seed: 42,
+            serve: ServeConfig::default(),
+        }
+    }
+}
+
+impl SystemConfig {
+    /// Load from a JSON file; missing keys keep their defaults.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let doc = json::from_file(path)?;
+        Ok(Self::from_json(&doc))
+    }
+
+    /// Build from parsed JSON (missing keys -> defaults).
+    pub fn from_json(doc: &Json) -> Self {
+        let mut cfg = Self::default();
+        let f = |j: Option<&Json>, d: f64| {
+            j.and_then(Json::as_f64).unwrap_or(d)
+        };
+        let u = |j: Option<&Json>, d: usize| {
+            j.and_then(Json::as_usize).unwrap_or(d)
+        };
+        if let Some(s) = doc.get("artifacts_dir").and_then(Json::as_str) {
+            cfg.artifacts_dir = PathBuf::from(s);
+        }
+        if let Some(d) = doc.get("device") {
+            cfg.device.g_min = f(d.get("g_min"), cfg.device.g_min);
+            cfg.device.g_max = f(d.get("g_max"), cfg.device.g_max);
+            cfg.device.levels =
+                u(d.get("levels"), cfg.device.levels as usize) as u32;
+            cfg.device.pulse_sigma =
+                f(d.get("pulse_sigma"), cfg.device.pulse_sigma);
+            cfg.device.verify_tol =
+                f(d.get("verify_tol"), cfg.device.verify_tol);
+            cfg.device.read_noise =
+                f(d.get("read_noise"), cfg.device.read_noise);
+            cfg.device.fault_rate =
+                f(d.get("fault_rate"), cfg.device.fault_rate);
+        }
+        if let Some(n) = doc.get("noise") {
+            cfg.noise.read = f(n.get("read"), cfg.noise.read);
+            cfg.noise.prog = f(n.get("prog"), cfg.noise.prog);
+        }
+        cfg.analog_substeps =
+            u(doc.get("analog_substeps"), cfg.analog_substeps);
+        cfg.seed = f(doc.get("seed"), cfg.seed as f64) as u64;
+        if let Some(s) = doc.get("serve") {
+            cfg.serve.workers = u(s.get("workers"), cfg.serve.workers);
+            cfg.serve.max_batch = u(s.get("max_batch"), cfg.serve.max_batch);
+            cfg.serve.batch_window_s =
+                f(s.get("batch_window_s"), cfg.serve.batch_window_s);
+            cfg.serve.queue_depth =
+                u(s.get("queue_depth"), cfg.serve.queue_depth);
+        }
+        cfg
+    }
+
+    /// Serialise to JSON (full round-trip of every field).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "artifacts_dir",
+                Json::Str(self.artifacts_dir.display().to_string()),
+            ),
+            (
+                "device",
+                Json::obj(vec![
+                    ("g_min", Json::Num(self.device.g_min)),
+                    ("g_max", Json::Num(self.device.g_max)),
+                    ("levels", Json::Num(self.device.levels as f64)),
+                    ("pulse_sigma", Json::Num(self.device.pulse_sigma)),
+                    ("verify_tol", Json::Num(self.device.verify_tol)),
+                    ("read_noise", Json::Num(self.device.read_noise)),
+                    ("fault_rate", Json::Num(self.device.fault_rate)),
+                ]),
+            ),
+            (
+                "noise",
+                Json::obj(vec![
+                    ("read", Json::Num(self.noise.read)),
+                    ("prog", Json::Num(self.noise.prog)),
+                ]),
+            ),
+            ("analog_substeps", Json::Num(self.analog_substeps as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            (
+                "serve",
+                Json::obj(vec![
+                    ("workers", Json::Num(self.serve.workers as f64)),
+                    ("max_batch", Json::Num(self.serve.max_batch as f64)),
+                    (
+                        "batch_window_s",
+                        Json::Num(self.serve.batch_window_s),
+                    ),
+                    (
+                        "queue_depth",
+                        Json::Num(self.serve.queue_depth as f64),
+                    ),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_calibrated() {
+        let c = SystemConfig::default();
+        assert_eq!(c.device.levels, 64);
+        assert!((c.device.fault_rate - 0.027).abs() < 1e-12);
+        assert_eq!(c.noise, AnalogNoise::hardware());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_fields() {
+        let mut c = SystemConfig::default();
+        c.noise.read = 0.05;
+        c.serve.workers = 7;
+        c.seed = 99;
+        let j = c.to_json();
+        let c2 = SystemConfig::from_json(&j);
+        assert_eq!(c2.noise.read, 0.05);
+        assert_eq!(c2.serve.workers, 7);
+        assert_eq!(c2.seed, 99);
+        assert_eq!(c2.device.levels, c.device.levels);
+    }
+
+    #[test]
+    fn partial_json_keeps_defaults() {
+        let doc =
+            crate::util::json::parse(r#"{"noise": {"read": 0.02}}"#).unwrap();
+        let c = SystemConfig::from_json(&doc);
+        assert_eq!(c.noise.read, 0.02);
+        assert_eq!(c.noise.prog, AnalogNoise::hardware().prog);
+        assert_eq!(c.serve.workers, ServeConfig::default().workers);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let c = SystemConfig::default();
+        let mut path = std::env::temp_dir();
+        path.push(format!("memode_cfg_{}.json", std::process::id()));
+        crate::util::json::to_file(&path, &c.to_json()).unwrap();
+        let c2 = SystemConfig::from_file(&path).unwrap();
+        assert_eq!(c2.seed, c.seed);
+        std::fs::remove_file(path).ok();
+    }
+}

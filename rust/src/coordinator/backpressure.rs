@@ -1,0 +1,114 @@
+//! Global admission control: a bounded in-flight budget with fail-fast
+//! rejection (shed load at the door rather than queue unboundedly — the
+//! streaming-ingestion discipline a digital-twin front end needs when
+//! sensor bursts exceed solver throughput).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Shared in-flight budget.
+#[derive(Debug)]
+pub struct Backpressure {
+    in_flight: AtomicUsize,
+    limit: usize,
+}
+
+/// RAII permit: releases its slot on drop.
+pub struct Permit {
+    ctrl: Arc<Backpressure>,
+}
+
+impl Backpressure {
+    pub fn new(limit: usize) -> Arc<Self> {
+        assert!(limit > 0, "backpressure limit must be positive");
+        Arc::new(Self { in_flight: AtomicUsize::new(0), limit })
+    }
+
+    /// Try to admit one request; `None` means shed.
+    pub fn try_acquire(self: &Arc<Self>) -> Option<Permit> {
+        let mut cur = self.in_flight.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.limit {
+                return None;
+            }
+            match self.in_flight.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return Some(Permit { ctrl: Arc::clone(self) }),
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::Relaxed)
+    }
+
+    pub fn limit(&self) -> usize {
+        self.limit
+    }
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        self.ctrl.in_flight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_up_to_limit_then_sheds() {
+        let bp = Backpressure::new(2);
+        let a = bp.try_acquire();
+        let b = bp.try_acquire();
+        assert!(a.is_some() && b.is_some());
+        assert!(bp.try_acquire().is_none());
+        drop(a);
+        assert!(bp.try_acquire().is_some());
+    }
+
+    #[test]
+    fn permits_release_on_drop() {
+        let bp = Backpressure::new(1);
+        {
+            let _p = bp.try_acquire().unwrap();
+            assert_eq!(bp.in_flight(), 1);
+        }
+        assert_eq!(bp.in_flight(), 0);
+    }
+
+    #[test]
+    fn concurrent_admission_never_exceeds_limit() {
+        let bp = Backpressure::new(8);
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let bp = Arc::clone(&bp);
+            handles.push(std::thread::spawn(move || {
+                let mut max_seen = 0usize;
+                for _ in 0..10_000 {
+                    if let Some(_p) = bp.try_acquire() {
+                        max_seen = max_seen.max(bp.in_flight());
+                    }
+                }
+                max_seen
+            }));
+        }
+        for h in handles {
+            let max_seen = h.join().unwrap();
+            assert!(max_seen <= 8, "exceeded limit: {max_seen}");
+        }
+        assert_eq!(bp.in_flight(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_limit_rejected() {
+        let _ = Backpressure::new(0);
+    }
+}

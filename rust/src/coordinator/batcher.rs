@@ -1,0 +1,254 @@
+//! Dynamic batcher: coalesces same-route jobs inside a time window.
+//!
+//! Twin state (deployed arrays, compiled executables, integrator charge) is
+//! expensive to touch cold; grouping requests for the same route before
+//! dispatch lets a worker run them back-to-back on one warm instance (and,
+//! for PJRT step artifacts, in one batched execution). The policy is the
+//! standard serving trade-off: dispatch when `max_batch` is reached OR the
+//! oldest job has waited `window`.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{Batch, Job};
+
+/// Batching policy.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub window: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 32, window: Duration::from_millis(2) }
+    }
+}
+
+/// The batcher thread's state machine (pure, testable without threads).
+pub struct Batcher {
+    policy: BatchPolicy,
+    pending: BTreeMap<String, Vec<Job>>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Self { policy, pending: BTreeMap::new() }
+    }
+
+    /// Add a job; returns a full batch immediately if max_batch reached.
+    pub fn push(&mut self, job: Job) -> Option<Batch> {
+        let route = job.route.clone();
+        let q = self.pending.entry(route.clone()).or_default();
+        q.push(job);
+        if q.len() >= self.policy.max_batch {
+            let jobs = std::mem::take(q);
+            self.pending.remove(&route);
+            return Some(Batch { route, jobs });
+        }
+        None
+    }
+
+    /// Flush every route whose oldest job exceeded the window (or all with
+    /// `force`). Returns the matured batches.
+    pub fn flush(&mut self, now: Instant, force: bool) -> Vec<Batch> {
+        let mut out = Vec::new();
+        let routes: Vec<String> = self.pending.keys().cloned().collect();
+        for route in routes {
+            let mature = force
+                || self.pending[&route]
+                    .first()
+                    .is_some_and(|j| {
+                        now.duration_since(j.enqueued) >= self.policy.window
+                    });
+            if mature {
+                let jobs = self.pending.remove(&route).unwrap_or_default();
+                if !jobs.is_empty() {
+                    out.push(Batch { route, jobs });
+                }
+            }
+        }
+        out
+    }
+
+    /// Time until the next window deadline (for the event-loop sleep).
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.pending
+            .values()
+            .filter_map(|q| q.first())
+            .map(|j| {
+                self.policy
+                    .window
+                    .saturating_sub(now.duration_since(j.enqueued))
+            })
+            .min()
+    }
+
+    pub fn pending_jobs(&self) -> usize {
+        self.pending.values().map(Vec::len).sum()
+    }
+}
+
+/// Spawn the batcher event loop: receives jobs, emits batches.
+pub fn spawn(
+    policy: BatchPolicy,
+    jobs_rx: mpsc::Receiver<Job>,
+    batches_tx: mpsc::Sender<Batch>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("batcher".into())
+        .spawn(move || {
+            let mut b = Batcher::new(policy);
+            loop {
+                let now = Instant::now();
+                let timeout = b
+                    .next_deadline(now)
+                    .unwrap_or(Duration::from_millis(50));
+                match jobs_rx.recv_timeout(timeout) {
+                    Ok(job) => {
+                        if let Some(batch) = b.push(job) {
+                            if batches_tx.send(batch).is_err() {
+                                return;
+                            }
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        // Drain whatever is pending, then stop.
+                        for batch in b.flush(Instant::now(), true) {
+                            let _ = batches_tx.send(batch);
+                        }
+                        return;
+                    }
+                }
+                for batch in b.flush(Instant::now(), false) {
+                    if batches_tx.send(batch).is_err() {
+                        return;
+                    }
+                }
+            }
+        })
+        .expect("spawn batcher")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::twin::TwinRequest;
+
+    fn job(route: &str) -> (Job, mpsc::Receiver<crate::coordinator::JobResult>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Job {
+                id: 0,
+                route: route.into(),
+                req: TwinRequest::autonomous(vec![], 1),
+                enqueued: Instant::now(),
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn max_batch_triggers_immediate_dispatch() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 3,
+            window: Duration::from_secs(10),
+        });
+        let (_keep1, _r1) = {
+            let (j, r) = job("a");
+            (b.push(j), r)
+        };
+        let (j2, _r2) = job("a");
+        assert!(b.push(j2).is_none());
+        let (j3, _r3) = job("a");
+        let batch = b.push(j3).expect("third job completes the batch");
+        assert_eq!(batch.jobs.len(), 3);
+        assert_eq!(b.pending_jobs(), 0);
+    }
+
+    #[test]
+    fn routes_batch_independently() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 2,
+            window: Duration::from_secs(10),
+        });
+        let (ja, _ra) = job("a");
+        let (jb, _rb) = job("b");
+        assert!(b.push(ja).is_none());
+        assert!(b.push(jb).is_none());
+        assert_eq!(b.pending_jobs(), 2);
+        let (ja2, _ra2) = job("a");
+        let batch = b.push(ja2).unwrap();
+        assert_eq!(batch.route, "a");
+        assert_eq!(batch.jobs.len(), 2);
+        assert_eq!(b.pending_jobs(), 1); // b still pending
+    }
+
+    #[test]
+    fn window_flush_matures_old_jobs() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 100,
+            window: Duration::from_millis(1),
+        });
+        let (j, _r) = job("a");
+        b.push(j);
+        let later = Instant::now() + Duration::from_millis(5);
+        let batches = b.flush(later, false);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(b.pending_jobs(), 0);
+    }
+
+    #[test]
+    fn force_flush_empties_everything() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        let (j1, _r1) = job("a");
+        let (j2, _r2) = job("b");
+        b.push(j1);
+        b.push(j2);
+        let batches = b.flush(Instant::now(), true);
+        assert_eq!(batches.len(), 2);
+    }
+
+    #[test]
+    fn next_deadline_reflects_oldest() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 10,
+            window: Duration::from_millis(100),
+        });
+        assert!(b.next_deadline(Instant::now()).is_none());
+        let (j, _r) = job("a");
+        b.push(j);
+        let d = b.next_deadline(Instant::now()).unwrap();
+        assert!(d <= Duration::from_millis(100));
+    }
+
+    #[test]
+    fn spawned_loop_batches_and_flushes() {
+        let (jtx, jrx) = mpsc::channel();
+        let (btx, brx) = mpsc::channel();
+        let handle = spawn(
+            BatchPolicy {
+                max_batch: 2,
+                window: Duration::from_millis(5),
+            },
+            jrx,
+            btx,
+        );
+        let (j1, _r1) = job("x");
+        let (j2, _r2) = job("x");
+        jtx.send(j1).unwrap();
+        jtx.send(j2).unwrap();
+        let batch = brx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(batch.jobs.len(), 2);
+        // Window path: single job flushes after ~5 ms.
+        let (j3, _r3) = job("y");
+        jtx.send(j3).unwrap();
+        let batch = brx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(batch.route, "y");
+        drop(jtx);
+        handle.join().unwrap();
+    }
+}

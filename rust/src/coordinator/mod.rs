@@ -1,0 +1,58 @@
+//! The L3 coordinator: the serving layer that routes twin-inference
+//! requests to backends.
+//!
+//! Architecture (std-thread + mpsc; tokio is not available offline):
+//!
+//! ```text
+//!   clients ──> Router ──> Batcher ──> Scheduler ──> Worker pool
+//!                 │ admission           (least-loaded)   │ owns twin
+//!                 └ Backpressure                          │ instances
+//!                        Telemetry <──────────────────────┘
+//! ```
+//!
+//! * [`router`]       — route-key validation + admission control
+//! * [`batcher`]      — groups same-route requests within a time window up
+//!   to `max_batch` (amortises twin state reuse / batched artifacts)
+//! * [`scheduler`]    — least-loaded dispatch onto the worker pool
+//! * [`backpressure`] — global in-flight cap with fail-fast admission
+//! * [`telemetry`]    — counters + latency distributions
+//! * [`service`]      — wires everything; public submit/blocking API
+
+pub mod backpressure;
+pub mod batcher;
+pub mod router;
+pub mod scheduler;
+pub mod service;
+pub mod telemetry;
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::twin::{TwinRequest, TwinResponse};
+
+/// A unit of work flowing through the coordinator.
+pub struct Job {
+    pub id: u64,
+    /// Route key, e.g. "lorenz96/analog".
+    pub route: String,
+    pub req: TwinRequest,
+    pub enqueued: Instant,
+    /// Where the worker sends the outcome.
+    pub reply: mpsc::Sender<JobResult>,
+}
+
+/// Outcome delivered to the submitter.
+pub struct JobResult {
+    pub id: u64,
+    pub result: anyhow::Result<TwinResponse>,
+    /// Queue + batch wait (s).
+    pub wait_s: f64,
+    /// Backend execution time (s).
+    pub exec_s: f64,
+}
+
+/// A batch of same-route jobs.
+pub struct Batch {
+    pub route: String,
+    pub jobs: Vec<Job>,
+}

@@ -1,0 +1,195 @@
+//! Request router: route-key validation + admission control.
+//!
+//! The router is the coordinator's front door: it checks the route exists,
+//! applies backpressure, stamps the job and forwards it to the batcher. It
+//! is deliberately synchronous and cheap — everything heavier happens
+//! behind the batcher.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::backpressure::{Backpressure, Permit};
+use crate::coordinator::telemetry::Telemetry;
+use crate::coordinator::{Job, JobResult};
+use crate::twin::registry::TwinRegistry;
+use crate::twin::TwinRequest;
+
+/// A submitted request: await the result on `rx`; dropping `permit`
+/// releases the admission slot (hold it until the reply is consumed).
+pub struct Submitted {
+    pub id: u64,
+    pub rx: mpsc::Receiver<JobResult>,
+    permit: Permit,
+}
+
+impl Submitted {
+    /// Block for the result, releasing admission afterwards.
+    pub fn wait(self) -> Result<JobResult> {
+        let r = self
+            .rx
+            .recv()
+            .map_err(|_| anyhow!("coordinator dropped the job"));
+        drop(self.permit);
+        r
+    }
+}
+
+/// The router.
+pub struct Router {
+    registry: TwinRegistry,
+    jobs_tx: mpsc::Sender<Job>,
+    backpressure: Arc<Backpressure>,
+    telemetry: Arc<Telemetry>,
+    next_id: AtomicU64,
+}
+
+impl Router {
+    pub fn new(
+        registry: TwinRegistry,
+        jobs_tx: mpsc::Sender<Job>,
+        backpressure: Arc<Backpressure>,
+        telemetry: Arc<Telemetry>,
+    ) -> Self {
+        Self {
+            registry,
+            jobs_tx,
+            backpressure,
+            telemetry,
+            next_id: AtomicU64::new(1),
+        }
+    }
+
+    /// Submit a request; fails fast on unknown routes or saturation.
+    pub fn submit(
+        &self,
+        route: &str,
+        req: TwinRequest,
+    ) -> Result<Submitted> {
+        if !self.registry.contains(route) {
+            return Err(anyhow!(
+                "unknown route '{route}' (available: {})",
+                self.registry.keys().join(", ")
+            ));
+        }
+        let permit = self.backpressure.try_acquire().ok_or_else(|| {
+            self.telemetry.rejected.fetch_add(1, Ordering::Relaxed);
+            anyhow!(
+                "overloaded: {} requests in flight (limit {})",
+                self.backpressure.in_flight(),
+                self.backpressure.limit()
+            )
+        })?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (reply, rx) = mpsc::channel();
+        self.telemetry.submitted.fetch_add(1, Ordering::Relaxed);
+        self.jobs_tx
+            .send(Job {
+                id,
+                route: route.to_string(),
+                req,
+                enqueued: Instant::now(),
+                reply,
+            })
+            .map_err(|_| anyhow!("coordinator stopped"))?;
+        Ok(Submitted { id, rx, permit })
+    }
+
+    pub fn routes(&self) -> Vec<String> {
+        self.registry.keys()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::twin::{Twin, TwinResponse};
+
+    struct NullTwin;
+    impl Twin for NullTwin {
+        fn name(&self) -> &str {
+            "null"
+        }
+        fn state_dim(&self) -> usize {
+            1
+        }
+        fn dt(&self) -> f64 {
+            1.0
+        }
+        fn default_h0(&self) -> Vec<f64> {
+            vec![]
+        }
+        fn run(&mut self, _r: &TwinRequest) -> Result<TwinResponse> {
+            Ok(TwinResponse { trajectory: vec![], backend: "null".into() })
+        }
+    }
+
+    fn setup(limit: usize) -> (Router, mpsc::Receiver<Job>) {
+        let mut reg = TwinRegistry::new();
+        reg.register("null", || Box::new(NullTwin));
+        let (tx, rx) = mpsc::channel();
+        let router = Router::new(
+            reg,
+            tx,
+            Backpressure::new(limit),
+            Arc::new(Telemetry::new()),
+        );
+        (router, rx)
+    }
+
+    #[test]
+    fn submit_forwards_job() {
+        let (router, rx) = setup(4);
+        let s = router
+            .submit("null", TwinRequest::autonomous(vec![], 1))
+            .unwrap();
+        let job = rx.recv().unwrap();
+        assert_eq!(job.id, s.id);
+        assert_eq!(job.route, "null");
+    }
+
+    #[test]
+    fn unknown_route_rejected_before_admission() {
+        let (router, _rx) = setup(1);
+        let err = match router
+            .submit("ghost", TwinRequest::autonomous(vec![], 1))
+        {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("ghost route accepted"),
+        };
+        assert!(err.contains("unknown route"));
+        // Admission slot untouched.
+        assert!(router
+            .submit("null", TwinRequest::autonomous(vec![], 1))
+            .is_ok());
+    }
+
+    #[test]
+    fn saturation_sheds_with_overloaded_error() {
+        let (router, _rx) = setup(1);
+        let _held = router
+            .submit("null", TwinRequest::autonomous(vec![], 1))
+            .unwrap();
+        let err = match router
+            .submit("null", TwinRequest::autonomous(vec![], 1))
+        {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("admission not enforced"),
+        };
+        assert!(err.contains("overloaded"));
+    }
+
+    #[test]
+    fn ids_are_unique_and_increasing() {
+        let (router, _rx) = setup(10);
+        let a = router
+            .submit("null", TwinRequest::autonomous(vec![], 1))
+            .unwrap();
+        let b = router
+            .submit("null", TwinRequest::autonomous(vec![], 1))
+            .unwrap();
+        assert!(b.id > a.id);
+    }
+}

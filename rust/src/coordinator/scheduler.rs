@@ -1,0 +1,257 @@
+//! Worker pool + least-loaded batch dispatch.
+//!
+//! Each worker owns private twin instances (created lazily from the
+//! registry the first time a route lands on it) so no twin state is ever
+//! shared across threads. The scheduler tracks per-worker outstanding-job
+//! counts and sends each batch to the least-loaded worker.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use crate::coordinator::telemetry::Telemetry;
+use crate::coordinator::{Batch, JobResult};
+use crate::twin::registry::TwinRegistry;
+use crate::twin::Twin;
+
+/// Handle to the worker pool.
+pub struct Scheduler {
+    workers: Vec<WorkerHandle>,
+}
+
+struct WorkerHandle {
+    tx: mpsc::Sender<Batch>,
+    outstanding: Arc<AtomicUsize>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Scheduler {
+    /// Spawn `n_workers` workers over a shared registry.
+    pub fn start(
+        n_workers: usize,
+        registry: TwinRegistry,
+        telemetry: Arc<Telemetry>,
+    ) -> Self {
+        assert!(n_workers > 0);
+        let workers = (0..n_workers)
+            .map(|i| {
+                let (tx, rx) = mpsc::channel::<Batch>();
+                let outstanding = Arc::new(AtomicUsize::new(0));
+                let thread = spawn_worker(
+                    i,
+                    rx,
+                    registry.clone(),
+                    Arc::clone(&telemetry),
+                    Arc::clone(&outstanding),
+                );
+                WorkerHandle { tx, outstanding, thread: Some(thread) }
+            })
+            .collect();
+        Self { workers }
+    }
+
+    /// Dispatch a batch to the least-loaded worker.
+    pub fn dispatch(&self, batch: Batch) -> anyhow::Result<()> {
+        let w = self
+            .workers
+            .iter()
+            .min_by_key(|w| w.outstanding.load(Ordering::Relaxed))
+            .expect("at least one worker");
+        w.outstanding.fetch_add(batch.jobs.len(), Ordering::AcqRel);
+        w.tx.send(batch).map_err(|_| anyhow::anyhow!("worker stopped"))
+    }
+
+    /// Total outstanding jobs across workers.
+    pub fn outstanding(&self) -> usize {
+        self.workers
+            .iter()
+            .map(|w| w.outstanding.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        // Close channels, then join workers.
+        for w in &mut self.workers {
+            let (tx, _) = mpsc::channel();
+            w.tx = tx;
+        }
+        for w in &mut self.workers {
+            if let Some(t) = w.thread.take() {
+                let _ = t.join();
+            }
+        }
+    }
+}
+
+fn spawn_worker(
+    index: usize,
+    rx: mpsc::Receiver<Batch>,
+    registry: TwinRegistry,
+    telemetry: Arc<Telemetry>,
+    outstanding: Arc<AtomicUsize>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("twin-worker-{index}"))
+        .spawn(move || {
+            // Worker-private warm twin instances.
+            let mut twins: BTreeMap<String, Box<dyn Twin>> = BTreeMap::new();
+            while let Ok(batch) = rx.recv() {
+                telemetry.batches.fetch_add(1, Ordering::Relaxed);
+                telemetry
+                    .batched_jobs
+                    .fetch_add(batch.jobs.len() as u64, Ordering::Relaxed);
+                let route = batch.route.clone();
+                for job in batch.jobs {
+                    let wait_s =
+                        job.enqueued.elapsed().as_secs_f64();
+                    let twin = match twins.entry(route.clone()) {
+                        std::collections::btree_map::Entry::Occupied(e) => {
+                            Ok(e.into_mut())
+                        }
+                        std::collections::btree_map::Entry::Vacant(e) => {
+                            registry.create(&route).map(|t| e.insert(t))
+                        }
+                    };
+                    let t0 = Instant::now();
+                    let result = match twin {
+                        Ok(t) => t.run(&job.req),
+                        Err(e) => Err(e),
+                    };
+                    let exec_s = t0.elapsed().as_secs_f64();
+                    match &result {
+                        Ok(_) => {
+                            telemetry
+                                .completed
+                                .fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(_) => {
+                            telemetry.failed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    telemetry.record_latency(wait_s, exec_s);
+                    outstanding.fetch_sub(1, Ordering::AcqRel);
+                    let _ = job.reply.send(JobResult {
+                        id: job.id,
+                        result,
+                        wait_s,
+                        exec_s,
+                    });
+                }
+            }
+        })
+        .expect("spawn worker")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::twin::{TwinRequest, TwinResponse};
+    use std::time::Duration;
+
+    struct EchoTwin;
+
+    impl Twin for EchoTwin {
+        fn name(&self) -> &str {
+            "echo"
+        }
+        fn state_dim(&self) -> usize {
+            1
+        }
+        fn dt(&self) -> f64 {
+            1.0
+        }
+        fn default_h0(&self) -> Vec<f64> {
+            vec![0.0]
+        }
+        fn run(
+            &mut self,
+            req: &TwinRequest,
+        ) -> anyhow::Result<TwinResponse> {
+            Ok(TwinResponse {
+                trajectory: vec![req.h0.clone(); req.n_points],
+                backend: "echo".into(),
+            })
+        }
+    }
+
+    fn registry() -> TwinRegistry {
+        let mut r = TwinRegistry::new();
+        r.register("echo", || Box::new(EchoTwin));
+        r
+    }
+
+    fn batch_of(n: usize, route: &str) -> (Batch, Vec<mpsc::Receiver<JobResult>>) {
+        let mut jobs = Vec::new();
+        let mut rxs = Vec::new();
+        for id in 0..n as u64 {
+            let (tx, rx) = mpsc::channel();
+            jobs.push(crate::coordinator::Job {
+                id,
+                route: route.into(),
+                req: TwinRequest::autonomous(vec![id as f64], 3),
+                enqueued: Instant::now(),
+                reply: tx,
+            });
+            rxs.push(rx);
+        }
+        (Batch { route: route.into(), jobs }, rxs)
+    }
+
+    #[test]
+    fn batch_executes_and_replies() {
+        let tel = Arc::new(Telemetry::new());
+        let sched = Scheduler::start(2, registry(), Arc::clone(&tel));
+        let (batch, rxs) = batch_of(4, "echo");
+        sched.dispatch(batch).unwrap();
+        for (id, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+            assert_eq!(r.id, id as u64);
+            let resp = r.result.unwrap();
+            assert_eq!(resp.trajectory[0], vec![id as f64]);
+        }
+        let s = tel.snapshot();
+        assert_eq!(s.completed, 4);
+        assert_eq!(s.batches, 1);
+    }
+
+    #[test]
+    fn unknown_route_fails_jobs_not_worker() {
+        let tel = Arc::new(Telemetry::new());
+        let sched = Scheduler::start(1, registry(), Arc::clone(&tel));
+        let (batch, rxs) = batch_of(1, "missing");
+        sched.dispatch(batch).unwrap();
+        let r = rxs[0].recv_timeout(Duration::from_secs(2)).unwrap();
+        assert!(r.result.is_err());
+        // Worker still alive: dispatch a good batch.
+        let (batch, rxs) = batch_of(1, "echo");
+        sched.dispatch(batch).unwrap();
+        assert!(rxs[0]
+            .recv_timeout(Duration::from_secs(2))
+            .unwrap()
+            .result
+            .is_ok());
+        assert_eq!(tel.snapshot().failed, 1);
+    }
+
+    #[test]
+    fn outstanding_drains_to_zero() {
+        let tel = Arc::new(Telemetry::new());
+        let sched = Scheduler::start(3, registry(), tel);
+        for _ in 0..5 {
+            let (batch, rxs) = batch_of(2, "echo");
+            sched.dispatch(batch).unwrap();
+            for rx in rxs {
+                rx.recv_timeout(Duration::from_secs(2)).unwrap();
+            }
+        }
+        // All replies received => outstanding must be 0.
+        assert_eq!(sched.outstanding(), 0);
+    }
+}

@@ -1,0 +1,202 @@
+//! The assembled coordinator: router -> batcher -> scheduler -> workers.
+
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::config::ServeConfig;
+use crate::coordinator::backpressure::Backpressure;
+use crate::coordinator::batcher::{self, BatchPolicy};
+use crate::coordinator::router::{Router, Submitted};
+use crate::coordinator::scheduler::Scheduler;
+use crate::coordinator::telemetry::{Telemetry, TelemetrySnapshot};
+use crate::twin::registry::TwinRegistry;
+use crate::twin::{TwinRequest, TwinResponse};
+
+/// The running coordinator service.
+pub struct Coordinator {
+    router: Router,
+    telemetry: Arc<Telemetry>,
+    // Held for lifetime/teardown order: batcher drains into the scheduler.
+    _batcher: std::thread::JoinHandle<()>,
+    _dispatcher: std::thread::JoinHandle<()>,
+    _scheduler: Arc<Scheduler>,
+}
+
+impl Coordinator {
+    /// Start the full pipeline over a twin registry.
+    pub fn start(registry: TwinRegistry, cfg: &ServeConfig) -> Self {
+        let telemetry = Arc::new(Telemetry::new());
+        let backpressure = Backpressure::new(cfg.queue_depth);
+        let (jobs_tx, jobs_rx) = mpsc::channel();
+        let (batches_tx, batches_rx) = mpsc::channel();
+        let batcher = batcher::spawn(
+            BatchPolicy {
+                max_batch: cfg.max_batch,
+                window: Duration::from_secs_f64(cfg.batch_window_s),
+            },
+            jobs_rx,
+            batches_tx,
+        );
+        let scheduler = Arc::new(Scheduler::start(
+            cfg.workers,
+            registry.clone(),
+            Arc::clone(&telemetry),
+        ));
+        // Dispatcher: batches -> least-loaded worker.
+        let sched2 = Arc::clone(&scheduler);
+        let dispatcher = std::thread::Builder::new()
+            .name("dispatcher".into())
+            .spawn(move || {
+                while let Ok(batch) = batches_rx.recv() {
+                    if sched2.dispatch(batch).is_err() {
+                        return;
+                    }
+                }
+            })
+            .expect("spawn dispatcher");
+        let router = Router::new(
+            registry,
+            jobs_tx,
+            backpressure,
+            Arc::clone(&telemetry),
+        );
+        Self {
+            router,
+            telemetry,
+            _batcher: batcher,
+            _dispatcher: dispatcher,
+            _scheduler: scheduler,
+        }
+    }
+
+    /// Non-blocking submit (await via [`Submitted::wait`]).
+    pub fn submit(&self, route: &str, req: TwinRequest) -> Result<Submitted> {
+        self.router.submit(route, req)
+    }
+
+    /// Blocking call: submit + wait + unwrap the twin response.
+    pub fn call(&self, route: &str, req: TwinRequest) -> Result<TwinResponse> {
+        self.submit(route, req)?.wait()?.result
+    }
+
+    pub fn routes(&self) -> Vec<String> {
+        self.router.routes()
+    }
+
+    pub fn stats(&self) -> TelemetrySnapshot {
+        self.telemetry.snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::twin::Twin;
+
+    struct CounterTwin {
+        calls: u64,
+    }
+
+    impl Twin for CounterTwin {
+        fn name(&self) -> &str {
+            "counter"
+        }
+        fn state_dim(&self) -> usize {
+            1
+        }
+        fn dt(&self) -> f64 {
+            1.0
+        }
+        fn default_h0(&self) -> Vec<f64> {
+            vec![0.0]
+        }
+        fn run(&mut self, req: &TwinRequest) -> Result<TwinResponse> {
+            self.calls += 1;
+            Ok(TwinResponse {
+                trajectory: vec![vec![self.calls as f64]; req.n_points],
+                backend: "counter".into(),
+            })
+        }
+    }
+
+    fn cfg() -> ServeConfig {
+        ServeConfig {
+            workers: 2,
+            max_batch: 4,
+            batch_window_s: 1e-3,
+            queue_depth: 64,
+        }
+    }
+
+    #[test]
+    fn end_to_end_call() {
+        let mut reg = TwinRegistry::new();
+        reg.register("counter", || Box::new(CounterTwin { calls: 0 }));
+        let coord = Coordinator::start(reg, &cfg());
+        let resp = coord
+            .call("counter", TwinRequest::autonomous(vec![], 3))
+            .unwrap();
+        assert_eq!(resp.trajectory.len(), 3);
+        let s = coord.stats();
+        assert_eq!(s.submitted, 1);
+        assert_eq!(s.completed, 1);
+    }
+
+    #[test]
+    fn many_concurrent_calls_complete() {
+        let mut reg = TwinRegistry::new();
+        reg.register("counter", || Box::new(CounterTwin { calls: 0 }));
+        let coord = Arc::new(Coordinator::start(reg, &cfg()));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let c = Arc::clone(&coord);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..20 {
+                    c.call("counter", TwinRequest::autonomous(vec![], 2))
+                        .unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = coord.stats();
+        assert_eq!(s.completed, 80);
+        assert_eq!(s.failed, 0);
+        // Batching actually coalesced (fewer batches than jobs).
+        assert!(s.batches <= 80);
+    }
+
+    #[test]
+    fn twin_instances_are_warm_per_worker() {
+        // The counter increments across calls on the same worker: with one
+        // worker, the counter must reach the number of calls (instance
+        // reused, not recreated).
+        let mut reg = TwinRegistry::new();
+        reg.register("counter", || Box::new(CounterTwin { calls: 0 }));
+        let coord = Coordinator::start(
+            reg,
+            &ServeConfig { workers: 1, ..cfg() },
+        );
+        for _ in 0..4 {
+            coord
+                .call("counter", TwinRequest::autonomous(vec![], 1))
+                .unwrap();
+        }
+        let resp = coord
+            .call("counter", TwinRequest::autonomous(vec![], 1))
+            .unwrap();
+        assert_eq!(resp.trajectory[0][0], 5.0);
+    }
+
+    #[test]
+    fn unknown_route_fails_fast() {
+        let reg = TwinRegistry::new();
+        let coord = Coordinator::start(reg, &cfg());
+        assert!(coord
+            .call("ghost", TwinRequest::autonomous(vec![], 1))
+            .is_err());
+    }
+}

@@ -1,0 +1,151 @@
+//! Serving telemetry: lock-free counters plus a bounded latency reservoir.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::stats;
+
+/// Maximum retained latency samples (reservoir, newest-wins ring).
+const RESERVOIR: usize = 4096;
+
+/// Shared serving metrics.
+#[derive(Debug, Default)]
+pub struct Telemetry {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub batches: AtomicU64,
+    /// Sum of batch sizes (mean batch size = / batches).
+    pub batched_jobs: AtomicU64,
+    latencies_us: Mutex<LatencyRing>,
+}
+
+#[derive(Debug, Default)]
+struct LatencyRing {
+    buf: Vec<f64>,
+    next: usize,
+}
+
+impl Telemetry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_latency(&self, wait_s: f64, exec_s: f64) {
+        let us = (wait_s + exec_s) * 1e6;
+        let mut ring = self.latencies_us.lock().expect("telemetry lock");
+        if ring.buf.len() < RESERVOIR {
+            ring.buf.push(us);
+        } else {
+            let slot = ring.next;
+            ring.buf[slot] = us;
+        }
+        ring.next = (ring.next + 1) % RESERVOIR;
+    }
+
+    /// Point-in-time snapshot.
+    pub fn snapshot(&self) -> TelemetrySnapshot {
+        let ring = self.latencies_us.lock().expect("telemetry lock");
+        let (p50, p95, mean) = if ring.buf.is_empty() {
+            (f64::NAN, f64::NAN, f64::NAN)
+        } else {
+            (
+                stats::median(&ring.buf),
+                stats::percentile(&ring.buf, 95.0),
+                stats::summary(&ring.buf).mean,
+            )
+        };
+        let batches = self.batches.load(Ordering::Relaxed);
+        TelemetrySnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            batches,
+            mean_batch: if batches == 0 {
+                f64::NAN
+            } else {
+                self.batched_jobs.load(Ordering::Relaxed) as f64
+                    / batches as f64
+            },
+            latency_p50_us: p50,
+            latency_p95_us: p95,
+            latency_mean_us: mean,
+        }
+    }
+}
+
+/// Immutable metrics snapshot.
+#[derive(Debug, Clone)]
+pub struct TelemetrySnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub latency_p50_us: f64,
+    pub latency_p95_us: f64,
+    pub latency_mean_us: f64,
+}
+
+impl std::fmt::Display for TelemetrySnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "submitted={} completed={} failed={} rejected={} batches={} \
+             mean_batch={:.1} p50={:.0}µs p95={:.0}µs",
+            self.submitted,
+            self.completed,
+            self.failed,
+            self.rejected,
+            self.batches,
+            self.mean_batch,
+            self.latency_p50_us,
+            self.latency_p95_us
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_latency() {
+        let t = Telemetry::new();
+        t.submitted.fetch_add(3, Ordering::Relaxed);
+        t.completed.fetch_add(2, Ordering::Relaxed);
+        t.record_latency(1e-3, 2e-3);
+        t.record_latency(2e-3, 2e-3);
+        let s = t.snapshot();
+        assert_eq!(s.submitted, 3);
+        assert_eq!(s.completed, 2);
+        assert!((s.latency_p50_us - 3500.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn empty_snapshot_is_nan_not_panic() {
+        let s = Telemetry::new().snapshot();
+        assert!(s.latency_p50_us.is_nan());
+    }
+
+    #[test]
+    fn reservoir_bounded() {
+        let t = Telemetry::new();
+        for k in 0..(RESERVOIR * 2) {
+            t.record_latency(k as f64 * 1e-6, 0.0);
+        }
+        let ring = t.latencies_us.lock().unwrap();
+        assert_eq!(ring.buf.len(), RESERVOIR);
+    }
+
+    #[test]
+    fn mean_batch_computed() {
+        let t = Telemetry::new();
+        t.batches.fetch_add(2, Ordering::Relaxed);
+        t.batched_jobs.fetch_add(10, Ordering::Relaxed);
+        assert!((t.snapshot().mean_batch - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,91 @@
+//! First-order IR-drop (wire resistance) nonideality.
+//!
+//! Metal lines in a crossbar have finite resistance; cells far from the
+//! drivers see a reduced effective bias and their currents are attenuated
+//! on the way out. An exact solution requires a resistive-network solve;
+//! for the paper's small (32x32) arrays a first-order model captures the
+//! systematic part:
+//!
+//!   G_eff(r, c) = G(r, c) / (1 + G(r, c) * R_wire * (n_before_r + n_after_c))
+//!
+//! where `n_before_r` counts wire segments the input traverses along the
+//! row and `n_after_c` segments the output current traverses along the
+//! column. This is the standard series-resistance approximation used in
+//! compact crossbar models; DESIGN.md records it as a deliberate
+//! substitution for a SPICE-level solve.
+
+use crate::util::tensor::Mat;
+
+/// Per-segment wire resistance (Ohm). 180 nm M4/M5 lines at 32-cell pitch
+/// are a few Ohms per cell; 2.5 Ohm is a representative value.
+pub const DEFAULT_R_SEGMENT: f64 = 2.5;
+
+/// Apply the first-order IR-drop correction to a conductance matrix.
+///
+/// Inputs enter at row 0 (bit-line drivers on the left), outputs are
+/// collected at the bottom of each column (source-line TIAs).
+pub fn apply_ir_drop(g: &Mat, r_segment: f64) -> Mat {
+    let rows = g.rows;
+    let cols = g.cols;
+    Mat::from_fn(rows, cols, |r, c| {
+        let segments = (c + 1) as f64 + (rows - r) as f64;
+        let gv = g.at(r, c);
+        gv / (1.0 + gv * r_segment * segments)
+    })
+}
+
+/// Worst-case relative attenuation across the array (a scalar figure of
+/// merit used in DESIGN.md's nonideality budget).
+pub fn worst_case_attenuation(g: &Mat, r_segment: f64) -> f64 {
+    let eff = apply_ir_drop(g, r_segment);
+    let mut worst = 0.0f64;
+    for i in 0..g.data.len() {
+        if g.data[i] > 0.0 {
+            worst = worst.max(1.0 - eff.data[i] / g.data[i]);
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attenuation_is_monotone_in_distance() {
+        let g = Mat::full(8, 8, 100e-6);
+        let eff = apply_ir_drop(&g, DEFAULT_R_SEGMENT);
+        // Farther along the column (larger c) -> more segments -> smaller G.
+        assert!(eff.at(0, 7) < eff.at(0, 0));
+        // Larger r means *fewer* output segments (closer to the TIA).
+        assert!(eff.at(7, 0) > eff.at(0, 0));
+    }
+
+    #[test]
+    fn zero_wire_resistance_is_identity() {
+        let g = Mat::from_fn(4, 4, |r, c| (1 + r + c) as f64 * 1e-5);
+        let eff = apply_ir_drop(&g, 0.0);
+        assert_eq!(eff, g);
+    }
+
+    #[test]
+    fn attenuation_small_for_paper_arrays() {
+        // 32x32 at 100 µS worst case with 2.5 Ohm segments: the correction
+        // must stay in the few-percent band (otherwise the paper's direct
+        // programming scheme would not work).
+        let g = Mat::full(32, 32, 100e-6);
+        let worst = worst_case_attenuation(&g, DEFAULT_R_SEGMENT);
+        assert!(worst < 0.05, "worst-case IR drop {worst} too large");
+        assert!(worst > 0.001, "model inert: {worst}");
+    }
+
+    #[test]
+    fn high_conductance_attenuates_more() {
+        let lo = Mat::full(8, 8, 10e-6);
+        let hi = Mat::full(8, 8, 100e-6);
+        assert!(
+            worst_case_attenuation(&hi, DEFAULT_R_SEGMENT)
+                > worst_case_attenuation(&lo, DEFAULT_R_SEGMENT)
+        );
+    }
+}

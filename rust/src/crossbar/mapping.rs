@@ -1,0 +1,142 @@
+//! Signed weight <-> differential conductance mapping (Fig. 2f).
+//!
+//! Each logical weight w maps to a *pair* of conductances (g+, g-) on two
+//! adjacent physical columns driven with +v and -v:
+//!
+//!   w > 0:  g+ = g_min + |w| * slope,  g- = g_min
+//!   w < 0:  g+ = g_min,                g- = g_min + |w| * slope
+//!
+//! so the differential current is i = v * (g+ - g-) = v * slope * w, and the
+//! common-mode g_min cancels. `slope` is chosen so the largest |w| in the
+//! layer uses the full conductance window; the inverse scale is applied
+//! digitally... no — *analogously*, by folding it into the next stage's TIA
+//! gain (see [`crate::analog::tia`]), keeping the request path fully
+//! analogue as in the paper.
+
+use crate::device::taox::DeviceConfig;
+use crate::util::tensor::Mat;
+
+/// The affine weight->conductance map for one layer.
+#[derive(Debug, Clone)]
+pub struct WeightMapping {
+    /// Conductance per unit weight (S).
+    pub slope: f64,
+    /// Largest |w| the mapping supports without clipping.
+    pub w_max: f64,
+    /// Base (bias) conductance of the inactive rail.
+    pub g_base: f64,
+}
+
+impl WeightMapping {
+    /// Build a mapping that spans the device window for the given weights.
+    ///
+    /// If all weights are zero, a unit `w_max` is assumed (slope still
+    /// finite so programming is well-defined).
+    pub fn for_weights(w: &Mat, cfg: &DeviceConfig) -> Self {
+        let w_max = w
+            .data
+            .iter()
+            .fold(0.0f64, |m, &x| m.max(x.abs()))
+            .max(1e-12);
+        let slope = (cfg.g_max - cfg.g_min) / w_max;
+        Self { slope, w_max, g_base: cfg.g_min }
+    }
+
+    /// Target conductances (g_plus, g_minus) for a single weight.
+    pub fn weight_to_pair(&self, w: f64) -> (f64, f64) {
+        let mag = w.abs().min(self.w_max) * self.slope;
+        if w >= 0.0 {
+            (self.g_base + mag, self.g_base)
+        } else {
+            (self.g_base, self.g_base + mag)
+        }
+    }
+
+    /// Signed weight recovered from a conductance pair.
+    pub fn pair_to_weight(&self, gp: f64, gn: f64) -> f64 {
+        (gp - gn) / self.slope
+    }
+
+    /// Map a whole weight matrix to (G+, G-) target maps.
+    pub fn map_matrix(&self, w: &Mat) -> (Mat, Mat) {
+        let mut gp = Mat::zeros(w.rows, w.cols);
+        let mut gn = Mat::zeros(w.rows, w.cols);
+        for idx in 0..w.data.len() {
+            let (p, n) = self.weight_to_pair(w.data[idx]);
+            gp.data[idx] = p;
+            gn.data[idx] = n;
+        }
+        (gp, gn)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> DeviceConfig {
+        DeviceConfig::default()
+    }
+
+    #[test]
+    fn roundtrip_weight_pair_weight() {
+        let w = Mat::from_vec(1, 4, vec![0.5, -0.25, 1.0, 0.0]);
+        let m = WeightMapping::for_weights(&w, &cfg());
+        for &x in &w.data {
+            let (gp, gn) = m.weight_to_pair(x);
+            let back = m.pair_to_weight(gp, gn);
+            assert!((back - x).abs() < 1e-12, "{x} -> {back}");
+        }
+    }
+
+    #[test]
+    fn max_weight_uses_full_window() {
+        let c = cfg();
+        let w = Mat::from_vec(1, 2, vec![2.0, -2.0]);
+        let m = WeightMapping::for_weights(&w, &c);
+        let (gp, _) = m.weight_to_pair(2.0);
+        assert!((gp - c.g_max).abs() < 1e-12);
+        let (_, gn) = m.weight_to_pair(-2.0);
+        assert!((gn - c.g_max).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pairs_stay_inside_device_window() {
+        let c = cfg();
+        let w = Mat::from_vec(1, 3, vec![0.7, -0.1, 0.0]);
+        let m = WeightMapping::for_weights(&w, &c);
+        for &x in &w.data {
+            let (gp, gn) = m.weight_to_pair(x);
+            for g in [gp, gn] {
+                assert!(g >= c.g_min - 1e-15 && g <= c.g_max + 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_weights_clip() {
+        let c = cfg();
+        let w = Mat::from_vec(1, 1, vec![1.0]);
+        let m = WeightMapping::for_weights(&w, &c);
+        let (gp, _) = m.weight_to_pair(5.0); // beyond w_max
+        assert!(gp <= c.g_max + 1e-15);
+    }
+
+    #[test]
+    fn zero_matrix_has_finite_slope() {
+        let w = Mat::zeros(3, 3);
+        let m = WeightMapping::for_weights(&w, &cfg());
+        assert!(m.slope.is_finite() && m.slope > 0.0);
+    }
+
+    #[test]
+    fn map_matrix_shapes_and_signs() {
+        let w = Mat::from_vec(2, 2, vec![1.0, -1.0, 0.5, 0.0]);
+        let m = WeightMapping::for_weights(&w, &cfg());
+        let (gp, gn) = m.map_matrix(&w);
+        assert_eq!(gp.rows, 2);
+        assert!(gp.at(0, 0) > gn.at(0, 0)); // positive weight
+        assert!(gp.at(0, 1) < gn.at(0, 1)); // negative weight
+        assert_eq!(gp.at(1, 1), gn.at(1, 1)); // zero weight
+    }
+}

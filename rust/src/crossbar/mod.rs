@@ -1,0 +1,24 @@
+//! The 1T1R analogue crossbar array (Fig. 2f-g) and its weight mapping.
+//!
+//! * [`array`]        — a physical 32x32 array of [`crate::device::Memristor`]
+//!   cells with programming and noisy analogue reads
+//! * [`mapping`]      — signed weight <-> differential conductance mapping
+//! * [`differential`] — a differential-pair array pairing two physical
+//!   columns per logical output (positive / negative rails)
+//! * [`vmm`]          — the request-path VMM engine: caches effective
+//!   conductances and applies read noise in a moment-matched fast path
+//! * [`ir_drop`]      — first-order wire-resistance (IR drop) nonideality
+//! * [`tiling`]       — tiles logical matrices larger than one 32x32 array
+//!   across multiple physical arrays (the paper's multi-array system)
+
+pub mod array;
+pub mod differential;
+pub mod ir_drop;
+pub mod mapping;
+pub mod tiling;
+pub mod vmm;
+
+pub use array::CrossbarArray;
+pub use differential::DifferentialArray;
+pub use mapping::WeightMapping;
+pub use vmm::{NoiseMode, VmmEngine};

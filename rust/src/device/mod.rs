@@ -1,0 +1,25 @@
+//! Behavioural models of the paper's analogue devices.
+//!
+//! The paper's artefact is a fabricated 180 nm TiN/TaOx/Ta2O5/TiN 1T1R
+//! memristor chip; this module replaces it with a statistics-calibrated
+//! simulator (see DESIGN.md "Reproduction bands & substitutions"):
+//!
+//! * [`taox`]        — the analogue memristor cell: bounded conductance,
+//!   6-bit programmable levels (Fig. 2h), noisy reads
+//! * [`programming`] — write-verify programming loop and its error
+//!   distribution (Fig. 2k: 4.36 % variance)
+//! * [`noise`]       — read / programming noise sources
+//! * [`retention`]   — conductance drift over time (Fig. 2i)
+//! * [`yield_model`] — stuck-device faults (Fig. 2j: 97.3 % yield)
+//! * [`hp`]          — the HP memristor *ground truth* ODE (Strukov 2008,
+//!   Eqs. 2-3) — the physical asset the Fig. 3 digital twin mirrors
+
+pub mod hp;
+pub mod noise;
+pub mod programming;
+pub mod retention;
+pub mod taox;
+pub mod yield_model;
+
+pub use programming::{program_cell, ProgrammingResult};
+pub use taox::{DeviceConfig, Memristor, StuckMode};

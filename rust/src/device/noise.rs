@@ -1,0 +1,104 @@
+//! Noise sources of the analogue signal chain.
+//!
+//! Two families matter for the paper's robustness analysis (Fig. 4j):
+//!
+//! * **programming noise** — a *static* multiplicative error frozen into the
+//!   conductances at deployment time (weight perturbation);
+//! * **read noise** — a *dynamic* multiplicative error re-sampled on every
+//!   analogue read (activation perturbation). The paper's key observation is
+//!   that moderate read noise can *lower* extrapolation error, acting like
+//!   stochastic regularisation of the ODE flow.
+
+use crate::util::rng::Pcg64;
+
+/// A configurable multiplicative-Gaussian noise source.
+#[derive(Debug, Clone)]
+pub struct NoiseSource {
+    /// Relative standard deviation (0.02 == "2 % noise" in Fig. 4j).
+    pub sigma: f64,
+}
+
+impl NoiseSource {
+    pub fn new(sigma: f64) -> Self {
+        assert!(sigma >= 0.0, "noise sigma must be non-negative");
+        Self { sigma }
+    }
+
+    /// The zero-noise source.
+    pub fn off() -> Self {
+        Self { sigma: 0.0 }
+    }
+
+    pub fn is_off(&self) -> bool {
+        self.sigma == 0.0
+    }
+
+    /// Apply to a scalar: x * (1 + sigma * N(0,1)).
+    #[inline]
+    pub fn apply(&self, x: f64, rng: &mut Pcg64) -> f64 {
+        if self.sigma == 0.0 {
+            x
+        } else {
+            x * (1.0 + self.sigma * rng.normal())
+        }
+    }
+
+    /// Apply element-wise in place.
+    pub fn apply_slice(&self, xs: &mut [f64], rng: &mut Pcg64) {
+        if self.sigma == 0.0 {
+            return;
+        }
+        for x in xs {
+            *x *= 1.0 + self.sigma * rng.normal();
+        }
+    }
+}
+
+/// The paper's Fig. 4j grid axes: read-noise and programming-noise levels
+/// swept jointly (values are relative sigmas).
+pub const FIG4J_READ_LEVELS: [f64; 4] = [0.0, 0.01, 0.02, 0.05];
+pub const FIG4J_PROG_LEVELS: [f64; 4] = [0.0, 0.01, 0.02, 0.05];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn off_is_identity() {
+        let mut rng = Pcg64::seeded(1);
+        let n = NoiseSource::off();
+        assert_eq!(n.apply(3.5, &mut rng), 3.5);
+        let mut xs = vec![1.0, -2.0];
+        n.apply_slice(&mut xs, &mut rng);
+        assert_eq!(xs, vec![1.0, -2.0]);
+    }
+
+    #[test]
+    fn sigma_controls_spread() {
+        let mut rng = Pcg64::seeded(2);
+        let n = NoiseSource::new(0.05);
+        let samples: Vec<f64> =
+            (0..50_000).map(|_| n.apply(1.0, &mut rng)).collect();
+        let s = stats::summary(&samples);
+        assert!((s.mean - 1.0).abs() < 0.002);
+        assert!((s.std - 0.05).abs() < 0.003);
+    }
+
+    #[test]
+    fn slice_application_matches_scalar_distribution() {
+        let mut rng = Pcg64::seeded(3);
+        let n = NoiseSource::new(0.1);
+        let mut xs = vec![2.0; 50_000];
+        n.apply_slice(&mut xs, &mut rng);
+        let s = stats::summary(&xs);
+        assert!((s.mean - 2.0).abs() < 0.01);
+        assert!((s.std - 0.2).abs() < 0.01);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-negative")]
+    fn negative_sigma_rejected() {
+        let _ = NoiseSource::new(-0.1);
+    }
+}

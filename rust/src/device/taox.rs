@@ -1,0 +1,249 @@
+//! The analogue TaOx memristor cell.
+//!
+//! Calibrated to the statistics the paper reports for its 180 nm
+//! TiN/TaOx/Ta2O5/TiN devices:
+//!
+//! * usable conductance window ~2-100 µS with **> 64 distinct states**
+//!   (6-bit analogue programming, Fig. 2h);
+//! * relative programming error with **variance ≈ 4.36 %** after
+//!   write-verify (Fig. 2k), modelled lognormal (multiplicative);
+//! * stable retention over > 1e5 s with a slow diffusive drift (Fig. 2i);
+//! * array yield ≈ **97.3 %** with stuck-at faults (Fig. 2j).
+
+use crate::util::rng::Pcg64;
+
+/// Physical/operating parameters of one device family.
+#[derive(Debug, Clone)]
+pub struct DeviceConfig {
+    /// Minimum programmable conductance (S).
+    pub g_min: f64,
+    /// Maximum programmable conductance (S).
+    pub g_max: f64,
+    /// Number of programmable levels (paper: 6-bit => 64).
+    pub levels: u32,
+    /// Std-dev of the *relative* error of a single programming pulse
+    /// (before write-verify; the verify loop tightens the final error).
+    pub pulse_sigma: f64,
+    /// Write-verify acceptance band, relative (|g - target| / target).
+    pub verify_tol: f64,
+    /// Maximum write-verify iterations before giving up.
+    pub max_verify_iters: u32,
+    /// Std-dev of the relative read noise (thermal + 1/f lumped), per read.
+    pub read_noise: f64,
+    /// Retention drift coefficient: per-decade relative drift scale.
+    pub drift_nu: f64,
+    /// Probability a device is faulty (1 - yield).
+    pub fault_rate: f64,
+    /// Read voltage used for characterisation (V). Paper: 0.2 V.
+    pub v_read: f64,
+}
+
+impl Default for DeviceConfig {
+    fn default() -> Self {
+        Self {
+            g_min: 2e-6,
+            g_max: 100e-6,
+            levels: 64,
+            pulse_sigma: 0.08,
+            verify_tol: 0.033,
+            max_verify_iters: 32,
+            read_noise: 0.01,
+            drift_nu: 0.004,
+            fault_rate: 0.027, // 97.3 % yield
+            v_read: 0.2,
+        }
+    }
+}
+
+impl DeviceConfig {
+    /// Conductance of level `k` (0-based, linearly spaced levels).
+    pub fn level_conductance(&self, k: u32) -> f64 {
+        assert!(k < self.levels);
+        let t = k as f64 / (self.levels - 1) as f64;
+        self.g_min + t * (self.g_max - self.g_min)
+    }
+
+    /// Nearest programmable level for a target conductance.
+    pub fn nearest_level(&self, g: f64) -> u32 {
+        let t = (g - self.g_min) / (self.g_max - self.g_min);
+        (t * (self.levels - 1) as f64)
+            .round()
+            .clamp(0.0, (self.levels - 1) as f64) as u32
+    }
+
+    /// Clamp a conductance into the programmable window.
+    pub fn clamp_g(&self, g: f64) -> f64 {
+        g.clamp(self.g_min, self.g_max)
+    }
+}
+
+/// Fault modes observed at array level (Fig. 2j analysis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StuckMode {
+    /// Forming failure: permanently high-resistance (reads ~g_min).
+    StuckOff,
+    /// Breakdown: permanently low-resistance (reads ~g_max).
+    StuckOn,
+}
+
+/// One 1T1R analogue memristor cell.
+#[derive(Debug, Clone)]
+pub struct Memristor {
+    /// Programmed (post-verify) conductance, S.
+    pub g: f64,
+    /// Conductance the programming loop aimed for, S.
+    pub g_target: f64,
+    /// Fault state, if any.
+    pub stuck: Option<StuckMode>,
+    /// Accumulated retention time since programming, s.
+    pub age_s: f64,
+}
+
+impl Memristor {
+    /// A fresh healthy cell at the bottom of the window.
+    pub fn new(cfg: &DeviceConfig) -> Self {
+        Self { g: cfg.g_min, g_target: cfg.g_min, stuck: None, age_s: 0.0 }
+    }
+
+    /// Sample a possibly-faulty cell per the yield model.
+    pub fn sample(cfg: &DeviceConfig, rng: &mut Pcg64) -> Self {
+        let mut m = Self::new(cfg);
+        if rng.chance(cfg.fault_rate) {
+            // Forming failures dominate breakdowns ~3:1 in TaOx arrays.
+            m.stuck = Some(if rng.chance(0.75) {
+                StuckMode::StuckOff
+            } else {
+                StuckMode::StuckOn
+            });
+        }
+        m
+    }
+
+    /// Effective conductance including fault state (no read noise).
+    pub fn conductance(&self, cfg: &DeviceConfig) -> f64 {
+        match self.stuck {
+            Some(StuckMode::StuckOff) => cfg.g_min,
+            Some(StuckMode::StuckOn) => cfg.g_max,
+            None => self.g,
+        }
+    }
+
+    /// One noisy analogue read: returns the conductance seen by the
+    /// peripheral circuit. Multiplicative Gaussian read noise models the
+    /// lumped thermal/1-f noise of cell + mux + TIA input.
+    pub fn read(&self, cfg: &DeviceConfig, rng: &mut Pcg64) -> f64 {
+        let g = self.conductance(cfg);
+        cfg.clamp_g(g * (1.0 + cfg.read_noise * rng.normal()))
+    }
+
+    /// Current drawn at bias `v`: Ohm's law (the multiply of the analogue
+    /// MAC).
+    pub fn current(&self, cfg: &DeviceConfig, v: f64, rng: &mut Pcg64) -> f64 {
+        v * self.read(cfg, rng)
+    }
+
+    /// Whether the cell responds to programming.
+    pub fn is_healthy(&self) -> bool {
+        self.stuck.is_none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_span_window_monotonically() {
+        let cfg = DeviceConfig::default();
+        assert_eq!(cfg.level_conductance(0), cfg.g_min);
+        assert_eq!(cfg.level_conductance(cfg.levels - 1), cfg.g_max);
+        let mut prev = -1.0;
+        for k in 0..cfg.levels {
+            let g = cfg.level_conductance(k);
+            assert!(g > prev);
+            prev = g;
+        }
+    }
+
+    #[test]
+    fn paper_claims_at_least_64_states() {
+        // Fig. 2h: "more than 64 states" — the default config must provide
+        // 64 *distinct* programmable conductances.
+        let cfg = DeviceConfig::default();
+        assert!(cfg.levels >= 64);
+        let distinct: std::collections::BTreeSet<u64> = (0..cfg.levels)
+            .map(|k| cfg.level_conductance(k).to_bits())
+            .collect();
+        assert_eq!(distinct.len() as u32, cfg.levels);
+    }
+
+    #[test]
+    fn nearest_level_roundtrip() {
+        let cfg = DeviceConfig::default();
+        for k in 0..cfg.levels {
+            let g = cfg.level_conductance(k);
+            assert_eq!(cfg.nearest_level(g), k);
+        }
+        assert_eq!(cfg.nearest_level(0.0), 0);
+        assert_eq!(cfg.nearest_level(1.0), cfg.levels - 1);
+    }
+
+    #[test]
+    fn stuck_modes_pin_conductance() {
+        let cfg = DeviceConfig::default();
+        let mut m = Memristor::new(&cfg);
+        m.g = 50e-6;
+        m.stuck = Some(StuckMode::StuckOff);
+        assert_eq!(m.conductance(&cfg), cfg.g_min);
+        m.stuck = Some(StuckMode::StuckOn);
+        assert_eq!(m.conductance(&cfg), cfg.g_max);
+    }
+
+    #[test]
+    fn read_noise_statistics() {
+        let cfg = DeviceConfig::default();
+        let mut m = Memristor::new(&cfg);
+        m.g = 50e-6;
+        let mut rng = Pcg64::seeded(1);
+        let reads: Vec<f64> =
+            (0..20_000).map(|_| m.read(&cfg, &mut rng)).collect();
+        let s = crate::util::stats::summary(&reads);
+        assert!((s.mean / 50e-6 - 1.0).abs() < 0.005, "mean={}", s.mean);
+        let rel_std = s.std / s.mean;
+        assert!((rel_std - cfg.read_noise).abs() < 0.002, "std={rel_std}");
+    }
+
+    #[test]
+    fn read_stays_in_window() {
+        let cfg = DeviceConfig { read_noise: 0.5, ..Default::default() };
+        let mut m = Memristor::new(&cfg);
+        m.g = cfg.g_max;
+        let mut rng = Pcg64::seeded(2);
+        for _ in 0..1000 {
+            let g = m.read(&cfg, &mut rng);
+            assert!(g >= cfg.g_min && g <= cfg.g_max);
+        }
+    }
+
+    #[test]
+    fn yield_sampling_close_to_configured_rate() {
+        let cfg = DeviceConfig::default();
+        let mut rng = Pcg64::seeded(3);
+        let n = 100_000;
+        let faulty = (0..n)
+            .filter(|_| !Memristor::sample(&cfg, &mut rng).is_healthy())
+            .count();
+        let rate = faulty as f64 / n as f64;
+        assert!((rate - cfg.fault_rate).abs() < 0.002, "rate={rate}");
+    }
+
+    #[test]
+    fn ohms_law_current() {
+        let cfg = DeviceConfig { read_noise: 0.0, ..Default::default() };
+        let mut m = Memristor::new(&cfg);
+        m.g = 10e-6;
+        let mut rng = Pcg64::seeded(4);
+        let i = m.current(&cfg, 0.2, &mut rng);
+        assert!((i - 2e-6).abs() < 1e-12);
+    }
+}

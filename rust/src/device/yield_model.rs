@@ -1,0 +1,158 @@
+//! Array-level yield characterisation (Fig. 2j).
+//!
+//! The paper demonstrates array health by programming the letters
+//! 'H', 'K', 'U' onto three 32x32 arrays and reports a 97.3 % device yield.
+//! This module reproduces that experiment: render the letter bitmaps into
+//! conductance targets, program a sampled (faulty-cell-containing) array,
+//! and report yield + error statistics.
+
+use crate::device::programming::{program_map, summarize, ArrayProgrammingStats};
+use crate::device::taox::{DeviceConfig, Memristor};
+use crate::util::rng::Pcg64;
+
+/// Array side used throughout the paper (32x32 1T1R crossbars).
+pub const ARRAY_SIDE: usize = 32;
+
+/// 8x8 letter bitmaps, scaled up to 32x32 by 4x nearest-neighbour.
+/// 1 bits program to the top of the window, 0 bits to the bottom.
+const LETTERS: [(&str, [u8; 8]); 3] = [
+    ("H", [0b10000001, 0b10000001, 0b10000001, 0b11111111, 0b11111111, 0b10000001, 0b10000001, 0b10000001]),
+    ("K", [0b10000110, 0b10001100, 0b10011000, 0b11110000, 0b11110000, 0b10011000, 0b10001100, 0b10000110]),
+    ("U", [0b10000001, 0b10000001, 0b10000001, 0b10000001, 0b10000001, 0b10000001, 0b11000011, 0b01111110]),
+];
+
+/// Render a letter into a 32x32 conductance-target map.
+pub fn letter_targets(letter: &str, cfg: &DeviceConfig) -> Vec<f64> {
+    let bits = LETTERS
+        .iter()
+        .find(|(n, _)| *n == letter)
+        .unwrap_or_else(|| panic!("unknown letter {letter} (H, K or U)"))
+        .1;
+    let hi = 0.9 * cfg.g_max;
+    let lo = 1.1 * cfg.g_min;
+    let mut out = vec![lo; ARRAY_SIDE * ARRAY_SIDE];
+    for r in 0..ARRAY_SIDE {
+        for c in 0..ARRAY_SIDE {
+            let bit = (bits[r / 4] >> (7 - c / 4)) & 1;
+            if bit == 1 {
+                out[r * ARRAY_SIDE + c] = hi;
+            }
+        }
+    }
+    out
+}
+
+/// Result of programming one letter onto a fresh sampled array.
+#[derive(Debug, Clone)]
+pub struct LetterExperiment {
+    pub letter: String,
+    pub stats: ArrayProgrammingStats,
+    /// Post-programming conductance map (row-major 32x32), for rendering.
+    pub g_map: Vec<f64>,
+}
+
+/// Run the Fig. 2j experiment for one letter.
+pub fn program_letter(
+    letter: &str,
+    cfg: &DeviceConfig,
+    rng: &mut Pcg64,
+) -> LetterExperiment {
+    let targets = letter_targets(letter, cfg);
+    let mut cells: Vec<Memristor> = (0..targets.len())
+        .map(|_| Memristor::sample(cfg, rng))
+        .collect();
+    let results = program_map(&mut cells, cfg, &targets, rng);
+    let stats = summarize(&results);
+    let g_map = cells.iter().map(|c| c.conductance(cfg)).collect();
+    LetterExperiment { letter: letter.to_string(), stats, g_map }
+}
+
+/// Run all three letters (the full Fig. 2j/2k experiment); returns the
+/// per-letter experiments and the pooled yield fraction.
+pub fn run_letters_experiment(
+    cfg: &DeviceConfig,
+    seed: u64,
+) -> (Vec<LetterExperiment>, f64) {
+    let mut rng = Pcg64::seeded(seed);
+    let exps: Vec<LetterExperiment> = ["H", "K", "U"]
+        .iter()
+        .map(|l| program_letter(l, cfg, &mut rng))
+        .collect();
+    let pooled =
+        exps.iter().map(|e| e.stats.yield_frac).sum::<f64>() / exps.len() as f64;
+    (exps, pooled)
+}
+
+/// ASCII rendering of a conductance map (for the CLI characterize command).
+pub fn render_map(g_map: &[f64], cfg: &DeviceConfig) -> String {
+    let mid = 0.5 * (cfg.g_min + cfg.g_max);
+    let mut s = String::with_capacity(ARRAY_SIDE * (ARRAY_SIDE + 1));
+    for r in 0..ARRAY_SIDE {
+        for c in 0..ARRAY_SIDE {
+            s.push(if g_map[r * ARRAY_SIDE + c] > mid { '#' } else { '.' });
+        }
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn letter_targets_are_binary_maps() {
+        let cfg = DeviceConfig::default();
+        for l in ["H", "K", "U"] {
+            let t = letter_targets(l, &cfg);
+            assert_eq!(t.len(), 1024);
+            let hi = t.iter().filter(|&&g| g > 50e-6).count();
+            assert!(hi > 100 && hi < 900, "letter {l} density {hi}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown letter")]
+    fn unknown_letter_panics() {
+        let _ = letter_targets("Z", &DeviceConfig::default());
+    }
+
+    #[test]
+    fn yield_close_to_paper_value() {
+        let cfg = DeviceConfig::default();
+        let (_, pooled) = run_letters_experiment(&cfg, 42);
+        // 3 x 1024 devices at 97.3 % expected yield; allow sampling slack.
+        assert!(
+            (pooled - 0.973).abs() < 0.02,
+            "pooled yield {pooled} far from 97.3 %"
+        );
+    }
+
+    #[test]
+    fn error_variance_order_of_magnitude() {
+        // Fig. 2k: variance of the percentage programming error ~ 4.36.
+        let cfg = DeviceConfig::default();
+        let (exps, _) = run_letters_experiment(&cfg, 7);
+        for e in &exps {
+            assert!(
+                e.stats.var_rel_error_pct > 0.1
+                    && e.stats.var_rel_error_pct < 20.0,
+                "letter {} var {}",
+                e.letter,
+                e.stats.var_rel_error_pct
+            );
+        }
+    }
+
+    #[test]
+    fn render_shows_letter_shape() {
+        let cfg = DeviceConfig { fault_rate: 0.0, ..Default::default() };
+        let mut rng = Pcg64::seeded(1);
+        let exp = program_letter("H", &cfg, &mut rng);
+        let art = render_map(&exp.g_map, &cfg);
+        // The H crossbar row (rows 12-19) must be mostly filled.
+        let line: &str = art.lines().nth(14).unwrap();
+        let filled = line.chars().filter(|&c| c == '#').count();
+        assert!(filled >= 28, "crossbar row only {filled} filled:\n{art}");
+    }
+}

@@ -1,0 +1,24 @@
+//! Latency / energy projection models (Fig. 3k-l, Fig. 4h-i, Supp. Table 1).
+//!
+//! The paper's speed/energy numbers are *projections*: GPU-side figures come
+//! from an analytic latency/energy model of small-batch recurrent inference
+//! on an A100-class device, and the memristive figures from the analogue
+//! signal chain's settling times and static power. This module implements
+//! the same methodology with every constant documented and unit-tested, so
+//! the benches can regenerate the paper's ratio structure (who wins, by
+//! roughly what factor, where the gap widens) — see DESIGN.md for the
+//! substitution rationale.
+//!
+//! * [`digital`]  — GPU projection (kernel-launch-floor + roofline terms)
+//! * [`analogue`] — memristive solver projection (settle times, crossbar
+//!   static power, integrator energy), including a physically-derived
+//!   estimate straight from a deployed simulated array
+//! * [`report`]   — comparison-table assembly shared by the benches
+
+pub mod analogue;
+pub mod digital;
+pub mod report;
+
+pub use analogue::AnalogCost;
+pub use digital::{DigitalCost, ModelKind};
+pub use report::{ComparisonRow, comparison_table};

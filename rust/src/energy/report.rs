@@ -1,0 +1,123 @@
+//! Comparison-table assembly shared by the Fig. 3k/3l/4h/4i benches and
+//! Supplementary Table 1 regeneration.
+
+use crate::energy::analogue::{self, AnalogParams};
+use crate::energy::digital::{self, GpuParams, ModelKind};
+
+/// One row of a speed/energy comparison table.
+#[derive(Debug, Clone)]
+pub struct ComparisonRow {
+    pub model: String,
+    pub hidden: usize,
+    /// Projected latency (s) per inference step / forward pass.
+    pub t_s: f64,
+    /// Projected energy (J).
+    pub e_j: f64,
+    /// Ratio vs the memristive system (>1 means ours wins).
+    pub speedup_vs_ours: f64,
+    pub energy_ratio_vs_ours: f64,
+}
+
+/// Build the Fig. 4h/4i table: the four digital models + ours across the
+/// paper's hidden sizes, per inference sample, d = 6 (Lorenz96).
+pub fn comparison_table(
+    hidden_sizes: &[usize],
+    gpu: &GpuParams,
+    ana: &AnalogParams,
+) -> Vec<ComparisonRow> {
+    let mut rows = Vec::new();
+    for &h in hidden_sizes {
+        let ours = analogue::project_step(3, h, ana);
+        for kind in [
+            ModelKind::NeuralOde,
+            ModelKind::Lstm,
+            ModelKind::Gru,
+            ModelKind::Rnn,
+        ] {
+            let d = digital::project_step(kind, 6, h, 0, gpu);
+            rows.push(ComparisonRow {
+                model: kind.label().to_string(),
+                hidden: h,
+                t_s: d.t_step,
+                e_j: d.e_step,
+                speedup_vs_ours: d.t_step / ours.t_step,
+                energy_ratio_vs_ours: d.e_step / ours.e_step,
+            });
+        }
+        rows.push(ComparisonRow {
+            model: "memristive-node (ours)".to_string(),
+            hidden: h,
+            t_s: ours.t_step,
+            e_j: ours.e_step,
+            speedup_vs_ours: 1.0,
+            energy_ratio_vs_ours: 1.0,
+        });
+    }
+    rows
+}
+
+/// Pretty-print rows the way the paper's figures read.
+pub fn print_rows(title: &str, rows: &[ComparisonRow]) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<24} {:>7} {:>12} {:>12} {:>10} {:>10}",
+        "model", "hidden", "latency", "energy", "speed x", "energy x"
+    );
+    for r in rows {
+        println!(
+            "{:<24} {:>7} {:>9.1} µs {:>9.2} µJ {:>9.1}x {:>9.1}x",
+            r.model,
+            r.hidden,
+            r.t_s * 1e6,
+            r.e_j * 1e6,
+            r.speedup_vs_ours,
+            r.energy_ratio_vs_ours
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_has_expected_rows() {
+        let rows = comparison_table(
+            &[64, 512],
+            &GpuParams::default(),
+            &AnalogParams::integrated(),
+        );
+        assert_eq!(rows.len(), 10); // (4 digital + ours) x 2 sizes
+        assert!(rows.iter().any(|r| r.model.contains("ours")));
+    }
+
+    #[test]
+    fn ours_rows_have_unit_ratio() {
+        let rows = comparison_table(
+            &[128],
+            &GpuParams::default(),
+            &AnalogParams::integrated(),
+        );
+        let ours = rows.iter().find(|r| r.model.contains("ours")).unwrap();
+        assert_eq!(ours.speedup_vs_ours, 1.0);
+        assert_eq!(ours.energy_ratio_vs_ours, 1.0);
+    }
+
+    #[test]
+    fn gap_widens_with_scale() {
+        // The paper's scalability claim: the ode-vs-ours speedup grows
+        // with hidden size.
+        let rows = comparison_table(
+            &[64, 512],
+            &GpuParams::default(),
+            &AnalogParams::integrated(),
+        );
+        let at = |h: usize| {
+            rows.iter()
+                .find(|r| r.hidden == h && r.model == "neural-ode")
+                .unwrap()
+                .speedup_vs_ours
+        };
+        assert!(at(512) > at(64));
+    }
+}

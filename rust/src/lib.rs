@@ -1,0 +1,47 @@
+//! # memode — continuous-time digital twins on an analogue memristive
+//! # neural-ODE solver
+//!
+//! Reproduction of *"Continuous-Time Digital Twin with Analogue Memristive
+//! Neural Ordinary Differential Equation Solver"* (Chen et al., 2024) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the digital-twin coordinator (request
+//!   routing, batching, scheduling, telemetry) plus a from-scratch
+//!   behavioural simulation of the paper's analogue hardware: TaOx memristor
+//!   devices, 1T1R crossbar arrays with differential-pair weight mapping,
+//!   TIA / diode-ReLU / clamp peripheral circuits and the closed-loop IVP
+//!   integrator that together solve a neural ODE entirely in the "analogue"
+//!   domain.
+//! * **Layer 2 (python/compile, build time)** — JAX definitions of the
+//!   neural-ODE compute graphs, trained and AOT-lowered to HLO text.
+//! * **Layer 1 (python/compile/kernels, build time)** — Pallas kernels for
+//!   the crossbar VMM and the fused RK4 step.
+//!
+//! The [`runtime`] module loads the AOT artifacts via PJRT (the `xla`
+//! crate) — this is the *digital* execution backend the paper benchmarks
+//! against; the [`analog`] + [`crossbar`] + [`device`] stack is the
+//! *analogue* backend (the paper's contribution). [`twin`] exposes both
+//! behind one trait and [`coordinator`] serves them.
+//!
+//! Python never runs on the request path: after `make artifacts` the Rust
+//! binary is self-contained.
+
+pub mod analog;
+pub mod config;
+pub mod coordinator;
+pub mod crossbar;
+pub mod device;
+pub mod energy;
+pub mod metrics;
+pub mod models;
+pub mod ode;
+pub mod runtime;
+pub mod twin;
+pub mod util;
+pub mod workload;
+
+/// Crate version, reported by the CLI and the coordinator's health endpoint.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// Default artifacts directory relative to the repo root.
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";

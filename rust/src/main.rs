@@ -1,0 +1,340 @@
+//! `memode` — the leader binary.
+//!
+//! Subcommands:
+//!
+//! * `characterize` — regenerate the Fig. 2 device experiments (states,
+//!   retention, letters/yield, programming-error histogram)
+//! * `run-twin`     — one twin inference on a chosen route, printing the
+//!   trajectory head and basic accuracy vs ground truth
+//! * `serve`        — start the coordinator and run a synthetic client
+//!   load, printing latency/throughput telemetry
+//! * `routes`       — list available twin routes
+//! * `config`       — print the effective configuration as JSON
+//!
+//! `memode <cmd> --help` lists per-command flags.
+
+use anyhow::Result;
+
+use memode::analog::system::AnalogNoise;
+use memode::config::SystemConfig;
+use memode::coordinator::service::Coordinator;
+use memode::device::taox::DeviceConfig;
+use memode::device::{programming, retention, taox, yield_model};
+use memode::runtime::service::PjrtService;
+use memode::twin::setup::{build_registry, TrainedWeights};
+use memode::twin::TwinRequest;
+use memode::util::cli::Args;
+use memode::util::rng::Pcg64;
+use memode::util::stats;
+use memode::workload::{lorenz96, stimuli::Waveform};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = if argv.is_empty() || argv[0].starts_with("--") {
+        "help".to_string()
+    } else {
+        argv.remove(0)
+    };
+    match cmd.as_str() {
+        "characterize" => characterize(argv),
+        "run-twin" => run_twin(argv),
+        "serve" => serve(argv),
+        "routes" => routes(argv),
+        "config" => config_cmd(argv),
+        "help" | "-h" | "--help" => {
+            println!(
+                "memode {} — continuous-time digital twins on an analogue \
+                 memristive neural-ODE solver\n\n\
+                 Usage: memode <command> [flags]\n\n\
+                 Commands:\n\
+                 \x20 characterize   Fig. 2 device experiments\n\
+                 \x20 run-twin       one twin inference\n\
+                 \x20 serve          coordinator + synthetic load\n\
+                 \x20 routes         list twin routes\n\
+                 \x20 config         print effective config JSON\n",
+                memode::VERSION
+            );
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command '{other}' (try --help)"),
+    }
+}
+
+fn load_config(args: &Args) -> Result<SystemConfig> {
+    let path = args.get("config");
+    if path.is_empty() {
+        Ok(SystemConfig::default())
+    } else {
+        SystemConfig::from_file(std::path::Path::new(&path))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// characterize — Fig. 2 experiments
+// ---------------------------------------------------------------------------
+
+fn characterize(argv: Vec<String>) -> Result<()> {
+    let args = Args::new("memode characterize", "Fig. 2 device experiments")
+        .opt("config", "", "config JSON path")
+        .opt("what", "all", "states | retention | letters | prog-error | all")
+        .opt("seed", "42", "random seed")
+        .parse(argv)
+        .map_err(|m| anyhow::anyhow!("{m}"))?;
+    let cfg = load_config(&args)?;
+    let what = args.get("what");
+    let seed = args.get_u64("seed");
+    let dev = cfg.device.clone();
+
+    if what == "states" || what == "all" {
+        println!("== Fig. 2h: multi-level programming ({} states) ==", dev.levels);
+        let mut rng = Pcg64::seeded(seed);
+        let mut cell = taox::Memristor::new(&dev);
+        let mut errs = Vec::new();
+        for k in (0..dev.levels).step_by(7) {
+            let g = dev.level_conductance(k);
+            let r = programming::program_cell(&mut cell, &dev, g, &mut rng);
+            errs.push(r.rel_error);
+            println!(
+                "  level {k:>2}: target {:>7.2} µS -> {:>7.2} µS ({} iters)",
+                g * 1e6,
+                cell.g * 1e6,
+                r.iters
+            );
+        }
+        println!(
+            "  mean relative error {:.3} %",
+            stats::summary(&errs).mean * 100.0
+        );
+    }
+
+    if what == "retention" || what == "all" {
+        println!("\n== Fig. 2i: retention (1e5 s) ==");
+        let mut rng = Pcg64::seeded(seed + 1);
+        for target in [20e-6, 50e-6, 80e-6] {
+            let mut cell = taox::Memristor::new(&dev);
+            programming::program_cell(&mut cell, &dev, target, &mut rng);
+            let trace =
+                retention::retention_trace(&mut cell, &dev, 1e5, 1e4, &mut rng);
+            let first = trace.first().unwrap().1;
+            let last = trace.last().unwrap().1;
+            println!(
+                "  {:>5.1} µS: after 1e5 s -> {:>5.1} µS (drift {:+.2} %)",
+                first * 1e6,
+                last * 1e6,
+                (last / first - 1.0) * 100.0
+            );
+        }
+    }
+
+    if what == "letters" || what == "all" {
+        println!("\n== Fig. 2j: letter programming + yield ==");
+        let (exps, pooled) = yield_model::run_letters_experiment(&dev, seed);
+        for e in &exps {
+            println!(
+                "  '{}': yield {:.1} %, mean err {:.2} %, var {:.2} (%^2)",
+                e.letter,
+                e.stats.yield_frac * 100.0,
+                e.stats.mean_rel_error * 100.0,
+                e.stats.var_rel_error_pct
+            );
+            println!("{}", yield_model::render_map(&e.g_map, &dev));
+        }
+        println!(
+            "  pooled yield {:.1} % (paper: 97.3 %)",
+            pooled * 100.0
+        );
+    }
+
+    if what == "prog-error" || what == "all" {
+        println!("\n== Fig. 2k: programming-error distribution ==");
+        let mut rng = Pcg64::seeded(seed + 2);
+        let mut signed_pct = Vec::new();
+        for _ in 0..3072 {
+            let mut cell = taox::Memristor::sample(&dev, &mut rng);
+            let g = rng.uniform_in(20e-6, 100e-6);
+            let r = programming::program_cell(&mut cell, &dev, g, &mut rng);
+            if r.converged {
+                let signed = (cell.g - cell.g_target) / cell.g_target * 100.0;
+                signed_pct.push(signed);
+            }
+        }
+        let mut hist = stats::Histogram::new(-8.0, 8.0, 17);
+        hist.add_all(&signed_pct);
+        print!("{}", hist.ascii(40));
+        let s = stats::summary(&signed_pct);
+        println!(
+            "  variance {:.2} (%^2) over {} responsive devices (paper: 4.36)",
+            s.var, s.n
+        );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// run-twin
+// ---------------------------------------------------------------------------
+
+fn run_twin(argv: Vec<String>) -> Result<()> {
+    let args = Args::new("memode run-twin", "one twin inference")
+        .opt("config", "", "config JSON path")
+        .opt("route", "lorenz96/analog", "twin route (see `memode routes`)")
+        .opt("steps", "200", "output samples")
+        .opt("stimulus", "sine", "hp twins: sine|triangular|rectangular|modulated")
+        .flag("pjrt", "start the PJRT runtime (needed for */pjrt routes)")
+        .parse(argv)
+        .map_err(|m| anyhow::anyhow!("{m}"))?;
+    let cfg = load_config(&args)?;
+    let weights = TrainedWeights::load(&cfg)?;
+    let service = if args.get_bool("pjrt") {
+        Some(PjrtService::start(&cfg.artifacts_dir)?)
+    } else {
+        None
+    };
+    let reg = build_registry(
+        &cfg,
+        &weights,
+        service.as_ref().map(|s| s.handle()),
+    )?;
+    let route = args.get("route");
+    let steps = args.get_usize("steps");
+    let mut twin = reg.create(&route)?;
+    let req = if route.starts_with("hp/") {
+        let wave = match args.get("stimulus").as_str() {
+            "sine" => Waveform::sine(1.0, 4.0),
+            "triangular" => Waveform::triangular(1.0, 4.0),
+            "rectangular" => Waveform::rectangular(1.0, 4.0),
+            "modulated" => Waveform::modulated(1.0, 4.0, 1.0),
+            other => anyhow::bail!("unknown stimulus '{other}'"),
+        };
+        TwinRequest::driven(vec![], steps, wave)
+    } else {
+        TwinRequest::autonomous(vec![], steps)
+    };
+    let t0 = std::time::Instant::now();
+    let resp = twin.run(&req)?;
+    let dt_wall = t0.elapsed();
+    println!(
+        "route {route} backend {} -> {} samples in {:?}",
+        resp.backend,
+        resp.trajectory.len(),
+        dt_wall
+    );
+    for (k, row) in resp.trajectory.iter().take(5).enumerate() {
+        println!(
+            "  t={:?}s: {:?}",
+            k as f64 * twin.dt(),
+            row.iter().map(|v| (v * 1000.0).round() / 1000.0).collect::<Vec<_>>()
+        );
+    }
+    // Ground-truth comparison for the Lorenz96 twin (normalized space).
+    if route.starts_with("lorenz96/") {
+        let truth = lorenz96::simulate_normalized(resp.trajectory.len());
+        let l1 =
+            memode::metrics::l1::mean_l1_multi(&resp.trajectory, &truth);
+        println!("  mean L1 vs ground truth over horizon: {l1:.4}");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// serve
+// ---------------------------------------------------------------------------
+
+fn serve(argv: Vec<String>) -> Result<()> {
+    let args = Args::new("memode serve", "coordinator + synthetic load")
+        .opt("config", "", "config JSON path")
+        .opt("requests", "64", "synthetic requests to issue")
+        .opt("steps", "100", "samples per request")
+        .opt("route", "lorenz96/digital", "route to load-test")
+        .flag("pjrt", "start the PJRT runtime")
+        .parse(argv)
+        .map_err(|m| anyhow::anyhow!("{m}"))?;
+    let cfg = load_config(&args)?;
+    let weights = TrainedWeights::load(&cfg)?;
+    let service = if args.get_bool("pjrt") {
+        Some(PjrtService::start(&cfg.artifacts_dir)?)
+    } else {
+        None
+    };
+    let reg = build_registry(
+        &cfg,
+        &weights,
+        service.as_ref().map(|s| s.handle()),
+    )?;
+    let coord = Coordinator::start(reg, &cfg.serve);
+    let route = args.get("route");
+    let n = args.get_usize("requests");
+    let steps = args.get_usize("steps");
+    println!(
+        "serving {n} requests on {route} ({} workers, max batch {})",
+        cfg.serve.workers, cfg.serve.max_batch
+    );
+    let t0 = std::time::Instant::now();
+    let pending: Vec<_> = (0..n)
+        .filter_map(|_| {
+            coord
+                .submit(&route, TwinRequest::autonomous(vec![], steps))
+                .ok()
+        })
+        .collect();
+    let accepted = pending.len();
+    let mut ok = 0;
+    for p in pending {
+        if p.wait()?.result.is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "accepted {accepted}/{n}, completed {ok} in {wall:.3}s \
+         ({:.1} req/s)",
+        ok as f64 / wall
+    );
+    println!("telemetry: {}", coord.stats());
+    Ok(())
+}
+
+fn routes(argv: Vec<String>) -> Result<()> {
+    let args = Args::new("memode routes", "list twin routes")
+        .opt("config", "", "config JSON path")
+        .flag("pjrt", "include PJRT routes")
+        .parse(argv)
+        .map_err(|m| anyhow::anyhow!("{m}"))?;
+    let cfg = load_config(&args)?;
+    let weights = TrainedWeights::load(&cfg)?;
+    let service = if args.get_bool("pjrt") {
+        Some(PjrtService::start(&cfg.artifacts_dir)?)
+    } else {
+        None
+    };
+    let reg = build_registry(
+        &cfg,
+        &weights,
+        service.as_ref().map(|s| s.handle()),
+    )?;
+    for r in reg.keys() {
+        println!("{r}");
+    }
+    Ok(())
+}
+
+fn config_cmd(argv: Vec<String>) -> Result<()> {
+    let args = Args::new("memode config", "print effective config")
+        .opt("config", "", "config JSON path")
+        .parse(argv)
+        .map_err(|m| anyhow::anyhow!("{m}"))?;
+    let cfg = load_config(&args)?;
+    println!("{}", cfg.to_json().to_string());
+    Ok(())
+}
+
+// Quiet the unused-import warning for types only used in some branches.
+#[allow(unused)]
+fn _type_anchors(_: DeviceConfig, _: AnalogNoise) {}

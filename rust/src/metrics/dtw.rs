@@ -1,0 +1,123 @@
+//! Dynamic Time Warping (paper Eqs. 6-7).
+//!
+//! Classic O(n*m) dynamic program with the |x - y| local cost of Eq. 6 and
+//! the three-neighbour recursion of Eq. 7. Two-row memory (O(min(n, m)))
+//! so the 2400-point Lorenz96 sequences stay cache-friendly. The paper
+//! reports a *normalised* DTW score; we expose both the raw cumulative
+//! cost and the per-step normalisation used in Fig. 3j.
+
+/// Raw DTW distance between two scalar series (Eq. 7 cumulative cost at
+/// (n, m)).
+pub fn dtw_distance(x: &[f64], y: &[f64]) -> f64 {
+    assert!(!x.is_empty() && !y.is_empty(), "empty series");
+    // Keep the shorter series in the inner dimension for memory.
+    let (a, b) = if x.len() >= y.len() { (x, y) } else { (y, x) };
+    let m = b.len();
+    let mut prev = vec![f64::INFINITY; m + 1];
+    let mut curr = vec![f64::INFINITY; m + 1];
+    prev[0] = 0.0;
+    for &ai in a {
+        curr[0] = f64::INFINITY;
+        for j in 1..=m {
+            let d = (ai - b[j - 1]).abs();
+            let best = prev[j].min(curr[j - 1]).min(prev[j - 1]);
+            curr[j] = d + best;
+        }
+        std::mem::swap(&mut prev, &mut curr);
+    }
+    prev[m]
+}
+
+/// Normalised DTW: raw distance divided by the warping-path length bound
+/// (n + m), the normalisation used for the paper's dimensionless scores.
+pub fn dtw_normalized(x: &[f64], y: &[f64]) -> f64 {
+    dtw_distance(x, y) / (x.len() + y.len()) as f64
+}
+
+/// Multivariate DTW averaged over dimensions (Fig. 4 uses d = 6 series).
+/// `x`, `y`: [time][dim].
+pub fn dtw_multi(x: &[Vec<f64>], y: &[Vec<f64>]) -> f64 {
+    assert!(!x.is_empty() && !y.is_empty());
+    let d = x[0].len();
+    assert_eq!(d, y[0].len(), "dimension mismatch");
+    (0..d)
+        .map(|k| {
+            let xs: Vec<f64> = x.iter().map(|r| r[k]).collect();
+            let ys: Vec<f64> = y.iter().map(|r| r[k]).collect();
+            dtw_normalized(&xs, &ys)
+        })
+        .sum::<f64>()
+        / d as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_series_zero_distance() {
+        let x = [1.0, 2.0, 3.0, 2.0, 1.0];
+        assert_eq!(dtw_distance(&x, &x), 0.0);
+    }
+
+    #[test]
+    fn known_small_case() {
+        // x = [0, 1], y = [0, 1, 1]: perfect warp -> 0.
+        assert_eq!(dtw_distance(&[0.0, 1.0], &[0.0, 1.0, 1.0]), 0.0);
+        // x = [0, 0], y = [1, 1]: every match costs 1, path len 2 -> 2.
+        assert_eq!(dtw_distance(&[0.0, 0.0], &[1.0, 1.0]), 2.0);
+    }
+
+    #[test]
+    fn handles_time_shift_better_than_pointwise() {
+        // A shifted sine matches well under DTW but poorly pointwise.
+        let n = 200;
+        let x: Vec<f64> =
+            (0..n).map(|k| (k as f64 * 0.1).sin()).collect();
+        let y: Vec<f64> =
+            (0..n).map(|k| ((k as f64 + 5.0) * 0.1).sin()).collect();
+        let pointwise: f64 =
+            x.iter().zip(&y).map(|(a, b)| (a - b).abs()).sum();
+        assert!(dtw_distance(&x, &y) < 0.3 * pointwise);
+    }
+
+    #[test]
+    fn symmetry() {
+        let x = [0.0, 0.5, 1.0, 0.5];
+        let y = [0.1, 0.4, 0.9];
+        assert!((dtw_distance(&x, &y) - dtw_distance(&y, &x)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn triangle_like_monotonicity() {
+        // Distance to a more distorted copy must not decrease.
+        let x: Vec<f64> = (0..50).map(|k| (k as f64 * 0.2).sin()).collect();
+        let y1: Vec<f64> = x.iter().map(|v| v + 0.1).collect();
+        let y2: Vec<f64> = x.iter().map(|v| v + 0.5).collect();
+        assert!(dtw_distance(&x, &y1) < dtw_distance(&x, &y2));
+    }
+
+    #[test]
+    fn normalized_in_sane_range() {
+        let x = [1.0; 100];
+        let y = [2.0; 100];
+        let d = dtw_normalized(&x, &y);
+        // Raw cost 100 (diagonal path), normalised by 200 -> 0.5.
+        assert!((d - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multivariate_averages_dimensions() {
+        let x = vec![vec![0.0, 1.0]; 10];
+        let y = vec![vec![0.0, 2.0]; 10];
+        let d = dtw_multi(&x, &y);
+        // dim 0 distance 0; dim 1 raw 10 / 20 = 0.5; mean 0.25.
+        assert!((d - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty")]
+    fn empty_series_panics() {
+        let _ = dtw_distance(&[], &[1.0]);
+    }
+}

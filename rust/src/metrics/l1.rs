@@ -1,0 +1,78 @@
+//! Absolute (L1) error metrics used throughout Fig. 4.
+
+/// Mean absolute error between two scalar series.
+pub fn l1_error(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len(), "series length mismatch");
+    if pred.is_empty() {
+        return f64::NAN;
+    }
+    pred.iter()
+        .zip(truth)
+        .map(|(&x, &y)| (x - y).abs())
+        .sum::<f64>()
+        / pred.len() as f64
+}
+
+/// Mean absolute error between multivariate series ([time][dim]), averaged
+/// over time and dimensions (the Fig. 4g scalar).
+pub fn mean_l1_multi(pred: &[Vec<f64>], truth: &[Vec<f64>]) -> f64 {
+    assert_eq!(pred.len(), truth.len(), "series length mismatch");
+    if pred.is_empty() {
+        return f64::NAN;
+    }
+    let d = pred[0].len();
+    let mut acc = 0.0;
+    for (p, t) in pred.iter().zip(truth) {
+        assert_eq!(p.len(), d);
+        assert_eq!(t.len(), d);
+        for (&x, &y) in p.iter().zip(t) {
+            acc += (x - y).abs();
+        }
+    }
+    acc / (pred.len() * d) as f64
+}
+
+/// Per-time-step absolute error of one dimension ([time][dim] inputs) —
+/// the heat-map rows of Fig. 4d-f.
+pub fn l1_per_step(
+    pred: &[Vec<f64>],
+    truth: &[Vec<f64>],
+    dim: usize,
+) -> Vec<f64> {
+    pred.iter()
+        .zip(truth)
+        .map(|(p, t)| (p[dim] - t[dim]).abs())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_l1_known() {
+        assert!((l1_error(&[1.0, 3.0], &[2.0, 1.0]) - 1.5).abs() < 1e-12);
+        assert_eq!(l1_error(&[5.0], &[5.0]), 0.0);
+    }
+
+    #[test]
+    fn multi_l1_known() {
+        let p = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
+        let t = vec![vec![1.0, 0.0], vec![1.0, 4.0]];
+        // errors: 0, 2, 2, 0 -> mean 1.0
+        assert!((mean_l1_multi(&p, &t) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_step_extracts_dimension() {
+        let p = vec![vec![1.0, 9.0], vec![2.0, 9.0]];
+        let t = vec![vec![0.0, 9.0], vec![4.0, 9.0]];
+        assert_eq!(l1_per_step(&p, &t, 0), vec![1.0, 2.0]);
+        assert_eq!(l1_per_step(&p, &t, 1), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn empty_is_nan() {
+        assert!(l1_error(&[], &[]).is_nan());
+    }
+}

@@ -1,0 +1,92 @@
+//! Lyapunov-time bookkeeping (Methods Eq. 10).
+//!
+//! The paper expresses extrapolation horizons in units of the Lyapunov
+//! time T_lambda = 1 / MLE ("accurately predicts ... across the seven
+//! largest Lyapunov times"). The MLE estimator itself lives in
+//! [`crate::workload::lorenz96::max_lyapunov_exponent`]; this module turns
+//! exponents into horizons and finds the valid-prediction horizon of a
+//! trajectory pair.
+
+/// Lyapunov time from a maximal Lyapunov exponent.
+pub fn lyapunov_time(mle: f64) -> f64 {
+    assert!(mle > 0.0, "Lyapunov time needs a positive MLE");
+    1.0 / mle
+}
+
+/// Horizon (in seconds) until the normalised error between prediction and
+/// truth first exceeds `threshold`. Error is normalised by the truth's RMS
+/// so the threshold is scale-free (0.4 is a common "valid prediction time"
+/// criterion in the chaos-forecasting literature the paper builds on).
+pub fn valid_prediction_time(
+    pred: &[Vec<f64>],
+    truth: &[Vec<f64>],
+    dt: f64,
+    threshold: f64,
+) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    // RMS of the truth over the whole window.
+    let mut rms = 0.0;
+    let mut count = 0usize;
+    for row in truth {
+        for &v in row {
+            rms += v * v;
+            count += 1;
+        }
+    }
+    let rms = (rms / count.max(1) as f64).sqrt().max(1e-12);
+    for (k, (p, t)) in pred.iter().zip(truth).enumerate() {
+        let mut e = 0.0;
+        for (&a, &b) in p.iter().zip(t) {
+            e += (a - b) * (a - b);
+        }
+        let e = (e / p.len() as f64).sqrt() / rms;
+        if e > threshold {
+            return k as f64 * dt;
+        }
+    }
+    pred.len() as f64 * dt
+}
+
+/// Horizon expressed in Lyapunov times.
+pub fn horizon_in_lyapunov_times(horizon_s: f64, mle: f64) -> f64 {
+    horizon_s * mle
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lyapunov_time_inverse() {
+        assert_eq!(lyapunov_time(2.0), 0.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_mle_rejected() {
+        let _ = lyapunov_time(0.0);
+    }
+
+    #[test]
+    fn perfect_prediction_full_horizon() {
+        let t: Vec<Vec<f64>> = (0..100).map(|k| vec![k as f64]).collect();
+        let h = valid_prediction_time(&t, &t, 0.1, 0.4);
+        assert_eq!(h, 10.0);
+    }
+
+    #[test]
+    fn divergence_detected_at_right_step() {
+        let truth: Vec<Vec<f64>> = (0..100).map(|_| vec![1.0]).collect();
+        let mut pred = truth.clone();
+        for row in pred.iter_mut().skip(50) {
+            row[0] = 10.0; // error 9 / rms 1 >> threshold
+        }
+        let h = valid_prediction_time(&pred, &truth, 0.1, 0.4);
+        assert!((h - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn horizon_conversion() {
+        assert!((horizon_in_lyapunov_times(7.0, 1.5) - 10.5).abs() < 1e-12);
+    }
+}

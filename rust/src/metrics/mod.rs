@@ -1,0 +1,15 @@
+//! Accuracy metrics exactly as the paper's Methods define them.
+//!
+//! * [`mre`]      — Mean Relative Error (Eq. 5)
+//! * [`dtw`]      — Dynamic Time Warping distance (Eqs. 6-7)
+//! * [`l1`]       — absolute-error metrics of Fig. 4d-g
+//! * [`lyapunov`] — Lyapunov-time horizon bookkeeping (Methods Eq. 10)
+
+pub mod dtw;
+pub mod l1;
+pub mod lyapunov;
+pub mod mre;
+
+pub use dtw::dtw_distance;
+pub use l1::{l1_error, mean_l1_multi};
+pub use mre::mre;

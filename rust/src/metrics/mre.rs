@@ -1,0 +1,69 @@
+//! Mean Relative Error (paper Eq. 5):
+//! MRE(X, Y) = (1/n) * sum_i |(x_i - y_i) / y_i|.
+//!
+//! Ground-truth samples with |y_i| below `eps` are excluded (the relative
+//! error is undefined at zero crossings — the paper's HP-memristor states
+//! stay away from zero, but our test stimuli can graze it).
+
+/// MRE with a guard band around y = 0.
+pub fn mre_eps(pred: &[f64], truth: &[f64], eps: f64) -> f64 {
+    assert_eq!(pred.len(), truth.len(), "series length mismatch");
+    let mut acc = 0.0;
+    let mut n = 0usize;
+    for (&x, &y) in pred.iter().zip(truth) {
+        if y.abs() > eps {
+            acc += ((x - y) / y).abs();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        f64::NAN
+    } else {
+        acc / n as f64
+    }
+}
+
+/// MRE with the default guard (1e-9, effectively Eq. 5 verbatim).
+pub fn mre(pred: &[f64], truth: &[f64]) -> f64 {
+    mre_eps(pred, truth, 1e-9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_match_is_zero() {
+        assert_eq!(mre(&[1.0, 2.0, 3.0], &[1.0, 2.0, 3.0]), 0.0);
+    }
+
+    #[test]
+    fn known_value() {
+        // errors: |0.1/1|, |0.2/2| -> mean 0.1
+        assert!((mre(&[1.1, 2.2], &[1.0, 2.0]) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_truth_excluded() {
+        let v = mre(&[1.0, 5.0], &[0.0, 5.0]);
+        assert_eq!(v, 0.0); // only the second point counts
+    }
+
+    #[test]
+    fn all_zero_truth_is_nan() {
+        assert!(mre(&[1.0], &[0.0]).is_nan());
+    }
+
+    #[test]
+    fn scale_invariance() {
+        let a = mre(&[1.1, 0.9], &[1.0, 1.0]);
+        let b = mre(&[1100.0, 900.0], &[1000.0, 1000.0]);
+        assert!((a - b).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn length_mismatch_panics() {
+        let _ = mre(&[1.0], &[1.0, 2.0]);
+    }
+}

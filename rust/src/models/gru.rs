@@ -1,0 +1,138 @@
+//! GRU baseline (gate order z | r | n; reset-gated candidate — matches
+//! `compile.train.rnn_cell` exactly).
+
+use crate::models::loader::RnnWeights;
+use crate::models::rnn::{gates_into, head, Recurrent};
+
+fn sigmoid(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// GRU cell with residual next-state head.
+pub struct Gru {
+    pub w: RnnWeights,
+    h: Vec<f64>,
+    z: Vec<f64>,
+    nx: Vec<f64>,
+    rh: Vec<f64>,
+    nh: Vec<f64>,
+}
+
+impl Gru {
+    pub fn new(w: RnnWeights) -> Self {
+        assert_eq!(w.wx.cols, 3 * w.hidden, "gru expects 3 gate blocks");
+        let h = vec![0.0; w.hidden];
+        let z = vec![0.0; 3 * w.hidden];
+        let nx = vec![0.0; w.hidden];
+        let rh = vec![0.0; w.hidden];
+        let nh = vec![0.0; w.hidden];
+        Self { w, h, z, nx, rh, nh }
+    }
+}
+
+impl Recurrent for Gru {
+    fn reset(&mut self) {
+        self.h.fill(0.0);
+    }
+
+    fn step(&mut self, x: &[f64]) -> Vec<f64> {
+        let hn = self.w.hidden;
+        gates_into(&self.w, x, &self.h, &mut self.z);
+        // Candidate recurrent term uses the *reset-gated* hidden state and
+        // the third gate-block columns of wx/wh (recompute those columns:
+        // z already holds x wx + h wh for all blocks, but block n must use
+        // (r*h) wh, so rebuild it).
+        // nx = x @ wx[:, 2H:]
+        for c in 0..hn {
+            let mut acc = 0.0;
+            for (r, &xv) in x.iter().enumerate() {
+                acc += xv * self.w.wx.at(r, 2 * hn + c);
+            }
+            self.nx[c] = acc;
+        }
+        // rh = r * h
+        for i in 0..hn {
+            let r_gate = sigmoid(self.z[hn + i]);
+            self.rh[i] = r_gate * self.h[i];
+        }
+        // nh = (r*h) @ wh[:, 2H:]
+        for c in 0..hn {
+            let mut acc = 0.0;
+            for (r, &hv) in self.rh.iter().enumerate() {
+                acc += hv * self.w.wh.at(r, 2 * hn + c);
+            }
+            self.nh[c] = acc;
+        }
+        for i in 0..hn {
+            let z_gate = sigmoid(self.z[i]);
+            let n_gate =
+                (self.nx[i] + self.nh[i] + self.w.b[2 * hn + i]).tanh();
+            self.h[i] = (1.0 - z_gate) * n_gate + z_gate * self.h[i];
+        }
+        head(&self.w, x, &self.h)
+    }
+
+    fn d_in(&self) -> usize {
+        self.w.d_in
+    }
+
+    fn n_params(&self) -> usize {
+        let w = &self.w;
+        w.wx.rows * w.wx.cols
+            + w.wh.rows * w.wh.cols
+            + w.b.len()
+            + w.wo.rows * w.wo.cols
+            + w.bo.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::rnn::toy_weights;
+
+    #[test]
+    fn rollout_shape() {
+        let mut m = Gru::new(toy_weights(3, 4, 3));
+        let traj = m.rollout(&[0.1, 0.2, 0.3], 8);
+        assert_eq!(traj.len(), 8);
+        assert_eq!(traj[0], vec![0.1, 0.2, 0.3]);
+    }
+
+    #[test]
+    fn deterministic_after_reset() {
+        let mut m = Gru::new(toy_weights(2, 5, 3));
+        let a = m.rollout(&[1.0, -1.0], 15);
+        let b = m.rollout(&[1.0, -1.0], 15);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn z_gate_one_keeps_hidden_state() {
+        // Huge positive z-gate bias: h' ~= h (update gate saturates at 1),
+        // so with h0 = 0 the hidden state stays 0 and preds equal inputs.
+        let mut w = toy_weights(2, 3, 3);
+        for i in 0..3 {
+            w.b[i] = 50.0;
+        }
+        let mut m = Gru::new(w);
+        let y = m.step(&[0.7, -0.3]);
+        assert!((y[0] - 0.7).abs() < 1e-6);
+        assert!((y[1] + 0.3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bounded_hidden_state() {
+        let mut m = Gru::new(toy_weights(2, 4, 3));
+        for _ in 0..100 {
+            m.step(&[10.0, -10.0]);
+        }
+        assert!(m.h.iter().all(|&v| v.abs() <= 1.0 + 1e-12));
+    }
+
+    #[test]
+    #[should_panic(expected = "3 gate blocks")]
+    fn wrong_gate_count_panics() {
+        let _ = Gru::new(toy_weights(2, 4, 1));
+    }
+}

@@ -1,0 +1,205 @@
+//! Weight deserialisation from `artifacts/weights/*.json`.
+//!
+//! Two schemas, both produced by `python/compile/train.py`:
+//!
+//! * MLP (neural ODE / ResNet): `{"meta": {...}, "layers": [{"w": [[..]],
+//!   "b": [..]}, ...]}` with `w: [fan_in][fan_out]`;
+//! * recurrent cells: `{"meta": {...}, "wx": [[..]], "wh": [[..]],
+//!   "b": [..], "wo": [[..]], "bo": [..]}`.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{self, Json};
+use crate::util::tensor::Mat;
+
+/// Parsed MLP weights + metadata.
+#[derive(Debug, Clone)]
+pub struct MlpWeights {
+    /// Per-layer (w: [fan_in, fan_out], b: [fan_out]).
+    pub layers: Vec<(Mat, Vec<f64>)>,
+    /// Sampling interval the model was trained for.
+    pub dt: f64,
+    /// "node" | "resnet".
+    pub kind: String,
+    /// "hp" | "l96".
+    pub task: String,
+}
+
+/// Parsed recurrent-cell weights + metadata.
+#[derive(Debug, Clone)]
+pub struct RnnWeights {
+    pub wx: Mat,
+    pub wh: Mat,
+    pub b: Vec<f64>,
+    pub wo: Mat,
+    pub bo: Vec<f64>,
+    pub hidden: usize,
+    pub d_in: usize,
+    pub dt: f64,
+    /// "rnn" | "gru" | "lstm".
+    pub kind: String,
+}
+
+fn mat_from(v: &Json, what: &str) -> Result<Mat> {
+    let rows = v
+        .as_mat_f64()
+        .ok_or_else(|| anyhow!("{what}: expected 2-D numeric array"))?;
+    Ok(Mat::from_rows(&rows))
+}
+
+fn vec_from(v: &Json, what: &str) -> Result<Vec<f64>> {
+    v.as_vec_f64()
+        .ok_or_else(|| anyhow!("{what}: expected 1-D numeric array"))
+}
+
+fn meta_str(meta: &Json, key: &str) -> String {
+    meta.get(key).and_then(Json::as_str).unwrap_or("?").to_string()
+}
+
+/// Load an MLP weight file.
+pub fn load_mlp_weights(path: &Path) -> Result<MlpWeights> {
+    let doc = json::from_file(path)?;
+    let meta = doc.req("meta").context("weights meta")?;
+    let layers_json = doc
+        .req("layers")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("layers must be an array"))?;
+    let mut layers = Vec::with_capacity(layers_json.len());
+    for (i, l) in layers_json.iter().enumerate() {
+        let w = mat_from(l.req("w")?, &format!("layer {i} w"))?;
+        let b = vec_from(l.req("b")?, &format!("layer {i} b"))?;
+        if w.cols != b.len() {
+            return Err(anyhow!(
+                "layer {i}: w cols {} != b len {}",
+                w.cols,
+                b.len()
+            ));
+        }
+        layers.push((w, b));
+    }
+    // Consecutive layers must chain.
+    for i in 1..layers.len() {
+        if layers[i - 1].0.cols != layers[i].0.rows {
+            return Err(anyhow!(
+                "layer {} fan-out {} != layer {} fan-in {}",
+                i - 1,
+                layers[i - 1].0.cols,
+                i,
+                layers[i].0.rows
+            ));
+        }
+    }
+    Ok(MlpWeights {
+        layers,
+        dt: meta.get("dt").and_then(Json::as_f64).unwrap_or(0.0),
+        kind: meta_str(meta, "kind"),
+        task: meta_str(meta, "task"),
+    })
+}
+
+/// Load a recurrent-cell weight file.
+pub fn load_rnn_weights(path: &Path) -> Result<RnnWeights> {
+    let doc = json::from_file(path)?;
+    let meta = doc.req("meta").context("weights meta")?;
+    let wx = mat_from(doc.req("wx")?, "wx")?;
+    let wh = mat_from(doc.req("wh")?, "wh")?;
+    let b = vec_from(doc.req("b")?, "b")?;
+    let wo = mat_from(doc.req("wo")?, "wo")?;
+    let bo = vec_from(doc.req("bo")?, "bo")?;
+    let hidden = wh.rows;
+    let d_in = wx.rows;
+    if wh.cols != wx.cols || b.len() != wx.cols {
+        return Err(anyhow!("gate width mismatch"));
+    }
+    if wo.rows != hidden || wo.cols != bo.len() {
+        return Err(anyhow!("output head shape mismatch"));
+    }
+    Ok(RnnWeights {
+        wx,
+        wh,
+        b,
+        wo,
+        bo,
+        hidden,
+        d_in,
+        dt: meta.get("dt").and_then(Json::as_f64).unwrap_or(0.0),
+        kind: meta_str(meta, "kind"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    fn tmpfile(content: &str) -> std::path::PathBuf {
+        let mut path = std::env::temp_dir();
+        path.push(format!(
+            "memode_test_{}_{}.json",
+            std::process::id(),
+            content.len()
+        ));
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(content.as_bytes()).unwrap();
+        path
+    }
+
+    #[test]
+    fn loads_minimal_mlp() {
+        let p = tmpfile(
+            r#"{"meta":{"kind":"node","task":"hp","dt":0.001},
+                "layers":[{"w":[[1,2],[3,4]],"b":[0.1,0.2]},
+                           {"w":[[1],[1]],"b":[0]}]}"#,
+        );
+        let w = load_mlp_weights(&p).unwrap();
+        assert_eq!(w.layers.len(), 2);
+        assert_eq!(w.layers[0].0.rows, 2);
+        assert_eq!(w.kind, "node");
+        assert_eq!(w.dt, 0.001);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_mismatched_chain() {
+        let p = tmpfile(
+            r#"{"meta":{},
+                "layers":[{"w":[[1,2]],"b":[0,0]},
+                           {"w":[[1],[1],[1]],"b":[0]}]}"#,
+        );
+        assert!(load_mlp_weights(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_bias_mismatch() {
+        let p = tmpfile(r#"{"meta":{},"layers":[{"w":[[1,2]],"b":[0]}]}"#);
+        assert!(load_mlp_weights(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn loads_minimal_rnn() {
+        let p = tmpfile(
+            r#"{"meta":{"kind":"rnn","dt":0.02},
+                "wx":[[1,0],[0,1]],"wh":[[0,0],[0,0]],"b":[0,0],
+                "wo":[[1],[1]],"bo":[0]}"#,
+        );
+        let w = load_rnn_weights(&p).unwrap();
+        assert_eq!(w.hidden, 2);
+        assert_eq!(w.d_in, 2);
+        assert_eq!(w.kind, "rnn");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rnn_gate_width_checked() {
+        let p = tmpfile(
+            r#"{"meta":{},"wx":[[1,0]],"wh":[[0],[0]],"b":[0,0],
+                "wo":[[1],[1]],"bo":[0]}"#,
+        );
+        assert!(load_rnn_weights(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+}

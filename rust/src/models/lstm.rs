@@ -1,0 +1,124 @@
+//! LSTM baseline (gate order i | f | g | o — matches
+//! `compile.train.rnn_cell` exactly).
+
+use crate::models::loader::RnnWeights;
+use crate::models::rnn::{gates_into, head, Recurrent};
+
+fn sigmoid(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// LSTM cell with residual next-state head.
+pub struct Lstm {
+    pub w: RnnWeights,
+    h: Vec<f64>,
+    c: Vec<f64>,
+    z: Vec<f64>,
+}
+
+impl Lstm {
+    pub fn new(w: RnnWeights) -> Self {
+        assert_eq!(w.wx.cols, 4 * w.hidden, "lstm expects 4 gate blocks");
+        let h = vec![0.0; w.hidden];
+        let c = vec![0.0; w.hidden];
+        let z = vec![0.0; 4 * w.hidden];
+        Self { w, h, c, z }
+    }
+
+    /// Cell state (diagnostics/tests).
+    pub fn cell_state(&self) -> &[f64] {
+        &self.c
+    }
+}
+
+impl Recurrent for Lstm {
+    fn reset(&mut self) {
+        self.h.fill(0.0);
+        self.c.fill(0.0);
+    }
+
+    fn step(&mut self, x: &[f64]) -> Vec<f64> {
+        let hn = self.w.hidden;
+        gates_into(&self.w, x, &self.h, &mut self.z);
+        for k in 0..hn {
+            let i = sigmoid(self.z[k]);
+            let f = sigmoid(self.z[hn + k]);
+            let g = self.z[2 * hn + k].tanh();
+            let o = sigmoid(self.z[3 * hn + k]);
+            self.c[k] = f * self.c[k] + i * g;
+            self.h[k] = o * self.c[k].tanh();
+        }
+        head(&self.w, x, &self.h)
+    }
+
+    fn d_in(&self) -> usize {
+        self.w.d_in
+    }
+
+    fn n_params(&self) -> usize {
+        let w = &self.w;
+        w.wx.rows * w.wx.cols
+            + w.wh.rows * w.wh.cols
+            + w.b.len()
+            + w.wo.rows * w.wo.cols
+            + w.bo.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::rnn::toy_weights;
+
+    #[test]
+    fn rollout_shape_and_determinism() {
+        let mut m = Lstm::new(toy_weights(3, 4, 4));
+        let a = m.rollout(&[0.1, 0.2, 0.3], 12);
+        let b = m.rollout(&[0.1, 0.2, 0.3], 12);
+        assert_eq!(a.len(), 12);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn forget_gate_zero_clears_cell() {
+        // Large negative forget bias: cell state becomes i*g only.
+        let mut w = toy_weights(2, 3, 4);
+        for i in 0..3 {
+            w.b[3 + i] = -50.0; // forget block
+        }
+        let mut m = Lstm::new(w);
+        m.step(&[1.0, 1.0]);
+        let c1 = m.cell_state().to_vec();
+        m.step(&[1.0, 1.0]);
+        let c2 = m.cell_state().to_vec();
+        // With f = 0, c2 is i*g of step 2 alone -> same magnitude class as
+        // c1, not accumulated.
+        for (a, b) in c1.iter().zip(&c2) {
+            assert!((a - b).abs() < 0.5);
+        }
+    }
+
+    #[test]
+    fn hidden_bounded_by_tanh() {
+        let mut m = Lstm::new(toy_weights(2, 4, 4));
+        for _ in 0..200 {
+            m.step(&[5.0, -5.0]);
+        }
+        assert!(m.h.iter().all(|&v| v.abs() <= 1.0));
+    }
+
+    #[test]
+    fn reset_clears_both_states() {
+        let mut m = Lstm::new(toy_weights(2, 3, 4));
+        m.step(&[1.0, 2.0]);
+        m.reset();
+        assert!(m.h.iter().all(|&v| v == 0.0));
+        assert!(m.c.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "4 gate blocks")]
+    fn wrong_gate_count_panics() {
+        let _ = Lstm::new(toy_weights(2, 4, 3));
+    }
+}

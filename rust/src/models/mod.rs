@@ -1,0 +1,23 @@
+//! Digital baseline models (the comparators of Fig. 3j and Fig. 4g-i).
+//!
+//! Rust-native inference implementations matching the JAX training code in
+//! `python/compile/train.py` gate-for-gate; weights load from
+//! `artifacts/weights/*.json`.
+//!
+//! * [`mlp`]    — the plain MLP vector field (shared by neural-ODE digital
+//!   inference and the recurrent-ResNet baseline)
+//! * [`resnet`] — recurrent ResNet: h_{t+1} = h_t + f([x_t; h_t]) (Fig. 3j)
+//! * [`rnn`]    — vanilla RNN with residual next-state head
+//! * [`gru`]    — GRU (gate order z | r | n, reset-gated candidate)
+//! * [`lstm`]   — LSTM (gate order i | f | g | o)
+//! * [`loader`] — weight deserialisation from the artifact JSON format
+
+pub mod gru;
+pub mod loader;
+pub mod lstm;
+pub mod mlp;
+pub mod resnet;
+pub mod rnn;
+
+pub use loader::{load_mlp_weights, load_rnn_weights, MlpWeights, RnnWeights};
+pub use mlp::Mlp;

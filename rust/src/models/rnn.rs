@@ -1,0 +1,184 @@
+//! Vanilla RNN baseline and the shared recurrent-model interface.
+//!
+//! All three recurrent baselines predict the *next state* of the physical
+//! system with a residual head: x_{t+1} = x_t + Wo h_{t+1} + bo, mirroring
+//! `compile.train.rnn_rollout`. Evaluation is autoregressive from the
+//! initial condition (the model sees only its own predictions), which is
+//! how the paper's Fig. 4g interpolation/extrapolation errors are scored.
+
+use crate::models::loader::RnnWeights;
+#[cfg(test)]
+use crate::util::tensor::Mat;
+
+/// Common interface of the recurrent baselines.
+pub trait Recurrent {
+    /// Reset hidden state.
+    fn reset(&mut self);
+
+    /// One step: consume the current observed/predicted state `x`, return
+    /// the next-state prediction.
+    fn step(&mut self, x: &[f64]) -> Vec<f64>;
+
+    /// State (input/output) dimension.
+    fn d_in(&self) -> usize;
+
+    /// Trainable parameter count (for the energy model).
+    fn n_params(&self) -> usize;
+
+    /// Autoregressive rollout: from `x0`, emit `n` successive predictions
+    /// (result[0] == x0).
+    fn rollout(&mut self, x0: &[f64], n: usize) -> Vec<Vec<f64>> {
+        self.reset();
+        let mut out = Vec::with_capacity(n);
+        out.push(x0.to_vec());
+        let mut x = x0.to_vec();
+        for _ in 1..n {
+            x = self.step(&x);
+            out.push(x.clone());
+        }
+        out
+    }
+}
+
+/// Gate-stack helper shared by the cells: z = x Wx + h Wh + b.
+pub(crate) fn gates_into(
+    w: &RnnWeights,
+    x: &[f64],
+    h: &[f64],
+    z: &mut [f64],
+) {
+    w.wx.vecmat_into(x, z);
+    // z += h Wh  (accumulate without a second buffer)
+    for (r, &hv) in h.iter().enumerate() {
+        if hv == 0.0 {
+            continue;
+        }
+        let row = w.wh.row(r);
+        for (zv, &a) in z.iter_mut().zip(row) {
+            *zv += hv * a;
+        }
+    }
+    for (zv, &b) in z.iter_mut().zip(&w.b) {
+        *zv += b;
+    }
+}
+
+/// Residual output head: pred = x + h Wo + bo.
+pub(crate) fn head(w: &RnnWeights, x: &[f64], h: &[f64]) -> Vec<f64> {
+    let mut y = w.wo.vecmat(h);
+    for ((yv, &bv), &xv) in y.iter_mut().zip(&w.bo).zip(x) {
+        *yv += bv + xv;
+    }
+    y
+}
+
+/// Vanilla RNN: h' = tanh(x Wx + h Wh + b).
+pub struct VanillaRnn {
+    pub w: RnnWeights,
+    h: Vec<f64>,
+    z: Vec<f64>,
+}
+
+impl VanillaRnn {
+    pub fn new(w: RnnWeights) -> Self {
+        assert_eq!(w.wx.cols, w.hidden, "rnn expects 1 gate block");
+        let h = vec![0.0; w.hidden];
+        let z = vec![0.0; w.wx.cols];
+        Self { w, h, z }
+    }
+}
+
+impl Recurrent for VanillaRnn {
+    fn reset(&mut self) {
+        self.h.fill(0.0);
+    }
+
+    fn step(&mut self, x: &[f64]) -> Vec<f64> {
+        gates_into(&self.w, x, &self.h, &mut self.z);
+        for (hv, &zv) in self.h.iter_mut().zip(&self.z) {
+            *hv = zv.tanh();
+        }
+        head(&self.w, x, &self.h)
+    }
+
+    fn d_in(&self) -> usize {
+        self.w.d_in
+    }
+
+    fn n_params(&self) -> usize {
+        let w = &self.w;
+        w.wx.rows * w.wx.cols
+            + w.wh.rows * w.wh.cols
+            + w.b.len()
+            + w.wo.rows * w.wo.cols
+            + w.bo.len()
+    }
+}
+
+/// Construct toy weights for tests (also used by gru/lstm test modules).
+#[cfg(test)]
+pub(crate) fn toy_weights(d_in: usize, hidden: usize, gates: usize) -> RnnWeights {
+    RnnWeights {
+        wx: Mat::from_fn(d_in, gates * hidden, |r, c| {
+            0.1 * ((r + c) % 3) as f64 - 0.1
+        }),
+        wh: Mat::from_fn(hidden, gates * hidden, |r, c| {
+            0.05 * ((r * 2 + c) % 5) as f64 - 0.1
+        }),
+        b: vec![0.01; gates * hidden],
+        wo: Mat::from_fn(hidden, d_in, |r, c| 0.1 * ((r + c) % 2) as f64),
+        bo: vec![0.0; d_in],
+        hidden,
+        d_in,
+        dt: 0.02,
+        kind: "test".into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rollout_shape_and_start() {
+        let mut m = VanillaRnn::new(toy_weights(3, 4, 1));
+        let traj = m.rollout(&[1.0, 2.0, 3.0], 10);
+        assert_eq!(traj.len(), 10);
+        assert_eq!(traj[0], vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn reset_makes_rollouts_deterministic() {
+        let mut m = VanillaRnn::new(toy_weights(2, 3, 1));
+        let a = m.rollout(&[0.5, -0.5], 20);
+        let b = m.rollout(&[0.5, -0.5], 20);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn hidden_state_is_bounded_by_tanh() {
+        let mut m = VanillaRnn::new(toy_weights(2, 3, 1));
+        m.step(&[100.0, -100.0]);
+        assert!(m.h.iter().all(|&v| v.abs() <= 1.0));
+    }
+
+    #[test]
+    fn zero_weights_identity_rollout() {
+        let mut w = toy_weights(2, 3, 1);
+        w.wx = Mat::zeros(2, 3);
+        w.wh = Mat::zeros(3, 3);
+        w.b = vec![0.0; 3];
+        w.wo = Mat::zeros(3, 2);
+        let mut m = VanillaRnn::new(w);
+        let traj = m.rollout(&[1.0, -2.0], 5);
+        for row in &traj {
+            assert_eq!(row, &vec![1.0, -2.0]);
+        }
+    }
+
+    #[test]
+    fn n_params_counts_all_blocks() {
+        let m = VanillaRnn::new(toy_weights(2, 3, 1));
+        assert_eq!(m.n_params(), 2 * 3 + 3 * 3 + 3 + 3 * 2 + 2);
+    }
+}

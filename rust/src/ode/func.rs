@@ -1,0 +1,83 @@
+//! The vector-field abstraction shared by every digital solver.
+
+/// A (possibly time-dependent, possibly stateful) vector field
+/// dx/dt = f(t, x).
+///
+/// `eval_into` is `&mut self` because implementations may carry scratch
+/// buffers or RNG state (e.g. noisy analogue evaluations wrapped as a
+/// digital field for cross-validation).
+pub trait VectorField {
+    /// State dimension.
+    fn dim(&self) -> usize;
+
+    /// Evaluate f(t, x) into `out` (len == dim()).
+    fn eval_into(&mut self, t: f64, x: &[f64], out: &mut [f64]);
+
+    /// Allocating convenience.
+    fn eval(&mut self, t: f64, x: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.dim()];
+        self.eval_into(t, x, &mut out);
+        out
+    }
+}
+
+/// A vector field defined by a closure (tests, toy systems).
+pub struct FnField<F: FnMut(f64, &[f64], &mut [f64])> {
+    pub dim: usize,
+    pub f: F,
+}
+
+impl<F: FnMut(f64, &[f64], &mut [f64])> FnField<F> {
+    pub fn new(dim: usize, f: F) -> Self {
+        Self { dim, f }
+    }
+}
+
+impl<F: FnMut(f64, &[f64], &mut [f64])> VectorField for FnField<F> {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn eval_into(&mut self, t: f64, x: &[f64], out: &mut [f64]) {
+        (self.f)(t, x, out)
+    }
+}
+
+/// The Lorenz96 ground-truth field as a [`VectorField`].
+pub struct Lorenz96Field {
+    pub dim: usize,
+    pub forcing: f64,
+}
+
+impl VectorField for Lorenz96Field {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn eval_into(&mut self, _t: f64, x: &[f64], out: &mut [f64]) {
+        crate::workload::lorenz96::field_into(x, self.forcing, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fn_field_evaluates_closure() {
+        let mut f = FnField::new(2, |_t, x: &[f64], out: &mut [f64]| {
+            out[0] = x[1];
+            out[1] = -x[0];
+        });
+        assert_eq!(f.eval(0.0, &[1.0, 2.0]), vec![2.0, -1.0]);
+    }
+
+    #[test]
+    fn lorenz_field_wrapper_matches_module() {
+        let mut f = Lorenz96Field { dim: 6, forcing: 8.0 };
+        let x = [1.0, -0.5, 0.25, 2.0, -1.0, 0.1];
+        let got = f.eval(0.0, &x);
+        let want = crate::workload::lorenz96::field(&x, 8.0);
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,15 @@
+//! Digital ODE solvers (the "neural ODE on digital hardware" baseline and
+//! the verification reference for the analogue loop).
+//!
+//! * [`func`]   — the [`func::VectorField`] trait all solvers integrate
+//! * [`euler`]  — forward Euler (the recurrent-ResNet-equivalent update)
+//! * [`rk4`]    — classic fourth-order Runge-Kutta (the paper's ODESolve)
+//! * [`dopri5`] — adaptive Dormand-Prince 5(4) with PI step control (the
+//!   black-box solver of Chen et al. 2018; extension feature)
+
+pub mod dopri5;
+pub mod euler;
+pub mod func;
+pub mod rk4;
+
+pub use func::VectorField;

@@ -1,0 +1,193 @@
+//! Artifact manifest (`artifacts/manifest.json`) parsing and the
+//! twin-facing rollout closures.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::service::PjrtHandle;
+use crate::runtime::TensorF32;
+use crate::twin::RolloutFn;
+use crate::util::json::{self, Json};
+
+/// One AOT-compiled entry point.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// HLO text file, relative to the artifacts dir.
+    pub file: String,
+    /// Input shapes in call order.
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shapes (entries return 1-tuples; outputs[0] is the payload).
+    pub outputs: Vec<Vec<usize>>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+    /// Task metadata blocks (dt, dims, splits) as raw JSON.
+    pub hp: Json,
+    pub l96: Json,
+}
+
+fn shapes_from(j: &Json, what: &str) -> Result<Vec<Vec<usize>>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("{what}: expected array of shapes"))?
+        .iter()
+        .map(|s| {
+            s.as_vec_f64()
+                .map(|v| v.into_iter().map(|x| x as usize).collect())
+                .ok_or_else(|| anyhow!("{what}: bad shape entry"))
+        })
+        .collect()
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let doc = json::from_file(&path)
+            .with_context(|| "run `make artifacts` first")?;
+        let mut artifacts = Vec::new();
+        for a in doc
+            .req("artifacts")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("artifacts must be an array"))?
+        {
+            artifacts.push(ArtifactMeta {
+                name: a
+                    .req("name")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("artifact name"))?
+                    .to_string(),
+                file: a
+                    .req("file")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("artifact file"))?
+                    .to_string(),
+                inputs: shapes_from(a.req("inputs")?, "inputs")?,
+                outputs: shapes_from(a.req("outputs")?, "outputs")?,
+            });
+        }
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            artifacts,
+            hp: doc.get("hp").cloned().unwrap_or(Json::Null),
+            l96: doc.get("l96").cloned().unwrap_or(Json::Null),
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name).ok_or_else(|| {
+            anyhow!(
+                "artifact '{name}' not in manifest (have: {})",
+                self.artifacts
+                    .iter()
+                    .map(|a| a.name.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        })
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.get(name)?.file))
+    }
+}
+
+/// Build a driven-rollout closure (HP twin) over a PJRT service handle.
+///
+/// The artifact signature is `(h0: [1], xs_half: [2N+1, 1]) -> [N+1, 1]`.
+pub fn driven_rollout_fn(
+    handle: PjrtHandle,
+    meta: &ArtifactMeta,
+) -> RolloutFn {
+    let name = meta.name.clone();
+    let xs_shape = meta.inputs[1].clone();
+    Box::new(move |h0: &[f64], stimulus: Option<&[f64]>| {
+        let xs = stimulus
+            .ok_or_else(|| anyhow!("driven rollout needs a stimulus"))?;
+        anyhow::ensure!(
+            xs.len() == xs_shape[0],
+            "stimulus length {} != compiled length {} (fixed-shape AOT)",
+            xs.len(),
+            xs_shape[0]
+        );
+        let inputs = vec![
+            TensorF32::from_f64(vec![h0.len()], h0),
+            TensorF32::from_f64(xs_shape.clone(), xs),
+        ];
+        let out = handle.execute(&name, inputs)?;
+        Ok(out.rows_f64())
+    })
+}
+
+/// Build an autonomous-rollout closure (Lorenz96 twin).
+///
+/// Artifact signature: `(h0: [d]) -> [N+1, d]`.
+pub fn autonomous_rollout_fn(
+    handle: PjrtHandle,
+    meta: &ArtifactMeta,
+) -> RolloutFn {
+    let name = meta.name.clone();
+    Box::new(move |h0: &[f64], _stimulus: Option<&[f64]>| {
+        let inputs = vec![TensorF32::from_f64(vec![h0.len()], h0)];
+        let out = handle.execute(&name, inputs)?;
+        Ok(out.rows_f64())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    fn manifest_dir() -> PathBuf {
+        let mut dir = std::env::temp_dir();
+        dir.push(format!("memode_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut f =
+            std::fs::File::create(dir.join("manifest.json")).unwrap();
+        f.write_all(
+            br#"{"artifacts": [
+                {"name": "a", "file": "a.hlo.txt",
+                 "inputs": [[6]], "outputs": [[10, 6]]}],
+                "l96": {"dt": 0.02}}"#,
+        )
+        .unwrap();
+        dir
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let dir = manifest_dir();
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.get("a").unwrap();
+        assert_eq!(a.inputs, vec![vec![6]]);
+        assert_eq!(a.outputs, vec![vec![10, 6]]);
+        assert_eq!(m.l96.get("dt").unwrap().as_f64(), Some(0.02));
+        assert!(m.hlo_path("a").unwrap().ends_with("a.hlo.txt"));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn unknown_artifact_lists_names() {
+        let dir = manifest_dir();
+        let m = ArtifactManifest::load(&dir).unwrap();
+        let err = m.get("nope").unwrap_err().to_string();
+        assert!(err.contains("have: a"));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make_artifacts() {
+        let err = ArtifactManifest::load(Path::new("/nonexistent-xyz"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("make artifacts"));
+    }
+}

@@ -1,0 +1,86 @@
+//! PJRT runtime: loads and executes the AOT HLO artifacts.
+//!
+//! The compile path (`make artifacts`) lowers the JAX/Pallas model to HLO
+//! *text* once; this module makes those artifacts callable from the Rust
+//! request path:
+//!
+//! * [`client`]    — the thread-local runtime: `PjRtClient::cpu()` ->
+//!   `HloModuleProto::from_text_file` -> `compile` -> `execute`
+//! * [`service`]   — a dedicated runtime thread + `Send` handle (the `xla`
+//!   crate's client is `Rc`-based and not `Send`; the coordinator's worker
+//!   threads talk to it over channels)
+//! * [`artifacts`] — `manifest.json` parsing and twin-facing rollout
+//!   closures
+//!
+//! Note on interchange: HLO text, **not** serialized `HloModuleProto` —
+//! jax >= 0.5 emits protos with 64-bit instruction ids that the bundled
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+pub mod artifacts;
+pub mod client;
+pub mod service;
+
+pub use artifacts::{ArtifactManifest, ArtifactMeta};
+pub use client::PjrtRuntime;
+pub use service::{PjrtHandle, PjrtService};
+
+/// A shaped f32 tensor crossing the runtime boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorF32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl TensorF32 {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "tensor shape/data mismatch"
+        );
+        Self { shape, data }
+    }
+
+    /// Build from f64 host data (the simulator's native precision).
+    pub fn from_f64(shape: Vec<usize>, data: &[f64]) -> Self {
+        Self::new(shape, data.iter().map(|&x| x as f32).collect())
+    }
+
+    /// Rows of a rank-2 tensor as f64 (trajectory unpacking).
+    pub fn rows_f64(&self) -> Vec<Vec<f64>> {
+        assert_eq!(self.shape.len(), 2, "rows_f64 needs rank 2");
+        let (n, d) = (self.shape[0], self.shape[1]);
+        (0..n)
+            .map(|r| {
+                self.data[r * d..(r + 1) * d]
+                    .iter()
+                    .map(|&x| x as f64)
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_checked() {
+        let t = TensorF32::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.shape, vec![2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn bad_shape_panics() {
+        let _ = TensorF32::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn f64_roundtrip_and_rows() {
+        let t = TensorF32::from_f64(vec![2, 2], &[1.0, 2.0, 3.0, 4.0]);
+        let rows = t.rows_f64();
+        assert_eq!(rows, vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+    }
+}

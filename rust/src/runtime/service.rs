@@ -1,0 +1,184 @@
+//! A dedicated PJRT runtime thread with a `Send + Clone` handle.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based and must stay on one
+//! thread; the coordinator's workers, the examples and the benches instead
+//! hold a [`PjrtHandle`] and submit execute requests over an mpsc channel,
+//! receiving results on a per-request oneshot-style channel. The service
+//! thread shuts down when the last handle is dropped.
+
+use std::path::Path;
+use std::sync::mpsc;
+use std::thread;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::client::PjrtRuntime;
+use crate::runtime::TensorF32;
+
+enum Request {
+    Execute {
+        name: String,
+        inputs: Vec<TensorF32>,
+        reply: mpsc::Sender<Result<TensorF32>>,
+    },
+    Preload {
+        names: Vec<String>,
+        reply: mpsc::Sender<Result<()>>,
+    },
+    Manifest {
+        reply: mpsc::Sender<Vec<String>>,
+    },
+}
+
+/// Owner of the runtime thread (keep alive for the service lifetime).
+pub struct PjrtService {
+    handle: PjrtHandle,
+    thread: Option<thread::JoinHandle<()>>,
+}
+
+/// Cloneable, `Send` handle for submitting work to the runtime thread.
+#[derive(Clone)]
+pub struct PjrtHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+impl PjrtService {
+    /// Start the runtime thread over an artifacts directory. Fails fast if
+    /// the manifest is unreadable or the PJRT client cannot start.
+    pub fn start(artifacts_dir: &Path) -> Result<Self> {
+        let dir = artifacts_dir.to_path_buf();
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let thread = thread::Builder::new()
+            .name("pjrt-runtime".into())
+            .spawn(move || {
+                let mut rt = match PjrtRuntime::cpu(&dir) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Execute { name, inputs, reply } => {
+                            let _ =
+                                reply.send(rt.execute(&name, &inputs));
+                        }
+                        Request::Preload { names, reply } => {
+                            let r = names
+                                .iter()
+                                .try_for_each(|n| rt.load(n));
+                            let _ = reply.send(r);
+                        }
+                        Request::Manifest { reply } => {
+                            let _ = reply.send(rt.artifact_names());
+                        }
+                    }
+                }
+            })
+            .map_err(|e| anyhow!("spawning pjrt thread: {e}"))?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("pjrt thread died during startup"))??;
+        Ok(Self { handle: PjrtHandle { tx }, thread: Some(thread) })
+    }
+
+    pub fn handle(&self) -> PjrtHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for PjrtService {
+    fn drop(&mut self) {
+        // Close our sender so the thread's recv() errors out once all
+        // handles are gone, then join.
+        let (tx, _) = mpsc::channel();
+        self.handle = PjrtHandle { tx };
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl PjrtHandle {
+    /// Execute an artifact on the runtime thread (blocking).
+    pub fn execute(
+        &self,
+        name: &str,
+        inputs: Vec<TensorF32>,
+    ) -> Result<TensorF32> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Execute {
+                name: name.to_string(),
+                inputs,
+                reply,
+            })
+            .map_err(|_| anyhow!("pjrt service stopped"))?;
+        rx.recv().map_err(|_| anyhow!("pjrt service dropped reply"))?
+    }
+
+    /// Compile artifacts ahead of serving (warmup).
+    pub fn preload(&self, names: &[&str]) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Preload {
+                names: names.iter().map(|s| s.to_string()).collect(),
+                reply,
+            })
+            .map_err(|_| anyhow!("pjrt service stopped"))?;
+        rx.recv().map_err(|_| anyhow!("pjrt service dropped reply"))?
+    }
+
+    /// Artifact names available in the manifest.
+    pub fn artifact_names(&self) -> Result<Vec<String>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Manifest { reply })
+            .map_err(|_| anyhow!("pjrt service stopped"))?;
+        rx.recv().map_err(|_| anyhow!("pjrt service dropped reply"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn startup_failure_propagates() {
+        let err = PjrtService::start(Path::new("/no/such/dir"))
+            .err()
+            .expect("should fail");
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn service_roundtrip_if_artifacts_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let svc = PjrtService::start(&dir).unwrap();
+        let h = svc.handle();
+        let names = h.artifact_names().unwrap();
+        assert!(names.iter().any(|n| n == "l96_step_b1"));
+        h.preload(&["l96_step_b1"]).unwrap();
+        // Handles work from other threads.
+        let h2 = svc.handle();
+        let out = std::thread::spawn(move || {
+            h2.execute(
+                "l96_step_b1",
+                vec![TensorF32::from_f64(vec![6], &[0.1; 6])],
+            )
+        })
+        .join()
+        .unwrap()
+        .unwrap();
+        assert_eq!(out.shape, vec![6]);
+    }
+}

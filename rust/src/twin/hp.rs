@@ -1,0 +1,261 @@
+//! The HP-memristor digital twin (Fig. 3).
+//!
+//! State: the normalised doped-region boundary h = w/D (dim 1). Driven by a
+//! voltage stimulus. Backends: analogue solver, Rust RK4, recurrent-ResNet
+//! baseline, or the AOT PJRT artifact.
+
+use anyhow::{anyhow, Result};
+
+use crate::analog::system::{AnalogMlp, AnalogNeuralOde, AnalogNoise, LayerWeights};
+use crate::device::taox::DeviceConfig;
+use crate::models::loader::MlpWeights;
+use crate::models::mlp::{DrivenMlpField, Mlp};
+use crate::models::resnet::RecurrentResNet;
+use crate::ode::rk4;
+use crate::twin::{RolloutFn, Twin, TwinRequest, TwinResponse};
+use crate::workload::stimuli::Waveform;
+
+/// Default circuit substeps per output sample for the analogue backend.
+pub const ANALOG_SUBSTEPS: usize = 20;
+/// Default RK4 substeps per output sample for the digital backend.
+pub const DIGITAL_SUBSTEPS: usize = 1;
+
+/// Execution backend of the HP twin.
+pub enum HpBackend {
+    /// Simulated memristive solver at a noise operating point.
+    Analog(Box<AnalogNeuralOde>),
+    /// Rust-native RK4 over the trained field.
+    Digital(Mlp),
+    /// Recurrent-ResNet discrete baseline.
+    Resnet(RecurrentResNet),
+    /// AOT HLO rollout via PJRT (expects the full half-step stimulus).
+    Pjrt(RolloutFn),
+}
+
+impl HpBackend {
+    fn label(&self) -> &'static str {
+        match self {
+            HpBackend::Analog(_) => "analog",
+            HpBackend::Digital(_) => "digital-rk4",
+            HpBackend::Resnet(_) => "resnet",
+            HpBackend::Pjrt(_) => "pjrt",
+        }
+    }
+}
+
+/// The HP-memristor twin.
+pub struct HpTwin {
+    backend: HpBackend,
+    dt: f64,
+}
+
+impl HpTwin {
+    /// Build the analogue-backend twin from trained weights.
+    pub fn analog(
+        weights: &MlpWeights,
+        cfg: &DeviceConfig,
+        noise: AnalogNoise,
+        seed: u64,
+    ) -> Self {
+        let layers: Vec<LayerWeights> = weights
+            .layers
+            .iter()
+            .map(|(w, b)| LayerWeights::new(w, b))
+            .collect();
+        let mlp = AnalogMlp::deploy(&layers, cfg, noise, seed);
+        let dt = weights.dt;
+        let ode =
+            AnalogNeuralOde::new(mlp, 1, dt / ANALOG_SUBSTEPS as f64);
+        Self { backend: HpBackend::Analog(Box::new(ode)), dt }
+    }
+
+    /// Build the digital (Rust RK4) twin.
+    pub fn digital(weights: &MlpWeights) -> Self {
+        Self {
+            backend: HpBackend::Digital(Mlp::from_weights(weights)),
+            dt: weights.dt,
+        }
+    }
+
+    /// Build the recurrent-ResNet baseline twin.
+    pub fn resnet(weights: &MlpWeights) -> Self {
+        Self {
+            backend: HpBackend::Resnet(RecurrentResNet::new(
+                Mlp::from_weights(weights),
+            )),
+            dt: weights.dt,
+        }
+    }
+
+    /// Build the PJRT-artifact twin.
+    pub fn pjrt(rollout: RolloutFn, dt: f64) -> Self {
+        Self { backend: HpBackend::Pjrt(rollout), dt }
+    }
+
+    /// Simulate under a stimulus; returns the scalar state trajectory.
+    pub fn simulate(
+        &mut self,
+        wave: &Waveform,
+        h0: f64,
+        n_points: usize,
+    ) -> Result<Vec<f64>> {
+        let dt = self.dt;
+        match &mut self.backend {
+            HpBackend::Analog(ode) => {
+                let w = *wave;
+                let traj = ode.solve(
+                    &[h0],
+                    &mut |t| vec![w.eval(t)],
+                    dt,
+                    n_points,
+                );
+                Ok(traj.into_iter().map(|r| r[0]).collect())
+            }
+            HpBackend::Digital(mlp) => {
+                let w = *wave;
+                let mut field =
+                    DrivenMlpField::new(mlp.clone(), move |t| w.eval(t));
+                let traj = rk4::solve(
+                    &mut field,
+                    &[h0],
+                    dt,
+                    n_points,
+                    DIGITAL_SUBSTEPS,
+                );
+                Ok(traj.into_iter().map(|r| r[0]).collect())
+            }
+            HpBackend::Resnet(resnet) => {
+                let xs: Vec<Vec<f64>> = (0..n_points - 1)
+                    .map(|k| vec![wave.eval(k as f64 * dt)])
+                    .collect();
+                let traj = resnet.rollout(&[h0], &xs);
+                Ok(traj.into_iter().map(|r| r[0]).collect())
+            }
+            HpBackend::Pjrt(rollout) => {
+                let xs_half = wave.sample_half_steps(n_points, dt);
+                let traj = rollout(&[h0], Some(&xs_half))?;
+                Ok(traj.into_iter().map(|r| r[0]).collect())
+            }
+        }
+    }
+}
+
+impl Twin for HpTwin {
+    fn name(&self) -> &str {
+        "hp"
+    }
+
+    fn state_dim(&self) -> usize {
+        1
+    }
+
+    fn dt(&self) -> f64 {
+        self.dt
+    }
+
+    fn default_h0(&self) -> Vec<f64> {
+        vec![crate::device::hp::H0]
+    }
+
+    fn run(&mut self, req: &TwinRequest) -> Result<TwinResponse> {
+        let wave = req
+            .stimulus
+            .ok_or_else(|| anyhow!("hp twin requires a stimulus"))?;
+        let h0 = if req.h0.is_empty() {
+            crate::device::hp::H0
+        } else {
+            req.h0[0]
+        };
+        let backend = self.backend.label().to_string();
+        let h = self.simulate(&wave, h0, req.n_points)?;
+        Ok(TwinResponse {
+            trajectory: h.into_iter().map(|v| vec![v]).collect(),
+            backend,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::hp;
+    use crate::metrics::mre::mre;
+    use crate::util::tensor::Mat;
+
+    /// Trained-ish weights: use the *true* field via a fine ReLU net is
+    /// overkill for unit tests — instead check plumbing with a hand-made
+    /// linear field f([v; h]) = 2v - h (exact via paired ReLUs).
+    fn toy_weights() -> MlpWeights {
+        let w1 = Mat::from_vec(
+            2,
+            4,
+            vec![2.0, -2.0, 0.0, 0.0, 0.0, 0.0, 1.0, -1.0],
+        );
+        let b1 = vec![0.0; 4];
+        let w2 = Mat::from_vec(4, 1, vec![1.0, -1.0, -1.0, 1.0]);
+        let b2 = vec![0.0];
+        MlpWeights {
+            layers: vec![(w1, b1), (w2, b2)],
+            dt: 1e-3,
+            kind: "node".into(),
+            task: "hp".into(),
+        }
+    }
+
+    #[test]
+    fn digital_twin_solves_linear_driven_ode() {
+        let mut twin = HpTwin::digital(&toy_weights());
+        let wave = Waveform::sine(1.0, 4.0);
+        let h = twin.simulate(&wave, 0.5, 100).unwrap();
+        assert_eq!(h.len(), 100);
+        assert_eq!(h[0], 0.5);
+        assert!(h.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn analog_and_digital_agree_on_toy_field() {
+        let w = toy_weights();
+        let cfg = DeviceConfig {
+            fault_rate: 0.0,
+            pulse_sigma: 0.0,
+            read_noise: 0.0,
+            ..Default::default()
+        };
+        let mut ana = HpTwin::analog(&w, &cfg, AnalogNoise::off(), 1);
+        let mut dig = HpTwin::digital(&w);
+        let wave = Waveform::sine(1.0, 4.0);
+        let ha = ana.simulate(&wave, 0.2, 200).unwrap();
+        let hd = dig.simulate(&wave, 0.2, 200).unwrap();
+        let err = mre(&ha, &hd);
+        assert!(err < 0.05, "analog vs digital MRE {err}");
+    }
+
+    #[test]
+    fn twin_trait_requires_stimulus() {
+        let mut twin = HpTwin::digital(&toy_weights());
+        let req = TwinRequest::autonomous(vec![], 10);
+        assert!(twin.run(&req).is_err());
+    }
+
+    #[test]
+    fn twin_trait_roundtrip() {
+        let mut twin = HpTwin::digital(&toy_weights());
+        let req = TwinRequest::driven(
+            vec![0.3],
+            50,
+            Waveform::triangular(1.0, 4.0),
+        );
+        let resp = twin.run(&req).unwrap();
+        assert_eq!(resp.trajectory.len(), 50);
+        assert_eq!(resp.backend, "digital-rk4");
+        assert_eq!(resp.trajectory[0], vec![0.3]);
+    }
+
+    #[test]
+    fn resnet_backend_rolls_out() {
+        let mut twin = HpTwin::resnet(&toy_weights());
+        let wave = Waveform::sine(1.0, 4.0);
+        let h = twin.simulate(&wave, hp::H0, 20).unwrap();
+        assert_eq!(h.len(), 20);
+    }
+}

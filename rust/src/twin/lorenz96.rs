@@ -1,0 +1,271 @@
+//! The Lorenz96 digital twin (Fig. 4): an autonomously evolving
+//! six-dimensional atmospheric model.
+//!
+//! Backends: analogue solver, Rust RK4, the recurrent baselines
+//! (RNN/GRU/LSTM, Fig. 4g-i), or the AOT PJRT artifact.
+
+use anyhow::Result;
+
+use crate::analog::system::{AnalogMlp, AnalogNeuralOde, AnalogNoise, LayerWeights};
+use crate::device::taox::DeviceConfig;
+use crate::models::gru::Gru;
+use crate::models::loader::{MlpWeights, RnnWeights};
+use crate::models::lstm::Lstm;
+use crate::models::mlp::{Mlp, MlpField};
+use crate::models::rnn::{Recurrent, VanillaRnn};
+use crate::ode::rk4;
+use crate::twin::{RolloutFn, Twin, TwinRequest, TwinResponse};
+use crate::workload::lorenz96;
+
+/// Default circuit substeps per output sample for the analogue backend.
+pub const ANALOG_SUBSTEPS: usize = 20;
+/// RK4 substeps per output sample for the digital backend.
+pub const DIGITAL_SUBSTEPS: usize = 1;
+
+/// Execution backend of the Lorenz96 twin.
+pub enum L96Backend {
+    Analog(Box<AnalogNeuralOde>),
+    Digital(Mlp),
+    Recurrent(Box<dyn Recurrent + Send>),
+    Pjrt(RolloutFn),
+}
+
+impl L96Backend {
+    fn label(&self) -> &'static str {
+        match self {
+            L96Backend::Analog(_) => "analog",
+            L96Backend::Digital(_) => "digital-rk4",
+            L96Backend::Recurrent(_) => "recurrent",
+            L96Backend::Pjrt(_) => "pjrt",
+        }
+    }
+}
+
+/// The Lorenz96 twin.
+pub struct Lorenz96Twin {
+    backend: L96Backend,
+    dt: f64,
+    dim: usize,
+}
+
+impl Lorenz96Twin {
+    /// Analogue-backend twin from trained weights.
+    pub fn analog(
+        weights: &MlpWeights,
+        cfg: &DeviceConfig,
+        noise: AnalogNoise,
+        seed: u64,
+    ) -> Self {
+        let layers: Vec<LayerWeights> = weights
+            .layers
+            .iter()
+            .map(|(w, b)| LayerWeights::new(w, b))
+            .collect();
+        let dim = weights.layers.last().unwrap().0.cols;
+        let mlp = AnalogMlp::deploy(&layers, cfg, noise, seed);
+        let dt = weights.dt;
+        let ode =
+            AnalogNeuralOde::new(mlp, dim, dt / ANALOG_SUBSTEPS as f64);
+        Self { backend: L96Backend::Analog(Box::new(ode)), dt, dim }
+    }
+
+    /// Digital (Rust RK4) twin.
+    pub fn digital(weights: &MlpWeights) -> Self {
+        let dim = weights.layers.last().unwrap().0.cols;
+        Self {
+            backend: L96Backend::Digital(Mlp::from_weights(weights)),
+            dt: weights.dt,
+            dim,
+        }
+    }
+
+    /// Recurrent baseline twin ("rnn" | "gru" | "lstm").
+    pub fn recurrent(weights: &RnnWeights) -> Result<Self> {
+        let cell: Box<dyn Recurrent + Send> = match weights.kind.as_str() {
+            "rnn" => Box::new(VanillaRnn::new(weights.clone())),
+            "gru" => Box::new(Gru::new(weights.clone())),
+            "lstm" => Box::new(Lstm::new(weights.clone())),
+            other => anyhow::bail!("unknown recurrent kind '{other}'"),
+        };
+        Ok(Self {
+            backend: L96Backend::Recurrent(cell),
+            dt: weights.dt,
+            dim: weights.d_in,
+        })
+    }
+
+    /// PJRT-artifact twin.
+    pub fn pjrt(rollout: RolloutFn, dt: f64, dim: usize) -> Self {
+        Self { backend: L96Backend::Pjrt(rollout), dt, dim }
+    }
+
+    /// Roll out the twin from `h0` for `n_points` samples.
+    pub fn simulate(
+        &mut self,
+        h0: &[f64],
+        n_points: usize,
+    ) -> Result<Vec<Vec<f64>>> {
+        let dt = self.dt;
+        match &mut self.backend {
+            L96Backend::Analog(ode) => {
+                Ok(ode.solve(h0, &mut |_t| vec![], dt, n_points))
+            }
+            L96Backend::Digital(mlp) => {
+                let mut field = MlpField { mlp: mlp.clone() };
+                Ok(rk4::solve(
+                    &mut field,
+                    h0,
+                    dt,
+                    n_points,
+                    DIGITAL_SUBSTEPS,
+                ))
+            }
+            L96Backend::Recurrent(cell) => Ok(cell.rollout(h0, n_points)),
+            L96Backend::Pjrt(rollout) => rollout(h0, None),
+        }
+    }
+}
+
+impl Twin for Lorenz96Twin {
+    fn name(&self) -> &str {
+        "lorenz96"
+    }
+
+    fn state_dim(&self) -> usize {
+        self.dim
+    }
+
+    fn dt(&self) -> f64 {
+        self.dt
+    }
+
+    fn default_h0(&self) -> Vec<f64> {
+        lorenz96::Y0.to_vec()
+    }
+
+    fn run(&mut self, req: &TwinRequest) -> Result<TwinResponse> {
+        let h0 = if req.h0.is_empty() {
+            self.default_h0()
+        } else {
+            req.h0.clone()
+        };
+        anyhow::ensure!(
+            h0.len() == self.dim,
+            "h0 dim {} != twin dim {}",
+            h0.len(),
+            self.dim
+        );
+        let backend = self.backend.label().to_string();
+        let trajectory = self.simulate(&h0, req.n_points)?;
+        Ok(TwinResponse { trajectory, backend })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tensor::Mat;
+
+    /// f(h) = -h element-wise for d = 3, exact via paired ReLUs.
+    fn toy_weights(d: usize) -> MlpWeights {
+        let mut w1 = Mat::zeros(d, 2 * d);
+        for i in 0..d {
+            *w1.at_mut(i, 2 * i) = 1.0;
+            *w1.at_mut(i, 2 * i + 1) = -1.0;
+        }
+        let b1 = vec![0.0; 2 * d];
+        let mut w2 = Mat::zeros(2 * d, d);
+        for i in 0..d {
+            *w2.at_mut(2 * i, i) = -1.0;
+            *w2.at_mut(2 * i + 1, i) = 1.0;
+        }
+        let b2 = vec![0.0; d];
+        MlpWeights {
+            layers: vec![(w1, b1), (w2, b2)],
+            dt: 0.02,
+            kind: "node".into(),
+            task: "l96".into(),
+        }
+    }
+
+    #[test]
+    fn digital_twin_decays_componentwise() {
+        let mut twin = Lorenz96Twin::digital(&toy_weights(3));
+        let traj = twin.simulate(&[1.0, -2.0, 0.5], 51).unwrap();
+        let last = traj.last().unwrap();
+        let decay = (-1.0f64).exp();
+        assert!((last[0] - decay).abs() < 1e-4);
+        assert!((last[1] + 2.0 * decay).abs() < 1e-4);
+        assert!((last[2] - 0.5 * decay).abs() < 1e-4);
+    }
+
+    #[test]
+    fn analog_matches_digital_noise_free() {
+        let w = toy_weights(3);
+        let cfg = DeviceConfig {
+            fault_rate: 0.0,
+            pulse_sigma: 0.0,
+            read_noise: 0.0,
+            ..Default::default()
+        };
+        let mut ana = Lorenz96Twin::analog(&w, &cfg, AnalogNoise::off(), 1);
+        let mut dig = Lorenz96Twin::digital(&w);
+        let a = ana.simulate(&[1.0, 0.5, -0.5], 50).unwrap();
+        let d = dig.simulate(&[1.0, 0.5, -0.5], 50).unwrap();
+        let err = crate::metrics::l1::mean_l1_multi(&a, &d);
+        assert!(err < 0.01, "analog vs digital L1 {err}");
+    }
+
+    #[test]
+    fn twin_trait_uses_default_h0() {
+        let mut twin = Lorenz96Twin::digital(&toy_weights(6));
+        let resp =
+            twin.run(&TwinRequest::autonomous(vec![], 5)).unwrap();
+        assert_eq!(resp.trajectory[0], lorenz96::Y0.to_vec());
+    }
+
+    #[test]
+    fn wrong_h0_dim_rejected() {
+        let mut twin = Lorenz96Twin::digital(&toy_weights(6));
+        let req = TwinRequest::autonomous(vec![1.0, 2.0], 5);
+        assert!(twin.run(&req).is_err());
+    }
+
+    #[test]
+    fn recurrent_backend_from_weights() {
+        use crate::models::loader::RnnWeights;
+        let w = RnnWeights {
+            wx: Mat::zeros(3, 4),
+            wh: Mat::zeros(4, 4),
+            b: vec![0.0; 4],
+            wo: Mat::zeros(4, 3),
+            bo: vec![0.0; 3],
+            hidden: 4,
+            d_in: 3,
+            dt: 0.02,
+            kind: "rnn".into(),
+        };
+        let mut twin = Lorenz96Twin::recurrent(&w).unwrap();
+        let traj = twin.simulate(&[1.0, 2.0, 3.0], 4).unwrap();
+        assert_eq!(traj.len(), 4);
+        // Zero weights: identity rollout.
+        assert_eq!(traj[3], vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn unknown_recurrent_kind_errors() {
+        use crate::models::loader::RnnWeights;
+        let w = RnnWeights {
+            wx: Mat::zeros(1, 1),
+            wh: Mat::zeros(1, 1),
+            b: vec![0.0],
+            wo: Mat::zeros(1, 1),
+            bo: vec![0.0],
+            hidden: 1,
+            d_in: 1,
+            dt: 0.02,
+            kind: "transformer".into(),
+        };
+        assert!(Lorenz96Twin::recurrent(&w).is_err());
+    }
+}

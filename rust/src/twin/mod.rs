@@ -1,0 +1,98 @@
+//! The digital-twin layer: one abstraction over the paper's two twins and
+//! their execution backends.
+//!
+//! A twin is a stateful model of a physical asset that can be rolled out
+//! from an initial condition; the *backend* decides where the neural ODE
+//! actually executes:
+//!
+//! * `Analog`  — the simulated memristive solver (the paper's system);
+//! * `Digital` — Rust-native RK4 over the trained MLP (the "neural ODE on
+//!   digital hardware" baseline);
+//! * `Pjrt`    — the AOT JAX/Pallas artifact executed through the `xla`
+//!   PJRT runtime (the production digital path);
+//! * baseline recurrent models (ResNet / RNN / GRU / LSTM) for the
+//!   comparison figures.
+//!
+//! [`registry::TwinRegistry`] maps twin names to factories so the
+//! coordinator can spin up per-worker instances.
+
+pub mod hp;
+pub mod lorenz96;
+pub mod registry;
+pub mod setup;
+
+use crate::workload::stimuli::Waveform;
+
+/// A rollout executed on a PJRT artifact: (h0, optional stimulus sampled at
+/// half-steps) -> trajectory [n][d]. Constructed by
+/// `runtime::artifacts::rollout_fn`.
+pub type RolloutFn = Box<
+    dyn FnMut(&[f64], Option<&[f64]>) -> anyhow::Result<Vec<Vec<f64>>>
+        + Send,
+>;
+
+/// A twin-inference request (what the coordinator routes).
+#[derive(Debug, Clone)]
+pub struct TwinRequest {
+    /// Initial state; empty = use the twin's default initial condition.
+    pub h0: Vec<f64>,
+    /// Number of output samples (incl. the initial one).
+    pub n_points: usize,
+    /// Stimulus for driven twins (ignored by autonomous ones).
+    pub stimulus: Option<Waveform>,
+}
+
+impl TwinRequest {
+    pub fn autonomous(h0: Vec<f64>, n_points: usize) -> Self {
+        Self { h0, n_points, stimulus: None }
+    }
+
+    pub fn driven(h0: Vec<f64>, n_points: usize, w: Waveform) -> Self {
+        Self { h0, n_points, stimulus: Some(w) }
+    }
+}
+
+/// A twin-inference response.
+#[derive(Debug, Clone)]
+pub struct TwinResponse {
+    /// [n_points][state_dim] trajectory.
+    pub trajectory: Vec<Vec<f64>>,
+    /// Which backend produced it (telemetry).
+    pub backend: String,
+}
+
+/// The object-safe twin interface the coordinator serves.
+pub trait Twin: Send {
+    /// Twin name (route key).
+    fn name(&self) -> &str;
+
+    /// State dimension.
+    fn state_dim(&self) -> usize;
+
+    /// Sampling interval of one output step (s).
+    fn dt(&self) -> f64;
+
+    /// Default initial condition.
+    fn default_h0(&self) -> Vec<f64>;
+
+    /// Execute a request.
+    fn run(&mut self, req: &TwinRequest) -> anyhow::Result<TwinResponse>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_constructors() {
+        let r = TwinRequest::autonomous(vec![1.0], 10);
+        assert!(r.stimulus.is_none());
+        let d = TwinRequest::driven(
+            vec![0.1],
+            5,
+            Waveform::sine(1.0, 4.0),
+        );
+        assert!(d.stimulus.is_some());
+        assert_eq!(d.n_points, 5);
+    }
+}

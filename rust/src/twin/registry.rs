@@ -1,0 +1,135 @@
+//! Twin registry: names -> twin factories.
+//!
+//! The coordinator's workers each own private twin instances (twins are
+//! stateful: integrator charge, recurrent hidden state, RNG streams), so
+//! the registry stores *factories* rather than instances. Factories are
+//! `Send + Sync` and cheap to call; the expensive parts (weight loading,
+//! array deployment) happen once inside the factory's captured state.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::twin::Twin;
+
+/// A thread-safe twin factory.
+pub type TwinFactory = Arc<dyn Fn() -> Box<dyn Twin> + Send + Sync>;
+
+/// Registry of available twins.
+#[derive(Clone, Default)]
+pub struct TwinRegistry {
+    factories: BTreeMap<String, TwinFactory>,
+}
+
+impl TwinRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a factory under a route key (e.g. "hp/analog").
+    pub fn register(
+        &mut self,
+        key: &str,
+        factory: impl Fn() -> Box<dyn Twin> + Send + Sync + 'static,
+    ) {
+        self.factories.insert(key.to_string(), Arc::new(factory));
+    }
+
+    /// Instantiate a twin.
+    pub fn create(&self, key: &str) -> Result<Box<dyn Twin>> {
+        let f = self.factories.get(key).ok_or_else(|| {
+            anyhow!(
+                "unknown twin '{key}' (available: {})",
+                self.keys().join(", ")
+            )
+        })?;
+        Ok(f())
+    }
+
+    /// Registered route keys, sorted.
+    pub fn keys(&self) -> Vec<String> {
+        self.factories.keys().cloned().collect()
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.factories.contains_key(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.factories.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.factories.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::twin::{TwinRequest, TwinResponse};
+
+    struct DummyTwin;
+
+    impl Twin for DummyTwin {
+        fn name(&self) -> &str {
+            "dummy"
+        }
+        fn state_dim(&self) -> usize {
+            1
+        }
+        fn dt(&self) -> f64 {
+            0.1
+        }
+        fn default_h0(&self) -> Vec<f64> {
+            vec![0.0]
+        }
+        fn run(&mut self, req: &TwinRequest) -> Result<TwinResponse> {
+            Ok(TwinResponse {
+                trajectory: vec![vec![0.0]; req.n_points],
+                backend: "dummy".into(),
+            })
+        }
+    }
+
+    #[test]
+    fn register_and_create() {
+        let mut reg = TwinRegistry::new();
+        reg.register("dummy", || Box::new(DummyTwin));
+        assert!(reg.contains("dummy"));
+        assert_eq!(reg.len(), 1);
+        let mut twin = reg.create("dummy").unwrap();
+        let resp = twin.run(&TwinRequest::autonomous(vec![], 3)).unwrap();
+        assert_eq!(resp.trajectory.len(), 3);
+    }
+
+    #[test]
+    fn unknown_key_lists_available() {
+        let mut reg = TwinRegistry::new();
+        reg.register("hp/analog", || Box::new(DummyTwin));
+        let err = match reg.create("nope") {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("unknown key accepted"),
+        };
+        assert!(err.contains("hp/analog"));
+    }
+
+    #[test]
+    fn factories_produce_independent_instances() {
+        let mut reg = TwinRegistry::new();
+        reg.register("dummy", || Box::new(DummyTwin));
+        let a = reg.create("dummy").unwrap();
+        let b = reg.create("dummy").unwrap();
+        // Just type-level: both exist simultaneously (no shared &mut).
+        assert_eq!(a.name(), b.name());
+    }
+
+    #[test]
+    fn registry_clone_shares_factories() {
+        let mut reg = TwinRegistry::new();
+        reg.register("dummy", || Box::new(DummyTwin));
+        let reg2 = reg.clone();
+        assert!(reg2.contains("dummy"));
+    }
+}

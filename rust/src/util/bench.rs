@@ -1,0 +1,166 @@
+//! Micro-benchmark harness (criterion replacement for the offline build).
+//!
+//! Warmup + timed iterations with median / p95 / mean reporting, a
+//! `black_box` to defeat constant folding, and a tabular reporter used by
+//! every `cargo bench` target (`harness = false`) to print the rows of the
+//! paper's figures.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+/// Re-export of `std::hint::black_box` under the criterion-style name.
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn median_us(&self) -> f64 {
+        self.median.as_secs_f64() * 1e6
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct Bencher {
+    /// Minimum number of timed iterations.
+    pub min_iters: usize,
+    /// Target total measurement time; iterations stop after both bounds met.
+    pub target_time: Duration,
+    /// Warmup time before measuring.
+    pub warmup: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            min_iters: 20,
+            target_time: Duration::from_millis(400),
+            warmup: Duration::from_millis(100),
+        }
+    }
+}
+
+impl Bencher {
+    /// Fast settings for CI-ish runs.
+    pub fn quick() -> Self {
+        Self {
+            min_iters: 10,
+            target_time: Duration::from_millis(120),
+            warmup: Duration::from_millis(30),
+        }
+    }
+
+    /// Benchmark a closure; its return value is black-boxed.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            std_black_box(f());
+        }
+        // Measure.
+        let mut samples_ns: Vec<f64> = Vec::with_capacity(self.min_iters * 2);
+        let t0 = Instant::now();
+        loop {
+            let s = Instant::now();
+            std_black_box(f());
+            samples_ns.push(s.elapsed().as_nanos() as f64);
+            if samples_ns.len() >= self.min_iters
+                && t0.elapsed() >= self.target_time
+            {
+                break;
+            }
+        }
+        let med = stats::median(&samples_ns);
+        let p95 = stats::percentile(&samples_ns, 95.0);
+        let mean = stats::summary(&samples_ns).mean;
+        let min = samples_ns.iter().cloned().fold(f64::INFINITY, f64::min);
+        BenchResult {
+            name: name.to_string(),
+            iters: samples_ns.len(),
+            median: Duration::from_nanos(med as u64),
+            mean: Duration::from_nanos(mean as u64),
+            p95: Duration::from_nanos(p95 as u64),
+            min: Duration::from_nanos(min as u64),
+        }
+    }
+}
+
+/// Pretty-print a table of results with an optional baseline row for
+/// speedup ratios (the "ours vs digital" columns of Fig. 3k / 4h).
+pub fn print_table(title: &str, results: &[BenchResult]) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<44} {:>10} {:>12} {:>12} {:>12}",
+        "case", "iters", "median", "mean", "p95"
+    );
+    for r in results {
+        println!(
+            "{:<44} {:>10} {:>12} {:>12} {:>12}",
+            r.name,
+            r.iters,
+            fmt_dur(r.median),
+            fmt_dur(r.mean),
+            fmt_dur(r.p95)
+        );
+    }
+}
+
+/// Human-friendly duration.
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_produces_sane_timings() {
+        let b = Bencher::quick();
+        let r = b.run("noop", || 1 + 1);
+        assert!(r.iters >= 10);
+        assert!(r.median <= r.p95);
+        assert!(r.min <= r.median);
+    }
+
+    #[test]
+    fn timed_work_is_ordered() {
+        // Large gap so the assertion holds even on a loaded machine.
+        let b = Bencher::quick();
+        let fast = b.run("fast", || std_black_box(1u64) + 1);
+        let slow = b.run("slow", || {
+            (0..2_000_000u64).map(std_black_box).sum::<u64>()
+        });
+        assert!(slow.median > fast.median);
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert!(fmt_dur(Duration::from_nanos(500)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(50)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(50)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).contains(" s"));
+    }
+}

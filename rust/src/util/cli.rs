@@ -1,0 +1,284 @@
+//! Declarative command-line parsing (clap replacement for the offline build).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, per-flag defaults and an auto-generated `--help`. Used by the
+//! `memode` binary, the examples and the bench targets.
+
+use std::collections::BTreeMap;
+
+/// One declared option.
+#[derive(Debug, Clone)]
+struct Opt {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_bool: bool,
+}
+
+/// Declarative argument parser.
+#[derive(Debug, Clone)]
+pub struct Args {
+    program: String,
+    about: String,
+    opts: Vec<Opt>,
+    values: BTreeMap<String, String>,
+    positionals: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &str) -> Self {
+        Self {
+            program: program.to_string(),
+            about: about.to_string(),
+            opts: Vec::new(),
+            values: BTreeMap::new(),
+            positionals: Vec::new(),
+        }
+    }
+
+    /// Declare `--name <value>` with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Declare a required `--name <value>` (no default).
+    pub fn required(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Declare a boolean `--name` switch (default false).
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some("false".to_string()),
+            is_bool: true,
+        });
+        self
+    }
+
+    /// Parse an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(
+        mut self,
+        argv: I,
+    ) -> Result<Args, String> {
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| {
+                        format!("unknown option --{name}\n{}", self.usage())
+                    })?
+                    .clone();
+                let value = if let Some(v) = inline {
+                    v
+                } else if opt.is_bool {
+                    "true".to_string()
+                } else {
+                    it.next().ok_or_else(|| {
+                        format!("--{name} expects a value")
+                    })?
+                };
+                self.values.insert(name, value);
+            } else {
+                self.positionals.push(arg);
+            }
+        }
+        // Check required options.
+        for o in &self.opts {
+            if o.default.is_none()
+                && !self.values.contains_key(&o.name)
+            {
+                return Err(format!(
+                    "missing required option --{}\n{}",
+                    o.name,
+                    self.usage()
+                ));
+            }
+        }
+        Ok(self)
+    }
+
+    /// Parse `std::env::args()` and exit with the message on error/help.
+    pub fn parse_env(self) -> Args {
+        match self.parse(std::env::args().skip(1)) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    /// Usage text.
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for o in &self.opts {
+            let def = match (&o.default, o.is_bool) {
+                (_, true) => String::new(),
+                (Some(d), _) => format!(" [default: {d}]"),
+                (None, _) => " (required)".to_string(),
+            };
+            s.push_str(&format!("  --{:<18} {}{}\n", o.name, o.help, def));
+        }
+        s
+    }
+
+    // -- typed getters ------------------------------------------------------
+
+    fn raw(&self, name: &str) -> String {
+        if let Some(v) = self.values.get(name) {
+            return v.clone();
+        }
+        self.opts
+            .iter()
+            .find(|o| o.name == name)
+            .and_then(|o| o.default.clone())
+            .unwrap_or_else(|| panic!("option --{name} was never declared"))
+    }
+
+    pub fn get(&self, name: &str) -> String {
+        self.raw(name)
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.raw(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an integer"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.raw(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an integer"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.raw(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects a number"))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.raw(name) == "true"
+    }
+
+    /// Comma-separated list of usizes (e.g. `--hidden 64,128,256`).
+    pub fn get_usize_list(&self, name: &str) -> Vec<usize> {
+        self.raw(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .unwrap_or_else(|_| panic!("--{name}: bad integer '{s}'"))
+            })
+            .collect()
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = Args::new("t", "test")
+            .opt("steps", "100", "steps")
+            .opt("name", "x", "name")
+            .parse(argv("--steps 7"))
+            .unwrap();
+        assert_eq!(a.get_usize("steps"), 7);
+        assert_eq!(a.get("name"), "x");
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = Args::new("t", "")
+            .opt("lr", "0.1", "")
+            .parse(argv("--lr=0.5"))
+            .unwrap();
+        assert_eq!(a.get_f64("lr"), 0.5);
+    }
+
+    #[test]
+    fn bool_flags() {
+        let a = Args::new("t", "")
+            .flag("verbose", "")
+            .parse(argv("--verbose"))
+            .unwrap();
+        assert!(a.get_bool("verbose"));
+        let b = Args::new("t", "").flag("verbose", "").parse(argv("")).unwrap();
+        assert!(!b.get_bool("verbose"));
+    }
+
+    #[test]
+    fn required_missing_errors() {
+        let r = Args::new("t", "").required("model", "").parse(argv(""));
+        assert!(r.is_err());
+        assert!(r.unwrap_err().contains("--model"));
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        let r = Args::new("t", "").parse(argv("--nope 1"));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = Args::new("t", "")
+            .opt("k", "1", "")
+            .parse(argv("serve --k 2 extra"))
+            .unwrap();
+        assert_eq!(a.positionals(), &["serve", "extra"]);
+        assert_eq!(a.get_usize("k"), 2);
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = Args::new("t", "")
+            .opt("sizes", "64,128", "")
+            .parse(argv(""))
+            .unwrap();
+        assert_eq!(a.get_usize_list("sizes"), vec![64, 128]);
+    }
+
+    #[test]
+    fn help_is_error_with_usage() {
+        let r = Args::new("prog", "about").opt("x", "1", "the x").parse(argv("--help"));
+        let msg = r.unwrap_err();
+        assert!(msg.contains("prog"));
+        assert!(msg.contains("--x"));
+    }
+}

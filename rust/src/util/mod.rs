@@ -1,0 +1,19 @@
+//! Foundational substrates built from scratch (the offline image vendors
+//! only `xla` + `anyhow`, so the usual ecosystem crates are replaced here).
+//!
+//! * [`tensor`]  — dense f64 matrix/vector math (gemv/gemm, the VMM hot path)
+//! * [`rng`]     — deterministic PCG64 PRNG with normal/lognormal variates
+//! * [`json`]    — JSON parser + writer (serde replacement for artifacts)
+//! * [`cli`]     — declarative flag parser (clap replacement)
+//! * [`stats`]   — summary statistics, percentiles, histograms
+//! * [`bench`]   — warmup/iterate/median micro-benchmark harness (criterion
+//!   replacement; all `cargo bench` targets use it with `harness = false`)
+//! * [`proptest`] — randomized invariant-checking helpers (property tests)
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod tensor;

@@ -1,0 +1,157 @@
+//! Randomized invariant checking (proptest replacement for the offline
+//! build).
+//!
+//! `check` runs an invariant over N randomly generated cases and, on
+//! failure, greedily shrinks the failing input before panicking with a
+//! reproducible seed. Generators are plain closures over [`Pcg64`], so any
+//! domain type can be generated without macro machinery.
+
+use crate::util::rng::Pcg64;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_iters: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 256, seed: 0x5eed, max_shrink_iters: 200 }
+    }
+}
+
+/// Run `prop` over `cases` inputs drawn from `gen`; panic with the seed and
+/// (shrunk) counterexample on failure.
+///
+/// `shrink` proposes smaller variants of a failing input (return an empty
+/// vec when no simplification applies).
+pub fn check_with<T: Clone + std::fmt::Debug>(
+    cfg: &Config,
+    mut gen: impl FnMut(&mut Pcg64) -> T,
+    shrink: impl Fn(&T) -> Vec<T>,
+    prop: impl Fn(&T) -> bool,
+) {
+    let mut rng = Pcg64::seeded(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if prop(&input) {
+            continue;
+        }
+        // Shrink greedily: take the first simpler failing variant.
+        let mut best = input.clone();
+        let mut iters = 0;
+        'outer: loop {
+            for cand in shrink(&best) {
+                iters += 1;
+                if iters > cfg.max_shrink_iters {
+                    break 'outer;
+                }
+                if !prop(&cand) {
+                    best = cand;
+                    continue 'outer;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property failed (seed={:#x}, case={case}):\n  original: {:?}\n  shrunk:   {:?}",
+            cfg.seed, input, best
+        );
+    }
+}
+
+/// `check_with` without shrinking.
+pub fn check<T: Clone + std::fmt::Debug>(
+    cfg: &Config,
+    gen: impl FnMut(&mut Pcg64) -> T,
+    prop: impl Fn(&T) -> bool,
+) {
+    check_with(cfg, gen, |_| Vec::new(), prop);
+}
+
+// ---------------------------------------------------------------------------
+// Common generators
+// ---------------------------------------------------------------------------
+
+/// Vector of `n` uniforms in [lo, hi).
+pub fn gen_vec(rng: &mut Pcg64, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+    (0..n).map(|_| rng.uniform_in(lo, hi)).collect()
+}
+
+/// Vector with random length in [1, max_len].
+pub fn gen_vec_any_len(
+    rng: &mut Pcg64,
+    max_len: usize,
+    lo: f64,
+    hi: f64,
+) -> Vec<f64> {
+    let n = 1 + rng.below(max_len as u64) as usize;
+    gen_vec(rng, n, lo, hi)
+}
+
+/// Shrinker for vectors: halve the length, then zero elements one by one.
+pub fn shrink_vec(v: &Vec<f64>) -> Vec<Vec<f64>> {
+    let mut out = Vec::new();
+    if v.len() > 1 {
+        out.push(v[..v.len() / 2].to_vec());
+    }
+    for i in 0..v.len().min(8) {
+        if v[i] != 0.0 {
+            let mut w = v.clone();
+            w[i] = 0.0;
+            out.push(w);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check(
+            &Config::default(),
+            |r| gen_vec(r, 8, -1.0, 1.0),
+            |v| v.iter().all(|x| x.abs() <= 1.0),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            &Config { cases: 50, ..Config::default() },
+            |r| r.uniform(),
+            |&x| x < 0.5,
+        );
+    }
+
+    #[test]
+    fn shrinking_finds_smaller_counterexample() {
+        // Property: no element > 0.9. The shrunk case should be shorter
+        // than the original (halving applies while it still fails).
+        let res = std::panic::catch_unwind(|| {
+            check_with(
+                &Config { cases: 100, ..Config::default() },
+                |r| gen_vec(r, 64, 0.0, 1.0),
+                shrink_vec,
+                |v| v.iter().all(|&x| x <= 0.9),
+            );
+        });
+        let msg = *res.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("shrunk"));
+    }
+
+    #[test]
+    fn gen_vec_any_len_within_bounds() {
+        let mut r = Pcg64::seeded(1);
+        for _ in 0..100 {
+            let v = gen_vec_any_len(&mut r, 17, 0.0, 1.0);
+            assert!((1..=17).contains(&v.len()));
+        }
+    }
+}

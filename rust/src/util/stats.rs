@@ -1,0 +1,172 @@
+//! Summary statistics, percentiles and histograms.
+//!
+//! Backs the device-characterisation experiments (Fig. 2k programming-error
+//! histogram), the benchmark harness (median/p95 latency) and the
+//! noise-robustness grids (Fig. 4j averages over repetitions).
+
+/// Basic summary of a sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    /// Population variance (the paper quotes variance of programming error).
+    pub var: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+/// Compute a [`Summary`] over a sample (empty samples return NaNs).
+pub fn summary(xs: &[f64]) -> Summary {
+    let n = xs.len();
+    if n == 0 {
+        return Summary {
+            n: 0,
+            mean: f64::NAN,
+            var: f64::NAN,
+            std: f64::NAN,
+            min: f64::NAN,
+            max: f64::NAN,
+        };
+    }
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+        / n as f64;
+    let (mut min, mut max) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &x in xs {
+        min = min.min(x);
+        max = max.max(x);
+    }
+    Summary { n, mean, var, std: var.sqrt(), min, max }
+}
+
+/// p-th percentile (0..=100) by linear interpolation on the sorted sample.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty(), "percentile of empty sample");
+    assert!((0.0..=100.0).contains(&p), "percentile out of range");
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).expect("NaN in percentile"));
+    let idx = p / 100.0 * (s.len() - 1) as f64;
+    let lo = idx.floor() as usize;
+    let hi = idx.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (idx - lo as f64) * (s[hi] - s[lo])
+    }
+}
+
+/// Median (50th percentile).
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Fixed-width histogram over [lo, hi) with `bins` buckets; values outside
+/// the range clamp to the edge buckets (matches how the paper's Fig. 2k
+/// histogram treats outliers).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Self { lo, hi, counts: vec![0; bins] }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        let bins = self.counts.len();
+        let t = (x - self.lo) / (self.hi - self.lo);
+        let idx = ((t * bins as f64).floor() as i64).clamp(0, bins as i64 - 1);
+        self.counts[idx as usize] += 1;
+    }
+
+    pub fn add_all(&mut self, xs: &[f64]) {
+        for &x in xs {
+            self.add(x);
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Bucket centre for index `i`.
+    pub fn center(&self, i: usize) -> f64 {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        self.lo + (i as f64 + 0.5) * w
+    }
+
+    /// Render an ASCII bar chart (used by `memode characterize`).
+    pub fn ascii(&self, width: usize) -> String {
+        let max = self.counts.iter().copied().max().unwrap_or(1).max(1);
+        let mut out = String::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            let bar = "#".repeat((c as usize * width) / max as usize);
+            out.push_str(&format!(
+                "{:>10.4} | {:<width$} {}\n",
+                self.center(i),
+                bar,
+                c,
+                width = width
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_known_sample() {
+        let s = summary(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert_eq!(s.mean, 2.5);
+        assert!((s.var - 1.25).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn summary_empty_is_nan() {
+        assert!(summary(&[]).mean.is_nan());
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 100.0), 40.0);
+        assert_eq!(median(&xs), 25.0);
+        assert!((percentile(&xs, 25.0) - 17.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_unsorted_input() {
+        let xs = [30.0, 10.0, 40.0, 20.0];
+        assert_eq!(median(&xs), 25.0);
+    }
+
+    #[test]
+    fn histogram_buckets_and_clamping() {
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        h.add_all(&[0.1, 0.3, 0.6, 0.9, -5.0, 5.0]);
+        assert_eq!(h.counts, vec![2, 1, 1, 2]);
+        assert_eq!(h.total(), 6);
+        assert!((h.center(0) - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_ascii_renders() {
+        let mut h = Histogram::new(0.0, 1.0, 2);
+        h.add_all(&[0.1, 0.2, 0.8]);
+        let s = h.ascii(10);
+        assert!(s.contains('#'));
+        assert_eq!(s.lines().count(), 2);
+    }
+}

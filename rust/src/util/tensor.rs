@@ -1,0 +1,304 @@
+//! Dense f64 vector/matrix math — the numerical substrate for the whole
+//! simulator (crossbar VMM, circuit integration, baseline model inference).
+//!
+//! Deliberately small: row-major [`Mat`], `Vec<f64>` vectors, and the three
+//! operations the hot paths need (`gemv`, transposed `gemv`, `gemm`), plus
+//! an allocation-free [`Mat::gemv_into`] used by the request-path VMM.
+
+/// Row-major dense matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    /// Zero-filled matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Matrix filled with a constant.
+    pub fn full(rows: usize, cols: usize, v: f64) -> Self {
+        Self { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(
+        rows: usize,
+        cols: usize,
+        mut f: impl FnMut(usize, usize) -> f64,
+    ) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    /// Build from a row-major flat vector.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// Build from nested rows (e.g. parsed JSON weights).
+    pub fn from_rows(rows_data: &[Vec<f64>]) -> Self {
+        let rows = rows_data.len();
+        let cols = rows_data.first().map_or(0, Vec::len);
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in rows_data {
+            assert_eq!(r.len(), cols, "ragged rows");
+            data.extend_from_slice(r);
+        }
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    /// Borrow row `r` as a slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Mat {
+        Mat::from_fn(self.cols, self.rows, |r, c| self.at(c, r))
+    }
+
+    /// y = x^T A  (vector times matrix; `x.len() == rows`, output `cols`).
+    ///
+    /// This orientation matches the crossbar: input voltages drive the rows
+    /// (bit lines), column currents are the output — and it walks `data`
+    /// contiguously, which is what makes it the preferred hot-path form.
+    pub fn vecmat(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.cols];
+        self.vecmat_into(x, &mut y);
+        y
+    }
+
+    /// Allocation-free form of [`Mat::vecmat`].
+    pub fn vecmat_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows, "vecmat: x length != rows");
+        assert_eq!(y.len(), self.cols, "vecmat: y length != cols");
+        y.fill(0.0);
+        // Row-major accumulate: y[c] += x[r] * A[r, c]; the inner loop is a
+        // contiguous axpy that autovectorises.
+        for (r, &xv) in x.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let row = self.row(r);
+            for (yc, &a) in y.iter_mut().zip(row) {
+                *yc += xv * a;
+            }
+        }
+    }
+
+    /// y = A x (matrix times vector; `x.len() == cols`, output `rows`).
+    pub fn gemv(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.rows];
+        self.gemv_into(x, &mut y);
+        y
+    }
+
+    /// Allocation-free form of [`Mat::gemv`].
+    pub fn gemv_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols, "gemv: x length != cols");
+        assert_eq!(y.len(), self.rows, "gemv: y length != rows");
+        for (r, yv) in y.iter_mut().enumerate() {
+            let row = self.row(r);
+            let mut acc = 0.0;
+            for (&a, &b) in row.iter().zip(x) {
+                acc += a * b;
+            }
+            *yv = acc;
+        }
+    }
+
+    /// C = A B.
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows, "matmul shape mismatch");
+        let mut c = Mat::zeros(self.rows, b.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.at(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = b.row(k);
+                let crow =
+                    &mut c.data[i * b.cols..(i + 1) * b.cols];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += a * bv;
+                }
+            }
+        }
+        c
+    }
+
+    /// Element-wise map into a new matrix.
+    pub fn map(&self, f: impl Fn(f64) -> f64) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn frob(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Vector helpers (free functions over &[f64])
+// ---------------------------------------------------------------------------
+
+/// z = a + s * b (fused axpy-like update), allocation-free.
+pub fn axpy_into(z: &mut [f64], a: &[f64], s: f64, b: &[f64]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), z.len());
+    for ((zv, &av), &bv) in z.iter_mut().zip(a).zip(b) {
+        *zv = av + s * bv;
+    }
+}
+
+/// Element-wise a + b.
+pub fn add(a: &[f64], b: &[f64]) -> Vec<f64> {
+    a.iter().zip(b).map(|(&x, &y)| x + y).collect()
+}
+
+/// Element-wise a - b.
+pub fn sub(a: &[f64], b: &[f64]) -> Vec<f64> {
+    a.iter().zip(b).map(|(&x, &y)| x - y).collect()
+}
+
+/// s * a.
+pub fn scale(a: &[f64], s: f64) -> Vec<f64> {
+    a.iter().map(|&x| s * x).collect()
+}
+
+/// Dot product.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x * y).sum()
+}
+
+/// L2 norm.
+pub fn norm(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// L-infinity distance between two vectors.
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| (x - y).abs())
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_fn_and_at() {
+        let m = Mat::from_fn(2, 3, |r, c| (r * 10 + c) as f64);
+        assert_eq!(m.at(0, 0), 0.0);
+        assert_eq!(m.at(1, 2), 12.0);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0]);
+    }
+
+    #[test]
+    fn vecmat_matches_manual() {
+        // A = [[1,2],[3,4],[5,6]], x = [1, 0.5, -1] -> x^T A = [-2.5, -2]
+        let a = Mat::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        let y = a.vecmat(&[1.0, 0.5, -1.0]);
+        assert_eq!(y, vec![-2.5, -2.0]);
+    }
+
+    #[test]
+    fn gemv_matches_manual() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let y = a.gemv(&[1.0, 1.0, 1.0]);
+        assert_eq!(y, vec![6.0, 15.0]);
+    }
+
+    #[test]
+    fn gemv_is_transpose_of_vecmat() {
+        let m = Mat::from_fn(5, 4, |r, c| ((r * 7 + c * 3) % 5) as f64 - 2.0);
+        let x = [0.5, -1.0, 2.0, 0.25, 1.5];
+        assert_eq!(m.vecmat(&x), m.transpose().gemv(&x));
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_fn(3, 3, |r, c| (r + c) as f64);
+        let id = Mat::from_fn(3, 3, |r, c| (r == c) as u8 as f64);
+        assert_eq!(a.matmul(&id), a);
+        assert_eq!(id.matmul(&a), a);
+    }
+
+    #[test]
+    fn matmul_known_product() {
+        let a = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let b = Mat::from_vec(2, 2, vec![5., 6., 7., 8.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = Mat::from_fn(4, 7, |r, c| (r * 31 + c * 17) as f64);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn axpy_into_works() {
+        let a = [1.0, 2.0];
+        let b = [10.0, 20.0];
+        let mut z = [0.0; 2];
+        axpy_into(&mut z, &a, 0.5, &b);
+        assert_eq!(z, [6.0, 12.0]);
+    }
+
+    #[test]
+    fn vec_helpers() {
+        assert_eq!(add(&[1., 2.], &[3., 4.]), vec![4., 6.]);
+        assert_eq!(sub(&[1., 2.], &[3., 4.]), vec![-2., -2.]);
+        assert_eq!(scale(&[1., 2.], 2.0), vec![2., 4.]);
+        assert_eq!(dot(&[1., 2.], &[3., 4.]), 11.0);
+        assert!((norm(&[3., 4.]) - 5.0).abs() < 1e-12);
+        assert_eq!(max_abs_diff(&[1., 5.], &[2., 3.]), 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn from_vec_checks_shape() {
+        let _ = Mat::from_vec(2, 2, vec![1.0]);
+    }
+
+    #[test]
+    fn gemv_into_no_stale_state() {
+        let a = Mat::from_vec(1, 2, vec![1., 1.]);
+        let mut y = vec![123.0];
+        a.gemv_into(&[1.0, 2.0], &mut y);
+        assert_eq!(y, vec![3.0]);
+    }
+}

@@ -1,0 +1,284 @@
+//! Lorenz96 atmospheric dynamics (Eq. 4) — the Fig. 4 evaluation workload.
+//!
+//! Ground-truth generator (RK4 at sub-sample resolution), the paper's exact
+//! initial condition and split (1800 interpolation / 600 extrapolation
+//! samples at dt = 0.02 s), and a Benettin estimator for the maximal
+//! Lyapunov exponent used to express extrapolation horizons in Lyapunov
+//! times. Constants mirror `python/compile/datasets.py`.
+
+use crate::util::rng::Pcg64;
+
+/// State dimension of the paper's twin.
+pub const DIM: usize = 6;
+/// Canonical forcing (chaotic regime for n >= 5).
+pub const FORCING: f64 = 8.0;
+/// Sample interval (s): 2400 samples span the 48 s window of Fig. 4.
+pub const DT: f64 = 0.02;
+/// Total sequence length.
+pub const N_POINTS: usize = 2400;
+/// Interpolation (training) split.
+pub const TRAIN_POINTS: usize = 1800;
+/// State normalisation scale. The paper's quoted initial condition spans
+/// ~[-1.6, 1.2] while the F = 8 attractor spans ~[-8, 13]: the paper's
+/// twin (and its L1 error figures) live in *normalized* units, physical
+/// state / SCALE. All twins and metrics here follow that convention; the
+/// physical trajectory is SCALE * normalized.
+pub const SCALE: f64 = 8.0;
+/// The paper's quoted initial condition (normalized units).
+pub const Y0: [f64; DIM] =
+    [-1.2061, 0.0617, 1.1632, -1.5008, -1.5944, -0.0187];
+
+/// Eq. (4) vector field with periodic boundary: out[i] =
+/// (x[i+1] - x[i-2]) * x[i-1] - x[i] + F.
+pub fn field_into(x: &[f64], forcing: f64, out: &mut [f64]) {
+    let n = x.len();
+    debug_assert!(n > 3, "Lorenz96 needs n > 3");
+    debug_assert_eq!(out.len(), n);
+    for i in 0..n {
+        let ip1 = x[(i + 1) % n];
+        let im1 = x[(i + n - 1) % n];
+        let im2 = x[(i + n - 2) % n];
+        out[i] = (ip1 - im2) * im1 - x[i] + forcing;
+    }
+}
+
+/// Allocating wrapper for [`field_into`].
+pub fn field(x: &[f64], forcing: f64) -> Vec<f64> {
+    let mut out = vec![0.0; x.len()];
+    field_into(x, forcing, &mut out);
+    out
+}
+
+/// One RK4 step of the ground truth (allocation-light; scratch reused).
+fn rk4_step(x: &mut [f64], forcing: f64, dt: f64, scratch: &mut Scratch) {
+    let n = x.len();
+    let Scratch { k1, k2, k3, k4, tmp } = scratch;
+    field_into(x, forcing, k1);
+    for i in 0..n {
+        tmp[i] = x[i] + 0.5 * dt * k1[i];
+    }
+    field_into(tmp, forcing, k2);
+    for i in 0..n {
+        tmp[i] = x[i] + 0.5 * dt * k2[i];
+    }
+    field_into(tmp, forcing, k3);
+    for i in 0..n {
+        tmp[i] = x[i] + dt * k3[i];
+    }
+    field_into(tmp, forcing, k4);
+    for i in 0..n {
+        x[i] += dt / 6.0 * (k1[i] + 2.0 * k2[i] + 2.0 * k3[i] + k4[i]);
+    }
+}
+
+struct Scratch {
+    k1: Vec<f64>,
+    k2: Vec<f64>,
+    k3: Vec<f64>,
+    k4: Vec<f64>,
+    tmp: Vec<f64>,
+}
+
+impl Scratch {
+    fn new(n: usize) -> Self {
+        Self {
+            k1: vec![0.0; n],
+            k2: vec![0.0; n],
+            k3: vec![0.0; n],
+            k4: vec![0.0; n],
+            tmp: vec![0.0; n],
+        }
+    }
+}
+
+/// Integrate from `x0`, emitting `n_points` samples spaced `dt`, with
+/// `substeps` RK4 sub-intervals per sample. Returns row-major
+/// `[n_points][dim]`.
+pub fn simulate(
+    x0: &[f64],
+    n_points: usize,
+    dt: f64,
+    forcing: f64,
+    substeps: usize,
+) -> Vec<Vec<f64>> {
+    let mut x = x0.to_vec();
+    let mut scratch = Scratch::new(x.len());
+    let hd = dt / substeps as f64;
+    let mut out = Vec::with_capacity(n_points);
+    out.push(x.clone());
+    for _ in 1..n_points {
+        for _ in 0..substeps {
+            rk4_step(&mut x, forcing, hd, &mut scratch);
+        }
+        out.push(x.clone());
+    }
+    out
+}
+
+/// Paper-default trajectory in *physical* units: starts from SCALE * Y0.
+pub fn simulate_default() -> Vec<Vec<f64>> {
+    let y0: Vec<f64> = Y0.iter().map(|&v| v * SCALE).collect();
+    simulate(&y0, N_POINTS, DT, FORCING, 4)
+}
+
+/// Paper-convention trajectory in *normalized* units (the space the twins,
+/// the training data and every Fig. 4 error metric live in).
+pub fn simulate_normalized(n_points: usize) -> Vec<Vec<f64>> {
+    let y0: Vec<f64> = Y0.iter().map(|&v| v * SCALE).collect();
+    simulate(&y0, n_points, DT, FORCING, 4)
+        .into_iter()
+        .map(|row| row.into_iter().map(|v| v / SCALE).collect())
+        .collect()
+}
+
+/// Normalized-space vector field: d(x/S)/dt = f(S x_n) / S.
+pub fn field_normalized(xn: &[f64], forcing: f64) -> Vec<f64> {
+    let phys: Vec<f64> = xn.iter().map(|&v| v * SCALE).collect();
+    field(&phys, forcing).into_iter().map(|v| v / SCALE).collect()
+}
+
+/// Benettin estimate of the maximal Lyapunov exponent (Methods Eq. 10).
+pub fn max_lyapunov_exponent(forcing: f64, dim: usize, seed: u64) -> f64 {
+    let mut rng = Pcg64::seeded(seed);
+    let mut x = Y0[..dim.min(DIM)].to_vec();
+    x.resize(dim, 0.1);
+    let d0 = 1e-8;
+    let mut y: Vec<f64> = x
+        .iter()
+        .map(|&v| v + d0 * rng.normal() / (dim as f64).sqrt())
+        .collect();
+    let dt = 0.01;
+    let (n_steps, warmup) = (20_000, 2_000);
+    let mut scratch = Scratch::new(dim);
+    let mut acc = 0.0;
+    for k in 0..n_steps {
+        rk4_step(&mut x, forcing, dt, &mut scratch);
+        rk4_step(&mut y, forcing, dt, &mut scratch);
+        let d = x
+            .iter()
+            .zip(&y)
+            .map(|(&a, &b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt();
+        if k >= warmup {
+            acc += (d / d0).ln();
+        }
+        // Renormalise the perturbation back to d0.
+        for (yv, &xv) in y.iter_mut().zip(&x) {
+            *yv = xv + (*yv - xv) * (d0 / d);
+        }
+    }
+    acc / ((n_steps - warmup) as f64 * dt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn field_matches_hand_computation() {
+        // n = 4, x = [1, 2, 3, 4], F = 0 (indices mod 4):
+        // i=0: (x1 - x2)*x3 - x0 = (2-3)*4 - 1 = -5
+        // i=1: (x2 - x3)*x0 - x1 = (3-4)*1 - 2 = -3
+        // i=2: (x3 - x0)*x1 - x2 = (4-1)*2 - 3 =  3
+        // i=3: (x0 - x1)*x2 - x3 = (1-2)*3 - 4 = -7
+        let out = field(&[1.0, 2.0, 3.0, 4.0], 0.0);
+        assert_eq!(out, vec![-5.0, -3.0, 3.0, -7.0]);
+    }
+
+    #[test]
+    fn fixed_point_all_equal_f() {
+        // x_i = F for all i is an equilibrium of Eq. (4).
+        let x = vec![FORCING; DIM];
+        let out = field(&x, FORCING);
+        assert!(out.iter().all(|&v| v.abs() < 1e-12));
+    }
+
+    #[test]
+    fn trajectory_shapes_and_start() {
+        let traj = simulate_default();
+        assert_eq!(traj.len(), N_POINTS);
+        let y0: Vec<f64> = Y0.iter().map(|&v| v * SCALE).collect();
+        assert_eq!(traj[0], y0);
+        assert_eq!(traj[0].len(), DIM);
+    }
+
+    #[test]
+    fn normalized_trajectory_starts_at_paper_y0() {
+        let traj = simulate_normalized(50);
+        for (a, b) in traj[0].iter().zip(Y0.iter()) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        // Normalized attractor stays O(1.6).
+        for row in &traj {
+            for &v in row {
+                assert!(v.abs() < 3.0, "normalized state {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn normalized_field_consistent_with_physical() {
+        let xn = [0.5, -0.25, 1.0, 0.1, -0.9, 0.3];
+        let fn_ = field_normalized(&xn, FORCING);
+        let phys: Vec<f64> = xn.iter().map(|&v| v * SCALE).collect();
+        let fp = field(&phys, FORCING);
+        for (a, b) in fn_.iter().zip(&fp) {
+            assert!((a * SCALE - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn trajectory_stays_bounded() {
+        // Lorenz96 at F = 8 lives on a bounded attractor (|x| < ~20).
+        let traj = simulate_default();
+        for row in &traj {
+            for &v in row {
+                assert!(v.abs() < 25.0, "unbounded state {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn substeps_converge() {
+        // Doubling substeps should change the result only slightly over a
+        // short horizon (RK4 is 4th order).
+        let a = simulate(&Y0, 50, DT, FORCING, 2);
+        let b = simulate(&Y0, 50, DT, FORCING, 8);
+        let d: f64 = a[49]
+            .iter()
+            .zip(&b[49])
+            .map(|(&x, &y)| (x - y).abs())
+            .fold(0.0, f64::max);
+        assert!(d < 1e-4, "integrator not converged: {d}");
+    }
+
+    #[test]
+    fn sensitive_dependence_on_initial_conditions() {
+        let mut y0b = Y0.to_vec();
+        y0b[0] += 1e-6;
+        let a = simulate(&Y0, N_POINTS, DT, FORCING, 4);
+        let b = simulate(&y0b, N_POINTS, DT, FORCING, 4);
+        let d_end: f64 = a[N_POINTS - 1]
+            .iter()
+            .zip(&b[N_POINTS - 1])
+            .map(|(&x, &y)| (x - y).abs())
+            .sum();
+        assert!(d_end > 0.1, "chaos missing: divergence {d_end}");
+    }
+
+    #[test]
+    fn mle_positive_and_sane() {
+        let mle = max_lyapunov_exponent(FORCING, DIM, 0);
+        // d=6, F=8 Lorenz96 has a positive MLE of order 1 per time unit.
+        assert!(mle > 0.2 && mle < 3.0, "MLE {mle} implausible");
+    }
+
+    #[test]
+    fn splits_cover_whole_sequence() {
+        assert_eq!(TRAIN_POINTS + 600, N_POINTS);
+        // 36 s interpolation + 12 s extrapolation at 0.02 s.
+        assert!((TRAIN_POINTS as f64 * DT - 36.0).abs() < 1e-9);
+        assert!(((N_POINTS - TRAIN_POINTS) as f64 * DT - 12.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,9 @@
+//! Workload generators for the paper's two evaluation tasks.
+//!
+//! * [`stimuli`]  — the four Fig. 3 stimulation waveforms (sine, triangular,
+//!   rectangular, modulated sine)
+//! * [`lorenz96`] — the Lorenz96 atmospheric dynamics of Fig. 4 (ground
+//!   truth generator + maximal-Lyapunov-exponent estimator)
+
+pub mod lorenz96;
+pub mod stimuli;

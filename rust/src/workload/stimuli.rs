@@ -1,0 +1,151 @@
+//! Stimulation waveforms (Fig. 3f/j: sine, triangular, rectangular and
+//! amplitude-modulated sine).
+//!
+//! Definitions match `python/compile/datasets.py` bit-for-bit so that the
+//! Rust evaluation harness drives the twin with exactly the signals the
+//! Python pipeline trained against.
+
+/// A periodic stimulation waveform.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Waveform {
+    /// amp * sin(2π f t + phase)
+    Sine { amp: f64, freq: f64, phase: f64 },
+    /// Symmetric triangle between ±amp.
+    Triangular { amp: f64, freq: f64 },
+    /// ±amp square wave with duty cycle.
+    Rectangular { amp: f64, freq: f64, duty: f64 },
+    /// Sine with raised-sine amplitude envelope.
+    ModulatedSine { amp: f64, freq: f64, mod_freq: f64 },
+}
+
+impl Waveform {
+    pub fn sine(amp: f64, freq: f64) -> Self {
+        Waveform::Sine { amp, freq, phase: 0.0 }
+    }
+
+    pub fn triangular(amp: f64, freq: f64) -> Self {
+        Waveform::Triangular { amp, freq }
+    }
+
+    pub fn rectangular(amp: f64, freq: f64) -> Self {
+        Waveform::Rectangular { amp, freq, duty: 0.5 }
+    }
+
+    pub fn modulated(amp: f64, freq: f64, mod_freq: f64) -> Self {
+        Waveform::ModulatedSine { amp, freq, mod_freq }
+    }
+
+    /// The paper's four test stimuli at the default amplitude/frequency.
+    pub fn paper_set() -> Vec<(&'static str, Waveform)> {
+        vec![
+            ("sine", Waveform::sine(1.0, 4.0)),
+            ("triangular", Waveform::triangular(1.0, 4.0)),
+            ("rectangular", Waveform::rectangular(1.0, 4.0)),
+            ("modulated", Waveform::modulated(1.0, 4.0, 1.0)),
+        ]
+    }
+
+    /// Evaluate the waveform at time `t` (seconds).
+    pub fn eval(&self, t: f64) -> f64 {
+        match *self {
+            Waveform::Sine { amp, freq, phase } => {
+                amp * (2.0 * std::f64::consts::PI * freq * t + phase).sin()
+            }
+            Waveform::Triangular { amp, freq } => {
+                let ph = (t * freq).rem_euclid(1.0);
+                amp * (4.0 * (ph - 0.5).abs() - 1.0)
+            }
+            Waveform::Rectangular { amp, freq, duty } => {
+                let ph = (t * freq).rem_euclid(1.0);
+                if ph < duty {
+                    amp
+                } else {
+                    -amp
+                }
+            }
+            Waveform::ModulatedSine { amp, freq, mod_freq } => {
+                let envelope = 0.5
+                    * (1.0
+                        + (2.0 * std::f64::consts::PI * mod_freq * t).sin());
+                amp * envelope
+                    * (2.0 * std::f64::consts::PI * freq * t).sin()
+            }
+        }
+    }
+
+    /// Sample at `n` points spaced `dt` starting from t = 0.
+    pub fn sample(&self, n: usize, dt: f64) -> Vec<f64> {
+        (0..n).map(|k| self.eval(k as f64 * dt)).collect()
+    }
+
+    /// Sample at half-step resolution: `2*(n-1)+1` points spaced `dt/2`.
+    /// This is the resolution the RK4 rollout artifacts consume (value at
+    /// t, t+dt/2, t+dt for every step).
+    pub fn sample_half_steps(&self, n: usize, dt: f64) -> Vec<f64> {
+        (0..2 * (n - 1) + 1).map(|k| self.eval(k as f64 * dt / 2.0)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sine_basic_values() {
+        let w = Waveform::sine(2.0, 1.0);
+        assert!((w.eval(0.0)).abs() < 1e-12);
+        assert!((w.eval(0.25) - 2.0).abs() < 1e-12);
+        assert!((w.eval(0.5)).abs() < 1e-10);
+    }
+
+    #[test]
+    fn triangle_peaks_and_zeros() {
+        let w = Waveform::triangular(1.0, 1.0);
+        assert!((w.eval(0.0) - 1.0).abs() < 1e-12); // phase 0 is a peak
+        assert!((w.eval(0.5) + 1.0).abs() < 1e-12); // mid-period trough
+        assert!((w.eval(0.25)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rectangle_levels_and_duty() {
+        let w = Waveform::Rectangular { amp: 1.0, freq: 1.0, duty: 0.25 };
+        assert_eq!(w.eval(0.1), 1.0);
+        assert_eq!(w.eval(0.3), -1.0);
+        assert_eq!(w.eval(1.1), 1.0); // periodic
+    }
+
+    #[test]
+    fn modulated_envelope_bounds() {
+        let w = Waveform::modulated(1.0, 4.0, 1.0);
+        for k in 0..1000 {
+            let v = w.eval(k as f64 * 1e-3);
+            assert!(v.abs() <= 1.0 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn all_waveforms_bounded_by_amp() {
+        for (_, w) in Waveform::paper_set() {
+            for k in 0..5000 {
+                assert!(w.eval(k as f64 * 1e-4).abs() <= 1.0 + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn negative_time_is_periodic_not_nan() {
+        let w = Waveform::triangular(1.0, 4.0);
+        assert!((w.eval(-0.25) - w.eval(0.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn half_step_sampling_interleaves() {
+        let w = Waveform::sine(1.0, 4.0);
+        let full = w.sample(10, 1e-3);
+        let half = w.sample_half_steps(10, 1e-3);
+        assert_eq!(half.len(), 19);
+        for k in 0..10 {
+            assert_eq!(half[2 * k], full[k]);
+        }
+    }
+}

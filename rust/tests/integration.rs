@@ -1,0 +1,298 @@
+//! Cross-layer integration tests.
+//!
+//! These exercise the composition the unit tests cannot: PJRT artifacts vs
+//! Rust-native solvers on the *same trained weights*, the analogue solver
+//! vs the digital reference, and the full coordinator serving real twins.
+//! All tests skip gracefully when `make artifacts` has not run.
+
+use std::path::PathBuf;
+
+use memode::analog::system::AnalogNoise;
+use memode::config::SystemConfig;
+use memode::coordinator::service::Coordinator;
+use memode::device::hp;
+use memode::device::taox::DeviceConfig;
+use memode::metrics::l1::{l1_error, mean_l1_multi};
+use memode::metrics::mre::mre;
+use memode::runtime::service::PjrtService;
+use memode::twin::hp::HpTwin;
+use memode::twin::lorenz96::Lorenz96Twin;
+use memode::twin::setup::{build_registry, TrainedWeights};
+use memode::twin::TwinRequest;
+use memode::workload::lorenz96 as l96;
+use memode::workload::stimuli::Waveform;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn config() -> SystemConfig {
+    SystemConfig { artifacts_dir: artifacts_dir(), ..Default::default() }
+}
+
+fn artifacts_built() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+        && ["hp_node", "hp_resnet", "l96_node", "l96_rnn", "l96_gru", "l96_lstm"]
+            .iter()
+            .all(|n| {
+                artifacts_dir().join(format!("weights/{n}.json")).exists()
+            })
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_built() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+// ---------------------------------------------------------------------------
+// PJRT vs Rust-native numerics (the central cross-layer contract)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pjrt_l96_rollout_matches_rust_rk4() {
+    require_artifacts!();
+    let cfg = config();
+    let weights = TrainedWeights::load(&cfg).unwrap();
+    let svc = PjrtService::start(&cfg.artifacts_dir).unwrap();
+    let reg =
+        build_registry(&cfg, &weights, Some(svc.handle())).unwrap();
+
+    let mut pjrt_twin = reg.create("lorenz96/pjrt").unwrap();
+    let mut rust_twin = reg.create("lorenz96/digital").unwrap();
+    let req = TwinRequest::autonomous(vec![], 2400);
+    let a = pjrt_twin.run(&req).unwrap();
+    let b = rust_twin.run(&req).unwrap();
+    assert_eq!(a.trajectory.len(), 2400);
+    assert_eq!(b.trajectory.len(), 2400);
+    // f32 (PJRT) vs f64 (Rust) on a chaotic system: exact agreement is
+    // impossible over 48 s, but the first several hundred steps must track
+    // tightly — that proves both execute the same trained field + RK4.
+    let horizon = 300;
+    let d = mean_l1_multi(
+        &a.trajectory[..horizon],
+        &b.trajectory[..horizon],
+    );
+    assert!(d < 0.05, "pjrt vs rust divergence {d} over {horizon} steps");
+}
+
+#[test]
+fn pjrt_hp_rollout_matches_rust_rk4() {
+    require_artifacts!();
+    let cfg = config();
+    let weights = TrainedWeights::load(&cfg).unwrap();
+    let svc = PjrtService::start(&cfg.artifacts_dir).unwrap();
+    let reg =
+        build_registry(&cfg, &weights, Some(svc.handle())).unwrap();
+
+    let wave = Waveform::sine(1.0, 4.0);
+    let mut pjrt_twin = reg.create("hp/pjrt").unwrap();
+    let mut rust_twin = reg.create("hp/digital").unwrap();
+    let req = TwinRequest::driven(vec![hp::H0], hp::N_POINTS, wave);
+    let a = pjrt_twin.run(&req).unwrap();
+    let b = rust_twin.run(&req).unwrap();
+    let ha: Vec<f64> = a.trajectory.iter().map(|r| r[0]).collect();
+    let hb: Vec<f64> = b.trajectory.iter().map(|r| r[0]).collect();
+    let d = l1_error(&ha, &hb);
+    assert!(d < 1e-3, "pjrt vs rust HP divergence {d}");
+}
+
+#[test]
+fn pjrt_step_artifacts_consistent_with_rollout() {
+    require_artifacts!();
+    let cfg = config();
+    let svc = PjrtService::start(&cfg.artifacts_dir).unwrap();
+    let h = svc.handle();
+    use memode::runtime::TensorF32;
+    // One l96 step from Y0 must equal the second row of the rollout.
+    let y0: Vec<f64> = l96::Y0.to_vec();
+    let step = h
+        .execute(
+            "l96_step_b1",
+            vec![TensorF32::from_f64(vec![6], &y0)],
+        )
+        .unwrap();
+    let roll = h
+        .execute(
+            "l96_rollout",
+            vec![TensorF32::from_f64(vec![6], &y0)],
+        )
+        .unwrap();
+    for k in 0..6 {
+        let a = step.data[k];
+        let b = roll.data[6 + k]; // row 1
+        assert!(
+            (a - b).abs() < 1e-5,
+            "step vs rollout row1 mismatch at {k}: {a} vs {b}"
+        );
+    }
+    // Batched step: row 0 of a batch of identical states matches b=1.
+    let batch: Vec<f64> = (0..32).flat_map(|_| y0.clone()).collect();
+    let b32 = h
+        .execute(
+            "l96_step_b32",
+            vec![TensorF32::from_f64(vec![32, 6], &batch)],
+        )
+        .unwrap();
+    for k in 0..6 {
+        assert!((b32.data[k] - step.data[k]).abs() < 1e-5);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Analogue vs digital on trained weights
+// ---------------------------------------------------------------------------
+
+#[test]
+fn analog_hp_twin_tracks_ground_truth_at_paper_error_level() {
+    require_artifacts!();
+    let cfg = config();
+    let weights = TrainedWeights::load(&cfg).unwrap();
+    let wave = Waveform::sine(1.0, 4.0);
+    let truth = hp::simulate_default(&|t| wave.eval(t));
+    let mut twin = HpTwin::analog(
+        &weights.hp_node,
+        &cfg.device,
+        AnalogNoise::hardware(),
+        1234,
+    );
+    let h = twin.simulate(&wave, hp::H0, hp::N_POINTS).unwrap();
+    let err = mre(&h, &truth.h);
+    // Paper Fig. 3j: MRE 0.17. Allow headroom for seed variation.
+    assert!(err < 0.5, "analog HP MRE {err}");
+}
+
+#[test]
+fn analog_l96_twin_stays_on_attractor() {
+    require_artifacts!();
+    let cfg = config();
+    let weights = TrainedWeights::load(&cfg).unwrap();
+    let device = DeviceConfig { fault_rate: 0.0, ..cfg.device.clone() };
+    let mut twin = Lorenz96Twin::analog(
+        &weights.l96_node,
+        &device,
+        AnalogNoise::hardware(),
+        77,
+    );
+    let traj = twin.simulate(&l96::Y0, 2400).unwrap();
+    let truth = l96::simulate_normalized(2400);
+    let l1 = mean_l1_multi(&traj, &truth);
+    // Decorrelated-attractor L1 in normalized units is ~0.5 (the paper's
+    // own interp figure); divergence off the attractor would be >> 1.
+    assert!(l1 < 1.0, "analog L96 L1 {l1}");
+    for row in &traj {
+        for &v in row {
+            assert!(v.abs() < 4.0, "state left the attractor: {v}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator serving real twins end to end
+// ---------------------------------------------------------------------------
+
+#[test]
+fn coordinator_serves_mixed_routes_with_real_twins() {
+    require_artifacts!();
+    let cfg = config();
+    let weights = TrainedWeights::load(&cfg).unwrap();
+    let reg = build_registry(&cfg, &weights, None).unwrap();
+    let coord = Coordinator::start(reg, &cfg.serve);
+
+    let mut pending = Vec::new();
+    for k in 0..12 {
+        let (route, req) = if k % 2 == 0 {
+            (
+                "lorenz96/digital",
+                TwinRequest::autonomous(vec![], 50),
+            )
+        } else {
+            (
+                "hp/digital",
+                TwinRequest::driven(
+                    vec![],
+                    50,
+                    Waveform::sine(1.0, 4.0),
+                ),
+            )
+        };
+        pending.push(coord.submit(route, req).unwrap());
+    }
+    for p in pending {
+        let result = p.wait().unwrap();
+        let resp = result.result.unwrap();
+        assert_eq!(resp.trajectory.len(), 50);
+    }
+    let stats = coord.stats();
+    assert_eq!(stats.completed, 12);
+    assert_eq!(stats.failed, 0);
+}
+
+#[test]
+fn coordinator_with_pjrt_routes_serves_aot_rollouts() {
+    require_artifacts!();
+    let cfg = config();
+    let weights = TrainedWeights::load(&cfg).unwrap();
+    let svc = PjrtService::start(&cfg.artifacts_dir).unwrap();
+    svc.handle().preload(&["l96_rollout"]).unwrap();
+    let reg =
+        build_registry(&cfg, &weights, Some(svc.handle())).unwrap();
+    let coord = Coordinator::start(reg, &cfg.serve);
+    // The AOT rollout has a fixed compiled length of 2400.
+    let resp = coord
+        .call("lorenz96/pjrt", TwinRequest::autonomous(vec![], 2400))
+        .unwrap();
+    assert_eq!(resp.trajectory.len(), 2400);
+    assert_eq!(resp.backend, "pjrt");
+}
+
+// ---------------------------------------------------------------------------
+// Failure injection
+// ---------------------------------------------------------------------------
+
+#[test]
+fn wrong_h0_dimension_is_a_job_error_not_a_crash() {
+    require_artifacts!();
+    let cfg = config();
+    let weights = TrainedWeights::load(&cfg).unwrap();
+    let reg = build_registry(&cfg, &weights, None).unwrap();
+    let coord = Coordinator::start(reg, &cfg.serve);
+    let bad = coord.call(
+        "lorenz96/digital",
+        TwinRequest::autonomous(vec![1.0, 2.0], 10),
+    );
+    assert!(bad.is_err());
+    // The worker survives and serves the next request.
+    let good = coord
+        .call("lorenz96/digital", TwinRequest::autonomous(vec![], 10))
+        .unwrap();
+    assert_eq!(good.trajectory.len(), 10);
+}
+
+#[test]
+fn backpressure_sheds_under_burst_but_completes_admitted() {
+    require_artifacts!();
+    let cfg = config();
+    let weights = TrainedWeights::load(&cfg).unwrap();
+    let reg = build_registry(&cfg, &weights, None).unwrap();
+    let mut serve = cfg.serve.clone();
+    serve.queue_depth = 4;
+    let coord = Coordinator::start(reg, &serve);
+    let mut admitted = Vec::new();
+    let mut shed = 0;
+    for _ in 0..32 {
+        match coord
+            .submit("lorenz96/digital", TwinRequest::autonomous(vec![], 200))
+        {
+            Ok(p) => admitted.push(p),
+            Err(_) => shed += 1,
+        }
+    }
+    assert!(shed > 0, "burst should exceed queue depth 4");
+    for p in admitted {
+        assert!(p.wait().unwrap().result.is_ok());
+    }
+}

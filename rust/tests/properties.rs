@@ -1,0 +1,376 @@
+//! Property-based tests over the coordinator and numerical substrates
+//! (randomized invariants via `util::proptest`; no external artifacts
+//! needed — these always run).
+
+use memode::crossbar::differential::DifferentialArray;
+use memode::crossbar::mapping::WeightMapping;
+use memode::crossbar::tiling::TiledMatrix;
+use memode::crossbar::vmm::{NoiseMode, VmmEngine};
+use memode::device::noise::NoiseSource;
+use memode::device::taox::DeviceConfig;
+use memode::metrics::dtw::{dtw_distance, dtw_normalized};
+use memode::metrics::l1::l1_error;
+use memode::metrics::mre::mre;
+use memode::ode::func::FnField;
+use memode::ode::{dopri5, euler, rk4};
+use memode::util::json::{self, Json};
+use memode::util::proptest::{check, gen_vec, gen_vec_any_len, Config};
+use memode::util::rng::Pcg64;
+use memode::util::tensor::Mat;
+
+fn quiet_cfg() -> DeviceConfig {
+    DeviceConfig {
+        read_noise: 0.0,
+        fault_rate: 0.0,
+        pulse_sigma: 0.0,
+        ..Default::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Metrics invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_dtw_identity_and_symmetry() {
+    check(
+        &Config { cases: 128, ..Default::default() },
+        |r| gen_vec_any_len(r, 40, -2.0, 2.0),
+        |v| {
+            let self_d = dtw_distance(v, v);
+            if self_d != 0.0 {
+                return false;
+            }
+            // Symmetry against a shifted copy.
+            let w: Vec<f64> = v.iter().map(|x| x + 0.3).collect();
+            (dtw_distance(v, &w) - dtw_distance(&w, v)).abs() < 1e-9
+        },
+    );
+}
+
+#[test]
+fn prop_dtw_invariant_to_sample_duplication() {
+    // Repeating samples (time-warping) must not change the raw DTW cost.
+    check(
+        &Config { cases: 64, ..Default::default() },
+        |r| gen_vec_any_len(r, 20, -1.0, 1.0),
+        |v| {
+            let mut doubled = Vec::new();
+            for &x in v {
+                doubled.push(x);
+                doubled.push(x);
+            }
+            (dtw_distance(v, &doubled)).abs() < 1e-9
+        },
+    );
+}
+
+#[test]
+fn prop_dtw_bounded_by_pointwise_l1() {
+    check(
+        &Config { cases: 64, ..Default::default() },
+        |r| {
+            let n = 5 + r.below(30) as usize;
+            (gen_vec(r, n, -2.0, 2.0), gen_vec(r, n, -2.0, 2.0))
+        },
+        |(a, b)| {
+            // DTW finds the optimal warp, so its normalized cost can never
+            // exceed the pointwise mean L1 (the diagonal path) times the
+            // path-length ratio.
+            dtw_normalized(a, b) <= l1_error(a, b) * 0.5 + 1e-12
+        },
+    );
+}
+
+#[test]
+fn prop_mre_scale_invariance() {
+    check(
+        &Config { cases: 128, ..Default::default() },
+        |r| {
+            let n = 2 + r.below(20) as usize;
+            let truth = gen_vec(r, n, 0.5, 3.0);
+            let pred = gen_vec(r, n, 0.5, 3.0);
+            let scale = r.uniform_in(0.1, 50.0);
+            (truth, pred, scale)
+        },
+        |(truth, pred, s)| {
+            let a = mre(pred, truth);
+            let ps: Vec<f64> = pred.iter().map(|x| x * s).collect();
+            let ts: Vec<f64> = truth.iter().map(|x| x * s).collect();
+            (a - mre(&ps, &ts)).abs() < 1e-9
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Crossbar invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_weight_mapping_roundtrip() {
+    check(
+        &Config { cases: 256, ..Default::default() },
+        |r| {
+            let w = r.uniform_in(-3.0, 3.0);
+            let w_max = r.uniform_in(0.5, 4.0).max(w.abs());
+            (w, w_max)
+        },
+        |&(w, w_max)| {
+            let m = WeightMapping::for_weights(
+                &Mat::from_vec(1, 1, vec![w_max]),
+                &DeviceConfig::default(),
+            );
+            let (gp, gn) = m.weight_to_pair(w);
+            (m.pair_to_weight(gp, gn) - w).abs() < 1e-9
+        },
+    );
+}
+
+#[test]
+fn prop_ideal_deploy_preserves_vmm() {
+    let cfg = quiet_cfg();
+    check(
+        &Config { cases: 24, ..Default::default() },
+        |r| {
+            let rows = 2 + r.below(10) as usize;
+            let cols = 1 + r.below(10) as usize;
+            let w = Mat::from_fn(rows, cols, |_, _| r.uniform_in(-1.0, 1.0));
+            let v = gen_vec(r, rows, -0.3, 0.3);
+            let seed = r.next_u64();
+            (w, v, seed)
+        },
+        |(w, v, seed)| {
+            let mut rng = Pcg64::seeded(*seed);
+            let d = DifferentialArray::deploy(w, &cfg, &mut rng);
+            let got = d.vmm_physical(v, &mut rng);
+            let want = w.vecmat(v);
+            got.iter().zip(&want).all(|(g, e)| (g - e).abs() < 1e-8)
+        },
+    );
+}
+
+#[test]
+fn prop_tiled_vmm_equals_dense_product() {
+    let cfg = quiet_cfg();
+    check(
+        &Config { cases: 8, ..Default::default() },
+        |r| {
+            let rows = 30 + r.below(50) as usize;
+            let cols = 30 + r.below(50) as usize;
+            let w = Mat::from_fn(rows, cols, |_, _| r.uniform_in(-1.0, 1.0));
+            let v = gen_vec(r, rows, -0.2, 0.2);
+            let seed = r.next_u64();
+            (w, v, seed)
+        },
+        |(w, v, seed)| {
+            let mut rng = Pcg64::seeded(*seed);
+            let t = TiledMatrix::deploy(w, &cfg, &mut rng);
+            let got = t.vmm_physical(v, &mut rng);
+            let want = w.vecmat(v);
+            got.iter().zip(&want).all(|(g, e)| (g - e).abs() < 1e-7)
+        },
+    );
+}
+
+#[test]
+fn prop_vmm_engine_noise_is_unbiased() {
+    let cfg = quiet_cfg();
+    check(
+        &Config { cases: 8, ..Default::default() },
+        |r| {
+            let n = 4 + r.below(12) as usize;
+            let w = Mat::from_fn(n, n, |_, _| r.uniform_in(-1.0, 1.0));
+            let v = gen_vec(r, n, -0.3, 0.3);
+            let seed = r.next_u64();
+            (w, v, seed)
+        },
+        |(w, v, seed)| {
+            let mut rng = Pcg64::seeded(*seed);
+            let arr = DifferentialArray::deploy(w, &cfg, &mut rng);
+            let mut noisy = VmmEngine::new(
+                &arr,
+                NoiseSource::new(0.05),
+                NoiseMode::Fast,
+            );
+            let clean = w.vecmat(v);
+            let n_trials = 800;
+            let mut acc = vec![0.0; clean.len()];
+            for _ in 0..n_trials {
+                let y = noisy.vmm(v, &mut rng);
+                for (a, yv) in acc.iter_mut().zip(&y) {
+                    *a += yv;
+                }
+            }
+            acc.iter().zip(&clean).all(|(a, c)| {
+                let mean = a / n_trials as f64;
+                // 5 sigma tolerance on the mean estimate.
+                (mean - c).abs() < 0.05 * (c.abs() + 0.5)
+            })
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Solver invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_rk4_linear_decay_matches_closed_form() {
+    check(
+        &Config { cases: 64, ..Default::default() },
+        |r| (r.uniform_in(0.1, 2.0), r.uniform_in(-2.0, 2.0)),
+        |&(lambda, x0)| {
+            let mut f = FnField::new(1, move |_t, x: &[f64], o: &mut [f64]| {
+                o[0] = -lambda * x[0]
+            });
+            let traj = rk4::solve(&mut f, &[x0], 0.05, 21, 1);
+            let want = x0 * (-lambda).exp();
+            (traj[20][0] - want).abs() < 1e-5 * (1.0 + want.abs())
+        },
+    );
+}
+
+#[test]
+fn prop_rk4_dominates_euler() {
+    check(
+        &Config { cases: 32, ..Default::default() },
+        |r| (r.uniform_in(0.3, 2.0), r.uniform_in(0.5, 2.0)),
+        |&(lambda, x0)| {
+            let mut f = FnField::new(1, move |_t, x: &[f64], o: &mut [f64]| {
+                o[0] = -lambda * x[0]
+            });
+            let exact = x0 * (-lambda).exp();
+            let r4 = rk4::solve(&mut f, &[x0], 0.25, 5, 1);
+            let eu = euler::solve(&mut f, &[x0], 0.25, 5, 1);
+            (r4[4][0] - exact).abs() <= (eu[4][0] - exact).abs() + 1e-12
+        },
+    );
+}
+
+#[test]
+fn prop_dopri5_matches_rk4_fine_grid() {
+    check(
+        &Config { cases: 16, ..Default::default() },
+        |r| (r.uniform_in(0.2, 1.5), r.uniform_in(-1.0, 1.0)),
+        |&(omega, x0)| {
+            // Harmonic oscillator with random frequency.
+            let mut f1 = FnField::new(2, move |_t, x: &[f64], o: &mut [f64]| {
+                o[0] = x[1];
+                o[1] = -omega * omega * x[0];
+            });
+            let mut f2 = FnField::new(2, move |_t, x: &[f64], o: &mut [f64]| {
+                o[0] = x[1];
+                o[1] = -omega * omega * x[0];
+            });
+            let t_out = [2.0];
+            let (a, _) = dopri5::solve(
+                &mut f1,
+                &[x0, 0.0],
+                0.0,
+                2.0,
+                &t_out,
+                &dopri5::Options {
+                    rtol: 1e-8,
+                    atol: 1e-10,
+                    ..Default::default()
+                },
+            );
+            let b = rk4::solve(&mut f2, &[x0, 0.0], 2.0, 2, 2000);
+            (a[0][0] - b[1][0]).abs() < 1e-5
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// JSON round-trip
+// ---------------------------------------------------------------------------
+
+fn gen_json(rng: &mut Pcg64, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.chance(0.5)),
+        2 => Json::Num((rng.uniform_in(-1e6, 1e6) * 1e3).round() / 1e3),
+        3 => {
+            let n = rng.below(8);
+            Json::Str(
+                (0..n)
+                    .map(|_| {
+                        char::from_u32(32 + rng.below(90) as u32).unwrap()
+                    })
+                    .collect(),
+            )
+        }
+        4 => Json::Arr(
+            (0..rng.below(4)).map(|_| gen_json(rng, depth - 1)).collect(),
+        ),
+        _ => Json::Obj(
+            (0..rng.below(4))
+                .map(|k| (format!("k{k}"), gen_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    check(
+        &Config { cases: 512, ..Default::default() },
+        |r| gen_json(r, 3),
+        |v| {
+            let text = v.to_string();
+            match json::parse(&text) {
+                Ok(back) => back == *v,
+                Err(_) => false,
+            }
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator batcher conservation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_batcher_conserves_jobs() {
+    use memode::coordinator::batcher::{BatchPolicy, Batcher};
+    use memode::coordinator::Job;
+    use memode::twin::TwinRequest;
+    use std::sync::mpsc;
+    use std::time::{Duration, Instant};
+
+    check(
+        &Config { cases: 64, ..Default::default() },
+        |r| {
+            let n = 1 + r.below(64) as usize;
+            let max_batch = 1 + r.below(8) as usize;
+            let routes: Vec<u64> = (0..n).map(|_| r.below(3)).collect();
+            (max_batch, routes)
+        },
+        |(max_batch, routes)| {
+            let mut b = Batcher::new(BatchPolicy {
+                max_batch: *max_batch,
+                window: Duration::from_secs(100),
+            });
+            let mut out_count = 0usize;
+            let mut keep_rx = Vec::new();
+            for (id, route) in routes.iter().enumerate() {
+                let (tx, rx) = mpsc::channel();
+                keep_rx.push(rx);
+                let job = Job {
+                    id: id as u64,
+                    route: format!("r{route}"),
+                    req: TwinRequest::autonomous(vec![], 1),
+                    enqueued: Instant::now(),
+                    reply: tx,
+                };
+                if let Some(batch) = b.push(job) {
+                    out_count += batch.jobs.len();
+                }
+            }
+            for batch in b.flush(Instant::now(), true) {
+                out_count += batch.jobs.len();
+            }
+            out_count == routes.len() && b.pending_jobs() == 0
+        },
+    );
+}
