@@ -81,6 +81,10 @@ pub struct AnalogMlp {
     scratch_in: Vec<Vec<f64>>,
     /// Per-layer output scratch.
     scratch_out: Vec<Vec<f64>>,
+    /// Per-layer batched input scratch (grown on first batched call).
+    bscratch_in: Vec<Vec<f64>>,
+    /// Per-layer batched output scratch.
+    bscratch_out: Vec<Vec<f64>>,
     rng: Pcg64,
 }
 
@@ -136,6 +140,8 @@ impl AnalogMlp {
             engines.iter().map(|e| vec![0.0; e.rows()]).collect();
         let scratch_out: Vec<Vec<f64>> =
             engines.iter().map(|e| vec![0.0; e.cols()]).collect();
+        let bscratch_in = vec![Vec::new(); engines.len()];
+        let bscratch_out = vec![Vec::new(); engines.len()];
         Self {
             engines,
             relu: DiodeRelu::ideal(),
@@ -143,6 +149,8 @@ impl AnalogMlp {
             clamp: Clamp::new(1e3),
             scratch_in,
             scratch_out,
+            bscratch_in,
+            bscratch_out,
             rng,
         }
     }
@@ -204,6 +212,79 @@ impl AnalogMlp {
     pub fn eval(&mut self, u: &[f64]) -> Vec<f64> {
         let mut y = vec![0.0; self.d_out()];
         self.eval_into(u, &mut y);
+        y
+    }
+
+    /// Batched forward pass: `batch` stacked inputs (`us: [batch * d_in]`)
+    /// through the analogue chain with **one multi-vector crossbar read per
+    /// layer** ([`VmmEngine::vmm_batch_into`]) instead of one read per
+    /// trajectory — the GEMM-instead-of-repeated-GEMV amortisation of the
+    /// batched execution engine. The peripheral stages (TIA, diode ReLU,
+    /// clamp) are element-wise and act on the whole batch buffer at once.
+    /// With read noise off the result is bit-identical, per trajectory, to
+    /// [`AnalogMlp::eval_into`].
+    pub fn eval_batch_into(
+        &mut self,
+        us: &[f64],
+        batch: usize,
+        out: &mut [f64],
+    ) {
+        let n_layers = self.engines.len();
+        let d_in = self.d_in();
+        assert_eq!(
+            us.len(),
+            batch * d_in,
+            "eval_batch: us length != batch * d_in"
+        );
+        assert_eq!(
+            out.len(),
+            batch * self.d_out(),
+            "eval_batch: out length != batch * d_out"
+        );
+        for l in 0..n_layers {
+            let rows = self.engines[l].rows();
+            let cols = self.engines[l].cols();
+            let src_dim = rows - 1;
+            let mut bin = std::mem::take(&mut self.bscratch_in[l]);
+            let mut bout = std::mem::take(&mut self.bscratch_out[l]);
+            bin.resize(batch * rows, 0.0);
+            bout.resize(batch * cols, 0.0);
+            // Fill the stacked inputs: previous activation + bias 1 per
+            // trajectory row.
+            for b in 0..batch {
+                let dst = &mut bin[b * rows..(b + 1) * rows];
+                let src: &[f64] = if l == 0 {
+                    &us[b * d_in..(b + 1) * d_in]
+                } else {
+                    &self.bscratch_out[l - 1]
+                        [b * src_dim..(b + 1) * src_dim]
+                };
+                dst[..src_dim].copy_from_slice(src);
+                dst[src_dim] = 1.0;
+            }
+            // One multi-vector analogue read for the whole batch.
+            self.engines[l].vmm_batch_into(
+                &bin,
+                batch,
+                &mut bout,
+                &mut self.rng,
+            );
+            let is_last = l + 1 == n_layers;
+            self.tia.convert_slice(&mut bout);
+            if !is_last {
+                self.relu.activate_slice(&mut bout);
+            }
+            self.clamp.apply_slice(&mut bout);
+            self.bscratch_in[l] = bin;
+            self.bscratch_out[l] = bout;
+        }
+        out.copy_from_slice(&self.bscratch_out[n_layers - 1]);
+    }
+
+    /// Allocating batched forward pass.
+    pub fn eval_batch(&mut self, us: &[f64], batch: usize) -> Vec<f64> {
+        let mut y = vec![0.0; batch * self.d_out()];
+        self.eval_batch_into(us, batch, &mut y);
         y
     }
 
@@ -314,6 +395,101 @@ impl AnalogNeuralOde {
         }
         out
     }
+
+    /// Batched IVP solve: `batch` trajectories integrated in lockstep from
+    /// the flat `[batch * d_state]` initial states `h0s`, sampling each
+    /// every `dt_out` for `n_points` samples. Returns
+    /// `[batch][n_points][d_state]`.
+    ///
+    /// Every circuit step performs **one shared multi-vector device read**
+    /// ([`AnalogMlp::eval_batch_into`]) feeding `batch` private integrator
+    /// banks — the physical picture of a crossbar serving B concurrent
+    /// twins, and the core amortisation of the batched execution engine.
+    /// `drive(b, t, out)` writes trajectory `b`'s stimulus (`d_drive`
+    /// values; `out` is empty for autonomous systems). The integrator banks
+    /// are clones of this solver's integrators, so circuit parameters
+    /// (tau, leak, rails) match the serial path exactly: with read noise
+    /// off, each trajectory reproduces [`AnalogNeuralOde::solve`]
+    /// bit-for-bit. The serial integrator state is left untouched.
+    pub fn solve_batch(
+        &mut self,
+        h0s: &[f64],
+        batch: usize,
+        drive: &mut dyn FnMut(usize, f64, &mut [f64]),
+        dt_out: f64,
+        n_points: usize,
+    ) -> Vec<Vec<Vec<f64>>> {
+        let d_state = self.integrators.len();
+        let d_in = self.mlp.d_in();
+        assert_eq!(
+            h0s.len(),
+            batch * d_state,
+            "solve_batch: h0s length {} != batch {} * state dim {}",
+            h0s.len(),
+            batch,
+            d_state
+        );
+        // Per-trajectory integrator banks, cloned so circuit parameters
+        // (and therefore the update rule) match the serial solver.
+        let mut integrators: Vec<IvpIntegrator> = (0..batch)
+            .flat_map(|_| self.integrators.iter().cloned())
+            .collect();
+        for (integ, &v0) in integrators.iter_mut().zip(h0s) {
+            integ.stop();
+            integ.set_initial(v0);
+            integ.start_integration();
+        }
+        let substeps =
+            ((dt_out / self.dt_circuit).round() as usize).max(1);
+        let dt = dt_out / substeps as f64;
+        let mut us = vec![0.0; batch * d_in];
+        let mut dhs = vec![0.0; batch * d_state];
+        let mut xbuf = vec![0.0; self.d_drive];
+        let sample = |integrators: &[IvpIntegrator], b: usize| -> Vec<f64> {
+            integrators[b * d_state..(b + 1) * d_state]
+                .iter()
+                .map(|i| i.v)
+                .collect()
+        };
+        let mut out: Vec<Vec<Vec<f64>>> = (0..batch)
+            .map(|b| {
+                let mut t = Vec::with_capacity(n_points);
+                t.push(sample(&integrators, b));
+                t
+            })
+            .collect();
+        let mut t = 0.0;
+        for _ in 1..n_points {
+            for _ in 0..substeps {
+                // Assemble every trajectory's u = [x_b(t); h_b(t)].
+                for b in 0..batch {
+                    drive(b, t, &mut xbuf);
+                    let u = &mut us[b * d_in..(b + 1) * d_in];
+                    u[..self.d_drive].copy_from_slice(&xbuf);
+                    for (slot, integ) in u[self.d_drive..]
+                        .iter_mut()
+                        .zip(&integrators[b * d_state..(b + 1) * d_state])
+                    {
+                        *slot = integ.v;
+                    }
+                }
+                // One shared analogue read for the whole batch.
+                self.mlp.eval_batch_into(&us, batch, &mut dhs);
+                // Feed every integrator bank.
+                for (integ, &d) in integrators.iter_mut().zip(dhs.iter()) {
+                    integ.step(d, dt);
+                }
+                t += dt;
+            }
+            for (b, traj) in out.iter_mut().enumerate() {
+                traj.push(sample(&integrators, b));
+            }
+        }
+        for i in &mut integrators {
+            i.stop();
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -413,6 +589,92 @@ mod tests {
         let s = crate::util::stats::summary(&samples);
         assert!((s.mean + 1.0).abs() < 0.02, "mean {}", s.mean);
         assert!(s.std > 1e-4, "noise inert");
+    }
+
+    #[test]
+    fn eval_batch_bit_identical_to_serial_noise_free() {
+        let cfg = DeviceConfig {
+            fault_rate: 0.0,
+            pulse_sigma: 0.0,
+            read_noise: 0.0,
+            ..Default::default()
+        };
+        let mut mlp =
+            AnalogMlp::deploy(&linear_decay_layers(), &cfg, AnalogNoise::off(), 5);
+        let hs = [-2.0, -0.5, 0.0, 0.7, 3.0];
+        let ys = mlp.eval_batch(&hs, hs.len());
+        for (b, &h) in hs.iter().enumerate() {
+            let want = mlp.eval(&[h]);
+            assert_eq!(ys[b], want[0], "traj {b}");
+        }
+    }
+
+    #[test]
+    fn eval_batch_noisy_mean_matches_serial() {
+        let cfg = DeviceConfig {
+            fault_rate: 0.0,
+            pulse_sigma: 0.0,
+            ..Default::default()
+        };
+        let mut mlp = AnalogMlp::deploy(
+            &linear_decay_layers(),
+            &cfg,
+            AnalogNoise { read: 0.05, prog: 0.0 },
+            11,
+        );
+        let batch = 4;
+        let us = vec![1.0; batch];
+        let samples: Vec<f64> = (0..1500)
+            .flat_map(|_| mlp.eval_batch(&us, batch))
+            .collect();
+        let s = crate::util::stats::summary(&samples);
+        assert!((s.mean + 1.0).abs() < 0.02, "mean {}", s.mean);
+        assert!(s.std > 1e-4, "batched noise inert");
+    }
+
+    #[test]
+    fn solve_batch_bit_identical_to_serial_solves() {
+        // dh/dt = -h from three different initial conditions: the batched
+        // closed loop must reproduce three serial closed loops exactly.
+        let mlp = AnalogMlp::ideal(&linear_decay_layers(), 2);
+        let mut ode = AnalogNeuralOde::new(mlp, 1, 1e-3);
+        let h0s = [1.0, -0.5, 0.25];
+        let batched = ode.solve_batch(
+            &h0s,
+            3,
+            &mut |_b, _t, _x| {},
+            0.1,
+            11,
+        );
+        for (b, &h0) in h0s.iter().enumerate() {
+            let serial = ode.solve(&[h0], &mut |_t| vec![], 0.1, 11);
+            assert_eq!(batched[b], serial, "traj {b}");
+        }
+    }
+
+    #[test]
+    fn solve_batch_driven_matches_serial_driven() {
+        // f([x; h]) = x - h with per-trajectory step inputs.
+        let w1 = Mat::from_vec(2, 2, vec![1.0, -1.0, -1.0, 1.0]);
+        let b1 = vec![0.0, 0.0];
+        let w2 = Mat::from_vec(2, 1, vec![1.0, -1.0]);
+        let b2 = vec![0.0];
+        let layers =
+            vec![LayerWeights::new(&w1, &b1), LayerWeights::new(&w2, &b2)];
+        let mlp = AnalogMlp::ideal(&layers, 3);
+        let mut ode = AnalogNeuralOde::new(mlp, 1, 1e-3);
+        let drives = [0.5, 1.0];
+        let batched = ode.solve_batch(
+            &[0.0, 0.0],
+            2,
+            &mut |b, _t, x| x[0] = drives[b],
+            0.2,
+            6,
+        );
+        for (b, &amp) in drives.iter().enumerate() {
+            let serial = ode.solve(&[0.0], &mut |_t| vec![amp], 0.2, 6);
+            assert_eq!(batched[b], serial, "traj {b}");
+        }
     }
 
     #[test]

@@ -2,10 +2,13 @@
 //!
 //! Twin state (deployed arrays, compiled executables, integrator charge) is
 //! expensive to touch cold; grouping requests for the same route before
-//! dispatch lets a worker run them back-to-back on one warm instance (and,
-//! for PJRT step artifacts, in one batched execution). The policy is the
-//! standard serving trade-off: dispatch when `max_batch` is reached OR the
-//! oldest job has waited `window`.
+//! dispatch lets a worker execute them as **one batched rollout** on one
+//! warm instance (`Twin::run_batch`: many trajectories per crossbar read,
+//! GEMM instead of repeated GEMV). The policy is the standard serving
+//! trade-off: dispatch when `max_batch` is reached OR the oldest job has
+//! waited `window`. Requests inside a batch may still disagree on
+//! `n_points`; the twin splits those into compatible sub-batches rather
+//! than padding.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc;

@@ -12,8 +12,11 @@
 //!
 //! * [`router`]       — route-key validation + admission control
 //! * [`batcher`]      — groups same-route requests within a time window up
-//!   to `max_batch` (amortises twin state reuse / batched artifacts)
-//! * [`scheduler`]    — least-loaded dispatch onto the worker pool
+//!   to `max_batch`
+//! * [`scheduler`]    — least-loaded dispatch onto the worker pool; each
+//!   worker executes a whole batch as **one `Twin::run_batch` call**, so
+//!   batched backends roll all coalesced trajectories out together (one
+//!   multi-vector crossbar read / GEMM per step) instead of looping jobs
 //! * [`backpressure`] — global in-flight cap with fail-fast admission
 //! * [`telemetry`]    — counters + latency distributions
 //! * [`service`]      — wires everything; public submit/blocking API

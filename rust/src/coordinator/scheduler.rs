@@ -4,6 +4,14 @@
 //! registry the first time a route lands on it) so no twin state is ever
 //! shared across threads. The scheduler tracks per-worker outstanding-job
 //! counts and sends each batch to the least-loaded worker.
+//!
+//! A worker executes the **whole batch as one [`Twin::run_batch`] call**
+//! — the batched execution engine's dispatch point. Twins with batched
+//! backends roll every trajectory of the batch out together (one
+//! multi-vector crossbar read / GEMM per step); the trait's default keeps
+//! plain twins on the serial per-job path. Failures stay per-job, and the
+//! recorded execution time is the batch execution time — which is exactly
+//! the latency each coalesced client observed.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -13,7 +21,7 @@ use std::time::Instant;
 use crate::coordinator::telemetry::Telemetry;
 use crate::coordinator::{Batch, JobResult};
 use crate::twin::registry::TwinRegistry;
-use crate::twin::Twin;
+use crate::twin::{Twin, TwinRequest, TwinResponse};
 
 /// Handle to the worker pool.
 pub struct Scheduler {
@@ -103,28 +111,59 @@ fn spawn_worker(
             // Worker-private warm twin instances.
             let mut twins: BTreeMap<String, Box<dyn Twin>> = BTreeMap::new();
             while let Ok(batch) = rx.recv() {
+                let n = batch.jobs.len();
                 telemetry.batches.fetch_add(1, Ordering::Relaxed);
-                telemetry
-                    .batched_jobs
-                    .fetch_add(batch.jobs.len() as u64, Ordering::Relaxed);
+                telemetry.batched_jobs.fetch_add(n as u64, Ordering::Relaxed);
                 let route = batch.route.clone();
-                for job in batch.jobs {
-                    let wait_s =
-                        job.enqueued.elapsed().as_secs_f64();
-                    let twin = match twins.entry(route.clone()) {
-                        std::collections::btree_map::Entry::Occupied(e) => {
-                            Ok(e.into_mut())
+                // Per-job queue wait ends when execution starts.
+                let waits: Vec<f64> = batch
+                    .jobs
+                    .iter()
+                    .map(|j| j.enqueued.elapsed().as_secs_f64())
+                    .collect();
+                let twin = match twins.entry(route.clone()) {
+                    std::collections::btree_map::Entry::Occupied(e) => {
+                        Ok(e.into_mut())
+                    }
+                    std::collections::btree_map::Entry::Vacant(e) => {
+                        registry.create(&route).map(|t| e.insert(t))
+                    }
+                };
+                let t0 = Instant::now();
+                let mut results: Vec<anyhow::Result<TwinResponse>> =
+                    match twin {
+                        Ok(t) => {
+                            let reqs: Vec<TwinRequest> = batch
+                                .jobs
+                                .iter()
+                                .map(|j| j.req.clone())
+                                .collect();
+                            t.run_batch(&reqs)
                         }
-                        std::collections::btree_map::Entry::Vacant(e) => {
-                            registry.create(&route).map(|t| e.insert(t))
+                        Err(e) => {
+                            let msg = format!("{e:#}");
+                            (0..n)
+                                .map(|_| {
+                                    Err(anyhow::anyhow!(msg.clone()))
+                                })
+                                .collect()
                         }
                     };
-                    let t0 = Instant::now();
-                    let result = match twin {
-                        Ok(t) => t.run(&job.req),
-                        Err(e) => Err(e),
-                    };
-                    let exec_s = t0.elapsed().as_secs_f64();
+                // Defensive: a twin returning the wrong arity must not
+                // leave submitters hanging.
+                if results.len() != n {
+                    let msg = format!(
+                        "twin '{route}' returned {} results for {n} jobs",
+                        results.len()
+                    );
+                    results = (0..n)
+                        .map(|_| Err(anyhow::anyhow!(msg.clone())))
+                        .collect();
+                }
+                let exec_s = t0.elapsed().as_secs_f64();
+                for ((job, result), wait_s) in
+                    batch.jobs.into_iter().zip(results).zip(waits)
+                {
                     match &result {
                         Ok(_) => {
                             telemetry
@@ -238,6 +277,66 @@ mod tests {
             .result
             .is_ok());
         assert_eq!(tel.snapshot().failed, 1);
+    }
+
+    #[test]
+    fn whole_batch_executes_as_one_run_batch_call() {
+        use std::sync::Mutex;
+
+        struct Probe {
+            sizes: Arc<Mutex<Vec<usize>>>,
+        }
+        impl Twin for Probe {
+            fn name(&self) -> &str {
+                "probe"
+            }
+            fn state_dim(&self) -> usize {
+                1
+            }
+            fn dt(&self) -> f64 {
+                1.0
+            }
+            fn default_h0(&self) -> Vec<f64> {
+                vec![0.0]
+            }
+            fn run(
+                &mut self,
+                req: &TwinRequest,
+            ) -> anyhow::Result<TwinResponse> {
+                Ok(TwinResponse {
+                    trajectory: vec![req.h0.clone(); req.n_points],
+                    backend: "probe".into(),
+                })
+            }
+            fn run_batch(
+                &mut self,
+                reqs: &[TwinRequest],
+            ) -> Vec<anyhow::Result<TwinResponse>> {
+                self.sizes.lock().unwrap().push(reqs.len());
+                reqs.iter().map(|r| self.run(r)).collect()
+            }
+        }
+
+        let sizes: Arc<Mutex<Vec<usize>>> = Arc::default();
+        let mut reg = TwinRegistry::new();
+        let s2 = Arc::clone(&sizes);
+        reg.register("probe", move || {
+            Box::new(Probe { sizes: Arc::clone(&s2) })
+        });
+        let tel = Arc::new(Telemetry::new());
+        let sched = Scheduler::start(1, reg, tel);
+        let (batch, rxs) = batch_of(5, "probe");
+        sched.dispatch(batch).unwrap();
+        for (id, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+            assert_eq!(r.id, id as u64);
+            assert_eq!(
+                r.result.unwrap().trajectory[0],
+                vec![id as f64]
+            );
+        }
+        // One dispatch = one run_batch call covering all five jobs.
+        assert_eq!(*sizes.lock().unwrap(), vec![5]);
     }
 
     #[test]

@@ -1,4 +1,10 @@
 //! The assembled coordinator: router -> batcher -> scheduler -> workers.
+//!
+//! The request path is batched end to end: the batcher coalesces same-route
+//! jobs, the dispatcher hands each `Batch` to the least-loaded worker, and
+//! the worker executes it as a single `Twin::run_batch` call — so analogue
+//! twins amortise device reads across every coalesced trajectory and
+//! digital twins run one GEMM per layer per step for the whole batch.
 
 use std::sync::{mpsc, Arc};
 use std::time::Duration;
@@ -189,6 +195,62 @@ mod tests {
             .call("counter", TwinRequest::autonomous(vec![], 1))
             .unwrap();
         assert_eq!(resp.trajectory[0][0], 5.0);
+    }
+
+    #[test]
+    fn every_job_flows_through_run_batch() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+
+        struct BatchProbe {
+            calls: Arc<AtomicU64>,
+        }
+        impl Twin for BatchProbe {
+            fn name(&self) -> &str {
+                "probe"
+            }
+            fn state_dim(&self) -> usize {
+                1
+            }
+            fn dt(&self) -> f64 {
+                1.0
+            }
+            fn default_h0(&self) -> Vec<f64> {
+                vec![0.0]
+            }
+            fn run(
+                &mut self,
+                req: &TwinRequest,
+            ) -> Result<TwinResponse> {
+                Ok(TwinResponse {
+                    trajectory: vec![vec![0.0]; req.n_points],
+                    backend: "probe".into(),
+                })
+            }
+            fn run_batch(
+                &mut self,
+                reqs: &[TwinRequest],
+            ) -> Vec<Result<TwinResponse>> {
+                self.calls.fetch_add(1, Ordering::Relaxed);
+                reqs.iter().map(|r| self.run(r)).collect()
+            }
+        }
+
+        let calls: Arc<AtomicU64> = Arc::default();
+        let mut reg = TwinRegistry::new();
+        let c2 = Arc::clone(&calls);
+        reg.register("probe", move || {
+            Box::new(BatchProbe { calls: Arc::clone(&c2) })
+        });
+        let coord = Coordinator::start(reg, &cfg());
+        for _ in 0..3 {
+            coord
+                .call("probe", TwinRequest::autonomous(vec![], 2))
+                .unwrap();
+        }
+        // Every dispatched batch (size >= 1) went through run_batch.
+        let n = calls.load(std::sync::atomic::Ordering::Relaxed);
+        assert!((1..=3).contains(&n), "run_batch calls: {n}");
+        assert_eq!(coord.stats().completed, 3);
     }
 
     #[test]

@@ -44,6 +44,10 @@ pub struct VmmEngine {
     pub mode: NoiseMode,
     /// Scratch for v^2 (hot path, no allocation).
     v2: Vec<f64>,
+    /// Batched scratch: stacked v^2 rows (grown on first batched call).
+    v2b: Vec<f64>,
+    /// Batched scratch: stacked per-output variances.
+    varb: Vec<f64>,
 }
 
 impl VmmEngine {
@@ -67,7 +71,15 @@ impl VmmEngine {
             a * a + b * b
         });
         let v2 = vec![0.0; gp.rows];
-        Self { w_eff, var_kernel, read_noise, mode, v2 }
+        Self {
+            w_eff,
+            var_kernel,
+            read_noise,
+            mode,
+            v2,
+            v2b: Vec::new(),
+            varb: Vec::new(),
+        }
     }
 
     /// Build from a tiled deployment (layers larger than one 32x32 array).
@@ -79,7 +91,15 @@ impl VmmEngine {
         let w_eff = tiled.effective_weights();
         let var_kernel = tiled.variance_kernel();
         let v2 = vec![0.0; w_eff.rows];
-        Self { w_eff, var_kernel, read_noise, mode, v2 }
+        Self {
+            w_eff,
+            var_kernel,
+            read_noise,
+            mode,
+            v2,
+            v2b: Vec::new(),
+            varb: Vec::new(),
+        }
     }
 
     /// Build an *ideal* engine straight from logical weights (no hardware
@@ -93,6 +113,8 @@ impl VmmEngine {
             read_noise: NoiseSource::off(),
             mode: NoiseMode::Off,
             v2,
+            v2b: Vec::new(),
+            varb: Vec::new(),
         }
     }
 
@@ -158,6 +180,90 @@ impl VmmEngine {
         let mut y = vec![0.0; self.cols()];
         self.vmm_into(v, &mut y, rng);
         y
+    }
+
+    /// Batched multi-vector VMM: `ys[b] = vs[b]^T W + noise` for `batch`
+    /// row-major stacked input vectors (`vs: [batch * rows]`,
+    /// `ys: [batch * cols]`).
+    ///
+    /// This is the crossbar's multi-read amortisation: one GEMM over the
+    /// cached effective weights (the matrix is traversed once per call, not
+    /// once per trajectory), and in [`NoiseMode::Fast`] a second GEMM over
+    /// the variance kernel replaces the per-output strided column walks of
+    /// the serial path — each trajectory still receives its own independent
+    /// moment-matched per-output noise draw, so per-row distributions are
+    /// identical to `batch` serial reads. [`NoiseMode::PerCell`] remains
+    /// the per-trajectory reference and falls back to [`VmmEngine::vmm_into`]
+    /// per row. With [`NoiseMode::Off`] the batched output is bit-identical
+    /// to `batch` serial calls.
+    pub fn vmm_batch_into(
+        &mut self,
+        vs: &[f64],
+        batch: usize,
+        ys: &mut [f64],
+        rng: &mut Pcg64,
+    ) {
+        let rows = self.rows();
+        let cols = self.cols();
+        assert_eq!(
+            vs.len(),
+            batch * rows,
+            "vmm_batch: vs length != batch * rows"
+        );
+        assert_eq!(
+            ys.len(),
+            batch * cols,
+            "vmm_batch: ys length != batch * cols"
+        );
+        match self.mode {
+            NoiseMode::Off => {
+                self.w_eff.vecmat_batch_into(vs, batch, ys);
+            }
+            NoiseMode::Fast => {
+                self.w_eff.vecmat_batch_into(vs, batch, ys);
+                if self.read_noise.is_off() {
+                    return;
+                }
+                self.v2b.resize(batch * rows, 0.0);
+                for (dst, &src) in self.v2b.iter_mut().zip(vs) {
+                    *dst = src * src;
+                }
+                self.varb.resize(batch * cols, 0.0);
+                // var[b][j] = (v_b^2)^T K_j as one contiguous GEMM, then
+                // one normal per (trajectory, output).
+                self.var_kernel.vecmat_batch_into(
+                    &self.v2b,
+                    batch,
+                    &mut self.varb,
+                );
+                let sigma = self.read_noise.sigma;
+                for (yj, &var) in ys.iter_mut().zip(&self.varb) {
+                    *yj += sigma * var.sqrt() * rng.normal();
+                }
+            }
+            NoiseMode::PerCell => {
+                // Reference path: each trajectory re-draws every cell.
+                for b in 0..batch {
+                    let (v, y) = (
+                        &vs[b * rows..(b + 1) * rows],
+                        &mut ys[b * cols..(b + 1) * cols],
+                    );
+                    self.vmm_into(v, y, rng);
+                }
+            }
+        }
+    }
+
+    /// Allocating convenience wrapper for [`VmmEngine::vmm_batch_into`].
+    pub fn vmm_batch(
+        &mut self,
+        vs: &[f64],
+        batch: usize,
+        rng: &mut Pcg64,
+    ) -> Vec<f64> {
+        let mut ys = vec![0.0; batch * self.cols()];
+        self.vmm_batch_into(vs, batch, &mut ys, rng);
+        ys
     }
 }
 
@@ -237,6 +343,80 @@ mod tests {
         let mut y = vec![9.0; 3];
         eng.vmm_into(&[2.0, 3.0], &mut y, &mut Pcg64::seeded(1));
         assert_eq!(y, vec![2.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn batch_off_bit_identical_to_serial() {
+        // The batched execution engine's correctness contract: with noise
+        // off, vmm_batch_into equals B independent serial reads exactly.
+        let (arr, _) = deployed(7, 0.0);
+        let mut eng = VmmEngine::new(&arr, NoiseSource::off(), NoiseMode::Off);
+        let batch = 5;
+        let mut vs = vec![0.0; batch * 8];
+        for (k, v) in vs.iter_mut().enumerate() {
+            *v = if k % 7 == 3 { 0.0 } else { (k as f64 * 0.21).cos() * 0.3 };
+        }
+        let mut rng = Pcg64::seeded(9);
+        let ys = eng.vmm_batch(&vs, batch, &mut rng);
+        for b in 0..batch {
+            let want = eng.vmm(&vs[b * 8..(b + 1) * 8], &mut rng);
+            assert_eq!(&ys[b * 6..(b + 1) * 6], &want[..], "traj {b}");
+        }
+    }
+
+    #[test]
+    fn batch_fast_noise_matches_serial_moments() {
+        // Per-trajectory noise of the batched fast path must be
+        // distribution-identical to the serial fast path.
+        let (arr, noise) = deployed(11, 0.05);
+        let mut eng = VmmEngine::new(&arr, noise, NoiseMode::Fast);
+        let v = [0.2, -0.1, 0.3, 0.15, -0.25, 0.05, 0.1, -0.3];
+        let batch = 4;
+        let vs: Vec<f64> = (0..batch).flat_map(|_| v).collect();
+        let n = 3000;
+        let col = 1;
+        let mut rng = Pcg64::seeded(12);
+        let serial: Vec<f64> =
+            (0..n).map(|_| eng.vmm(&v, &mut rng)[col]).collect();
+        // Trajectory 2 of the batch (all trajectories share the input).
+        let batched: Vec<f64> = (0..n)
+            .map(|_| eng.vmm_batch(&vs, batch, &mut rng)[2 * 6 + col])
+            .collect();
+        let ss = stats::summary(&serial);
+        let sb = stats::summary(&batched);
+        assert!(
+            (ss.mean - sb.mean).abs()
+                < 3.0 * (ss.std + sb.std) / (n as f64).sqrt() + 1e-9,
+            "means differ: {} vs {}",
+            ss.mean,
+            sb.mean
+        );
+        let ratio = sb.std / ss.std;
+        assert!((ratio - 1.0).abs() < 0.1, "std ratio {ratio}");
+    }
+
+    #[test]
+    fn batch_percell_reference_runs_per_trajectory() {
+        let (arr, noise) = deployed(13, 0.03);
+        let mut eng = VmmEngine::new(&arr, noise, NoiseMode::PerCell);
+        let batch = 3;
+        let vs: Vec<f64> = (0..batch * 8).map(|k| (k as f64) * 0.01).collect();
+        // Same RNG stream, same call order: batched PerCell is defined as
+        // the serial per-trajectory loop, so outputs match exactly.
+        let got = eng.vmm_batch(&vs, batch, &mut Pcg64::seeded(5));
+        let mut rng = Pcg64::seeded(5);
+        for b in 0..batch {
+            let want = eng.vmm(&vs[b * 8..(b + 1) * 8], &mut rng);
+            assert_eq!(&got[b * 6..(b + 1) * 6], &want[..], "traj {b}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "batch * rows")]
+    fn batch_shape_validated() {
+        let mut eng = VmmEngine::ideal(Mat::zeros(2, 2));
+        let mut ys = vec![0.0; 4];
+        eng.vmm_batch_into(&[0.0; 3], 2, &mut ys, &mut Pcg64::seeded(1));
     }
 
     #[test]

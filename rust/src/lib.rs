@@ -18,10 +18,36 @@
 //!   the crossbar VMM and the fused RK4 step.
 //!
 //! The [`runtime`] module loads the AOT artifacts via PJRT (the `xla`
-//! crate) — this is the *digital* execution backend the paper benchmarks
-//! against; the [`analog`] + [`crossbar`] + [`device`] stack is the
-//! *analogue* backend (the paper's contribution). [`twin`] exposes both
-//! behind one trait and [`coordinator`] serves them.
+//! crate, behind the non-default `pjrt` cargo feature) — this is the
+//! *digital* execution backend the paper benchmarks against; the
+//! [`analog`] + [`crossbar`] + [`device`] stack is the *analogue* backend
+//! (the paper's contribution). [`twin`] exposes both behind one trait and
+//! [`coordinator`] serves them.
+//!
+//! ## The batched request path
+//!
+//! Serving is batched end to end. The coordinator's dynamic batcher
+//! coalesces same-route jobs; the scheduler hands each batch to a worker,
+//! which executes it as **one `twin::Twin::run_batch` call** (requests with
+//! differing `n_points` split into compatible sub-batches — never padded).
+//! Underneath, the whole stack rolls B trajectories out in lockstep over a
+//! flat row-major `[b * d]` state:
+//!
+//! * [`ode::batch::BatchVectorField`] is the batched field abstraction
+//!   (serial [`ode::VectorField`]s auto-lift at B = 1); every solver has a
+//!   `solve_batch` built on it;
+//! * the digital models ([`models::mlp::Mlp`], resnet, rnn/gru/lstm) run
+//!   one GEMM per layer per step for the whole batch;
+//! * the analogue solver performs one **multi-vector crossbar read** per
+//!   layer per circuit step ([`crossbar::vmm::VmmEngine::vmm_batch_into`]):
+//!   one GEMM over the cached weights plus moment-matched per-row read
+//!   noise, feeding B private integrator banks.
+//!
+//! Amortising weight traversal, variance computation, RNG and per-step
+//! allocation across the batch is the single biggest throughput lever in
+//! the system (`cargo bench --bench batch_throughput`); with noise off the
+//! batched trajectories are bit-identical to serial runs — a contract
+//! enforced by `rust/tests/batched.rs`.
 //!
 //! Python never runs on the request path: after `make artifacts` the Rust
 //! binary is self-contained.

@@ -2,7 +2,9 @@
 //! `compile.train.rnn_cell` exactly).
 
 use crate::models::loader::RnnWeights;
-use crate::models::rnn::{gates_into, head, Recurrent};
+use crate::models::rnn::{
+    gates_batch_into, gates_into, head, head_batch_into, Recurrent,
+};
 
 fn sigmoid(x: f64) -> f64 {
     1.0 / (1.0 + (-x).exp())
@@ -72,6 +74,75 @@ impl Recurrent for Gru {
         head(&self.w, x, &self.h)
     }
 
+    fn rollout_batch(
+        &mut self,
+        x0s: &[Vec<f64>],
+        n: usize,
+    ) -> Vec<Vec<Vec<f64>>> {
+        let batch = x0s.len();
+        let d = self.w.d_in;
+        for x0 in x0s {
+            assert_eq!(x0.len(), d, "rollout_batch: x0 dim != d_in");
+        }
+        let hn = self.w.hidden;
+        // Local batch state (the serial hidden state stays untouched); the
+        // gate GEMM is shared across the batch, the candidate path below
+        // replicates the serial loops per trajectory bit-for-bit.
+        let mut x: Vec<f64> = x0s.iter().flatten().copied().collect();
+        let mut h = vec![0.0; batch * hn];
+        let mut z = vec![0.0; batch * 3 * hn];
+        let mut y = vec![0.0; batch * d];
+        let mut nx = vec![0.0; hn];
+        let mut rh = vec![0.0; hn];
+        let mut nh = vec![0.0; hn];
+        let mut out: Vec<Vec<Vec<f64>>> = x0s
+            .iter()
+            .map(|x0| {
+                let mut t = Vec::with_capacity(n);
+                t.push(x0.clone());
+                t
+            })
+            .collect();
+        for _ in 1..n {
+            gates_batch_into(&self.w, &x, &h, batch, &mut z);
+            for b in 0..batch {
+                let xb = &x[b * d..(b + 1) * d];
+                let hb = &mut h[b * hn..(b + 1) * hn];
+                let zb = &z[b * 3 * hn..(b + 1) * 3 * hn];
+                for (c, nv) in nx.iter_mut().enumerate() {
+                    let mut acc = 0.0;
+                    for (r, &xv) in xb.iter().enumerate() {
+                        acc += xv * self.w.wx.at(r, 2 * hn + c);
+                    }
+                    *nv = acc;
+                }
+                for i in 0..hn {
+                    let r_gate = sigmoid(zb[hn + i]);
+                    rh[i] = r_gate * hb[i];
+                }
+                for (c, nv) in nh.iter_mut().enumerate() {
+                    let mut acc = 0.0;
+                    for (r, &hv) in rh.iter().enumerate() {
+                        acc += hv * self.w.wh.at(r, 2 * hn + c);
+                    }
+                    *nv = acc;
+                }
+                for i in 0..hn {
+                    let z_gate = sigmoid(zb[i]);
+                    let n_gate =
+                        (nx[i] + nh[i] + self.w.b[2 * hn + i]).tanh();
+                    hb[i] = (1.0 - z_gate) * n_gate + z_gate * hb[i];
+                }
+            }
+            head_batch_into(&self.w, &x, &h, batch, &mut y);
+            x.copy_from_slice(&y);
+            for (b, traj) in out.iter_mut().enumerate() {
+                traj.push(x[b * d..(b + 1) * d].to_vec());
+            }
+        }
+        out
+    }
+
     fn d_in(&self) -> usize {
         self.w.d_in
     }
@@ -134,5 +205,20 @@ mod tests {
     #[should_panic(expected = "3 gate blocks")]
     fn wrong_gate_count_panics() {
         let _ = Gru::new(toy_weights(2, 4, 1));
+    }
+
+    #[test]
+    fn rollout_batch_bit_identical_to_serial() {
+        let mut m = Gru::new(toy_weights(3, 5, 3));
+        let x0s = vec![
+            vec![0.1, 0.2, 0.3],
+            vec![-1.0, 0.5, 0.0],
+            vec![0.7, -0.2, 0.4],
+        ];
+        let batched = m.rollout_batch(&x0s, 10);
+        for (b, x0) in x0s.iter().enumerate() {
+            let serial = m.rollout(x0, 10);
+            assert_eq!(batched[b], serial, "traj {b}");
+        }
     }
 }

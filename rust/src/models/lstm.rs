@@ -2,7 +2,9 @@
 //! `compile.train.rnn_cell` exactly).
 
 use crate::models::loader::RnnWeights;
-use crate::models::rnn::{gates_into, head, Recurrent};
+use crate::models::rnn::{
+    gates_batch_into, gates_into, head, head_batch_into, Recurrent,
+};
 
 fn sigmoid(x: f64) -> f64 {
     1.0 / (1.0 + (-x).exp())
@@ -49,6 +51,55 @@ impl Recurrent for Lstm {
             self.h[k] = o * self.c[k].tanh();
         }
         head(&self.w, x, &self.h)
+    }
+
+    fn rollout_batch(
+        &mut self,
+        x0s: &[Vec<f64>],
+        n: usize,
+    ) -> Vec<Vec<Vec<f64>>> {
+        let batch = x0s.len();
+        let d = self.w.d_in;
+        for x0 in x0s {
+            assert_eq!(x0.len(), d, "rollout_batch: x0 dim != d_in");
+        }
+        let hn = self.w.hidden;
+        // Local batch state (serial h/c untouched); one gate GEMM per step
+        // shared across the batch, element-wise gate math per trajectory.
+        let mut x: Vec<f64> = x0s.iter().flatten().copied().collect();
+        let mut h = vec![0.0; batch * hn];
+        let mut c = vec![0.0; batch * hn];
+        let mut z = vec![0.0; batch * 4 * hn];
+        let mut y = vec![0.0; batch * d];
+        let mut out: Vec<Vec<Vec<f64>>> = x0s
+            .iter()
+            .map(|x0| {
+                let mut t = Vec::with_capacity(n);
+                t.push(x0.clone());
+                t
+            })
+            .collect();
+        for _ in 1..n {
+            gates_batch_into(&self.w, &x, &h, batch, &mut z);
+            for b in 0..batch {
+                let zb = &z[b * 4 * hn..(b + 1) * 4 * hn];
+                for k in 0..hn {
+                    let i = sigmoid(zb[k]);
+                    let f = sigmoid(zb[hn + k]);
+                    let g = zb[2 * hn + k].tanh();
+                    let o = sigmoid(zb[3 * hn + k]);
+                    let ck = &mut c[b * hn + k];
+                    *ck = f * *ck + i * g;
+                    h[b * hn + k] = o * ck.tanh();
+                }
+            }
+            head_batch_into(&self.w, &x, &h, batch, &mut y);
+            x.copy_from_slice(&y);
+            for (b, traj) in out.iter_mut().enumerate() {
+                traj.push(x[b * d..(b + 1) * d].to_vec());
+            }
+        }
+        out
     }
 
     fn d_in(&self) -> usize {
@@ -120,5 +171,20 @@ mod tests {
     #[should_panic(expected = "4 gate blocks")]
     fn wrong_gate_count_panics() {
         let _ = Lstm::new(toy_weights(2, 4, 3));
+    }
+
+    #[test]
+    fn rollout_batch_bit_identical_to_serial() {
+        let mut m = Lstm::new(toy_weights(3, 4, 4));
+        let x0s = vec![
+            vec![0.1, 0.2, 0.3],
+            vec![1.0, -1.0, 0.5],
+            vec![-0.3, 0.0, 0.8],
+        ];
+        let batched = m.rollout_batch(&x0s, 9);
+        for (b, x0) in x0s.iter().enumerate() {
+            let serial = m.rollout(x0, 9);
+            assert_eq!(batched[b], serial, "traj {b}");
+        }
     }
 }

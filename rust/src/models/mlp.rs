@@ -1,8 +1,14 @@
 //! Plain MLP inference (ReLU hidden layers, linear head) — the digital
 //! realisation of the neural-ODE vector field and of the recurrent-ResNet
 //! transition. Matches `compile.kernels.ref.mlp_field` exactly.
+//!
+//! [`Mlp::forward_batch_into`] runs B stacked inputs through the net with
+//! one GEMM per layer ([`Mat::vecmat_batch_into`]); per trajectory it is
+//! bit-identical to [`Mlp::forward_into`], which is what lets the batched
+//! request path reproduce serial rollouts exactly.
 
 use crate::models::loader::MlpWeights;
+use crate::ode::batch::BatchVectorField;
 use crate::ode::func::VectorField;
 use crate::util::tensor::Mat;
 
@@ -12,13 +18,17 @@ pub struct Mlp {
     layers: Vec<(Mat, Vec<f64>)>,
     /// Per-layer activation scratch.
     acts: Vec<Vec<f64>>,
+    /// Per-layer batched activation scratch (grown on first batched call).
+    bacts: Vec<Vec<f64>>,
 }
 
 impl Mlp {
     pub fn new(layers: Vec<(Mat, Vec<f64>)>) -> Self {
         assert!(!layers.is_empty());
-        let acts = layers.iter().map(|(w, _)| vec![0.0; w.cols]).collect();
-        Self { layers, acts }
+        let acts: Vec<Vec<f64>> =
+            layers.iter().map(|(w, _)| vec![0.0; w.cols]).collect();
+        let bacts = vec![Vec::new(); layers.len()];
+        Self { layers, acts, bacts }
     }
 
     pub fn from_weights(w: &MlpWeights) -> Self {
@@ -74,6 +84,60 @@ impl Mlp {
         self.forward_into(u, &mut out);
         out
     }
+
+    /// Batched forward pass: `us` holds `batch` row-major stacked inputs
+    /// (`[batch * d_in]`), `out` receives `[batch * d_out]`. One GEMM per
+    /// layer; per trajectory bit-identical to [`Mlp::forward_into`].
+    pub fn forward_batch_into(
+        &mut self,
+        us: &[f64],
+        batch: usize,
+        out: &mut [f64],
+    ) {
+        let n_layers = self.layers.len();
+        assert_eq!(
+            us.len(),
+            batch * self.d_in(),
+            "forward_batch: us length != batch * d_in"
+        );
+        assert_eq!(
+            out.len(),
+            batch * self.d_out(),
+            "forward_batch: out length != batch * d_out"
+        );
+        for l in 0..n_layers {
+            let mut act = std::mem::take(&mut self.bacts[l]);
+            let (w, b) = &self.layers[l];
+            act.resize(batch * w.cols, 0.0);
+            {
+                let src: &[f64] =
+                    if l == 0 { us } else { &self.bacts[l - 1] };
+                w.vecmat_batch_into(src, batch, &mut act);
+            }
+            for bi in 0..batch {
+                let row = &mut act[bi * w.cols..(bi + 1) * w.cols];
+                for (d, &bias) in row.iter_mut().zip(b) {
+                    *d += bias;
+                }
+            }
+            if l + 1 < n_layers {
+                for d in act.iter_mut() {
+                    if *d < 0.0 {
+                        *d = 0.0;
+                    }
+                }
+            }
+            self.bacts[l] = act;
+        }
+        out.copy_from_slice(&self.bacts[n_layers - 1]);
+    }
+
+    /// Allocating batched forward pass.
+    pub fn forward_batch(&mut self, us: &[f64], batch: usize) -> Vec<f64> {
+        let mut out = vec![0.0; batch * self.d_out()];
+        self.forward_batch_into(us, batch, &mut out);
+        out
+    }
 }
 
 /// An autonomous neural-ODE vector field dh/dt = mlp(h).
@@ -116,6 +180,70 @@ impl<F: FnMut(f64) -> f64> VectorField for DrivenMlpField<F> {
         self.u[0] = (self.drive)(t);
         self.u[1..].copy_from_slice(x);
         self.mlp.forward_into(&self.u, out);
+    }
+}
+
+/// A batch of B autonomous neural-ODE trajectories sharing one MLP:
+/// dh_b/dt = mlp(h_b), evaluated with one GEMM per layer.
+pub struct BatchMlpField {
+    pub mlp: Mlp,
+    pub batch: usize,
+}
+
+impl BatchVectorField for BatchMlpField {
+    fn dim(&self) -> usize {
+        self.mlp.d_out()
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn eval_batch_into(&mut self, _t: f64, xs: &[f64], out: &mut [f64]) {
+        self.mlp.forward_batch_into(xs, self.batch, out);
+    }
+}
+
+/// A batch of B driven neural-ODE trajectories dh_b/dt = mlp([x_b(t); h_b])
+/// with a per-trajectory stimulus closure `drive(b, t)` (single drive line,
+/// like [`DrivenMlpField`]). The shared MLP still runs one GEMM per layer;
+/// only the stimulus differs per trajectory.
+pub struct BatchDrivenMlpField<F: FnMut(usize, f64) -> f64> {
+    pub mlp: Mlp,
+    pub batch: usize,
+    pub drive: F,
+    /// Scratch: stacked [x_b; h_b] rows.
+    u: Vec<f64>,
+}
+
+impl<F: FnMut(usize, f64) -> f64> BatchDrivenMlpField<F> {
+    pub fn new(mlp: Mlp, batch: usize, drive: F) -> Self {
+        let u = vec![0.0; batch * mlp.d_in()];
+        Self { mlp, batch, drive, u }
+    }
+}
+
+impl<F: FnMut(usize, f64) -> f64> BatchVectorField
+    for BatchDrivenMlpField<F>
+{
+    fn dim(&self) -> usize {
+        self.mlp.d_out()
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn eval_batch_into(&mut self, t: f64, xs: &[f64], out: &mut [f64]) {
+        let d_in = self.mlp.d_in();
+        let d_s = d_in - 1;
+        debug_assert_eq!(xs.len(), self.batch * d_s);
+        for b in 0..self.batch {
+            let row = &mut self.u[b * d_in..(b + 1) * d_in];
+            row[0] = (self.drive)(b, t);
+            row[1..].copy_from_slice(&xs[b * d_s..(b + 1) * d_s]);
+        }
+        self.mlp.forward_batch_into(&self.u, self.batch, out);
     }
 }
 
@@ -177,6 +305,46 @@ mod tests {
         let mut out = [0.0];
         df.eval_into(2.0, &[0.5], &mut out);
         assert!((out[0] - 1.5).abs() < 1e-12); // x=2 (drive), h=0.5
+    }
+
+    #[test]
+    fn forward_batch_bit_identical_to_serial() {
+        let mut m = toy();
+        let inputs = [[1.0, 0.5], [-2.0, 3.0], [0.0, 0.0], [0.3, -0.7]];
+        let us: Vec<f64> = inputs.iter().flatten().copied().collect();
+        let ys = m.forward_batch(&us, inputs.len());
+        for (b, u) in inputs.iter().enumerate() {
+            let want = m.forward(u);
+            assert_eq!(&ys[b..b + 1], &want[..], "traj {b}");
+        }
+    }
+
+    #[test]
+    fn forward_batch_reuses_scratch_without_stale_state() {
+        let mut m = toy();
+        // Large batch first, then a smaller one: no stale tail.
+        let big: Vec<f64> = (0..8).map(|k| k as f64 * 0.1).collect();
+        let _ = m.forward_batch(&big, 4);
+        let small = m.forward_batch(&[1.0, 0.0], 1);
+        assert!((small[0] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_driven_field_matches_serial_driven_field() {
+        use crate::ode::batch::BatchVectorField;
+        let mut bf = BatchDrivenMlpField::new(toy(), 2, |b, t| {
+            (b as f64 + 1.0) * t
+        });
+        let mut out = [0.0; 2];
+        bf.eval_batch_into(2.0, &[0.5, -0.25], &mut out);
+        let mut d1 = DrivenMlpField::new(toy(), |t| t);
+        let mut d2 = DrivenMlpField::new(toy(), |t| 2.0 * t);
+        let mut o1 = [0.0];
+        let mut o2 = [0.0];
+        d1.eval_into(2.0, &[0.5], &mut o1);
+        d2.eval_into(2.0, &[-0.25], &mut o2);
+        assert_eq!(out[0], o1[0]);
+        assert_eq!(out[1], o2[0]);
     }
 
     #[test]

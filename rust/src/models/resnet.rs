@@ -56,6 +56,58 @@ impl RecurrentResNet {
         }
         out
     }
+
+    /// Batched rollout of `batch` trajectories in lockstep: `h0s` is the
+    /// flat `[batch * d_state]` initial state, `xs[k]` the flat
+    /// `[batch * d_drive]` stimulus of step k. Each transition runs the
+    /// shared MLP as one GEMM per layer; per trajectory the result is
+    /// bit-identical to [`RecurrentResNet::rollout`]. Returns
+    /// `[batch][n+1][d_state]`.
+    pub fn rollout_batch(
+        &mut self,
+        h0s: &[f64],
+        batch: usize,
+        xs: &[Vec<f64>],
+    ) -> Vec<Vec<Vec<f64>>> {
+        let d_s = self.d_state();
+        let d_x = self.d_drive();
+        let d_in = self.mlp.d_in();
+        assert_eq!(
+            h0s.len(),
+            batch * d_s,
+            "rollout_batch: h0s length != batch * d_state"
+        );
+        let mut h = h0s.to_vec();
+        let mut u = vec![0.0; batch * d_in];
+        let mut dh = vec![0.0; batch * d_s];
+        let mut out: Vec<Vec<Vec<f64>>> = (0..batch)
+            .map(|b| {
+                let mut t = Vec::with_capacity(xs.len() + 1);
+                t.push(h[b * d_s..(b + 1) * d_s].to_vec());
+                t
+            })
+            .collect();
+        for x in xs {
+            assert_eq!(
+                x.len(),
+                batch * d_x,
+                "rollout_batch: stimulus row length != batch * d_drive"
+            );
+            for b in 0..batch {
+                let row = &mut u[b * d_in..(b + 1) * d_in];
+                row[..d_x].copy_from_slice(&x[b * d_x..(b + 1) * d_x]);
+                row[d_x..].copy_from_slice(&h[b * d_s..(b + 1) * d_s]);
+            }
+            self.mlp.forward_batch_into(&u, batch, &mut dh);
+            for (hv, &d) in h.iter_mut().zip(&dh) {
+                *hv += d;
+            }
+            for (b, traj) in out.iter_mut().enumerate() {
+                traj.push(h[b * d_s..(b + 1) * d_s].to_vec());
+            }
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -112,5 +164,24 @@ mod tests {
         let m = toy();
         assert_eq!(m.d_state(), 1);
         assert_eq!(m.d_drive(), 1);
+    }
+
+    #[test]
+    fn rollout_batch_bit_identical_to_serial() {
+        let mut m = toy();
+        let h0s = [0.0, 1.0, -0.5];
+        // Per-step stimulus rows: traj b gets drive (b+1)*0.2*k.
+        let xs: Vec<Vec<f64>> = (0..6)
+            .map(|k| {
+                (0..3).map(|b| (b as f64 + 1.0) * 0.2 * k as f64).collect()
+            })
+            .collect();
+        let batched = m.rollout_batch(&h0s, 3, &xs);
+        for b in 0..3 {
+            let xs_b: Vec<Vec<f64>> =
+                xs.iter().map(|row| vec![row[b]]).collect();
+            let serial = m.rollout(&h0s[b..b + 1], &xs_b);
+            assert_eq!(batched[b], serial, "traj {b}");
+        }
     }
 }

@@ -1,0 +1,179 @@
+//! Batched vector fields: B independent trajectories advanced in lockstep.
+//!
+//! The batched execution engine flattens B states of dimension d into one
+//! row-major `[b * d]` vector; a [`BatchVectorField`] evaluates all B
+//! derivatives in one call (one GEMM through the models instead of B
+//! gemv's). Because every fixed-step solver update is element-wise, a
+//! fixed-step integration of the flat state is **bit-identical**, per
+//! trajectory, to B independent serial integrations of the same field —
+//! the equivalence tests in `rust/tests/batched.rs` pin this down.
+//!
+//! Two adapters close the loop with the serial world:
+//!
+//! * [`Lifted`] auto-lifts any [`VectorField`] to a `B = 1` batch field, so
+//!   serial fields plug into batched call sites unchanged;
+//! * [`Flattened`] views a batch field as one big serial [`VectorField`] of
+//!   dimension `b * d`, so the existing `euler` / `rk4` / `dopri5` solver
+//!   loops run batched without duplication (their `solve_batch` wrappers
+//!   are built on it).
+
+use crate::ode::func::VectorField;
+
+/// A batch of B independent vector fields dx_b/dt = f(t, x_b), evaluated
+/// together over a flat row-major `[batch * dim]` state.
+///
+/// `eval_batch_into` is `&mut self` for the same reason as
+/// [`VectorField::eval_into`]: implementations carry scratch buffers and
+/// RNG state (noisy analogue reads).
+pub trait BatchVectorField {
+    /// Per-trajectory state dimension d.
+    fn dim(&self) -> usize;
+
+    /// Number of trajectories B.
+    fn batch(&self) -> usize;
+
+    /// Evaluate all B derivatives: `xs` and `out` are flat `[batch * dim]`.
+    fn eval_batch_into(&mut self, t: f64, xs: &[f64], out: &mut [f64]);
+}
+
+/// Auto-lift of a serial [`VectorField`] to a batch of one.
+pub struct Lifted<F: VectorField> {
+    pub inner: F,
+}
+
+impl<F: VectorField> Lifted<F> {
+    pub fn new(inner: F) -> Self {
+        Self { inner }
+    }
+}
+
+impl<F: VectorField> BatchVectorField for Lifted<F> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn batch(&self) -> usize {
+        1
+    }
+
+    fn eval_batch_into(&mut self, t: f64, xs: &[f64], out: &mut [f64]) {
+        self.inner.eval_into(t, xs, out)
+    }
+}
+
+/// View a batch field as one serial field of dimension `batch * dim`.
+///
+/// This is what lets the fixed-step solvers integrate batched state with
+/// their existing loops: the flat state *is* a valid serial state, and the
+/// element-wise stage combinations act on each trajectory independently.
+pub struct Flattened<'a> {
+    pub field: &'a mut dyn BatchVectorField,
+}
+
+impl VectorField for Flattened<'_> {
+    fn dim(&self) -> usize {
+        self.field.dim() * self.field.batch()
+    }
+
+    fn eval_into(&mut self, t: f64, x: &[f64], out: &mut [f64]) {
+        self.field.eval_batch_into(t, x, out)
+    }
+}
+
+/// Reassemble flat solver output `[n][batch * dim]` into per-trajectory
+/// trajectories `[batch][n][dim]` (the twin-facing layout).
+pub fn unbatch_trajectories(
+    flat: &[Vec<f64>],
+    batch: usize,
+    dim: usize,
+) -> Vec<Vec<Vec<f64>>> {
+    (0..batch)
+        .map(|b| {
+            flat.iter()
+                .map(|row| {
+                    assert_eq!(
+                        row.len(),
+                        batch * dim,
+                        "unbatch: row length != batch * dim"
+                    );
+                    row[b * dim..(b + 1) * dim].to_vec()
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ode::func::FnField;
+    use crate::ode::rk4;
+
+    #[test]
+    fn lifted_field_is_batch_of_one() {
+        let mut f = Lifted::new(FnField::new(
+            2,
+            |_t, x: &[f64], o: &mut [f64]| {
+                o[0] = x[1];
+                o[1] = -x[0];
+            },
+        ));
+        assert_eq!(f.batch(), 1);
+        assert_eq!(f.dim(), 2);
+        let mut out = [0.0; 2];
+        f.eval_batch_into(0.0, &[1.0, 2.0], &mut out);
+        assert_eq!(out, [2.0, -1.0]);
+    }
+
+    #[test]
+    fn flattened_batch_integrates_each_trajectory_independently() {
+        // Two decoupled decay trajectories in one flat state: the batched
+        // RK4 solution must equal two serial solutions bit-for-bit.
+        struct Decay {
+            batch: usize,
+        }
+        impl BatchVectorField for Decay {
+            fn dim(&self) -> usize {
+                1
+            }
+            fn batch(&self) -> usize {
+                self.batch
+            }
+            fn eval_batch_into(
+                &mut self,
+                _t: f64,
+                xs: &[f64],
+                out: &mut [f64],
+            ) {
+                for (o, &x) in out.iter_mut().zip(xs) {
+                    *o = -x;
+                }
+            }
+        }
+        let mut bf = Decay { batch: 2 };
+        let flat = rk4::solve(
+            &mut Flattened { field: &mut bf },
+            &[1.0, -0.5],
+            0.1,
+            11,
+            1,
+        );
+        for (b, &x0) in [1.0, -0.5].iter().enumerate() {
+            let mut f =
+                FnField::new(1, |_t, x: &[f64], o: &mut [f64]| o[0] = -x[0]);
+            let serial = rk4::solve(&mut f, &[x0], 0.1, 11, 1);
+            for (row, srow) in flat.iter().zip(&serial) {
+                assert_eq!(row[b], srow[0], "traj {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn unbatch_roundtrip() {
+        let flat = vec![vec![1.0, 2.0, 3.0, 4.0], vec![5.0, 6.0, 7.0, 8.0]];
+        let per = unbatch_trajectories(&flat, 2, 2);
+        assert_eq!(per.len(), 2);
+        assert_eq!(per[0], vec![vec![1.0, 2.0], vec![5.0, 6.0]]);
+        assert_eq!(per[1], vec![vec![3.0, 4.0], vec![7.0, 8.0]]);
+    }
+}

@@ -5,6 +5,7 @@
 //! users can trade fixed-grid RK4 for error-controlled integration, and as
 //! an independent accuracy oracle in the test suite.
 
+use crate::ode::batch::{BatchVectorField, Flattened};
 use crate::ode::func::VectorField;
 
 /// Butcher tableau of DOPRI5 (c, a, b5, b4).
@@ -102,8 +103,15 @@ pub fn solve(
     opts: &Options,
 ) -> (Vec<Vec<f64>>, SolveStats) {
     let n = f.dim();
-    assert_eq!(x0.len(), n);
-    assert!(t1 > t0);
+    assert_eq!(
+        x0.len(),
+        n,
+        "dopri5::solve: x0 dim {} does not match field dim {} (the stage \
+         scratch is sized from the field)",
+        x0.len(),
+        n
+    );
+    assert!(t1 > t0, "dopri5::solve: t1 ({t1}) must exceed t0 ({t0})");
     for w in t_out.windows(2) {
         assert!(w[1] >= w[0], "t_out must be non-decreasing");
     }
@@ -211,6 +219,33 @@ pub fn solve(
     (out, stats)
 }
 
+/// Batched adaptive integration over a flat `[batch * dim]` state.
+///
+/// Unlike the fixed-step `solve_batch` wrappers, the step-size controller
+/// here is **joint**: the error norm spans every trajectory, so the whole
+/// batch advances on one accepted-step sequence (the stiffest trajectory
+/// sets the pace). That makes the result *accuracy-equivalent* but not
+/// bit-identical to per-trajectory serial solves — use `rk4::solve_batch`
+/// where exact batched-vs-serial reproduction is required.
+pub fn solve_batch(
+    f: &mut dyn BatchVectorField,
+    x0s: &[f64],
+    t0: f64,
+    t1: f64,
+    t_out: &[f64],
+    opts: &Options,
+) -> (Vec<Vec<f64>>, SolveStats) {
+    assert_eq!(
+        x0s.len(),
+        f.batch() * f.dim(),
+        "dopri5::solve_batch: x0s length {} != batch {} * dim {}",
+        x0s.len(),
+        f.batch(),
+        f.dim()
+    );
+    solve(&mut Flattened { field: f }, x0s, t0, t1, t_out, opts)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -279,6 +314,61 @@ mod tests {
         let want = 1.0 - (10.0f64).cos();
         assert!((ys[0][0] - want).abs() < 1e-4);
         assert!(stats.f_evals < 700, "too many evals {}", stats.f_evals);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match field dim")]
+    fn x0_dim_mismatch_has_clear_message() {
+        let mut f =
+            FnField::new(2, |_t, _x: &[f64], o: &mut [f64]| o.fill(0.0));
+        let _ = solve(&mut f, &[1.0], 0.0, 1.0, &[1.0], &Options::default());
+    }
+
+    #[test]
+    fn batched_decay_is_accuracy_equivalent_to_serial() {
+        use crate::ode::batch::BatchVectorField;
+        struct Decay {
+            batch: usize,
+        }
+        impl BatchVectorField for Decay {
+            fn dim(&self) -> usize {
+                1
+            }
+            fn batch(&self) -> usize {
+                self.batch
+            }
+            fn eval_batch_into(
+                &mut self,
+                _t: f64,
+                xs: &[f64],
+                out: &mut [f64],
+            ) {
+                for (o, &x) in out.iter_mut().zip(xs) {
+                    *o = -x;
+                }
+            }
+        }
+        let t_out: Vec<f64> = (0..=10).map(|k| k as f64 * 0.1).collect();
+        let (ys, stats) = solve_batch(
+            &mut Decay { batch: 3 },
+            &[1.0, 2.0, -0.5],
+            0.0,
+            1.0,
+            &t_out,
+            &Options::default(),
+        );
+        assert!(stats.accepted > 0);
+        for (k, row) in ys.iter().enumerate() {
+            let e = (-(k as f64) * 0.1).exp();
+            for (b, &x0) in [1.0, 2.0, -0.5].iter().enumerate() {
+                assert!(
+                    (row[b] - x0 * e).abs() < 1e-5,
+                    "t={k} traj {b}: {} vs {}",
+                    row[b],
+                    x0 * e
+                );
+            }
+        }
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! quantify the truncation-error gap the paper attributes to discrete-time
 //! digital twins.
 
+use crate::ode::batch::{BatchVectorField, Flattened};
 use crate::ode::func::VectorField;
 
 /// Integrate with fixed-step forward Euler; returns `n_points` samples
@@ -16,7 +17,13 @@ pub fn solve(
 ) -> Vec<Vec<f64>> {
     assert!(substeps >= 1);
     let n = f.dim();
-    assert_eq!(x0.len(), n);
+    assert_eq!(
+        x0.len(),
+        n,
+        "euler::solve: x0 dim {} does not match field dim {}",
+        x0.len(),
+        n
+    );
     let hd = dt / substeps as f64;
     let mut x = x0.to_vec();
     let mut k = vec![0.0; n];
@@ -34,6 +41,28 @@ pub fn solve(
         out.push(x.clone());
     }
     out
+}
+
+/// Batched forward Euler over a flat `[batch * dim]` state; returns
+/// `n_points` flat samples. The Euler update is element-wise, so each
+/// trajectory of the result is bit-identical to a serial [`solve`] of the
+/// same field.
+pub fn solve_batch(
+    f: &mut dyn BatchVectorField,
+    x0s: &[f64],
+    dt: f64,
+    n_points: usize,
+    substeps: usize,
+) -> Vec<Vec<f64>> {
+    assert_eq!(
+        x0s.len(),
+        f.batch() * f.dim(),
+        "euler::solve_batch: x0s length {} != batch {} * dim {}",
+        x0s.len(),
+        f.batch(),
+        f.dim()
+    );
+    solve(&mut Flattened { field: f }, x0s, dt, n_points, substeps)
 }
 
 #[cfg(test)]

@@ -2,14 +2,19 @@
 //! the verification reference for the analogue loop).
 //!
 //! * [`func`]   — the [`func::VectorField`] trait all solvers integrate
+//! * [`batch`]  — [`batch::BatchVectorField`]: B trajectories in one flat
+//!   `[b * d]` state (serial fields auto-lift at B = 1); every solver has a
+//!   `solve_batch` built on it
 //! * [`euler`]  — forward Euler (the recurrent-ResNet-equivalent update)
 //! * [`rk4`]    — classic fourth-order Runge-Kutta (the paper's ODESolve)
 //! * [`dopri5`] — adaptive Dormand-Prince 5(4) with PI step control (the
 //!   black-box solver of Chen et al. 2018; extension feature)
 
+pub mod batch;
 pub mod dopri5;
 pub mod euler;
 pub mod func;
 pub mod rk4;
 
+pub use batch::BatchVectorField;
 pub use func::VectorField;

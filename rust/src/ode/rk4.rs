@@ -5,6 +5,7 @@
 //! digital-twin-on-digital-hardware reference the analogue loop and the
 //! PJRT artifacts are validated against.
 
+use crate::ode::batch::{BatchVectorField, Flattened};
 use crate::ode::func::VectorField;
 
 /// Reusable RK4 stepper.
@@ -27,7 +28,16 @@ impl Rk4 {
         }
     }
 
+    /// Dimension the stepper's scratch was allocated for.
+    pub fn dim(&self) -> usize {
+        self.k1.len()
+    }
+
     /// One in-place RK4 step x <- x + dt * phi(t, x).
+    ///
+    /// Panics with an explicit message when the state or field dimension
+    /// does not match the scratch this stepper was constructed with
+    /// (previously an opaque out-of-bounds index deep in the stage loop).
     pub fn step(
         &mut self,
         f: &mut dyn VectorField,
@@ -36,6 +46,21 @@ impl Rk4 {
         dt: f64,
     ) {
         let n = x.len();
+        assert_eq!(
+            n,
+            self.k1.len(),
+            "Rk4::step: state dim {} does not match stepper scratch dim {} \
+             (construct with Rk4::new(dim) for this state)",
+            n,
+            self.k1.len()
+        );
+        assert_eq!(
+            f.dim(),
+            n,
+            "Rk4::step: field dim {} does not match state dim {}",
+            f.dim(),
+            n
+        );
         f.eval_into(t, x, &mut self.k1);
         for i in 0..n {
             self.tmp[i] = x[i] + 0.5 * dt * self.k1[i];
@@ -70,7 +95,13 @@ pub fn solve(
 ) -> Vec<Vec<f64>> {
     assert!(substeps >= 1);
     let n = f.dim();
-    assert_eq!(x0.len(), n);
+    assert_eq!(
+        x0.len(),
+        n,
+        "rk4::solve: x0 dim {} does not match field dim {}",
+        x0.len(),
+        n
+    );
     let hd = dt / substeps as f64;
     let mut stepper = Rk4::new(n);
     let mut x = x0.to_vec();
@@ -85,6 +116,29 @@ pub fn solve(
         out.push(x.clone());
     }
     out
+}
+
+/// Batched fixed-step RK4 over a flat `[batch * dim]` state; returns
+/// `n_points` flat samples (first is `x0s`). The stage combinations are
+/// element-wise, so each trajectory of the result is bit-identical to a
+/// serial [`solve`] of the same field — this is the digital half of the
+/// batched-vs-serial equivalence contract.
+pub fn solve_batch(
+    f: &mut dyn BatchVectorField,
+    x0s: &[f64],
+    dt: f64,
+    n_points: usize,
+    substeps: usize,
+) -> Vec<Vec<f64>> {
+    assert_eq!(
+        x0s.len(),
+        f.batch() * f.dim(),
+        "rk4::solve_batch: x0s length {} != batch {} * dim {}",
+        x0s.len(),
+        f.batch(),
+        f.dim()
+    );
+    solve(&mut Flattened { field: f }, x0s, dt, n_points, substeps)
 }
 
 #[cfg(test)]
@@ -143,6 +197,77 @@ mod tests {
         let dt = std::f64::consts::FRAC_PI_2;
         let traj = solve(&mut f, &[0.0], dt, 2, 4);
         assert!((traj[1][0] - 1.0).abs() < 1e-4, "x={}", traj[1][0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "stepper scratch dim")]
+    fn step_rejects_wrong_state_dim_with_clear_message() {
+        let mut f =
+            FnField::new(3, |_t, _x: &[f64], o: &mut [f64]| o.fill(0.0));
+        let mut stepper = Rk4::new(2);
+        let mut x = [0.0; 3];
+        stepper.step(&mut f, 0.0, &mut x, 0.1);
+    }
+
+    #[test]
+    #[should_panic(expected = "field dim")]
+    fn step_rejects_field_state_mismatch() {
+        let mut f =
+            FnField::new(3, |_t, _x: &[f64], o: &mut [f64]| o.fill(0.0));
+        let mut stepper = Rk4::new(2);
+        let mut x = [0.0; 2];
+        stepper.step(&mut f, 0.0, &mut x, 0.1);
+    }
+
+    #[test]
+    fn batch_solve_matches_serial_bitwise() {
+        use crate::ode::batch::{BatchVectorField, Lifted};
+        // A 2-trajectory harmonic oscillator batch vs two serial solves.
+        struct Osc {
+            batch: usize,
+        }
+        impl BatchVectorField for Osc {
+            fn dim(&self) -> usize {
+                2
+            }
+            fn batch(&self) -> usize {
+                self.batch
+            }
+            fn eval_batch_into(
+                &mut self,
+                _t: f64,
+                xs: &[f64],
+                out: &mut [f64],
+            ) {
+                for b in 0..self.batch {
+                    out[2 * b] = xs[2 * b + 1];
+                    out[2 * b + 1] = -xs[2 * b];
+                }
+            }
+        }
+        let x0s = [1.0, 0.0, 0.25, -0.5];
+        let flat = solve_batch(&mut Osc { batch: 2 }, &x0s, 0.05, 41, 2);
+        for b in 0..2 {
+            let mut f = FnField::new(2, |_t, x: &[f64], o: &mut [f64]| {
+                o[0] = x[1];
+                o[1] = -x[0];
+            });
+            let serial =
+                solve(&mut f, &x0s[2 * b..2 * b + 2], 0.05, 41, 2);
+            for (row, srow) in flat.iter().zip(&serial) {
+                assert_eq!(&row[2 * b..2 * b + 2], &srow[..], "traj {b}");
+            }
+        }
+        // A lifted serial field is a batch of one.
+        let mut lifted = Lifted::new(FnField::new(
+            1,
+            |_t, x: &[f64], o: &mut [f64]| o[0] = -x[0],
+        ));
+        let a = solve_batch(&mut lifted, &[1.0], 0.1, 6, 1);
+        let mut f =
+            FnField::new(1, |_t, x: &[f64], o: &mut [f64]| o[0] = -x[0]);
+        let b = solve(&mut f, &[1.0], 0.1, 6, 1);
+        assert_eq!(a, b);
     }
 
     #[test]

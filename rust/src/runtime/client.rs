@@ -4,164 +4,251 @@
 //! executables keyed by artifact name, and shaped-tensor execute. Not
 //! `Send` (the client is `Rc`-based) — cross-thread access goes through
 //! [`crate::runtime::service::PjrtService`].
+//!
+//! The `xla` crate needs the xla_extension C++ bundle at build time, so the
+//! real implementation is gated behind the non-default `pjrt` cargo
+//! feature. Without it an API-compatible stub is compiled instead: it still
+//! validates the artifacts directory (so error paths and hints behave the
+//! same) but refuses to start, and every caller — the service thread, the
+//! CLI, the examples — degrades gracefully exactly as when artifacts are
+//! missing.
 
-use std::collections::BTreeMap;
-use std::path::Path;
+#[cfg(feature = "pjrt")]
+compile_error!(
+    "the `pjrt` feature needs the `xla` crate: vendor it, add `xla` to \
+     [dependencies] in rust/Cargo.toml, and remove this guard"
+);
 
-use anyhow::{anyhow, Result};
+#[cfg(feature = "pjrt")]
+mod real {
+    use std::collections::BTreeMap;
+    use std::path::Path;
 
-use crate::runtime::artifacts::ArtifactManifest;
-use crate::runtime::TensorF32;
+    use anyhow::{anyhow, Result};
 
-/// A compiled artifact plus its manifest shapes.
-struct Compiled {
-    exe: xla::PjRtLoadedExecutable,
-    inputs: Vec<Vec<usize>>,
-    output: Vec<usize>,
-}
+    use crate::runtime::artifacts::ArtifactManifest;
+    use crate::runtime::TensorF32;
 
-/// Thread-local PJRT runtime over one artifacts directory.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-    manifest: ArtifactManifest,
-    compiled: BTreeMap<String, Compiled>,
-}
-
-impl PjrtRuntime {
-    /// Create a CPU runtime for an artifacts directory (reads the
-    /// manifest; compilation is lazy per artifact).
-    pub fn cpu(artifacts_dir: &Path) -> Result<Self> {
-        let manifest = ArtifactManifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
-        Ok(Self { client, manifest, compiled: BTreeMap::new() })
+    /// A compiled artifact plus its manifest shapes.
+    struct Compiled {
+        exe: xla::PjRtLoadedExecutable,
+        inputs: Vec<Vec<usize>>,
+        output: Vec<usize>,
     }
 
-    pub fn manifest(&self) -> &ArtifactManifest {
-        &self.manifest
+    /// Thread-local PJRT runtime over one artifacts directory.
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
+        manifest: ArtifactManifest,
+        compiled: BTreeMap<String, Compiled>,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile an artifact (no-op if cached).
-    pub fn load(&mut self, name: &str) -> Result<()> {
-        if self.compiled.contains_key(name) {
-            return Ok(());
+    impl PjrtRuntime {
+        /// Create a CPU runtime for an artifacts directory (reads the
+        /// manifest; compilation is lazy per artifact).
+        pub fn cpu(artifacts_dir: &Path) -> Result<Self> {
+            let manifest = ArtifactManifest::load(artifacts_dir)?;
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+            Ok(Self { client, manifest, compiled: BTreeMap::new() })
         }
-        let meta = self.manifest.get(name)?.clone();
-        let path = self.manifest.hlo_path(name)?;
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
-        let output = meta
-            .outputs
-            .first()
-            .cloned()
-            .ok_or_else(|| anyhow!("{name}: no outputs in manifest"))?;
-        self.compiled.insert(
-            name.to_string(),
-            Compiled { exe, inputs: meta.inputs, output },
-        );
-        Ok(())
-    }
 
-    /// Names of all artifacts in the manifest.
-    pub fn artifact_names(&self) -> Vec<String> {
-        self.manifest.artifacts.iter().map(|a| a.name.clone()).collect()
-    }
+        pub fn manifest(&self) -> &ArtifactManifest {
+            &self.manifest
+        }
 
-    /// Execute a compiled artifact on shaped f32 inputs; returns the
-    /// payload tensor (entries are lowered as 1-tuples).
-    pub fn execute(
-        &mut self,
-        name: &str,
-        inputs: &[TensorF32],
-    ) -> Result<TensorF32> {
-        self.load(name)?;
-        let c = self.compiled.get(name).expect("just loaded");
-        anyhow::ensure!(
-            inputs.len() == c.inputs.len(),
-            "{name}: got {} inputs, artifact takes {}",
-            inputs.len(),
-            c.inputs.len()
-        );
-        for (k, (t, want)) in inputs.iter().zip(&c.inputs).enumerate() {
-            anyhow::ensure!(
-                &t.shape == want,
-                "{name}: input {k} shape {:?} != compiled {:?}",
-                t.shape,
-                want
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Compile an artifact (no-op if cached).
+        pub fn load(&mut self, name: &str) -> Result<()> {
+            if self.compiled.contains_key(name) {
+                return Ok(());
+            }
+            let meta = self.manifest.get(name)?.clone();
+            let path = self.manifest.hlo_path(name)?;
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+            let output = meta
+                .outputs
+                .first()
+                .cloned()
+                .ok_or_else(|| anyhow!("{name}: no outputs in manifest"))?;
+            self.compiled.insert(
+                name.to_string(),
+                Compiled { exe, inputs: meta.inputs, output },
             );
+            Ok(())
         }
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| {
-                let dims: Vec<i64> =
-                    t.shape.iter().map(|&d| d as i64).collect();
-                xla::Literal::vec1(&t.data)
-                    .reshape(&dims)
-                    .map_err(|e| anyhow!("reshaping input: {e}"))
-            })
-            .collect::<Result<_>>()?;
-        let result = c
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("executing {name}: {e}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching result: {e}"))?;
-        let payload = result
-            .to_tuple1()
-            .map_err(|e| anyhow!("unwrapping 1-tuple: {e}"))?;
-        let data = payload
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("reading f32 payload: {e}"))?;
-        anyhow::ensure!(
-            data.len() == c.output.iter().product::<usize>(),
-            "{name}: output length {} != manifest shape {:?}",
-            data.len(),
-            c.output
-        );
-        Ok(TensorF32::new(c.output.clone(), data))
+
+        /// Names of all artifacts in the manifest.
+        pub fn artifact_names(&self) -> Vec<String> {
+            self.manifest.artifacts.iter().map(|a| a.name.clone()).collect()
+        }
+
+        /// Execute a compiled artifact on shaped f32 inputs; returns the
+        /// payload tensor (entries are lowered as 1-tuples).
+        pub fn execute(
+            &mut self,
+            name: &str,
+            inputs: &[TensorF32],
+        ) -> Result<TensorF32> {
+            self.load(name)?;
+            let c = self.compiled.get(name).expect("just loaded");
+            anyhow::ensure!(
+                inputs.len() == c.inputs.len(),
+                "{name}: got {} inputs, artifact takes {}",
+                inputs.len(),
+                c.inputs.len()
+            );
+            for (k, (t, want)) in inputs.iter().zip(&c.inputs).enumerate() {
+                anyhow::ensure!(
+                    &t.shape == want,
+                    "{name}: input {k} shape {:?} != compiled {:?}",
+                    t.shape,
+                    want
+                );
+            }
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|t| {
+                    let dims: Vec<i64> =
+                        t.shape.iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(&t.data)
+                        .reshape(&dims)
+                        .map_err(|e| anyhow!("reshaping input: {e}"))
+                })
+                .collect::<Result<_>>()?;
+            let result = c
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| anyhow!("executing {name}: {e}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetching result: {e}"))?;
+            let payload = result
+                .to_tuple1()
+                .map_err(|e| anyhow!("unwrapping 1-tuple: {e}"))?;
+            let data = payload
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("reading f32 payload: {e}"))?;
+            anyhow::ensure!(
+                data.len() == c.output.iter().product::<usize>(),
+                "{name}: output length {} != manifest shape {:?}",
+                data.len(),
+                c.output
+            );
+            Ok(TensorF32::new(c.output.clone(), data))
+        }
+
+        /// Convenience: execute with f64 host vectors shaped per the
+        /// manifest.
+        pub fn execute_f64(
+            &mut self,
+            name: &str,
+            inputs: &[Vec<f64>],
+        ) -> Result<TensorF32> {
+            self.load(name)?;
+            let shapes = self.compiled[name].inputs.clone();
+            anyhow::ensure!(inputs.len() == shapes.len(), "input arity");
+            let tensors: Vec<TensorF32> = inputs
+                .iter()
+                .zip(shapes)
+                .map(|(v, s)| TensorF32::from_f64(s, v))
+                .collect();
+            self.execute(name, &tensors)
+        }
     }
 
-    /// Convenience: execute with f64 host vectors shaped per the manifest.
-    pub fn execute_f64(
-        &mut self,
-        name: &str,
-        inputs: &[Vec<f64>],
-    ) -> Result<TensorF32> {
-        self.load(name)?;
-        let shapes = self.compiled[name].inputs.clone();
-        anyhow::ensure!(inputs.len() == shapes.len(), "input arity");
-        let tensors: Vec<TensorF32> = inputs
-            .iter()
-            .zip(shapes)
-            .map(|(v, s)| TensorF32::from_f64(s, v))
-            .collect();
-        self.execute(name, &tensors)
+    impl std::fmt::Debug for PjrtRuntime {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("PjrtRuntime")
+                .field("platform", &self.client.platform_name())
+                .field("compiled", &self.compiled.keys().collect::<Vec<_>>())
+                .finish()
+        }
     }
 }
 
-impl std::fmt::Debug for PjrtRuntime {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("PjrtRuntime")
-            .field("platform", &self.client.platform_name())
-            .field("compiled", &self.compiled.keys().collect::<Vec<_>>())
-            .finish()
+#[cfg(feature = "pjrt")]
+pub use real::PjrtRuntime;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use std::path::Path;
+
+    use anyhow::Result;
+
+    use crate::runtime::artifacts::ArtifactManifest;
+    use crate::runtime::TensorF32;
+
+    const DISABLED: &str = "PJRT backend not compiled in: vendor the `xla` \
+                            crate and rebuild with `--features pjrt`";
+
+    /// API-compatible stand-in for the PJRT runtime when the `pjrt`
+    /// feature is off. `cpu()` still validates the artifacts directory (so
+    /// missing-artifact hints are identical to the real path) and then
+    /// refuses to start; the remaining methods exist so callers typecheck
+    /// but are unreachable because construction always fails.
+    #[derive(Debug)]
+    pub struct PjrtRuntime {
+        manifest: ArtifactManifest,
+    }
+
+    impl PjrtRuntime {
+        pub fn cpu(artifacts_dir: &Path) -> Result<Self> {
+            let _ = ArtifactManifest::load(artifacts_dir)?;
+            anyhow::bail!(DISABLED)
+        }
+
+        pub fn manifest(&self) -> &ArtifactManifest {
+            &self.manifest
+        }
+
+        pub fn platform(&self) -> String {
+            "disabled".to_string()
+        }
+
+        pub fn load(&mut self, _name: &str) -> Result<()> {
+            anyhow::bail!(DISABLED)
+        }
+
+        pub fn artifact_names(&self) -> Vec<String> {
+            self.manifest.artifacts.iter().map(|a| a.name.clone()).collect()
+        }
+
+        pub fn execute(
+            &mut self,
+            _name: &str,
+            _inputs: &[TensorF32],
+        ) -> Result<TensorF32> {
+            anyhow::bail!(DISABLED)
+        }
+
+        pub fn execute_f64(
+            &mut self,
+            _name: &str,
+            _inputs: &[Vec<f64>],
+        ) -> Result<TensorF32> {
+            anyhow::bail!(DISABLED)
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::PjrtRuntime;
 
 // Integration tests (requiring built artifacts) live in rust/tests/;
 // nothing here can run without PJRT + artifacts on disk.
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::path::Path;
 
     #[test]
     fn missing_dir_fails_with_hint() {
@@ -172,6 +259,7 @@ mod tests {
         assert!(err.contains("make artifacts"), "{err}");
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn runtime_smoke_if_artifacts_present() {
         // Runs only when `make artifacts` has been executed.
@@ -183,9 +271,7 @@ mod tests {
         let mut rt = PjrtRuntime::cpu(&dir).unwrap();
         assert!(rt.platform().to_lowercase().contains("cpu"));
         // l96_step_b1: [6] -> [6].
-        let out = rt
-            .execute_f64("l96_step_b1", &[vec![0.5; 6]])
-            .unwrap();
+        let out = rt.execute_f64("l96_step_b1", &[vec![0.5; 6]]).unwrap();
         assert_eq!(out.shape, vec![6]);
         assert!(out.data.iter().all(|x| x.is_finite()));
     }

@@ -9,10 +9,12 @@ use anyhow::{anyhow, Result};
 use crate::analog::system::{AnalogMlp, AnalogNeuralOde, AnalogNoise, LayerWeights};
 use crate::device::taox::DeviceConfig;
 use crate::models::loader::MlpWeights;
-use crate::models::mlp::{DrivenMlpField, Mlp};
+use crate::models::mlp::{BatchDrivenMlpField, DrivenMlpField, Mlp};
 use crate::models::resnet::RecurrentResNet;
 use crate::ode::rk4;
-use crate::twin::{RolloutFn, Twin, TwinRequest, TwinResponse};
+use crate::twin::{
+    run_batch_grouped, RolloutFn, Twin, TwinRequest, TwinResponse,
+};
 use crate::workload::stimuli::Waveform;
 
 /// Default circuit substeps per output sample for the analogue backend.
@@ -125,7 +127,7 @@ impl HpTwin {
                 Ok(traj.into_iter().map(|r| r[0]).collect())
             }
             HpBackend::Resnet(resnet) => {
-                let xs: Vec<Vec<f64>> = (0..n_points - 1)
+                let xs: Vec<Vec<f64>> = (0..n_points.saturating_sub(1))
                     .map(|k| vec![wave.eval(k as f64 * dt)])
                     .collect();
                 let traj = resnet.rollout(&[h0], &xs);
@@ -136,6 +138,87 @@ impl HpTwin {
                 let traj = rollout(&[h0], Some(&xs_half))?;
                 Ok(traj.into_iter().map(|r| r[0]).collect())
             }
+        }
+    }
+
+    /// Batched simulation of one compatible sub-batch: all trajectories
+    /// share `n_points` but carry their own stimulus and initial state.
+    /// Analog, Digital and Resnet backends run a true batched rollout (one
+    /// device read / GEMM per step for the whole batch); Pjrt falls back to
+    /// per-trajectory [`HpTwin::simulate`]. With noise off the batched
+    /// trajectories are bit-identical to serial ones.
+    pub fn simulate_batch(
+        &mut self,
+        waves: &[Waveform],
+        h0s: &[f64],
+        n_points: usize,
+    ) -> Result<Vec<Vec<f64>>> {
+        let batch = waves.len();
+        anyhow::ensure!(
+            h0s.len() == batch,
+            "simulate_batch: {} initial states for {} stimuli",
+            h0s.len(),
+            batch
+        );
+        if matches!(self.backend, HpBackend::Pjrt(_)) {
+            return waves
+                .iter()
+                .zip(h0s)
+                .map(|(w, &h0)| self.simulate(w, h0, n_points))
+                .collect();
+        }
+        let dt = self.dt;
+        match &mut self.backend {
+            HpBackend::Analog(ode) => {
+                let ws = waves.to_vec();
+                let trajs = ode.solve_batch(
+                    h0s,
+                    batch,
+                    &mut |b, t, x| x[0] = ws[b].eval(t),
+                    dt,
+                    n_points,
+                );
+                Ok(trajs
+                    .into_iter()
+                    .map(|tr| tr.into_iter().map(|r| r[0]).collect())
+                    .collect())
+            }
+            HpBackend::Digital(mlp) => {
+                let ws = waves.to_vec();
+                let mut field = BatchDrivenMlpField::new(
+                    mlp.clone(),
+                    batch,
+                    move |b, t| ws[b].eval(t),
+                );
+                let flat = rk4::solve_batch(
+                    &mut field,
+                    h0s,
+                    dt,
+                    n_points,
+                    DIGITAL_SUBSTEPS,
+                );
+                Ok((0..batch)
+                    .map(|b| flat.iter().map(|row| row[b]).collect())
+                    .collect())
+            }
+            HpBackend::Resnet(resnet) => {
+                let xs: Vec<Vec<f64>> = (0..n_points.saturating_sub(1))
+                    .map(|k| {
+                        waves
+                            .iter()
+                            .map(|w| w.eval(k as f64 * dt))
+                            .collect()
+                    })
+                    .collect();
+                let trajs = resnet.rollout_batch(h0s, batch, &xs);
+                Ok(trajs
+                    .into_iter()
+                    .map(|tr| {
+                        tr.into_iter().map(|r| r[0]).collect::<Vec<f64>>()
+                    })
+                    .collect())
+            }
+            HpBackend::Pjrt(_) => unreachable!("handled above"),
         }
     }
 }
@@ -172,6 +255,48 @@ impl Twin for HpTwin {
             trajectory: h.into_iter().map(|v| vec![v]).collect(),
             backend,
         })
+    }
+
+    /// Batched execution: requests are split into compatible sub-batches
+    /// (same `n_points`; stimulus and h0 are per-trajectory) and each
+    /// sub-batch runs as one batched rollout. Requests without a stimulus
+    /// fail individually without poisoning the batch.
+    fn run_batch(
+        &mut self,
+        reqs: &[TwinRequest],
+    ) -> Vec<Result<TwinResponse>> {
+        let backend = self.backend.label().to_string();
+        run_batch_grouped(
+            reqs,
+            |req| match req.stimulus {
+                Some(w) => Ok((
+                    w,
+                    if req.h0.is_empty() {
+                        crate::device::hp::H0
+                    } else {
+                        req.h0[0]
+                    },
+                )),
+                None => Err(anyhow!("hp twin requires a stimulus")),
+            },
+            |items, n_points| {
+                let waves: Vec<Waveform> =
+                    items.iter().map(|&(w, _)| w).collect();
+                let h0s: Vec<f64> =
+                    items.iter().map(|&(_, h0)| h0).collect();
+                let trajs = self.simulate_batch(&waves, &h0s, n_points)?;
+                Ok(trajs
+                    .into_iter()
+                    .map(|h| TwinResponse {
+                        trajectory: h
+                            .into_iter()
+                            .map(|v| vec![v])
+                            .collect(),
+                        backend: backend.clone(),
+                    })
+                    .collect())
+            },
+        )
     }
 }
 
@@ -257,5 +382,79 @@ mod tests {
         let wave = Waveform::sine(1.0, 4.0);
         let h = twin.simulate(&wave, hp::H0, 20).unwrap();
         assert_eq!(h.len(), 20);
+    }
+
+    fn mixed_requests() -> Vec<TwinRequest> {
+        vec![
+            TwinRequest::driven(vec![0.3], 40, Waveform::sine(1.0, 4.0)),
+            TwinRequest::driven(
+                vec![0.5],
+                25,
+                Waveform::triangular(1.0, 4.0),
+            ),
+            TwinRequest::driven(
+                vec![0.2],
+                40,
+                Waveform::rectangular(1.0, 4.0),
+            ),
+            TwinRequest::driven(vec![], 40, Waveform::modulated(1.0, 4.0, 1.0)),
+        ]
+    }
+
+    fn assert_batch_matches_serial(twin: &mut HpTwin) {
+        let reqs = mixed_requests();
+        let serial: Vec<_> =
+            reqs.iter().map(|r| twin.run(r).unwrap()).collect();
+        let batched = twin.run_batch(&reqs);
+        for (k, (b, s)) in batched.iter().zip(&serial).enumerate() {
+            let b = b.as_ref().unwrap();
+            assert_eq!(b.trajectory, s.trajectory, "request {k}");
+            assert_eq!(b.backend, s.backend);
+        }
+    }
+
+    #[test]
+    fn digital_run_batch_bit_identical_to_serial() {
+        let mut twin = HpTwin::digital(&toy_weights());
+        assert_batch_matches_serial(&mut twin);
+    }
+
+    #[test]
+    fn analog_run_batch_bit_identical_to_serial_noise_free() {
+        let cfg = DeviceConfig {
+            fault_rate: 0.0,
+            pulse_sigma: 0.0,
+            read_noise: 0.0,
+            ..Default::default()
+        };
+        let mut twin =
+            HpTwin::analog(&toy_weights(), &cfg, AnalogNoise::off(), 3);
+        assert_batch_matches_serial(&mut twin);
+    }
+
+    #[test]
+    fn resnet_run_batch_bit_identical_to_serial() {
+        let mut twin = HpTwin::resnet(&toy_weights());
+        assert_batch_matches_serial(&mut twin);
+    }
+
+    #[test]
+    fn run_batch_isolates_missing_stimulus() {
+        let mut twin = HpTwin::digital(&toy_weights());
+        let reqs = vec![
+            TwinRequest::driven(vec![0.3], 10, Waveform::sine(1.0, 4.0)),
+            TwinRequest::autonomous(vec![0.3], 10),
+            TwinRequest::driven(vec![0.4], 10, Waveform::sine(1.0, 4.0)),
+        ];
+        let results = twin.run_batch(&reqs);
+        assert!(results[0].is_ok());
+        assert!(results[1].is_err());
+        assert!(results[2].is_ok());
+        // The good ones still match their serial runs exactly.
+        let want0 = twin.run(&reqs[0]).unwrap();
+        assert_eq!(
+            results[0].as_ref().unwrap().trajectory,
+            want0.trajectory
+        );
     }
 }

@@ -11,10 +11,12 @@ use crate::device::taox::DeviceConfig;
 use crate::models::gru::Gru;
 use crate::models::loader::{MlpWeights, RnnWeights};
 use crate::models::lstm::Lstm;
-use crate::models::mlp::{Mlp, MlpField};
+use crate::models::mlp::{BatchMlpField, Mlp, MlpField};
 use crate::models::rnn::{Recurrent, VanillaRnn};
 use crate::ode::rk4;
-use crate::twin::{RolloutFn, Twin, TwinRequest, TwinResponse};
+use crate::twin::{
+    run_batch_grouped, RolloutFn, Twin, TwinRequest, TwinResponse,
+};
 use crate::workload::lorenz96;
 
 /// Default circuit substeps per output sample for the analogue backend.
@@ -124,6 +126,62 @@ impl Lorenz96Twin {
             L96Backend::Pjrt(rollout) => rollout(h0, None),
         }
     }
+
+    /// Batched rollout of one compatible sub-batch (shared `n_points`,
+    /// per-trajectory initial states). Analog, Digital and Recurrent
+    /// backends run true batched rollouts — one multi-vector device read
+    /// or per-layer GEMM per step for the whole batch; Pjrt falls back to
+    /// per-trajectory [`Lorenz96Twin::simulate`]. Noise off ⇒ bit-identical
+    /// to serial.
+    pub fn simulate_batch(
+        &mut self,
+        h0s: &[Vec<f64>],
+        n_points: usize,
+    ) -> Result<Vec<Vec<Vec<f64>>>> {
+        let batch = h0s.len();
+        let dim = self.dim;
+        for h0 in h0s {
+            anyhow::ensure!(
+                h0.len() == dim,
+                "h0 dim {} != twin dim {}",
+                h0.len(),
+                dim
+            );
+        }
+        if matches!(self.backend, L96Backend::Pjrt(_)) {
+            return h0s
+                .iter()
+                .map(|h0| self.simulate(h0, n_points))
+                .collect();
+        }
+        let dt = self.dt;
+        let flat: Vec<f64> = h0s.iter().flatten().copied().collect();
+        match &mut self.backend {
+            L96Backend::Analog(ode) => Ok(ode.solve_batch(
+                &flat,
+                batch,
+                &mut |_b, _t, _x| {},
+                dt,
+                n_points,
+            )),
+            L96Backend::Digital(mlp) => {
+                let mut field =
+                    BatchMlpField { mlp: mlp.clone(), batch };
+                let rows = rk4::solve_batch(
+                    &mut field,
+                    &flat,
+                    dt,
+                    n_points,
+                    DIGITAL_SUBSTEPS,
+                );
+                Ok(crate::ode::batch::unbatch_trajectories(
+                    &rows, batch, dim,
+                ))
+            }
+            L96Backend::Recurrent(cell) => Ok(cell.rollout_batch(h0s, n_points)),
+            L96Backend::Pjrt(_) => unreachable!("handled above"),
+        }
+    }
 }
 
 impl Twin for Lorenz96Twin {
@@ -158,6 +216,45 @@ impl Twin for Lorenz96Twin {
         let backend = self.backend.label().to_string();
         let trajectory = self.simulate(&h0, req.n_points)?;
         Ok(TwinResponse { trajectory, backend })
+    }
+
+    /// Batched execution: requests split into compatible sub-batches (same
+    /// `n_points`); initial states are resolved per request, and a request
+    /// with the wrong h0 dimension fails alone without poisoning the rest.
+    fn run_batch(
+        &mut self,
+        reqs: &[TwinRequest],
+    ) -> Vec<Result<TwinResponse>> {
+        let backend = self.backend.label().to_string();
+        let dim = self.dim;
+        let default = self.default_h0();
+        run_batch_grouped(
+            reqs,
+            |req| {
+                let h0 = if req.h0.is_empty() {
+                    default.clone()
+                } else {
+                    req.h0.clone()
+                };
+                anyhow::ensure!(
+                    h0.len() == dim,
+                    "h0 dim {} != twin dim {}",
+                    h0.len(),
+                    dim
+                );
+                Ok(h0)
+            },
+            |h0s, n_points| {
+                let trajs = self.simulate_batch(h0s, n_points)?;
+                Ok(trajs
+                    .into_iter()
+                    .map(|trajectory| TwinResponse {
+                        trajectory,
+                        backend: backend.clone(),
+                    })
+                    .collect())
+            },
+        )
     }
 }
 
@@ -250,6 +347,97 @@ mod tests {
         assert_eq!(traj.len(), 4);
         // Zero weights: identity rollout.
         assert_eq!(traj[3], vec![1.0, 2.0, 3.0]);
+    }
+
+    /// Mixed n_points, explicit dim-3 initial states (the empty-h0 default
+    /// case is covered separately by `default_h0_resolved_in_batch`).
+    fn mixed_requests() -> Vec<TwinRequest> {
+        vec![
+            TwinRequest::autonomous(vec![1.0, -2.0, 0.5], 30),
+            TwinRequest::autonomous(vec![0.2, 0.1, -0.4], 12),
+            TwinRequest::autonomous(vec![0.6, -0.1, 0.3], 30),
+            TwinRequest::autonomous(vec![-1.0, 1.0, 0.0], 30),
+        ]
+    }
+
+    fn assert_batch_matches_serial(twin: &mut Lorenz96Twin) {
+        let reqs = mixed_requests();
+        let serial: Vec<_> =
+            reqs.iter().map(|r| twin.run(r).unwrap()).collect();
+        let batched = twin.run_batch(&reqs);
+        for (k, (b, s)) in batched.iter().zip(&serial).enumerate() {
+            let b = b.as_ref().unwrap();
+            assert_eq!(b.trajectory, s.trajectory, "request {k}");
+            assert_eq!(b.backend, s.backend);
+        }
+    }
+
+    #[test]
+    fn digital_run_batch_bit_identical_to_serial() {
+        let mut twin = Lorenz96Twin::digital(&toy_weights(3));
+        assert_batch_matches_serial(&mut twin);
+    }
+
+    #[test]
+    fn analog_run_batch_bit_identical_to_serial_noise_free() {
+        let w = toy_weights(3);
+        let cfg = DeviceConfig {
+            fault_rate: 0.0,
+            pulse_sigma: 0.0,
+            read_noise: 0.0,
+            ..Default::default()
+        };
+        let mut twin =
+            Lorenz96Twin::analog(&w, &cfg, AnalogNoise::off(), 1);
+        assert_batch_matches_serial(&mut twin);
+    }
+
+    #[test]
+    fn default_h0_resolved_in_batch() {
+        let mut twin = Lorenz96Twin::digital(&toy_weights(6));
+        let results = twin.run_batch(&[
+            TwinRequest::autonomous(vec![], 5),
+            TwinRequest::autonomous(vec![0.5; 6], 5),
+        ]);
+        assert_eq!(
+            results[0].as_ref().unwrap().trajectory[0],
+            lorenz96::Y0.to_vec()
+        );
+        assert_eq!(
+            results[1].as_ref().unwrap().trajectory[0],
+            vec![0.5; 6]
+        );
+    }
+
+    #[test]
+    fn run_batch_isolates_bad_h0_dim() {
+        let mut twin = Lorenz96Twin::digital(&toy_weights(3));
+        let results = twin.run_batch(&[
+            TwinRequest::autonomous(vec![1.0, 2.0, 3.0], 8),
+            TwinRequest::autonomous(vec![1.0, 2.0], 8),
+            TwinRequest::autonomous(vec![0.0, 0.5, -0.5], 8),
+        ]);
+        assert!(results[0].is_ok());
+        assert!(results[1].is_err());
+        assert!(results[2].is_ok());
+    }
+
+    #[test]
+    fn recurrent_run_batch_matches_serial() {
+        use crate::models::loader::RnnWeights;
+        let w = RnnWeights {
+            wx: Mat::from_fn(3, 4, |r, c| 0.05 * ((r + c) % 3) as f64),
+            wh: Mat::from_fn(4, 4, |r, c| 0.03 * ((r * 2 + c) % 5) as f64),
+            b: vec![0.01; 4],
+            wo: Mat::from_fn(4, 3, |r, c| 0.1 * ((r + c) % 2) as f64),
+            bo: vec![0.0; 3],
+            hidden: 4,
+            d_in: 3,
+            dt: 0.02,
+            kind: "rnn".into(),
+        };
+        let mut twin = Lorenz96Twin::recurrent(&w).unwrap();
+        assert_batch_matches_serial(&mut twin);
     }
 
     #[test]

@@ -77,11 +77,162 @@ pub trait Twin: Send {
 
     /// Execute a request.
     fn run(&mut self, req: &TwinRequest) -> anyhow::Result<TwinResponse>;
+
+    /// Execute a whole batch of requests, returning one result per request
+    /// in order. Failures are per-request: one bad job must never poison
+    /// its batch-mates.
+    ///
+    /// The default is the serial fallback (`run` per request), so every
+    /// twin keeps working under the coordinator's batch dispatch. Twins
+    /// with a real batched rollout (the analogue solver's multi-vector
+    /// crossbar reads, the digital backends' per-layer GEMMs) override
+    /// this; implementations split incompatible requests into compatible
+    /// sub-batches via [`compatible_groups`] rather than padding, and with
+    /// noise off their batched trajectories are bit-identical to serial
+    /// `run` calls.
+    fn run_batch(
+        &mut self,
+        reqs: &[TwinRequest],
+    ) -> Vec<anyhow::Result<TwinResponse>> {
+        reqs.iter().map(|r| self.run(r)).collect()
+    }
+}
+
+/// Group request indices into batch-compatible sub-batches: requests in a
+/// group share `n_points` (one rollout length per batched solve), while h0
+/// and stimulus may differ per trajectory. Submission order is preserved
+/// within each group, and nothing is padded — a mixed batch simply splits.
+pub fn compatible_groups(reqs: &[TwinRequest]) -> Vec<Vec<usize>> {
+    let mut groups: std::collections::BTreeMap<usize, Vec<usize>> =
+        std::collections::BTreeMap::new();
+    for (i, r) in reqs.iter().enumerate() {
+        groups.entry(r.n_points).or_default().push(i);
+    }
+    groups.into_values().collect()
+}
+
+/// The shared scaffolding of a batched `Twin::run_batch` override:
+/// split requests into [`compatible_groups`], validate each request with
+/// `prepare` (a failure fails that request alone), execute every non-empty
+/// group once with `execute` (payloads in submission order + the group's
+/// `n_points`), and fan results back out to request order. A group-level
+/// error — or an arity mismatch from `execute` — is broadcast to every
+/// member of that group without touching the others.
+pub fn run_batch_grouped<P>(
+    reqs: &[TwinRequest],
+    mut prepare: impl FnMut(&TwinRequest) -> anyhow::Result<P>,
+    mut execute: impl FnMut(&[P], usize) -> anyhow::Result<Vec<TwinResponse>>,
+) -> Vec<anyhow::Result<TwinResponse>> {
+    let mut out: Vec<Option<anyhow::Result<TwinResponse>>> = Vec::new();
+    out.resize_with(reqs.len(), || None);
+    for group in compatible_groups(reqs) {
+        let mut members: Vec<usize> = Vec::new();
+        let mut payloads: Vec<P> = Vec::new();
+        for &i in &group {
+            match prepare(&reqs[i]) {
+                Ok(p) => {
+                    members.push(i);
+                    payloads.push(p);
+                }
+                Err(e) => out[i] = Some(Err(e)),
+            }
+        }
+        if members.is_empty() {
+            continue;
+        }
+        let n_points = reqs[members[0]].n_points;
+        let broadcast =
+            |out: &mut Vec<Option<anyhow::Result<TwinResponse>>>,
+             msg: String| {
+                for &i in &members {
+                    out[i] = Some(Err(anyhow::anyhow!(msg.clone())));
+                }
+            };
+        match execute(&payloads, n_points) {
+            Ok(resps) if resps.len() == members.len() => {
+                for (&i, r) in members.iter().zip(resps) {
+                    out[i] = Some(Ok(r));
+                }
+            }
+            Ok(resps) => broadcast(
+                &mut out,
+                format!(
+                    "batched backend returned {} responses for {} requests",
+                    resps.len(),
+                    members.len()
+                ),
+            ),
+            Err(e) => broadcast(&mut out, format!("{e:#}")),
+        }
+    }
+    out.into_iter()
+        .map(|o| o.expect("every request receives a result"))
+        .collect()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn compatible_groups_split_by_n_points() {
+        let reqs = vec![
+            TwinRequest::autonomous(vec![], 10),
+            TwinRequest::autonomous(vec![], 20),
+            TwinRequest::autonomous(vec![], 10),
+            TwinRequest::autonomous(vec![], 20),
+            TwinRequest::autonomous(vec![], 10),
+        ];
+        let groups = compatible_groups(&reqs);
+        assert_eq!(groups, vec![vec![0, 2, 4], vec![1, 3]]);
+        // Every index appears exactly once.
+        let mut all: Vec<usize> = groups.into_iter().flatten().collect();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn default_run_batch_is_serial_fallback() {
+        struct Echo;
+        impl Twin for Echo {
+            fn name(&self) -> &str {
+                "echo"
+            }
+            fn state_dim(&self) -> usize {
+                1
+            }
+            fn dt(&self) -> f64 {
+                1.0
+            }
+            fn default_h0(&self) -> Vec<f64> {
+                vec![0.0]
+            }
+            fn run(
+                &mut self,
+                req: &TwinRequest,
+            ) -> anyhow::Result<TwinResponse> {
+                anyhow::ensure!(req.n_points > 0, "empty request");
+                Ok(TwinResponse {
+                    trajectory: vec![req.h0.clone(); req.n_points],
+                    backend: "echo".into(),
+                })
+            }
+        }
+        let mut t = Echo;
+        let reqs = vec![
+            TwinRequest::autonomous(vec![1.0], 2),
+            TwinRequest::autonomous(vec![2.0], 0),
+            TwinRequest::autonomous(vec![3.0], 3),
+        ];
+        let results = t.run_batch(&reqs);
+        assert_eq!(results.len(), 3);
+        assert_eq!(results[0].as_ref().unwrap().trajectory.len(), 2);
+        assert!(results[1].is_err(), "per-request failure isolated");
+        assert_eq!(
+            results[2].as_ref().unwrap().trajectory[0],
+            vec![3.0]
+        );
+    }
 
     #[test]
     fn request_constructors() {

@@ -1,9 +1,16 @@
 //! Dense f64 vector/matrix math — the numerical substrate for the whole
 //! simulator (crossbar VMM, circuit integration, baseline model inference).
 //!
-//! Deliberately small: row-major [`Mat`], `Vec<f64>` vectors, and the three
+//! Deliberately small: row-major [`Mat`], `Vec<f64>` vectors, and the
 //! operations the hot paths need (`gemv`, transposed `gemv`, `gemm`), plus
-//! an allocation-free [`Mat::gemv_into`] used by the request-path VMM.
+//! allocation-free `_into` forms used by the request path.
+//!
+//! The batched request path adds [`Mat::vecmat_batch_into`]: B stacked
+//! input vectors against one matrix in a single pass over the matrix (a
+//! row-major GEMM). Its per-trajectory accumulation order is *identical*
+//! to [`Mat::vecmat_into`], so a batched rollout reproduces B serial
+//! rollouts bit-for-bit when no stochastic term intervenes — that exactness
+//! is what the batched-vs-serial equivalence tests pin down.
 
 /// Row-major dense matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -130,6 +137,55 @@ impl Mat {
         }
     }
 
+    /// Batched [`Mat::vecmat`]: `ys[b] = xs[b]^T A` for `batch` row-major
+    /// stacked inputs (`xs: [batch * rows]`, `ys: [batch * cols]`).
+    ///
+    /// This is the row-major GEMM of the batched request path: the weight
+    /// matrix is walked **once** per call (row `r` is loaded one time and
+    /// applied to every trajectory) instead of once per trajectory, which
+    /// is where batching amortises memory traffic. For each trajectory the
+    /// accumulation order over `r` — including the zero-input skip — is the
+    /// same as [`Mat::vecmat_into`], so per-trajectory outputs are
+    /// bit-identical to B independent serial calls.
+    pub fn vecmat_batch_into(
+        &self,
+        xs: &[f64],
+        batch: usize,
+        ys: &mut [f64],
+    ) {
+        assert_eq!(
+            xs.len(),
+            batch * self.rows,
+            "vecmat_batch: xs length != batch * rows"
+        );
+        assert_eq!(
+            ys.len(),
+            batch * self.cols,
+            "vecmat_batch: ys length != batch * cols"
+        );
+        ys.fill(0.0);
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for b in 0..batch {
+                let xv = xs[b * self.rows + r];
+                if xv == 0.0 {
+                    continue;
+                }
+                let y = &mut ys[b * self.cols..(b + 1) * self.cols];
+                for (yc, &a) in y.iter_mut().zip(row) {
+                    *yc += xv * a;
+                }
+            }
+        }
+    }
+
+    /// Allocating form of [`Mat::vecmat_batch_into`].
+    pub fn vecmat_batch(&self, xs: &[f64], batch: usize) -> Vec<f64> {
+        let mut ys = vec![0.0; batch * self.cols];
+        self.vecmat_batch_into(xs, batch, &mut ys);
+        ys
+    }
+
     /// C = A B.
     pub fn matmul(&self, b: &Mat) -> Mat {
         assert_eq!(self.cols, b.rows, "matmul shape mismatch");
@@ -177,6 +233,27 @@ pub fn axpy_into(z: &mut [f64], a: &[f64], s: f64, b: &[f64]) {
     for ((zv, &av), &bv) in z.iter_mut().zip(a).zip(b) {
         *zv = av + s * bv;
     }
+}
+
+/// Batched axpy over `batch` stacked `dim`-vectors: the same fused update
+/// as [`axpy_into`] on a flat `[batch * dim]` state, with every operand's
+/// shape checked. Because the update is element-wise, the result is
+/// bit-identical to applying [`axpy_into`] to each trajectory separately.
+/// The batched ODE solvers get that same guarantee implicitly by running
+/// the serial stepper arithmetic over flat state (`ode::batch::Flattened`);
+/// this explicit form is for callers composing their own batched updates.
+pub fn axpy_batch_into(
+    z: &mut [f64],
+    a: &[f64],
+    s: f64,
+    b: &[f64],
+    batch: usize,
+    dim: usize,
+) {
+    assert_eq!(z.len(), batch * dim, "axpy_batch: z length != batch * dim");
+    assert_eq!(a.len(), batch * dim, "axpy_batch: a length != batch * dim");
+    assert_eq!(b.len(), batch * dim, "axpy_batch: b length != batch * dim");
+    axpy_into(z, a, s, b);
 }
 
 /// Element-wise a + b.
@@ -292,6 +369,53 @@ mod tests {
     #[should_panic(expected = "shape/data mismatch")]
     fn from_vec_checks_shape() {
         let _ = Mat::from_vec(2, 2, vec![1.0]);
+    }
+
+    #[test]
+    fn vecmat_batch_bit_identical_to_serial() {
+        // The contract the batched execution engine is built on: each
+        // trajectory of the batched GEMM equals its serial vecmat exactly
+        // (same FP accumulation order), including zero-input skips.
+        let m = Mat::from_fn(7, 5, |r, c| {
+            ((r * 13 + c * 7) % 11) as f64 / 3.0 - 1.5
+        });
+        let batch = 4;
+        let mut xs = vec![0.0; batch * 7];
+        for (k, x) in xs.iter_mut().enumerate() {
+            *x = if k % 6 == 0 { 0.0 } else { (k as f64 * 0.37).sin() };
+        }
+        let ys = m.vecmat_batch(&xs, batch);
+        for b in 0..batch {
+            let want = m.vecmat(&xs[b * 7..(b + 1) * 7]);
+            assert_eq!(&ys[b * 5..(b + 1) * 5], &want[..], "traj {b}");
+        }
+    }
+
+    #[test]
+    fn vecmat_batch_of_one_matches_vecmat() {
+        let m = Mat::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        let x = [1.0, 0.5, -1.0];
+        assert_eq!(m.vecmat_batch(&x, 1), m.vecmat(&x));
+    }
+
+    #[test]
+    #[should_panic(expected = "batch * rows")]
+    fn vecmat_batch_checks_input_shape() {
+        let m = Mat::zeros(3, 2);
+        let mut ys = vec![0.0; 4];
+        m.vecmat_batch_into(&[0.0; 5], 2, &mut ys);
+    }
+
+    #[test]
+    fn axpy_batch_matches_per_trajectory_axpy() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [10.0, 20.0, 30.0, 40.0];
+        let mut z = [0.0; 4];
+        axpy_batch_into(&mut z, &a, 0.5, &b, 2, 2);
+        let mut want = [0.0; 4];
+        axpy_into(&mut want[..2], &a[..2], 0.5, &b[..2]);
+        axpy_into(&mut want[2..], &a[2..], 0.5, &b[2..]);
+        assert_eq!(z, want);
     }
 
     #[test]

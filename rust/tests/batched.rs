@@ -1,0 +1,295 @@
+//! Batched-vs-serial equivalence: the correctness contract of the batched
+//! execution engine.
+//!
+//! With all stochastic terms off (`NoiseMode::Off` / `AnalogNoise::off`),
+//! `Twin::run_batch` must reproduce per-request `Twin::run` trajectories
+//! **exactly** (bit-for-bit) — batching is a throughput lever, never an
+//! accuracy trade-off. Randomized properties drive mixed batches (varying
+//! batch size, `n_points`, initial states, stimuli, invalid requests)
+//! through both paths; an integration test drives the real pipeline
+//! batcher → scheduler → `run_batch`.
+
+use std::cell::RefCell;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use memode::analog::system::AnalogNoise;
+use memode::coordinator::batcher::{BatchPolicy, Batcher};
+use memode::coordinator::scheduler::Scheduler;
+use memode::coordinator::telemetry::Telemetry;
+use memode::coordinator::Job;
+use memode::device::taox::DeviceConfig;
+use memode::models::loader::MlpWeights;
+use memode::twin::hp::HpTwin;
+use memode::twin::lorenz96::Lorenz96Twin;
+use memode::twin::registry::TwinRegistry;
+use memode::twin::{Twin, TwinRequest, TwinResponse};
+use memode::util::proptest::{check, Config};
+use memode::util::rng::Pcg64;
+use memode::util::tensor::Mat;
+use memode::workload::stimuli::Waveform;
+
+fn quiet_device() -> DeviceConfig {
+    DeviceConfig {
+        fault_rate: 0.0,
+        pulse_sigma: 0.0,
+        read_noise: 0.0,
+        ..Default::default()
+    }
+}
+
+/// f(h) = -h element-wise for dimension d, exact via paired ReLUs.
+fn l96_toy_weights(d: usize) -> MlpWeights {
+    let mut w1 = Mat::zeros(d, 2 * d);
+    for i in 0..d {
+        *w1.at_mut(i, 2 * i) = 1.0;
+        *w1.at_mut(i, 2 * i + 1) = -1.0;
+    }
+    let b1 = vec![0.0; 2 * d];
+    let mut w2 = Mat::zeros(2 * d, d);
+    for i in 0..d {
+        *w2.at_mut(2 * i, i) = -1.0;
+        *w2.at_mut(2 * i + 1, i) = 1.0;
+    }
+    let b2 = vec![0.0; d];
+    MlpWeights {
+        layers: vec![(w1, b1), (w2, b2)],
+        dt: 0.02,
+        kind: "node".into(),
+        task: "l96".into(),
+    }
+}
+
+/// f([v; h]) = 2v - h, exact via paired ReLUs (the HP toy field).
+fn hp_toy_weights() -> MlpWeights {
+    let w1 = Mat::from_vec(
+        2,
+        4,
+        vec![2.0, -2.0, 0.0, 0.0, 0.0, 0.0, 1.0, -1.0],
+    );
+    let b1 = vec![0.0; 4];
+    let w2 = Mat::from_vec(4, 1, vec![1.0, -1.0, -1.0, 1.0]);
+    let b2 = vec![0.0];
+    MlpWeights {
+        layers: vec![(w1, b1), (w2, b2)],
+        dt: 1e-3,
+        kind: "node".into(),
+        task: "hp".into(),
+    }
+}
+
+/// Serial reference vs batched execution on the same twin; errors must
+/// align, successes must match bit-for-bit.
+fn batch_equals_serial(twin: &mut dyn Twin, reqs: &[TwinRequest]) -> bool {
+    let serial: Vec<anyhow::Result<TwinResponse>> =
+        reqs.iter().map(|r| twin.run(r)).collect();
+    let batched = twin.run_batch(reqs);
+    if batched.len() != reqs.len() {
+        return false;
+    }
+    batched.iter().zip(&serial).all(|(b, s)| match (b, s) {
+        (Ok(b), Ok(s)) => {
+            b.trajectory == s.trajectory && b.backend == s.backend
+        }
+        (Err(_), Err(_)) => true,
+        _ => false,
+    })
+}
+
+fn gen_l96_requests(rng: &mut Pcg64, dim: usize) -> Vec<TwinRequest> {
+    let batch = 1 + rng.below(8) as usize;
+    (0..batch)
+        .map(|_| {
+            let n_points = [5, 11, 23][rng.below(3) as usize];
+            // Occasionally a wrong-dimension or empty h0 to exercise the
+            // per-request failure isolation (empty -> default dim-6 h0,
+            // which mismatches the toy dim-3 twin on both paths).
+            let h0 = match rng.below(8) {
+                0 => vec![],
+                1 => vec![1.0; dim + 1],
+                _ => (0..dim).map(|_| rng.uniform_in(-2.0, 2.0)).collect(),
+            };
+            TwinRequest::autonomous(h0, n_points)
+        })
+        .collect()
+}
+
+#[test]
+fn prop_l96_digital_run_batch_reproduces_serial_exactly() {
+    let twin = RefCell::new(Lorenz96Twin::digital(&l96_toy_weights(3)));
+    check(
+        &Config { cases: 48, ..Default::default() },
+        |r| gen_l96_requests(r, 3),
+        |reqs| batch_equals_serial(&mut *twin.borrow_mut(), reqs),
+    );
+}
+
+#[test]
+fn prop_l96_analog_run_batch_reproduces_serial_exactly() {
+    // NoiseMode::Off end to end: deployment is deterministic (quiet
+    // device), reads are noise-free, so batched == serial bit-for-bit.
+    let twin = RefCell::new(Lorenz96Twin::analog(
+        &l96_toy_weights(3),
+        &quiet_device(),
+        AnalogNoise::off(),
+        7,
+    ));
+    check(
+        &Config { cases: 12, ..Default::default() },
+        |r| gen_l96_requests(r, 3),
+        |reqs| batch_equals_serial(&mut *twin.borrow_mut(), reqs),
+    );
+}
+
+#[test]
+fn prop_hp_run_batch_reproduces_serial_exactly() {
+    let waves = [
+        Waveform::sine(1.0, 4.0),
+        Waveform::triangular(1.0, 4.0),
+        Waveform::rectangular(1.0, 4.0),
+        Waveform::modulated(1.0, 4.0, 1.0),
+    ];
+    let gen = move |r: &mut Pcg64| -> Vec<TwinRequest> {
+        let batch = 1 + r.below(8) as usize;
+        (0..batch)
+            .map(|_| {
+                let n_points = [8, 20][r.below(2) as usize];
+                let h0 = if r.below(6) == 0 {
+                    vec![]
+                } else {
+                    vec![r.uniform_in(0.1, 0.9)]
+                };
+                if r.below(8) == 0 {
+                    // Missing stimulus: must fail alone on both paths.
+                    TwinRequest::autonomous(h0, n_points)
+                } else {
+                    TwinRequest::driven(
+                        h0,
+                        n_points,
+                        waves[r.below(4) as usize],
+                    )
+                }
+            })
+            .collect()
+    };
+    let digital = RefCell::new(HpTwin::digital(&hp_toy_weights()));
+    check(
+        &Config { cases: 32, ..Default::default() },
+        gen,
+        |reqs| batch_equals_serial(&mut *digital.borrow_mut(), reqs),
+    );
+    let analog = RefCell::new(HpTwin::analog(
+        &hp_toy_weights(),
+        &quiet_device(),
+        AnalogNoise::off(),
+        3,
+    ));
+    check(
+        &Config { cases: 8, ..Default::default() },
+        gen,
+        |reqs| batch_equals_serial(&mut *analog.borrow_mut(), reqs),
+    );
+    let resnet = RefCell::new(HpTwin::resnet(&hp_toy_weights()));
+    check(
+        &Config { cases: 16, ..Default::default() },
+        gen,
+        |reqs| batch_equals_serial(&mut *resnet.borrow_mut(), reqs),
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Pipeline integration: batcher -> scheduler -> run_batch
+// ---------------------------------------------------------------------------
+
+struct ProbeTwin {
+    inner: Lorenz96Twin,
+    batch_sizes: Arc<Mutex<Vec<usize>>>,
+}
+
+impl Twin for ProbeTwin {
+    fn name(&self) -> &str {
+        "probe"
+    }
+    fn state_dim(&self) -> usize {
+        self.inner.state_dim()
+    }
+    fn dt(&self) -> f64 {
+        self.inner.dt()
+    }
+    fn default_h0(&self) -> Vec<f64> {
+        self.inner.default_h0()
+    }
+    fn run(&mut self, req: &TwinRequest) -> anyhow::Result<TwinResponse> {
+        self.inner.run(req)
+    }
+    fn run_batch(
+        &mut self,
+        reqs: &[TwinRequest],
+    ) -> Vec<anyhow::Result<TwinResponse>> {
+        self.batch_sizes.lock().unwrap().push(reqs.len());
+        self.inner.run_batch(reqs)
+    }
+}
+
+#[test]
+fn batcher_to_scheduler_executes_whole_batch_via_run_batch() {
+    let sizes: Arc<Mutex<Vec<usize>>> = Arc::default();
+    let mut registry = TwinRegistry::new();
+    let s2 = Arc::clone(&sizes);
+    registry.register("probe", move || {
+        Box::new(ProbeTwin {
+            inner: Lorenz96Twin::digital(&l96_toy_weights(3)),
+            batch_sizes: Arc::clone(&s2),
+        })
+    });
+    let telemetry = Arc::new(Telemetry::new());
+    let scheduler = Scheduler::start(1, registry, Arc::clone(&telemetry));
+
+    // Fill the batcher to max_batch: the 4th push emits the batch.
+    let mut batcher = Batcher::new(BatchPolicy {
+        max_batch: 4,
+        window: Duration::from_secs(100),
+    });
+    let h0s: Vec<Vec<f64>> = (0..4)
+        .map(|k| vec![k as f64 * 0.3 - 0.5, 0.1, -0.2])
+        .collect();
+    let mut replies = Vec::new();
+    let mut emitted = None;
+    for (id, h0) in h0s.iter().enumerate() {
+        let (tx, rx) = mpsc::channel();
+        replies.push(rx);
+        let batch = batcher.push(Job {
+            id: id as u64,
+            route: "probe".into(),
+            req: TwinRequest::autonomous(h0.clone(), 15),
+            enqueued: Instant::now(),
+            reply: tx,
+        });
+        if let Some(b) = batch {
+            emitted = Some(b);
+        }
+    }
+    let batch = emitted.expect("max_batch reached emits the batch");
+    assert_eq!(batch.jobs.len(), 4);
+    assert_eq!(batcher.pending_jobs(), 0);
+
+    scheduler.dispatch(batch).unwrap();
+
+    // Every job gets its own result, identical to a direct serial run.
+    let mut reference = Lorenz96Twin::digital(&l96_toy_weights(3));
+    for (rx, h0) in replies.iter().zip(&h0s) {
+        let jr = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let resp = jr.result.unwrap();
+        let want = reference
+            .run(&TwinRequest::autonomous(h0.clone(), 15))
+            .unwrap();
+        assert_eq!(resp.trajectory, want.trajectory);
+    }
+
+    // The whole batch executed as one run_batch call.
+    assert_eq!(*sizes.lock().unwrap(), vec![4]);
+    let snap = telemetry.snapshot();
+    assert_eq!(snap.batches, 1);
+    assert_eq!(snap.completed, 4);
+    assert!((snap.mean_batch - 4.0).abs() < 1e-9);
+}

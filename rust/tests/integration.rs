@@ -48,6 +48,15 @@ macro_rules! require_artifacts {
     };
 }
 
+macro_rules! require_pjrt {
+    () => {
+        if cfg!(not(feature = "pjrt")) {
+            eprintln!("skipping: built without the pjrt feature");
+            return;
+        }
+    };
+}
+
 // ---------------------------------------------------------------------------
 // PJRT vs Rust-native numerics (the central cross-layer contract)
 // ---------------------------------------------------------------------------
@@ -55,6 +64,7 @@ macro_rules! require_artifacts {
 #[test]
 fn pjrt_l96_rollout_matches_rust_rk4() {
     require_artifacts!();
+    require_pjrt!();
     let cfg = config();
     let weights = TrainedWeights::load(&cfg).unwrap();
     let svc = PjrtService::start(&cfg.artifacts_dir).unwrap();
@@ -82,6 +92,7 @@ fn pjrt_l96_rollout_matches_rust_rk4() {
 #[test]
 fn pjrt_hp_rollout_matches_rust_rk4() {
     require_artifacts!();
+    require_pjrt!();
     let cfg = config();
     let weights = TrainedWeights::load(&cfg).unwrap();
     let svc = PjrtService::start(&cfg.artifacts_dir).unwrap();
@@ -103,6 +114,7 @@ fn pjrt_hp_rollout_matches_rust_rk4() {
 #[test]
 fn pjrt_step_artifacts_consistent_with_rollout() {
     require_artifacts!();
+    require_pjrt!();
     let cfg = config();
     let svc = PjrtService::start(&cfg.artifacts_dir).unwrap();
     let h = svc.handle();
@@ -234,6 +246,7 @@ fn coordinator_serves_mixed_routes_with_real_twins() {
 #[test]
 fn coordinator_with_pjrt_routes_serves_aot_rollouts() {
     require_artifacts!();
+    require_pjrt!();
     let cfg = config();
     let weights = TrainedWeights::load(&cfg).unwrap();
     let svc = PjrtService::start(&cfg.artifacts_dir).unwrap();
