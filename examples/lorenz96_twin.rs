@@ -88,7 +88,7 @@ fn main() -> anyhow::Result<()> {
             AnalogNoise::hardware(),
             seed + rep * 1000 + 3,
         );
-        twin.simulate(&l96::Y0, steps)
+        twin.simulate(&l96::Y0, steps).map(|t| t.to_nested())
     };
     // Digital node + recurrent baselines (deterministic -> 1 trial each,
     // but re-run for symmetric reporting).
@@ -100,6 +100,7 @@ fn main() -> anyhow::Result<()> {
             Box::new(|_r| {
                 Lorenz96Twin::digital(&weights.l96_node)
                     .simulate(&l96::Y0, steps)
+                    .map(|t| t.to_nested())
             }),
         ),
         (
@@ -107,6 +108,7 @@ fn main() -> anyhow::Result<()> {
             Box::new(|_r| {
                 Lorenz96Twin::recurrent(&weights.l96_lstm)?
                     .simulate(&l96::Y0, steps)
+                    .map(|t| t.to_nested())
             }),
         ),
         (
@@ -114,6 +116,7 @@ fn main() -> anyhow::Result<()> {
             Box::new(|_r| {
                 Lorenz96Twin::recurrent(&weights.l96_gru)?
                     .simulate(&l96::Y0, steps)
+                    .map(|t| t.to_nested())
             }),
         ),
         (
@@ -121,6 +124,7 @@ fn main() -> anyhow::Result<()> {
             Box::new(|_r| {
                 Lorenz96Twin::recurrent(&weights.l96_rnn)?
                     .simulate(&l96::Y0, steps)
+                    .map(|t| t.to_nested())
             }),
         ),
     ];
@@ -200,7 +204,8 @@ fn main() -> anyhow::Result<()> {
                         seed + r * 5000 + (read * 1e4) as u64 * 17
                             + (prog * 1e4) as u64 * 31,
                     );
-                    let pred = twin.simulate(&l96::Y0, steps)?;
+                    let pred =
+                        twin.simulate(&l96::Y0, steps)?.to_nested();
                     let (_, e) = split_l1(&pred, &truth);
                     errs.push(e);
                 }

@@ -1,132 +1,83 @@
 //! Serial vs batched rollout throughput — the headline number of the
-//! batched execution engine.
+//! batched execution engine, emitted as the tracked benchmark
+//! `BENCH_batch_throughput.json` (ns per trajectory-step, serial vs
+//! batched, B ∈ {1, 8, 32, 128}, HP and Lorenz96 routes on the analogue
+//! and digital backends).
 //!
-//! For B in {1, 8, 32}, times B serial `Twin::run` calls against one
-//! `Twin::run_batch` call on the same twin, for the Lorenz96 twin on the
-//! Analog (hardware noise point) and Digital backends. Before timing,
-//! asserts the batched output is bit-identical to serial under
-//! `NoiseMode::Off` — speed never buys accuracy drift.
+//! Before timing, asserts the batched output is bit-identical to serial
+//! under `NoiseMode::Off` — speed never buys accuracy drift.
 //!
-//! The analogue batched path amortises, per circuit step: the weight-matrix
-//! traversal (one GEMM for the whole batch), the moment-matched variance
-//! computation (a contiguous GEMM instead of B strided column walks), and
-//! the per-step allocations of the serial drive path.
+//! Run: `cargo bench --bench batch_throughput [-- --smoke]`
 //!
-//! Run: `cargo bench --bench batch_throughput`
+//! `--smoke` (or `BENCH_SMOKE=1`) is the CI quick-bench mode: fewer
+//! iterations, shorter rollouts, B ∈ {1, 8, 32} — same JSON schema. The
+//! tier-1 test suite also writes the smoke document
+//! (`rust/tests/bench_smoke.rs`), so the JSON exists after any full test
+//! run; running this bench overwrites it with higher-fidelity numbers.
 
-use memode::analog::system::AnalogNoise;
-use memode::device::taox::DeviceConfig;
-use memode::models::loader::MlpWeights;
-use memode::twin::lorenz96::Lorenz96Twin;
-use memode::twin::{Twin, TwinRequest};
-use memode::util::bench::{black_box, fmt_dur, print_table, Bencher};
-use memode::util::rng::Pcg64;
-use memode::util::tensor::Mat;
+use std::time::Duration;
 
-/// Trained-shape Lorenz96 field: 6 -> 64 -> 64 -> 6 with pseudo-random
-/// weights (the timing-relevant structure of the real l96_node artifact).
-fn l96_weights() -> MlpWeights {
-    let mut rng = Pcg64::seeded(42);
-    let dims = [(6usize, 64usize), (64, 64), (64, 6)];
-    let layers = dims
-        .iter()
-        .map(|&(r, c)| {
-            (
-                Mat::from_fn(r, c, |_, _| rng.uniform_in(-0.2, 0.2)),
-                (0..c).map(|_| rng.uniform_in(-0.05, 0.05)).collect(),
-            )
-        })
-        .collect();
-    MlpWeights { layers, dt: 0.02, kind: "node".into(), task: "l96".into() }
-}
-
-fn requests(b: usize, n_points: usize) -> Vec<TwinRequest> {
-    let mut rng = Pcg64::seeded(7);
-    (0..b)
-        .map(|_| {
-            TwinRequest::autonomous(
-                (0..6).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
-                n_points,
-            )
-        })
-        .collect()
-}
-
-fn assert_bit_identical(twin: &mut dyn Twin, reqs: &[TwinRequest]) {
-    let serial: Vec<_> =
-        reqs.iter().map(|r| twin.run(r).unwrap()).collect();
-    let batched = twin.run_batch(reqs);
-    for (b, s) in batched.iter().zip(&serial) {
-        assert_eq!(
-            b.as_ref().unwrap().trajectory,
-            s.trajectory,
-            "batched != serial under noise-off"
-        );
-    }
-}
+use memode::twin::throughput::{
+    assert_bit_identical, default_json_path, measure, write_json,
+};
+use memode::util::bench::Bencher;
 
 fn main() {
-    let device = DeviceConfig { fault_rate: 0.0, ..Default::default() };
-    let quiet = DeviceConfig {
-        fault_rate: 0.0,
-        pulse_sigma: 0.0,
-        read_noise: 0.0,
-        ..Default::default()
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("BENCH_SMOKE").is_ok();
+    let (batch_sizes, n_points, bench): (&[usize], usize, Bencher) = if smoke
+    {
+        (
+            &[1, 8, 32],
+            12,
+            Bencher {
+                min_iters: 3,
+                target_time: Duration::from_millis(60),
+                warmup: Duration::from_millis(15),
+            },
+        )
+    } else {
+        (&[1, 8, 32, 128], 40, Bencher::quick())
     };
-    let w = l96_weights();
-    let n_points = 40;
 
     // Correctness gate first: noise-off batched == serial, bit for bit.
-    {
-        let mut twin =
-            Lorenz96Twin::analog(&w, &quiet, AnalogNoise::off(), 1);
-        assert_bit_identical(&mut twin, &requests(8, n_points));
-        let mut twin = Lorenz96Twin::digital(&w);
-        assert_bit_identical(&mut twin, &requests(8, n_points));
-        println!("bit-identity check (NoiseMode::Off): OK");
-    }
+    assert_bit_identical("hp/analog", 8, n_points);
+    assert_bit_identical("hp/digital", 8, n_points);
+    assert_bit_identical("l96/analog", 8, n_points);
+    assert_bit_identical("l96/digital", 8, n_points);
+    println!("bit-identity check (NoiseMode::Off): OK");
 
-    let bench = Bencher::quick();
-    let mut results = Vec::new();
-
-    for (label, mut twin) in [
-        (
-            "l96/analog",
-            Lorenz96Twin::analog(&w, &device, AnalogNoise::hardware(), 1),
-        ),
-        ("l96/digital", Lorenz96Twin::digital(&w)),
-    ] {
-        for &b in &[1usize, 8, 32] {
-            let reqs = requests(b, n_points);
-            let serial = bench.run(&format!("{label} serial x{b}"), || {
-                let mut n_ok = 0;
-                for r in black_box(&reqs) {
-                    n_ok += twin.run(r).unwrap().trajectory.len();
-                }
-                n_ok
-            });
-            let batched =
-                bench.run(&format!("{label} run_batch B={b}"), || {
-                    twin.run_batch(black_box(&reqs)).len()
-                });
-            let speedup = serial.median.as_secs_f64()
-                / batched.median.as_secs_f64().max(1e-12);
+    let entries = measure(batch_sizes, n_points, &bench);
+    println!(
+        "\n{:<14} {:>5} {:>16} {:>16} {:>9}",
+        "route", "B", "serial ns/step", "batched ns/step", "speedup"
+    );
+    for e in &entries {
+        println!(
+            "{:<14} {:>5} {:>16.1} {:>16.1} {:>8.2}x",
+            e.route,
+            e.batch,
+            e.serial_ns_per_step,
+            e.batched_ns_per_step,
+            e.speedup
+        );
+        if e.route == "hp/analog" && e.batch == 32 {
+            // Acceptance: >= 1.5x per trajectory-step at B=32 on the HP
+            // analogue route.
             println!(
-                "{label} B={b}: serial {} vs batched {} -> {speedup:.2}x",
-                fmt_dur(serial.median),
-                fmt_dur(batched.median),
+                "acceptance (hp/analog B=32 >= 1.5x): {}",
+                if e.speedup >= 1.5 { "PASS" } else { "FAIL" }
             );
-            if label == "l96/analog" && b == 32 {
-                // Acceptance: >= 4x at B=32 on the analogue twin.
-                println!(
-                    "acceptance (l96/analog B=32 >= 4x): {}",
-                    if speedup >= 4.0 { "PASS" } else { "FAIL" }
-                );
-            }
-            results.push(serial);
-            results.push(batched);
         }
     }
 
-    print_table("serial vs batched rollout", &results);
+    let path = default_json_path();
+    write_json(&path, if smoke { "smoke" } else { "full" }, &entries)
+        .expect("write benchmark json");
+    println!(
+        "\nwrote {} ({} entries, mode {})",
+        path.display(),
+        entries.len(),
+        if smoke { "smoke" } else { "full" }
+    );
 }

@@ -87,7 +87,7 @@ fn main() {
     );
     let mut ode = AnalogNeuralOde::new(mlp2, 6, 0.001);
     let r = bench.run("closed-loop 100 samples x 20 substeps", || {
-        ode.solve(black_box(&u), &mut |_t| vec![], 0.02, 100)
+        ode.solve(black_box(&u), &mut |_t, _x: &mut [f64]| {}, 0.02, 100)
     });
     let steps_per_s = (100.0 * 20.0) / r.median.as_secs_f64();
     results.push(r);

@@ -80,7 +80,8 @@ fn main() {
     let x0 = [0.5, -0.2, 0.1, 0.3, -0.4, 0.2];
     for &h in &hidden_sizes {
         // Neural ODE: one RK4 step.
-        let mut field = MlpField { mlp: node_mlp(h) };
+        let mut mlp = node_mlp(h);
+        let mut field = MlpField { mlp: &mut mlp };
         let mut stepper = Rk4::new(field.dim());
         let mut state = x0.to_vec();
         results.push(bench.run(&format!("node rk4-step h={h}"), || {

@@ -21,7 +21,7 @@ use crate::crossbar::vmm::{NoiseMode, VmmEngine};
 use crate::device::noise::NoiseSource;
 use crate::device::taox::DeviceConfig;
 use crate::util::rng::Pcg64;
-use crate::util::tensor::Mat;
+use crate::util::tensor::{Mat, Trajectory};
 
 /// Noise operating point (the Fig. 4j grid axes).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -307,6 +307,14 @@ pub struct AnalogNeuralOde {
     u: Vec<f64>,
     /// Scratch: MLP output (dh/dt).
     dh: Vec<f64>,
+    /// Scratch: the drive closure's per-trajectory stimulus buffer.
+    xbuf: Vec<f64>,
+    /// Scratch: batched integrator banks (batch * d_state, reused).
+    bank: Vec<IvpIntegrator>,
+    /// Scratch: batched [x_b; h_b] input rows.
+    us: Vec<f64>,
+    /// Scratch: batched MLP output.
+    dhs: Vec<f64>,
 }
 
 impl AnalogNeuralOde {
@@ -328,7 +336,19 @@ impl AnalogNeuralOde {
             .collect();
         let u = vec![0.0; mlp.d_in()];
         let dh = vec![0.0; d_state];
-        Self { mlp, integrators, d_drive, dt_circuit, u, dh }
+        let xbuf = vec![0.0; d_drive];
+        Self {
+            mlp,
+            integrators,
+            d_drive,
+            dt_circuit,
+            u,
+            dh,
+            xbuf,
+            bank: Vec::new(),
+            us: Vec::new(),
+            dhs: Vec::new(),
+        }
     }
 
     /// Current state (integrator capacitor voltages).
@@ -346,16 +366,19 @@ impl AnalogNeuralOde {
     }
 
     /// Solve the IVP, sampling the state every `dt_out` for `n_points`
-    /// samples (the first sample is h0 itself). `drive(t)` supplies the
-    /// external stimulus (must return `d_drive` values; pass `|_| vec![]`
-    /// for autonomous systems).
-    pub fn solve(
+    /// samples (the first sample is h0 itself), appended to `out` (reset
+    /// to row width `d_state`). `drive(t, x)` writes the external stimulus
+    /// into the `d_drive`-long slice `x` (a no-op closure for autonomous
+    /// systems). Allocation-free with a warm `out`: the stimulus and
+    /// input-vector buffers are owned scratch.
+    pub fn solve_into(
         &mut self,
         h0: &[f64],
-        drive: &mut dyn FnMut(f64) -> Vec<f64>,
+        drive: &mut dyn FnMut(f64, &mut [f64]),
         dt_out: f64,
         n_points: usize,
-    ) -> Vec<Vec<f64>> {
+        out: &mut Trajectory,
+    ) {
         self.set_initial(h0);
         for i in &mut self.integrators {
             i.start_integration();
@@ -363,15 +386,15 @@ impl AnalogNeuralOde {
         let substeps =
             ((dt_out / self.dt_circuit).round() as usize).max(1);
         let dt = dt_out / substeps as f64;
-        let mut out = Vec::with_capacity(n_points);
-        out.push(self.state());
+        out.reset(self.integrators.len());
+        out.reserve_rows(n_points.max(1));
+        out.push_row_from_iter(self.integrators.iter().map(|i| i.v));
         let mut t = 0.0;
         for _ in 1..n_points {
             for _ in 0..substeps {
                 // Assemble u = [x(t); h(t)].
-                let x = drive(t);
-                debug_assert_eq!(x.len(), self.d_drive);
-                self.u[..self.d_drive].copy_from_slice(&x);
+                drive(t, &mut self.xbuf);
+                self.u[..self.d_drive].copy_from_slice(&self.xbuf);
                 for (slot, integ) in self.u[self.d_drive..]
                     .iter_mut()
                     .zip(&self.integrators)
@@ -388,37 +411,52 @@ impl AnalogNeuralOde {
                 }
                 t += dt;
             }
-            out.push(self.state());
+            out.push_row_from_iter(self.integrators.iter().map(|i| i.v));
         }
         for i in &mut self.integrators {
             i.stop();
         }
+    }
+
+    /// Allocating convenience wrapper around [`AnalogNeuralOde::solve_into`].
+    pub fn solve(
+        &mut self,
+        h0: &[f64],
+        drive: &mut dyn FnMut(f64, &mut [f64]),
+        dt_out: f64,
+        n_points: usize,
+    ) -> Trajectory {
+        let mut out = Trajectory::new(self.integrators.len());
+        self.solve_into(h0, drive, dt_out, n_points, &mut out);
         out
     }
 
     /// Batched IVP solve: `batch` trajectories integrated in lockstep from
     /// the flat `[batch * d_state]` initial states `h0s`, sampling each
-    /// every `dt_out` for `n_points` samples. Returns
-    /// `[batch][n_points][d_state]`.
+    /// every `dt_out` for `n_points` samples into `out` (reset to row
+    /// width `batch * d_state`; split per trajectory with
+    /// [`crate::ode::batch::unbatch_into`]).
     ///
     /// Every circuit step performs **one shared multi-vector device read**
     /// ([`AnalogMlp::eval_batch_into`]) feeding `batch` private integrator
     /// banks — the physical picture of a crossbar serving B concurrent
     /// twins, and the core amortisation of the batched execution engine.
-    /// `drive(b, t, out)` writes trajectory `b`'s stimulus (`d_drive`
-    /// values; `out` is empty for autonomous systems). The integrator banks
-    /// are clones of this solver's integrators, so circuit parameters
-    /// (tau, leak, rails) match the serial path exactly: with read noise
+    /// `drive(b, t, x)` writes trajectory `b`'s stimulus (`d_drive`
+    /// values; `x` is empty for autonomous systems). The integrator banks
+    /// are clones of this solver's integrators held in owned scratch, so
+    /// circuit parameters (tau, leak, rails) match the serial path exactly
+    /// and a warm solver performs zero heap allocations: with read noise
     /// off, each trajectory reproduces [`AnalogNeuralOde::solve`]
     /// bit-for-bit. The serial integrator state is left untouched.
-    pub fn solve_batch(
+    pub fn solve_batch_into(
         &mut self,
         h0s: &[f64],
         batch: usize,
         drive: &mut dyn FnMut(usize, f64, &mut [f64]),
         dt_out: f64,
         n_points: usize,
-    ) -> Vec<Vec<Vec<f64>>> {
+        out: &mut Trajectory,
+    ) {
         let d_state = self.integrators.len();
         let d_in = self.mlp.d_in();
         assert_eq!(
@@ -429,12 +467,17 @@ impl AnalogNeuralOde {
             batch,
             d_state
         );
-        // Per-trajectory integrator banks, cloned so circuit parameters
-        // (and therefore the update rule) match the serial solver.
-        let mut integrators: Vec<IvpIntegrator> = (0..batch)
-            .flat_map(|_| self.integrators.iter().cloned())
-            .collect();
-        for (integ, &v0) in integrators.iter_mut().zip(h0s) {
+        // Per-trajectory integrator banks, cloned (into reused scratch) so
+        // circuit parameters — and therefore the update rule — match the
+        // serial solver.
+        self.bank.clear();
+        self.bank.reserve(batch * d_state);
+        for _ in 0..batch {
+            for src in &self.integrators {
+                self.bank.push(src.clone());
+            }
+        }
+        for (integ, &v0) in self.bank.iter_mut().zip(h0s) {
             integ.stop();
             integ.set_initial(v0);
             integ.start_integration();
@@ -442,52 +485,54 @@ impl AnalogNeuralOde {
         let substeps =
             ((dt_out / self.dt_circuit).round() as usize).max(1);
         let dt = dt_out / substeps as f64;
-        let mut us = vec![0.0; batch * d_in];
-        let mut dhs = vec![0.0; batch * d_state];
-        let mut xbuf = vec![0.0; self.d_drive];
-        let sample = |integrators: &[IvpIntegrator], b: usize| -> Vec<f64> {
-            integrators[b * d_state..(b + 1) * d_state]
-                .iter()
-                .map(|i| i.v)
-                .collect()
-        };
-        let mut out: Vec<Vec<Vec<f64>>> = (0..batch)
-            .map(|b| {
-                let mut t = Vec::with_capacity(n_points);
-                t.push(sample(&integrators, b));
-                t
-            })
-            .collect();
+        self.us.resize(batch * d_in, 0.0);
+        self.dhs.resize(batch * d_state, 0.0);
+        out.reset(batch * d_state);
+        out.reserve_rows(n_points.max(1));
+        out.push_row_from_iter(self.bank.iter().map(|i| i.v));
         let mut t = 0.0;
         for _ in 1..n_points {
             for _ in 0..substeps {
                 // Assemble every trajectory's u = [x_b(t); h_b(t)].
                 for b in 0..batch {
-                    drive(b, t, &mut xbuf);
-                    let u = &mut us[b * d_in..(b + 1) * d_in];
-                    u[..self.d_drive].copy_from_slice(&xbuf);
+                    drive(b, t, &mut self.xbuf);
+                    let u = &mut self.us[b * d_in..(b + 1) * d_in];
+                    u[..self.d_drive].copy_from_slice(&self.xbuf);
                     for (slot, integ) in u[self.d_drive..]
                         .iter_mut()
-                        .zip(&integrators[b * d_state..(b + 1) * d_state])
+                        .zip(&self.bank[b * d_state..(b + 1) * d_state])
                     {
                         *slot = integ.v;
                     }
                 }
                 // One shared analogue read for the whole batch.
-                self.mlp.eval_batch_into(&us, batch, &mut dhs);
+                self.mlp.eval_batch_into(&self.us, batch, &mut self.dhs);
                 // Feed every integrator bank.
-                for (integ, &d) in integrators.iter_mut().zip(dhs.iter()) {
+                for (integ, &d) in self.bank.iter_mut().zip(self.dhs.iter())
+                {
                     integ.step(d, dt);
                 }
                 t += dt;
             }
-            for (b, traj) in out.iter_mut().enumerate() {
-                traj.push(sample(&integrators, b));
-            }
+            out.push_row_from_iter(self.bank.iter().map(|i| i.v));
         }
-        for i in &mut integrators {
+        for i in &mut self.bank {
             i.stop();
         }
+    }
+
+    /// Allocating convenience wrapper around
+    /// [`AnalogNeuralOde::solve_batch_into`].
+    pub fn solve_batch(
+        &mut self,
+        h0s: &[f64],
+        batch: usize,
+        drive: &mut dyn FnMut(usize, f64, &mut [f64]),
+        dt_out: f64,
+        n_points: usize,
+    ) -> Trajectory {
+        let mut out = Trajectory::new(batch * self.integrators.len());
+        self.solve_batch_into(h0s, batch, drive, dt_out, n_points, &mut out);
         out
     }
 }
@@ -522,7 +567,8 @@ mod tests {
         // dh/dt = -h from h0 = 1 -> h(t) = e^{-t}.
         let mlp = AnalogMlp::ideal(&linear_decay_layers(), 2);
         let mut ode = AnalogNeuralOde::new(mlp, 1, 1e-4);
-        let traj = ode.solve(&[1.0], &mut |_t| vec![], 0.1, 11);
+        let traj =
+            ode.solve(&[1.0], &mut |_t, _x: &mut [f64]| {}, 0.1, 11);
         assert_eq!(traj.len(), 11);
         for (k, row) in traj.iter().enumerate() {
             let want = (-(k as f64) * 0.1).exp();
@@ -545,7 +591,12 @@ mod tests {
             vec![LayerWeights::new(&w1, &b1), LayerWeights::new(&w2, &b2)];
         let mlp = AnalogMlp::ideal(&layers, 3);
         let mut ode = AnalogNeuralOde::new(mlp, 1, 1e-4);
-        let traj = ode.solve(&[0.0], &mut |_t| vec![1.0], 0.5, 11);
+        let traj = ode.solve(
+            &[0.0],
+            &mut |_t, x: &mut [f64]| x[0] = 1.0,
+            0.5,
+            11,
+        );
         // After 5 time constants h ~ 1.
         let h_end = traj.last().unwrap()[0];
         assert!((h_end - 1.0).abs() < 0.01, "h_end={h_end}");
@@ -646,9 +697,13 @@ mod tests {
             0.1,
             11,
         );
+        assert_eq!(batched.dim(), 3);
         for (b, &h0) in h0s.iter().enumerate() {
-            let serial = ode.solve(&[h0], &mut |_t| vec![], 0.1, 11);
-            assert_eq!(batched[b], serial, "traj {b}");
+            let serial =
+                ode.solve(&[h0], &mut |_t, _x: &mut [f64]| {}, 0.1, 11);
+            for (row, srow) in batched.iter().zip(&serial) {
+                assert_eq!(row[b], srow[0], "traj {b}");
+            }
         }
     }
 
@@ -672,9 +727,48 @@ mod tests {
             6,
         );
         for (b, &amp) in drives.iter().enumerate() {
-            let serial = ode.solve(&[0.0], &mut |_t| vec![amp], 0.2, 6);
-            assert_eq!(batched[b], serial, "traj {b}");
+            let serial = ode.solve(
+                &[0.0],
+                &mut |_t, x: &mut [f64]| x[0] = amp,
+                0.2,
+                6,
+            );
+            for (row, srow) in batched.iter().zip(&serial) {
+                assert_eq!(row[b], srow[0], "traj {b}");
+            }
         }
+    }
+
+    #[test]
+    fn warm_solver_scratch_is_bit_stable_across_batch_sizes() {
+        // Alternating batch sizes through the same solver instance must
+        // reproduce a fresh solver's output exactly (the pooled bank /
+        // us / dhs scratch never leaks state between calls).
+        let mlp = AnalogMlp::ideal(&linear_decay_layers(), 2);
+        let mut warm = AnalogNeuralOde::new(mlp.clone(), 1, 1e-3);
+        let _ = warm.solve_batch(
+            &[0.3, -0.7, 0.9, 0.1],
+            4,
+            &mut |_b, _t, _x| {},
+            0.1,
+            7,
+        );
+        let got = warm.solve_batch(
+            &[1.0, -0.5],
+            2,
+            &mut |_b, _t, _x| {},
+            0.1,
+            5,
+        );
+        let mut fresh = AnalogNeuralOde::new(mlp, 1, 1e-3);
+        let want = fresh.solve_batch(
+            &[1.0, -0.5],
+            2,
+            &mut |_b, _t, _x| {},
+            0.1,
+            5,
+        );
+        assert_eq!(got, want);
     }
 
     #[test]

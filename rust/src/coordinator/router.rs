@@ -122,7 +122,10 @@ mod tests {
             vec![]
         }
         fn run(&mut self, _r: &TwinRequest) -> Result<TwinResponse> {
-            Ok(TwinResponse { trajectory: vec![], backend: "null".into() })
+            Ok(TwinResponse {
+                trajectory: crate::util::tensor::Trajectory::new(1),
+                backend: "null",
+            })
         }
     }
 

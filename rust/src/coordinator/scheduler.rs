@@ -108,8 +108,14 @@ fn spawn_worker(
     std::thread::Builder::new()
         .name(format!("twin-worker-{index}"))
         .spawn(move || {
-            // Worker-private warm twin instances.
+            // Worker-private warm twin instances, plus reusable request /
+            // result staging vectors. The vectors themselves never re-grow
+            // once warm; the per-job `req.clone()` payloads (h0 vectors)
+            // still allocate per batch — the zero-allocation contract
+            // covers the twins' `run_batch_into`, not this dispatch shim.
             let mut twins: BTreeMap<String, Box<dyn Twin>> = BTreeMap::new();
+            let mut reqs: Vec<TwinRequest> = Vec::new();
+            let mut results: Vec<anyhow::Result<TwinResponse>> = Vec::new();
             while let Ok(batch) = rx.recv() {
                 let n = batch.jobs.len();
                 telemetry.batches.fetch_add(1, Ordering::Relaxed);
@@ -130,25 +136,23 @@ fn spawn_worker(
                     }
                 };
                 let t0 = Instant::now();
-                let mut results: Vec<anyhow::Result<TwinResponse>> =
-                    match twin {
-                        Ok(t) => {
-                            let reqs: Vec<TwinRequest> = batch
-                                .jobs
-                                .iter()
-                                .map(|j| j.req.clone())
-                                .collect();
-                            t.run_batch(&reqs)
-                        }
-                        Err(e) => {
-                            let msg = format!("{e:#}");
+                results.clear();
+                match twin {
+                    Ok(t) => {
+                        reqs.clear();
+                        reqs.extend(
+                            batch.jobs.iter().map(|j| j.req.clone()),
+                        );
+                        t.run_batch_into(&reqs, &mut results);
+                    }
+                    Err(e) => {
+                        let msg = format!("{e:#}");
+                        results.extend(
                             (0..n)
-                                .map(|_| {
-                                    Err(anyhow::anyhow!(msg.clone()))
-                                })
-                                .collect()
-                        }
-                    };
+                                .map(|_| Err(anyhow::anyhow!(msg.clone()))),
+                        );
+                    }
+                }
                 // Defensive: a twin returning the wrong arity must not
                 // leave submitters hanging.
                 if results.len() != n {
@@ -156,13 +160,14 @@ fn spawn_worker(
                         "twin '{route}' returned {} results for {n} jobs",
                         results.len()
                     );
-                    results = (0..n)
-                        .map(|_| Err(anyhow::anyhow!(msg.clone())))
-                        .collect();
+                    results.clear();
+                    results.extend(
+                        (0..n).map(|_| Err(anyhow::anyhow!(msg.clone()))),
+                    );
                 }
                 let exec_s = t0.elapsed().as_secs_f64();
                 for ((job, result), wait_s) in
-                    batch.jobs.into_iter().zip(results).zip(waits)
+                    batch.jobs.into_iter().zip(results.drain(..)).zip(waits)
                 {
                     match &result {
                         Ok(_) => {
@@ -192,6 +197,7 @@ fn spawn_worker(
 mod tests {
     use super::*;
     use crate::twin::{TwinRequest, TwinResponse};
+    use crate::util::tensor::Trajectory;
     use std::time::Duration;
 
     struct EchoTwin;
@@ -214,8 +220,8 @@ mod tests {
             req: &TwinRequest,
         ) -> anyhow::Result<TwinResponse> {
             Ok(TwinResponse {
-                trajectory: vec![req.h0.clone(); req.n_points],
-                backend: "echo".into(),
+                trajectory: Trajectory::repeat_row(&req.h0, req.n_points),
+                backend: "echo",
             })
         }
     }
@@ -253,7 +259,7 @@ mod tests {
             let r = rx.recv_timeout(Duration::from_secs(2)).unwrap();
             assert_eq!(r.id, id as u64);
             let resp = r.result.unwrap();
-            assert_eq!(resp.trajectory[0], vec![id as f64]);
+            assert_eq!(resp.trajectory.row(0), [id as f64]);
         }
         let s = tel.snapshot();
         assert_eq!(s.completed, 4);
@@ -304,8 +310,11 @@ mod tests {
                 req: &TwinRequest,
             ) -> anyhow::Result<TwinResponse> {
                 Ok(TwinResponse {
-                    trajectory: vec![req.h0.clone(); req.n_points],
-                    backend: "probe".into(),
+                    trajectory: Trajectory::repeat_row(
+                        &req.h0,
+                        req.n_points,
+                    ),
+                    backend: "probe",
                 })
             }
             fn run_batch(
@@ -331,8 +340,8 @@ mod tests {
             let r = rx.recv_timeout(Duration::from_secs(2)).unwrap();
             assert_eq!(r.id, id as u64);
             assert_eq!(
-                r.result.unwrap().trajectory[0],
-                vec![id as f64]
+                r.result.unwrap().trajectory.row(0),
+                [id as f64]
             );
         }
         // One dispatch = one run_batch call covering all five jobs.

@@ -100,6 +100,7 @@ impl Coordinator {
 mod tests {
     use super::*;
     use crate::twin::Twin;
+    use crate::util::tensor::Trajectory;
 
     struct CounterTwin {
         calls: u64,
@@ -121,8 +122,11 @@ mod tests {
         fn run(&mut self, req: &TwinRequest) -> Result<TwinResponse> {
             self.calls += 1;
             Ok(TwinResponse {
-                trajectory: vec![vec![self.calls as f64]; req.n_points],
-                backend: "counter".into(),
+                trajectory: Trajectory::repeat_row(
+                    &[self.calls as f64],
+                    req.n_points,
+                ),
+                backend: "counter",
             })
         }
     }
@@ -194,7 +198,7 @@ mod tests {
         let resp = coord
             .call("counter", TwinRequest::autonomous(vec![], 1))
             .unwrap();
-        assert_eq!(resp.trajectory[0][0], 5.0);
+        assert_eq!(resp.trajectory.row(0)[0], 5.0);
     }
 
     #[test]
@@ -222,8 +226,11 @@ mod tests {
                 req: &TwinRequest,
             ) -> Result<TwinResponse> {
                 Ok(TwinResponse {
-                    trajectory: vec![vec![0.0]; req.n_points],
-                    backend: "probe".into(),
+                    trajectory: Trajectory::repeat_row(
+                        &[0.0],
+                        req.n_points,
+                    ),
+                    backend: "probe",
                 })
             }
             fn run_batch(

@@ -44,10 +44,15 @@ pub struct VmmEngine {
     pub mode: NoiseMode,
     /// Scratch for v^2 (hot path, no allocation).
     v2: Vec<f64>,
-    /// Batched scratch: stacked v^2 rows (grown on first batched call).
+    /// Batched scratch: stacked v^2 rows (reserved once per max batch).
     v2b: Vec<f64>,
     /// Batched scratch: stacked per-output variances.
     varb: Vec<f64>,
+    /// Largest batch the scratch has been reserved for. Tracking the
+    /// high-water mark lets [`VmmEngine::vmm_batch_into`] reserve exactly
+    /// once per new maximum instead of letting `resize` re-grow
+    /// geometrically while batch sizes alternate across sub-batches.
+    max_batch: usize,
 }
 
 impl VmmEngine {
@@ -79,6 +84,7 @@ impl VmmEngine {
             v2,
             v2b: Vec::new(),
             varb: Vec::new(),
+            max_batch: 0,
         }
     }
 
@@ -99,6 +105,7 @@ impl VmmEngine {
             v2,
             v2b: Vec::new(),
             varb: Vec::new(),
+            max_batch: 0,
         }
     }
 
@@ -115,6 +122,28 @@ impl VmmEngine {
             v2,
             v2b: Vec::new(),
             varb: Vec::new(),
+            max_batch: 0,
+        }
+    }
+
+    /// Reserve the batched scratch for the largest batch seen so far.
+    ///
+    /// `Vec::resize` alone would also never shrink, but its growth path is
+    /// geometric-amortised; reserving exactly at each new high-water mark
+    /// keeps the scratch at the size actually needed and makes the warm
+    /// path's no-allocation property explicit (a batch ≤ `max_batch` can
+    /// never touch the allocator).
+    fn ensure_batch_scratch(&mut self, batch: usize) {
+        if batch > self.max_batch {
+            self.max_batch = batch;
+            let need_v2b = batch * self.w_eff.rows;
+            if self.v2b.capacity() < need_v2b {
+                self.v2b.reserve_exact(need_v2b - self.v2b.len());
+            }
+            let need_varb = batch * self.w_eff.cols;
+            if self.varb.capacity() < need_varb {
+                self.varb.reserve_exact(need_varb - self.varb.len());
+            }
         }
     }
 
@@ -224,6 +253,7 @@ impl VmmEngine {
                 if self.read_noise.is_off() {
                     return;
                 }
+                self.ensure_batch_scratch(batch);
                 self.v2b.resize(batch * rows, 0.0);
                 for (dst, &src) in self.v2b.iter_mut().zip(vs) {
                     *dst = src * src;
@@ -417,6 +447,23 @@ mod tests {
         let mut eng = VmmEngine::ideal(Mat::zeros(2, 2));
         let mut ys = vec![0.0; 4];
         eng.vmm_batch_into(&[0.0; 3], 2, &mut ys, &mut Pcg64::seeded(1));
+    }
+
+    #[test]
+    fn batched_scratch_reserved_once_for_largest_batch() {
+        // Alternating batch sizes must leave the scratch reserved at the
+        // high-water mark (no re-growth churn between sub-batches).
+        let (arr, noise) = deployed(21, 0.05);
+        let mut eng = VmmEngine::new(&arr, noise, NoiseMode::Fast);
+        let mut rng = Pcg64::seeded(3);
+        for &b in &[8usize, 2, 8, 1, 5, 8] {
+            let vs = vec![0.1; b * 8];
+            let ys = eng.vmm_batch(&vs, b, &mut rng);
+            assert_eq!(ys.len(), b * 6);
+        }
+        assert_eq!(eng.max_batch, 8);
+        assert!(eng.v2b.capacity() >= 8 * 8, "v2b under-reserved");
+        assert!(eng.varb.capacity() >= 8 * 6, "varb under-reserved");
     }
 
     #[test]

@@ -49,6 +49,45 @@
 //! batched trajectories are bit-identical to serial runs — a contract
 //! enforced by `rust/tests/batched.rs`.
 //!
+//! ## Perf invariants (the zero-allocation hot path)
+//!
+//! Three structural invariants keep the steady-state request path off the
+//! allocator and cache-friendly; new code on the hot path must preserve
+//! them (they are enforced by `rust/tests/alloc.rs`, the bit-identity
+//! suite in `rust/tests/batched.rs`, and the tracked benchmark
+//! `BENCH_batch_throughput.json` written by
+//! [`twin::throughput`] / `cargo bench --bench batch_throughput`):
+//!
+//! 1. **Flat trajectory layout.** Solver output is
+//!    [`util::tensor::Trajectory`] — one contiguous row-major buffer, row
+//!    = one sample (`dim = batch * d` for lockstep batched solves) — at
+//!    every layer from `ode::{euler, rk4, dopri5}` through
+//!    [`analog::system::AnalogNeuralOde`] and the twins to
+//!    `twin::TwinResponse`. Nested `Vec<Vec<f64>>` is reserved for
+//!    report/metric code (`Trajectory::to_nested`).
+//! 2. **Accumulation-order contract.** The tiled batched GEMM
+//!    (`util::tensor::Mat::vecmat_batch_into`) may reorder *memory
+//!    traversal* freely (column-blocked microkernel, contiguous tiles)
+//!    but must keep each output element's floating-point accumulation
+//!    order over the shared dimension — including the zero-input skip —
+//!    identical to the serial `vecmat_into`. That is what makes noise-off
+//!    batched rollouts bit-identical to serial ones, and it is the
+//!    invariant to re-verify before touching any kernel.
+//! 3. **Scratch-arena ownership.** Every hot-path worker object owns its
+//!    reusable scratch: solver steppers (`ode::rk4::Rk4`,
+//!    `ode::euler::Euler`) their stage buffers; the analogue loop its
+//!    integrator bank, stacked inputs and drive buffer; `VmmEngine` its
+//!    batched noise scratch (reserved once per largest batch seen); the
+//!    twins their group plans, staging vectors and pooled response
+//!    trajectories (`util::tensor::TrajectoryPool`, refilled via
+//!    `recycle`); the scheduler workers their request/result staging
+//!    vectors (request *payload* clones still allocate at the dispatch
+//!    shim — the zero-allocation contract is scoped to the twins'
+//!    `run_batch_into`). Drive closures write into caller-provided slices
+//!    (`FnMut(f64, &mut [f64])`) instead of returning fresh `Vec`s. A
+//!    warm `Twin::run_batch_into` therefore performs **zero** heap
+//!    allocations in steady state.
+//!
 //! Python never runs on the request path: after `make artifacts` the Rust
 //! binary is self-contained.
 

@@ -236,8 +236,10 @@ fn run_twin(argv: Vec<String>) -> Result<()> {
     // Ground-truth comparison for the Lorenz96 twin (normalized space).
     if route.starts_with("lorenz96/") {
         let truth = lorenz96::simulate_normalized(resp.trajectory.len());
-        let l1 =
-            memode::metrics::l1::mean_l1_multi(&resp.trajectory, &truth);
+        let l1 = memode::metrics::l1::mean_l1_multi(
+            &resp.trajectory.to_nested(),
+            &truth,
+        );
         println!("  mean L1 vs ground truth over horizon: {l1:.4}");
     }
     Ok(())

@@ -141,11 +141,15 @@ impl Mlp {
 }
 
 /// An autonomous neural-ODE vector field dh/dt = mlp(h).
-pub struct MlpField {
-    pub mlp: Mlp,
+///
+/// Borrows the twin's MLP instead of owning a clone, so constructing a
+/// field per request costs nothing — part of the zero-allocation request
+/// path.
+pub struct MlpField<'a> {
+    pub mlp: &'a mut Mlp,
 }
 
-impl VectorField for MlpField {
+impl VectorField for MlpField<'_> {
     fn dim(&self) -> usize {
         self.mlp.d_out()
     }
@@ -155,23 +159,25 @@ impl VectorField for MlpField {
     }
 }
 
-/// A driven neural-ODE field dh/dt = mlp([x(t); h]) with a stimulus closure.
-pub struct DrivenMlpField<F: FnMut(f64) -> f64> {
-    pub mlp: Mlp,
+/// A driven neural-ODE field dh/dt = mlp([x(t); h]) with a stimulus
+/// closure. Borrows the MLP; the `[x; h]` staging buffer is owned (one
+/// small allocation per construction — the serial path's only one).
+pub struct DrivenMlpField<'a, F: FnMut(f64) -> f64> {
+    pub mlp: &'a mut Mlp,
     pub drive: F,
     /// Scratch [x; h].
     u: Vec<f64>,
 }
 
-impl<F: FnMut(f64) -> f64> DrivenMlpField<F> {
+impl<'a, F: FnMut(f64) -> f64> DrivenMlpField<'a, F> {
     /// Single-input drive (the HP twin's voltage stimulus).
-    pub fn new(mlp: Mlp, drive: F) -> Self {
+    pub fn new(mlp: &'a mut Mlp, drive: F) -> Self {
         let u = vec![0.0; mlp.d_in()];
         Self { mlp, drive, u }
     }
 }
 
-impl<F: FnMut(f64) -> f64> VectorField for DrivenMlpField<F> {
+impl<F: FnMut(f64) -> f64> VectorField for DrivenMlpField<'_, F> {
     fn dim(&self) -> usize {
         self.mlp.d_out()
     }
@@ -183,14 +189,14 @@ impl<F: FnMut(f64) -> f64> VectorField for DrivenMlpField<F> {
     }
 }
 
-/// A batch of B autonomous neural-ODE trajectories sharing one MLP:
-/// dh_b/dt = mlp(h_b), evaluated with one GEMM per layer.
-pub struct BatchMlpField {
-    pub mlp: Mlp,
+/// A batch of B autonomous neural-ODE trajectories sharing one (borrowed)
+/// MLP: dh_b/dt = mlp(h_b), evaluated with one GEMM per layer.
+pub struct BatchMlpField<'a> {
+    pub mlp: &'a mut Mlp,
     pub batch: usize,
 }
 
-impl BatchVectorField for BatchMlpField {
+impl BatchVectorField for BatchMlpField<'_> {
     fn dim(&self) -> usize {
         self.mlp.d_out()
     }
@@ -207,24 +213,31 @@ impl BatchVectorField for BatchMlpField {
 /// A batch of B driven neural-ODE trajectories dh_b/dt = mlp([x_b(t); h_b])
 /// with a per-trajectory stimulus closure `drive(b, t)` (single drive line,
 /// like [`DrivenMlpField`]). The shared MLP still runs one GEMM per layer;
-/// only the stimulus differs per trajectory.
-pub struct BatchDrivenMlpField<F: FnMut(usize, f64) -> f64> {
-    pub mlp: Mlp,
+/// only the stimulus differs per trajectory. Both the MLP and the stacked
+/// `[x_b; h_b]` staging buffer are borrowed, so the twin's reusable scratch
+/// makes field construction allocation-free.
+pub struct BatchDrivenMlpField<'a, F: FnMut(usize, f64) -> f64> {
+    pub mlp: &'a mut Mlp,
     pub batch: usize,
     pub drive: F,
-    /// Scratch: stacked [x_b; h_b] rows.
-    u: Vec<f64>,
+    /// Scratch: stacked [x_b; h_b] rows (caller-owned, resized in `new`).
+    u: &'a mut Vec<f64>,
 }
 
-impl<F: FnMut(usize, f64) -> f64> BatchDrivenMlpField<F> {
-    pub fn new(mlp: Mlp, batch: usize, drive: F) -> Self {
-        let u = vec![0.0; batch * mlp.d_in()];
+impl<'a, F: FnMut(usize, f64) -> f64> BatchDrivenMlpField<'a, F> {
+    pub fn new(
+        mlp: &'a mut Mlp,
+        batch: usize,
+        drive: F,
+        u: &'a mut Vec<f64>,
+    ) -> Self {
+        u.resize(batch * mlp.d_in(), 0.0);
         Self { mlp, batch, drive, u }
     }
 }
 
 impl<F: FnMut(usize, f64) -> f64> BatchVectorField
-    for BatchDrivenMlpField<F>
+    for BatchDrivenMlpField<'_, F>
 {
     fn dim(&self) -> usize {
         self.mlp.d_out()
@@ -243,7 +256,7 @@ impl<F: FnMut(usize, f64) -> f64> BatchVectorField
             row[0] = (self.drive)(b, t);
             row[1..].copy_from_slice(&xs[b * d_s..(b + 1) * d_s]);
         }
-        self.mlp.forward_batch_into(&self.u, self.batch, out);
+        self.mlp.forward_batch_into(&self.u[..], self.batch, out);
     }
 }
 
@@ -292,7 +305,8 @@ mod tests {
     #[test]
     fn field_wrappers() {
         use crate::ode::func::VectorField;
-        let mut f = MlpField { mlp: toy() };
+        let mut m = toy();
+        let mut f = MlpField { mlp: &mut m };
         assert_eq!(f.dim(), 1);
         // field gets [h1, h2]... dim mismatch: toy d_in = 2, d_out = 1, so
         // MlpField as autonomous is ill-typed for solving, but eval works
@@ -301,7 +315,8 @@ mod tests {
         f.eval_into(0.0, &[1.0, 0.25], &mut out);
         assert!((out[0] - 0.75).abs() < 1e-12);
 
-        let mut df = DrivenMlpField::new(toy(), |t| t);
+        let mut m2 = toy();
+        let mut df = DrivenMlpField::new(&mut m2, |t| t);
         let mut out = [0.0];
         df.eval_into(2.0, &[0.5], &mut out);
         assert!((out[0] - 1.5).abs() < 1e-12); // x=2 (drive), h=0.5
@@ -332,13 +347,20 @@ mod tests {
     #[test]
     fn batch_driven_field_matches_serial_driven_field() {
         use crate::ode::batch::BatchVectorField;
-        let mut bf = BatchDrivenMlpField::new(toy(), 2, |b, t| {
-            (b as f64 + 1.0) * t
-        });
+        let mut m = toy();
+        let mut u = Vec::new();
+        let mut bf = BatchDrivenMlpField::new(
+            &mut m,
+            2,
+            |b, t| (b as f64 + 1.0) * t,
+            &mut u,
+        );
         let mut out = [0.0; 2];
         bf.eval_batch_into(2.0, &[0.5, -0.25], &mut out);
-        let mut d1 = DrivenMlpField::new(toy(), |t| t);
-        let mut d2 = DrivenMlpField::new(toy(), |t| 2.0 * t);
+        let mut m1 = toy();
+        let mut d1 = DrivenMlpField::new(&mut m1, |t| t);
+        let mut m2 = toy();
+        let mut d2 = DrivenMlpField::new(&mut m2, |t| 2.0 * t);
         let mut o1 = [0.0];
         let mut o2 = [0.0];
         d1.eval_into(2.0, &[0.5], &mut o1);

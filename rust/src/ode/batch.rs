@@ -18,6 +18,7 @@
 //!   are built on it).
 
 use crate::ode::func::VectorField;
+use crate::util::tensor::Trajectory;
 
 /// A batch of B independent vector fields dx_b/dt = f(t, x_b), evaluated
 /// together over a flat row-major `[batch * dim]` state.
@@ -80,25 +81,43 @@ impl VectorField for Flattened<'_> {
     }
 }
 
-/// Reassemble flat solver output `[n][batch * dim]` into per-trajectory
-/// trajectories `[batch][n][dim]` (the twin-facing layout).
-pub fn unbatch_trajectories(
-    flat: &[Vec<f64>],
+/// Copy trajectory `b` out of a flat batched solve (rows of width
+/// `batch * dim`) into `out` (reset to row width `dim`). Allocation-free
+/// with a warm `out` — the twins use this with pooled trajectories to
+/// fan one batched rollout back out to per-request responses.
+pub fn unbatch_into(
+    flat: &Trajectory,
     batch: usize,
     dim: usize,
-) -> Vec<Vec<Vec<f64>>> {
+    b: usize,
+    out: &mut Trajectory,
+) {
+    assert_eq!(
+        flat.dim(),
+        batch * dim,
+        "unbatch: flat row width {} != batch {batch} * dim {dim}",
+        flat.dim()
+    );
+    assert!(b < batch, "unbatch: trajectory {b} >= batch {batch}");
+    out.reset(dim);
+    out.reserve_rows(flat.len());
+    for row in flat {
+        out.push_row(&row[b * dim..(b + 1) * dim]);
+    }
+}
+
+/// Reassemble a flat batched solve (rows of width `batch * dim`) into
+/// per-trajectory [`Trajectory`]s (the twin-facing layout).
+pub fn unbatch_trajectories(
+    flat: &Trajectory,
+    batch: usize,
+    dim: usize,
+) -> Vec<Trajectory> {
     (0..batch)
         .map(|b| {
-            flat.iter()
-                .map(|row| {
-                    assert_eq!(
-                        row.len(),
-                        batch * dim,
-                        "unbatch: row length != batch * dim"
-                    );
-                    row[b * dim..(b + 1) * dim].to_vec()
-                })
-                .collect()
+            let mut t = Trajectory::new(dim);
+            unbatch_into(flat, batch, dim, b, &mut t);
+            t
         })
         .collect()
 }
@@ -170,10 +189,36 @@ mod tests {
 
     #[test]
     fn unbatch_roundtrip() {
-        let flat = vec![vec![1.0, 2.0, 3.0, 4.0], vec![5.0, 6.0, 7.0, 8.0]];
+        let flat = Trajectory::from_nested(&[
+            vec![1.0, 2.0, 3.0, 4.0],
+            vec![5.0, 6.0, 7.0, 8.0],
+        ]);
         let per = unbatch_trajectories(&flat, 2, 2);
         assert_eq!(per.len(), 2);
-        assert_eq!(per[0], vec![vec![1.0, 2.0], vec![5.0, 6.0]]);
-        assert_eq!(per[1], vec![vec![3.0, 4.0], vec![7.0, 8.0]]);
+        assert_eq!(
+            per[0],
+            Trajectory::from_nested(&[vec![1.0, 2.0], vec![5.0, 6.0]])
+        );
+        assert_eq!(
+            per[1],
+            Trajectory::from_nested(&[vec![3.0, 4.0], vec![7.0, 8.0]])
+        );
+    }
+
+    #[test]
+    fn unbatch_into_reuses_warm_output() {
+        let flat = Trajectory::from_nested(&[
+            vec![1.0, 2.0, 3.0, 4.0],
+            vec![5.0, 6.0, 7.0, 8.0],
+        ]);
+        let mut out = Trajectory::new(0);
+        unbatch_into(&flat, 2, 2, 1, &mut out);
+        assert_eq!(out.dim(), 2);
+        assert_eq!(out.row(0), [3.0, 4.0]);
+        assert_eq!(out.row(1), [7.0, 8.0]);
+        // Reuse for a different trajectory: no stale rows.
+        unbatch_into(&flat, 2, 2, 0, &mut out);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out.row(1), [5.0, 6.0]);
     }
 }

@@ -7,6 +7,7 @@
 
 use crate::ode::batch::{BatchVectorField, Flattened};
 use crate::ode::func::VectorField;
+use crate::util::tensor::Trajectory;
 
 /// Butcher tableau of DOPRI5 (c, a, b5, b4).
 const C: [f64; 7] = [0.0, 1.0 / 5.0, 3.0 / 10.0, 4.0 / 5.0, 8.0 / 9.0, 1.0, 1.0];
@@ -93,7 +94,13 @@ pub struct SolveStats {
 
 /// Integrate from t0 to t1, sampling at the provided output times (must be
 /// increasing, within [t0, t1]); dense output by cubic Hermite between
-/// accepted steps. Returns (samples, stats).
+/// accepted steps. Returns (samples, stats); samples are a flat
+/// [`Trajectory`] with one row per output time.
+///
+/// Unlike the fixed-step solvers, the adaptive path allocates its stage
+/// scratch per call — it is the accuracy-oracle extension, not the
+/// steady-state request path, so it stays out of the zero-allocation
+/// contract documented in `lib.rs`.
 pub fn solve(
     f: &mut dyn VectorField,
     x0: &[f64],
@@ -101,7 +108,7 @@ pub fn solve(
     t1: f64,
     t_out: &[f64],
     opts: &Options,
-) -> (Vec<Vec<f64>>, SolveStats) {
+) -> (Trajectory, SolveStats) {
     let n = f.dim();
     assert_eq!(
         x0.len(),
@@ -123,11 +130,12 @@ pub fn solve(
     let mut x5 = vec![0.0; n];
     let mut x4 = vec![0.0; n];
     let mut tmp = vec![0.0; n];
-    let mut out = Vec::with_capacity(t_out.len());
+    let mut row_buf = vec![0.0; n];
+    let mut out = Trajectory::with_capacity(n, t_out.len());
     let mut out_idx = 0;
     // Emit any samples at exactly t0.
     while out_idx < t_out.len() && t_out[out_idx] <= t0 {
-        out.push(x.clone());
+        out.push_row(&x);
         out_idx += 1;
     }
     // FSAL: k[0] = f(t, x).
@@ -185,15 +193,13 @@ pub fn solve(
                 let h10 = theta * (1.0 - theta) * (1.0 - theta);
                 let h01 = theta * theta * (3.0 - 2.0 * theta);
                 let h11 = theta * theta * (theta - 1.0);
-                let row: Vec<f64> = (0..n)
-                    .map(|i| {
-                        h00 * x[i]
-                            + h10 * h_eff * k[0][i]
-                            + h01 * x5[i]
-                            + h11 * h_eff * k[6][i]
-                    })
-                    .collect();
-                out.push(row);
+                for (i, rv) in row_buf.iter_mut().enumerate() {
+                    *rv = h00 * x[i]
+                        + h10 * h_eff * k[0][i]
+                        + h01 * x5[i]
+                        + h11 * h_eff * k[6][i];
+                }
+                out.push_row(&row_buf);
                 out_idx += 1;
             }
             t = t_new;
@@ -213,7 +219,7 @@ pub fn solve(
     }
     // Any trailing samples (t_out beyond t1): hold the final state.
     while out_idx < t_out.len() {
-        out.push(x.clone());
+        out.push_row(&x);
         out_idx += 1;
     }
     (out, stats)
@@ -234,7 +240,7 @@ pub fn solve_batch(
     t1: f64,
     t_out: &[f64],
     opts: &Options,
-) -> (Vec<Vec<f64>>, SolveStats) {
+) -> (Trajectory, SolveStats) {
     assert_eq!(
         x0s.len(),
         f.batch() * f.dim(),

@@ -5,16 +5,69 @@
 
 use crate::ode::batch::{BatchVectorField, Flattened};
 use crate::ode::func::VectorField;
+use crate::util::tensor::Trajectory;
 
-/// Integrate with fixed-step forward Euler; returns `n_points` samples
-/// spaced `dt` (first sample = x0), with `substeps` Euler steps per sample.
-pub fn solve(
+/// Reusable forward-Euler stepper (derivative scratch only).
+pub struct Euler {
+    k: Vec<f64>,
+}
+
+impl Euler {
+    pub fn new(dim: usize) -> Self {
+        Self { k: vec![0.0; dim] }
+    }
+
+    /// Dimension the scratch is currently sized for.
+    pub fn dim(&self) -> usize {
+        self.k.len()
+    }
+
+    /// Retarget the scratch to `dim`; the buffer is kept, so a warm
+    /// stepper never reallocates for dimensions it has already seen.
+    pub fn ensure_dim(&mut self, dim: usize) {
+        if self.k.len() != dim {
+            self.k.resize(dim, 0.0);
+        }
+    }
+
+    /// One in-place Euler step x <- x + dt * phi(t, x).
+    pub fn step(
+        &mut self,
+        f: &mut dyn VectorField,
+        t: f64,
+        x: &mut [f64],
+        dt: f64,
+    ) {
+        let n = x.len();
+        assert_eq!(
+            n,
+            self.k.len(),
+            "Euler::step: state dim {} does not match stepper scratch dim {}",
+            n,
+            self.k.len()
+        );
+        f.eval_into(t, x, &mut self.k);
+        for i in 0..n {
+            x[i] += dt * self.k[i];
+        }
+    }
+}
+
+/// Allocation-free fixed-step forward Euler: `n_points` samples spaced
+/// `dt` (first sample = x0) appended to `out` (which is reset to row width
+/// `f.dim()`), with `substeps` Euler steps per sample. State lives in the
+/// trajectory itself (each new sample starts as a copy of the previous
+/// row and is advanced in place), so a warm `stepper` + `out` pair incurs
+/// zero heap allocations.
+pub fn solve_into(
     f: &mut dyn VectorField,
     x0: &[f64],
     dt: f64,
     n_points: usize,
     substeps: usize,
-) -> Vec<Vec<f64>> {
+    stepper: &mut Euler,
+    out: &mut Trajectory,
+) {
     assert!(substeps >= 1);
     let n = f.dim();
     assert_eq!(
@@ -24,36 +77,49 @@ pub fn solve(
         x0.len(),
         n
     );
+    stepper.ensure_dim(n);
     let hd = dt / substeps as f64;
-    let mut x = x0.to_vec();
-    let mut k = vec![0.0; n];
-    let mut out = Vec::with_capacity(n_points);
-    out.push(x.clone());
+    out.reset(n);
+    out.reserve_rows(n_points.max(1));
+    out.push_row(x0);
     let mut t = 0.0;
-    for _ in 1..n_points {
+    for p in 1..n_points {
+        out.push_copy_of_last();
+        let x = out.row_mut(p);
         for _ in 0..substeps {
-            f.eval_into(t, &x, &mut k);
-            for i in 0..n {
-                x[i] += hd * k[i];
-            }
+            stepper.step(f, t, x, hd);
             t += hd;
         }
-        out.push(x.clone());
     }
+}
+
+/// Allocating convenience wrapper around [`solve_into`].
+pub fn solve(
+    f: &mut dyn VectorField,
+    x0: &[f64],
+    dt: f64,
+    n_points: usize,
+    substeps: usize,
+) -> Trajectory {
+    let mut stepper = Euler::new(f.dim());
+    let mut out = Trajectory::new(f.dim());
+    solve_into(f, x0, dt, n_points, substeps, &mut stepper, &mut out);
     out
 }
 
-/// Batched forward Euler over a flat `[batch * dim]` state; returns
-/// `n_points` flat samples. The Euler update is element-wise, so each
-/// trajectory of the result is bit-identical to a serial [`solve`] of the
-/// same field.
-pub fn solve_batch(
+/// Batched fixed-step forward Euler over a flat `[batch * dim]` state;
+/// `out` receives `n_points` rows of width `batch * dim`. The Euler update
+/// is element-wise, so each trajectory of the result is bit-identical to a
+/// serial [`solve`] of the same field.
+pub fn solve_batch_into(
     f: &mut dyn BatchVectorField,
     x0s: &[f64],
     dt: f64,
     n_points: usize,
     substeps: usize,
-) -> Vec<Vec<f64>> {
+    stepper: &mut Euler,
+    out: &mut Trajectory,
+) {
     assert_eq!(
         x0s.len(),
         f.batch() * f.dim(),
@@ -62,7 +128,30 @@ pub fn solve_batch(
         f.batch(),
         f.dim()
     );
-    solve(&mut Flattened { field: f }, x0s, dt, n_points, substeps)
+    solve_into(
+        &mut Flattened { field: f },
+        x0s,
+        dt,
+        n_points,
+        substeps,
+        stepper,
+        out,
+    );
+}
+
+/// Allocating convenience wrapper around [`solve_batch_into`].
+pub fn solve_batch(
+    f: &mut dyn BatchVectorField,
+    x0s: &[f64],
+    dt: f64,
+    n_points: usize,
+    substeps: usize,
+) -> Trajectory {
+    let dim = f.batch() * f.dim();
+    let mut stepper = Euler::new(dim);
+    let mut out = Trajectory::new(dim);
+    solve_batch_into(f, x0s, dt, n_points, substeps, &mut stepper, &mut out);
+    out
 }
 
 #[cfg(test)]
@@ -95,7 +184,31 @@ mod tests {
         let mut f = FnField::new(3, |_t, _x: &[f64], o: &mut [f64]| o.fill(0.0));
         let traj = solve(&mut f, &[1.0, 2.0, 3.0], 0.1, 5, 2);
         assert_eq!(traj.len(), 5);
-        assert_eq!(traj[0], vec![1.0, 2.0, 3.0]);
-        assert_eq!(traj[4], vec![1.0, 2.0, 3.0]);
+        assert_eq!(traj.dim(), 3);
+        assert_eq!(traj[0], [1.0, 2.0, 3.0]);
+        assert_eq!(traj[4], [1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn solve_into_reuses_scratch_across_dims() {
+        // A warm stepper/output pair must be reusable across calls and
+        // state dimensions without stale rows leaking through.
+        let mut stepper = Euler::new(0);
+        let mut out = Trajectory::new(0);
+        let mut f2 = FnField::new(2, |_t, x: &[f64], o: &mut [f64]| {
+            o[0] = -x[0];
+            o[1] = -x[1];
+        });
+        solve_into(&mut f2, &[1.0, 2.0], 0.1, 4, 1, &mut stepper, &mut out);
+        assert_eq!(out.len(), 4);
+        assert_eq!(out.dim(), 2);
+        let mut f1 =
+            FnField::new(1, |_t, x: &[f64], o: &mut [f64]| o[0] = -x[0]);
+        solve_into(&mut f1, &[1.0], 0.1, 6, 1, &mut stepper, &mut out);
+        assert_eq!(out.len(), 6);
+        assert_eq!(out.dim(), 1);
+        assert_eq!(out[0], [1.0]);
+        let direct = solve(&mut f1, &[1.0], 0.1, 6, 1);
+        assert_eq!(out, direct, "reused scratch must not change values");
     }
 }

@@ -1,12 +1,17 @@
 //! Classic RK4 — the paper's ODESolve (Methods: "a fourth-order
 //! Runge-Kutta solver (RK4) method serving as the ODESolve").
 //!
-//! Allocation-free inner loop (scratch reused across steps); this is the
-//! digital-twin-on-digital-hardware reference the analogue loop and the
-//! PJRT artifacts are validated against.
+//! Allocation-free inner loop *and* outer loop: stage scratch lives in a
+//! reusable [`Rk4`] stepper, samples append to a flat
+//! [`Trajectory`](crate::util::tensor::Trajectory) (each new sample starts
+//! as a copy of the previous row and is advanced in place), so a warm
+//! stepper + output pair performs zero heap allocations per solve. This is
+//! the digital-twin-on-digital-hardware reference the analogue loop and
+//! the PJRT artifacts are validated against.
 
 use crate::ode::batch::{BatchVectorField, Flattened};
 use crate::ode::func::VectorField;
+use crate::util::tensor::Trajectory;
 
 /// Reusable RK4 stepper.
 pub struct Rk4 {
@@ -31,6 +36,19 @@ impl Rk4 {
     /// Dimension the stepper's scratch was allocated for.
     pub fn dim(&self) -> usize {
         self.k1.len()
+    }
+
+    /// Retarget the stage scratch to `dim`. Buffers are kept (Vec capacity
+    /// never shrinks), so a warm stepper reused across batch sizes or state
+    /// dimensions reallocates only when it sees a new maximum.
+    pub fn ensure_dim(&mut self, dim: usize) {
+        if self.k1.len() != dim {
+            self.k1.resize(dim, 0.0);
+            self.k2.resize(dim, 0.0);
+            self.k3.resize(dim, 0.0);
+            self.k4.resize(dim, 0.0);
+            self.tmp.resize(dim, 0.0);
+        }
     }
 
     /// One in-place RK4 step x <- x + dt * phi(t, x).
@@ -84,15 +102,19 @@ impl Rk4 {
     }
 }
 
-/// Integrate with fixed-step RK4; `n_points` samples spaced `dt` (first is
-/// x0), `substeps` RK4 steps per sample.
-pub fn solve(
+/// Allocation-free fixed-step RK4: `n_points` samples spaced `dt` (first
+/// is x0), `substeps` RK4 steps per sample, appended to `out` (reset to
+/// row width `f.dim()`). With a warm `stepper` and `out` this performs
+/// zero heap allocations.
+pub fn solve_into(
     f: &mut dyn VectorField,
     x0: &[f64],
     dt: f64,
     n_points: usize,
     substeps: usize,
-) -> Vec<Vec<f64>> {
+    stepper: &mut Rk4,
+    out: &mut Trajectory,
+) {
     assert!(substeps >= 1);
     let n = f.dim();
     assert_eq!(
@@ -102,34 +124,50 @@ pub fn solve(
         x0.len(),
         n
     );
+    stepper.ensure_dim(n);
     let hd = dt / substeps as f64;
-    let mut stepper = Rk4::new(n);
-    let mut x = x0.to_vec();
-    let mut out = Vec::with_capacity(n_points);
-    out.push(x.clone());
+    out.reset(n);
+    out.reserve_rows(n_points.max(1));
+    out.push_row(x0);
     let mut t = 0.0;
-    for _ in 1..n_points {
+    for p in 1..n_points {
+        out.push_copy_of_last();
+        let x = out.row_mut(p);
         for _ in 0..substeps {
-            stepper.step(f, t, &mut x, hd);
+            stepper.step(f, t, x, hd);
             t += hd;
         }
-        out.push(x.clone());
     }
+}
+
+/// Allocating convenience wrapper around [`solve_into`].
+pub fn solve(
+    f: &mut dyn VectorField,
+    x0: &[f64],
+    dt: f64,
+    n_points: usize,
+    substeps: usize,
+) -> Trajectory {
+    let mut stepper = Rk4::new(f.dim());
+    let mut out = Trajectory::new(f.dim());
+    solve_into(f, x0, dt, n_points, substeps, &mut stepper, &mut out);
     out
 }
 
-/// Batched fixed-step RK4 over a flat `[batch * dim]` state; returns
-/// `n_points` flat samples (first is `x0s`). The stage combinations are
-/// element-wise, so each trajectory of the result is bit-identical to a
-/// serial [`solve`] of the same field — this is the digital half of the
-/// batched-vs-serial equivalence contract.
-pub fn solve_batch(
+/// Batched fixed-step RK4 over a flat `[batch * dim]` state; `out`
+/// receives `n_points` rows of width `batch * dim` (first is `x0s`). The
+/// stage combinations are element-wise, so each trajectory of the result
+/// is bit-identical to a serial [`solve`] of the same field — this is the
+/// digital half of the batched-vs-serial equivalence contract.
+pub fn solve_batch_into(
     f: &mut dyn BatchVectorField,
     x0s: &[f64],
     dt: f64,
     n_points: usize,
     substeps: usize,
-) -> Vec<Vec<f64>> {
+    stepper: &mut Rk4,
+    out: &mut Trajectory,
+) {
     assert_eq!(
         x0s.len(),
         f.batch() * f.dim(),
@@ -138,7 +176,30 @@ pub fn solve_batch(
         f.batch(),
         f.dim()
     );
-    solve(&mut Flattened { field: f }, x0s, dt, n_points, substeps)
+    solve_into(
+        &mut Flattened { field: f },
+        x0s,
+        dt,
+        n_points,
+        substeps,
+        stepper,
+        out,
+    );
+}
+
+/// Allocating convenience wrapper around [`solve_batch_into`].
+pub fn solve_batch(
+    f: &mut dyn BatchVectorField,
+    x0s: &[f64],
+    dt: f64,
+    n_points: usize,
+    substeps: usize,
+) -> Trajectory {
+    let dim = f.batch() * f.dim();
+    let mut stepper = Rk4::new(dim);
+    let mut out = Trajectory::new(dim);
+    solve_batch_into(f, x0s, dt, n_points, substeps, &mut stepper, &mut out);
+    out
 }
 
 #[cfg(test)]
@@ -268,6 +329,23 @@ mod tests {
             FnField::new(1, |_t, x: &[f64], o: &mut [f64]| o[0] = -x[0]);
         let b = solve(&mut f, &[1.0], 0.1, 6, 1);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn solve_into_warm_scratch_bit_identical_to_fresh() {
+        // The zero-allocation path must not change values: a reused
+        // stepper/output pair reproduces a fresh solve exactly.
+        let mut stepper = Rk4::new(0);
+        let mut out = Trajectory::new(0);
+        let mut f = FnField::new(2, |_t, x: &[f64], o: &mut [f64]| {
+            o[0] = x[1];
+            o[1] = -x[0];
+        });
+        // Warm with a *larger* problem first, then solve the real one.
+        solve_into(&mut f, &[3.0, -1.0], 0.02, 50, 2, &mut stepper, &mut out);
+        solve_into(&mut f, &[1.0, 0.0], 0.05, 21, 1, &mut stepper, &mut out);
+        let fresh = solve(&mut f, &[1.0, 0.0], 0.05, 21, 1);
+        assert_eq!(out, fresh);
     }
 
     #[test]

@@ -3,6 +3,11 @@
 //! State: the normalised doped-region boundary h = w/D (dim 1). Driven by a
 //! voltage stimulus. Backends: analogue solver, Rust RK4, recurrent-ResNet
 //! baseline, or the AOT PJRT artifact.
+//!
+//! The batched request path is allocation-free in steady state: grouping,
+//! stimulus/initial-state staging, the rollout itself and the per-request
+//! response trajectories all come from reusable scratch owned by the twin
+//! (see [`Twin::run_batch_into`] and the perf invariants in `lib.rs`).
 
 use anyhow::{anyhow, Result};
 
@@ -11,10 +16,9 @@ use crate::device::taox::DeviceConfig;
 use crate::models::loader::MlpWeights;
 use crate::models::mlp::{BatchDrivenMlpField, DrivenMlpField, Mlp};
 use crate::models::resnet::RecurrentResNet;
-use crate::ode::rk4;
-use crate::twin::{
-    run_batch_grouped, RolloutFn, Twin, TwinRequest, TwinResponse,
-};
+use crate::ode::rk4::{self, Rk4};
+use crate::twin::{GroupPlan, RolloutFn, Twin, TwinRequest, TwinResponse};
+use crate::util::tensor::{Trajectory, TrajectoryPool};
 use crate::workload::stimuli::Waveform;
 
 /// Default circuit substeps per output sample for the analogue backend.
@@ -45,10 +49,45 @@ impl HpBackend {
     }
 }
 
+/// Reusable batch scratch: everything `run_batch_into` needs between the
+/// request slice and the response vector lives here so a warm twin never
+/// allocates. Taken out of `self` with `mem::take` for the duration of a
+/// batch (its `Default` is allocation-free) to sidestep borrow conflicts
+/// with the backend.
+#[derive(Default)]
+struct HpScratch {
+    plan: GroupPlan,
+    /// One slot per request; drained into the caller's vector in order.
+    slots: Vec<Option<Result<TwinResponse>>>,
+    /// Valid request indices of the current group (submission order).
+    members: Vec<usize>,
+    /// Per-member stimulus / initial state staging.
+    waves: Vec<Waveform>,
+    h0s: Vec<f64>,
+    /// Flat batched rollout output (rows = one lockstep sample).
+    flat: Trajectory,
+    /// Response-trajectory pool (refilled via [`HpTwin::recycle`]).
+    pool: TrajectoryPool,
+    solver: HpSolverScratch,
+}
+
+/// Digital-backend solver scratch (stage buffers + stacked drive rows).
+struct HpSolverScratch {
+    rk4: Rk4,
+    u: Vec<f64>,
+}
+
+impl Default for HpSolverScratch {
+    fn default() -> Self {
+        Self { rk4: Rk4::new(0), u: Vec::new() }
+    }
+}
+
 /// The HP-memristor twin.
 pub struct HpTwin {
     backend: HpBackend,
     dt: f64,
+    scratch: HpScratch,
 }
 
 impl HpTwin {
@@ -68,7 +107,11 @@ impl HpTwin {
         let dt = weights.dt;
         let ode =
             AnalogNeuralOde::new(mlp, 1, dt / ANALOG_SUBSTEPS as f64);
-        Self { backend: HpBackend::Analog(Box::new(ode)), dt }
+        Self {
+            backend: HpBackend::Analog(Box::new(ode)),
+            dt,
+            scratch: HpScratch::default(),
+        }
     }
 
     /// Build the digital (Rust RK4) twin.
@@ -76,6 +119,7 @@ impl HpTwin {
         Self {
             backend: HpBackend::Digital(Mlp::from_weights(weights)),
             dt: weights.dt,
+            scratch: HpScratch::default(),
         }
     }
 
@@ -86,12 +130,27 @@ impl HpTwin {
                 Mlp::from_weights(weights),
             )),
             dt: weights.dt,
+            scratch: HpScratch::default(),
         }
     }
 
     /// Build the PJRT-artifact twin.
     pub fn pjrt(rollout: RolloutFn, dt: f64) -> Self {
-        Self { backend: HpBackend::Pjrt(rollout), dt }
+        Self {
+            backend: HpBackend::Pjrt(rollout),
+            dt,
+            scratch: HpScratch::default(),
+        }
+    }
+
+    /// Return a response's trajectory buffer to the twin's pool.
+    ///
+    /// Optional: callers that hand responses back make the next
+    /// `run_batch` draw its output trajectories from the pool instead of
+    /// the allocator — the zero-allocation steady state the allocation
+    /// test (`rust/tests/alloc.rs`) pins down.
+    pub fn recycle(&mut self, resp: TwinResponse) {
+        self.scratch.pool.put(resp.trajectory);
     }
 
     /// Simulate under a stimulus; returns the scalar state trajectory.
@@ -107,16 +166,16 @@ impl HpTwin {
                 let w = *wave;
                 let traj = ode.solve(
                     &[h0],
-                    &mut |t| vec![w.eval(t)],
+                    &mut |t, x: &mut [f64]| x[0] = w.eval(t),
                     dt,
                     n_points,
                 );
-                Ok(traj.into_iter().map(|r| r[0]).collect())
+                Ok(traj.into_data())
             }
             HpBackend::Digital(mlp) => {
                 let w = *wave;
                 let mut field =
-                    DrivenMlpField::new(mlp.clone(), move |t| w.eval(t));
+                    DrivenMlpField::new(mlp, move |t| w.eval(t));
                 let traj = rk4::solve(
                     &mut field,
                     &[h0],
@@ -124,7 +183,7 @@ impl HpTwin {
                     n_points,
                     DIGITAL_SUBSTEPS,
                 );
-                Ok(traj.into_iter().map(|r| r[0]).collect())
+                Ok(traj.into_data())
             }
             HpBackend::Resnet(resnet) => {
                 let xs: Vec<Vec<f64>> = (0..n_points.saturating_sub(1))
@@ -141,65 +200,54 @@ impl HpTwin {
         }
     }
 
-    /// Batched simulation of one compatible sub-batch: all trajectories
-    /// share `n_points` but carry their own stimulus and initial state.
-    /// Analog, Digital and Resnet backends run a true batched rollout (one
-    /// device read / GEMM per step for the whole batch); Pjrt falls back to
-    /// per-trajectory [`HpTwin::simulate`]. With noise off the batched
-    /// trajectories are bit-identical to serial ones.
-    pub fn simulate_batch(
+    /// Batched simulation of one compatible sub-batch into `out` (flat
+    /// rows of width `batch`): all trajectories share `n_points` but carry
+    /// their own stimulus and initial state. Analog and Digital backends
+    /// are allocation-free with warm scratch (one device read / GEMM per
+    /// step for the whole batch); Resnet runs a true batched rollout with
+    /// staging allocations. With noise off the batched trajectories are
+    /// bit-identical to serial ones. Pjrt is handled by the caller's
+    /// serial fallback.
+    fn simulate_batch_flat(
         &mut self,
         waves: &[Waveform],
         h0s: &[f64],
         n_points: usize,
-    ) -> Result<Vec<Vec<f64>>> {
+        solver: &mut HpSolverScratch,
+        out: &mut Trajectory,
+    ) -> Result<()> {
         let batch = waves.len();
-        anyhow::ensure!(
-            h0s.len() == batch,
-            "simulate_batch: {} initial states for {} stimuli",
-            h0s.len(),
-            batch
-        );
-        if matches!(self.backend, HpBackend::Pjrt(_)) {
-            return waves
-                .iter()
-                .zip(h0s)
-                .map(|(w, &h0)| self.simulate(w, h0, n_points))
-                .collect();
-        }
+        debug_assert_eq!(h0s.len(), batch);
         let dt = self.dt;
         match &mut self.backend {
             HpBackend::Analog(ode) => {
-                let ws = waves.to_vec();
-                let trajs = ode.solve_batch(
+                ode.solve_batch_into(
                     h0s,
                     batch,
-                    &mut |b, t, x| x[0] = ws[b].eval(t),
+                    &mut |b, t, x: &mut [f64]| x[0] = waves[b].eval(t),
                     dt,
                     n_points,
+                    out,
                 );
-                Ok(trajs
-                    .into_iter()
-                    .map(|tr| tr.into_iter().map(|r| r[0]).collect())
-                    .collect())
+                Ok(())
             }
             HpBackend::Digital(mlp) => {
-                let ws = waves.to_vec();
                 let mut field = BatchDrivenMlpField::new(
-                    mlp.clone(),
+                    mlp,
                     batch,
-                    move |b, t| ws[b].eval(t),
+                    |b, t| waves[b].eval(t),
+                    &mut solver.u,
                 );
-                let flat = rk4::solve_batch(
+                rk4::solve_batch_into(
                     &mut field,
                     h0s,
                     dt,
                     n_points,
                     DIGITAL_SUBSTEPS,
+                    &mut solver.rk4,
+                    out,
                 );
-                Ok((0..batch)
-                    .map(|b| flat.iter().map(|row| row[b]).collect())
-                    .collect())
+                Ok(())
             }
             HpBackend::Resnet(resnet) => {
                 let xs: Vec<Vec<f64>> = (0..n_points.saturating_sub(1))
@@ -211,14 +259,18 @@ impl HpTwin {
                     })
                     .collect();
                 let trajs = resnet.rollout_batch(h0s, batch, &xs);
-                Ok(trajs
-                    .into_iter()
-                    .map(|tr| {
-                        tr.into_iter().map(|r| r[0]).collect::<Vec<f64>>()
-                    })
-                    .collect())
+                out.reset(batch);
+                out.reserve_rows(n_points.max(1));
+                for k in 0..trajs.first().map_or(0, Vec::len) {
+                    out.push_row_from_iter(
+                        (0..batch).map(|b| trajs[b][k][0]),
+                    );
+                }
+                Ok(())
             }
-            HpBackend::Pjrt(_) => unreachable!("handled above"),
+            HpBackend::Pjrt(_) => {
+                unreachable!("pjrt uses the serial fallback")
+            }
         }
     }
 }
@@ -249,54 +301,112 @@ impl Twin for HpTwin {
         } else {
             req.h0[0]
         };
-        let backend = self.backend.label().to_string();
+        let backend = self.backend.label();
         let h = self.simulate(&wave, h0, req.n_points)?;
         Ok(TwinResponse {
-            trajectory: h.into_iter().map(|v| vec![v]).collect(),
+            trajectory: Trajectory::from_data(1, h),
             backend,
         })
+    }
+
+    fn run_batch(
+        &mut self,
+        reqs: &[TwinRequest],
+    ) -> Vec<Result<TwinResponse>> {
+        let mut out = Vec::with_capacity(reqs.len());
+        self.run_batch_into(reqs, &mut out);
+        out
     }
 
     /// Batched execution: requests are split into compatible sub-batches
     /// (same `n_points`; stimulus and h0 are per-trajectory) and each
     /// sub-batch runs as one batched rollout. Requests without a stimulus
-    /// fail individually without poisoning the batch.
-    fn run_batch(
+    /// fail individually without poisoning the batch. All bookkeeping and
+    /// the response trajectories come from the twin's reusable scratch.
+    fn run_batch_into(
         &mut self,
         reqs: &[TwinRequest],
-    ) -> Vec<Result<TwinResponse>> {
-        let backend = self.backend.label().to_string();
-        run_batch_grouped(
-            reqs,
-            |req| match req.stimulus {
-                Some(w) => Ok((
-                    w,
-                    if req.h0.is_empty() {
-                        crate::device::hp::H0
-                    } else {
-                        req.h0[0]
-                    },
-                )),
-                None => Err(anyhow!("hp twin requires a stimulus")),
-            },
-            |items, n_points| {
-                let waves: Vec<Waveform> =
-                    items.iter().map(|&(w, _)| w).collect();
-                let h0s: Vec<f64> =
-                    items.iter().map(|&(_, h0)| h0).collect();
-                let trajs = self.simulate_batch(&waves, &h0s, n_points)?;
-                Ok(trajs
-                    .into_iter()
-                    .map(|h| TwinResponse {
-                        trajectory: h
-                            .into_iter()
-                            .map(|v| vec![v])
-                            .collect(),
-                        backend: backend.clone(),
-                    })
-                    .collect())
-            },
-        )
+        out: &mut Vec<Result<TwinResponse>>,
+    ) {
+        let backend = self.backend.label();
+        let mut sc = std::mem::take(&mut self.scratch);
+        sc.plan.plan(reqs);
+        sc.slots.clear();
+        sc.slots.resize_with(reqs.len(), || None);
+        for g in 0..sc.plan.n_groups() {
+            let n_points = reqs[sc.plan.group(g)[0]].n_points;
+            sc.members.clear();
+            sc.waves.clear();
+            sc.h0s.clear();
+            for &i in sc.plan.group(g) {
+                match reqs[i].stimulus {
+                    Some(w) => {
+                        sc.members.push(i);
+                        sc.waves.push(w);
+                        sc.h0s.push(if reqs[i].h0.is_empty() {
+                            crate::device::hp::H0
+                        } else {
+                            reqs[i].h0[0]
+                        });
+                    }
+                    None => {
+                        sc.slots[i] = Some(Err(anyhow!(
+                            "hp twin requires a stimulus"
+                        )));
+                    }
+                }
+            }
+            if sc.members.is_empty() {
+                continue;
+            }
+            if matches!(self.backend, HpBackend::Pjrt(_)) {
+                // No batched artifact path yet: per-trajectory rollouts.
+                for k in 0..sc.members.len() {
+                    let i = sc.members[k];
+                    let r = self
+                        .simulate(&sc.waves[k], sc.h0s[k], n_points)
+                        .map(|h| TwinResponse {
+                            trajectory: Trajectory::from_data(1, h),
+                            backend,
+                        });
+                    sc.slots[i] = Some(r);
+                }
+                continue;
+            }
+            match self.simulate_batch_flat(
+                &sc.waves,
+                &sc.h0s,
+                n_points,
+                &mut sc.solver,
+                &mut sc.flat,
+            ) {
+                Ok(()) => {
+                    let batch = sc.members.len();
+                    for (k, &i) in sc.members.iter().enumerate() {
+                        let mut t = sc.pool.get(1);
+                        crate::ode::batch::unbatch_into(
+                            &sc.flat, batch, 1, k, &mut t,
+                        );
+                        sc.slots[i] = Some(Ok(TwinResponse {
+                            trajectory: t,
+                            backend,
+                        }));
+                    }
+                }
+                Err(e) => {
+                    // Group-level failure: broadcast without touching
+                    // other groups.
+                    let msg = format!("{e:#}");
+                    for &i in &sc.members {
+                        sc.slots[i] = Some(Err(anyhow!(msg.clone())));
+                    }
+                }
+            }
+        }
+        for s in sc.slots.drain(..) {
+            out.push(s.expect("every request receives a result"));
+        }
+        self.scratch = sc;
     }
 }
 
@@ -372,8 +482,9 @@ mod tests {
         );
         let resp = twin.run(&req).unwrap();
         assert_eq!(resp.trajectory.len(), 50);
+        assert_eq!(resp.trajectory.dim(), 1);
         assert_eq!(resp.backend, "digital-rk4");
-        assert_eq!(resp.trajectory[0], vec![0.3]);
+        assert_eq!(resp.trajectory.row(0), [0.3]);
     }
 
     #[test]
@@ -410,6 +521,17 @@ mod tests {
             let b = b.as_ref().unwrap();
             assert_eq!(b.trajectory, s.trajectory, "request {k}");
             assert_eq!(b.backend, s.backend);
+        }
+        // A second pass on the now-warm scratch must agree too (pooled
+        // buffers never leak stale samples).
+        for (resp, s) in twin.run_batch(&reqs).into_iter().zip(&serial) {
+            let resp = resp.unwrap();
+            assert_eq!(resp.trajectory, s.trajectory);
+            twin.recycle(resp);
+        }
+        let third = twin.run_batch(&reqs);
+        for (b, s) in third.iter().zip(&serial) {
+            assert_eq!(b.as_ref().unwrap().trajectory, s.trajectory);
         }
     }
 

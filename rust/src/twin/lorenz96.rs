@@ -3,6 +3,12 @@
 //!
 //! Backends: analogue solver, Rust RK4, the recurrent baselines
 //! (RNN/GRU/LSTM, Fig. 4g-i), or the AOT PJRT artifact.
+//!
+//! Like the HP twin, the batched request path draws every buffer —
+//! grouping, flat initial states, the lockstep rollout and the per-request
+//! response trajectories — from reusable twin-owned scratch, so a warm
+//! `run_batch` performs no steady-state heap allocations on the Analog
+//! and Digital backends.
 
 use anyhow::Result;
 
@@ -13,10 +19,10 @@ use crate::models::loader::{MlpWeights, RnnWeights};
 use crate::models::lstm::Lstm;
 use crate::models::mlp::{BatchMlpField, Mlp, MlpField};
 use crate::models::rnn::{Recurrent, VanillaRnn};
-use crate::ode::rk4;
-use crate::twin::{
-    run_batch_grouped, RolloutFn, Twin, TwinRequest, TwinResponse,
-};
+use crate::ode::batch::unbatch_into;
+use crate::ode::rk4::{self, Rk4};
+use crate::twin::{GroupPlan, RolloutFn, Twin, TwinRequest, TwinResponse};
+use crate::util::tensor::{Trajectory, TrajectoryPool};
 use crate::workload::lorenz96;
 
 /// Default circuit substeps per output sample for the analogue backend.
@@ -43,11 +49,37 @@ impl L96Backend {
     }
 }
 
+/// Reusable batch scratch (see `HpScratch` — same shape, flat dim-`d`
+/// initial states instead of scalar ones).
+#[derive(Default)]
+struct L96Scratch {
+    plan: GroupPlan,
+    slots: Vec<Option<Result<TwinResponse>>>,
+    members: Vec<usize>,
+    /// Flat `[members * dim]` initial states of the current group.
+    h0s: Vec<f64>,
+    flat: Trajectory,
+    pool: TrajectoryPool,
+    solver: L96SolverScratch,
+}
+
+/// Digital-backend solver scratch.
+struct L96SolverScratch {
+    rk4: Rk4,
+}
+
+impl Default for L96SolverScratch {
+    fn default() -> Self {
+        Self { rk4: Rk4::new(0) }
+    }
+}
+
 /// The Lorenz96 twin.
 pub struct Lorenz96Twin {
     backend: L96Backend,
     dt: f64,
     dim: usize,
+    scratch: L96Scratch,
 }
 
 impl Lorenz96Twin {
@@ -68,7 +100,12 @@ impl Lorenz96Twin {
         let dt = weights.dt;
         let ode =
             AnalogNeuralOde::new(mlp, dim, dt / ANALOG_SUBSTEPS as f64);
-        Self { backend: L96Backend::Analog(Box::new(ode)), dt, dim }
+        Self {
+            backend: L96Backend::Analog(Box::new(ode)),
+            dt,
+            dim,
+            scratch: L96Scratch::default(),
+        }
     }
 
     /// Digital (Rust RK4) twin.
@@ -78,6 +115,7 @@ impl Lorenz96Twin {
             backend: L96Backend::Digital(Mlp::from_weights(weights)),
             dt: weights.dt,
             dim,
+            scratch: L96Scratch::default(),
         }
     }
 
@@ -93,12 +131,24 @@ impl Lorenz96Twin {
             backend: L96Backend::Recurrent(cell),
             dt: weights.dt,
             dim: weights.d_in,
+            scratch: L96Scratch::default(),
         })
     }
 
     /// PJRT-artifact twin.
     pub fn pjrt(rollout: RolloutFn, dt: f64, dim: usize) -> Self {
-        Self { backend: L96Backend::Pjrt(rollout), dt, dim }
+        Self {
+            backend: L96Backend::Pjrt(rollout),
+            dt,
+            dim,
+            scratch: L96Scratch::default(),
+        }
+    }
+
+    /// Return a response's trajectory buffer to the twin's pool (see
+    /// [`crate::twin::hp::HpTwin::recycle`]).
+    pub fn recycle(&mut self, resp: TwinResponse) {
+        self.scratch.pool.put(resp.trajectory);
     }
 
     /// Roll out the twin from `h0` for `n_points` samples.
@@ -106,14 +156,17 @@ impl Lorenz96Twin {
         &mut self,
         h0: &[f64],
         n_points: usize,
-    ) -> Result<Vec<Vec<f64>>> {
+    ) -> Result<Trajectory> {
         let dt = self.dt;
         match &mut self.backend {
-            L96Backend::Analog(ode) => {
-                Ok(ode.solve(h0, &mut |_t| vec![], dt, n_points))
-            }
+            L96Backend::Analog(ode) => Ok(ode.solve(
+                h0,
+                &mut |_t, _x: &mut [f64]| {},
+                dt,
+                n_points,
+            )),
             L96Backend::Digital(mlp) => {
-                let mut field = MlpField { mlp: mlp.clone() };
+                let mut field = MlpField { mlp };
                 Ok(rk4::solve(
                     &mut field,
                     h0,
@@ -122,64 +175,78 @@ impl Lorenz96Twin {
                     DIGITAL_SUBSTEPS,
                 ))
             }
-            L96Backend::Recurrent(cell) => Ok(cell.rollout(h0, n_points)),
-            L96Backend::Pjrt(rollout) => rollout(h0, None),
+            L96Backend::Recurrent(cell) => {
+                Ok(Trajectory::from_nested(&cell.rollout(h0, n_points)))
+            }
+            L96Backend::Pjrt(rollout) => {
+                Ok(Trajectory::from_nested(&rollout(h0, None)?))
+            }
         }
     }
 
-    /// Batched rollout of one compatible sub-batch (shared `n_points`,
-    /// per-trajectory initial states). Analog, Digital and Recurrent
-    /// backends run true batched rollouts — one multi-vector device read
-    /// or per-layer GEMM per step for the whole batch; Pjrt falls back to
-    /// per-trajectory [`Lorenz96Twin::simulate`]. Noise off ⇒ bit-identical
-    /// to serial.
-    pub fn simulate_batch(
+    /// Batched rollout of one compatible sub-batch into `out` (flat rows
+    /// of width `batch * dim`; shared `n_points`, per-trajectory initial
+    /// states stacked in `h0s`). Analog and Digital backends are
+    /// allocation-free with warm scratch — one multi-vector device read /
+    /// per-layer GEMM per step for the whole batch; Recurrent runs its
+    /// true batched rollout with staging allocations. Noise off ⇒
+    /// bit-identical to serial. Pjrt is handled by the caller's serial
+    /// fallback.
+    fn simulate_batch_flat(
         &mut self,
-        h0s: &[Vec<f64>],
+        h0s: &[f64],
+        batch: usize,
         n_points: usize,
-    ) -> Result<Vec<Vec<Vec<f64>>>> {
-        let batch = h0s.len();
+        solver: &mut L96SolverScratch,
+        out: &mut Trajectory,
+    ) -> Result<()> {
         let dim = self.dim;
-        for h0 in h0s {
-            anyhow::ensure!(
-                h0.len() == dim,
-                "h0 dim {} != twin dim {}",
-                h0.len(),
-                dim
-            );
-        }
-        if matches!(self.backend, L96Backend::Pjrt(_)) {
-            return h0s
-                .iter()
-                .map(|h0| self.simulate(h0, n_points))
-                .collect();
-        }
+        debug_assert_eq!(h0s.len(), batch * dim);
         let dt = self.dt;
-        let flat: Vec<f64> = h0s.iter().flatten().copied().collect();
         match &mut self.backend {
-            L96Backend::Analog(ode) => Ok(ode.solve_batch(
-                &flat,
-                batch,
-                &mut |_b, _t, _x| {},
-                dt,
-                n_points,
-            )),
+            L96Backend::Analog(ode) => {
+                ode.solve_batch_into(
+                    h0s,
+                    batch,
+                    &mut |_b, _t, _x: &mut [f64]| {},
+                    dt,
+                    n_points,
+                    out,
+                );
+                Ok(())
+            }
             L96Backend::Digital(mlp) => {
-                let mut field =
-                    BatchMlpField { mlp: mlp.clone(), batch };
-                let rows = rk4::solve_batch(
+                let mut field = BatchMlpField { mlp, batch };
+                rk4::solve_batch_into(
                     &mut field,
-                    &flat,
+                    h0s,
                     dt,
                     n_points,
                     DIGITAL_SUBSTEPS,
+                    &mut solver.rk4,
+                    out,
                 );
-                Ok(crate::ode::batch::unbatch_trajectories(
-                    &rows, batch, dim,
-                ))
+                Ok(())
             }
-            L96Backend::Recurrent(cell) => Ok(cell.rollout_batch(h0s, n_points)),
-            L96Backend::Pjrt(_) => unreachable!("handled above"),
+            L96Backend::Recurrent(cell) => {
+                let h0_nested: Vec<Vec<f64>> = (0..batch)
+                    .map(|b| h0s[b * dim..(b + 1) * dim].to_vec())
+                    .collect();
+                let trajs = cell.rollout_batch(&h0_nested, n_points);
+                out.reset(batch * dim);
+                out.reserve_rows(n_points.max(1));
+                for k in 0..trajs.first().map_or(0, Vec::len) {
+                    out.push_row_from_iter(
+                        (0..batch).flat_map(|b| {
+                            trajs[b][k].iter().copied()
+                        }),
+                    );
+                }
+                Ok(())
+            }
+            L96Backend::Pjrt(_) => {
+                unreachable!("pjrt uses the serial fallback")
+            }
         }
     }
 }
@@ -202,10 +269,10 @@ impl Twin for Lorenz96Twin {
     }
 
     fn run(&mut self, req: &TwinRequest) -> Result<TwinResponse> {
-        let h0 = if req.h0.is_empty() {
-            self.default_h0()
+        let h0: &[f64] = if req.h0.is_empty() {
+            &lorenz96::Y0
         } else {
-            req.h0.clone()
+            &req.h0
         };
         anyhow::ensure!(
             h0.len() == self.dim,
@@ -213,48 +280,106 @@ impl Twin for Lorenz96Twin {
             h0.len(),
             self.dim
         );
-        let backend = self.backend.label().to_string();
-        let trajectory = self.simulate(&h0, req.n_points)?;
+        let backend = self.backend.label();
+        let trajectory = self.simulate(h0, req.n_points)?;
         Ok(TwinResponse { trajectory, backend })
+    }
+
+    fn run_batch(
+        &mut self,
+        reqs: &[TwinRequest],
+    ) -> Vec<Result<TwinResponse>> {
+        let mut out = Vec::with_capacity(reqs.len());
+        self.run_batch_into(reqs, &mut out);
+        out
     }
 
     /// Batched execution: requests split into compatible sub-batches (same
     /// `n_points`); initial states are resolved per request, and a request
     /// with the wrong h0 dimension fails alone without poisoning the rest.
-    fn run_batch(
+    fn run_batch_into(
         &mut self,
         reqs: &[TwinRequest],
-    ) -> Vec<Result<TwinResponse>> {
-        let backend = self.backend.label().to_string();
+        out: &mut Vec<Result<TwinResponse>>,
+    ) {
+        let backend = self.backend.label();
         let dim = self.dim;
-        let default = self.default_h0();
-        run_batch_grouped(
-            reqs,
-            |req| {
-                let h0 = if req.h0.is_empty() {
-                    default.clone()
+        let mut sc = std::mem::take(&mut self.scratch);
+        sc.plan.plan(reqs);
+        sc.slots.clear();
+        sc.slots.resize_with(reqs.len(), || None);
+        for g in 0..sc.plan.n_groups() {
+            let n_points = reqs[sc.plan.group(g)[0]].n_points;
+            sc.members.clear();
+            sc.h0s.clear();
+            for &i in sc.plan.group(g) {
+                let h0: &[f64] = if reqs[i].h0.is_empty() {
+                    &lorenz96::Y0
                 } else {
-                    req.h0.clone()
+                    &reqs[i].h0
                 };
-                anyhow::ensure!(
-                    h0.len() == dim,
-                    "h0 dim {} != twin dim {}",
-                    h0.len(),
-                    dim
-                );
-                Ok(h0)
-            },
-            |h0s, n_points| {
-                let trajs = self.simulate_batch(h0s, n_points)?;
-                Ok(trajs
-                    .into_iter()
-                    .map(|trajectory| TwinResponse {
-                        trajectory,
-                        backend: backend.clone(),
-                    })
-                    .collect())
-            },
-        )
+                if h0.len() == dim {
+                    sc.members.push(i);
+                    sc.h0s.extend_from_slice(h0);
+                } else {
+                    sc.slots[i] = Some(Err(anyhow::anyhow!(
+                        "h0 dim {} != twin dim {}",
+                        h0.len(),
+                        dim
+                    )));
+                }
+            }
+            if sc.members.is_empty() {
+                continue;
+            }
+            let batch = sc.members.len();
+            if matches!(self.backend, L96Backend::Pjrt(_)) {
+                // No batched artifact path yet: per-trajectory rollouts.
+                for k in 0..batch {
+                    let i = sc.members[k];
+                    let r = self
+                        .simulate(
+                            &sc.h0s[k * dim..(k + 1) * dim],
+                            n_points,
+                        )
+                        .map(|trajectory| TwinResponse {
+                            trajectory,
+                            backend,
+                        });
+                    sc.slots[i] = Some(r);
+                }
+                continue;
+            }
+            match self.simulate_batch_flat(
+                &sc.h0s,
+                batch,
+                n_points,
+                &mut sc.solver,
+                &mut sc.flat,
+            ) {
+                Ok(()) => {
+                    for (k, &i) in sc.members.iter().enumerate() {
+                        let mut t = sc.pool.get(dim);
+                        unbatch_into(&sc.flat, batch, dim, k, &mut t);
+                        sc.slots[i] = Some(Ok(TwinResponse {
+                            trajectory: t,
+                            backend,
+                        }));
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    for &i in &sc.members {
+                        sc.slots[i] =
+                            Some(Err(anyhow::anyhow!(msg.clone())));
+                    }
+                }
+            }
+        }
+        for s in sc.slots.drain(..) {
+            out.push(s.expect("every request receives a result"));
+        }
+        self.scratch = sc;
     }
 }
 
@@ -309,7 +434,10 @@ mod tests {
         let mut dig = Lorenz96Twin::digital(&w);
         let a = ana.simulate(&[1.0, 0.5, -0.5], 50).unwrap();
         let d = dig.simulate(&[1.0, 0.5, -0.5], 50).unwrap();
-        let err = crate::metrics::l1::mean_l1_multi(&a, &d);
+        let err = crate::metrics::l1::mean_l1_multi(
+            &a.to_nested(),
+            &d.to_nested(),
+        );
         assert!(err < 0.01, "analog vs digital L1 {err}");
     }
 
@@ -318,7 +446,7 @@ mod tests {
         let mut twin = Lorenz96Twin::digital(&toy_weights(6));
         let resp =
             twin.run(&TwinRequest::autonomous(vec![], 5)).unwrap();
-        assert_eq!(resp.trajectory[0], lorenz96::Y0.to_vec());
+        assert_eq!(resp.trajectory.row(0), &lorenz96::Y0[..]);
     }
 
     #[test]
@@ -346,7 +474,7 @@ mod tests {
         let traj = twin.simulate(&[1.0, 2.0, 3.0], 4).unwrap();
         assert_eq!(traj.len(), 4);
         // Zero weights: identity rollout.
-        assert_eq!(traj[3], vec![1.0, 2.0, 3.0]);
+        assert_eq!(traj.row(3), [1.0, 2.0, 3.0]);
     }
 
     /// Mixed n_points, explicit dim-3 initial states (the empty-h0 default
@@ -369,6 +497,17 @@ mod tests {
             let b = b.as_ref().unwrap();
             assert_eq!(b.trajectory, s.trajectory, "request {k}");
             assert_eq!(b.backend, s.backend);
+        }
+        // Warm-scratch pass with recycling: pooled buffers must not leak
+        // stale samples between batches.
+        for (resp, s) in twin.run_batch(&reqs).into_iter().zip(&serial) {
+            let resp = resp.unwrap();
+            assert_eq!(resp.trajectory, s.trajectory);
+            twin.recycle(resp);
+        }
+        let third = twin.run_batch(&reqs);
+        for (b, s) in third.iter().zip(&serial) {
+            assert_eq!(b.as_ref().unwrap().trajectory, s.trajectory);
         }
     }
 
@@ -400,12 +539,12 @@ mod tests {
             TwinRequest::autonomous(vec![0.5; 6], 5),
         ]);
         assert_eq!(
-            results[0].as_ref().unwrap().trajectory[0],
-            lorenz96::Y0.to_vec()
+            results[0].as_ref().unwrap().trajectory.row(0),
+            &lorenz96::Y0[..]
         );
         assert_eq!(
-            results[1].as_ref().unwrap().trajectory[0],
-            vec![0.5; 6]
+            results[1].as_ref().unwrap().trajectory.row(0),
+            [0.5; 6]
         );
     }
 

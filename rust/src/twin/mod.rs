@@ -15,12 +15,20 @@
 //!
 //! [`registry::TwinRegistry`] maps twin names to factories so the
 //! coordinator can spin up per-worker instances.
+//!
+//! Responses carry flat [`Trajectory`] payloads; the batched entry point
+//! is [`Twin::run_batch_into`], which appends into a caller-owned result
+//! vector so a warm worker's dispatch loop — and the twins' pooled
+//! response trajectories underneath — never touches the allocator in
+//! steady state.
 
 pub mod hp;
 pub mod lorenz96;
 pub mod registry;
 pub mod setup;
+pub mod throughput;
 
+use crate::util::tensor::Trajectory;
 use crate::workload::stimuli::Waveform;
 
 /// A rollout executed on a PJRT artifact: (h0, optional stimulus sampled at
@@ -53,12 +61,18 @@ impl TwinRequest {
 }
 
 /// A twin-inference response.
+///
+/// The trajectory is flat ([`Trajectory`], row = one sample) and the
+/// backend label is `&'static str` — both deliberate: a response carries
+/// exactly one heap buffer, and twins draw that buffer from a pool so a
+/// warm batch path allocates nothing (see the perf invariants in
+/// `lib.rs`).
 #[derive(Debug, Clone)]
 pub struct TwinResponse {
-    /// [n_points][state_dim] trajectory.
-    pub trajectory: Vec<Vec<f64>>,
+    /// [n_points][state_dim] trajectory, stored flat.
+    pub trajectory: Trajectory,
     /// Which backend produced it (telemetry).
-    pub backend: String,
+    pub backend: &'static str,
 }
 
 /// The object-safe twin interface the coordinator serves.
@@ -86,88 +100,93 @@ pub trait Twin: Send {
     /// twin keeps working under the coordinator's batch dispatch. Twins
     /// with a real batched rollout (the analogue solver's multi-vector
     /// crossbar reads, the digital backends' per-layer GEMMs) override
-    /// this; implementations split incompatible requests into compatible
-    /// sub-batches via [`compatible_groups`] rather than padding, and with
-    /// noise off their batched trajectories are bit-identical to serial
-    /// `run` calls.
+    /// this (or [`Twin::run_batch_into`]); implementations split
+    /// incompatible requests into compatible sub-batches (see
+    /// [`GroupPlan`]) rather than padding, and with noise off their
+    /// batched trajectories are bit-identical to serial `run` calls.
     fn run_batch(
         &mut self,
         reqs: &[TwinRequest],
     ) -> Vec<anyhow::Result<TwinResponse>> {
         reqs.iter().map(|r| self.run(r)).collect()
     }
+
+    /// Append one result per request (in order) to `out` — the
+    /// scheduler-facing form of [`Twin::run_batch`]. The caller owns and
+    /// reuses `out`, so a warm worker's dispatch loop allocates no result
+    /// vector per batch; twins with pooled response trajectories extend
+    /// that to a fully allocation-free steady state. The default routes
+    /// through `run_batch`, so overriding `run_batch` alone is enough;
+    /// a twin overriding *this* method must also override `run_batch` to
+    /// delegate here (as the HP and Lorenz96 twins do), or the two entry
+    /// points diverge.
+    fn run_batch_into(
+        &mut self,
+        reqs: &[TwinRequest],
+        out: &mut Vec<anyhow::Result<TwinResponse>>,
+    ) {
+        out.extend(self.run_batch(reqs));
+    }
 }
 
-/// Group request indices into batch-compatible sub-batches: requests in a
-/// group share `n_points` (one rollout length per batched solve), while h0
-/// and stimulus may differ per trajectory. Submission order is preserved
-/// within each group, and nothing is padded — a mixed batch simply splits.
+/// Reusable batch-compatibility plan: request indices grouped into
+/// sub-batches that share `n_points` (one rollout length per batched
+/// solve), while h0 and stimulus may differ per trajectory. Groups come
+/// out in ascending `n_points`; submission order is preserved within each
+/// group, and nothing is padded — a mixed batch simply splits.
+///
+/// The plan owns its index storage and sorts in place
+/// (`sort_unstable_by_key` allocates nothing), so replanning on a warm
+/// instance is allocation-free — this is what the twins' `run_batch_into`
+/// overrides use instead of building fresh maps per batch.
+#[derive(Debug, Default)]
+pub struct GroupPlan {
+    /// Request indices, sorted by (n_points, submission order).
+    order: Vec<usize>,
+    /// Half-open (start, end) ranges into `order`, one per group.
+    bounds: Vec<(usize, usize)>,
+}
+
+impl GroupPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Rebuild the plan for `reqs` (reuses internal buffers).
+    pub fn plan(&mut self, reqs: &[TwinRequest]) {
+        self.order.clear();
+        self.order.extend(0..reqs.len());
+        self.order.sort_unstable_by_key(|&i| (reqs[i].n_points, i));
+        self.bounds.clear();
+        let mut start = 0;
+        for k in 1..=self.order.len() {
+            if k == self.order.len()
+                || reqs[self.order[k]].n_points
+                    != reqs[self.order[start]].n_points
+            {
+                self.bounds.push((start, k));
+                start = k;
+            }
+        }
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.bounds.len()
+    }
+
+    /// Request indices of group `g`, in submission order.
+    pub fn group(&self, g: usize) -> &[usize] {
+        let (s, e) = self.bounds[g];
+        &self.order[s..e]
+    }
+}
+
+/// Group request indices into batch-compatible sub-batches (allocating
+/// convenience over [`GroupPlan`] for inspection and tests).
 pub fn compatible_groups(reqs: &[TwinRequest]) -> Vec<Vec<usize>> {
-    let mut groups: std::collections::BTreeMap<usize, Vec<usize>> =
-        std::collections::BTreeMap::new();
-    for (i, r) in reqs.iter().enumerate() {
-        groups.entry(r.n_points).or_default().push(i);
-    }
-    groups.into_values().collect()
-}
-
-/// The shared scaffolding of a batched `Twin::run_batch` override:
-/// split requests into [`compatible_groups`], validate each request with
-/// `prepare` (a failure fails that request alone), execute every non-empty
-/// group once with `execute` (payloads in submission order + the group's
-/// `n_points`), and fan results back out to request order. A group-level
-/// error — or an arity mismatch from `execute` — is broadcast to every
-/// member of that group without touching the others.
-pub fn run_batch_grouped<P>(
-    reqs: &[TwinRequest],
-    mut prepare: impl FnMut(&TwinRequest) -> anyhow::Result<P>,
-    mut execute: impl FnMut(&[P], usize) -> anyhow::Result<Vec<TwinResponse>>,
-) -> Vec<anyhow::Result<TwinResponse>> {
-    let mut out: Vec<Option<anyhow::Result<TwinResponse>>> = Vec::new();
-    out.resize_with(reqs.len(), || None);
-    for group in compatible_groups(reqs) {
-        let mut members: Vec<usize> = Vec::new();
-        let mut payloads: Vec<P> = Vec::new();
-        for &i in &group {
-            match prepare(&reqs[i]) {
-                Ok(p) => {
-                    members.push(i);
-                    payloads.push(p);
-                }
-                Err(e) => out[i] = Some(Err(e)),
-            }
-        }
-        if members.is_empty() {
-            continue;
-        }
-        let n_points = reqs[members[0]].n_points;
-        let broadcast =
-            |out: &mut Vec<Option<anyhow::Result<TwinResponse>>>,
-             msg: String| {
-                for &i in &members {
-                    out[i] = Some(Err(anyhow::anyhow!(msg.clone())));
-                }
-            };
-        match execute(&payloads, n_points) {
-            Ok(resps) if resps.len() == members.len() => {
-                for (&i, r) in members.iter().zip(resps) {
-                    out[i] = Some(Ok(r));
-                }
-            }
-            Ok(resps) => broadcast(
-                &mut out,
-                format!(
-                    "batched backend returned {} responses for {} requests",
-                    resps.len(),
-                    members.len()
-                ),
-            ),
-            Err(e) => broadcast(&mut out, format!("{e:#}")),
-        }
-    }
-    out.into_iter()
-        .map(|o| o.expect("every request receives a result"))
-        .collect()
+    let mut plan = GroupPlan::new();
+    plan.plan(reqs);
+    (0..plan.n_groups()).map(|g| plan.group(g).to_vec()).collect()
 }
 
 #[cfg(test)]
@@ -192,6 +211,25 @@ mod tests {
     }
 
     #[test]
+    fn group_plan_is_reusable() {
+        let mut plan = GroupPlan::new();
+        let reqs = vec![
+            TwinRequest::autonomous(vec![], 7),
+            TwinRequest::autonomous(vec![], 3),
+            TwinRequest::autonomous(vec![], 7),
+        ];
+        plan.plan(&reqs);
+        assert_eq!(plan.n_groups(), 2);
+        assert_eq!(plan.group(0), [1]);
+        assert_eq!(plan.group(1), [0, 2]);
+        // Replan with a different shape: old state fully replaced.
+        let reqs2 = vec![TwinRequest::autonomous(vec![], 5)];
+        plan.plan(&reqs2);
+        assert_eq!(plan.n_groups(), 1);
+        assert_eq!(plan.group(0), [0]);
+    }
+
+    #[test]
     fn default_run_batch_is_serial_fallback() {
         struct Echo;
         impl Twin for Echo {
@@ -213,8 +251,11 @@ mod tests {
             ) -> anyhow::Result<TwinResponse> {
                 anyhow::ensure!(req.n_points > 0, "empty request");
                 Ok(TwinResponse {
-                    trajectory: vec![req.h0.clone(); req.n_points],
-                    backend: "echo".into(),
+                    trajectory: Trajectory::repeat_row(
+                        &req.h0,
+                        req.n_points,
+                    ),
+                    backend: "echo",
                 })
             }
         }
@@ -229,9 +270,14 @@ mod tests {
         assert_eq!(results[0].as_ref().unwrap().trajectory.len(), 2);
         assert!(results[1].is_err(), "per-request failure isolated");
         assert_eq!(
-            results[2].as_ref().unwrap().trajectory[0],
-            vec![3.0]
+            results[2].as_ref().unwrap().trajectory.row(0),
+            [3.0]
         );
+        // run_batch_into appends to a caller-owned vector.
+        let mut out = Vec::new();
+        t.run_batch_into(&reqs, &mut out);
+        assert_eq!(out.len(), 3);
+        assert!(out[0].is_ok() && out[1].is_err() && out[2].is_ok());
     }
 
     #[test]

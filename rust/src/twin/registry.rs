@@ -87,8 +87,11 @@ mod tests {
         }
         fn run(&mut self, req: &TwinRequest) -> Result<TwinResponse> {
             Ok(TwinResponse {
-                trajectory: vec![vec![0.0]; req.n_points],
-                backend: "dummy".into(),
+                trajectory: crate::util::tensor::Trajectory::repeat_row(
+                    &[0.0],
+                    req.n_points,
+                ),
+                backend: "dummy",
             })
         }
     }

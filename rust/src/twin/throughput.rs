@@ -1,0 +1,305 @@
+//! Serial-vs-batched twin throughput measurement — shared by the
+//! `batch_throughput` bench binary (full mode, release) and the tier-1
+//! smoke test (`rust/tests/bench_smoke.rs`), both of which emit the
+//! machine-readable `BENCH_batch_throughput.json` at the repository root
+//! so the perf trajectory is tracked from PR 2 onward.
+//!
+//! The metric is **ns per trajectory-step**: wall time divided by
+//! `batch * n_points`, i.e. the cost of producing one output sample of one
+//! trajectory. Batched wins come from amortising the weight-matrix
+//! traversal, the moment-matched variance GEMM and per-request overhead
+//! across the batch; the speedup column is `serial / batched` at equal work.
+
+use std::path::PathBuf;
+
+use crate::analog::system::AnalogNoise;
+use crate::device::taox::DeviceConfig;
+use crate::models::loader::MlpWeights;
+use crate::twin::hp::HpTwin;
+use crate::twin::lorenz96::Lorenz96Twin;
+use crate::twin::{Twin, TwinRequest};
+use crate::util::bench::Bencher;
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+use crate::util::tensor::Mat;
+use crate::workload::stimuli::Waveform;
+
+/// One measured (route, batch size) cell.
+#[derive(Debug, Clone)]
+pub struct ThroughputEntry {
+    pub route: &'static str,
+    pub batch: usize,
+    pub n_points: usize,
+    /// Median ns per trajectory-step, B serial `run` calls.
+    pub serial_ns_per_step: f64,
+    /// Median ns per trajectory-step, one `run_batch` call.
+    pub batched_ns_per_step: f64,
+    /// serial / batched (per-step; > 1 means batching wins).
+    pub speedup: f64,
+}
+
+/// The measured routes (HP and Lorenz96, analogue + digital backends).
+pub const ROUTES: [&str; 4] =
+    ["hp/analog", "hp/digital", "l96/analog", "l96/digital"];
+
+fn synth_mlp(
+    dims: &[(usize, usize)],
+    dt: f64,
+    task: &str,
+    seed: u64,
+) -> MlpWeights {
+    let mut rng = Pcg64::seeded(seed);
+    let layers = dims
+        .iter()
+        .map(|&(r, c)| {
+            (
+                Mat::from_fn(r, c, |_, _| rng.uniform_in(-0.2, 0.2)),
+                (0..c).map(|_| rng.uniform_in(-0.05, 0.05)).collect(),
+            )
+        })
+        .collect();
+    MlpWeights { layers, dt, kind: "node".into(), task: task.into() }
+}
+
+/// Trained-shape HP field: [v; h] -> 14 -> 14 -> 1 (the timing-relevant
+/// structure of the real hp_node artifact).
+pub fn hp_weights() -> MlpWeights {
+    synth_mlp(&[(2, 14), (14, 14), (14, 1)], 1e-3, "hp", 17)
+}
+
+/// Trained-shape Lorenz96 field: 6 -> 64 -> 64 -> 6 with pseudo-random
+/// weights (the timing-relevant structure of the real l96_node artifact).
+pub fn l96_weights() -> MlpWeights {
+    synth_mlp(&[(6, 64), (64, 64), (64, 6)], 0.02, "l96", 42)
+}
+
+/// Build the twin behind a measured route, at the paper's hardware noise
+/// operating point for the analogue backends.
+pub fn make_twin(route: &str) -> Box<dyn Twin> {
+    let device = DeviceConfig { fault_rate: 0.0, ..Default::default() };
+    match route {
+        "hp/analog" => Box::new(HpTwin::analog(
+            &hp_weights(),
+            &device,
+            AnalogNoise::hardware(),
+            1,
+        )),
+        "hp/digital" => Box::new(HpTwin::digital(&hp_weights())),
+        "l96/analog" => Box::new(Lorenz96Twin::analog(
+            &l96_weights(),
+            &device,
+            AnalogNoise::hardware(),
+            1,
+        )),
+        "l96/digital" => Box::new(Lorenz96Twin::digital(&l96_weights())),
+        other => panic!("unknown throughput route '{other}'"),
+    }
+}
+
+/// Noise-free variant of a route's twin (for bit-identity gates).
+pub fn make_quiet_twin(route: &str) -> Box<dyn Twin> {
+    let quiet = DeviceConfig {
+        fault_rate: 0.0,
+        pulse_sigma: 0.0,
+        read_noise: 0.0,
+        ..Default::default()
+    };
+    match route {
+        "hp/analog" => Box::new(HpTwin::analog(
+            &hp_weights(),
+            &quiet,
+            AnalogNoise::off(),
+            1,
+        )),
+        "l96/analog" => Box::new(Lorenz96Twin::analog(
+            &l96_weights(),
+            &quiet,
+            AnalogNoise::off(),
+            1,
+        )),
+        other => make_twin(other),
+    }
+}
+
+/// Deterministic request batch for a route (driven for HP, autonomous for
+/// Lorenz96; per-request stimuli / initial states differ).
+pub fn requests(route: &str, b: usize, n_points: usize) -> Vec<TwinRequest> {
+    let mut rng = Pcg64::seeded(7);
+    let waves = [
+        Waveform::sine(1.0, 4.0),
+        Waveform::triangular(1.0, 4.0),
+        Waveform::rectangular(1.0, 4.0),
+        Waveform::modulated(1.0, 4.0, 1.0),
+    ];
+    (0..b)
+        .map(|k| {
+            if route.starts_with("hp/") {
+                TwinRequest::driven(
+                    vec![rng.uniform_in(0.1, 0.9)],
+                    n_points,
+                    waves[k % waves.len()],
+                )
+            } else {
+                TwinRequest::autonomous(
+                    (0..6).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
+                    n_points,
+                )
+            }
+        })
+        .collect()
+}
+
+/// Assert `run_batch` reproduces per-request `run` bit-for-bit on a
+/// noise-free twin (speed never buys accuracy drift).
+pub fn assert_bit_identical(route: &str, b: usize, n_points: usize) {
+    let mut twin = make_quiet_twin(route);
+    let reqs = requests(route, b, n_points);
+    let serial: Vec<_> =
+        reqs.iter().map(|r| twin.run(r).unwrap()).collect();
+    let batched = twin.run_batch(&reqs);
+    for (k, (got, want)) in batched.iter().zip(&serial).enumerate() {
+        assert_eq!(
+            got.as_ref().unwrap().trajectory,
+            want.trajectory,
+            "{route} request {k}: batched != serial under noise-off"
+        );
+    }
+}
+
+/// Measure one route at the given batch sizes.
+pub fn measure_route(
+    route: &'static str,
+    batch_sizes: &[usize],
+    n_points: usize,
+    bench: &Bencher,
+) -> Vec<ThroughputEntry> {
+    let mut twin = make_twin(route);
+    let mut entries = Vec::new();
+    for &b in batch_sizes {
+        let reqs = requests(route, b, n_points);
+        let steps = (b * n_points) as f64;
+        let serial = bench.run(&format!("{route} serial x{b}"), || {
+            let mut n_ok = 0;
+            for r in &reqs {
+                n_ok += twin.run(r).unwrap().trajectory.len();
+            }
+            n_ok
+        });
+        let batched = bench.run(&format!("{route} run_batch B={b}"), || {
+            let results = twin.run_batch(&reqs);
+            assert!(results.iter().all(|r| r.is_ok()));
+            results.len()
+        });
+        let serial_ns = serial.median.as_nanos() as f64 / steps;
+        let batched_ns = batched.median.as_nanos() as f64 / steps;
+        entries.push(ThroughputEntry {
+            route,
+            batch: b,
+            n_points,
+            serial_ns_per_step: serial_ns,
+            batched_ns_per_step: batched_ns,
+            speedup: serial_ns / batched_ns.max(1e-9),
+        });
+    }
+    entries
+}
+
+/// Measure every route in [`ROUTES`].
+pub fn measure(
+    batch_sizes: &[usize],
+    n_points: usize,
+    bench: &Bencher,
+) -> Vec<ThroughputEntry> {
+    ROUTES
+        .iter()
+        .flat_map(|&r| measure_route(r, batch_sizes, n_points, bench))
+        .collect()
+}
+
+/// Serialise entries to the tracked-benchmark JSON document.
+pub fn to_json(mode: &str, entries: &[ThroughputEntry]) -> Json {
+    let rows = entries
+        .iter()
+        .map(|e| {
+            Json::obj(vec![
+                ("route", Json::Str(e.route.to_string())),
+                ("batch", Json::Num(e.batch as f64)),
+                ("n_points", Json::Num(e.n_points as f64)),
+                ("serial_ns_per_step", Json::Num(e.serial_ns_per_step)),
+                ("batched_ns_per_step", Json::Num(e.batched_ns_per_step)),
+                ("speedup", Json::Num(e.speedup)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("bench", Json::Str("batch_throughput".into())),
+        ("mode", Json::Str(mode.into())),
+        ("unit", Json::Str("ns_per_trajectory_step".into())),
+        ("entries", Json::Arr(rows)),
+    ])
+}
+
+/// Where the tracked benchmark lands: `$BENCH_OUT` if set, else
+/// `BENCH_batch_throughput.json` at the repository root.
+pub fn default_json_path() -> PathBuf {
+    if let Ok(p) = std::env::var("BENCH_OUT") {
+        return PathBuf::from(p);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_batch_throughput.json")
+}
+
+/// Write the benchmark JSON.
+pub fn write_json(
+    path: &std::path::Path,
+    mode: &str,
+    entries: &[ThroughputEntry],
+) -> anyhow::Result<()> {
+    crate::util::json::to_file(path, &to_json(mode, entries))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn requests_are_route_shaped() {
+        let hp = requests("hp/analog", 3, 10);
+        assert_eq!(hp.len(), 3);
+        assert!(hp.iter().all(|r| r.stimulus.is_some()));
+        let l96 = requests("l96/digital", 2, 10);
+        assert!(l96.iter().all(|r| r.stimulus.is_none()));
+        assert!(l96.iter().all(|r| r.h0.len() == 6));
+    }
+
+    #[test]
+    fn json_document_shape() {
+        let entries = vec![ThroughputEntry {
+            route: "hp/analog",
+            batch: 32,
+            n_points: 12,
+            serial_ns_per_step: 100.0,
+            batched_ns_per_step: 40.0,
+            speedup: 2.5,
+        }];
+        let doc = to_json("smoke", &entries);
+        assert_eq!(doc.get("mode").unwrap().as_str(), Some("smoke"));
+        let rows = doc.get("entries").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(
+            rows[0].get("speedup").unwrap().as_f64(),
+            Some(2.5)
+        );
+        // Round-trips through the parser.
+        let text = doc.to_string();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back, doc);
+    }
+
+    #[test]
+    fn bit_identity_gate_holds_on_quiet_twins() {
+        assert_bit_identical("hp/analog", 4, 8);
+        assert_bit_identical("l96/digital", 4, 8);
+    }
+}

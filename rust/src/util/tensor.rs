@@ -6,11 +6,17 @@
 //! allocation-free `_into` forms used by the request path.
 //!
 //! The batched request path adds [`Mat::vecmat_batch_into`]: B stacked
-//! input vectors against one matrix in a single pass over the matrix (a
-//! row-major GEMM). Its per-trajectory accumulation order is *identical*
+//! input vectors against one matrix, executed as a column-blocked
+//! microkernel that touches each trajectory's input and output in
+//! contiguous tiles. Its per-trajectory accumulation order is *identical*
 //! to [`Mat::vecmat_into`], so a batched rollout reproduces B serial
 //! rollouts bit-for-bit when no stochastic term intervenes — that exactness
 //! is what the batched-vs-serial equivalence tests pin down.
+//!
+//! [`Trajectory`] is the flat solver-output container (one row per sample)
+//! shared by every layer from the ODE steppers to `TwinResponse`; together
+//! with [`TrajectoryPool`] it is what keeps the warm batched request path
+//! free of steady-state heap allocations.
 
 /// Row-major dense matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -140,13 +146,16 @@ impl Mat {
     /// Batched [`Mat::vecmat`]: `ys[b] = xs[b]^T A` for `batch` row-major
     /// stacked inputs (`xs: [batch * rows]`, `ys: [batch * cols]`).
     ///
-    /// This is the row-major GEMM of the batched request path: the weight
-    /// matrix is walked **once** per call (row `r` is loaded one time and
-    /// applied to every trajectory) instead of once per trajectory, which
-    /// is where batching amortises memory traffic. For each trajectory the
-    /// accumulation order over `r` — including the zero-input skip — is the
-    /// same as [`Mat::vecmat_into`], so per-trajectory outputs are
-    /// bit-identical to B independent serial calls.
+    /// This is the row-major GEMM of the batched request path, tiled as a
+    /// column-blocked microkernel: each trajectory's input vector is read
+    /// contiguously (front to back, once per column block), its output is
+    /// accumulated into one hot `VECMAT_TILE_COLS`-wide tile at a time, and
+    /// the matrix is streamed in contiguous row chunks — no batch-major
+    /// strides anywhere, so every inner loop autovectorises. For each
+    /// output element the accumulation order over `r` — including the
+    /// zero-input skip — is the same as [`Mat::vecmat_into`], so
+    /// per-trajectory outputs are bit-identical to B independent serial
+    /// calls (the contract `rust/tests/batched.rs` pins down).
     pub fn vecmat_batch_into(
         &self,
         xs: &[f64],
@@ -164,17 +173,27 @@ impl Mat {
             "vecmat_batch: ys length != batch * cols"
         );
         ys.fill(0.0);
-        for r in 0..self.rows {
-            let row = self.row(r);
-            for b in 0..batch {
-                let xv = xs[b * self.rows + r];
-                if xv == 0.0 {
-                    continue;
+        // Output-tile width: 32 f64 = 4 cache lines, small enough that the
+        // accumulator tile stays L1-resident across the whole `r` loop.
+        const VECMAT_TILE_COLS: usize = 32;
+        let (rows, cols) = (self.rows, self.cols);
+        for b in 0..batch {
+            let x = &xs[b * rows..(b + 1) * rows];
+            let y = &mut ys[b * cols..(b + 1) * cols];
+            let mut c0 = 0;
+            while c0 < cols {
+                let c1 = (c0 + VECMAT_TILE_COLS).min(cols);
+                let yt = &mut y[c0..c1];
+                for (r, &xv) in x.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let at = &self.data[r * cols + c0..r * cols + c1];
+                    for (yc, &a) in yt.iter_mut().zip(at) {
+                        *yc += xv * a;
+                    }
                 }
-                let y = &mut ys[b * self.cols..(b + 1) * self.cols];
-                for (yc, &a) in y.iter_mut().zip(row) {
-                    *yc += xv * a;
-                }
+                c0 = c1;
             }
         }
     }
@@ -219,6 +238,281 @@ impl Mat {
     /// Frobenius norm.
     pub fn frob(&self) -> f64 {
         self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trajectory: flat row-major solver output
+// ---------------------------------------------------------------------------
+
+/// A sampled trajectory stored flat: `n_points` rows of `dim` values in one
+/// contiguous row-major buffer (row = one sample).
+///
+/// This is the output container threaded through every layer that used to
+/// produce `Vec<Vec<f64>>` — the ODE solvers, the analogue closed loop, the
+/// twins and `TwinResponse`. One allocation per trajectory instead of one
+/// per sample, rows are cache-contiguous, and a cleared `Trajectory` keeps
+/// its buffer, so pooled instances make the warm batched request path
+/// allocation-free. Batched solvers use the same type with
+/// `dim = batch * d` (each row is one lockstep sample of the whole batch).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trajectory {
+    dim: usize,
+    n_points: usize,
+    data: Vec<f64>,
+}
+
+impl Trajectory {
+    /// Empty trajectory with row width `dim`.
+    pub fn new(dim: usize) -> Self {
+        Self { dim, n_points: 0, data: Vec::new() }
+    }
+
+    /// Empty trajectory with capacity for `n_points` rows.
+    pub fn with_capacity(dim: usize, n_points: usize) -> Self {
+        Self { dim, n_points: 0, data: Vec::with_capacity(dim * n_points) }
+    }
+
+    /// Zero-filled trajectory.
+    pub fn zeros(dim: usize, n_points: usize) -> Self {
+        Self { dim, n_points, data: vec![0.0; dim * n_points] }
+    }
+
+    /// Adopt a flat row-major buffer (`data.len()` must be a multiple of
+    /// `dim`); the inverse of [`Trajectory::into_data`].
+    pub fn from_data(dim: usize, data: Vec<f64>) -> Self {
+        if dim == 0 {
+            assert!(data.is_empty(), "dim-0 trajectory with data");
+            return Self { dim, n_points: 0, data };
+        }
+        assert_eq!(
+            data.len() % dim,
+            0,
+            "trajectory data length {} not a multiple of dim {}",
+            data.len(),
+            dim
+        );
+        let n_points = data.len() / dim;
+        Self { dim, n_points, data }
+    }
+
+    /// Build from nested rows (the legacy `[n][dim]` layout).
+    pub fn from_nested(rows: &[Vec<f64>]) -> Self {
+        let dim = rows.first().map_or(0, Vec::len);
+        let mut t = Self::with_capacity(dim, rows.len());
+        for r in rows {
+            t.push_row(r);
+        }
+        t
+    }
+
+    /// `n` copies of one row (dim = `row.len()`).
+    pub fn repeat_row(row: &[f64], n: usize) -> Self {
+        let mut t = Self::with_capacity(row.len(), n);
+        for _ in 0..n {
+            t.push_row(row);
+        }
+        t
+    }
+
+    /// Row width (state dimension; `batch * d` for batched solves).
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Number of sampled rows.
+    pub fn n_points(&self) -> usize {
+        self.n_points
+    }
+
+    /// Alias for [`Trajectory::n_points`] (container idiom).
+    pub fn len(&self) -> usize {
+        self.n_points
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n_points == 0
+    }
+
+    /// Borrow row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        assert!(i < self.n_points, "row {i} >= n_points {}", self.n_points);
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Mutably borrow row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        assert!(i < self.n_points, "row {i} >= n_points {}", self.n_points);
+        &mut self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// The final row, if any.
+    pub fn last(&self) -> Option<&[f64]> {
+        self.n_points.checked_sub(1).map(|i| self.row(i))
+    }
+
+    /// Append one row (`row.len()` must equal `dim`).
+    pub fn push_row(&mut self, row: &[f64]) {
+        assert_eq!(
+            row.len(),
+            self.dim,
+            "push_row: row length {} != dim {}",
+            row.len(),
+            self.dim
+        );
+        self.data.extend_from_slice(row);
+        self.n_points += 1;
+    }
+
+    /// Append one row from an iterator that must yield exactly `dim`
+    /// values (lets callers sample non-contiguous state — e.g. integrator
+    /// capacitor voltages — without a staging buffer).
+    pub fn push_row_from_iter(&mut self, it: impl IntoIterator<Item = f64>) {
+        let before = self.data.len();
+        self.data.extend(it);
+        assert_eq!(
+            self.data.len() - before,
+            self.dim,
+            "push_row_from_iter: iterator yielded {} values, dim is {}",
+            self.data.len() - before,
+            self.dim
+        );
+        self.n_points += 1;
+    }
+
+    /// Append a copy of the final row (the fixed-step solvers' "advance
+    /// in place from the previous sample" idiom; no scratch state vector).
+    pub fn push_copy_of_last(&mut self) {
+        assert!(self.n_points > 0, "push_copy_of_last on empty trajectory");
+        let start = (self.n_points - 1) * self.dim;
+        self.data.extend_from_within(start..start + self.dim);
+        self.n_points += 1;
+    }
+
+    /// Drop all rows, keeping the buffer (capacity) for reuse.
+    pub fn clear(&mut self) {
+        self.data.clear();
+        self.n_points = 0;
+    }
+
+    /// Clear and retarget the row width — the pooled-reuse entry point:
+    /// the heap buffer survives, so a warm pool never reallocates.
+    pub fn reset(&mut self, dim: usize) {
+        self.clear();
+        self.dim = dim;
+    }
+
+    /// Reserve space for `additional` more rows.
+    pub fn reserve_rows(&mut self, additional: usize) {
+        self.data.reserve(additional * self.dim);
+    }
+
+    /// The flat row-major buffer.
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Consume into the flat buffer (for `dim == 1` this *is* the scalar
+    /// sample series).
+    pub fn into_data(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// Copy out the legacy nested `[n][dim]` layout (report/metric code).
+    pub fn to_nested(&self) -> Vec<Vec<f64>> {
+        self.iter().map(|r| r.to_vec()).collect()
+    }
+
+    /// Iterate over rows.
+    pub fn iter(&self) -> TrajectoryRows<'_> {
+        TrajectoryRows { t: self, i: 0 }
+    }
+}
+
+impl std::ops::Index<usize> for Trajectory {
+    type Output = [f64];
+
+    fn index(&self, i: usize) -> &[f64] {
+        self.row(i)
+    }
+}
+
+/// Row iterator over a [`Trajectory`].
+pub struct TrajectoryRows<'a> {
+    t: &'a Trajectory,
+    i: usize,
+}
+
+impl<'a> Iterator for TrajectoryRows<'a> {
+    type Item = &'a [f64];
+
+    fn next(&mut self) -> Option<&'a [f64]> {
+        if self.i < self.t.n_points {
+            let r = self.t.row(self.i);
+            self.i += 1;
+            Some(r)
+        } else {
+            None
+        }
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let rem = self.t.n_points - self.i;
+        (rem, Some(rem))
+    }
+}
+
+impl ExactSizeIterator for TrajectoryRows<'_> {}
+
+impl<'a> IntoIterator for &'a Trajectory {
+    type Item = &'a [f64];
+    type IntoIter = TrajectoryRows<'a>;
+
+    fn into_iter(self) -> TrajectoryRows<'a> {
+        self.iter()
+    }
+}
+
+/// Free-list of [`Trajectory`] buffers.
+///
+/// `get` pops a cleared trajectory (retargeted to `dim`, buffer intact);
+/// `put` returns one. A warm pool therefore hands out row storage without
+/// touching the allocator — the twins draw their per-request response
+/// trajectories from a pool, and callers that hand responses back (e.g.
+/// the steady-state allocation test) close the loop to zero allocations
+/// per batch.
+#[derive(Debug, Default)]
+pub struct TrajectoryPool {
+    free: Vec<Trajectory>,
+}
+
+impl TrajectoryPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pop a cleared trajectory with row width `dim` (allocates only when
+    /// the pool is empty).
+    pub fn get(&mut self, dim: usize) -> Trajectory {
+        let mut t = self.free.pop().unwrap_or_default();
+        t.reset(dim);
+        t
+    }
+
+    /// Return a trajectory's buffer to the pool.
+    pub fn put(&mut self, t: Trajectory) {
+        self.free.push(t);
+    }
+
+    /// Buffers currently pooled.
+    pub fn len(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.free.is_empty()
     }
 }
 
@@ -424,5 +718,110 @@ mod tests {
         let mut y = vec![123.0];
         a.gemv_into(&[1.0, 2.0], &mut y);
         assert_eq!(y, vec![3.0]);
+    }
+
+    #[test]
+    fn vecmat_batch_tiling_spans_many_column_blocks() {
+        // Wider than one 32-column tile: the blocked kernel must still be
+        // bit-identical to the serial vecmat on every trajectory.
+        let m = Mat::from_fn(9, 77, |r, c| {
+            ((r * 31 + c * 17) % 13) as f64 / 7.0 - 0.9
+        });
+        let batch = 3;
+        let mut xs = vec![0.0; batch * 9];
+        for (k, x) in xs.iter_mut().enumerate() {
+            *x = if k % 5 == 2 { 0.0 } else { (k as f64 * 0.73).cos() };
+        }
+        let ys = m.vecmat_batch(&xs, batch);
+        for b in 0..batch {
+            let want = m.vecmat(&xs[b * 9..(b + 1) * 9]);
+            assert_eq!(&ys[b * 77..(b + 1) * 77], &want[..], "traj {b}");
+        }
+    }
+
+    #[test]
+    fn trajectory_roundtrip_and_accessors() {
+        let mut t = Trajectory::with_capacity(2, 3);
+        assert!(t.is_empty());
+        assert_eq!(t.dim(), 2);
+        t.push_row(&[1.0, 2.0]);
+        t.push_row_from_iter([3.0, 4.0]);
+        t.push_copy_of_last();
+        assert_eq!(t.n_points(), 3);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.row(0), [1.0, 2.0]);
+        assert_eq!(t[1], [3.0, 4.0]);
+        assert_eq!(t.last().unwrap(), [3.0, 4.0]);
+        assert_eq!(t.data(), &[1.0, 2.0, 3.0, 4.0, 3.0, 4.0]);
+        // Nested round-trip.
+        let nested = t.to_nested();
+        assert_eq!(nested, vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![3.0, 4.0]]);
+        assert_eq!(Trajectory::from_nested(&nested), t);
+        // Flat round-trip.
+        let dim = t.dim();
+        let flat = t.clone().into_data();
+        assert_eq!(Trajectory::from_data(dim, flat), t);
+        // Row iteration matches indexing.
+        for (i, row) in t.iter().enumerate() {
+            assert_eq!(row, t.row(i));
+        }
+        assert_eq!(t.iter().len(), 3);
+    }
+
+    #[test]
+    fn trajectory_row_mut_and_repeat() {
+        let mut t = Trajectory::repeat_row(&[7.0], 4);
+        assert_eq!(t.n_points(), 4);
+        t.row_mut(2)[0] = -1.0;
+        assert_eq!(t.row(2), [-1.0]);
+        assert_eq!(t.row(3), [7.0]);
+    }
+
+    #[test]
+    fn trajectory_reset_keeps_capacity() {
+        let mut t = Trajectory::with_capacity(4, 8);
+        for _ in 0..8 {
+            t.push_row(&[0.0; 4]);
+        }
+        let cap = t.data.capacity();
+        t.reset(2);
+        assert_eq!(t.dim(), 2);
+        assert!(t.is_empty());
+        assert_eq!(t.data.capacity(), cap, "reset must keep the buffer");
+        for _ in 0..16 {
+            t.push_row(&[1.0, 2.0]);
+        }
+        assert_eq!(t.data.capacity(), cap, "refill within capacity");
+    }
+
+    #[test]
+    fn trajectory_pool_reuses_buffers() {
+        let mut pool = TrajectoryPool::new();
+        let mut t = pool.get(3);
+        t.reserve_rows(10);
+        for _ in 0..10 {
+            t.push_row(&[1.0, 2.0, 3.0]);
+        }
+        let cap = t.data.capacity();
+        pool.put(t);
+        assert_eq!(pool.len(), 1);
+        let t2 = pool.get(5);
+        assert!(t2.is_empty());
+        assert_eq!(t2.dim(), 5);
+        assert_eq!(t2.data.capacity(), cap, "pooled buffer survives");
+        assert!(pool.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "push_row: row length")]
+    fn trajectory_push_row_checks_dim() {
+        let mut t = Trajectory::new(2);
+        t.push_row(&[1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a multiple of dim")]
+    fn trajectory_from_data_checks_shape() {
+        let _ = Trajectory::from_data(2, vec![1.0, 2.0, 3.0]);
     }
 }

@@ -1,0 +1,90 @@
+//! Tier-1 smoke run of the batch-throughput benchmark.
+//!
+//! Writes `BENCH_batch_throughput.json` (mode "smoke") at the repository
+//! root so the perf trajectory is tracked by every full test run, not only
+//! by explicit `cargo bench` invocations. The release-mode bench binary
+//! (`cargo bench --bench batch_throughput`) overwrites the document with
+//! higher-fidelity numbers and more batch sizes; CI uploads it as an
+//! artifact.
+//!
+//! Kept to a single `#[test]` so the timing loop never shares the process
+//! with concurrently running tests. Crate-level `opt-level = 2`
+//! (`[profile.dev]` in Cargo.toml) keeps these debug-profile timings
+//! representative of release behaviour.
+
+use std::time::Duration;
+
+use memode::twin::throughput::{
+    default_json_path, measure, write_json, ROUTES,
+};
+use memode::util::bench::Bencher;
+
+#[test]
+fn throughput_smoke_writes_tracked_bench_json() {
+    let bench = Bencher {
+        min_iters: 3,
+        target_time: Duration::from_millis(50),
+        warmup: Duration::from_millis(10),
+    };
+    let batch_sizes = [1usize, 8, 32];
+    let n_points = 12;
+    let entries = measure(&batch_sizes, n_points, &bench);
+    assert_eq!(entries.len(), ROUTES.len() * batch_sizes.len());
+    for e in &entries {
+        assert!(
+            e.serial_ns_per_step > 0.0 && e.batched_ns_per_step > 0.0,
+            "{} B={} produced no timing",
+            e.route,
+            e.batch
+        );
+    }
+    // Regression tripwire: the analogue routes amortise device reads and
+    // the variance GEMM across the batch, so batching should win at B=32.
+    // The tracked acceptance line — hp/analog >= 1.5x — lives in the JSON
+    // (and in the release quick-bench CI job); here we only hard-fail on a
+    // catastrophic inversion (batched several times *slower* than serial),
+    // which indicates a real defect rather than scheduler jitter — a tight
+    // wall-clock bound in the regular test suite would turn loaded CI
+    // machines into spurious red builds.
+    for route in ["hp/analog", "l96/analog"] {
+        let e = entries
+            .iter()
+            .find(|e| e.route == route && e.batch == 32)
+            .unwrap();
+        assert!(
+            e.speedup > 0.5,
+            "{route} B=32 batched path catastrophically regressed: {:.2}x \
+             (serial {:.0} ns/step vs batched {:.0} ns/step)",
+            e.speedup,
+            e.serial_ns_per_step,
+            e.batched_ns_per_step
+        );
+        if e.speedup < 1.5 {
+            eprintln!(
+                "warning: {route} B=32 speedup {:.2}x below the 1.5x \
+                 acceptance target (see BENCH_batch_throughput.json)",
+                e.speedup
+            );
+        }
+    }
+    let path = default_json_path();
+    write_json(&path, "smoke", &entries).expect("write benchmark json");
+    assert!(path.exists(), "benchmark json not written");
+    let doc = memode::util::json::from_file(&path).unwrap();
+    assert_eq!(doc.get("bench").unwrap().as_str(), Some("batch_throughput"));
+    let hp32 = doc
+        .get("entries")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .find(|e| {
+            e.get("route").and_then(|r| r.as_str()) == Some("hp/analog")
+                && e.get("batch").and_then(|b| b.as_f64()) == Some(32.0)
+        })
+        .expect("hp/analog B=32 entry present");
+    println!(
+        "hp/analog B=32 speedup (smoke): {:.2}x",
+        hp32.get("speedup").unwrap().as_f64().unwrap()
+    );
+}

@@ -82,10 +82,9 @@ fn pjrt_l96_rollout_matches_rust_rk4() {
     // impossible over 48 s, but the first several hundred steps must track
     // tightly — that proves both execute the same trained field + RK4.
     let horizon = 300;
-    let d = mean_l1_multi(
-        &a.trajectory[..horizon],
-        &b.trajectory[..horizon],
-    );
+    let an = a.trajectory.to_nested();
+    let bn = b.trajectory.to_nested();
+    let d = mean_l1_multi(&an[..horizon], &bn[..horizon]);
     assert!(d < 0.05, "pjrt vs rust divergence {d} over {horizon} steps");
 }
 
@@ -191,7 +190,7 @@ fn analog_l96_twin_stays_on_attractor() {
     );
     let traj = twin.simulate(&l96::Y0, 2400).unwrap();
     let truth = l96::simulate_normalized(2400);
-    let l1 = mean_l1_multi(&traj, &truth);
+    let l1 = mean_l1_multi(&traj.to_nested(), &truth);
     // Decorrelated-attractor L1 in normalized units is ~0.5 (the paper's
     // own interp figure); divergence off the attractor would be >> 1.
     assert!(l1 < 1.0, "analog L96 L1 {l1}");
