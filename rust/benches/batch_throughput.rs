@@ -2,10 +2,17 @@
 //! batched execution engine, emitted as the tracked benchmark
 //! `BENCH_batch_throughput.json` (ns per trajectory-step, serial vs
 //! batched, B ∈ {1, 8, 32, 128}, HP and Lorenz96 routes on the analogue
-//! and digital backends).
+//! and digital backends, plus the wide d = 64 Lorenz96 pair tracking
+//! sharded-vs-monolithic execution — compare the `l96d64/analog` and
+//! `l96d64/analog-shard2` rows at equal B).
 //!
 //! Before timing, asserts the batched output is bit-identical to serial
-//! under `NoiseMode::Off` — speed never buys accuracy drift.
+//! under `NoiseMode::Off` — and the tile-sharded d = 64 route bit-identical
+//! to the monolithic one — speed never buys accuracy drift.
+//!
+//! CI compares the smoke JSON against the committed `BENCH_baseline.json`
+//! via `cargo run --release --bin bench_gate` (≤ 25% per-route regression
+//! after machine-speed normalisation).
 //!
 //! Run: `cargo bench --bench batch_throughput [-- --smoke]`
 //!
@@ -18,7 +25,8 @@
 use std::time::Duration;
 
 use memode::twin::throughput::{
-    assert_bit_identical, default_json_path, measure, write_json,
+    assert_bit_identical, assert_sharded_matches_monolithic,
+    default_json_path, measure, write_json,
 };
 use memode::util::bench::Bencher;
 
@@ -40,12 +48,19 @@ fn main() {
         (&[1, 8, 32, 128], 40, Bencher::quick())
     };
 
-    // Correctness gate first: noise-off batched == serial, bit for bit.
+    // Correctness gate first: noise-off batched == serial, bit for bit,
+    // and the tile-sharded wide route == the monolithic one.
     assert_bit_identical("hp/analog", 8, n_points);
     assert_bit_identical("hp/digital", 8, n_points);
     assert_bit_identical("l96/analog", 8, n_points);
     assert_bit_identical("l96/digital", 8, n_points);
-    println!("bit-identity check (NoiseMode::Off): OK");
+    assert_bit_identical("l96d64/analog", 4, n_points);
+    assert_bit_identical("l96d64/analog-shard2", 4, n_points);
+    assert_sharded_matches_monolithic(4, n_points);
+    println!(
+        "bit-identity check (NoiseMode::Off, incl. sharded-vs-monolithic): \
+         OK"
+    );
 
     let entries = measure(batch_sizes, n_points, &bench);
     println!(
@@ -69,6 +84,22 @@ fn main() {
                 if e.speedup >= 1.5 { "PASS" } else { "FAIL" }
             );
         }
+    }
+
+    // Sharded-vs-monolithic summary (the tracked sharding comparison).
+    let cell = |route: &str, b: usize| {
+        entries.iter().find(|e| e.route == route && e.batch == b)
+    };
+    if let (Some(m), Some(s)) =
+        (cell("l96d64/analog", 32), cell("l96d64/analog-shard2", 32))
+    {
+        println!(
+            "\nsharded-vs-monolithic (l96d64, B=32, batched): {:.1} vs \
+             {:.1} ns/step (mono/sharded {:.2}x)",
+            s.batched_ns_per_step,
+            m.batched_ns_per_step,
+            m.batched_ns_per_step / s.batched_ns_per_step.max(1e-9)
+        );
     }
 
     let path = default_json_path();

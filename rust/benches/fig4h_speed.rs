@@ -81,7 +81,7 @@ fn main() {
     for &h in &hidden_sizes {
         // Neural ODE: one RK4 step.
         let mut mlp = node_mlp(h);
-        let mut field = MlpField { mlp: &mut mlp };
+        let mut field = MlpField { mlp: &mut mlp, label: "fig4h" };
         let mut stepper = Rk4::new(field.dim());
         let mut state = x0.to_vec();
         results.push(bench.run(&format!("node rk4-step h={h}"), || {

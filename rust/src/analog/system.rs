@@ -16,7 +16,7 @@ use crate::analog::clamp::Clamp;
 use crate::analog::integrator::IvpIntegrator;
 use crate::analog::relu::DiodeRelu;
 use crate::analog::tia::Tia;
-use crate::crossbar::tiling::TiledMatrix;
+use crate::crossbar::tiling::{uniform_layer_plans, ShardPlan, TiledMatrix};
 use crate::crossbar::vmm::{NoiseMode, VmmEngine};
 use crate::device::noise::NoiseSource;
 use crate::device::taox::DeviceConfig;
@@ -85,6 +85,9 @@ pub struct AnalogMlp {
     bscratch_in: Vec<Vec<f64>>,
     /// Per-layer batched output scratch.
     bscratch_out: Vec<Vec<f64>>,
+    /// Staging for one shard's batched output (grown to the high-water
+    /// `batch * widest shard`; reused across shards and layers).
+    bshard: Vec<f64>,
     rng: Pcg64,
 }
 
@@ -151,6 +154,7 @@ impl AnalogMlp {
             scratch_out,
             bscratch_in,
             bscratch_out,
+            bshard: Vec::new(),
             rng,
         }
     }
@@ -171,6 +175,28 @@ impl AnalogMlp {
     /// Output dimension.
     pub fn d_out(&self) -> usize {
         self.engines.last().expect("empty mlp").cols()
+    }
+
+    /// Number of crossbar layers.
+    pub fn n_layers(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// Output width of layer `l`.
+    pub fn layer_cols(&self, l: usize) -> usize {
+        self.engines[l].cols()
+    }
+
+    /// The deployed VMM engine of layer `l` (shard construction and
+    /// diagnostics).
+    pub fn engine(&self, l: usize) -> &VmmEngine {
+        &self.engines[l]
+    }
+
+    /// Clones of the peripheral stages (TIA, diode ReLU, clamp) — shard
+    /// workers replicate the signal chain per tile column-group.
+    pub fn peripherals(&self) -> (Tia, DiodeRelu, Clamp) {
+        (self.tia.clone(), self.relu.clone(), self.clamp.clone())
     }
 
     /// Forward pass `y = f(u)` with fresh analogue reads; writes into `out`.
@@ -288,9 +314,185 @@ impl AnalogMlp {
         y
     }
 
+    /// Sharded forward pass: every layer's output columns are produced by
+    /// per-shard tile column-group reads ([`VmmEngine::vmm_shard_into`])
+    /// executed in ascending shard order, with the peripheral stages
+    /// applied per shard slice. `plans` carries one [`ShardPlan`] per
+    /// layer. Because the per-element accumulation order and the
+    /// fast-noise draw order both match the monolithic read, the result is
+    /// bit-identical to [`AnalogMlp::eval_into`] — noise off *and* in
+    /// [`NoiseMode::Fast`] — while exercising the same column grouping a
+    /// physically tiled deployment executes.
+    pub fn eval_sharded_into(
+        &mut self,
+        u: &[f64],
+        plans: &[ShardPlan],
+        out: &mut [f64],
+    ) {
+        let n_layers = self.engines.len();
+        assert_eq!(
+            plans.len(),
+            n_layers,
+            "sharded eval: {} shard plans for {} layers",
+            plans.len(),
+            n_layers
+        );
+        debug_assert_eq!(u.len(), self.d_in());
+        for l in 0..n_layers {
+            {
+                let src: &[f64] =
+                    if l == 0 { u } else { &self.scratch_out[l - 1] };
+                let (head, tail) = self.scratch_in[l].split_at_mut(src.len());
+                head.copy_from_slice(src);
+                tail[0] = 1.0;
+            }
+            let inp = std::mem::take(&mut self.scratch_in[l]);
+            let mut outp = std::mem::take(&mut self.scratch_out[l]);
+            let plan = &plans[l];
+            assert_eq!(
+                plan.dim(),
+                self.engines[l].cols(),
+                "layer {l}: shard plan dim != layer width"
+            );
+            let is_last = l + 1 == n_layers;
+            for s in 0..plan.n_shards() {
+                let r = plan.range(s);
+                let seg = &mut outp[r.clone()];
+                self.engines[l].vmm_shard_into(
+                    &inp,
+                    r.start,
+                    r.end,
+                    seg,
+                    &mut self.rng,
+                );
+                self.tia.convert_slice(seg);
+                if !is_last {
+                    self.relu.activate_slice(seg);
+                }
+                self.clamp.apply_slice(seg);
+            }
+            self.scratch_in[l] = inp;
+            self.scratch_out[l] = outp;
+        }
+        out.copy_from_slice(&self.scratch_out[n_layers - 1]);
+    }
+
+    /// Batched sharded forward pass: `batch` stacked inputs through
+    /// per-shard tile column-group reads
+    /// ([`VmmEngine::vmm_shard_batch_into`]), each shard's stacked output
+    /// staged contiguously and scattered into the full layer buffer. With
+    /// read noise off the result is bit-identical, per trajectory, to
+    /// [`AnalogMlp::eval_batch_into`].
+    pub fn eval_sharded_batch_into(
+        &mut self,
+        us: &[f64],
+        batch: usize,
+        plans: &[ShardPlan],
+        out: &mut [f64],
+    ) {
+        let n_layers = self.engines.len();
+        let d_in = self.d_in();
+        assert_eq!(
+            plans.len(),
+            n_layers,
+            "sharded eval_batch: {} shard plans for {} layers",
+            plans.len(),
+            n_layers
+        );
+        assert_eq!(
+            us.len(),
+            batch * d_in,
+            "sharded eval_batch: us length != batch * d_in"
+        );
+        assert_eq!(
+            out.len(),
+            batch * self.d_out(),
+            "sharded eval_batch: out length != batch * d_out"
+        );
+        for l in 0..n_layers {
+            let rows = self.engines[l].rows();
+            let cols = self.engines[l].cols();
+            let src_dim = rows - 1;
+            let mut bin = std::mem::take(&mut self.bscratch_in[l]);
+            let mut bout = std::mem::take(&mut self.bscratch_out[l]);
+            bin.resize(batch * rows, 0.0);
+            bout.resize(batch * cols, 0.0);
+            for b in 0..batch {
+                let dst = &mut bin[b * rows..(b + 1) * rows];
+                let src: &[f64] = if l == 0 {
+                    &us[b * d_in..(b + 1) * d_in]
+                } else {
+                    &self.bscratch_out[l - 1][b * src_dim..(b + 1) * src_dim]
+                };
+                dst[..src_dim].copy_from_slice(src);
+                dst[src_dim] = 1.0;
+            }
+            let plan = &plans[l];
+            assert_eq!(
+                plan.dim(),
+                cols,
+                "layer {l}: shard plan dim != layer width"
+            );
+            let is_last = l + 1 == n_layers;
+            for s in 0..plan.n_shards() {
+                let r = plan.range(s);
+                let w = r.len();
+                self.bshard.resize(batch * w, 0.0);
+                self.engines[l].vmm_shard_batch_into(
+                    &bin,
+                    batch,
+                    r.start,
+                    r.end,
+                    &mut self.bshard,
+                    &mut self.rng,
+                );
+                self.tia.convert_slice(&mut self.bshard);
+                if !is_last {
+                    self.relu.activate_slice(&mut self.bshard);
+                }
+                self.clamp.apply_slice(&mut self.bshard);
+                for b in 0..batch {
+                    bout[b * cols + r.start..b * cols + r.end]
+                        .copy_from_slice(&self.bshard[b * w..(b + 1) * w]);
+                }
+            }
+            self.bscratch_in[l] = bin;
+            self.bscratch_out[l] = bout;
+        }
+        out.copy_from_slice(&self.bscratch_out[n_layers - 1]);
+    }
+
     /// Effective logical weights of layer `l` (diagnostics).
     pub fn layer_weights(&self, l: usize) -> &Mat {
         self.engines[l].weights()
+    }
+}
+
+/// Tile-shard layout of a closed-loop solver: one column partition per
+/// MLP layer (uniform shard count) plus the state partition, which is the
+/// last layer's plan — shard `s` owns the state slice its tile
+/// column-group produces, and therefore the integrators behind it.
+#[derive(Debug, Clone)]
+pub struct ShardSpec {
+    /// Per-layer output-column partitions.
+    pub layers: Vec<ShardPlan>,
+    /// State partition (equals `layers.last()`).
+    pub state: ShardPlan,
+}
+
+impl ShardSpec {
+    /// Build the uniform layout for an MLP's layer widths.
+    pub fn for_mlp(mlp: &AnalogMlp, n_shards: usize) -> Self {
+        let widths: Vec<usize> =
+            (0..mlp.n_layers()).map(|l| mlp.layer_cols(l)).collect();
+        let layers = uniform_layer_plans(&widths, n_shards);
+        let state = layers.last().expect("mlp has layers").clone();
+        Self { layers, state }
+    }
+
+    /// Shard count (uniform across layers).
+    pub fn n_shards(&self) -> usize {
+        self.state.n_shards()
     }
 }
 
@@ -303,6 +505,8 @@ pub struct AnalogNeuralOde {
     pub d_drive: usize,
     /// Circuit-time step (s) — the continuous-solver resolution.
     pub dt_circuit: f64,
+    /// Tile-shard layout; `None` runs the monolithic kernel.
+    shards: Option<ShardSpec>,
     /// Scratch: [x(t); h(t)] input vector.
     u: Vec<f64>,
     /// Scratch: MLP output (dh/dt).
@@ -342,6 +546,7 @@ impl AnalogNeuralOde {
             integrators,
             d_drive,
             dt_circuit,
+            shards: None,
             u,
             dh,
             xbuf,
@@ -349,6 +554,29 @@ impl AnalogNeuralOde {
             us: Vec::new(),
             dhs: Vec::new(),
         }
+    }
+
+    /// Install a tile-shard layout: every circuit step's device reads run
+    /// as per-shard tile column-group reads sharing the step's assembled
+    /// input, and the integrators partition into per-shard banks along the
+    /// state plan. The shard count is clamped to the narrowest layer.
+    /// Output stays bit-identical to the monolithic solver (noise off and
+    /// fast-noise, see [`AnalogMlp::eval_sharded_into`]); the batched path
+    /// is bit-identical with noise off.
+    pub fn with_shards(mut self, n_shards: usize) -> Self {
+        let spec = ShardSpec::for_mlp(&self.mlp, n_shards);
+        assert_eq!(
+            spec.state.dim(),
+            self.integrators.len(),
+            "shard state plan dim != state dim"
+        );
+        self.shards = Some(spec);
+        self
+    }
+
+    /// The installed shard layout, if any.
+    pub fn shard_spec(&self) -> Option<&ShardSpec> {
+        self.shards.as_ref()
     }
 
     /// Current state (integrator capacitor voltages).
@@ -401,11 +629,22 @@ impl AnalogNeuralOde {
                 {
                     *slot = integ.v;
                 }
-                // Analogue forward pass (fresh reads).
-                let dh = &mut self.dh;
-                self.mlp.eval_into(&self.u, dh);
-                // Feed the integrators.
-                for (integ, &d) in self.integrators.iter_mut().zip(dh.iter())
+                // Analogue forward pass (fresh reads): per-shard tile
+                // column-group reads when a shard layout is installed —
+                // bit-identical to the monolithic read, so the integrator
+                // feed is shared (the state plan partitions 0..d_state in
+                // ascending order; truly private per-shard banks live in
+                // the parallel fan-out, `twin::shard`).
+                match self.shards.as_ref() {
+                    Some(spec) => self.mlp.eval_sharded_into(
+                        &self.u,
+                        &spec.layers,
+                        &mut self.dh,
+                    ),
+                    None => self.mlp.eval_into(&self.u, &mut self.dh),
+                }
+                for (integ, &d) in
+                    self.integrators.iter_mut().zip(self.dh.iter())
                 {
                     integ.step(d, dt);
                 }
@@ -505,9 +744,22 @@ impl AnalogNeuralOde {
                         *slot = integ.v;
                     }
                 }
-                // One shared analogue read for the whole batch.
-                self.mlp.eval_batch_into(&self.us, batch, &mut self.dhs);
-                // Feed every integrator bank.
+                // One shared analogue read for the whole batch — split
+                // into per-shard tile column-group reads when sharded;
+                // the bank feed is shared (see the serial loop above).
+                match self.shards.as_ref() {
+                    Some(spec) => self.mlp.eval_sharded_batch_into(
+                        &self.us,
+                        batch,
+                        &spec.layers,
+                        &mut self.dhs,
+                    ),
+                    None => self.mlp.eval_batch_into(
+                        &self.us,
+                        batch,
+                        &mut self.dhs,
+                    ),
+                }
                 for (integ, &d) in self.bank.iter_mut().zip(self.dhs.iter())
                 {
                     integ.step(d, dt);
@@ -769,6 +1021,93 @@ mod tests {
             5,
         );
         assert_eq!(got, want);
+    }
+
+    /// f(h) = -h element-wise for dimension d (the shared exact-ReLU
+    /// decay fixture) — with d > 32 deployment spans several physical
+    /// tiles.
+    fn wide_decay_layers(d: usize) -> Vec<LayerWeights> {
+        crate::models::loader::decay_mlp_weights(d)
+            .layers
+            .iter()
+            .map(|(w, b)| LayerWeights::new(w, b))
+            .collect()
+    }
+
+    fn wide_h0(d: usize) -> Vec<f64> {
+        (0..d).map(|i| ((i as f64) * 0.37).sin() * 0.8).collect()
+    }
+
+    #[test]
+    fn sharded_solve_bit_identical_to_monolithic() {
+        let d = 34;
+        let cfg = DeviceConfig {
+            fault_rate: 0.0,
+            pulse_sigma: 0.0,
+            read_noise: 0.0,
+            ..Default::default()
+        };
+        let layers = wide_decay_layers(d);
+        let mlp = AnalogMlp::deploy(&layers, &cfg, AnalogNoise::off(), 9);
+        let mut mono = AnalogNeuralOde::new(mlp.clone(), d, 0.01);
+        let mut sharded =
+            AnalogNeuralOde::new(mlp, d, 0.01).with_shards(2);
+        let spec = sharded.shard_spec().expect("sharded");
+        assert_eq!(spec.n_shards(), 2);
+        assert!(spec.state.is_sharded());
+        let h0 = wide_h0(d);
+        let a = mono.solve(&h0, &mut |_t, _x: &mut [f64]| {}, 0.1, 6);
+        let b = sharded.solve(&h0, &mut |_t, _x: &mut [f64]| {}, 0.1, 6);
+        assert_eq!(a, b, "sharded rollout diverged from monolithic");
+    }
+
+    #[test]
+    fn sharded_solve_batch_bit_identical_to_monolithic() {
+        let d = 34;
+        let layers = wide_decay_layers(d);
+        let mlp = AnalogMlp::ideal(&layers, 4);
+        let mut mono = AnalogNeuralOde::new(mlp.clone(), d, 0.01);
+        let mut sharded =
+            AnalogNeuralOde::new(mlp, d, 0.01).with_shards(2);
+        let batch = 3;
+        let h0s: Vec<f64> = (0..batch * d)
+            .map(|k| ((k as f64) * 0.23).cos() * 0.6)
+            .collect();
+        let a = mono.solve_batch(&h0s, batch, &mut |_b, _t, _x| {}, 0.1, 5);
+        let b =
+            sharded.solve_batch(&h0s, batch, &mut |_b, _t, _x| {}, 0.1, 5);
+        assert_eq!(a, b, "sharded batched rollout diverged");
+    }
+
+    #[test]
+    fn sharded_fast_noise_stream_matches_monolithic_serial() {
+        // Ascending shards share the MLP's RNG, so even the *noisy* serial
+        // sharded rollout reproduces the monolithic one bit for bit.
+        let d = 34;
+        let cfg = DeviceConfig {
+            fault_rate: 0.0,
+            pulse_sigma: 0.0,
+            ..Default::default()
+        };
+        let layers = wide_decay_layers(d);
+        let noise = AnalogNoise { read: 0.05, prog: 0.0 };
+        let mono_mlp = AnalogMlp::deploy(&layers, &cfg, noise, 21);
+        let shard_mlp = AnalogMlp::deploy(&layers, &cfg, noise, 21);
+        let mut mono = AnalogNeuralOde::new(mono_mlp, d, 0.01);
+        let mut sharded =
+            AnalogNeuralOde::new(shard_mlp, d, 0.01).with_shards(2);
+        let h0 = wide_h0(d);
+        let a = mono.solve(&h0, &mut |_t, _x: &mut [f64]| {}, 0.1, 4);
+        let b = sharded.solve(&h0, &mut |_t, _x: &mut [f64]| {}, 0.1, 4);
+        assert_eq!(a, b, "fast-noise shard stream diverged");
+    }
+
+    #[test]
+    fn shard_count_clamped_to_narrowest_layer() {
+        // The 1-wide output layer caps the stack at one shard.
+        let mlp = AnalogMlp::ideal(&linear_decay_layers(), 1);
+        let ode = AnalogNeuralOde::new(mlp, 1, 1e-3).with_shards(8);
+        assert_eq!(ode.shard_spec().unwrap().n_shards(), 1);
     }
 
     #[test]

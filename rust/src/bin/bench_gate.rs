@@ -1,0 +1,164 @@
+//! Bench-regression gate: compare the fresh smoke
+//! `BENCH_batch_throughput.json` against the committed
+//! `BENCH_baseline.json` and fail (exit 1) if any tracked route's
+//! ns/trajectory-step regressed by more than the allowance (default 25%)
+//! after normalising out uniform machine-speed differences — see
+//! [`memode::twin::throughput::gate_against_baseline`] for the exact rule.
+//!
+//! Usage:
+//!   bench_gate [--baseline PATH] [--fresh PATH] [--max-regress FRAC]
+//!              [--update]
+//!
+//! `--update` copies the fresh document over the baseline (seed or refresh
+//! it after an intentional perf change, on a quiet machine). Paths default
+//! to `$BENCH_BASELINE` / `BENCH_baseline.json` and `$BENCH_OUT` /
+//! `BENCH_batch_throughput.json` at the repository root. A missing or
+//! empty baseline passes vacuously so the gate can land before the first
+//! seeding.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use memode::twin::throughput::{
+    default_baseline_path, default_json_path, gate_against_baseline,
+};
+use memode::util::json;
+
+struct Args {
+    baseline: PathBuf,
+    fresh: PathBuf,
+    max_regress: f64,
+    update: bool,
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut args = Args {
+        baseline: default_baseline_path(),
+        fresh: default_json_path(),
+        max_regress: 0.25,
+        update: false,
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--baseline" => {
+                args.baseline = it
+                    .next()
+                    .ok_or("--baseline needs a path")?
+                    .into();
+            }
+            "--fresh" => {
+                args.fresh =
+                    it.next().ok_or("--fresh needs a path")?.into();
+            }
+            "--max-regress" => {
+                let v = it.next().ok_or("--max-regress needs a fraction")?;
+                args.max_regress = v
+                    .parse::<f64>()
+                    .map_err(|e| format!("--max-regress {v}: {e}"))?;
+            }
+            "--update" => args.update = true,
+            "--help" | "-h" => {
+                return Err(
+                    "usage: bench_gate [--baseline PATH] [--fresh PATH] \
+                     [--max-regress FRAC] [--update]"
+                        .into(),
+                );
+            }
+            other => return Err(format!("unknown argument '{other}'")),
+        }
+    }
+    Ok(args)
+}
+
+fn main() -> ExitCode {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return ExitCode::FAILURE;
+        }
+    };
+    if args.update {
+        match std::fs::copy(&args.fresh, &args.baseline) {
+            Ok(_) => {
+                println!(
+                    "seeded baseline {} from {}",
+                    args.baseline.display(),
+                    args.fresh.display()
+                );
+                return ExitCode::SUCCESS;
+            }
+            Err(e) => {
+                eprintln!(
+                    "seeding {} failed: {e}",
+                    args.baseline.display()
+                );
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+    let fresh = match json::from_file(&args.fresh) {
+        Ok(doc) => doc,
+        Err(e) => {
+            eprintln!(
+                "reading fresh benchmark {}: {e:#} (run `cargo bench \
+                 --bench batch_throughput -- --smoke` first)",
+                args.fresh.display()
+            );
+            return ExitCode::FAILURE;
+        }
+    };
+    let baseline = if args.baseline.exists() {
+        match json::from_file(&args.baseline) {
+            Ok(doc) => doc,
+            Err(e) => {
+                eprintln!(
+                    "reading baseline {}: {e:#}",
+                    args.baseline.display()
+                );
+                return ExitCode::FAILURE;
+            }
+        }
+    } else {
+        println!(
+            "baseline {} missing — gate passes vacuously; seed it with \
+             `bench_gate --update`",
+            args.baseline.display()
+        );
+        return ExitCode::SUCCESS;
+    };
+    let report =
+        match gate_against_baseline(&baseline, &fresh, args.max_regress) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("gate error: {e:#}");
+                return ExitCode::FAILURE;
+            }
+        };
+    if report.unseeded() {
+        println!(
+            "baseline is unseeded (no comparable entries) — gate passes \
+             vacuously; seed it with `bench_gate --update` after a smoke \
+             bench run"
+        );
+        return ExitCode::SUCCESS;
+    }
+    println!(
+        "bench gate: {} metrics compared, machine scale x{:.2}, allowance \
+         {:.0}%",
+        report.compared,
+        report.scale,
+        args.max_regress * 100.0
+    );
+    if report.passed() {
+        println!("bench gate: PASS");
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("bench gate: FAIL — regressed routes:");
+        for f in &report.failures {
+            eprintln!("  {f}");
+        }
+        ExitCode::FAILURE
+    }
+}

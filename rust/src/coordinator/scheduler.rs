@@ -12,6 +12,19 @@
 //! plain twins on the serial per-job path. Failures stay per-job, and the
 //! recorded execution time is the batch execution time — which is exactly
 //! the latency each coalesced client observed.
+//!
+//! **Tile-aware dispatch.** Routes whose state exceeds one physical
+//! crossbar array register tile-sharded twins
+//! ([`crate::twin::shard::ShardedAnalogOde`]): when a worker executes such
+//! a batch, the rollout itself fans out across parallel shard workers —
+//! one per tile column-group, barrier-synchronised at every exchange point
+//! of every circuit step — and the shard results are stitched back into
+//! the pooled response trajectories before the worker replies. The
+//! dispatch contract is unchanged (one batch, one `run_batch_into` call,
+//! per-job failure isolation); what changes is the execution shape under
+//! it, and the shard workers report per-shard counters into the shared
+//! [`Telemetry`] (`shard_rollouts` / `shard_steps`) so sharded load is
+//! visible next to batching metrics.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -346,6 +359,68 @@ mod tests {
         }
         // One dispatch = one run_batch call covering all five jobs.
         assert_eq!(*sizes.lock().unwrap(), vec![5]);
+    }
+
+    #[test]
+    fn tile_sharded_route_fans_out_under_batch_dispatch() {
+        // A sharded Lorenz96 twin behind a route: one dispatched batch ->
+        // one run_batch call -> shard workers fan the rollout out and
+        // report into the shared telemetry.
+        use crate::analog::system::AnalogNoise;
+        use crate::device::taox::DeviceConfig;
+        use crate::models::loader::decay_mlp_weights;
+        use crate::twin::lorenz96::{L96AnalogOpts, Lorenz96Twin};
+
+        let tel = Arc::new(Telemetry::new());
+        let mut reg = TwinRegistry::new();
+        let t2 = Arc::clone(&tel);
+        reg.register("l96/analog-sharded", move || {
+            let quiet = DeviceConfig {
+                fault_rate: 0.0,
+                pulse_sigma: 0.0,
+                read_noise: 0.0,
+                ..Default::default()
+            };
+            let mut twin = Lorenz96Twin::analog_opts(
+                &decay_mlp_weights(34),
+                &quiet,
+                AnalogNoise::off(),
+                3,
+                L96AnalogOpts { substeps: 2, shards: 2, parallel: true },
+            );
+            twin.attach_coordinator_telemetry(Arc::clone(&t2));
+            Box::new(twin)
+        });
+        let sched = Scheduler::start(1, reg, Arc::clone(&tel));
+        let mut jobs = Vec::new();
+        let mut rxs = Vec::new();
+        for id in 0..3u64 {
+            let (tx, rx) = mpsc::channel();
+            jobs.push(crate::coordinator::Job {
+                id,
+                route: "l96/analog-sharded".into(),
+                req: TwinRequest::autonomous(
+                    (0..34).map(|k| 0.02 * k as f64).collect(),
+                    4,
+                ),
+                enqueued: Instant::now(),
+                reply: tx,
+            });
+            rxs.push(rx);
+        }
+        sched
+            .dispatch(Batch { route: "l96/analog-sharded".into(), jobs })
+            .unwrap();
+        for rx in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            let resp = r.result.unwrap();
+            assert_eq!(resp.backend, "analog-sharded");
+            assert_eq!(resp.trajectory.len(), 4);
+            assert_eq!(resp.trajectory.dim(), 34);
+        }
+        let s = tel.snapshot();
+        assert!(s.shard_rollouts >= 1, "no sharded rollout recorded");
+        assert!(s.shard_steps > 0, "no shard steps recorded");
     }
 
     #[test]

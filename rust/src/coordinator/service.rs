@@ -33,7 +33,19 @@ pub struct Coordinator {
 impl Coordinator {
     /// Start the full pipeline over a twin registry.
     pub fn start(registry: TwinRegistry, cfg: &ServeConfig) -> Self {
-        let telemetry = Arc::new(Telemetry::new());
+        Self::start_with_telemetry(registry, cfg, Arc::new(Telemetry::new()))
+    }
+
+    /// Start the pipeline over a caller-owned [`Telemetry`]. This is how
+    /// tile-sharded twins share the serving metrics: build the telemetry
+    /// first, let sharded twin factories capture a clone (their shard
+    /// workers report `shard_rollouts` / `shard_steps` into it), then hand
+    /// the same instance to the coordinator.
+    pub fn start_with_telemetry(
+        registry: TwinRegistry,
+        cfg: &ServeConfig,
+        telemetry: Arc<Telemetry>,
+    ) -> Self {
         let backpressure = Backpressure::new(cfg.queue_depth);
         let (jobs_tx, jobs_rx) = mpsc::channel();
         let (batches_tx, batches_rx) = mpsc::channel();

@@ -18,6 +18,10 @@ pub struct Telemetry {
     pub batches: AtomicU64,
     /// Sum of batch sizes (mean batch size = / batches).
     pub batched_jobs: AtomicU64,
+    /// Tile-sharded rollouts executed (one per sharded solve fan-out).
+    pub shard_rollouts: AtomicU64,
+    /// Total shard-worker circuit steps across all sharded rollouts.
+    pub shard_steps: AtomicU64,
     latencies_us: Mutex<LatencyRing>,
 }
 
@@ -72,6 +76,8 @@ impl Telemetry {
             latency_p50_us: p50,
             latency_p95_us: p95,
             latency_mean_us: mean,
+            shard_rollouts: self.shard_rollouts.load(Ordering::Relaxed),
+            shard_steps: self.shard_steps.load(Ordering::Relaxed),
         }
     }
 }
@@ -88,6 +94,10 @@ pub struct TelemetrySnapshot {
     pub latency_p50_us: f64,
     pub latency_p95_us: f64,
     pub latency_mean_us: f64,
+    /// Tile-sharded rollouts served.
+    pub shard_rollouts: u64,
+    /// Shard-worker circuit steps across those rollouts.
+    pub shard_steps: u64,
 }
 
 impl std::fmt::Display for TelemetrySnapshot {

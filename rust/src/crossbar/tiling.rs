@@ -112,6 +112,120 @@ impl TiledMatrix {
     }
 }
 
+// ---------------------------------------------------------------------------
+// ShardPlan: partitioning a logical dimension across tile column-groups
+// ---------------------------------------------------------------------------
+
+/// A contiguous partition of a logical dimension (a layer's output columns,
+/// or the twin's state vector) into shards, each mapping to a group of
+/// physical tile columns.
+///
+/// Shards are half-open `[start, end)` ranges in ascending order covering
+/// `0..dim` exactly. When the dimension spans several physical tiles the
+/// boundaries fall on [`PHYSICAL_SIDE`] multiples, so a shard owns whole
+/// tile column-groups — the unit a parallel shard worker can read without
+/// touching another worker's arrays. Narrow dimensions (fewer columns than
+/// shards would need tiles) fall back to a near-equal element split.
+///
+/// The plan is pure bookkeeping: executing a shard means reading only the
+/// columns in its range, with the per-element accumulation order unchanged
+/// (see [`crate::util::tensor::Mat::vecmat_cols_into`]), so a sharded
+/// noise-free read reassembles the monolithic read bit for bit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    dim: usize,
+    /// Half-open (start, end) column ranges, ascending, covering 0..dim.
+    bounds: Vec<(usize, usize)>,
+}
+
+impl ShardPlan {
+    /// The trivial plan: one shard owning the whole dimension.
+    pub fn single(dim: usize) -> Self {
+        assert!(dim > 0, "shard plan over an empty dimension");
+        Self { dim, bounds: vec![(0, dim)] }
+    }
+
+    /// Split `dim` into (up to) `n_shards` contiguous shards. The shard
+    /// count is clamped to `dim` so every shard owns at least one column;
+    /// when the dimension spans several physical tiles, boundaries are
+    /// aligned to [`PHYSICAL_SIDE`] so shards own whole tile column-groups.
+    pub fn split(dim: usize, n_shards: usize) -> Self {
+        assert!(dim > 0, "shard plan over an empty dimension");
+        let n_tiles = dim.div_ceil(PHYSICAL_SIDE);
+        let n = n_shards.clamp(1, dim);
+        if n == 1 {
+            return Self::single(dim);
+        }
+        let mut bounds = Vec::with_capacity(n);
+        if n <= n_tiles {
+            // Distribute whole tile column-groups near-equally; the last
+            // tile may be ragged (dim not a PHYSICAL_SIDE multiple).
+            let base = n_tiles / n;
+            let extra = n_tiles % n;
+            let mut tile = 0;
+            for s in 0..n {
+                let take = base + usize::from(s < extra);
+                let start = tile * PHYSICAL_SIDE;
+                tile += take;
+                let end = (tile * PHYSICAL_SIDE).min(dim);
+                bounds.push((start, end));
+            }
+        } else {
+            // Fewer tiles than shards: near-equal element split.
+            let base = dim / n;
+            let extra = dim % n;
+            let mut start = 0;
+            for s in 0..n {
+                let end = start + base + usize::from(s < extra);
+                bounds.push((start, end));
+                start = end;
+            }
+        }
+        debug_assert_eq!(bounds.last().map(|b| b.1), Some(dim));
+        Self { dim, bounds }
+    }
+
+    /// The partitioned dimension.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Number of shards.
+    pub fn n_shards(&self) -> usize {
+        self.bounds.len()
+    }
+
+    /// Whether the plan actually splits the dimension.
+    pub fn is_sharded(&self) -> bool {
+        self.bounds.len() > 1
+    }
+
+    /// Column range of shard `s`.
+    pub fn range(&self, s: usize) -> std::ops::Range<usize> {
+        let (start, end) = self.bounds[s];
+        start..end
+    }
+
+    /// Column count of shard `s`.
+    pub fn width(&self, s: usize) -> usize {
+        let (start, end) = self.bounds[s];
+        end - start
+    }
+}
+
+/// One [`ShardPlan`] per layer width, all with the same shard count: the
+/// requested `n_shards` clamped so even the narrowest layer keeps at least
+/// one column per shard. This is what keeps every shard worker in lockstep
+/// through the per-layer barriers of a sharded rollout.
+pub fn uniform_layer_plans(widths: &[usize], n_shards: usize) -> Vec<ShardPlan> {
+    let n = widths
+        .iter()
+        .map(|&w| ShardPlan::split(w, n_shards).n_shards())
+        .min()
+        .expect("at least one layer");
+    widths.iter().map(|&w| ShardPlan::split(w, n)).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -160,6 +274,67 @@ mod tests {
         for (g, e) in got.iter().zip(&want) {
             assert!((g - e).abs() < 1e-8, "{g} vs {e}");
         }
+    }
+
+    #[test]
+    fn shard_plan_tile_aligned_when_wide() {
+        // 64 columns = 2 tiles -> 2 shards of exactly one tile each.
+        let p = ShardPlan::split(64, 2);
+        assert_eq!(p.n_shards(), 2);
+        assert_eq!(p.range(0), 0..32);
+        assert_eq!(p.range(1), 32..64);
+        assert!(p.is_sharded());
+        // 96 columns = 3 tiles over 2 shards -> (2 tiles, 1 tile).
+        let p = ShardPlan::split(96, 2);
+        assert_eq!(p.range(0), 0..64);
+        assert_eq!(p.range(1), 64..96);
+        // Ragged final tile: 48 columns = 2 tiles -> (32, 16).
+        let p = ShardPlan::split(48, 2);
+        assert_eq!(p.range(0), 0..32);
+        assert_eq!(p.range(1), 32..48);
+    }
+
+    #[test]
+    fn shard_plan_covers_dimension_exactly() {
+        for dim in [1usize, 5, 6, 31, 32, 33, 48, 64, 65, 128, 200] {
+            for n in [1usize, 2, 3, 4, 7, 300] {
+                let p = ShardPlan::split(dim, n);
+                assert!(p.n_shards() >= 1 && p.n_shards() <= dim.min(n.max(1)));
+                let mut cursor = 0;
+                for s in 0..p.n_shards() {
+                    let r = p.range(s);
+                    assert_eq!(r.start, cursor, "dim {dim} shards {n}");
+                    assert!(r.end > r.start, "empty shard: dim {dim} n {n}");
+                    assert_eq!(p.width(s), r.len());
+                    cursor = r.end;
+                }
+                assert_eq!(cursor, dim, "dim {dim} shards {n} not covered");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_plan_narrow_dim_splits_elements() {
+        // 6 columns across 2 shards: no tile alignment possible.
+        let p = ShardPlan::split(6, 2);
+        assert_eq!(p.range(0), 0..3);
+        assert_eq!(p.range(1), 3..6);
+        // Shard count clamps to the dimension.
+        assert_eq!(ShardPlan::split(3, 8).n_shards(), 3);
+        assert!(!ShardPlan::single(10).is_sharded());
+    }
+
+    #[test]
+    fn uniform_layer_plans_share_a_shard_count() {
+        // Widths 96 / 48 / 6 with 4 requested shards: the 6-wide layer
+        // allows 4, so every layer gets 4 shards (lockstep barriers need
+        // uniform counts).
+        let plans = uniform_layer_plans(&[96, 48, 6], 4);
+        assert!(plans.iter().all(|p| p.n_shards() == 4));
+        // A 2-wide layer caps the whole stack at 2.
+        let plans = uniform_layer_plans(&[96, 2], 4);
+        assert!(plans.iter().all(|p| p.n_shards() == 2));
+        assert_eq!(plans[0].dim(), 96);
     }
 
     #[test]

@@ -211,6 +211,170 @@ impl VmmEngine {
         y
     }
 
+    /// Per-shard read: `y = v^T W[:, c0..c1]` — the columns owned by one
+    /// tile column-group (`y.len() == c1 - c0`), driven by the full input
+    /// vector.
+    ///
+    /// Per output element the floating-point accumulation order over the
+    /// shared dimension is identical to [`VmmEngine::vmm_into`]
+    /// ([`Mat::vecmat_cols_into`] preserves it), so with
+    /// [`NoiseMode::Off`] a state assembled from shard reads is
+    /// bit-identical to the unsharded kernel. In [`NoiseMode::Fast`] each
+    /// output still draws one moment-matched normal; when ascending shards
+    /// of one plan share a single RNG the draw sequence also matches the
+    /// monolithic read exactly (column-ascending), which the serial sharded
+    /// solver exploits. [`NoiseMode::PerCell`] re-draws per cell in
+    /// (row, shard-column) order — distribution-identical, stream-distinct.
+    pub fn vmm_shard_into(
+        &mut self,
+        v: &[f64],
+        c0: usize,
+        c1: usize,
+        y: &mut [f64],
+        rng: &mut Pcg64,
+    ) {
+        assert!(
+            c0 <= c1 && c1 <= self.cols(),
+            "vmm_shard: column range {c0}..{c1} outside 0..{}",
+            self.cols()
+        );
+        self.w_eff.vecmat_cols_into(v, c0, c1, y);
+        match self.mode {
+            NoiseMode::Off => {}
+            NoiseMode::Fast => {
+                if self.read_noise.is_off() {
+                    return;
+                }
+                for (dst, &src) in self.v2.iter_mut().zip(v) {
+                    *dst = src * src;
+                }
+                let sigma = self.read_noise.sigma;
+                for (j, yj) in (c0..c1).zip(y.iter_mut()) {
+                    let mut var = 0.0;
+                    for r in 0..self.var_kernel.rows {
+                        var += self.v2[r] * self.var_kernel.at(r, j);
+                    }
+                    *yj += sigma * var.sqrt() * rng.normal();
+                }
+            }
+            NoiseMode::PerCell => {
+                let sigma = self.read_noise.sigma;
+                y.fill(0.0);
+                for r in 0..self.w_eff.rows {
+                    let vr = v[r];
+                    if vr == 0.0 {
+                        continue;
+                    }
+                    for (c, yc) in (c0..c1).zip(y.iter_mut()) {
+                        let w = self.w_eff.at(r, c);
+                        let std = sigma * self.var_kernel.at(r, c).sqrt();
+                        *yc += vr * (w + std * rng.normal());
+                    }
+                }
+            }
+        }
+    }
+
+    /// Batched per-shard read: `ys[b] = vs[b]^T W[:, c0..c1]` for `batch`
+    /// stacked full-width inputs (`ys: [batch * (c1-c0)]`). The multi-tile
+    /// analogue of [`VmmEngine::vmm_batch_into`], restricted to one shard's
+    /// tile column-group; with [`NoiseMode::Off`] it is bit-identical to
+    /// the corresponding column slice of the monolithic batched read.
+    pub fn vmm_shard_batch_into(
+        &mut self,
+        vs: &[f64],
+        batch: usize,
+        c0: usize,
+        c1: usize,
+        ys: &mut [f64],
+        rng: &mut Pcg64,
+    ) {
+        let rows = self.rows();
+        let width = c1 - c0;
+        assert!(
+            c0 <= c1 && c1 <= self.cols(),
+            "vmm_shard_batch: column range {c0}..{c1} outside 0..{}",
+            self.cols()
+        );
+        assert_eq!(
+            vs.len(),
+            batch * rows,
+            "vmm_shard_batch: vs length != batch * rows"
+        );
+        assert_eq!(
+            ys.len(),
+            batch * width,
+            "vmm_shard_batch: ys length != batch * range width"
+        );
+        match self.mode {
+            NoiseMode::Off => {
+                self.w_eff.vecmat_batch_cols_into(vs, batch, c0, c1, ys);
+            }
+            NoiseMode::Fast => {
+                self.w_eff.vecmat_batch_cols_into(vs, batch, c0, c1, ys);
+                if self.read_noise.is_off() {
+                    return;
+                }
+                self.ensure_batch_scratch(batch);
+                self.v2b.resize(batch * rows, 0.0);
+                for (dst, &src) in self.v2b.iter_mut().zip(vs) {
+                    *dst = src * src;
+                }
+                self.varb.resize(batch * width, 0.0);
+                self.var_kernel.vecmat_batch_cols_into(
+                    &self.v2b,
+                    batch,
+                    c0,
+                    c1,
+                    &mut self.varb,
+                );
+                let sigma = self.read_noise.sigma;
+                for (yj, &var) in ys.iter_mut().zip(&self.varb) {
+                    *yj += sigma * var.sqrt() * rng.normal();
+                }
+            }
+            NoiseMode::PerCell => {
+                for b in 0..batch {
+                    let (v, y) = (
+                        &vs[b * rows..(b + 1) * rows],
+                        &mut ys[b * width..(b + 1) * width],
+                    );
+                    self.vmm_shard_into(v, c0, c1, y, rng);
+                }
+            }
+        }
+    }
+
+    /// A standalone engine over one shard's tile column-group: the cached
+    /// effective weights and variance kernel sliced to columns `c0..c1`,
+    /// with the same noise configuration. Because it copies the *deployed*
+    /// effective weights, a shard engine's noise-off reads are bit-identical
+    /// to the corresponding slice of this engine's reads — this is how the
+    /// parallel shard workers each get an engine they can drive without
+    /// sharing mutable state.
+    pub fn column_shard(&self, c0: usize, c1: usize) -> VmmEngine {
+        assert!(
+            c0 < c1 && c1 <= self.cols(),
+            "column_shard: range {c0}..{c1} outside 0..{}",
+            self.cols()
+        );
+        let rows = self.w_eff.rows;
+        let w_eff =
+            Mat::from_fn(rows, c1 - c0, |r, c| self.w_eff.at(r, c0 + c));
+        let var_kernel =
+            Mat::from_fn(rows, c1 - c0, |r, c| self.var_kernel.at(r, c0 + c));
+        Self {
+            w_eff,
+            var_kernel,
+            read_noise: self.read_noise.clone(),
+            mode: self.mode,
+            v2: vec![0.0; rows],
+            v2b: Vec::new(),
+            varb: Vec::new(),
+            max_batch: 0,
+        }
+    }
+
     /// Batched multi-vector VMM: `ys[b] = vs[b]^T W + noise` for `batch`
     /// row-major stacked input vectors (`vs: [batch * rows]`,
     /// `ys: [batch * cols]`).
@@ -464,6 +628,89 @@ mod tests {
         assert_eq!(eng.max_batch, 8);
         assert!(eng.v2b.capacity() >= 8 * 8, "v2b under-reserved");
         assert!(eng.varb.capacity() >= 8 * 6, "varb under-reserved");
+    }
+
+    #[test]
+    fn shard_reads_reassemble_monolithic_read_noise_off() {
+        let (arr, _) = deployed(31, 0.0);
+        let mut eng = VmmEngine::new(&arr, NoiseSource::off(), NoiseMode::Off);
+        let v = [0.2, -0.1, 0.0, 0.15, -0.25, 0.05, 0.1, -0.3];
+        let full = eng.vmm(&v, &mut Pcg64::seeded(1));
+        let mut rng = Pcg64::seeded(2);
+        // 6 outputs split 0..4 / 4..6.
+        let mut assembled = vec![0.0; 6];
+        let (a, b) = assembled.split_at_mut(4);
+        eng.vmm_shard_into(&v, 0, 4, a, &mut rng);
+        eng.vmm_shard_into(&v, 4, 6, b, &mut rng);
+        assert_eq!(assembled, full);
+    }
+
+    #[test]
+    fn shard_fast_noise_stream_matches_monolithic_for_ascending_shards() {
+        // Ascending shards sharing one RNG draw their per-output normals
+        // in the same (column-ascending) order as the monolithic fast
+        // read, so even the *noisy* serial sharded read is bit-identical.
+        let (arr, noise) = deployed(33, 0.04);
+        let mut eng = VmmEngine::new(&arr, noise, NoiseMode::Fast);
+        let v = [0.2, -0.1, 0.3, 0.15, -0.25, 0.05, 0.1, -0.3];
+        let full = eng.vmm(&v, &mut Pcg64::seeded(5));
+        let mut rng = Pcg64::seeded(5);
+        let mut assembled = vec![0.0; 6];
+        let (a, b) = assembled.split_at_mut(3);
+        eng.vmm_shard_into(&v, 0, 3, a, &mut rng);
+        eng.vmm_shard_into(&v, 3, 6, b, &mut rng);
+        assert_eq!(assembled, full);
+    }
+
+    #[test]
+    fn batched_shard_reads_reassemble_monolithic_batch() {
+        let (arr, _) = deployed(35, 0.0);
+        let mut eng = VmmEngine::new(&arr, NoiseSource::off(), NoiseMode::Off);
+        let batch = 4;
+        let mut vs = vec![0.0; batch * 8];
+        for (k, v) in vs.iter_mut().enumerate() {
+            *v = if k % 6 == 1 { 0.0 } else { (k as f64 * 0.41).sin() * 0.4 };
+        }
+        let mut rng = Pcg64::seeded(3);
+        let full = eng.vmm_batch(&vs, batch, &mut rng);
+        let mut left = vec![0.0; batch * 4];
+        let mut right = vec![0.0; batch * 2];
+        eng.vmm_shard_batch_into(&vs, batch, 0, 4, &mut left, &mut rng);
+        eng.vmm_shard_batch_into(&vs, batch, 4, 6, &mut right, &mut rng);
+        for b in 0..batch {
+            assert_eq!(&left[b * 4..(b + 1) * 4], &full[b * 6..b * 6 + 4]);
+            assert_eq!(&right[b * 2..(b + 1) * 2], &full[b * 6 + 4..(b + 1) * 6]);
+        }
+    }
+
+    #[test]
+    fn column_shard_engine_matches_slice_of_parent() {
+        let (arr, _) = deployed(37, 0.0);
+        let mut parent =
+            VmmEngine::new(&arr, NoiseSource::off(), NoiseMode::Off);
+        let mut shard = parent.column_shard(2, 5);
+        assert_eq!(shard.rows(), 8);
+        assert_eq!(shard.cols(), 3);
+        let v = [0.3, -0.2, 0.1, 0.0, 0.25, -0.15, 0.05, 0.4];
+        let full = parent.vmm(&v, &mut Pcg64::seeded(1));
+        let got = shard.vmm(&v, &mut Pcg64::seeded(2));
+        assert_eq!(&got[..], &full[2..5]);
+        // Batched path through the shard engine too.
+        let vs: Vec<f64> = (0..2).flat_map(|_| v).collect();
+        let mut rng = Pcg64::seeded(4);
+        let fullb = parent.vmm_batch(&vs, 2, &mut rng);
+        let gotb = shard.vmm_batch(&vs, 2, &mut rng);
+        for b in 0..2 {
+            assert_eq!(&gotb[b * 3..(b + 1) * 3], &fullb[b * 6 + 2..b * 6 + 5]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "column range")]
+    fn shard_range_validated() {
+        let mut eng = VmmEngine::ideal(Mat::zeros(2, 3));
+        let mut y = vec![0.0; 2];
+        eng.vmm_shard_into(&[0.0; 2], 2, 4, &mut y, &mut Pcg64::seeded(1));
     }
 
     #[test]

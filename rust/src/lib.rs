@@ -88,6 +88,51 @@
 //!    warm `Twin::run_batch_into` therefore performs **zero** heap
 //!    allocations in steady state.
 //!
+//! ## Tile-sharded execution (states larger than one array)
+//!
+//! A 32x32 physical array bounds what one monolithic rollout can model;
+//! real digital-twin states (Lorenz96 at d = 64/128) span several tiles.
+//! Sharding makes that a first-class execution path:
+//!
+//! * **Shard layout.** [`crossbar::tiling::ShardPlan`] partitions each
+//!   layer's output columns into contiguous tile column-groups (boundaries
+//!   on `PHYSICAL_SIDE` multiples where possible, uniform shard count
+//!   across layers — `crossbar::tiling::uniform_layer_plans`). The state
+//!   partition is the last layer's plan, so shard `s` owns the integrators
+//!   behind the columns it produces.
+//! * **Accumulation-order contract (extends invariant 2).** The
+//!   column-shard kernels (`util::tensor::Mat::vecmat_cols_into`,
+//!   `vecmat_batch_cols_into`, wrapped by
+//!   [`crossbar::vmm::VmmEngine::vmm_shard_into`] /
+//!   `vmm_shard_batch_into` / `column_shard`) restrict *which columns* are
+//!   produced but never reorder any output element's accumulation over the
+//!   shared dimension. Noise-off sharded rollouts are therefore
+//!   bit-identical to monolithic ones — serial, batched, and fanned-out —
+//!   enforced by `rust/tests/sharded.rs`.
+//! * **Two execution forms.**
+//!   [`analog::system::AnalogNeuralOde::with_shards`] runs the shards
+//!   *serially* inside the solver (per-shard reads sharing each step's
+//!   assembled input, per-shard integrator banks) and stays inside the
+//!   zero-allocation contract (invariant 3; enforced for the sharded path
+//!   in `rust/tests/alloc.rs`). [`twin::shard::ShardedAnalogOde`] *fans
+//!   out*: one scoped OS thread per shard, synchronised by a barrier at
+//!   every exchange point (state assembly, then each hidden layer) of
+//!   every circuit step, shard slices stitched into the pooled response
+//!   trajectory afterwards. Barrier semantics: every shard executes the
+//!   identical barrier sequence per circuit step — 2 waits for the state
+//!   exchange plus 2 per hidden layer (publish under the buffer's mutex,
+//!   wait, copy the full buffer out, wait) — so lockstep requires the
+//!   uniform shard count the plans guarantee. The fan-out path allocates
+//!   per rollout (thread spawn) and is deliberately outside invariant 3.
+//! * **Serving.** Sharded twins sit behind ordinary routes
+//!   (`lorenz96/analog-sharded`); the scheduler's dispatch contract is
+//!   unchanged while shard workers report `shard_rollouts` / `shard_steps`
+//!   into [`coordinator::telemetry::Telemetry`]. The tracked benchmark
+//!   gains `l96d64/analog` vs `l96d64/analog-shard2` rows
+//!   (sharded-vs-monolithic ns/trajectory-step), and CI gates
+//!   `BENCH_batch_throughput.json` against the committed
+//!   `BENCH_baseline.json` (`rust/src/bin/bench_gate.rs`).
+//!
 //! Python never runs on the request path: after `make artifacts` the Rust
 //! binary is self-contained.
 

@@ -265,12 +265,19 @@ fn serve(argv: Vec<String>) -> Result<()> {
     } else {
         None
     };
-    let reg = build_registry(
+    // Shared serving telemetry: sharded-route shard workers report into
+    // the same counters the coordinator snapshots.
+    let telemetry = std::sync::Arc::new(
+        memode::coordinator::telemetry::Telemetry::new(),
+    );
+    let reg = memode::twin::setup::build_registry_with_telemetry(
         &cfg,
         &weights,
         service.as_ref().map(|s| s.handle()),
+        Some(std::sync::Arc::clone(&telemetry)),
     )?;
-    let coord = Coordinator::start(reg, &cfg.serve);
+    let coord =
+        Coordinator::start_with_telemetry(reg, &cfg.serve, telemetry);
     let route = args.get("route");
     let n = args.get_usize("requests");
     let steps = args.get_usize("steps");

@@ -42,6 +42,33 @@ pub struct RnnWeights {
     pub kind: String,
 }
 
+/// Synthetic weights implementing f(h) = -h *exactly*, element-wise, for
+/// any dimension `d`: hidden = relu([h_i, -h_i]) pairs, out_i =
+/// -hidden_{2i} + hidden_{2i+1}. The shared fixture of the sharding /
+/// batching / allocation test suites (one definition, so what those
+/// suites exercise cannot silently diverge); with d > 32 the deployed
+/// layers span several physical tile column-groups.
+pub fn decay_mlp_weights(d: usize) -> MlpWeights {
+    let mut w1 = Mat::zeros(d, 2 * d);
+    for i in 0..d {
+        *w1.at_mut(i, 2 * i) = 1.0;
+        *w1.at_mut(i, 2 * i + 1) = -1.0;
+    }
+    let b1 = vec![0.0; 2 * d];
+    let mut w2 = Mat::zeros(2 * d, d);
+    for i in 0..d {
+        *w2.at_mut(2 * i, i) = -1.0;
+        *w2.at_mut(2 * i + 1, i) = 1.0;
+    }
+    let b2 = vec![0.0; d];
+    MlpWeights {
+        layers: vec![(w1, b1), (w2, b2)],
+        dt: 0.02,
+        kind: "node".into(),
+        task: "l96".into(),
+    }
+}
+
 fn mat_from(v: &Json, what: &str) -> Result<Mat> {
     let rows = v
         .as_mat_f64()

@@ -147,11 +147,17 @@ impl Mlp {
 /// path.
 pub struct MlpField<'a> {
     pub mlp: &'a mut Mlp,
+    /// Route/model label surfaced by solver dim asserts.
+    pub label: &'static str,
 }
 
 impl VectorField for MlpField<'_> {
     fn dim(&self) -> usize {
         self.mlp.d_out()
+    }
+
+    fn label(&self) -> &str {
+        self.label
     }
 
     fn eval_into(&mut self, _t: f64, x: &[f64], out: &mut [f64]) {
@@ -165,21 +171,27 @@ impl VectorField for MlpField<'_> {
 pub struct DrivenMlpField<'a, F: FnMut(f64) -> f64> {
     pub mlp: &'a mut Mlp,
     pub drive: F,
+    /// Route/model label surfaced by solver dim asserts.
+    pub label: &'static str,
     /// Scratch [x; h].
     u: Vec<f64>,
 }
 
 impl<'a, F: FnMut(f64) -> f64> DrivenMlpField<'a, F> {
     /// Single-input drive (the HP twin's voltage stimulus).
-    pub fn new(mlp: &'a mut Mlp, drive: F) -> Self {
+    pub fn new(mlp: &'a mut Mlp, drive: F, label: &'static str) -> Self {
         let u = vec![0.0; mlp.d_in()];
-        Self { mlp, drive, u }
+        Self { mlp, drive, label, u }
     }
 }
 
 impl<F: FnMut(f64) -> f64> VectorField for DrivenMlpField<'_, F> {
     fn dim(&self) -> usize {
         self.mlp.d_out()
+    }
+
+    fn label(&self) -> &str {
+        self.label
     }
 
     fn eval_into(&mut self, t: f64, x: &[f64], out: &mut [f64]) {
@@ -194,6 +206,8 @@ impl<F: FnMut(f64) -> f64> VectorField for DrivenMlpField<'_, F> {
 pub struct BatchMlpField<'a> {
     pub mlp: &'a mut Mlp,
     pub batch: usize,
+    /// Route/model label surfaced by batched solver dim asserts.
+    pub label: &'static str,
 }
 
 impl BatchVectorField for BatchMlpField<'_> {
@@ -203,6 +217,10 @@ impl BatchVectorField for BatchMlpField<'_> {
 
     fn batch(&self) -> usize {
         self.batch
+    }
+
+    fn label(&self) -> &str {
+        self.label
     }
 
     fn eval_batch_into(&mut self, _t: f64, xs: &[f64], out: &mut [f64]) {
@@ -220,6 +238,8 @@ pub struct BatchDrivenMlpField<'a, F: FnMut(usize, f64) -> f64> {
     pub mlp: &'a mut Mlp,
     pub batch: usize,
     pub drive: F,
+    /// Route/model label surfaced by batched solver dim asserts.
+    pub label: &'static str,
     /// Scratch: stacked [x_b; h_b] rows (caller-owned, resized in `new`).
     u: &'a mut Vec<f64>,
 }
@@ -230,9 +250,10 @@ impl<'a, F: FnMut(usize, f64) -> f64> BatchDrivenMlpField<'a, F> {
         batch: usize,
         drive: F,
         u: &'a mut Vec<f64>,
+        label: &'static str,
     ) -> Self {
         u.resize(batch * mlp.d_in(), 0.0);
-        Self { mlp, batch, drive, u }
+        Self { mlp, batch, drive, label, u }
     }
 }
 
@@ -245,6 +266,10 @@ impl<F: FnMut(usize, f64) -> f64> BatchVectorField
 
     fn batch(&self) -> usize {
         self.batch
+    }
+
+    fn label(&self) -> &str {
+        self.label
     }
 
     fn eval_batch_into(&mut self, t: f64, xs: &[f64], out: &mut [f64]) {
@@ -306,7 +331,7 @@ mod tests {
     fn field_wrappers() {
         use crate::ode::func::VectorField;
         let mut m = toy();
-        let mut f = MlpField { mlp: &mut m };
+        let mut f = MlpField { mlp: &mut m, label: "toy" };
         assert_eq!(f.dim(), 1);
         // field gets [h1, h2]... dim mismatch: toy d_in = 2, d_out = 1, so
         // MlpField as autonomous is ill-typed for solving, but eval works
@@ -316,7 +341,7 @@ mod tests {
         assert!((out[0] - 0.75).abs() < 1e-12);
 
         let mut m2 = toy();
-        let mut df = DrivenMlpField::new(&mut m2, |t| t);
+        let mut df = DrivenMlpField::new(&mut m2, |t| t, "toy");
         let mut out = [0.0];
         df.eval_into(2.0, &[0.5], &mut out);
         assert!((out[0] - 1.5).abs() < 1e-12); // x=2 (drive), h=0.5
@@ -354,13 +379,14 @@ mod tests {
             2,
             |b, t| (b as f64 + 1.0) * t,
             &mut u,
+            "toy",
         );
         let mut out = [0.0; 2];
         bf.eval_batch_into(2.0, &[0.5, -0.25], &mut out);
         let mut m1 = toy();
-        let mut d1 = DrivenMlpField::new(&mut m1, |t| t);
+        let mut d1 = DrivenMlpField::new(&mut m1, |t| t, "toy");
         let mut m2 = toy();
-        let mut d2 = DrivenMlpField::new(&mut m2, |t| 2.0 * t);
+        let mut d2 = DrivenMlpField::new(&mut m2, |t| 2.0 * t, "toy");
         let mut o1 = [0.0];
         let mut o2 = [0.0];
         d1.eval_into(2.0, &[0.5], &mut o1);

@@ -33,6 +33,13 @@ pub trait BatchVectorField {
     /// Number of trajectories B.
     fn batch(&self) -> usize;
 
+    /// Diagnostic label for solver error messages (see
+    /// [`VectorField::label`]); the batched twins report their route key
+    /// here so batched dim asserts name the offending route/shard.
+    fn label(&self) -> &str {
+        "batched field"
+    }
+
     /// Evaluate all B derivatives: `xs` and `out` are flat `[batch * dim]`.
     fn eval_batch_into(&mut self, t: f64, xs: &[f64], out: &mut [f64]);
 }
@@ -57,6 +64,10 @@ impl<F: VectorField> BatchVectorField for Lifted<F> {
         1
     }
 
+    fn label(&self) -> &str {
+        self.inner.label()
+    }
+
     fn eval_batch_into(&mut self, t: f64, xs: &[f64], out: &mut [f64]) {
         self.inner.eval_into(t, xs, out)
     }
@@ -74,6 +85,10 @@ pub struct Flattened<'a> {
 impl VectorField for Flattened<'_> {
     fn dim(&self) -> usize {
         self.field.dim() * self.field.batch()
+    }
+
+    fn label(&self) -> &str {
+        self.field.label()
     }
 
     fn eval_into(&mut self, t: f64, x: &[f64], out: &mut [f64]) {

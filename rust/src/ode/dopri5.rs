@@ -113,8 +113,9 @@ pub fn solve(
     assert_eq!(
         x0.len(),
         n,
-        "dopri5::solve: x0 dim {} does not match field dim {} (the stage \
-         scratch is sized from the field)",
+        "dopri5::solve [{}]: x0 dim {} does not match field dim {} (the \
+         stage scratch is sized from the field)",
+        f.label(),
         x0.len(),
         n
     );
@@ -244,7 +245,8 @@ pub fn solve_batch(
     assert_eq!(
         x0s.len(),
         f.batch() * f.dim(),
-        "dopri5::solve_batch: x0s length {} != batch {} * dim {}",
+        "dopri5::solve_batch [{}]: x0s length {} != batch {} * dim {}",
+        f.label(),
         x0s.len(),
         f.batch(),
         f.dim()

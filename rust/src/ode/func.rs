@@ -10,6 +10,14 @@ pub trait VectorField {
     /// State dimension.
     fn dim(&self) -> usize;
 
+    /// Diagnostic label carried into solver error messages (route, shard,
+    /// or model identity). Twins set this to their route key so a
+    /// dimension mismatch deep in a batched solve names the offender
+    /// instead of reporting raw lengths only.
+    fn label(&self) -> &str {
+        "vector field"
+    }
+
     /// Evaluate f(t, x) into `out` (len == dim()).
     fn eval_into(&mut self, t: f64, x: &[f64], out: &mut [f64]);
 

@@ -67,15 +67,17 @@ impl Rk4 {
         assert_eq!(
             n,
             self.k1.len(),
-            "Rk4::step: state dim {} does not match stepper scratch dim {} \
-             (construct with Rk4::new(dim) for this state)",
+            "Rk4::step [{}]: state dim {} does not match stepper scratch \
+             dim {} (construct with Rk4::new(dim) for this state)",
+            f.label(),
             n,
             self.k1.len()
         );
         assert_eq!(
             f.dim(),
             n,
-            "Rk4::step: field dim {} does not match state dim {}",
+            "Rk4::step [{}]: field dim {} does not match state dim {}",
+            f.label(),
             f.dim(),
             n
         );
@@ -120,7 +122,8 @@ pub fn solve_into(
     assert_eq!(
         x0.len(),
         n,
-        "rk4::solve: x0 dim {} does not match field dim {}",
+        "rk4::solve [{}]: x0 dim {} does not match field dim {}",
+        f.label(),
         x0.len(),
         n
     );
@@ -171,7 +174,8 @@ pub fn solve_batch_into(
     assert_eq!(
         x0s.len(),
         f.batch() * f.dim(),
-        "rk4::solve_batch: x0s length {} != batch {} * dim {}",
+        "rk4::solve_batch [{}]: x0s length {} != batch {} * dim {}",
+        f.label(),
         x0s.len(),
         f.batch(),
         f.dim()
@@ -329,6 +333,34 @@ mod tests {
             FnField::new(1, |_t, x: &[f64], o: &mut [f64]| o[0] = -x[0]);
         let b = solve(&mut f, &[1.0], 0.1, 6, 1);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "rk4::solve_batch [l96d64/analog shard 1/2]")]
+    fn batched_dim_assert_reports_route_and_shard_label() {
+        use crate::ode::batch::BatchVectorField;
+        struct Labeled;
+        impl BatchVectorField for Labeled {
+            fn dim(&self) -> usize {
+                4
+            }
+            fn batch(&self) -> usize {
+                2
+            }
+            fn label(&self) -> &str {
+                "l96d64/analog shard 1/2"
+            }
+            fn eval_batch_into(
+                &mut self,
+                _t: f64,
+                _xs: &[f64],
+                out: &mut [f64],
+            ) {
+                out.fill(0.0);
+            }
+        }
+        // 7 values for a 2 x 4 batch: the assert must name the route/shard.
+        let _ = solve_batch(&mut Labeled, &[0.0; 7], 0.1, 3, 1);
     }
 
     #[test]

@@ -5,19 +5,17 @@
 //! `Send` (the client is `Rc`-based) — cross-thread access goes through
 //! [`crate::runtime::service::PjrtService`].
 //!
-//! The `xla` crate needs the xla_extension C++ bundle at build time, so the
-//! real implementation is gated behind the non-default `pjrt` cargo
-//! feature. Without it an API-compatible stub is compiled instead: it still
-//! validates the artifacts directory (so error paths and hints behave the
-//! same) but refuses to start, and every caller — the service thread, the
-//! CLI, the examples — degrades gracefully exactly as when artifacts are
-//! missing.
-
-#[cfg(feature = "pjrt")]
-compile_error!(
-    "the `pjrt` feature needs the `xla` crate: vendor it, add `xla` to \
-     [dependencies] in rust/Cargo.toml, and remove this guard"
-);
+//! The `xla` crate needs the xla_extension C++ bundle at build time, so
+//! the real implementation is gated behind the non-default `pjrt` cargo
+//! feature and compiled against [`crate::runtime::xla_offline`], an
+//! offline substitute mirroring the API slice used here — the
+//! feature-matrix CI job builds it so this glue can no longer rot
+//! silently. Its client refuses to start (vendor the real crate and swap
+//! the import to execute artifacts). Without the feature an
+//! API-compatible stub is compiled instead: it still validates the
+//! artifacts directory (so error paths and hints behave the same) but
+//! refuses to start, and every caller — the service thread, the CLI, the
+//! examples — degrades gracefully exactly as when artifacts are missing.
 
 #[cfg(feature = "pjrt")]
 mod real {
@@ -28,6 +26,11 @@ mod real {
 
     use crate::runtime::artifacts::ArtifactManifest;
     use crate::runtime::TensorF32;
+    // The PJRT surface. The offline substitute type-checks this whole
+    // module (CI's feature-matrix job builds `--features pjrt`) while its
+    // client constructor fails at runtime; vendoring the real `xla` crate
+    // and swapping this import enables actual execution.
+    use crate::runtime::xla_offline as xla;
 
     /// A compiled artifact plus its manifest shapes.
     struct Compiled {
@@ -252,10 +255,10 @@ mod tests {
 
     #[test]
     fn missing_dir_fails_with_hint() {
-        let err = PjrtRuntime::cpu(Path::new("/no/such/dir"))
-            .err()
-            .expect("should fail")
-            .to_string();
+        let err = match PjrtRuntime::cpu(Path::new("/no/such/dir")) {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("should fail"),
+        };
         assert!(err.contains("make artifacts"), "{err}");
     }
 

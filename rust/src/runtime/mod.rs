@@ -19,6 +19,8 @@
 pub mod artifacts;
 pub mod client;
 pub mod service;
+#[cfg(feature = "pjrt")]
+pub mod xla_offline;
 
 pub use artifacts::{ArtifactManifest, ArtifactMeta};
 pub use client::PjrtRuntime;

@@ -174,8 +174,11 @@ impl HpTwin {
             }
             HpBackend::Digital(mlp) => {
                 let w = *wave;
-                let mut field =
-                    DrivenMlpField::new(mlp, move |t| w.eval(t));
+                let mut field = DrivenMlpField::new(
+                    mlp,
+                    move |t| w.eval(t),
+                    "hp/digital",
+                );
                 let traj = rk4::solve(
                     &mut field,
                     &[h0],
@@ -237,6 +240,7 @@ impl HpTwin {
                     batch,
                     |b, t| waves[b].eval(t),
                     &mut solver.u,
+                    "hp/digital",
                 );
                 rk4::solve_batch_into(
                     &mut field,

@@ -21,6 +21,7 @@ use crate::models::mlp::{BatchMlpField, Mlp, MlpField};
 use crate::models::rnn::{Recurrent, VanillaRnn};
 use crate::ode::batch::unbatch_into;
 use crate::ode::rk4::{self, Rk4};
+use crate::twin::shard::{ShardExecutor, ShardSnapshot, ShardedAnalogOde};
 use crate::twin::{GroupPlan, RolloutFn, Twin, TwinRequest, TwinResponse};
 use crate::util::tensor::{Trajectory, TrajectoryPool};
 use crate::workload::lorenz96;
@@ -33,6 +34,9 @@ pub const DIGITAL_SUBSTEPS: usize = 1;
 /// Execution backend of the Lorenz96 twin.
 pub enum L96Backend {
     Analog(Box<AnalogNeuralOde>),
+    /// Tile-sharded fan-out: one rollout spread across parallel shard
+    /// workers (states wider than one physical array).
+    AnalogSharded(Box<ShardedAnalogOde>),
     Digital(Mlp),
     Recurrent(Box<dyn Recurrent + Send>),
     Pjrt(RolloutFn),
@@ -42,10 +46,30 @@ impl L96Backend {
     fn label(&self) -> &'static str {
         match self {
             L96Backend::Analog(_) => "analog",
+            L96Backend::AnalogSharded(_) => "analog-sharded",
             L96Backend::Digital(_) => "digital-rk4",
             L96Backend::Recurrent(_) => "recurrent",
             L96Backend::Pjrt(_) => "pjrt",
         }
+    }
+}
+
+/// Analogue-backend options: circuit substeps plus the tile-shard layout.
+#[derive(Debug, Clone)]
+pub struct L96AnalogOpts {
+    /// Circuit substeps per output sample.
+    pub substeps: usize,
+    /// Shard count; 0 or 1 keeps the monolithic kernel.
+    pub shards: usize,
+    /// Fan shards out across parallel shard workers
+    /// ([`ShardedAnalogOde`]); `false` runs the serial sharded kernel
+    /// inside [`AnalogNeuralOde`] (zero-allocation warm path).
+    pub parallel: bool,
+}
+
+impl Default for L96AnalogOpts {
+    fn default() -> Self {
+        Self { substeps: ANALOG_SUBSTEPS, shards: 1, parallel: false }
     }
 }
 
@@ -79,16 +103,45 @@ pub struct Lorenz96Twin {
     backend: L96Backend,
     dt: f64,
     dim: usize,
+    /// Dimension-appropriate default initial condition.
+    default_h0: Vec<f64>,
     scratch: L96Scratch,
 }
 
 impl Lorenz96Twin {
-    /// Analogue-backend twin from trained weights.
+    fn assemble(backend: L96Backend, dt: f64, dim: usize) -> Self {
+        Self {
+            backend,
+            dt,
+            dim,
+            default_h0: lorenz96::default_y0(dim),
+            scratch: L96Scratch::default(),
+        }
+    }
+
+    /// Analogue-backend twin from trained weights (monolithic kernel,
+    /// paper-default substeps).
     pub fn analog(
         weights: &MlpWeights,
         cfg: &DeviceConfig,
         noise: AnalogNoise,
         seed: u64,
+    ) -> Self {
+        Self::analog_opts(weights, cfg, noise, seed, L96AnalogOpts::default())
+    }
+
+    /// Analogue-backend twin with explicit substeps and tile-shard layout.
+    /// `opts.shards > 1` splits states wider than one physical array
+    /// across tile column-groups; with `opts.parallel` the shards execute
+    /// on parallel shard workers, otherwise serially in the solver. Both
+    /// sharded forms are bit-identical to the monolithic kernel under
+    /// noise-off deployment (asserted in `rust/tests/sharded.rs`).
+    pub fn analog_opts(
+        weights: &MlpWeights,
+        cfg: &DeviceConfig,
+        noise: AnalogNoise,
+        seed: u64,
+        opts: L96AnalogOpts,
     ) -> Self {
         let layers: Vec<LayerWeights> = weights
             .layers
@@ -98,25 +151,31 @@ impl Lorenz96Twin {
         let dim = weights.layers.last().unwrap().0.cols;
         let mlp = AnalogMlp::deploy(&layers, cfg, noise, seed);
         let dt = weights.dt;
-        let ode =
-            AnalogNeuralOde::new(mlp, dim, dt / ANALOG_SUBSTEPS as f64);
-        Self {
-            backend: L96Backend::Analog(Box::new(ode)),
-            dt,
-            dim,
-            scratch: L96Scratch::default(),
-        }
+        let substeps = opts.substeps.max(1);
+        let ode = AnalogNeuralOde::new(mlp, dim, dt / substeps as f64);
+        let backend = if opts.shards > 1 && opts.parallel {
+            let sharded = ShardedAnalogOde::from_ode(
+                &ode,
+                ShardExecutor::new(opts.shards),
+                seed ^ 0x5aad_ed00,
+            );
+            L96Backend::AnalogSharded(Box::new(sharded))
+        } else if opts.shards > 1 {
+            L96Backend::Analog(Box::new(ode.with_shards(opts.shards)))
+        } else {
+            L96Backend::Analog(Box::new(ode))
+        };
+        Self::assemble(backend, dt, dim)
     }
 
     /// Digital (Rust RK4) twin.
     pub fn digital(weights: &MlpWeights) -> Self {
         let dim = weights.layers.last().unwrap().0.cols;
-        Self {
-            backend: L96Backend::Digital(Mlp::from_weights(weights)),
-            dt: weights.dt,
+        Self::assemble(
+            L96Backend::Digital(Mlp::from_weights(weights)),
+            weights.dt,
             dim,
-            scratch: L96Scratch::default(),
-        }
+        )
     }
 
     /// Recurrent baseline twin ("rnn" | "gru" | "lstm").
@@ -127,21 +186,36 @@ impl Lorenz96Twin {
             "lstm" => Box::new(Lstm::new(weights.clone())),
             other => anyhow::bail!("unknown recurrent kind '{other}'"),
         };
-        Ok(Self {
-            backend: L96Backend::Recurrent(cell),
-            dt: weights.dt,
-            dim: weights.d_in,
-            scratch: L96Scratch::default(),
-        })
+        Ok(Self::assemble(
+            L96Backend::Recurrent(cell),
+            weights.dt,
+            weights.d_in,
+        ))
     }
 
     /// PJRT-artifact twin.
     pub fn pjrt(rollout: RolloutFn, dt: f64, dim: usize) -> Self {
-        Self {
-            backend: L96Backend::Pjrt(rollout),
-            dt,
-            dim,
-            scratch: L96Scratch::default(),
+        Self::assemble(L96Backend::Pjrt(rollout), dt, dim)
+    }
+
+    /// Per-shard serving counters of the fan-out backend, if sharded.
+    pub fn shard_telemetry(&self) -> Option<Vec<ShardSnapshot>> {
+        match &self.backend {
+            L96Backend::AnalogSharded(ode) => {
+                Some(ode.telemetry().snapshot())
+            }
+            _ => None,
+        }
+    }
+
+    /// Wire the fan-out backend's rollout counters into the coordinator's
+    /// serving telemetry (no-op for unsharded backends).
+    pub fn attach_coordinator_telemetry(
+        &mut self,
+        t: std::sync::Arc<crate::coordinator::telemetry::Telemetry>,
+    ) {
+        if let L96Backend::AnalogSharded(ode) = &mut self.backend {
+            ode.attach_coordinator_telemetry(t);
         }
     }
 
@@ -165,8 +239,14 @@ impl Lorenz96Twin {
                 dt,
                 n_points,
             )),
+            L96Backend::AnalogSharded(ode) => {
+                let mut out = Trajectory::new(self.dim);
+                ode.solve_into(h0, dt, n_points, &mut out);
+                Ok(out)
+            }
             L96Backend::Digital(mlp) => {
-                let mut field = MlpField { mlp };
+                let mut field =
+                    MlpField { mlp, label: "lorenz96/digital" };
                 Ok(rk4::solve(
                     &mut field,
                     h0,
@@ -215,8 +295,16 @@ impl Lorenz96Twin {
                 );
                 Ok(())
             }
+            L96Backend::AnalogSharded(ode) => {
+                ode.solve_batch_into(h0s, batch, dt, n_points, out);
+                Ok(())
+            }
             L96Backend::Digital(mlp) => {
-                let mut field = BatchMlpField { mlp, batch };
+                let mut field = BatchMlpField {
+                    mlp,
+                    batch,
+                    label: "lorenz96/digital",
+                };
                 rk4::solve_batch_into(
                     &mut field,
                     h0s,
@@ -265,12 +353,16 @@ impl Twin for Lorenz96Twin {
     }
 
     fn default_h0(&self) -> Vec<f64> {
-        lorenz96::Y0.to_vec()
+        self.default_h0.clone()
     }
 
     fn run(&mut self, req: &TwinRequest) -> Result<TwinResponse> {
+        // The default-h0 copy keeps `self` free for the mutable simulate
+        // call below; the batched path stages initial states without it.
+        let default_h0;
         let h0: &[f64] = if req.h0.is_empty() {
-            &lorenz96::Y0
+            default_h0 = self.default_h0.clone();
+            &default_h0
         } else {
             &req.h0
         };
@@ -314,7 +406,7 @@ impl Twin for Lorenz96Twin {
             sc.h0s.clear();
             for &i in sc.plan.group(g) {
                 let h0: &[f64] = if reqs[i].h0.is_empty() {
-                    &lorenz96::Y0
+                    &self.default_h0
                 } else {
                     &reqs[i].h0
                 };
@@ -388,26 +480,9 @@ mod tests {
     use super::*;
     use crate::util::tensor::Mat;
 
-    /// f(h) = -h element-wise for d = 3, exact via paired ReLUs.
+    /// f(h) = -h element-wise (the shared exact-ReLU decay fixture).
     fn toy_weights(d: usize) -> MlpWeights {
-        let mut w1 = Mat::zeros(d, 2 * d);
-        for i in 0..d {
-            *w1.at_mut(i, 2 * i) = 1.0;
-            *w1.at_mut(i, 2 * i + 1) = -1.0;
-        }
-        let b1 = vec![0.0; 2 * d];
-        let mut w2 = Mat::zeros(2 * d, d);
-        for i in 0..d {
-            *w2.at_mut(2 * i, i) = -1.0;
-            *w2.at_mut(2 * i + 1, i) = 1.0;
-        }
-        let b2 = vec![0.0; d];
-        MlpWeights {
-            layers: vec![(w1, b1), (w2, b2)],
-            dt: 0.02,
-            kind: "node".into(),
-            task: "l96".into(),
-        }
+        crate::models::loader::decay_mlp_weights(d)
     }
 
     #[test]
@@ -529,6 +604,62 @@ mod tests {
         let mut twin =
             Lorenz96Twin::analog(&w, &cfg, AnalogNoise::off(), 1);
         assert_batch_matches_serial(&mut twin);
+    }
+
+    #[test]
+    fn sharded_serial_twin_bit_identical_to_monolithic() {
+        let w = toy_weights(3);
+        let cfg = DeviceConfig {
+            fault_rate: 0.0,
+            pulse_sigma: 0.0,
+            read_noise: 0.0,
+            ..Default::default()
+        };
+        let mut mono = Lorenz96Twin::analog(&w, &cfg, AnalogNoise::off(), 1);
+        let mut sharded = Lorenz96Twin::analog_opts(
+            &w,
+            &cfg,
+            AnalogNoise::off(),
+            1,
+            L96AnalogOpts { shards: 2, ..Default::default() },
+        );
+        assert_eq!(sharded.backend.label(), "analog");
+        let reqs = mixed_requests();
+        let a = mono.run_batch(&reqs);
+        let b = sharded.run_batch(&reqs);
+        for (k, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(
+                x.as_ref().unwrap().trajectory,
+                y.as_ref().unwrap().trajectory,
+                "request {k}"
+            );
+        }
+    }
+
+    #[test]
+    fn sharded_parallel_twin_reports_backend_and_telemetry() {
+        let w = toy_weights(3);
+        let cfg = DeviceConfig {
+            fault_rate: 0.0,
+            pulse_sigma: 0.0,
+            read_noise: 0.0,
+            ..Default::default()
+        };
+        let mut twin = Lorenz96Twin::analog_opts(
+            &w,
+            &cfg,
+            AnalogNoise::off(),
+            1,
+            L96AnalogOpts { shards: 2, parallel: true, ..Default::default() },
+        );
+        let resp =
+            twin.run(&TwinRequest::autonomous(vec![0.5, -0.25, 0.1], 4));
+        let resp = resp.unwrap();
+        assert_eq!(resp.backend, "analog-sharded");
+        assert_eq!(resp.trajectory.len(), 4);
+        let tel = twin.shard_telemetry().expect("sharded backend");
+        assert_eq!(tel.len(), 2);
+        assert!(tel.iter().all(|s| s.steps > 0));
     }
 
     #[test]

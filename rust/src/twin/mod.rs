@@ -26,6 +26,7 @@ pub mod hp;
 pub mod lorenz96;
 pub mod registry;
 pub mod setup;
+pub mod shard;
 pub mod throughput;
 
 use crate::util::tensor::Trajectory;

@@ -9,6 +9,7 @@
 //! | `hp/resnet`          | recurrent-ResNet baseline            |
 //! | `hp/pjrt`            | AOT HLO rollout via PJRT             |
 //! | `lorenz96/analog`    | memristive solver                    |
+//! | `lorenz96/analog-sharded` | memristive solver, tile-sharded fan-out |
 //! | `lorenz96/digital`   | Rust RK4                             |
 //! | `lorenz96/rnn|gru|lstm` | recurrent baselines               |
 //! | `lorenz96/pjrt`      | AOT HLO rollout via PJRT             |
@@ -74,6 +75,20 @@ pub fn build_registry(
     weights: &TrainedWeights,
     pjrt: Option<PjrtHandle>,
 ) -> Result<TwinRegistry> {
+    build_registry_with_telemetry(cfg, weights, pjrt, None)
+}
+
+/// [`build_registry`] with the coordinator's serving telemetry: the
+/// tile-sharded route's shard workers report `shard_rollouts` /
+/// `shard_steps` into it. Pass the same instance to
+/// [`crate::coordinator::service::Coordinator::start_with_telemetry`] so
+/// sharded load shows up in the served metrics (the serve CLI does).
+pub fn build_registry_with_telemetry(
+    cfg: &SystemConfig,
+    weights: &TrainedWeights,
+    pjrt: Option<PjrtHandle>,
+    telemetry: Option<Arc<crate::coordinator::telemetry::Telemetry>>,
+) -> Result<TwinRegistry> {
     let mut reg = TwinRegistry::new();
     let device = cfg.device.clone();
     let noise = cfg.noise;
@@ -107,6 +122,31 @@ pub fn build_registry(
         let dev = DeviceConfig { fault_rate: 0.0, ..device.clone() };
         reg.register("lorenz96/analog", move || {
             Box::new(Lorenz96Twin::analog(&w, &dev, noise, seed))
+        });
+    }
+    {
+        // Tile-sharded fan-out route: the same deployment split across
+        // parallel shard workers (the scheduler's tile-aware dispatch
+        // mode; states wider than one array use the same path).
+        let w = Arc::clone(&weights.l96_node);
+        let dev = DeviceConfig { fault_rate: 0.0, ..device.clone() };
+        let tel = telemetry.clone();
+        reg.register("lorenz96/analog-sharded", move || {
+            let mut twin = Lorenz96Twin::analog_opts(
+                &w,
+                &dev,
+                noise,
+                seed,
+                crate::twin::lorenz96::L96AnalogOpts {
+                    shards: 2,
+                    parallel: true,
+                    ..Default::default()
+                },
+            );
+            if let Some(t) = &tel {
+                twin.attach_coordinator_telemetry(Arc::clone(t));
+            }
+            Box::new(twin)
         });
     }
     {
@@ -209,6 +249,7 @@ mod tests {
             "hp/digital",
             "hp/resnet",
             "lorenz96/analog",
+            "lorenz96/analog-sharded",
             "lorenz96/digital",
             "lorenz96/rnn",
             "lorenz96/gru",

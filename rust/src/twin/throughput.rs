@@ -16,7 +16,7 @@ use crate::analog::system::AnalogNoise;
 use crate::device::taox::DeviceConfig;
 use crate::models::loader::MlpWeights;
 use crate::twin::hp::HpTwin;
-use crate::twin::lorenz96::Lorenz96Twin;
+use crate::twin::lorenz96::{L96AnalogOpts, Lorenz96Twin};
 use crate::twin::{Twin, TwinRequest};
 use crate::util::bench::Bencher;
 use crate::util::json::Json;
@@ -38,9 +38,25 @@ pub struct ThroughputEntry {
     pub speedup: f64,
 }
 
-/// The measured routes (HP and Lorenz96, analogue + digital backends).
-pub const ROUTES: [&str; 4] =
-    ["hp/analog", "hp/digital", "l96/analog", "l96/digital"];
+/// The measured routes: HP and Lorenz96 (analogue + digital backends),
+/// plus the wide Lorenz96 pair tracking sharded-vs-monolithic execution —
+/// `l96d64/analog` runs the d = 64 state as one monolithic rollout,
+/// `l96d64/analog-shard2` the *same deployment* fanned out across two
+/// tile-shard workers. Comparing the two routes' ns/trajectory-step (same
+/// B, same column) is the tracked sharding overhead/benefit.
+pub const ROUTES: [&str; 6] = [
+    "hp/analog",
+    "hp/digital",
+    "l96/analog",
+    "l96/digital",
+    "l96d64/analog",
+    "l96d64/analog-shard2",
+];
+
+/// Circuit substeps for the d = 64 routes (smaller than the paper-default
+/// 20 so the smoke bench stays within tier-1 budget; identical for the
+/// monolithic and sharded rows, so the comparison is apples-to-apples).
+pub const D64_SUBSTEPS: usize = 5;
 
 fn synth_mlp(
     dims: &[(usize, usize)],
@@ -73,6 +89,26 @@ pub fn l96_weights() -> MlpWeights {
     synth_mlp(&[(6, 64), (64, 64), (64, 6)], 0.02, "l96", 42)
 }
 
+/// Wide Lorenz96 field: a d = 64 state (two physical tile column-groups)
+/// with one 64-wide hidden layer — the "state larger than one array"
+/// scenario the sharded execution path exists for.
+pub fn l96d64_weights() -> MlpWeights {
+    synth_mlp(&[(64, 64), (64, 64)], 0.02, "l96", 77)
+}
+
+/// Per-route state dimension of the Lorenz96 routes.
+fn route_dim(route: &str) -> usize {
+    if route.starts_with("l96d64/") {
+        64
+    } else {
+        6
+    }
+}
+
+fn d64_opts(shards: usize, parallel: bool) -> L96AnalogOpts {
+    L96AnalogOpts { substeps: D64_SUBSTEPS, shards, parallel }
+}
+
 /// Build the twin behind a measured route, at the paper's hardware noise
 /// operating point for the analogue backends.
 pub fn make_twin(route: &str) -> Box<dyn Twin> {
@@ -92,6 +128,20 @@ pub fn make_twin(route: &str) -> Box<dyn Twin> {
             1,
         )),
         "l96/digital" => Box::new(Lorenz96Twin::digital(&l96_weights())),
+        "l96d64/analog" => Box::new(Lorenz96Twin::analog_opts(
+            &l96d64_weights(),
+            &device,
+            AnalogNoise::hardware(),
+            1,
+            d64_opts(1, false),
+        )),
+        "l96d64/analog-shard2" => Box::new(Lorenz96Twin::analog_opts(
+            &l96d64_weights(),
+            &device,
+            AnalogNoise::hardware(),
+            1,
+            d64_opts(2, true),
+        )),
         other => panic!("unknown throughput route '{other}'"),
     }
 }
@@ -117,6 +167,20 @@ pub fn make_quiet_twin(route: &str) -> Box<dyn Twin> {
             AnalogNoise::off(),
             1,
         )),
+        "l96d64/analog" => Box::new(Lorenz96Twin::analog_opts(
+            &l96d64_weights(),
+            &quiet,
+            AnalogNoise::off(),
+            1,
+            d64_opts(1, false),
+        )),
+        "l96d64/analog-shard2" => Box::new(Lorenz96Twin::analog_opts(
+            &l96d64_weights(),
+            &quiet,
+            AnalogNoise::off(),
+            1,
+            d64_opts(2, true),
+        )),
         other => make_twin(other),
     }
 }
@@ -131,6 +195,7 @@ pub fn requests(route: &str, b: usize, n_points: usize) -> Vec<TwinRequest> {
         Waveform::rectangular(1.0, 4.0),
         Waveform::modulated(1.0, 4.0, 1.0),
     ];
+    let dim = route_dim(route);
     (0..b)
         .map(|k| {
             if route.starts_with("hp/") {
@@ -141,12 +206,39 @@ pub fn requests(route: &str, b: usize, n_points: usize) -> Vec<TwinRequest> {
                 )
             } else {
                 TwinRequest::autonomous(
-                    (0..6).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
+                    (0..dim).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
                     n_points,
                 )
             }
         })
         .collect()
+}
+
+/// Assert the sharded d = 64 route reproduces the monolithic route
+/// bit-for-bit under noise-off deployment — per request, for both the
+/// serial `run` and the batched `run_batch` paths. Sharding must never buy
+/// capacity with accuracy drift.
+pub fn assert_sharded_matches_monolithic(b: usize, n_points: usize) {
+    let mut mono = make_quiet_twin("l96d64/analog");
+    let mut sharded = make_quiet_twin("l96d64/analog-shard2");
+    let reqs = requests("l96d64/analog", b, n_points);
+    for (k, r) in reqs.iter().enumerate() {
+        let a = mono.run(r).unwrap();
+        let s = sharded.run(r).unwrap();
+        assert_eq!(
+            a.trajectory, s.trajectory,
+            "request {k}: sharded serial rollout != monolithic"
+        );
+    }
+    let am = mono.run_batch(&reqs);
+    let ash = sharded.run_batch(&reqs);
+    for (k, (a, s)) in am.iter().zip(&ash).enumerate() {
+        assert_eq!(
+            a.as_ref().unwrap().trajectory,
+            s.as_ref().unwrap().trajectory,
+            "request {k}: sharded batched rollout != monolithic"
+        );
+    }
 }
 
 /// Assert `run_batch` reproduces per-request `run` bit-for-bit on a
@@ -259,6 +351,134 @@ pub fn write_json(
     crate::util::json::to_file(path, &to_json(mode, entries))
 }
 
+// ---------------------------------------------------------------------------
+// Bench-regression gate
+// ---------------------------------------------------------------------------
+
+/// Where the committed baseline lives: `$BENCH_BASELINE` if set, else
+/// `BENCH_baseline.json` at the repository root (tracked in git, unlike
+/// the machine-local `BENCH_batch_throughput.json`).
+pub fn default_baseline_path() -> PathBuf {
+    if let Ok(p) = std::env::var("BENCH_BASELINE") {
+        return PathBuf::from(p);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_baseline.json")
+}
+
+/// Outcome of [`gate_against_baseline`].
+#[derive(Debug)]
+pub struct GateReport {
+    /// (route, batch) metric pairs present in both documents.
+    pub compared: usize,
+    /// Median fresh/baseline ratio — the machine-speed normaliser.
+    pub scale: f64,
+    /// Human-readable descriptions of every tracked metric whose
+    /// normalised ratio exceeded the allowance.
+    pub failures: Vec<String>,
+}
+
+impl GateReport {
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+
+    /// True when the baseline carried no entries (gate passes vacuously).
+    pub fn unseeded(&self) -> bool {
+        self.compared == 0
+    }
+}
+
+/// Flatten a benchmark document into ((route, batch), serial, batched)
+/// rows.
+fn bench_rows(doc: &Json) -> anyhow::Result<Vec<(String, f64, f64)>> {
+    let arr = doc
+        .get("entries")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("benchmark json has no entries"))?;
+    arr.iter()
+        .map(|e| {
+            let route = e
+                .get("route")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("entry without route"))?;
+            let batch = e
+                .get("batch")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("entry without batch"))?;
+            let serial = e
+                .get("serial_ns_per_step")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("entry without serial ns"))?;
+            let batched = e
+                .get("batched_ns_per_step")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("entry without batched ns"))?;
+            Ok((format!("{route} B={batch}"), serial, batched))
+        })
+        .collect()
+}
+
+/// Compare a fresh smoke benchmark against the committed baseline: fail
+/// any tracked route whose ns/trajectory-step regressed by more than
+/// `max_regress` (fraction, e.g. 0.25) *after normalising out uniform
+/// machine-speed differences*.
+///
+/// Normalisation: CI machines differ in absolute speed run to run, so raw
+/// ns comparisons would be pure noise. Instead the gate computes every
+/// (route, batch, serial|batched) fresh/baseline ratio, takes the median
+/// ratio as the machine-speed scale, and flags metrics whose ratio exceeds
+/// `scale * (1 + max_regress)`. A *uniform* slowdown therefore passes (by
+/// design — it is indistinguishable from a slower runner), while any route
+/// that regressed *relative to the rest of the suite* fails. An empty or
+/// missing baseline passes vacuously with [`GateReport::unseeded`] set —
+/// seed it with `cargo run --release --bin bench_gate -- --update` after a
+/// smoke bench run on a quiet machine.
+pub fn gate_against_baseline(
+    baseline: &Json,
+    fresh: &Json,
+    max_regress: f64,
+) -> anyhow::Result<GateReport> {
+    let base = bench_rows(baseline)?;
+    let new = bench_rows(fresh)?;
+    let mut pairs: Vec<(String, f64, f64)> = Vec::new();
+    for (key, bs, bb) in &base {
+        if let Some((_, ns, nb)) = new.iter().find(|(k, _, _)| k == key) {
+            if *bs > 0.0 && *ns > 0.0 {
+                pairs.push((format!("{key} serial"), *bs, *ns));
+            }
+            if *bb > 0.0 && *nb > 0.0 {
+                pairs.push((format!("{key} batched"), *bb, *nb));
+            }
+        }
+    }
+    if pairs.is_empty() {
+        return Ok(GateReport {
+            compared: 0,
+            scale: 1.0,
+            failures: Vec::new(),
+        });
+    }
+    let ratios: Vec<f64> =
+        pairs.iter().map(|(_, base, fresh)| fresh / base).collect();
+    let scale = crate::util::stats::median(&ratios);
+    let allowance = scale * (1.0 + max_regress);
+    let failures = pairs
+        .iter()
+        .zip(&ratios)
+        .filter(|(_, &r)| r > allowance)
+        .map(|((key, base, fresh), r)| {
+            format!(
+                "{key}: {fresh:.1} ns/step vs baseline {base:.1} \
+                 (x{r:.2}, allowed x{allowance:.2} at machine scale \
+                 {scale:.2})"
+            )
+        })
+        .collect();
+    Ok(GateReport { compared: pairs.len(), scale, failures })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -301,5 +521,105 @@ mod tests {
     fn bit_identity_gate_holds_on_quiet_twins() {
         assert_bit_identical("hp/analog", 4, 8);
         assert_bit_identical("l96/digital", 4, 8);
+    }
+
+    #[test]
+    fn d64_requests_are_wide() {
+        let reqs = requests("l96d64/analog-shard2", 2, 5);
+        assert!(reqs.iter().all(|r| r.h0.len() == 64));
+    }
+
+    #[test]
+    fn sharded_route_bit_identical_to_monolithic_route() {
+        assert_sharded_matches_monolithic(3, 4);
+    }
+
+    fn gate_doc(pairs: &[(&'static str, usize, f64, f64)]) -> Json {
+        let entries: Vec<ThroughputEntry> = pairs
+            .iter()
+            .map(|&(route, batch, s, b)| ThroughputEntry {
+                route,
+                batch,
+                n_points: 12,
+                serial_ns_per_step: s,
+                batched_ns_per_step: b,
+                speedup: s / b,
+            })
+            .collect();
+        to_json("smoke", &entries)
+    }
+
+    #[test]
+    fn gate_passes_identical_documents() {
+        let doc = gate_doc(&[
+            ("hp/analog", 32, 100.0, 40.0),
+            ("l96/analog", 32, 900.0, 300.0),
+        ]);
+        let r = gate_against_baseline(&doc, &doc, 0.25).unwrap();
+        assert!(r.passed());
+        assert_eq!(r.compared, 4);
+        assert!((r.scale - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gate_normalises_uniform_machine_slowdown() {
+        // Everything 2x slower: a slower runner, not a regression.
+        let base = gate_doc(&[
+            ("hp/analog", 32, 100.0, 40.0),
+            ("l96/analog", 32, 900.0, 300.0),
+        ]);
+        let fresh = gate_doc(&[
+            ("hp/analog", 32, 200.0, 80.0),
+            ("l96/analog", 32, 1800.0, 600.0),
+        ]);
+        let r = gate_against_baseline(&base, &fresh, 0.25).unwrap();
+        assert!(r.passed(), "uniform slowdown flagged: {:?}", r.failures);
+        assert!((r.scale - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gate_flags_relative_regression() {
+        // One route's batched path 2x slower while the rest is unchanged.
+        let base = gate_doc(&[
+            ("hp/analog", 32, 100.0, 40.0),
+            ("l96/analog", 32, 900.0, 300.0),
+            ("l96/digital", 32, 50.0, 20.0),
+        ]);
+        let fresh = gate_doc(&[
+            ("hp/analog", 32, 100.0, 80.0),
+            ("l96/analog", 32, 900.0, 300.0),
+            ("l96/digital", 32, 50.0, 20.0),
+        ]);
+        let r = gate_against_baseline(&base, &fresh, 0.25).unwrap();
+        assert!(!r.passed());
+        assert_eq!(r.failures.len(), 1);
+        assert!(
+            r.failures[0].contains("hp/analog B=32 batched"),
+            "{:?}",
+            r.failures
+        );
+    }
+
+    #[test]
+    fn gate_unseeded_baseline_passes_vacuously() {
+        let base = gate_doc(&[]);
+        let fresh = gate_doc(&[("hp/analog", 32, 100.0, 40.0)]);
+        let r = gate_against_baseline(&base, &fresh, 0.25).unwrap();
+        assert!(r.passed() && r.unseeded());
+    }
+
+    #[test]
+    fn gate_ignores_routes_missing_from_either_side() {
+        let base = gate_doc(&[
+            ("hp/analog", 32, 100.0, 40.0),
+            ("old/route", 32, 10.0, 5.0),
+        ]);
+        let fresh = gate_doc(&[
+            ("hp/analog", 32, 101.0, 41.0),
+            ("new/route", 32, 1.0, 1.0),
+        ]);
+        let r = gate_against_baseline(&base, &fresh, 0.25).unwrap();
+        assert_eq!(r.compared, 2);
+        assert!(r.passed());
     }
 }

@@ -34,6 +34,14 @@ impl fmt::Display for JsonError {
 
 impl std::error::Error for JsonError {}
 
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
+    }
+}
+
 impl Json {
     // -- constructors ------------------------------------------------------
 
@@ -108,13 +116,7 @@ impl Json {
         self.as_arr()?.iter().map(Json::as_vec_f64).collect()
     }
 
-    // -- serialisation -----------------------------------------------------
-
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
+    // -- serialisation (via `Display`; `.to_string()` comes with it) -------
 
     fn write(&self, out: &mut String) {
         match self {

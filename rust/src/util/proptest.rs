@@ -92,14 +92,16 @@ pub fn gen_vec_any_len(
 }
 
 /// Shrinker for vectors: halve the length, then zero elements one by one.
-pub fn shrink_vec(v: &Vec<f64>) -> Vec<Vec<f64>> {
+/// Takes a slice; pass `|v| shrink_vec(v)` where a `Fn(&Vec<f64>)`
+/// shrinker is expected.
+pub fn shrink_vec(v: &[f64]) -> Vec<Vec<f64>> {
     let mut out = Vec::new();
     if v.len() > 1 {
         out.push(v[..v.len() / 2].to_vec());
     }
     for i in 0..v.len().min(8) {
         if v[i] != 0.0 {
-            let mut w = v.clone();
+            let mut w = v.to_vec();
             w[i] = 0.0;
             out.push(w);
         }
@@ -138,7 +140,7 @@ mod tests {
             check_with(
                 &Config { cases: 100, ..Config::default() },
                 |r| gen_vec(r, 64, 0.0, 1.0),
-                shrink_vec,
+                |v| shrink_vec(v),
                 |v| v.iter().all(|&x| x <= 0.9),
             );
         });

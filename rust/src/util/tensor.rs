@@ -18,6 +18,12 @@
 //! with [`TrajectoryPool`] it is what keeps the warm batched request path
 //! free of steady-state heap allocations.
 
+/// Output-tile width of the batched GEMM microkernels: 32 f64 = 4 cache
+/// lines, small enough that the accumulator tile stays L1-resident across
+/// the whole shared-dimension loop. Shared by the full-width and the
+/// column-sharded batched kernels so both tile identically.
+const VECMAT_TILE_COLS: usize = 32;
+
 /// Row-major dense matrix.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Mat {
@@ -122,6 +128,44 @@ impl Mat {
         }
     }
 
+    /// Column-sharded [`Mat::vecmat_into`]: `y = x^T A[:, c0..c1]`, the
+    /// shard read of a tile column-group (`y.len() == c1 - c0`).
+    ///
+    /// For every output element the accumulation order over the shared
+    /// dimension — including the zero-input skip — is exactly that of the
+    /// full-width `vecmat_into`, so a state vector assembled from shard
+    /// reads is bit-identical to one monolithic read. This is the
+    /// accumulation-order contract the sharded analogue path relies on.
+    pub fn vecmat_cols_into(
+        &self,
+        x: &[f64],
+        c0: usize,
+        c1: usize,
+        y: &mut [f64],
+    ) {
+        assert!(
+            c0 <= c1 && c1 <= self.cols,
+            "vecmat_cols: column range {c0}..{c1} outside 0..{}",
+            self.cols
+        );
+        assert_eq!(x.len(), self.rows, "vecmat_cols: x length != rows");
+        assert_eq!(
+            y.len(),
+            c1 - c0,
+            "vecmat_cols: y length != column range width"
+        );
+        y.fill(0.0);
+        for (r, &xv) in x.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let row = &self.data[r * self.cols + c0..r * self.cols + c1];
+            for (yc, &a) in y.iter_mut().zip(row) {
+                *yc += xv * a;
+            }
+        }
+    }
+
     /// y = A x (matrix times vector; `x.len() == cols`, output `rows`).
     pub fn gemv(&self, x: &[f64]) -> Vec<f64> {
         let mut y = vec![0.0; self.rows];
@@ -173,9 +217,6 @@ impl Mat {
             "vecmat_batch: ys length != batch * cols"
         );
         ys.fill(0.0);
-        // Output-tile width: 32 f64 = 4 cache lines, small enough that the
-        // accumulator tile stays L1-resident across the whole `r` loop.
-        const VECMAT_TILE_COLS: usize = 32;
         let (rows, cols) = (self.rows, self.cols);
         for b in 0..batch {
             let x = &xs[b * rows..(b + 1) * rows];
@@ -194,6 +235,61 @@ impl Mat {
                     }
                 }
                 c0 = c1;
+            }
+        }
+    }
+
+    /// Column-sharded [`Mat::vecmat_batch_into`]: `ys[b] = xs[b]^T
+    /// A[:, c0..c1]` for `batch` stacked inputs (`ys: [batch * (c1-c0)]`).
+    ///
+    /// Tiled exactly like the full-width batched kernel (the tile walk
+    /// simply starts at `c0` and stops at `c1`), and per output element the
+    /// accumulation order over the shared dimension — zero-skip included —
+    /// matches `vecmat_into`, so a batched sharded read is bit-identical to
+    /// the corresponding column slice of the monolithic batched read.
+    pub fn vecmat_batch_cols_into(
+        &self,
+        xs: &[f64],
+        batch: usize,
+        c0: usize,
+        c1: usize,
+        ys: &mut [f64],
+    ) {
+        assert!(
+            c0 <= c1 && c1 <= self.cols,
+            "vecmat_batch_cols: column range {c0}..{c1} outside 0..{}",
+            self.cols
+        );
+        let width = c1 - c0;
+        assert_eq!(
+            xs.len(),
+            batch * self.rows,
+            "vecmat_batch_cols: xs length != batch * rows"
+        );
+        assert_eq!(
+            ys.len(),
+            batch * width,
+            "vecmat_batch_cols: ys length != batch * range width"
+        );
+        ys.fill(0.0);
+        let (rows, cols) = (self.rows, self.cols);
+        for b in 0..batch {
+            let x = &xs[b * rows..(b + 1) * rows];
+            let y = &mut ys[b * width..(b + 1) * width];
+            let mut t0 = c0;
+            while t0 < c1 {
+                let t1 = (t0 + VECMAT_TILE_COLS).min(c1);
+                let yt = &mut y[t0 - c0..t1 - c0];
+                for (r, &xv) in x.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let at = &self.data[r * cols + t0..r * cols + t1];
+                    for (yc, &a) in yt.iter_mut().zip(at) {
+                        *yc += xv * a;
+                    }
+                }
+                t0 = t1;
             }
         }
     }
@@ -737,6 +833,58 @@ mod tests {
             let want = m.vecmat(&xs[b * 9..(b + 1) * 9]);
             assert_eq!(&ys[b * 77..(b + 1) * 77], &want[..], "traj {b}");
         }
+    }
+
+    #[test]
+    fn vecmat_cols_bit_identical_to_full_slice() {
+        // The sharded-read contract: column-group reads reassemble the
+        // monolithic read exactly, element for element.
+        let m = Mat::from_fn(11, 70, |r, c| {
+            ((r * 29 + c * 13) % 19) as f64 / 6.0 - 1.4
+        });
+        let mut x = vec![0.0; 11];
+        for (k, v) in x.iter_mut().enumerate() {
+            *v = if k % 4 == 1 { 0.0 } else { (k as f64 * 0.51).sin() };
+        }
+        let full = m.vecmat(&x);
+        for &(c0, c1) in &[(0usize, 32usize), (32, 64), (64, 70), (0, 70), (5, 6)] {
+            let mut y = vec![9.0; c1 - c0];
+            m.vecmat_cols_into(&x, c0, c1, &mut y);
+            assert_eq!(&y[..], &full[c0..c1], "range {c0}..{c1}");
+        }
+    }
+
+    #[test]
+    fn vecmat_batch_cols_bit_identical_to_full_slice() {
+        let m = Mat::from_fn(9, 77, |r, c| {
+            ((r * 31 + c * 17) % 13) as f64 / 7.0 - 0.9
+        });
+        let batch = 3;
+        let mut xs = vec![0.0; batch * 9];
+        for (k, x) in xs.iter_mut().enumerate() {
+            *x = if k % 5 == 2 { 0.0 } else { (k as f64 * 0.73).cos() };
+        }
+        let full = m.vecmat_batch(&xs, batch);
+        for &(c0, c1) in &[(0usize, 32usize), (32, 77), (40, 41), (0, 77)] {
+            let w = c1 - c0;
+            let mut ys = vec![7.0; batch * w];
+            m.vecmat_batch_cols_into(&xs, batch, c0, c1, &mut ys);
+            for b in 0..batch {
+                assert_eq!(
+                    &ys[b * w..(b + 1) * w],
+                    &full[b * 77 + c0..b * 77 + c1],
+                    "traj {b} range {c0}..{c1}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "column range")]
+    fn vecmat_cols_checks_range() {
+        let m = Mat::zeros(2, 3);
+        let mut y = vec![0.0; 2];
+        m.vecmat_cols_into(&[0.0; 2], 2, 4, &mut y);
     }
 
     #[test]

@@ -28,6 +28,20 @@ pub const SCALE: f64 = 8.0;
 pub const Y0: [f64; DIM] =
     [-1.2061, 0.0617, 1.1632, -1.5008, -1.5944, -0.0187];
 
+/// Canonical initial condition for a `dim`-dimensional system (normalized
+/// units). The paper's quoted [`Y0`] is kept verbatim for the 6-dim twin;
+/// wider twins (tile-sharded states, d = 64/128) get a deterministic
+/// bounded perturbation of the rest state — the classic "x_i = F with one
+/// site nudged" recipe, expressed in normalized units.
+pub fn default_y0(dim: usize) -> Vec<f64> {
+    if dim == DIM {
+        return Y0.to_vec();
+    }
+    (0..dim)
+        .map(|i| 1.0 + 0.25 * ((i as f64) * 0.73).sin())
+        .collect()
+}
+
 /// Eq. (4) vector field with periodic boundary: out[i] =
 /// (x[i+1] - x[i-2]) * x[i-1] - x[i] + F.
 pub fn field_into(x: &[f64], forcing: f64, out: &mut [f64]) {

@@ -10,7 +10,11 @@
 //!
 //! Covered: HP and Lorenz96 twins on the Analog (noise-off) and Digital
 //! backends, including mixed-`n_points` batches that split into two
-//! compatible sub-batch groups.
+//! compatible sub-batch groups, plus the *serial tile-sharded* analogue
+//! path (states wider than one 32x32 array, per-shard column reads) —
+//! sharding must not cost steady-state allocations. The parallel
+//! shard-worker fan-out is excluded by design: it spawns rollout-scoped
+//! threads (see `twin::shard`).
 //!
 //! Deliberately a single `#[test]`: the counter is process-global, so no
 //! other test may run (and allocate) concurrently in this binary.
@@ -91,26 +95,10 @@ fn quiet_device() -> DeviceConfig {
     }
 }
 
-/// f(h) = -h element-wise for dimension d, exact via paired ReLUs.
+/// f(h) = -h element-wise for dimension d (the shared exact-ReLU decay
+/// fixture).
 fn l96_toy_weights(d: usize) -> MlpWeights {
-    let mut w1 = Mat::zeros(d, 2 * d);
-    for i in 0..d {
-        *w1.at_mut(i, 2 * i) = 1.0;
-        *w1.at_mut(i, 2 * i + 1) = -1.0;
-    }
-    let b1 = vec![0.0; 2 * d];
-    let mut w2 = Mat::zeros(2 * d, d);
-    for i in 0..d {
-        *w2.at_mut(2 * i, i) = -1.0;
-        *w2.at_mut(2 * i + 1, i) = 1.0;
-    }
-    let b2 = vec![0.0; d];
-    MlpWeights {
-        layers: vec![(w1, b1), (w2, b2)],
-        dt: 0.02,
-        kind: "node".into(),
-        task: "l96".into(),
-    }
+    memode::models::loader::decay_mlp_weights(d)
 }
 
 /// f([v; h]) = 2v - h, exact via paired ReLUs (the HP toy field).
@@ -191,7 +179,7 @@ fn assert_zero_alloc_steady_state<T: Twin>(
     assert_eq!(out.len(), reqs.len(), "{name}: measured arity");
     for r in out.drain(..) {
         let resp = r.expect("measured request failed");
-        assert!(resp.trajectory.len() > 0, "{name}: empty trajectory");
+        assert!(!resp.trajectory.is_empty(), "{name}: empty trajectory");
         recycle(twin, resp);
     }
     assert_eq!(
@@ -223,6 +211,37 @@ fn warm_run_batch_performs_zero_heap_allocations() {
         "l96/analog",
         &mut twin,
         &l96_requests(),
+        |t, resp| t.recycle(resp),
+    );
+
+    // Lorenz96, analogue backend with the serial tile-sharded kernel: a
+    // d = 34 state spans two physical tile column-groups; the warm
+    // sharded path must stay allocation-free too.
+    let mut twin = memode::twin::lorenz96::Lorenz96Twin::analog_opts(
+        &l96_toy_weights(34),
+        &quiet_device(),
+        AnalogNoise::off(),
+        7,
+        memode::twin::lorenz96::L96AnalogOpts {
+            substeps: 2,
+            shards: 2,
+            parallel: false,
+        },
+    );
+    let wide_reqs: Vec<TwinRequest> = (0..4)
+        .map(|k| {
+            TwinRequest::autonomous(
+                (0..34)
+                    .map(|i| ((i + k) as f64 * 0.21).sin() * 0.5)
+                    .collect(),
+                if k % 2 == 0 { 6 } else { 9 },
+            )
+        })
+        .collect();
+    assert_zero_alloc_steady_state(
+        "l96/analog-sharded(serial)",
+        &mut twin,
+        &wide_reqs,
         |t, resp| t.recycle(resp),
     );
 

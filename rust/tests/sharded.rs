@@ -1,0 +1,109 @@
+//! Tile-sharded execution: noise-off bit-identity of sharded vs
+//! monolithic Lorenz96 rollouts — the correctness contract that lets
+//! states larger than one 32x32 array split across tile column-groups
+//! (serial sharded kernel and parallel shard-worker fan-out), serial and
+//! batched (B = 32).
+
+use memode::analog::system::AnalogNoise;
+use memode::device::taox::DeviceConfig;
+use memode::models::loader::decay_mlp_weights;
+use memode::twin::lorenz96::{L96AnalogOpts, Lorenz96Twin};
+use memode::twin::{Twin, TwinRequest};
+
+fn quiet_device() -> DeviceConfig {
+    DeviceConfig {
+        fault_rate: 0.0,
+        pulse_sigma: 0.0,
+        read_noise: 0.0,
+        ..Default::default()
+    }
+}
+
+const DIM: usize = 48;
+const SUBSTEPS: usize = 4;
+
+// With DIM = 48 the shared decay fixture spans two tile column-groups on
+// the state (48 = 32 + 16) and three on the hidden layer (96 columns).
+fn twin_with(shards: usize, parallel: bool) -> Lorenz96Twin {
+    Lorenz96Twin::analog_opts(
+        &decay_mlp_weights(DIM),
+        &quiet_device(),
+        AnalogNoise::off(),
+        5,
+        L96AnalogOpts { substeps: SUBSTEPS, shards, parallel },
+    )
+}
+
+fn h0(k: usize) -> Vec<f64> {
+    (0..DIM)
+        .map(|i| ((i as f64) * 0.31 + (k as f64) * 0.77).sin() * 0.6)
+        .collect()
+}
+
+fn batch_requests(b: usize, n_points: usize) -> Vec<TwinRequest> {
+    (0..b).map(|k| TwinRequest::autonomous(h0(k), n_points)).collect()
+}
+
+#[test]
+fn serial_sharded_rollout_bit_identical_to_monolithic() {
+    let mut mono = twin_with(1, false);
+    let mut sharded = twin_with(2, false);
+    let a = mono.simulate(&h0(0), 10).unwrap();
+    let b = sharded.simulate(&h0(0), 10).unwrap();
+    assert_eq!(a, b, "serial sharded kernel diverged from monolithic");
+}
+
+#[test]
+fn parallel_sharded_rollout_bit_identical_to_monolithic() {
+    let mut mono = twin_with(1, false);
+    let mut fanout = twin_with(2, true);
+    let a = mono.simulate(&h0(1), 10).unwrap();
+    let b = fanout.simulate(&h0(1), 10).unwrap();
+    assert_eq!(a, b, "shard-worker fan-out diverged from monolithic");
+    let tel = fanout.shard_telemetry().expect("fan-out backend");
+    assert_eq!(tel.len(), 2, "expected 2 shard workers");
+    assert!(tel.iter().all(|s| s.steps > 0 && s.device_reads > 0));
+}
+
+#[test]
+fn batched_b32_sharded_rollouts_bit_identical_to_monolithic() {
+    let reqs = batch_requests(32, 8);
+    let mut mono = twin_with(1, false);
+    let want = mono.run_batch(&reqs);
+
+    for (label, mut twin) in [
+        ("serial sharded", twin_with(2, false)),
+        ("parallel fan-out", twin_with(2, true)),
+    ] {
+        let got = twin.run_batch(&reqs);
+        assert_eq!(got.len(), want.len());
+        for (k, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(
+                g.as_ref().unwrap().trajectory,
+                w.as_ref().unwrap().trajectory,
+                "{label}: request {k} diverged at B=32"
+            );
+        }
+    }
+}
+
+#[test]
+fn sharded_batch_isolates_bad_h0_dim() {
+    let mut twin = twin_with(2, true);
+    let results = twin.run_batch(&[
+        TwinRequest::autonomous(h0(0), 5),
+        TwinRequest::autonomous(vec![1.0, 2.0], 5),
+        TwinRequest::autonomous(h0(2), 5),
+    ]);
+    assert!(results[0].is_ok());
+    assert!(results[1].is_err(), "wrong-dim request must fail alone");
+    assert!(results[2].is_ok());
+}
+
+#[test]
+fn sharded_default_h0_matches_state_dim() {
+    let mut twin = twin_with(2, true);
+    let resp = twin.run(&TwinRequest::autonomous(vec![], 3)).unwrap();
+    assert_eq!(resp.trajectory.dim(), DIM);
+    assert_eq!(resp.trajectory.row(0).len(), DIM);
+}
