@@ -17,7 +17,7 @@ use memode::crossbar::vmm::{NoiseMode, VmmEngine};
 use memode::device::noise::NoiseSource;
 use memode::device::taox::DeviceConfig;
 use memode::util::bench::{black_box, print_table, Bencher};
-use memode::util::rng::Pcg64;
+use memode::util::rng::{NoiseLane, Pcg64};
 use memode::util::tensor::Mat;
 
 fn main() {
@@ -41,11 +41,11 @@ fn main() {
         ] {
             let mut eng =
                 VmmEngine::new(&arr, NoiseSource::new(0.01), mode);
-            let mut rng2 = Pcg64::seeded(2);
+            let mut lane = NoiseLane::from_seed(2);
             results.push(bench.run(
                 &format!("vmm {n}x{n} noise={label}"),
                 || {
-                    eng.vmm_into(black_box(&v), &mut y, &mut rng2);
+                    eng.vmm_into(black_box(&v), &mut y, &mut lane);
                     y[0]
                 },
             ));
@@ -73,8 +73,9 @@ fn main() {
     );
     let u = [0.5, -0.2, 0.1, 0.3, -0.4, 0.2];
     let mut out = vec![0.0; 6];
+    let mut mlane = NoiseLane::from_seed(9);
     results.push(bench.run("analog-mlp fwd 6-64-64-6", || {
-        amlp.eval_into(black_box(&u), &mut out);
+        amlp.eval_into(black_box(&u), &mut out, &mut mlane);
         out[0]
     }));
 

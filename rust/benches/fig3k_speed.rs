@@ -16,7 +16,7 @@ use memode::energy::analogue::{self, AnalogParams};
 use memode::energy::digital::{GpuParams, ModelKind};
 use memode::models::mlp::Mlp;
 use memode::util::bench::{black_box, Bencher};
-use memode::util::rng::Pcg64;
+use memode::util::rng::{NoiseLane, Pcg64};
 use memode::util::tensor::Mat;
 
 fn field_layers(hidden: usize) -> Vec<(Mat, Vec<f64>)> {
@@ -81,8 +81,9 @@ fn main() {
             11,
         );
         let mut aout = vec![0.0; 1];
+        let mut lane = NoiseLane::from_seed(11);
         results.push(bench.run(&format!("analog-sim fwd h={h}"), || {
-            amlp.eval_into(black_box(&[0.5, 0.2]), &mut aout);
+            amlp.eval_into(black_box(&[0.5, 0.2]), &mut aout, &mut lane);
             aout[0]
         }));
     }

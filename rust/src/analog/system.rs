@@ -20,7 +20,7 @@ use crate::crossbar::tiling::{uniform_layer_plans, ShardPlan, TiledMatrix};
 use crate::crossbar::vmm::{NoiseMode, VmmEngine};
 use crate::device::noise::NoiseSource;
 use crate::device::taox::DeviceConfig;
-use crate::util::rng::Pcg64;
+use crate::util::rng::{NoiseLane, Pcg64};
 use crate::util::tensor::{Mat, Trajectory};
 
 /// Noise operating point (the Fig. 4j grid axes).
@@ -88,7 +88,14 @@ pub struct AnalogMlp {
     /// Staging for one shard's batched output (grown to the high-water
     /// `batch * widest shard`; reused across shards and layers).
     bshard: Vec<f64>,
-    rng: Pcg64,
+    /// Root for the *default* noise lanes behind the seedless convenience
+    /// wrappers (`eval`, `eval_batch`, the solver's `solve`/`solve_batch`).
+    /// Request-path callers pass explicit per-trajectory lanes instead.
+    lane_root: u64,
+    /// Default lanes, one per trajectory slot, grown on demand (pooled —
+    /// they persist across calls so repeated noisy reads keep sampling
+    /// fresh draws).
+    default_lanes: Vec<NoiseLane>,
 }
 
 impl AnalogMlp {
@@ -125,7 +132,7 @@ impl AnalogMlp {
                 },
             ));
         }
-        Self::from_engines(engines, rng)
+        Self::from_engines(engines, seed)
     }
 
     /// Ideal (no hardware sampling) MLP — the digital reference path and
@@ -135,10 +142,10 @@ impl AnalogMlp {
             .iter()
             .map(|l| VmmEngine::ideal(l.w_aug.clone()))
             .collect();
-        Self::from_engines(engines, Pcg64::seeded(seed))
+        Self::from_engines(engines, seed)
     }
 
-    fn from_engines(engines: Vec<VmmEngine>, rng: Pcg64) -> Self {
+    fn from_engines(engines: Vec<VmmEngine>, lane_root: u64) -> Self {
         let scratch_in: Vec<Vec<f64>> =
             engines.iter().map(|e| vec![0.0; e.rows()]).collect();
         let scratch_out: Vec<Vec<f64>> =
@@ -155,8 +162,35 @@ impl AnalogMlp {
             bscratch_in,
             bscratch_out,
             bshard: Vec::new(),
-            rng,
+            lane_root,
+            default_lanes: Vec::new(),
         }
+    }
+
+    /// Derive the noise lane of trajectory `trajectory` under this
+    /// deployment's lane root (the deploy seed).
+    pub fn lane(&self, trajectory: u64) -> NoiseLane {
+        NoiseLane::derive(self.lane_root, trajectory)
+    }
+
+    /// Take the pooled default lanes (grown to at least `n` trajectory
+    /// slots) out of the struct so the caller can pass them back into a
+    /// `&mut self` method; hand back via [`AnalogMlp::put_default_lanes`].
+    /// A panic between take and put leaves the pool empty, which only
+    /// resets the *default* lane cursors — explicit request lanes are
+    /// unaffected.
+    fn take_default_lanes(&mut self, n: usize) -> Vec<NoiseLane> {
+        while self.default_lanes.len() < n {
+            let t = self.default_lanes.len() as u64;
+            let lane = NoiseLane::derive(self.lane_root, t);
+            self.default_lanes.push(lane);
+        }
+        std::mem::take(&mut self.default_lanes)
+    }
+
+    /// Restore lanes taken by [`AnalogMlp::take_default_lanes`].
+    fn put_default_lanes(&mut self, lanes: Vec<NoiseLane>) {
+        self.default_lanes = lanes;
     }
 
     /// Use behavioural (soft-knee, leaky) peripherals instead of ideal ones.
@@ -199,8 +233,14 @@ impl AnalogMlp {
         (self.tia.clone(), self.relu.clone(), self.clamp.clone())
     }
 
-    /// Forward pass `y = f(u)` with fresh analogue reads; writes into `out`.
-    pub fn eval_into(&mut self, u: &[f64], out: &mut [f64]) {
+    /// Forward pass `y = f(u)` with fresh analogue reads drawn from the
+    /// trajectory's noise lane; writes into `out`.
+    pub fn eval_into(
+        &mut self,
+        u: &[f64],
+        out: &mut [f64],
+        lane: &mut NoiseLane,
+    ) {
         let n_layers = self.engines.len();
         debug_assert_eq!(u.len(), self.d_in());
         for l in 0..n_layers {
@@ -218,7 +258,7 @@ impl AnalogMlp {
                 // is avoided by using raw indices into self fields.
                 let inp = std::mem::take(&mut self.scratch_in[l]);
                 let mut outp = std::mem::take(&mut self.scratch_out[l]);
-                self.engines[l].vmm_into(&inp, &mut outp, &mut self.rng);
+                self.engines[l].vmm_into(&inp, &mut outp, lane);
                 (inp, outp)
             };
             self.scratch_in[l] = inp;
@@ -234,10 +274,12 @@ impl AnalogMlp {
         out.copy_from_slice(&self.scratch_out[n_layers - 1]);
     }
 
-    /// Allocating convenience wrapper.
+    /// Allocating convenience wrapper on the pooled default lane.
     pub fn eval(&mut self, u: &[f64]) -> Vec<f64> {
         let mut y = vec![0.0; self.d_out()];
-        self.eval_into(u, &mut y);
+        let mut lanes = self.take_default_lanes(1);
+        self.eval_into(u, &mut y, &mut lanes[0]);
+        self.put_default_lanes(lanes);
         y
     }
 
@@ -247,13 +289,15 @@ impl AnalogMlp {
     /// trajectory — the GEMM-instead-of-repeated-GEMV amortisation of the
     /// batched execution engine. The peripheral stages (TIA, diode ReLU,
     /// clamp) are element-wise and act on the whole batch buffer at once.
-    /// With read noise off the result is bit-identical, per trajectory, to
-    /// [`AnalogMlp::eval_into`].
+    /// With per-trajectory noise lanes the result is bit-identical, per
+    /// trajectory, to [`AnalogMlp::eval_into`] with the same lane — noise
+    /// on or off, regardless of batch composition.
     pub fn eval_batch_into(
         &mut self,
         us: &[f64],
         batch: usize,
         out: &mut [f64],
+        lanes: &mut [NoiseLane],
     ) {
         let n_layers = self.engines.len();
         let d_in = self.d_in();
@@ -266,6 +310,11 @@ impl AnalogMlp {
             out.len(),
             batch * self.d_out(),
             "eval_batch: out length != batch * d_out"
+        );
+        assert_eq!(
+            lanes.len(),
+            batch,
+            "eval_batch: one noise lane per trajectory"
         );
         for l in 0..n_layers {
             let rows = self.engines[l].rows();
@@ -289,12 +338,7 @@ impl AnalogMlp {
                 dst[src_dim] = 1.0;
             }
             // One multi-vector analogue read for the whole batch.
-            self.engines[l].vmm_batch_into(
-                &bin,
-                batch,
-                &mut bout,
-                &mut self.rng,
-            );
+            self.engines[l].vmm_batch_into(&bin, batch, &mut bout, lanes);
             let is_last = l + 1 == n_layers;
             self.tia.convert_slice(&mut bout);
             if !is_last {
@@ -307,10 +351,12 @@ impl AnalogMlp {
         out.copy_from_slice(&self.bscratch_out[n_layers - 1]);
     }
 
-    /// Allocating batched forward pass.
+    /// Allocating batched forward pass on the pooled default lanes.
     pub fn eval_batch(&mut self, us: &[f64], batch: usize) -> Vec<f64> {
         let mut y = vec![0.0; batch * self.d_out()];
-        self.eval_batch_into(us, batch, &mut y);
+        let mut lanes = self.take_default_lanes(batch);
+        self.eval_batch_into(us, batch, &mut y, &mut lanes[..batch]);
+        self.put_default_lanes(lanes);
         y
     }
 
@@ -318,16 +364,20 @@ impl AnalogMlp {
     /// per-shard tile column-group reads ([`VmmEngine::vmm_shard_into`])
     /// executed in ascending shard order, with the peripheral stages
     /// applied per shard slice. `plans` carries one [`ShardPlan`] per
-    /// layer. Because the per-element accumulation order and the
-    /// fast-noise draw order both match the monolithic read, the result is
-    /// bit-identical to [`AnalogMlp::eval_into`] — noise off *and* in
-    /// [`NoiseMode::Fast`] — while exercising the same column grouping a
-    /// physically tiled deployment executes.
+    /// layer. Because the per-element accumulation order matches the
+    /// monolithic read and noise draws are lane-indexed by full-layer
+    /// column, the result is bit-identical to [`AnalogMlp::eval_into`]
+    /// with the same lane — in *every* noise mode — while exercising the
+    /// same column grouping a physically tiled deployment executes. The
+    /// lane advances once per layer by the full-read draw count
+    /// ([`VmmEngine::draws_per_read`]), keeping it in lockstep with the
+    /// monolithic path.
     pub fn eval_sharded_into(
         &mut self,
         u: &[f64],
         plans: &[ShardPlan],
         out: &mut [f64],
+        lane: &mut NoiseLane,
     ) {
         let n_layers = self.engines.len();
         assert_eq!(
@@ -359,11 +409,7 @@ impl AnalogMlp {
                 let r = plan.range(s);
                 let seg = &mut outp[r.clone()];
                 self.engines[l].vmm_shard_into(
-                    &inp,
-                    r.start,
-                    r.end,
-                    seg,
-                    &mut self.rng,
+                    &inp, r.start, r.end, seg, lane,
                 );
                 self.tia.convert_slice(seg);
                 if !is_last {
@@ -371,6 +417,7 @@ impl AnalogMlp {
                 }
                 self.clamp.apply_slice(seg);
             }
+            lane.advance(self.engines[l].draws_per_read());
             self.scratch_in[l] = inp;
             self.scratch_out[l] = outp;
         }
@@ -381,14 +428,16 @@ impl AnalogMlp {
     /// per-shard tile column-group reads
     /// ([`VmmEngine::vmm_shard_batch_into`]), each shard's stacked output
     /// staged contiguously and scattered into the full layer buffer. With
-    /// read noise off the result is bit-identical, per trajectory, to
-    /// [`AnalogMlp::eval_batch_into`].
+    /// per-trajectory noise lanes the result is bit-identical, per
+    /// trajectory, to [`AnalogMlp::eval_batch_into`] — in every noise
+    /// mode.
     pub fn eval_sharded_batch_into(
         &mut self,
         us: &[f64],
         batch: usize,
         plans: &[ShardPlan],
         out: &mut [f64],
+        lanes: &mut [NoiseLane],
     ) {
         let n_layers = self.engines.len();
         let d_in = self.d_in();
@@ -408,6 +457,11 @@ impl AnalogMlp {
             out.len(),
             batch * self.d_out(),
             "sharded eval_batch: out length != batch * d_out"
+        );
+        assert_eq!(
+            lanes.len(),
+            batch,
+            "sharded eval_batch: one noise lane per trajectory"
         );
         for l in 0..n_layers {
             let rows = self.engines[l].rows();
@@ -444,7 +498,7 @@ impl AnalogMlp {
                     r.start,
                     r.end,
                     &mut self.bshard,
-                    &mut self.rng,
+                    lanes,
                 );
                 self.tia.convert_slice(&mut self.bshard);
                 if !is_last {
@@ -455,6 +509,10 @@ impl AnalogMlp {
                     bout[b * cols + r.start..b * cols + r.end]
                         .copy_from_slice(&self.bshard[b * w..(b + 1) * w]);
                 }
+            }
+            let n_draws = self.engines[l].draws_per_read();
+            for lane in lanes.iter_mut() {
+                lane.advance(n_draws);
             }
             self.bscratch_in[l] = bin;
             self.bscratch_out[l] = bout;
@@ -560,9 +618,9 @@ impl AnalogNeuralOde {
     /// as per-shard tile column-group reads sharing the step's assembled
     /// input, and the integrators partition into per-shard banks along the
     /// state plan. The shard count is clamped to the narrowest layer.
-    /// Output stays bit-identical to the monolithic solver (noise off and
-    /// fast-noise, see [`AnalogMlp::eval_sharded_into`]); the batched path
-    /// is bit-identical with noise off.
+    /// Output stays bit-identical to the monolithic solver in every noise
+    /// mode (lane-indexed draws, see [`AnalogMlp::eval_sharded_into`]),
+    /// serial and batched.
     pub fn with_shards(mut self, n_shards: usize) -> Self {
         let spec = ShardSpec::for_mlp(&self.mlp, n_shards);
         assert_eq!(
@@ -597,14 +655,17 @@ impl AnalogNeuralOde {
     /// samples (the first sample is h0 itself), appended to `out` (reset
     /// to row width `d_state`). `drive(t, x)` writes the external stimulus
     /// into the `d_drive`-long slice `x` (a no-op closure for autonomous
-    /// systems). Allocation-free with a warm `out`: the stimulus and
-    /// input-vector buffers are owned scratch.
+    /// systems). `lane` is the trajectory's noise stream: the same lane
+    /// state replays the rollout bit for bit, and the batched/sharded
+    /// paths consume identical draws. Allocation-free with a warm `out`:
+    /// the stimulus and input-vector buffers are owned scratch.
     pub fn solve_into(
         &mut self,
         h0: &[f64],
         drive: &mut dyn FnMut(f64, &mut [f64]),
         dt_out: f64,
         n_points: usize,
+        lane: &mut NoiseLane,
         out: &mut Trajectory,
     ) {
         self.set_initial(h0);
@@ -640,8 +701,11 @@ impl AnalogNeuralOde {
                         &self.u,
                         &spec.layers,
                         &mut self.dh,
+                        lane,
                     ),
-                    None => self.mlp.eval_into(&self.u, &mut self.dh),
+                    None => {
+                        self.mlp.eval_into(&self.u, &mut self.dh, lane)
+                    }
                 }
                 for (integ, &d) in
                     self.integrators.iter_mut().zip(self.dh.iter())
@@ -657,7 +721,9 @@ impl AnalogNeuralOde {
         }
     }
 
-    /// Allocating convenience wrapper around [`AnalogNeuralOde::solve_into`].
+    /// Allocating convenience wrapper around
+    /// [`AnalogNeuralOde::solve_into`] on the MLP's pooled default lane
+    /// (trajectory slot 0; request-path callers pass explicit lanes).
     pub fn solve(
         &mut self,
         h0: &[f64],
@@ -666,7 +732,9 @@ impl AnalogNeuralOde {
         n_points: usize,
     ) -> Trajectory {
         let mut out = Trajectory::new(self.integrators.len());
-        self.solve_into(h0, drive, dt_out, n_points, &mut out);
+        let mut lanes = self.mlp.take_default_lanes(1);
+        self.solve_into(h0, drive, dt_out, n_points, &mut lanes[0], &mut out);
+        self.mlp.put_default_lanes(lanes);
         out
     }
 
@@ -681,12 +749,16 @@ impl AnalogNeuralOde {
     /// banks — the physical picture of a crossbar serving B concurrent
     /// twins, and the core amortisation of the batched execution engine.
     /// `drive(b, t, x)` writes trajectory `b`'s stimulus (`d_drive`
-    /// values; `x` is empty for autonomous systems). The integrator banks
-    /// are clones of this solver's integrators held in owned scratch, so
-    /// circuit parameters (tau, leak, rails) match the serial path exactly
-    /// and a warm solver performs zero heap allocations: with read noise
-    /// off, each trajectory reproduces [`AnalogNeuralOde::solve`]
-    /// bit-for-bit. The serial integrator state is left untouched.
+    /// values; `x` is empty for autonomous systems). `lanes` carries one
+    /// noise lane per trajectory: each trajectory's draws are indexed, so
+    /// with the same lane state trajectory `b` reproduces
+    /// [`AnalogNeuralOde::solve_into`] bit-for-bit — noise on or off,
+    /// whatever the batch composition. The integrator banks are clones of
+    /// this solver's integrators held in owned scratch, so circuit
+    /// parameters (tau, leak, rails) match the serial path exactly and a
+    /// warm solver performs zero heap allocations. The serial integrator
+    /// state is left untouched.
+    #[allow(clippy::too_many_arguments)]
     pub fn solve_batch_into(
         &mut self,
         h0s: &[f64],
@@ -694,6 +766,7 @@ impl AnalogNeuralOde {
         drive: &mut dyn FnMut(usize, f64, &mut [f64]),
         dt_out: f64,
         n_points: usize,
+        lanes: &mut [NoiseLane],
         out: &mut Trajectory,
     ) {
         let d_state = self.integrators.len();
@@ -705,6 +778,11 @@ impl AnalogNeuralOde {
             h0s.len(),
             batch,
             d_state
+        );
+        assert_eq!(
+            lanes.len(),
+            batch,
+            "solve_batch: one noise lane per trajectory"
         );
         // Per-trajectory integrator banks, cloned (into reused scratch) so
         // circuit parameters — and therefore the update rule — match the
@@ -753,11 +831,13 @@ impl AnalogNeuralOde {
                         batch,
                         &spec.layers,
                         &mut self.dhs,
+                        lanes,
                     ),
                     None => self.mlp.eval_batch_into(
                         &self.us,
                         batch,
                         &mut self.dhs,
+                        lanes,
                     ),
                 }
                 for (integ, &d) in self.bank.iter_mut().zip(self.dhs.iter())
@@ -774,7 +854,8 @@ impl AnalogNeuralOde {
     }
 
     /// Allocating convenience wrapper around
-    /// [`AnalogNeuralOde::solve_batch_into`].
+    /// [`AnalogNeuralOde::solve_batch_into`] on the MLP's pooled default
+    /// lanes (trajectory slot `b` for batch row `b`).
     pub fn solve_batch(
         &mut self,
         h0s: &[f64],
@@ -784,7 +865,17 @@ impl AnalogNeuralOde {
         n_points: usize,
     ) -> Trajectory {
         let mut out = Trajectory::new(batch * self.integrators.len());
-        self.solve_batch_into(h0s, batch, drive, dt_out, n_points, &mut out);
+        let mut lanes = self.mlp.take_default_lanes(batch);
+        self.solve_batch_into(
+            h0s,
+            batch,
+            drive,
+            dt_out,
+            n_points,
+            &mut lanes[..batch],
+            &mut out,
+        );
+        self.mlp.put_default_lanes(lanes);
         out
     }
 }
@@ -1100,6 +1191,119 @@ mod tests {
         let a = mono.solve(&h0, &mut |_t, _x: &mut [f64]| {}, 0.1, 4);
         let b = sharded.solve(&h0, &mut |_t, _x: &mut [f64]| {}, 0.1, 4);
         assert_eq!(a, b, "fast-noise shard stream diverged");
+    }
+
+    fn noisy_deploy(d: usize, seed: u64) -> AnalogMlp {
+        let cfg = DeviceConfig {
+            fault_rate: 0.0,
+            pulse_sigma: 0.0,
+            ..Default::default()
+        };
+        AnalogMlp::deploy(
+            &wide_decay_layers(d),
+            &cfg,
+            AnalogNoise { read: 0.05, prog: 0.0 },
+            seed,
+        )
+    }
+
+    #[test]
+    fn noisy_solve_replays_bit_identical_with_same_lane() {
+        let d = 34;
+        let mut ode = AnalogNeuralOde::new(noisy_deploy(d, 17), d, 0.01);
+        let h0 = wide_h0(d);
+        let mut a = Trajectory::new(d);
+        let mut b = Trajectory::new(d);
+        let mut lane = NoiseLane::from_seed(123);
+        ode.solve_into(&h0, &mut |_t, _x: &mut [f64]| {}, 0.1, 5, &mut lane, &mut a);
+        let mut lane2 = NoiseLane::from_seed(123);
+        ode.solve_into(&h0, &mut |_t, _x: &mut [f64]| {}, 0.1, 5, &mut lane2, &mut b);
+        assert_eq!(a, b, "same seed must replay the noisy rollout exactly");
+        assert_eq!(lane, lane2, "replay left a different lane cursor");
+        assert!(lane.cursor() > 0, "noisy rollout consumed no draws");
+    }
+
+    #[test]
+    fn noisy_solve_batch_bit_identical_to_serial_lanes() {
+        // The tentpole guarantee at the solver level: with one lane per
+        // trajectory, the batched noisy rollout reproduces each serial
+        // noisy rollout exactly, whatever the batch composition.
+        let d = 34;
+        let mut ode = AnalogNeuralOde::new(noisy_deploy(d, 19), d, 0.01);
+        let batch = 3;
+        let seeds = [7u64, 8, 9];
+        let h0s: Vec<f64> = (0..batch * d)
+            .map(|k| ((k as f64) * 0.23).cos() * 0.6)
+            .collect();
+        let mut lanes: Vec<NoiseLane> =
+            seeds.iter().map(|&s| NoiseLane::from_seed(s)).collect();
+        let mut batched = Trajectory::new(batch * d);
+        ode.solve_batch_into(
+            &h0s,
+            batch,
+            &mut |_b, _t, _x| {},
+            0.1,
+            4,
+            &mut lanes,
+            &mut batched,
+        );
+        for (b, &s) in seeds.iter().enumerate() {
+            let mut lane = NoiseLane::from_seed(s);
+            let mut serial = Trajectory::new(d);
+            ode.solve_into(
+                &h0s[b * d..(b + 1) * d],
+                &mut |_t, _x: &mut [f64]| {},
+                0.1,
+                4,
+                &mut lane,
+                &mut serial,
+            );
+            for (row, srow) in batched.iter().zip(&serial) {
+                assert_eq!(
+                    &row[b * d..(b + 1) * d],
+                    srow,
+                    "noisy trajectory {b} diverged in the batch"
+                );
+            }
+            assert_eq!(lane, lanes[b], "trajectory {b} lane cursor");
+        }
+    }
+
+    #[test]
+    fn noisy_sharded_solve_bit_identical_to_monolithic() {
+        // Same deployment, same lane: the serial sharded kernel consumes
+        // identical indexed draws — noisy output matches bit for bit,
+        // serial and batched.
+        let d = 34;
+        let mut mono = AnalogNeuralOde::new(noisy_deploy(d, 23), d, 0.01);
+        let mut sharded =
+            AnalogNeuralOde::new(noisy_deploy(d, 23), d, 0.01).with_shards(2);
+        let h0 = wide_h0(d);
+        let mut a = Trajectory::new(d);
+        let mut b = Trajectory::new(d);
+        let mut la = NoiseLane::from_seed(31);
+        let mut lb = NoiseLane::from_seed(31);
+        mono.solve_into(&h0, &mut |_t, _x: &mut [f64]| {}, 0.1, 4, &mut la, &mut a);
+        sharded.solve_into(&h0, &mut |_t, _x: &mut [f64]| {}, 0.1, 4, &mut lb, &mut b);
+        assert_eq!(a, b, "noisy sharded rollout diverged from monolithic");
+        assert_eq!(la, lb, "sharded lane fell out of lockstep");
+
+        let batch = 2;
+        let h0s: Vec<f64> =
+            (0..batch * d).map(|k| ((k as f64) * 0.11).sin() * 0.4).collect();
+        let mut lanes_a =
+            vec![NoiseLane::from_seed(41), NoiseLane::from_seed(42)];
+        let mut lanes_b = lanes_a.clone();
+        let mut ba = Trajectory::new(batch * d);
+        let mut bb = Trajectory::new(batch * d);
+        mono.solve_batch_into(
+            &h0s, batch, &mut |_b, _t, _x| {}, 0.1, 3, &mut lanes_a, &mut ba,
+        );
+        sharded.solve_batch_into(
+            &h0s, batch, &mut |_b, _t, _x| {}, 0.1, 3, &mut lanes_b, &mut bb,
+        );
+        assert_eq!(ba, bb, "noisy sharded batch diverged from monolithic");
+        assert_eq!(lanes_a, lanes_b);
     }
 
     #[test]

@@ -33,11 +33,17 @@ impl Default for BatchPolicy {
 pub struct Batcher {
     policy: BatchPolicy,
     pending: BTreeMap<String, Vec<Job>>,
+    /// Scratch for matured route keys: [`Batcher::flush`] runs on every
+    /// tick of the hot dispatch loop, so it must not snapshot the whole
+    /// key set per call — only matured routes are staged here (their key
+    /// strings then move into the emitted batches), and the vector's
+    /// capacity is reused across ticks.
+    mature: Vec<String>,
 }
 
 impl Batcher {
     pub fn new(policy: BatchPolicy) -> Self {
-        Self { policy, pending: BTreeMap::new() }
+        Self { policy, pending: BTreeMap::new(), mature: Vec::new() }
     }
 
     /// Add a job; returns a full batch immediately if max_batch reached.
@@ -55,23 +61,32 @@ impl Batcher {
 
     /// Flush every route whose oldest job exceeded the window (or all with
     /// `force`). Returns the matured batches.
+    ///
+    /// The common tick — nothing matured — touches no key strings at all:
+    /// matured keys are cloned once into the reusable `mature` scratch
+    /// (each clone then *moves* into its emitted `Batch`, which needs an
+    /// owned route anyway), instead of snapshotting every pending key into
+    /// a fresh `Vec<String>` per tick.
     pub fn flush(&mut self, now: Instant, force: bool) -> Vec<Batch> {
         let mut out = Vec::new();
-        let routes: Vec<String> = self.pending.keys().cloned().collect();
-        for route in routes {
-            let mature = force
-                || self.pending[&route]
-                    .first()
-                    .is_some_and(|j| {
+        let mut mature = std::mem::take(&mut self.mature);
+        debug_assert!(mature.is_empty());
+        for (route, q) in &self.pending {
+            let is_mature = !q.is_empty()
+                && (force
+                    || q.first().is_some_and(|j| {
                         now.duration_since(j.enqueued) >= self.policy.window
-                    });
-            if mature {
-                let jobs = self.pending.remove(&route).unwrap_or_default();
-                if !jobs.is_empty() {
-                    out.push(Batch { route, jobs });
-                }
+                    }));
+            if is_mature {
+                mature.push(route.clone());
             }
         }
+        for route in mature.drain(..) {
+            if let Some(jobs) = self.pending.remove(&route) {
+                out.push(Batch { route, jobs });
+            }
+        }
+        self.mature = mature;
         out
     }
 
@@ -202,6 +217,25 @@ mod tests {
         let batches = b.flush(later, false);
         assert_eq!(batches.len(), 1);
         assert_eq!(b.pending_jobs(), 0);
+    }
+
+    #[test]
+    fn flush_scratch_is_reused_across_ticks() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 100,
+            window: Duration::from_millis(1),
+        });
+        let (j, _r) = job("a");
+        b.push(j);
+        let later = Instant::now() + Duration::from_millis(5);
+        assert_eq!(b.flush(later, false).len(), 1);
+        let cap = b.mature.capacity();
+        assert!(cap >= 1);
+        // Idle ticks emit nothing and keep the staged capacity.
+        for _ in 0..3 {
+            assert!(b.flush(Instant::now(), false).is_empty());
+        }
+        assert_eq!(b.mature.capacity(), cap);
     }
 
     #[test]

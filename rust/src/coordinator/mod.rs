@@ -34,6 +34,11 @@ use std::time::Instant;
 use crate::twin::{TwinRequest, TwinResponse};
 
 /// A unit of work flowing through the coordinator.
+///
+/// `req.seed` is always `Some` past the router: requests without an
+/// explicit noise seed are stamped with one derived from the job id, so
+/// every admitted job's noisy rollout is replayable (the twin echoes the
+/// seed in `TwinResponse::seed`, and workers record it in telemetry).
 pub struct Job {
     pub id: u64,
     /// Route key, e.g. "lorenz96/analog".

@@ -16,6 +16,14 @@ use crate::coordinator::telemetry::Telemetry;
 use crate::coordinator::{Job, JobResult};
 use crate::twin::registry::TwinRegistry;
 use crate::twin::TwinRequest;
+use crate::util::rng::derive_stream_seed;
+
+/// Root of the router's auto-derived noise seeds. A fixed constant on
+/// purpose: seeds exist for *replay*, not secrecy, and a deterministic
+/// family (keyed by job id) means a serving log alone identifies every
+/// rollout's noise stream. Requests that pin their own seed pass through
+/// untouched.
+const ROUTER_SEED_ROOT: u64 = 0xc0de_5eed_0a11_0001;
 
 /// A submitted request: await the result on `rx`; dropping `permit`
 /// releases the admission slot (hold it until the reply is consumed).
@@ -63,6 +71,9 @@ impl Router {
     }
 
     /// Submit a request; fails fast on unknown routes or saturation.
+    /// Requests without an explicit noise seed are stamped with one
+    /// derived from the job id, so every admitted job is replayable (the
+    /// twin echoes the seed in its response).
     pub fn submit(
         &self,
         route: &str,
@@ -83,6 +94,10 @@ impl Router {
             )
         })?;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let mut req = req;
+        if req.seed.is_none() {
+            req.seed = Some(derive_stream_seed(ROUTER_SEED_ROOT, id));
+        }
         let (reply, rx) = mpsc::channel();
         self.telemetry.submitted.fetch_add(1, Ordering::Relaxed);
         self.jobs_tx
@@ -121,10 +136,11 @@ mod tests {
         fn default_h0(&self) -> Vec<f64> {
             vec![]
         }
-        fn run(&mut self, _r: &TwinRequest) -> Result<TwinResponse> {
+        fn run(&mut self, r: &TwinRequest) -> Result<TwinResponse> {
             Ok(TwinResponse {
                 trajectory: crate::util::tensor::Trajectory::new(1),
                 backend: "null",
+                seed: r.seed.unwrap_or(0),
             })
         }
     }
@@ -151,6 +167,27 @@ mod tests {
         let job = rx.recv().unwrap();
         assert_eq!(job.id, s.id);
         assert_eq!(job.route, "null");
+    }
+
+    #[test]
+    fn submit_stamps_replay_seed_and_keeps_explicit_ones() {
+        let (router, rx) = setup(4);
+        router.submit("null", TwinRequest::autonomous(vec![], 1)).unwrap();
+        let auto = rx.recv().unwrap();
+        let stamped = auto.req.seed.expect("auto seed stamped");
+        // Deterministic per job id: resubmitting derives the same family.
+        assert_eq!(
+            stamped,
+            derive_stream_seed(ROUTER_SEED_ROOT, auto.id)
+        );
+        router
+            .submit(
+                "null",
+                TwinRequest::autonomous(vec![], 1).with_seed(77),
+            )
+            .unwrap();
+        let pinned = rx.recv().unwrap();
+        assert_eq!(pinned.req.seed, Some(77), "explicit seed overwritten");
     }
 
     #[test]

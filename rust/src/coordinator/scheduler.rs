@@ -183,10 +183,13 @@ fn spawn_worker(
                     batch.jobs.into_iter().zip(results.drain(..)).zip(waits)
                 {
                     match &result {
-                        Ok(_) => {
+                        Ok(resp) => {
                             telemetry
                                 .completed
                                 .fetch_add(1, Ordering::Relaxed);
+                            // Replay handle: the noise seed this rollout
+                            // actually used (run-twin --seed <s>).
+                            telemetry.record_seed(job.id, resp.seed);
                         }
                         Err(_) => {
                             telemetry.failed.fetch_add(1, Ordering::Relaxed);
@@ -235,6 +238,7 @@ mod tests {
             Ok(TwinResponse {
                 trajectory: Trajectory::repeat_row(&req.h0, req.n_points),
                 backend: "echo",
+                seed: req.seed.unwrap_or(0),
             })
         }
     }
@@ -328,6 +332,7 @@ mod tests {
                         req.n_points,
                     ),
                     backend: "probe",
+                    seed: req.seed.unwrap_or(0),
                 })
             }
             fn run_batch(

@@ -139,6 +139,7 @@ mod tests {
                     req.n_points,
                 ),
                 backend: "counter",
+                seed: req.seed.unwrap_or(0),
             })
         }
     }
@@ -243,6 +244,7 @@ mod tests {
                         req.n_points,
                     ),
                     backend: "probe",
+                    seed: req.seed.unwrap_or(0),
                 })
             }
             fn run_batch(
@@ -270,6 +272,31 @@ mod tests {
         let n = calls.load(std::sync::atomic::Ordering::Relaxed);
         assert!((1..=3).contains(&n), "run_batch calls: {n}");
         assert_eq!(coord.stats().completed, 3);
+    }
+
+    #[test]
+    fn seeds_are_stamped_echoed_and_recorded() {
+        let mut reg = TwinRegistry::new();
+        reg.register("counter", || Box::new(CounterTwin { calls: 0 }));
+        let coord = Coordinator::start(reg, &cfg());
+        // Auto-stamped seed comes back non-zero and lands in telemetry.
+        let resp = coord
+            .call("counter", TwinRequest::autonomous(vec![], 2))
+            .unwrap();
+        assert_ne!(resp.seed, 0, "router did not stamp a seed");
+        // Explicit seed round-trips untouched.
+        let pinned = coord
+            .call(
+                "counter",
+                TwinRequest::autonomous(vec![], 2).with_seed(4242),
+            )
+            .unwrap();
+        assert_eq!(pinned.seed, 4242);
+        let seeds = coord.stats().recent_seeds;
+        assert!(
+            seeds.iter().any(|&(_, s)| s == 4242),
+            "seed not recorded in telemetry: {seeds:?}"
+        );
     }
 
     #[test]

@@ -8,6 +8,9 @@ use crate::util::stats;
 /// Maximum retained latency samples (reservoir, newest-wins ring).
 const RESERVOIR: usize = 4096;
 
+/// Maximum retained (job id, noise seed) replay pairs.
+const SEED_RING: usize = 64;
+
 /// Shared serving metrics.
 #[derive(Debug, Default)]
 pub struct Telemetry {
@@ -22,13 +25,48 @@ pub struct Telemetry {
     pub shard_rollouts: AtomicU64,
     /// Total shard-worker circuit steps across all sharded rollouts.
     pub shard_steps: AtomicU64,
-    latencies_us: Mutex<LatencyRing>,
+    latencies_us: Mutex<Ring<f64, RESERVOIR>>,
+    /// Recent (job id, noise seed) pairs of completed jobs — enough for
+    /// the serve CLI to print replay commands (`run-twin --seed <s>`).
+    seeds: Mutex<Ring<(u64, u64), SEED_RING>>,
 }
 
-#[derive(Debug, Default)]
-struct LatencyRing {
-    buf: Vec<f64>,
+/// Bounded newest-wins ring: fills to `N`, then overwrites oldest-first.
+/// Backs both the latency reservoir (order-insensitive stats over `buf`)
+/// and the seed replay ring (chronological snapshots).
+#[derive(Debug)]
+struct Ring<T, const N: usize> {
+    buf: Vec<T>,
     next: usize,
+}
+
+impl<T, const N: usize> Default for Ring<T, N> {
+    fn default() -> Self {
+        Self { buf: Vec::new(), next: 0 }
+    }
+}
+
+impl<T: Copy, const N: usize> Ring<T, N> {
+    fn push(&mut self, x: T) {
+        if self.buf.len() < N {
+            self.buf.push(x);
+        } else {
+            self.buf[self.next] = x;
+        }
+        self.next = (self.next + 1) % N;
+    }
+
+    /// Contents oldest-first (rotates a wrapped ring).
+    fn chronological(&self) -> Vec<T> {
+        let mut v = Vec::with_capacity(self.buf.len());
+        if self.buf.len() == N {
+            v.extend_from_slice(&self.buf[self.next..]);
+            v.extend_from_slice(&self.buf[..self.next]);
+        } else {
+            v.extend_from_slice(&self.buf);
+        }
+        v
+    }
 }
 
 impl Telemetry {
@@ -38,14 +76,13 @@ impl Telemetry {
 
     pub fn record_latency(&self, wait_s: f64, exec_s: f64) {
         let us = (wait_s + exec_s) * 1e6;
-        let mut ring = self.latencies_us.lock().expect("telemetry lock");
-        if ring.buf.len() < RESERVOIR {
-            ring.buf.push(us);
-        } else {
-            let slot = ring.next;
-            ring.buf[slot] = us;
-        }
-        ring.next = (ring.next + 1) % RESERVOIR;
+        self.latencies_us.lock().expect("telemetry lock").push(us);
+    }
+
+    /// Record a completed job's noise seed (newest-wins ring) so replay
+    /// commands can be surfaced without holding every response.
+    pub fn record_seed(&self, job_id: u64, seed: u64) {
+        self.seeds.lock().expect("telemetry lock").push((job_id, seed));
     }
 
     /// Point-in-time snapshot.
@@ -78,6 +115,11 @@ impl Telemetry {
             latency_mean_us: mean,
             shard_rollouts: self.shard_rollouts.load(Ordering::Relaxed),
             shard_steps: self.shard_steps.load(Ordering::Relaxed),
+            recent_seeds: self
+                .seeds
+                .lock()
+                .expect("telemetry lock")
+                .chronological(),
         }
     }
 }
@@ -98,6 +140,10 @@ pub struct TelemetrySnapshot {
     pub shard_rollouts: u64,
     /// Shard-worker circuit steps across those rollouts.
     pub shard_steps: u64,
+    /// Recent (job id, noise seed) pairs — replay handles for the last
+    /// completed jobs (bounded ring, oldest first; the tail is the most
+    /// recent).
+    pub recent_seeds: Vec<(u64, u64)>,
 }
 
 impl std::fmt::Display for TelemetrySnapshot {
@@ -157,5 +203,23 @@ mod tests {
         t.batches.fetch_add(2, Ordering::Relaxed);
         t.batched_jobs.fetch_add(10, Ordering::Relaxed);
         assert!((t.snapshot().mean_batch - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn seed_ring_records_and_stays_bounded() {
+        let t = Telemetry::new();
+        t.record_seed(1, 111);
+        t.record_seed(2, 222);
+        let s = t.snapshot();
+        assert!(s.recent_seeds.contains(&(1, 111)));
+        assert!(s.recent_seeds.contains(&(2, 222)));
+        for k in 0..(SEED_RING as u64 * 2) {
+            t.record_seed(k, k);
+        }
+        let seeds = t.snapshot().recent_seeds;
+        assert_eq!(seeds.len(), SEED_RING);
+        // Chronological after wraparound: the tail is the newest entry.
+        assert_eq!(seeds.last(), Some(&(SEED_RING as u64 * 2 - 1, SEED_RING as u64 * 2 - 1)));
+        assert!(seeds.windows(2).all(|w| w[0].0 < w[1].0));
     }
 }

@@ -13,11 +13,33 @@
 //! Gaussian with summed variances) — at two gemv's plus one normal per
 //! output. `NoiseMode::PerCell` keeps the physical path for validation.
 //!
+//! ## Noise lanes and draw indexing
+//!
+//! Every kernel takes caller-supplied per-trajectory [`NoiseLane`]s instead
+//! of a shared sequential RNG, and addresses draws by **explicit index**:
+//!
+//! * `Fast`: output column `j` draws at lane index
+//!   `cursor + col_offset + j`; one read consumes `full_cols` draws.
+//! * `PerCell`: cell `(r, c)` draws at
+//!   `cursor + r * full_cols + col_offset + c`; one read consumes
+//!   `rows * full_cols` draws.
+//!
+//! `col_offset`/`full_cols` are the engine's position in the full logical
+//! layer (0 / `cols` for a monolithic engine; the slice coordinates for a
+//! [`VmmEngine::column_shard`]), so a shard engine reads *the same* lane
+//! values the monolithic engine would produce for its columns, and a shard
+//! worker that advances by the full-layer draw count stays in lockstep.
+//! The shard kernels (`vmm_shard_*`) never advance — the layer-level
+//! caller advances once per assembled read
+//! ([`VmmEngine::draws_per_read`]). This is what makes noisy reads
+//! bit-identical across serial, batched, and sharded execution; see the
+//! noise-determinism invariants in `lib.rs`.
+//!
 //! [`DifferentialArray::vmm_physical`]: crate::crossbar::differential::DifferentialArray::vmm_physical
 
 use crate::crossbar::differential::DifferentialArray;
 use crate::device::noise::NoiseSource;
-use crate::util::rng::Pcg64;
+use crate::util::rng::NoiseLane;
 use crate::util::tensor::Mat;
 
 /// How read noise is realised on the fast path.
@@ -42,6 +64,12 @@ pub struct VmmEngine {
     var_kernel: Mat,
     pub read_noise: NoiseSource,
     pub mode: NoiseMode,
+    /// First logical layer column this engine produces (0 unless the
+    /// engine is a [`VmmEngine::column_shard`] slice): lane draws index
+    /// into the *full* layer's column space.
+    col_offset: usize,
+    /// Full logical layer width the draw-index space spans.
+    full_cols: usize,
     /// Scratch for v^2 (hot path, no allocation).
     v2: Vec<f64>,
     /// Batched scratch: stacked v^2 rows (reserved once per max batch).
@@ -76,11 +104,14 @@ impl VmmEngine {
             a * a + b * b
         });
         let v2 = vec![0.0; gp.rows];
+        let full_cols = w_eff.cols;
         Self {
             w_eff,
             var_kernel,
             read_noise,
             mode,
+            col_offset: 0,
+            full_cols,
             v2,
             v2b: Vec::new(),
             varb: Vec::new(),
@@ -97,11 +128,14 @@ impl VmmEngine {
         let w_eff = tiled.effective_weights();
         let var_kernel = tiled.variance_kernel();
         let v2 = vec![0.0; w_eff.rows];
+        let full_cols = w_eff.cols;
         Self {
             w_eff,
             var_kernel,
             read_noise,
             mode,
+            col_offset: 0,
+            full_cols,
             v2,
             v2b: Vec::new(),
             varb: Vec::new(),
@@ -114,11 +148,14 @@ impl VmmEngine {
     pub fn ideal(w: Mat) -> Self {
         let var_kernel = w.map(|x| x * x);
         let v2 = vec![0.0; w.rows];
+        let full_cols = w.cols;
         Self {
             w_eff: w,
             var_kernel,
             read_noise: NoiseSource::off(),
             mode: NoiseMode::Off,
+            col_offset: 0,
+            full_cols,
             v2,
             v2b: Vec::new(),
             varb: Vec::new(),
@@ -159,8 +196,23 @@ impl VmmEngine {
         &self.w_eff
     }
 
-    /// y = v^T W with the configured read-noise model. Allocation-free.
-    pub fn vmm_into(&mut self, v: &[f64], y: &mut [f64], rng: &mut Pcg64) {
+    /// Lane draws one full-width read of this engine's logical layer
+    /// consumes — what layer-level callers advance by after assembling a
+    /// read from shard pieces (the non-shard kernels advance internally).
+    /// Identical across a parent engine and its column shards, so every
+    /// execution form moves the cursor in lockstep.
+    pub fn draws_per_read(&self) -> u64 {
+        match self.mode {
+            NoiseMode::Off => 0,
+            NoiseMode::Fast if self.read_noise.is_off() => 0,
+            NoiseMode::Fast => self.full_cols as u64,
+            NoiseMode::PerCell => (self.w_eff.rows * self.full_cols) as u64,
+        }
+    }
+
+    /// y = v^T W with the configured read-noise model, drawing from (and
+    /// advancing) the trajectory's noise lane. Allocation-free.
+    pub fn vmm_into(&mut self, v: &[f64], y: &mut [f64], lane: &mut NoiseLane) {
         self.w_eff.vecmat_into(v, y);
         match self.mode {
             NoiseMode::Off => {}
@@ -171,25 +223,33 @@ impl VmmEngine {
                 for (dst, &src) in self.v2.iter_mut().zip(v) {
                     *dst = src * src;
                 }
-                // var_j = sigma^2 * (v^2)^T K_j ; add sqrt(var)*eps.
+                // var_j = sigma^2 * (v^2)^T K_j ; add sqrt(var)*eps_j with
+                // eps_j drawn at the column's full-layer lane index.
                 let sigma = self.read_noise.sigma;
+                let c0 = self.col_offset as u64;
                 for (j, yj) in y.iter_mut().enumerate() {
                     let mut var = 0.0;
                     for r in 0..self.var_kernel.rows {
                         var += self.v2[r] * self.var_kernel.at(r, j);
                     }
-                    *yj += sigma * var.sqrt() * rng.normal();
+                    *yj += sigma * var.sqrt() * lane.normal_at(c0 + j as u64);
                 }
+                lane.advance(self.full_cols as u64);
             }
             NoiseMode::PerCell => {
-                // Reference path: re-draw every cell.
+                // Reference path: re-draw every cell, indexed by its
+                // (row, full-layer column) position so skipped zero-input
+                // rows never shift other cells' draws.
                 let sigma = self.read_noise.sigma;
+                let fc = self.full_cols as u64;
+                let c0 = self.col_offset as u64;
                 y.fill(0.0);
                 for r in 0..self.w_eff.rows {
                     let vr = v[r];
                     if vr == 0.0 {
                         continue;
                     }
+                    let row_base = (r as u64).wrapping_mul(fc) + c0;
                     for c in 0..self.w_eff.cols {
                         // Split the logical weight back into rails using the
                         // variance kernel is not possible cell-wise; instead
@@ -197,17 +257,19 @@ impl VmmEngine {
                         // std: std_rc = sigma * sqrt(var_kernel_rc).
                         let w = self.w_eff.at(r, c);
                         let std = sigma * self.var_kernel.at(r, c).sqrt();
-                        y[c] += vr * (w + std * rng.normal());
+                        y[c] += vr
+                            * (w + std * lane.normal_at(row_base + c as u64));
                     }
                 }
+                lane.advance((self.w_eff.rows as u64).wrapping_mul(fc));
             }
         }
     }
 
     /// Allocating convenience wrapper.
-    pub fn vmm(&mut self, v: &[f64], rng: &mut Pcg64) -> Vec<f64> {
+    pub fn vmm(&mut self, v: &[f64], lane: &mut NoiseLane) -> Vec<f64> {
         let mut y = vec![0.0; self.cols()];
-        self.vmm_into(v, &mut y, rng);
+        self.vmm_into(v, &mut y, lane);
         y
     }
 
@@ -217,21 +279,18 @@ impl VmmEngine {
     ///
     /// Per output element the floating-point accumulation order over the
     /// shared dimension is identical to [`VmmEngine::vmm_into`]
-    /// ([`Mat::vecmat_cols_into`] preserves it), so with
-    /// [`NoiseMode::Off`] a state assembled from shard reads is
-    /// bit-identical to the unsharded kernel. In [`NoiseMode::Fast`] each
-    /// output still draws one moment-matched normal; when ascending shards
-    /// of one plan share a single RNG the draw sequence also matches the
-    /// monolithic read exactly (column-ascending), which the serial sharded
-    /// solver exploits. [`NoiseMode::PerCell`] re-draws per cell in
-    /// (row, shard-column) order — distribution-identical, stream-distinct.
+    /// ([`Mat::vecmat_cols_into`] preserves it), and the noise draws are
+    /// indexed by full-layer column, so the assembled sharded read is
+    /// bit-identical to the monolithic one in *every* noise mode. Shard
+    /// kernels never advance the lane — the caller advances once per
+    /// assembled layer read by [`VmmEngine::draws_per_read`].
     pub fn vmm_shard_into(
         &mut self,
         v: &[f64],
         c0: usize,
         c1: usize,
         y: &mut [f64],
-        rng: &mut Pcg64,
+        lane: &NoiseLane,
     ) {
         assert!(
             c0 <= c1 && c1 <= self.cols(),
@@ -249,26 +308,31 @@ impl VmmEngine {
                     *dst = src * src;
                 }
                 let sigma = self.read_noise.sigma;
+                let off = self.col_offset as u64;
                 for (j, yj) in (c0..c1).zip(y.iter_mut()) {
                     let mut var = 0.0;
                     for r in 0..self.var_kernel.rows {
                         var += self.v2[r] * self.var_kernel.at(r, j);
                     }
-                    *yj += sigma * var.sqrt() * rng.normal();
+                    *yj += sigma * var.sqrt() * lane.normal_at(off + j as u64);
                 }
             }
             NoiseMode::PerCell => {
                 let sigma = self.read_noise.sigma;
+                let fc = self.full_cols as u64;
+                let off = self.col_offset as u64;
                 y.fill(0.0);
                 for r in 0..self.w_eff.rows {
                     let vr = v[r];
                     if vr == 0.0 {
                         continue;
                     }
+                    let row_base = (r as u64).wrapping_mul(fc) + off;
                     for (c, yc) in (c0..c1).zip(y.iter_mut()) {
                         let w = self.w_eff.at(r, c);
                         let std = sigma * self.var_kernel.at(r, c).sqrt();
-                        *yc += vr * (w + std * rng.normal());
+                        *yc += vr
+                            * (w + std * lane.normal_at(row_base + c as u64));
                     }
                 }
             }
@@ -278,8 +342,10 @@ impl VmmEngine {
     /// Batched per-shard read: `ys[b] = vs[b]^T W[:, c0..c1]` for `batch`
     /// stacked full-width inputs (`ys: [batch * (c1-c0)]`). The multi-tile
     /// analogue of [`VmmEngine::vmm_batch_into`], restricted to one shard's
-    /// tile column-group; with [`NoiseMode::Off`] it is bit-identical to
-    /// the corresponding column slice of the monolithic batched read.
+    /// tile column-group; with per-trajectory lanes the output is
+    /// bit-identical to the corresponding column slice of the monolithic
+    /// batched read in every noise mode. Does not advance the lanes (see
+    /// [`VmmEngine::vmm_shard_into`]).
     pub fn vmm_shard_batch_into(
         &mut self,
         vs: &[f64],
@@ -287,7 +353,7 @@ impl VmmEngine {
         c0: usize,
         c1: usize,
         ys: &mut [f64],
-        rng: &mut Pcg64,
+        lanes: &[NoiseLane],
     ) {
         let rows = self.rows();
         let width = c1 - c0;
@@ -305,6 +371,11 @@ impl VmmEngine {
             ys.len(),
             batch * width,
             "vmm_shard_batch: ys length != batch * range width"
+        );
+        assert_eq!(
+            lanes.len(),
+            batch,
+            "vmm_shard_batch: one noise lane per trajectory"
         );
         match self.mode {
             NoiseMode::Off => {
@@ -329,17 +400,24 @@ impl VmmEngine {
                     &mut self.varb,
                 );
                 let sigma = self.read_noise.sigma;
-                for (yj, &var) in ys.iter_mut().zip(&self.varb) {
-                    *yj += sigma * var.sqrt() * rng.normal();
+                let off = self.col_offset as u64;
+                for (b, lane) in lanes.iter().enumerate() {
+                    let seg = &mut ys[b * width..(b + 1) * width];
+                    let var = &self.varb[b * width..(b + 1) * width];
+                    for ((j, yj), &vj) in
+                        (c0..c1).zip(seg.iter_mut()).zip(var)
+                    {
+                        *yj += sigma
+                            * vj.sqrt()
+                            * lane.normal_at(off + j as u64);
+                    }
                 }
             }
             NoiseMode::PerCell => {
                 for b in 0..batch {
-                    let (v, y) = (
-                        &vs[b * rows..(b + 1) * rows],
-                        &mut ys[b * width..(b + 1) * width],
-                    );
-                    self.vmm_shard_into(v, c0, c1, y, rng);
+                    let v = &vs[b * rows..(b + 1) * rows];
+                    let y = &mut ys[b * width..(b + 1) * width];
+                    self.vmm_shard_into(v, c0, c1, y, &lanes[b]);
                 }
             }
         }
@@ -347,11 +425,12 @@ impl VmmEngine {
 
     /// A standalone engine over one shard's tile column-group: the cached
     /// effective weights and variance kernel sliced to columns `c0..c1`,
-    /// with the same noise configuration. Because it copies the *deployed*
-    /// effective weights, a shard engine's noise-off reads are bit-identical
-    /// to the corresponding slice of this engine's reads — this is how the
-    /// parallel shard workers each get an engine they can drive without
-    /// sharing mutable state.
+    /// with the same noise configuration and the slice's position in the
+    /// full layer recorded (`col_offset`/`full_cols`), so the shard
+    /// engine's lane draws — and therefore its *noisy* reads — are
+    /// bit-identical to the corresponding slice of this engine's reads.
+    /// This is how the parallel shard workers each get an engine they can
+    /// drive without sharing mutable state.
     pub fn column_shard(&self, c0: usize, c1: usize) -> VmmEngine {
         assert!(
             c0 < c1 && c1 <= self.cols(),
@@ -368,6 +447,8 @@ impl VmmEngine {
             var_kernel,
             read_noise: self.read_noise.clone(),
             mode: self.mode,
+            col_offset: self.col_offset + c0,
+            full_cols: self.full_cols,
             v2: vec![0.0; rows],
             v2b: Vec::new(),
             varb: Vec::new(),
@@ -377,24 +458,23 @@ impl VmmEngine {
 
     /// Batched multi-vector VMM: `ys[b] = vs[b]^T W + noise` for `batch`
     /// row-major stacked input vectors (`vs: [batch * rows]`,
-    /// `ys: [batch * cols]`).
+    /// `ys: [batch * cols]`), with one noise lane per trajectory.
     ///
     /// This is the crossbar's multi-read amortisation: one GEMM over the
     /// cached effective weights (the matrix is traversed once per call, not
     /// once per trajectory), and in [`NoiseMode::Fast`] a second GEMM over
     /// the variance kernel replaces the per-output strided column walks of
-    /// the serial path — each trajectory still receives its own independent
-    /// moment-matched per-output noise draw, so per-row distributions are
-    /// identical to `batch` serial reads. [`NoiseMode::PerCell`] remains
-    /// the per-trajectory reference and falls back to [`VmmEngine::vmm_into`]
-    /// per row. With [`NoiseMode::Off`] the batched output is bit-identical
-    /// to `batch` serial calls.
+    /// the serial path. Each trajectory's noise draws come from *its own
+    /// lane at the same indices the serial read would use*, so the batched
+    /// output is bit-identical to `batch` serial [`VmmEngine::vmm_into`]
+    /// calls in every noise mode — regardless of batch size, composition
+    /// or ordering. Advances every lane by [`VmmEngine::draws_per_read`].
     pub fn vmm_batch_into(
         &mut self,
         vs: &[f64],
         batch: usize,
         ys: &mut [f64],
-        rng: &mut Pcg64,
+        lanes: &mut [NoiseLane],
     ) {
         let rows = self.rows();
         let cols = self.cols();
@@ -407,6 +487,11 @@ impl VmmEngine {
             ys.len(),
             batch * cols,
             "vmm_batch: ys length != batch * cols"
+        );
+        assert_eq!(
+            lanes.len(),
+            batch,
+            "vmm_batch: one noise lane per trajectory"
         );
         match self.mode {
             NoiseMode::Off => {
@@ -424,25 +509,38 @@ impl VmmEngine {
                 }
                 self.varb.resize(batch * cols, 0.0);
                 // var[b][j] = (v_b^2)^T K_j as one contiguous GEMM, then
-                // one normal per (trajectory, output).
+                // one indexed normal per (trajectory, output) from the
+                // trajectory's own lane.
                 self.var_kernel.vecmat_batch_into(
                     &self.v2b,
                     batch,
                     &mut self.varb,
                 );
                 let sigma = self.read_noise.sigma;
-                for (yj, &var) in ys.iter_mut().zip(&self.varb) {
-                    *yj += sigma * var.sqrt() * rng.normal();
+                let c0 = self.col_offset as u64;
+                for (b, lane) in lanes.iter().enumerate() {
+                    let seg = &mut ys[b * cols..(b + 1) * cols];
+                    let var = &self.varb[b * cols..(b + 1) * cols];
+                    for (j, (yj, &vj)) in
+                        seg.iter_mut().zip(var).enumerate()
+                    {
+                        *yj += sigma
+                            * vj.sqrt()
+                            * lane.normal_at(c0 + j as u64);
+                    }
+                }
+                let n = self.full_cols as u64;
+                for lane in lanes.iter_mut() {
+                    lane.advance(n);
                 }
             }
             NoiseMode::PerCell => {
-                // Reference path: each trajectory re-draws every cell.
+                // Reference path: each trajectory re-draws every cell from
+                // (and advances) its own lane.
                 for b in 0..batch {
-                    let (v, y) = (
-                        &vs[b * rows..(b + 1) * rows],
-                        &mut ys[b * cols..(b + 1) * cols],
-                    );
-                    self.vmm_into(v, y, rng);
+                    let v = &vs[b * rows..(b + 1) * rows];
+                    let y = &mut ys[b * cols..(b + 1) * cols];
+                    self.vmm_into(v, y, &mut lanes[b]);
                 }
             }
         }
@@ -453,10 +551,10 @@ impl VmmEngine {
         &mut self,
         vs: &[f64],
         batch: usize,
-        rng: &mut Pcg64,
+        lanes: &mut [NoiseLane],
     ) -> Vec<f64> {
         let mut ys = vec![0.0; batch * self.cols()];
-        self.vmm_batch_into(vs, batch, &mut ys, rng);
+        self.vmm_batch_into(vs, batch, &mut ys, lanes);
         ys
     }
 }
@@ -465,6 +563,7 @@ impl VmmEngine {
 mod tests {
     use super::*;
     use crate::device::taox::DeviceConfig;
+    use crate::util::rng::Pcg64;
     use crate::util::stats;
 
     fn deployed(seed: u64, read_noise: f64) -> (DifferentialArray, NoiseSource) {
@@ -482,12 +581,16 @@ mod tests {
         )
     }
 
+    fn lanes_from(seeds: &[u64]) -> Vec<NoiseLane> {
+        seeds.iter().map(|&s| NoiseLane::from_seed(s)).collect()
+    }
+
     #[test]
     fn noise_off_matches_linear_algebra() {
         let (arr, _) = deployed(1, 0.0);
         let mut eng = VmmEngine::new(&arr, NoiseSource::off(), NoiseMode::Off);
         let v = [0.1, -0.2, 0.3, 0.0, 0.25, -0.15, 0.05, 0.4];
-        let got = eng.vmm(&v, &mut Pcg64::seeded(2));
+        let got = eng.vmm(&v, &mut NoiseLane::from_seed(2));
         let want = arr.effective_weights().vecmat(&v);
         for (g, w) in got.iter().zip(&want) {
             assert!((g - w).abs() < 1e-12);
@@ -504,12 +607,12 @@ mod tests {
         let mut cell = VmmEngine::new(&arr, noise, NoiseMode::PerCell);
         let v = [0.2, -0.1, 0.3, 0.15, -0.25, 0.05, 0.1, -0.3];
         let n = 4000;
-        let mut rng = Pcg64::seeded(4);
+        let mut lane = NoiseLane::from_seed(4);
         let col = 2;
         let fast_samples: Vec<f64> =
-            (0..n).map(|_| fast.vmm(&v, &mut rng)[col]).collect();
+            (0..n).map(|_| fast.vmm(&v, &mut lane)[col]).collect();
         let cell_samples: Vec<f64> =
-            (0..n).map(|_| cell.vmm(&v, &mut rng)[col]).collect();
+            (0..n).map(|_| cell.vmm(&v, &mut lane)[col]).collect();
         let sf = stats::summary(&fast_samples);
         let sc = stats::summary(&cell_samples);
         assert!(
@@ -526,7 +629,7 @@ mod tests {
     fn ideal_engine_is_exact() {
         let w = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
         let mut eng = VmmEngine::ideal(w);
-        let y = eng.vmm(&[1.0, 1.0], &mut Pcg64::seeded(1));
+        let y = eng.vmm(&[1.0, 1.0], &mut NoiseLane::from_seed(1));
         assert_eq!(y, vec![4.0, 6.0]);
     }
 
@@ -535,7 +638,7 @@ mod tests {
         let w = Mat::from_vec(2, 3, vec![1., 0., 0., 0., 1., 0.]);
         let mut eng = VmmEngine::ideal(w);
         let mut y = vec![9.0; 3];
-        eng.vmm_into(&[2.0, 3.0], &mut y, &mut Pcg64::seeded(1));
+        eng.vmm_into(&[2.0, 3.0], &mut y, &mut NoiseLane::from_seed(1));
         assert_eq!(y, vec![2.0, 3.0, 0.0]);
     }
 
@@ -550,11 +653,60 @@ mod tests {
         for (k, v) in vs.iter_mut().enumerate() {
             *v = if k % 7 == 3 { 0.0 } else { (k as f64 * 0.21).cos() * 0.3 };
         }
-        let mut rng = Pcg64::seeded(9);
-        let ys = eng.vmm_batch(&vs, batch, &mut rng);
+        let mut lanes = lanes_from(&[10, 11, 12, 13, 14]);
+        let ys = eng.vmm_batch(&vs, batch, &mut lanes);
         for b in 0..batch {
-            let want = eng.vmm(&vs[b * 8..(b + 1) * 8], &mut rng);
+            let mut lane = NoiseLane::from_seed(10 + b as u64);
+            let want = eng.vmm(&vs[b * 8..(b + 1) * 8], &mut lane);
             assert_eq!(&ys[b * 6..(b + 1) * 6], &want[..], "traj {b}");
+        }
+    }
+
+    #[test]
+    fn batch_fast_noise_bit_identical_to_serial_lanes() {
+        // The noise-lane guarantee: with per-trajectory lanes the *noisy*
+        // batched read reproduces each trajectory's serial read exactly.
+        let (arr, noise) = deployed(11, 0.05);
+        let mut eng = VmmEngine::new(&arr, noise, NoiseMode::Fast);
+        let batch = 4;
+        let vs: Vec<f64> =
+            (0..batch * 8).map(|k| ((k as f64) * 0.13).sin() * 0.3).collect();
+        let seeds = [21u64, 22, 23, 24];
+        let mut lanes = lanes_from(&seeds);
+        let ys = eng.vmm_batch(&vs, batch, &mut lanes);
+        for (b, &s) in seeds.iter().enumerate() {
+            let mut lane = NoiseLane::from_seed(s);
+            let want = eng.vmm(&vs[b * 8..(b + 1) * 8], &mut lane);
+            assert_eq!(&ys[b * 6..(b + 1) * 6], &want[..], "traj {b}");
+            assert_eq!(lane, lanes[b], "traj {b} cursor diverged");
+        }
+    }
+
+    #[test]
+    fn batch_fast_noise_is_order_independent() {
+        // Shuffling the batch shuffles the outputs with it: trajectory
+        // draws depend only on (lane, index), never on batch position.
+        let (arr, noise) = deployed(13, 0.04);
+        let mut eng = VmmEngine::new(&arr, noise, NoiseMode::Fast);
+        let vs: Vec<f64> =
+            (0..3 * 8).map(|k| ((k as f64) * 0.29).cos() * 0.2).collect();
+        let seeds = [31u64, 32, 33];
+        let mut lanes = lanes_from(&seeds);
+        let ys = eng.vmm_batch(&vs, 3, &mut lanes);
+        // Reversed composition.
+        let mut vs_rev = vec![0.0; 3 * 8];
+        for b in 0..3 {
+            vs_rev[b * 8..(b + 1) * 8]
+                .copy_from_slice(&vs[(2 - b) * 8..(3 - b) * 8]);
+        }
+        let mut lanes_rev = lanes_from(&[33, 32, 31]);
+        let ys_rev = eng.vmm_batch(&vs_rev, 3, &mut lanes_rev);
+        for b in 0..3 {
+            assert_eq!(
+                &ys[b * 6..(b + 1) * 6],
+                &ys_rev[(2 - b) * 6..(3 - b) * 6],
+                "traj {b} depends on batch position"
+            );
         }
     }
 
@@ -569,12 +721,13 @@ mod tests {
         let vs: Vec<f64> = (0..batch).flat_map(|_| v).collect();
         let n = 3000;
         let col = 1;
-        let mut rng = Pcg64::seeded(12);
+        let mut slane = NoiseLane::from_seed(12);
         let serial: Vec<f64> =
-            (0..n).map(|_| eng.vmm(&v, &mut rng)[col]).collect();
+            (0..n).map(|_| eng.vmm(&v, &mut slane)[col]).collect();
         // Trajectory 2 of the batch (all trajectories share the input).
+        let mut lanes = lanes_from(&[40, 41, 42, 43]);
         let batched: Vec<f64> = (0..n)
-            .map(|_| eng.vmm_batch(&vs, batch, &mut rng)[2 * 6 + col])
+            .map(|_| eng.vmm_batch(&vs, batch, &mut lanes)[2 * 6 + col])
             .collect();
         let ss = stats::summary(&serial);
         let sb = stats::summary(&batched);
@@ -595,12 +748,14 @@ mod tests {
         let mut eng = VmmEngine::new(&arr, noise, NoiseMode::PerCell);
         let batch = 3;
         let vs: Vec<f64> = (0..batch * 8).map(|k| (k as f64) * 0.01).collect();
-        // Same RNG stream, same call order: batched PerCell is defined as
-        // the serial per-trajectory loop, so outputs match exactly.
-        let got = eng.vmm_batch(&vs, batch, &mut Pcg64::seeded(5));
-        let mut rng = Pcg64::seeded(5);
-        for b in 0..batch {
-            let want = eng.vmm(&vs[b * 8..(b + 1) * 8], &mut rng);
+        // Per-trajectory lanes: batched PerCell equals the serial
+        // per-trajectory loop bit for bit.
+        let seeds = [50u64, 51, 52];
+        let mut lanes = lanes_from(&seeds);
+        let got = eng.vmm_batch(&vs, batch, &mut lanes);
+        for (b, &s) in seeds.iter().enumerate() {
+            let mut lane = NoiseLane::from_seed(s);
+            let want = eng.vmm(&vs[b * 8..(b + 1) * 8], &mut lane);
             assert_eq!(&got[b * 6..(b + 1) * 6], &want[..], "traj {b}");
         }
     }
@@ -610,7 +765,17 @@ mod tests {
     fn batch_shape_validated() {
         let mut eng = VmmEngine::ideal(Mat::zeros(2, 2));
         let mut ys = vec![0.0; 4];
-        eng.vmm_batch_into(&[0.0; 3], 2, &mut ys, &mut Pcg64::seeded(1));
+        let mut lanes = lanes_from(&[1, 2]);
+        eng.vmm_batch_into(&[0.0; 3], 2, &mut ys, &mut lanes);
+    }
+
+    #[test]
+    #[should_panic(expected = "one noise lane per trajectory")]
+    fn batch_lane_arity_validated() {
+        let mut eng = VmmEngine::ideal(Mat::zeros(2, 2));
+        let mut ys = vec![0.0; 4];
+        let mut lanes = lanes_from(&[1]);
+        eng.vmm_batch_into(&[0.0; 4], 2, &mut ys, &mut lanes);
     }
 
     #[test]
@@ -619,10 +784,11 @@ mod tests {
         // high-water mark (no re-growth churn between sub-batches).
         let (arr, noise) = deployed(21, 0.05);
         let mut eng = VmmEngine::new(&arr, noise, NoiseMode::Fast);
-        let mut rng = Pcg64::seeded(3);
         for &b in &[8usize, 2, 8, 1, 5, 8] {
             let vs = vec![0.1; b * 8];
-            let ys = eng.vmm_batch(&vs, b, &mut rng);
+            let mut lanes: Vec<NoiseLane> =
+                (0..b as u64).map(NoiseLane::from_seed).collect();
+            let ys = eng.vmm_batch(&vs, b, &mut lanes);
             assert_eq!(ys.len(), b * 6);
         }
         assert_eq!(eng.max_batch, 8);
@@ -635,31 +801,38 @@ mod tests {
         let (arr, _) = deployed(31, 0.0);
         let mut eng = VmmEngine::new(&arr, NoiseSource::off(), NoiseMode::Off);
         let v = [0.2, -0.1, 0.0, 0.15, -0.25, 0.05, 0.1, -0.3];
-        let full = eng.vmm(&v, &mut Pcg64::seeded(1));
-        let mut rng = Pcg64::seeded(2);
+        let full = eng.vmm(&v, &mut NoiseLane::from_seed(1));
+        let lane = NoiseLane::from_seed(2);
         // 6 outputs split 0..4 / 4..6.
         let mut assembled = vec![0.0; 6];
         let (a, b) = assembled.split_at_mut(4);
-        eng.vmm_shard_into(&v, 0, 4, a, &mut rng);
-        eng.vmm_shard_into(&v, 4, 6, b, &mut rng);
+        eng.vmm_shard_into(&v, 0, 4, a, &lane);
+        eng.vmm_shard_into(&v, 4, 6, b, &lane);
         assert_eq!(assembled, full);
     }
 
     #[test]
-    fn shard_fast_noise_stream_matches_monolithic_for_ascending_shards() {
-        // Ascending shards sharing one RNG draw their per-output normals
-        // in the same (column-ascending) order as the monolithic fast
-        // read, so even the *noisy* serial sharded read is bit-identical.
+    fn shard_fast_noise_draws_match_monolithic_in_any_order() {
+        // Indexed draws: shards of one plan read the same lane values as
+        // the monolithic fast read, in whatever order they execute.
         let (arr, noise) = deployed(33, 0.04);
         let mut eng = VmmEngine::new(&arr, noise, NoiseMode::Fast);
         let v = [0.2, -0.1, 0.3, 0.15, -0.25, 0.05, 0.1, -0.3];
-        let full = eng.vmm(&v, &mut Pcg64::seeded(5));
-        let mut rng = Pcg64::seeded(5);
+        let mut mono_lane = NoiseLane::from_seed(5);
+        let full = eng.vmm(&v, &mut mono_lane);
+        let lane = NoiseLane::from_seed(5);
         let mut assembled = vec![0.0; 6];
-        let (a, b) = assembled.split_at_mut(3);
-        eng.vmm_shard_into(&v, 0, 3, a, &mut rng);
-        eng.vmm_shard_into(&v, 3, 6, b, &mut rng);
+        {
+            let (a, b) = assembled.split_at_mut(3);
+            // Descending shard order on purpose.
+            eng.vmm_shard_into(&v, 3, 6, b, &lane);
+            eng.vmm_shard_into(&v, 0, 3, a, &lane);
+        }
         assert_eq!(assembled, full);
+        // The layer-level advance restores lockstep with the serial read.
+        let mut lane = lane;
+        lane.advance(eng.draws_per_read());
+        assert_eq!(lane, mono_lane);
     }
 
     #[test]
@@ -671,12 +844,13 @@ mod tests {
         for (k, v) in vs.iter_mut().enumerate() {
             *v = if k % 6 == 1 { 0.0 } else { (k as f64 * 0.41).sin() * 0.4 };
         }
-        let mut rng = Pcg64::seeded(3);
-        let full = eng.vmm_batch(&vs, batch, &mut rng);
+        let mut lanes = lanes_from(&[3, 4, 5, 6]);
+        let full = eng.vmm_batch(&vs, batch, &mut lanes);
+        let shard_lanes = lanes_from(&[3, 4, 5, 6]);
         let mut left = vec![0.0; batch * 4];
         let mut right = vec![0.0; batch * 2];
-        eng.vmm_shard_batch_into(&vs, batch, 0, 4, &mut left, &mut rng);
-        eng.vmm_shard_batch_into(&vs, batch, 4, 6, &mut right, &mut rng);
+        eng.vmm_shard_batch_into(&vs, batch, 0, 4, &mut left, &shard_lanes);
+        eng.vmm_shard_batch_into(&vs, batch, 4, 6, &mut right, &shard_lanes);
         for b in 0..batch {
             assert_eq!(&left[b * 4..(b + 1) * 4], &full[b * 6..b * 6 + 4]);
             assert_eq!(&right[b * 2..(b + 1) * 2], &full[b * 6 + 4..(b + 1) * 6]);
@@ -692,17 +866,35 @@ mod tests {
         assert_eq!(shard.rows(), 8);
         assert_eq!(shard.cols(), 3);
         let v = [0.3, -0.2, 0.1, 0.0, 0.25, -0.15, 0.05, 0.4];
-        let full = parent.vmm(&v, &mut Pcg64::seeded(1));
-        let got = shard.vmm(&v, &mut Pcg64::seeded(2));
+        let full = parent.vmm(&v, &mut NoiseLane::from_seed(1));
+        let got = shard.vmm(&v, &mut NoiseLane::from_seed(2));
         assert_eq!(&got[..], &full[2..5]);
         // Batched path through the shard engine too.
         let vs: Vec<f64> = (0..2).flat_map(|_| v).collect();
-        let mut rng = Pcg64::seeded(4);
-        let fullb = parent.vmm_batch(&vs, 2, &mut rng);
-        let gotb = shard.vmm_batch(&vs, 2, &mut rng);
+        let mut lanes = lanes_from(&[4, 5]);
+        let fullb = parent.vmm_batch(&vs, 2, &mut lanes);
+        let mut lanes = lanes_from(&[4, 5]);
+        let gotb = shard.vmm_batch(&vs, 2, &mut lanes);
         for b in 0..2 {
             assert_eq!(&gotb[b * 3..(b + 1) * 3], &fullb[b * 6 + 2..b * 6 + 5]);
         }
+    }
+
+    #[test]
+    fn column_shard_noisy_reads_match_parent_slice() {
+        // The fan-out contract: a standalone shard engine driven by a copy
+        // of the trajectory's lane reproduces the parent's noisy read for
+        // its columns exactly, and advances the lane identically.
+        let (arr, noise) = deployed(39, 0.05);
+        let mut parent = VmmEngine::new(&arr, noise, NoiseMode::Fast);
+        let mut shard = parent.column_shard(2, 5);
+        let v = [0.3, -0.2, 0.1, 0.05, 0.25, -0.15, 0.05, 0.4];
+        let mut lane_p = NoiseLane::from_seed(8);
+        let mut lane_s = NoiseLane::from_seed(8);
+        let full = parent.vmm(&v, &mut lane_p);
+        let got = shard.vmm(&v, &mut lane_s);
+        assert_eq!(&got[..], &full[2..5], "noisy shard slice diverged");
+        assert_eq!(lane_p, lane_s, "shard lane fell out of lockstep");
     }
 
     #[test]
@@ -710,7 +902,7 @@ mod tests {
     fn shard_range_validated() {
         let mut eng = VmmEngine::ideal(Mat::zeros(2, 3));
         let mut y = vec![0.0; 2];
-        eng.vmm_shard_into(&[0.0; 2], 2, 4, &mut y, &mut Pcg64::seeded(1));
+        eng.vmm_shard_into(&[0.0; 2], 2, 4, &mut y, &NoiseLane::from_seed(1));
     }
 
     #[test]
@@ -723,9 +915,9 @@ mod tests {
                 NoiseSource::new(sigma),
                 NoiseMode::Fast,
             );
-            let mut rng = Pcg64::seeded(6);
+            let mut lane = NoiseLane::from_seed(6);
             let s: Vec<f64> =
-                (0..2000).map(|_| eng.vmm(&v, &mut rng)[0]).collect();
+                (0..2000).map(|_| eng.vmm(&v, &mut lane)[0]).collect();
             stats::summary(&s).std
         };
         assert!(spread(0.05) > 2.0 * spread(0.01));

@@ -133,6 +133,45 @@
 //!   `BENCH_batch_throughput.json` against the committed
 //!   `BENCH_baseline.json` (`rust/src/bin/bench_gate.rs`).
 //!
+//! ## Noise determinism (per-trajectory noise lanes)
+//!
+//! The analogue solver's read noise is part of the *model* (the paper
+//! embraces device stochasticity), so a production twin must make noisy
+//! rollouts replayable — for debugging, validation against the physical
+//! asset, and Monte-Carlo ensembles. Three rules make noise a pure
+//! function of the request, never of the serving schedule:
+//!
+//! 1. **Lane derivation.** Every request resolves to a seed: explicit
+//!    (`twin::TwinRequest::seed`), router-stamped (derived from the job
+//!    id), or twin-auto-derived — and the seed actually used is echoed in
+//!    `twin::TwinResponse::seed`. The trajectory's noise stream is
+//!    `util::rng::NoiseLane::from_seed(seed)`: a splitmix64-keyed
+//!    *counter* generator (16 bytes of plain state, pooled in twin
+//!    scratch — the zero-allocation contract of invariant 3 holds).
+//! 2. **Draw-index scheme.** Kernels address draws by explicit index
+//!    instead of consuming a shared sequence. A `NoiseMode::Fast` read of
+//!    a layer draws output column `j` at lane index
+//!    `cursor + col_offset + j` and advances the cursor by the *full*
+//!    layer width; `NoiseMode::PerCell` draws cell `(r, c)` at
+//!    `cursor + r * full_cols + col_offset + c` and advances by
+//!    `rows * full_cols` (`crossbar::vmm::VmmEngine::draws_per_read`).
+//!    `col_offset`/`full_cols` locate a [`crossbar::vmm::VmmEngine::column_shard`]
+//!    slice in the full layer, so batched GEMM kernels, serial shard
+//!    loops and parallel shard workers (each advancing private lane
+//!    copies) all consume **identical** draws to the serial monolithic
+//!    path.
+//! 3. **Replay semantics.** Same seed ⇒ same trajectory, bit for bit,
+//!    regardless of batch size (B ∈ {1, 8, 32, ...}), batch composition
+//!    or ordering, shard count, and serial vs parallel fan-out — and
+//!    across twin instances of the same deployment. Enforced by
+//!    `rust/tests/noisy_determinism.rs` (gated in release CI via
+//!    `cargo test --release -- noisy_determinism`); the serve CLI prints
+//!    `run-twin --seed` replay commands from the telemetry seed ring.
+//!
+//! Touching any noise path, re-verify rule 2 first: a kernel that draws
+//! sequentially (or advances by the *visited* count instead of the full
+//! logical count) silently re-couples noise to the execution schedule.
+//!
 //! Python never runs on the request path: after `make artifacts` the Rust
 //! binary is self-contained.
 

@@ -187,6 +187,7 @@ fn run_twin(argv: Vec<String>) -> Result<()> {
         .opt("route", "lorenz96/analog", "twin route (see `memode routes`)")
         .opt("steps", "200", "output samples")
         .opt("stimulus", "sine", "hp twins: sine|triangular|rectangular|modulated")
+        .opt("seed", "", "noise-lane seed (replay a response's seed bit-exactly)")
         .flag("pjrt", "start the PJRT runtime (needed for */pjrt routes)")
         .parse(argv)
         .map_err(|m| anyhow::anyhow!("{m}"))?;
@@ -205,7 +206,7 @@ fn run_twin(argv: Vec<String>) -> Result<()> {
     let route = args.get("route");
     let steps = args.get_usize("steps");
     let mut twin = reg.create(&route)?;
-    let req = if route.starts_with("hp/") {
+    let mut req = if route.starts_with("hp/") {
         let wave = match args.get("stimulus").as_str() {
             "sine" => Waveform::sine(1.0, 4.0),
             "triangular" => Waveform::triangular(1.0, 4.0),
@@ -217,6 +218,13 @@ fn run_twin(argv: Vec<String>) -> Result<()> {
     } else {
         TwinRequest::autonomous(vec![], steps)
     };
+    let seed_arg = args.get("seed");
+    if !seed_arg.is_empty() {
+        let seed = seed_arg
+            .parse::<u64>()
+            .map_err(|e| anyhow::anyhow!("--seed {seed_arg}: {e}"))?;
+        req = req.with_seed(seed);
+    }
     let t0 = std::time::Instant::now();
     let resp = twin.run(&req)?;
     let dt_wall = t0.elapsed();
@@ -225,6 +233,22 @@ fn run_twin(argv: Vec<String>) -> Result<()> {
         resp.backend,
         resp.trajectory.len(),
         dt_wall
+    );
+    // The replay command must pin everything the rollout depended on:
+    // seed, the stimulus for driven twins, and the runtime flags that
+    // register the route (config is assumed equal).
+    let mut replay_flags = String::new();
+    if route.starts_with("hp/") {
+        replay_flags.push_str(" --stimulus ");
+        replay_flags.push_str(&args.get("stimulus"));
+    }
+    if args.get_bool("pjrt") {
+        replay_flags.push_str(" --pjrt");
+    }
+    println!(
+        "noise seed {} (replay: memode run-twin --route {route} --steps \
+         {steps}{replay_flags} --seed {})",
+        resp.seed, resp.seed
     );
     for (k, row) in resp.trajectory.iter().take(5).enumerate() {
         println!(
@@ -306,7 +330,19 @@ fn serve(argv: Vec<String>) -> Result<()> {
          ({:.1} req/s)",
         ok as f64 / wall
     );
-    println!("telemetry: {}", coord.stats());
+    let stats = coord.stats();
+    println!("telemetry: {stats}");
+    // Replay handles: every served rollout's noise seed is recorded, so
+    // any noisy trajectory can be reproduced bit-exactly offline
+    // (recent_seeds is chronological; the tail is the newest).
+    let pjrt_flag =
+        if route.ends_with("/pjrt") { " --pjrt" } else { "" };
+    for &(job, seed) in stats.recent_seeds.iter().rev().take(3) {
+        println!(
+            "replay job {job}: memode run-twin --route {route} --steps \
+             {steps}{pjrt_flag} --seed {seed}"
+        );
+    }
     Ok(())
 }
 

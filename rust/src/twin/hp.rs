@@ -18,6 +18,7 @@ use crate::models::mlp::{BatchDrivenMlpField, DrivenMlpField, Mlp};
 use crate::models::resnet::RecurrentResNet;
 use crate::ode::rk4::{self, Rk4};
 use crate::twin::{GroupPlan, RolloutFn, Twin, TwinRequest, TwinResponse};
+use crate::util::rng::{NoiseLane, SeedSequencer};
 use crate::util::tensor::{Trajectory, TrajectoryPool};
 use crate::workload::stimuli::Waveform;
 
@@ -25,6 +26,10 @@ use crate::workload::stimuli::Waveform;
 pub const ANALOG_SUBSTEPS: usize = 20;
 /// Default RK4 substeps per output sample for the digital backend.
 pub const DIGITAL_SUBSTEPS: usize = 1;
+
+/// Auto-seed root for backends built without an explicit seed (digital,
+/// resnet, pjrt — the seed is still resolved and echoed for replay).
+const HP_AUTO_ROOT: u64 = 0x4870_5eed_0000_0001;
 
 /// Execution backend of the HP twin.
 pub enum HpBackend {
@@ -64,6 +69,10 @@ struct HpScratch {
     /// Per-member stimulus / initial state staging.
     waves: Vec<Waveform>,
     h0s: Vec<f64>,
+    /// Per-member resolved noise seeds (echoed in the responses).
+    seeds: Vec<u64>,
+    /// Per-member noise lanes (one per trajectory, rebuilt from seeds).
+    lanes: Vec<NoiseLane>,
     /// Flat batched rollout output (rows = one lockstep sample).
     flat: Trajectory,
     /// Response-trajectory pool (refilled via [`HpTwin::recycle`]).
@@ -87,6 +96,8 @@ impl Default for HpSolverScratch {
 pub struct HpTwin {
     backend: HpBackend,
     dt: f64,
+    /// Auto-seed source for requests without an explicit noise seed.
+    seeds: SeedSequencer,
     scratch: HpScratch,
 }
 
@@ -110,6 +121,7 @@ impl HpTwin {
         Self {
             backend: HpBackend::Analog(Box::new(ode)),
             dt,
+            seeds: SeedSequencer::new(seed),
             scratch: HpScratch::default(),
         }
     }
@@ -119,6 +131,7 @@ impl HpTwin {
         Self {
             backend: HpBackend::Digital(Mlp::from_weights(weights)),
             dt: weights.dt,
+            seeds: SeedSequencer::new(HP_AUTO_ROOT),
             scratch: HpScratch::default(),
         }
     }
@@ -130,6 +143,7 @@ impl HpTwin {
                 Mlp::from_weights(weights),
             )),
             dt: weights.dt,
+            seeds: SeedSequencer::new(HP_AUTO_ROOT),
             scratch: HpScratch::default(),
         }
     }
@@ -139,6 +153,7 @@ impl HpTwin {
         Self {
             backend: HpBackend::Pjrt(rollout),
             dt,
+            seeds: SeedSequencer::new(HP_AUTO_ROOT),
             scratch: HpScratch::default(),
         }
     }
@@ -154,21 +169,39 @@ impl HpTwin {
     }
 
     /// Simulate under a stimulus; returns the scalar state trajectory.
+    /// Noise draws come from the next auto-derived lane; use
+    /// [`Twin::run`] with a seeded request for replayable rollouts.
     pub fn simulate(
         &mut self,
         wave: &Waveform,
         h0: f64,
         n_points: usize,
     ) -> Result<Vec<f64>> {
+        let mut lane = NoiseLane::from_seed(self.seeds.next_seed());
+        self.simulate_lane(wave, h0, n_points, &mut lane)
+    }
+
+    /// [`HpTwin::simulate`] drawing noise from an explicit trajectory
+    /// lane — the replayable request path.
+    fn simulate_lane(
+        &mut self,
+        wave: &Waveform,
+        h0: f64,
+        n_points: usize,
+        lane: &mut NoiseLane,
+    ) -> Result<Vec<f64>> {
         let dt = self.dt;
         match &mut self.backend {
             HpBackend::Analog(ode) => {
                 let w = *wave;
-                let traj = ode.solve(
+                let mut traj = Trajectory::new(1);
+                ode.solve_into(
                     &[h0],
                     &mut |t, x: &mut [f64]| x[0] = w.eval(t),
                     dt,
                     n_points,
+                    lane,
+                    &mut traj,
                 );
                 Ok(traj.into_data())
             }
@@ -208,15 +241,16 @@ impl HpTwin {
     /// their own stimulus and initial state. Analog and Digital backends
     /// are allocation-free with warm scratch (one device read / GEMM per
     /// step for the whole batch); Resnet runs a true batched rollout with
-    /// staging allocations. With noise off the batched trajectories are
-    /// bit-identical to serial ones. Pjrt is handled by the caller's
-    /// serial fallback.
+    /// staging allocations. With per-trajectory noise lanes the batched
+    /// trajectories are bit-identical to serial ones — noise on or off.
+    /// Pjrt is handled by the caller's serial fallback.
     fn simulate_batch_flat(
         &mut self,
         waves: &[Waveform],
         h0s: &[f64],
         n_points: usize,
         solver: &mut HpSolverScratch,
+        lanes: &mut [NoiseLane],
         out: &mut Trajectory,
     ) -> Result<()> {
         let batch = waves.len();
@@ -230,6 +264,7 @@ impl HpTwin {
                     &mut |b, t, x: &mut [f64]| x[0] = waves[b].eval(t),
                     dt,
                     n_points,
+                    lanes,
                     out,
                 );
                 Ok(())
@@ -306,10 +341,13 @@ impl Twin for HpTwin {
             req.h0[0]
         };
         let backend = self.backend.label();
-        let h = self.simulate(&wave, h0, req.n_points)?;
+        let seed = self.seeds.resolve(req.seed);
+        let mut lane = NoiseLane::from_seed(seed);
+        let h = self.simulate_lane(&wave, h0, req.n_points, &mut lane)?;
         Ok(TwinResponse {
             trajectory: Trajectory::from_data(1, h),
             backend,
+            seed,
         })
     }
 
@@ -342,6 +380,8 @@ impl Twin for HpTwin {
             sc.members.clear();
             sc.waves.clear();
             sc.h0s.clear();
+            sc.seeds.clear();
+            sc.lanes.clear();
             for &i in sc.plan.group(g) {
                 match reqs[i].stimulus {
                     Some(w) => {
@@ -352,6 +392,9 @@ impl Twin for HpTwin {
                         } else {
                             reqs[i].h0[0]
                         });
+                        let seed = self.seeds.resolve(reqs[i].seed);
+                        sc.seeds.push(seed);
+                        sc.lanes.push(NoiseLane::from_seed(seed));
                     }
                     None => {
                         sc.slots[i] = Some(Err(anyhow!(
@@ -367,11 +410,18 @@ impl Twin for HpTwin {
                 // No batched artifact path yet: per-trajectory rollouts.
                 for k in 0..sc.members.len() {
                     let i = sc.members[k];
+                    let seed = sc.seeds[k];
                     let r = self
-                        .simulate(&sc.waves[k], sc.h0s[k], n_points)
+                        .simulate_lane(
+                            &sc.waves[k],
+                            sc.h0s[k],
+                            n_points,
+                            &mut sc.lanes[k],
+                        )
                         .map(|h| TwinResponse {
                             trajectory: Trajectory::from_data(1, h),
                             backend,
+                            seed,
                         });
                     sc.slots[i] = Some(r);
                 }
@@ -382,6 +432,7 @@ impl Twin for HpTwin {
                 &sc.h0s,
                 n_points,
                 &mut sc.solver,
+                &mut sc.lanes,
                 &mut sc.flat,
             ) {
                 Ok(()) => {
@@ -394,6 +445,7 @@ impl Twin for HpTwin {
                         sc.slots[i] = Some(Ok(TwinResponse {
                             trajectory: t,
                             backend,
+                            seed: sc.seeds[k],
                         }));
                     }
                 }
@@ -562,6 +614,57 @@ mod tests {
     fn resnet_run_batch_bit_identical_to_serial() {
         let mut twin = HpTwin::resnet(&toy_weights());
         assert_batch_matches_serial(&mut twin);
+    }
+
+    #[test]
+    fn seeded_noisy_run_replays_and_matches_batched() {
+        // With read noise ON, a pinned seed makes the rollout replayable
+        // and batch-position independent; the response echoes the seed.
+        let cfg = DeviceConfig {
+            fault_rate: 0.0,
+            pulse_sigma: 0.0,
+            ..Default::default()
+        };
+        let noise = AnalogNoise { read: 0.05, prog: 0.0 };
+        let mut twin = HpTwin::analog(&toy_weights(), &cfg, noise, 3);
+        let reqs: Vec<TwinRequest> = (0..3)
+            .map(|k| {
+                TwinRequest::driven(
+                    vec![0.2 + 0.1 * k as f64],
+                    10,
+                    Waveform::sine(1.0, 4.0),
+                )
+                .with_seed(500 + k as u64)
+            })
+            .collect();
+        let serial: Vec<_> =
+            reqs.iter().map(|r| twin.run(r).unwrap()).collect();
+        for (r, s) in reqs.iter().zip(&serial) {
+            assert_eq!(s.seed, r.seed.unwrap(), "seed not echoed");
+            // Replay on the same twin: bit-identical.
+            let again = twin.run(r).unwrap();
+            assert_eq!(again.trajectory, s.trajectory, "replay diverged");
+        }
+        let batched = twin.run_batch(&reqs);
+        for (k, (b, s)) in batched.iter().zip(&serial).enumerate() {
+            let b = b.as_ref().unwrap();
+            assert_eq!(
+                b.trajectory, s.trajectory,
+                "noisy request {k}: batched != serial"
+            );
+            assert_eq!(b.seed, s.seed);
+        }
+        // Reversed batch composition: still identical per request.
+        let rev: Vec<TwinRequest> =
+            reqs.iter().rev().cloned().collect();
+        let batched_rev = twin.run_batch(&rev);
+        for (k, b) in batched_rev.iter().enumerate() {
+            assert_eq!(
+                b.as_ref().unwrap().trajectory,
+                serial[reqs.len() - 1 - k].trajectory,
+                "noisy request depends on batch position"
+            );
+        }
     }
 
     #[test]

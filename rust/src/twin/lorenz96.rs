@@ -23,6 +23,7 @@ use crate::ode::batch::unbatch_into;
 use crate::ode::rk4::{self, Rk4};
 use crate::twin::shard::{ShardExecutor, ShardSnapshot, ShardedAnalogOde};
 use crate::twin::{GroupPlan, RolloutFn, Twin, TwinRequest, TwinResponse};
+use crate::util::rng::{NoiseLane, SeedSequencer};
 use crate::util::tensor::{Trajectory, TrajectoryPool};
 use crate::workload::lorenz96;
 
@@ -30,6 +31,10 @@ use crate::workload::lorenz96;
 pub const ANALOG_SUBSTEPS: usize = 20;
 /// RK4 substeps per output sample for the digital backend.
 pub const DIGITAL_SUBSTEPS: usize = 1;
+
+/// Auto-seed root for backends built without an explicit seed (digital,
+/// recurrent, pjrt — the seed is still resolved and echoed for replay).
+const L96_AUTO_ROOT: u64 = 0x1963_5eed_0000_0002;
 
 /// Execution backend of the Lorenz96 twin.
 pub enum L96Backend {
@@ -82,6 +87,10 @@ struct L96Scratch {
     members: Vec<usize>,
     /// Flat `[members * dim]` initial states of the current group.
     h0s: Vec<f64>,
+    /// Per-member resolved noise seeds (echoed in the responses).
+    seeds: Vec<u64>,
+    /// Per-member noise lanes (one per trajectory, rebuilt from seeds).
+    lanes: Vec<NoiseLane>,
     flat: Trajectory,
     pool: TrajectoryPool,
     solver: L96SolverScratch,
@@ -105,16 +114,24 @@ pub struct Lorenz96Twin {
     dim: usize,
     /// Dimension-appropriate default initial condition.
     default_h0: Vec<f64>,
+    /// Auto-seed source for requests without an explicit noise seed.
+    seeds: SeedSequencer,
     scratch: L96Scratch,
 }
 
 impl Lorenz96Twin {
-    fn assemble(backend: L96Backend, dt: f64, dim: usize) -> Self {
+    fn assemble(
+        backend: L96Backend,
+        dt: f64,
+        dim: usize,
+        lane_root: u64,
+    ) -> Self {
         Self {
             backend,
             dt,
             dim,
             default_h0: lorenz96::default_y0(dim),
+            seeds: SeedSequencer::new(lane_root),
             scratch: L96Scratch::default(),
         }
     }
@@ -157,7 +174,6 @@ impl Lorenz96Twin {
             let sharded = ShardedAnalogOde::from_ode(
                 &ode,
                 ShardExecutor::new(opts.shards),
-                seed ^ 0x5aad_ed00,
             );
             L96Backend::AnalogSharded(Box::new(sharded))
         } else if opts.shards > 1 {
@@ -165,7 +181,7 @@ impl Lorenz96Twin {
         } else {
             L96Backend::Analog(Box::new(ode))
         };
-        Self::assemble(backend, dt, dim)
+        Self::assemble(backend, dt, dim, seed)
     }
 
     /// Digital (Rust RK4) twin.
@@ -175,6 +191,7 @@ impl Lorenz96Twin {
             L96Backend::Digital(Mlp::from_weights(weights)),
             weights.dt,
             dim,
+            L96_AUTO_ROOT,
         )
     }
 
@@ -190,12 +207,13 @@ impl Lorenz96Twin {
             L96Backend::Recurrent(cell),
             weights.dt,
             weights.d_in,
+            L96_AUTO_ROOT,
         ))
     }
 
     /// PJRT-artifact twin.
     pub fn pjrt(rollout: RolloutFn, dt: f64, dim: usize) -> Self {
-        Self::assemble(L96Backend::Pjrt(rollout), dt, dim)
+        Self::assemble(L96Backend::Pjrt(rollout), dt, dim, L96_AUTO_ROOT)
     }
 
     /// Per-shard serving counters of the fan-out backend, if sharded.
@@ -225,23 +243,43 @@ impl Lorenz96Twin {
         self.scratch.pool.put(resp.trajectory);
     }
 
-    /// Roll out the twin from `h0` for `n_points` samples.
+    /// Roll out the twin from `h0` for `n_points` samples. Noise draws
+    /// come from the next auto-derived lane; use [`Twin::run`] with a
+    /// seeded request for replayable rollouts.
     pub fn simulate(
         &mut self,
         h0: &[f64],
         n_points: usize,
     ) -> Result<Trajectory> {
+        let mut lane = NoiseLane::from_seed(self.seeds.next_seed());
+        self.simulate_lane(h0, n_points, &mut lane)
+    }
+
+    /// [`Lorenz96Twin::simulate`] drawing noise from an explicit
+    /// trajectory lane — the replayable request path.
+    fn simulate_lane(
+        &mut self,
+        h0: &[f64],
+        n_points: usize,
+        lane: &mut NoiseLane,
+    ) -> Result<Trajectory> {
         let dt = self.dt;
         match &mut self.backend {
-            L96Backend::Analog(ode) => Ok(ode.solve(
-                h0,
-                &mut |_t, _x: &mut [f64]| {},
-                dt,
-                n_points,
-            )),
+            L96Backend::Analog(ode) => {
+                let mut out = Trajectory::new(self.dim);
+                ode.solve_into(
+                    h0,
+                    &mut |_t, _x: &mut [f64]| {},
+                    dt,
+                    n_points,
+                    lane,
+                    &mut out,
+                );
+                Ok(out)
+            }
             L96Backend::AnalogSharded(ode) => {
                 let mut out = Trajectory::new(self.dim);
-                ode.solve_into(h0, dt, n_points, &mut out);
+                ode.solve_into(h0, dt, n_points, lane, &mut out);
                 Ok(out)
             }
             L96Backend::Digital(mlp) => {
@@ -269,15 +307,16 @@ impl Lorenz96Twin {
     /// states stacked in `h0s`). Analog and Digital backends are
     /// allocation-free with warm scratch — one multi-vector device read /
     /// per-layer GEMM per step for the whole batch; Recurrent runs its
-    /// true batched rollout with staging allocations. Noise off ⇒
-    /// bit-identical to serial. Pjrt is handled by the caller's serial
-    /// fallback.
+    /// true batched rollout with staging allocations. Per-trajectory
+    /// noise lanes ⇒ bit-identical to serial, noise on or off. Pjrt is
+    /// handled by the caller's serial fallback.
     fn simulate_batch_flat(
         &mut self,
         h0s: &[f64],
         batch: usize,
         n_points: usize,
         solver: &mut L96SolverScratch,
+        lanes: &mut [NoiseLane],
         out: &mut Trajectory,
     ) -> Result<()> {
         let dim = self.dim;
@@ -291,12 +330,13 @@ impl Lorenz96Twin {
                     &mut |_b, _t, _x: &mut [f64]| {},
                     dt,
                     n_points,
+                    lanes,
                     out,
                 );
                 Ok(())
             }
             L96Backend::AnalogSharded(ode) => {
-                ode.solve_batch_into(h0s, batch, dt, n_points, out);
+                ode.solve_batch_into(h0s, batch, dt, n_points, lanes, out);
                 Ok(())
             }
             L96Backend::Digital(mlp) => {
@@ -373,8 +413,10 @@ impl Twin for Lorenz96Twin {
             self.dim
         );
         let backend = self.backend.label();
-        let trajectory = self.simulate(h0, req.n_points)?;
-        Ok(TwinResponse { trajectory, backend })
+        let seed = self.seeds.resolve(req.seed);
+        let mut lane = NoiseLane::from_seed(seed);
+        let trajectory = self.simulate_lane(h0, req.n_points, &mut lane)?;
+        Ok(TwinResponse { trajectory, backend, seed })
     }
 
     fn run_batch(
@@ -404,6 +446,8 @@ impl Twin for Lorenz96Twin {
             let n_points = reqs[sc.plan.group(g)[0]].n_points;
             sc.members.clear();
             sc.h0s.clear();
+            sc.seeds.clear();
+            sc.lanes.clear();
             for &i in sc.plan.group(g) {
                 let h0: &[f64] = if reqs[i].h0.is_empty() {
                     &self.default_h0
@@ -421,6 +465,11 @@ impl Twin for Lorenz96Twin {
                     )));
                 }
             }
+            for k in 0..sc.members.len() {
+                let seed = self.seeds.resolve(reqs[sc.members[k]].seed);
+                sc.seeds.push(seed);
+                sc.lanes.push(NoiseLane::from_seed(seed));
+            }
             if sc.members.is_empty() {
                 continue;
             }
@@ -429,14 +478,17 @@ impl Twin for Lorenz96Twin {
                 // No batched artifact path yet: per-trajectory rollouts.
                 for k in 0..batch {
                     let i = sc.members[k];
+                    let seed = sc.seeds[k];
                     let r = self
-                        .simulate(
+                        .simulate_lane(
                             &sc.h0s[k * dim..(k + 1) * dim],
                             n_points,
+                            &mut sc.lanes[k],
                         )
                         .map(|trajectory| TwinResponse {
                             trajectory,
                             backend,
+                            seed,
                         });
                     sc.slots[i] = Some(r);
                 }
@@ -447,6 +499,7 @@ impl Twin for Lorenz96Twin {
                 batch,
                 n_points,
                 &mut sc.solver,
+                &mut sc.lanes,
                 &mut sc.flat,
             ) {
                 Ok(()) => {
@@ -456,6 +509,7 @@ impl Twin for Lorenz96Twin {
                         sc.slots[i] = Some(Ok(TwinResponse {
                             trajectory: t,
                             backend,
+                            seed: sc.seeds[k],
                         }));
                     }
                 }
@@ -660,6 +714,71 @@ mod tests {
         let tel = twin.shard_telemetry().expect("sharded backend");
         assert_eq!(tel.len(), 2);
         assert!(tel.iter().all(|s| s.steps > 0));
+    }
+
+    #[test]
+    fn seeded_noisy_rollouts_identical_across_execution_forms() {
+        // One seed, three execution forms (monolithic, serial sharded,
+        // parallel fan-out), serial and batched dispatch: every noisy
+        // trajectory must be bit-identical to the monolithic serial one.
+        let d = 34;
+        let w = crate::models::loader::decay_mlp_weights(d);
+        let cfg = DeviceConfig {
+            fault_rate: 0.0,
+            pulse_sigma: 0.0,
+            ..Default::default()
+        };
+        let noise = AnalogNoise { read: 0.05, prog: 0.0 };
+        let opts = |shards, parallel| L96AnalogOpts {
+            substeps: 2,
+            shards,
+            parallel,
+        };
+        let mut mono =
+            Lorenz96Twin::analog_opts(&w, &cfg, noise, 5, opts(1, false));
+        let reqs: Vec<TwinRequest> = (0..3)
+            .map(|k| {
+                TwinRequest::autonomous(
+                    (0..d)
+                        .map(|i| ((i + k) as f64 * 0.21).sin() * 0.5)
+                        .collect(),
+                    4,
+                )
+                .with_seed(900 + k as u64)
+            })
+            .collect();
+        let want: Vec<_> =
+            reqs.iter().map(|r| mono.run(r).unwrap()).collect();
+        for (label, mut twin) in [
+            (
+                "monolithic",
+                Lorenz96Twin::analog_opts(&w, &cfg, noise, 5, opts(1, false)),
+            ),
+            (
+                "serial sharded",
+                Lorenz96Twin::analog_opts(&w, &cfg, noise, 5, opts(2, false)),
+            ),
+            (
+                "parallel fan-out",
+                Lorenz96Twin::analog_opts(&w, &cfg, noise, 5, opts(2, true)),
+            ),
+        ] {
+            let serial: Vec<_> =
+                reqs.iter().map(|r| twin.run(r).unwrap()).collect();
+            let batched = twin.run_batch(&reqs);
+            for (k, w0) in want.iter().enumerate() {
+                assert_eq!(
+                    serial[k].trajectory, w0.trajectory,
+                    "{label}: serial request {k} diverged"
+                );
+                assert_eq!(
+                    batched[k].as_ref().unwrap().trajectory,
+                    w0.trajectory,
+                    "{label}: batched request {k} diverged"
+                );
+                assert_eq!(batched[k].as_ref().unwrap().seed, 900 + k as u64);
+            }
+        }
     }
 
     #[test]

@@ -49,15 +49,29 @@ pub struct TwinRequest {
     pub n_points: usize,
     /// Stimulus for driven twins (ignored by autonomous ones).
     pub stimulus: Option<Waveform>,
+    /// Noise-lane seed. `Some(s)` pins the rollout's per-trajectory noise
+    /// stream, making a noisy analogue rollout bit-reproducible regardless
+    /// of batch size, batch composition or shard layout. `None` lets the
+    /// serving layer derive one (the router stamps it; standalone twins
+    /// auto-derive); either way the seed actually used is echoed in
+    /// [`TwinResponse::seed`] for replay.
+    pub seed: Option<u64>,
 }
 
 impl TwinRequest {
     pub fn autonomous(h0: Vec<f64>, n_points: usize) -> Self {
-        Self { h0, n_points, stimulus: None }
+        Self { h0, n_points, stimulus: None, seed: None }
     }
 
     pub fn driven(h0: Vec<f64>, n_points: usize, w: Waveform) -> Self {
-        Self { h0, n_points, stimulus: Some(w) }
+        Self { h0, n_points, stimulus: Some(w), seed: None }
+    }
+
+    /// Pin the noise-lane seed (replay a previous response's
+    /// [`TwinResponse::seed`]).
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
     }
 }
 
@@ -74,6 +88,10 @@ pub struct TwinResponse {
     pub trajectory: Trajectory,
     /// Which backend produced it (telemetry).
     pub backend: &'static str,
+    /// The noise-lane seed this rollout used (the request's, or the
+    /// auto-derived one): resubmitting with `TwinRequest::with_seed(seed)`
+    /// replays a noisy analogue rollout bit for bit.
+    pub seed: u64,
 }
 
 /// The object-safe twin interface the coordinator serves.
@@ -103,8 +121,10 @@ pub trait Twin: Send {
     /// crossbar reads, the digital backends' per-layer GEMMs) override
     /// this (or [`Twin::run_batch_into`]); implementations split
     /// incompatible requests into compatible sub-batches (see
-    /// [`GroupPlan`]) rather than padding, and with noise off their
-    /// batched trajectories are bit-identical to serial `run` calls.
+    /// [`GroupPlan`]) rather than padding, and their batched trajectories
+    /// are bit-identical to serial `run` calls with the same seeds —
+    /// noise off *and* noise on (per-trajectory noise lanes; see the
+    /// noise-determinism invariants in `lib.rs`).
     fn run_batch(
         &mut self,
         reqs: &[TwinRequest],
@@ -257,6 +277,7 @@ mod tests {
                         req.n_points,
                     ),
                     backend: "echo",
+                    seed: req.seed.unwrap_or(0),
                 })
             }
         }
@@ -285,6 +306,7 @@ mod tests {
     fn request_constructors() {
         let r = TwinRequest::autonomous(vec![1.0], 10);
         assert!(r.stimulus.is_none());
+        assert!(r.seed.is_none());
         let d = TwinRequest::driven(
             vec![0.1],
             5,
@@ -292,5 +314,7 @@ mod tests {
         );
         assert!(d.stimulus.is_some());
         assert_eq!(d.n_points, 5);
+        let s = TwinRequest::autonomous(vec![], 2).with_seed(99);
+        assert_eq!(s.seed, Some(99));
     }
 }

@@ -92,6 +92,7 @@ mod tests {
                     req.n_points,
                 ),
                 backend: "dummy",
+                seed: req.seed.unwrap_or(0),
             })
         }
     }

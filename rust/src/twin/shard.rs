@@ -19,14 +19,18 @@
 //!
 //! Each shard worker owns a private [`VmmEngine`] per layer (the column
 //! slice of the deployed engine — its tile column-group), private
-//! peripheral stages, a private integrator bank for its state slice and a
-//! private RNG. Nothing mutable is shared: shards exchange activations
-//! through per-layer mutex-guarded buffers, writing disjoint column ranges
-//! and copying the full buffer out after the barrier. With read noise off
-//! the stitched output is **bit-identical** to the monolithic solver —
-//! per-element accumulation order is preserved by the column-shard kernels
-//! (`rust/tests/sharded.rs` pins this down); with noise on, each shard
-//! draws an independent stream (distribution-identical, stream-distinct).
+//! peripheral stages, a private integrator bank for its state slice and
+//! private copies of the per-trajectory noise lanes. Nothing mutable is
+//! shared: shards exchange activations through per-layer mutex-guarded
+//! buffers, writing disjoint column ranges and copying the full buffer out
+//! after the barrier. The stitched output is **bit-identical** to the
+//! monolithic solver in *every* noise mode: per-element accumulation order
+//! is preserved by the column-shard kernels, and noise draws are
+//! lane-indexed by full-layer column (each worker's column-shard engine
+//! reads the same lane values the monolithic engine would produce for its
+//! columns, and advances its lane copies by the full-layer draw count, so
+//! all copies stay in lockstep — `rust/tests/sharded.rs` and
+//! `rust/tests/noisy_determinism.rs` pin this down).
 //!
 //! The fan-out path allocates per rollout (thread spawn, first-use buffer
 //! growth) and is therefore *outside* the zero-allocation contract of
@@ -48,7 +52,7 @@ use crate::analog::tia::Tia;
 use crate::coordinator::telemetry::Telemetry;
 use crate::crossbar::tiling::ShardPlan;
 use crate::crossbar::vmm::VmmEngine;
-use crate::util::rng::Pcg64;
+use crate::util::rng::NoiseLane;
 use crate::util::tensor::Trajectory;
 
 /// Per-shard serving counters (lock-free; written by shard workers).
@@ -135,6 +139,9 @@ struct RolloutCtx<'a> {
     exchange: &'a [Mutex<Vec<f64>>],
     barrier: &'a Barrier,
     telemetry: &'a ShardTelemetry,
+    /// Initial per-trajectory noise-lane states; every worker copies them
+    /// and advances its copies in lockstep (indexed draws).
+    lanes: &'a [NoiseLane],
 }
 
 /// One shard worker: the tile column-group engines of every layer, the
@@ -149,7 +156,8 @@ struct ShardUnit {
     template: Vec<IvpIntegrator>,
     /// Per-trajectory banks: `batch * width` integrators, b-major.
     bank: Vec<IvpIntegrator>,
-    rng: Pcg64,
+    /// Private copies of the rollout's per-trajectory noise lanes.
+    lanes: Vec<NoiseLane>,
     state_range: Range<usize>,
     /// Stacked `[prev activation; 1]` rows for the current layer.
     in_buf: Vec<f64>,
@@ -204,6 +212,8 @@ impl ShardUnit {
             let width = if l == 0 { d } else { ctx.layer_cols[l - 1] };
             buf.resize(batch * width, 0.0);
         }
+        self.lanes.clear();
+        self.lanes.extend_from_slice(ctx.lanes);
         self.samples.clear();
         self.samples
             .reserve(ctx.n_points.max(1) * batch * w);
@@ -244,11 +254,15 @@ impl ShardUnit {
                         dst[src_dim] = 1.0;
                     }
                     self.out_buf.resize(batch * cols, 0.0);
+                    // The column-shard engine draws each trajectory's
+                    // noise at full-layer indices and advances the lane
+                    // copies by the full-layer draw count — every worker's
+                    // copies move in lockstep with the monolithic solver.
                     self.engines[l].vmm_batch_into(
                         &self.in_buf,
                         batch,
                         &mut self.out_buf,
-                        &mut self.rng,
+                        &mut self.lanes,
                     );
                     reads += 1;
                     let is_last = l + 1 == n_layers;
@@ -309,8 +323,9 @@ impl ShardUnit {
 /// A closed-loop analogue solver whose rollouts fan out across parallel
 /// shard workers (one scoped thread per tile column-group shard, barrier
 /// per exchange point), with results stitched back into one pooled
-/// [`Trajectory`]. Built from a deployed [`AnalogNeuralOde`], so its
-/// noise-off output is bit-identical to that solver's.
+/// [`Trajectory`]. Built from a deployed [`AnalogNeuralOde`]; with
+/// per-trajectory noise lanes its output is bit-identical to that
+/// solver's in every noise mode.
 pub struct ShardedAnalogOde {
     d_state: usize,
     dt_circuit: f64,
@@ -329,13 +344,10 @@ pub struct ShardedAnalogOde {
 impl ShardedAnalogOde {
     /// Build the fan-out solver from a deployed closed loop. The shard
     /// count is `executor.max_workers` clamped to the narrowest layer
-    /// width; `seed` derives each shard worker's private noise stream.
-    /// Only autonomous systems fan out (`d_drive == 0`).
-    pub fn from_ode(
-        ode: &AnalogNeuralOde,
-        executor: ShardExecutor,
-        seed: u64,
-    ) -> Self {
+    /// width; rollouts draw noise from caller-supplied per-trajectory
+    /// lanes (workers run private copies in lockstep). Only autonomous
+    /// systems fan out (`d_drive == 0`).
+    pub fn from_ode(ode: &AnalogNeuralOde, executor: ShardExecutor) -> Self {
         assert_eq!(
             ode.d_drive, 0,
             "sharded fan-out supports autonomous twins (d_drive = 0)"
@@ -371,10 +383,7 @@ impl ShardedAnalogOde {
                     clamp,
                     template,
                     bank: Vec::new(),
-                    rng: Pcg64::seeded(
-                        seed ^ ((s as u64 + 1)
-                            .wrapping_mul(0x9e37_79b9_7f4a_7c15)),
-                    ),
+                    lanes: Vec::new(),
                     state_range: rg,
                     in_buf: Vec::new(),
                     out_buf: Vec::new(),
@@ -427,13 +436,17 @@ impl ShardedAnalogOde {
     /// flat `[batch * d]` initial states, every circuit step executed by
     /// the shard workers in parallel (barrier per exchange point), sampled
     /// every `dt_out` into `out` (reset to row width `batch * d`; the
-    /// shards' sample slices are stitched into full rows).
+    /// shards' sample slices are stitched into full rows). `lanes` carries
+    /// one noise lane per trajectory; every worker advances private copies
+    /// in lockstep, and the caller's lanes are left at the same cursor a
+    /// monolithic rollout would leave them.
     pub fn solve_batch_into(
         &mut self,
         h0s: &[f64],
         batch: usize,
         dt_out: f64,
         n_points: usize,
+        lanes: &mut [NoiseLane],
         out: &mut Trajectory,
     ) {
         let d = self.d_state;
@@ -447,6 +460,11 @@ impl ShardedAnalogOde {
             h0s.len(),
             batch,
             d
+        );
+        assert_eq!(
+            lanes.len(),
+            batch,
+            "sharded solve: one noise lane per trajectory"
         );
         let substeps =
             ((dt_out / self.dt_circuit).round() as usize).max(1);
@@ -468,6 +486,7 @@ impl ShardedAnalogOde {
             exchange: &self.exchange,
             barrier: &barrier,
             telemetry: &self.telemetry,
+            lanes: &*lanes,
         };
         // Fan out: one scoped worker per shard, joined before stitching.
         std::thread::scope(|scope| {
@@ -476,6 +495,10 @@ impl ShardedAnalogOde {
                 scope.spawn(move || unit.run_rollout(s, ctx));
             }
         });
+        // All workers advanced their lane copies identically; hand the
+        // final cursors back so warm callers stay in sync with the
+        // monolithic path.
+        lanes.copy_from_slice(&self.units[0].lanes[..batch]);
         self.telemetry.rollouts.fetch_add(1, Ordering::Relaxed);
         if let Some(coord) = &self.executor.coord {
             coord.shard_rollouts.fetch_add(1, Ordering::Relaxed);
@@ -508,9 +531,17 @@ impl ShardedAnalogOde {
         h0: &[f64],
         dt_out: f64,
         n_points: usize,
+        lane: &mut NoiseLane,
         out: &mut Trajectory,
     ) {
-        self.solve_batch_into(h0, 1, dt_out, n_points, out);
+        self.solve_batch_into(
+            h0,
+            1,
+            dt_out,
+            n_points,
+            std::slice::from_mut(lane),
+            out,
+        );
     }
 }
 
@@ -554,11 +585,8 @@ mod tests {
             11,
         );
         let ode = AnalogNeuralOde::new(mlp, d, 0.01);
-        let sharded = ShardedAnalogOde::from_ode(
-            &ode,
-            ShardExecutor::new(n_shards),
-            99,
-        );
+        let sharded =
+            ShardedAnalogOde::from_ode(&ode, ShardExecutor::new(n_shards));
         (ode, sharded)
     }
 
@@ -571,7 +599,8 @@ mod tests {
             (0..d).map(|i| ((i as f64) * 0.29).sin() * 0.7).collect();
         let want = mono.solve(&h0, &mut |_t, _x: &mut [f64]| {}, 0.1, 6);
         let mut got = Trajectory::new(d);
-        sharded.solve_into(&h0, 0.1, 6, &mut got);
+        let mut lane = NoiseLane::from_seed(1);
+        sharded.solve_into(&h0, 0.1, 6, &mut lane, &mut got);
         assert_eq!(got, want, "fan-out rollout diverged from monolithic");
     }
 
@@ -586,8 +615,45 @@ mod tests {
         let want =
             mono.solve_batch(&h0s, batch, &mut |_b, _t, _x| {}, 0.1, 5);
         let mut got = Trajectory::new(batch * d);
-        sharded.solve_batch_into(&h0s, batch, 0.1, 5, &mut got);
+        let mut lanes: Vec<NoiseLane> =
+            (0..batch as u64).map(NoiseLane::from_seed).collect();
+        sharded.solve_batch_into(&h0s, batch, 0.1, 5, &mut lanes, &mut got);
         assert_eq!(got, want, "fan-out batched rollout diverged");
+    }
+
+    #[test]
+    fn noisy_fanout_rollout_bit_identical_to_monolithic() {
+        // The noise-lane upgrade: the parallel fan-out consumes the exact
+        // draws the monolithic solver does, so even *noisy* rollouts are
+        // bit-identical — and the caller's lane lands on the same cursor.
+        let d = 34;
+        let cfg = DeviceConfig {
+            fault_rate: 0.0,
+            pulse_sigma: 0.0,
+            ..Default::default()
+        };
+        let noise = AnalogNoise { read: 0.05, prog: 0.0 };
+        let mlp = AnalogMlp::deploy(&wide_decay_layers(d), &cfg, noise, 13);
+        let mut mono = AnalogNeuralOde::new(mlp, d, 0.01);
+        let mut sharded =
+            ShardedAnalogOde::from_ode(&mono, ShardExecutor::new(2));
+        let h0: Vec<f64> =
+            (0..d).map(|i| ((i as f64) * 0.19).sin() * 0.5).collect();
+        let mut want = Trajectory::new(d);
+        let mut mono_lane = NoiseLane::from_seed(77);
+        mono.solve_into(
+            &h0,
+            &mut |_t, _x: &mut [f64]| {},
+            0.1,
+            4,
+            &mut mono_lane,
+            &mut want,
+        );
+        let mut got = Trajectory::new(d);
+        let mut lane = NoiseLane::from_seed(77);
+        sharded.solve_into(&h0, 0.1, 4, &mut lane, &mut got);
+        assert_eq!(got, want, "noisy fan-out diverged from monolithic");
+        assert_eq!(lane, mono_lane, "fan-out lane cursor diverged");
     }
 
     #[test]
@@ -598,8 +664,11 @@ mod tests {
         let mut out = Trajectory::new(d);
         // Warm with a larger problem, then solve the real one.
         let big: Vec<f64> = (0..3 * d).map(|k| (k as f64) * 0.003).collect();
-        sharded.solve_batch_into(&big, 3, 0.1, 7, &mut out);
-        sharded.solve_into(&h0, 0.1, 4, &mut out);
+        let mut lanes: Vec<NoiseLane> =
+            (0..3u64).map(NoiseLane::from_seed).collect();
+        sharded.solve_batch_into(&big, 3, 0.1, 7, &mut lanes, &mut out);
+        let mut lane = NoiseLane::from_seed(9);
+        sharded.solve_into(&h0, 0.1, 4, &mut lane, &mut out);
         let want = mono.solve(&h0, &mut |_t, _x: &mut [f64]| {}, 0.1, 4);
         assert_eq!(out, want, "warm fan-out scratch leaked state");
     }
@@ -610,7 +679,8 @@ mod tests {
         let (_, mut sharded) = deployed_pair(d, 2);
         let h0 = vec![0.1; d];
         let mut out = Trajectory::new(d);
-        sharded.solve_into(&h0, 0.1, 3, &mut out);
+        let mut lane = NoiseLane::from_seed(3);
+        sharded.solve_into(&h0, 0.1, 3, &mut lane, &mut out);
         let snap = sharded.telemetry().snapshot();
         assert_eq!(snap.len(), 2);
         for s in &snap {
@@ -631,7 +701,8 @@ mod tests {
         sharded.attach_coordinator_telemetry(Arc::clone(&tel));
         let mut out = Trajectory::new(d);
         let h0 = vec![0.05; d];
-        sharded.solve_into(&h0, 0.1, 3, &mut out);
+        let mut lane = NoiseLane::from_seed(4);
+        sharded.solve_into(&h0, 0.1, 3, &mut lane, &mut out);
         let snap = tel.snapshot();
         assert_eq!(snap.shard_rollouts, 1);
         assert!(snap.shard_steps > 0);

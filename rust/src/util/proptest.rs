@@ -91,6 +91,14 @@ pub fn gen_vec_any_len(
     gen_vec(rng, n, lo, hi)
 }
 
+/// Random permutation of `0..n` (Fisher-Yates) — used by the noisy
+/// determinism suite to shuffle batch compositions.
+pub fn gen_permutation(rng: &mut Pcg64, n: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    idx
+}
+
 /// Shrinker for vectors: halve the length, then zero elements one by one.
 /// Takes a slice; pass `|v| shrink_vec(v)` where a `Fn(&Vec<f64>)`
 /// shrinker is expected.
@@ -155,5 +163,14 @@ mod tests {
             let v = gen_vec_any_len(&mut r, 17, 0.0, 1.0);
             assert!((1..=17).contains(&v.len()));
         }
+    }
+
+    #[test]
+    fn gen_permutation_is_a_permutation() {
+        let mut r = Pcg64::seeded(2);
+        let p = gen_permutation(&mut r, 20);
+        let mut sorted = p.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..20).collect::<Vec<_>>());
     }
 }

@@ -1,10 +1,20 @@
 //! Deterministic PRNG for all stochastic device physics.
 //!
-//! PCG64 (O'Neill 2014, XSL-RR output on a 128-bit LCG) — fast, tiny state,
-//! excellent statistical quality, and fully reproducible across platforms;
-//! every noise source in the simulator (programming error, read noise,
-//! retention drift, yield faults) derives from a seeded `Pcg64` so whole
-//! experiments replay bit-exactly from a single seed.
+//! Two generators with different jobs:
+//!
+//! * [`Pcg64`] (O'Neill 2014, XSL-RR output on a 128-bit LCG) — fast, tiny
+//!   state, excellent statistical quality, and fully reproducible across
+//!   platforms; the *sequential* generator behind everything that happens
+//!   once per deployment (programming error, retention drift, yield
+//!   faults, experiment scripts).
+//! * [`NoiseLane`] — the *request-path* noise stream: one lane per
+//!   trajectory, counter-based (every draw is addressed by an explicit
+//!   index instead of consumed from a shared sequence), so batched GEMM
+//!   kernels, shard fan-out workers and the serial monolithic solver all
+//!   read **identical** values for the same logical draw. This is what
+//!   makes noisy rollouts replayable independently of batch size, batch
+//!   composition and shard layout (see the noise-determinism invariants in
+//!   `lib.rs`).
 
 /// PCG64 XSL-RR generator.
 #[derive(Debug, Clone)]
@@ -117,6 +127,130 @@ impl Pcg64 {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Per-trajectory noise lanes (counter-based, order-independent draws)
+// ---------------------------------------------------------------------------
+
+/// Golden-ratio increment of the splitmix64 PRF underlying [`NoiseLane`].
+const LANE_GAMMA: u64 = 0x9e37_79b9_7f4a_7c15;
+
+/// Finalising mixer of splitmix64 (Steele/Lea/Flood 2014) — a full-period
+/// bijection with strong avalanche, used here as a keyed PRF over draw
+/// indices.
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Derive the `k`-th child seed of `root` — the stateless analogue of
+/// [`Pcg64::fork`], used wherever a deterministic family of independent
+/// seeds is needed without shared mutable state (per-request auto seeds,
+/// per-trajectory lane keys).
+pub fn derive_stream_seed(root: u64, k: u64) -> u64 {
+    mix64(mix64(root).wrapping_add(k.wrapping_mul(LANE_GAMMA)))
+}
+
+/// Deterministic per-request auto-seed source: twins use one to resolve
+/// requests that arrive without an explicit noise seed, so every rollout
+/// gets a distinct, replayable seed (echoed in the response) without any
+/// shared mutable state or allocation.
+#[derive(Debug, Clone)]
+pub struct SeedSequencer {
+    root: u64,
+    seq: u64,
+}
+
+impl SeedSequencer {
+    pub fn new(root: u64) -> Self {
+        Self { root, seq: 0 }
+    }
+
+    /// Next auto-derived seed in this sequencer's family.
+    pub fn next_seed(&mut self) -> u64 {
+        self.seq = self.seq.wrapping_add(1);
+        derive_stream_seed(self.root, self.seq)
+    }
+
+    /// An explicit request seed wins; otherwise auto-derive the next one.
+    pub fn resolve(&mut self, explicit: Option<u64>) -> u64 {
+        explicit.unwrap_or_else(|| self.next_seed())
+    }
+}
+
+/// One trajectory's deterministic read-noise stream.
+///
+/// A lane is a splitmix64-keyed counter generator: draw `i` of the stream
+/// is a pure function of `(key, i)`, never of how many draws other code
+/// consumed before it. Kernels address draws *by index* —
+/// [`NoiseLane::normal_at`] reads at `cursor + offset` without consuming —
+/// and advance the cursor by the layer's full logical draw count once per
+/// read ([`NoiseLane::advance`]). Consequences, all load-bearing for the
+/// serving layer:
+///
+/// * a batched kernel looping trajectories in any order produces each
+///   trajectory's exact serial draws (batch composition independence);
+/// * a shard worker that draws only its column range and advances by the
+///   *full* layer width stays in lockstep with the monolithic solver
+///   (shard-layout independence);
+/// * replaying a request with the same seed replays the rollout bit for
+///   bit.
+///
+/// Plain `Copy` data (16 bytes), so lanes live in pooled scratch and never
+/// touch the allocator on the warm path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NoiseLane {
+    /// PRF key: identifies the stream.
+    key: u64,
+    /// Logical position: index of the next unconsumed draw.
+    cursor: u64,
+}
+
+impl NoiseLane {
+    /// Lane of trajectory `trajectory` under `root` — the deterministic
+    /// stream derivation `lane = root.fork(trajectory_id)`.
+    pub fn derive(root: u64, trajectory: u64) -> Self {
+        Self { key: derive_stream_seed(root, trajectory), cursor: 0 }
+    }
+
+    /// Lane of a single-trajectory request: the request seed *is* the
+    /// root, trajectory id 0.
+    pub fn from_seed(seed: u64) -> Self {
+        Self::derive(seed, 0)
+    }
+
+    /// Raw PRF word at an absolute draw index.
+    fn word(&self, index: u64) -> u64 {
+        mix64(self.key.wrapping_add(index.wrapping_mul(LANE_GAMMA)))
+    }
+
+    /// Current cursor (diagnostics and lockstep assertions).
+    pub fn cursor(&self) -> u64 {
+        self.cursor
+    }
+
+    /// Consume `n` logical draws: callers advance by a read's *full* draw
+    /// count regardless of which subset of draws they actually evaluated.
+    pub fn advance(&mut self, n: u64) {
+        self.cursor = self.cursor.wrapping_add(n);
+    }
+
+    /// Standard normal at `cursor + offset`, without consuming. Box-Muller
+    /// over two indexed uniforms (no cached spare — statelessness is the
+    /// point).
+    pub fn normal_at(&self, offset: u64) -> f64 {
+        let i = self.cursor.wrapping_add(offset);
+        let a = self.word(i.wrapping_mul(2));
+        let b = self.word(i.wrapping_mul(2).wrapping_add(1));
+        // u in (0, 1]: the +0.5 half-step keeps the log argument strictly
+        // positive; v in [0, 1).
+        let scale = 1.0 / (1u64 << 53) as f64;
+        let u = ((a >> 11) as f64 + 0.5) * scale;
+        let v = (b >> 11) as f64 * scale;
+        (-2.0 * u.ln()).sqrt() * (2.0 * std::f64::consts::PI * v).cos()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -209,5 +343,71 @@ mod tests {
         sorted.sort_unstable();
         assert_eq!(sorted, (0..100).collect::<Vec<_>>());
         assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn lane_draws_are_order_independent() {
+        // Reading the same indices in any order, with any interleaving,
+        // yields the same values — the property the batched and sharded
+        // kernels rest on.
+        let lane = NoiseLane::from_seed(42);
+        let forward: Vec<f64> = (0..16).map(|j| lane.normal_at(j)).collect();
+        let backward: Vec<f64> =
+            (0..16).rev().map(|j| lane.normal_at(j)).collect();
+        for (j, b) in backward.iter().rev().enumerate() {
+            assert_eq!(forward[j], *b, "draw {j}");
+        }
+    }
+
+    #[test]
+    fn lane_advance_shifts_the_window() {
+        let mut a = NoiseLane::from_seed(7);
+        let b = NoiseLane::from_seed(7);
+        let want = b.normal_at(10);
+        a.advance(10);
+        assert_eq!(a.cursor(), 10);
+        assert_eq!(a.normal_at(0), want);
+    }
+
+    #[test]
+    fn lane_split_draw_matches_contiguous_draw() {
+        // A "shard" evaluating only indices 3..6 sees exactly what the
+        // monolithic reader sees at those indices.
+        let lane = NoiseLane::from_seed(99);
+        let full: Vec<f64> = (0..6).map(|j| lane.normal_at(j)).collect();
+        let shard: Vec<f64> = (3..6).map(|j| lane.normal_at(j)).collect();
+        assert_eq!(&full[3..6], &shard[..]);
+    }
+
+    #[test]
+    fn distinct_lanes_are_decorrelated() {
+        let a = NoiseLane::derive(1, 0);
+        let b = NoiseLane::derive(1, 1);
+        let c = NoiseLane::derive(2, 0);
+        let same_ab =
+            (0..64).filter(|&j| a.normal_at(j) == b.normal_at(j)).count();
+        let same_ac =
+            (0..64).filter(|&j| a.normal_at(j) == c.normal_at(j)).count();
+        assert_eq!(same_ab, 0);
+        assert_eq!(same_ac, 0);
+    }
+
+    #[test]
+    fn lane_normal_moments() {
+        let lane = NoiseLane::from_seed(11);
+        let n = 200_000u64;
+        let xs: Vec<f64> = (0..n).map(|j| lane.normal_at(j)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var =
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn derive_stream_seed_is_stable_and_spread() {
+        assert_eq!(derive_stream_seed(5, 3), derive_stream_seed(5, 3));
+        assert_ne!(derive_stream_seed(5, 3), derive_stream_seed(5, 4));
+        assert_ne!(derive_stream_seed(5, 3), derive_stream_seed(6, 3));
     }
 }

@@ -15,7 +15,7 @@ use memode::ode::func::FnField;
 use memode::ode::{dopri5, euler, rk4};
 use memode::util::json::{self, Json};
 use memode::util::proptest::{check, gen_vec, gen_vec_any_len, Config};
-use memode::util::rng::Pcg64;
+use memode::util::rng::{NoiseLane, Pcg64};
 use memode::util::tensor::Mat;
 
 fn quiet_cfg() -> DeviceConfig {
@@ -195,8 +195,9 @@ fn prop_vmm_engine_noise_is_unbiased() {
             let clean = w.vecmat(v);
             let n_trials = 800;
             let mut acc = vec![0.0; clean.len()];
+            let mut lane = NoiseLane::from_seed(*seed);
             for _ in 0..n_trials {
-                let y = noisy.vmm(v, &mut rng);
+                let y = noisy.vmm(v, &mut lane);
                 for (a, yv) in acc.iter_mut().zip(&y) {
                     *a += yv;
                 }
