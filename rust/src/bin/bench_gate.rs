@@ -71,6 +71,25 @@ fn parse_args() -> Result<Args, String> {
     Ok(args)
 }
 
+/// Loud vacuous-pass notice: the gate exits 0 (there is nothing to
+/// compare), but an unseeded baseline must never look like a green
+/// regression check — emit a CI annotation (GitHub renders `::warning`
+/// lines on the workflow summary) plus an unmissable stderr banner.
+fn warn_unseeded(reason: &str) {
+    println!(
+        "::warning title=bench_gate vacuous::BENCH_baseline.json is \
+         unseeded ({reason}) — the bench-regression gate is NOT \
+         protecting any route. Seed it on a quiet runner with `cargo \
+         bench --bench batch_throughput -- --smoke && cargo run \
+         --release --bin bench_gate -- --update`, inspect, commit."
+    );
+    eprintln!(
+        "bench gate: VACUOUS PASS — unseeded baseline ({reason}); no \
+         route is protected against perf regressions until a seeded \
+         BENCH_baseline.json is committed"
+    );
+}
+
 fn main() -> ExitCode {
     let args = match parse_args() {
         Ok(a) => a,
@@ -121,11 +140,7 @@ fn main() -> ExitCode {
             }
         }
     } else {
-        println!(
-            "baseline {} missing — gate passes vacuously; seed it with \
-             `bench_gate --update`",
-            args.baseline.display()
-        );
+        warn_unseeded("baseline file missing");
         return ExitCode::SUCCESS;
     };
     let report =
@@ -137,11 +152,7 @@ fn main() -> ExitCode {
             }
         };
     if report.unseeded() {
-        println!(
-            "baseline is unseeded (no comparable entries) — gate passes \
-             vacuously; seed it with `bench_gate --update` after a smoke \
-             bench run"
-        );
+        warn_unseeded("no comparable entries");
         return ExitCode::SUCCESS;
     }
     println!(

@@ -6,9 +6,12 @@
 //! warm instance (`Twin::run_batch`: many trajectories per crossbar read,
 //! GEMM instead of repeated GEMV). The policy is the standard serving
 //! trade-off: dispatch when `max_batch` is reached OR the oldest job has
-//! waited `window`. Requests inside a batch may still disagree on
-//! `n_points`; the twin splits those into compatible sub-batches rather
-//! than padding.
+//! waited `window`. Capacity is counted in **effective lanes**
+//! (`TwinRequest::lanes`): a Monte-Carlo ensemble job weighs its member
+//! count, since it expands to that many trajectories in the twin's single
+//! batched rollout — so `max_batch` bounds actual rollout width, not job
+//! count. Requests inside a batch may still disagree on `n_points`; the
+//! twin splits those into compatible sub-batches rather than padding.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc;
@@ -29,10 +32,19 @@ impl Default for BatchPolicy {
     }
 }
 
+/// Per-route pending queue: jobs plus their effective lane total.
+#[derive(Default)]
+struct RouteQueue {
+    jobs: Vec<Job>,
+    /// Sum of `TwinRequest::lanes()` across `jobs` — what `max_batch`
+    /// caps (an ensemble job counts its member lanes, not 1).
+    lanes: usize,
+}
+
 /// The batcher thread's state machine (pure, testable without threads).
 pub struct Batcher {
     policy: BatchPolicy,
-    pending: BTreeMap<String, Vec<Job>>,
+    pending: BTreeMap<String, RouteQueue>,
     /// Scratch for matured route keys: [`Batcher::flush`] runs on every
     /// tick of the hot dispatch loop, so it must not snapshot the whole
     /// key set per call — only matured routes are staged here (their key
@@ -46,13 +58,16 @@ impl Batcher {
         Self { policy, pending: BTreeMap::new(), mature: Vec::new() }
     }
 
-    /// Add a job; returns a full batch immediately if max_batch reached.
+    /// Add a job; returns a full batch immediately once the route's
+    /// pending *lane* total reaches max_batch (a single wide-ensemble job
+    /// can mature a batch by itself).
     pub fn push(&mut self, job: Job) -> Option<Batch> {
         let route = job.route.clone();
         let q = self.pending.entry(route.clone()).or_default();
-        q.push(job);
-        if q.len() >= self.policy.max_batch {
-            let jobs = std::mem::take(q);
+        q.lanes = q.lanes.saturating_add(job.req.lanes());
+        q.jobs.push(job);
+        if q.lanes >= self.policy.max_batch {
+            let jobs = std::mem::take(&mut q.jobs);
             self.pending.remove(&route);
             return Some(Batch { route, jobs });
         }
@@ -72,9 +87,9 @@ impl Batcher {
         let mut mature = std::mem::take(&mut self.mature);
         debug_assert!(mature.is_empty());
         for (route, q) in &self.pending {
-            let is_mature = !q.is_empty()
+            let is_mature = !q.jobs.is_empty()
                 && (force
-                    || q.first().is_some_and(|j| {
+                    || q.jobs.first().is_some_and(|j| {
                         now.duration_since(j.enqueued) >= self.policy.window
                     }));
             if is_mature {
@@ -82,8 +97,8 @@ impl Batcher {
             }
         }
         for route in mature.drain(..) {
-            if let Some(jobs) = self.pending.remove(&route) {
-                out.push(Batch { route, jobs });
+            if let Some(q) = self.pending.remove(&route) {
+                out.push(Batch { route, jobs: q.jobs });
             }
         }
         self.mature = mature;
@@ -94,7 +109,7 @@ impl Batcher {
     pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
         self.pending
             .values()
-            .filter_map(|q| q.first())
+            .filter_map(|q| q.jobs.first())
             .map(|j| {
                 self.policy
                     .window
@@ -104,7 +119,12 @@ impl Batcher {
     }
 
     pub fn pending_jobs(&self) -> usize {
-        self.pending.values().map(Vec::len).sum()
+        self.pending.values().map(|q| q.jobs.len()).sum()
+    }
+
+    /// Pending effective lanes across routes (ensemble-weighted).
+    pub fn pending_lanes(&self) -> usize {
+        self.pending.values().map(|q| q.lanes).sum()
     }
 }
 
@@ -185,6 +205,40 @@ mod tests {
         let batch = b.push(j3).expect("third job completes the batch");
         assert_eq!(batch.jobs.len(), 3);
         assert_eq!(b.pending_jobs(), 0);
+    }
+
+    #[test]
+    fn ensemble_jobs_count_lanes_against_max_batch() {
+        use crate::twin::EnsembleSpec;
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 8,
+            window: Duration::from_secs(10),
+        });
+        // A 3-lane ensemble + 4 plain jobs = 7 lanes: still pending.
+        let (mut j, _r) = job("a");
+        j.req = TwinRequest::autonomous(vec![], 1)
+            .with_ensemble(EnsembleSpec::new(3));
+        assert!(b.push(j).is_none());
+        let mut keep = Vec::new();
+        for _ in 0..4 {
+            let (j, r) = job("a");
+            assert!(b.push(j).is_none());
+            keep.push(r);
+        }
+        assert_eq!(b.pending_jobs(), 5);
+        assert_eq!(b.pending_lanes(), 7);
+        // One more plain job reaches 8 lanes: the batch matures with 6
+        // jobs even though max_batch (counted in jobs) was never hit.
+        let (j6, _r6) = job("a");
+        let batch = b.push(j6).expect("lane total matured the batch");
+        assert_eq!(batch.jobs.len(), 6);
+        assert_eq!(b.pending_lanes(), 0);
+        // A single wide ensemble matures a batch by itself.
+        let (mut wide, _rw) = job("a");
+        wide.req = TwinRequest::autonomous(vec![], 1)
+            .with_ensemble(EnsembleSpec::new(32));
+        let batch = b.push(wide).expect("wide ensemble dispatches alone");
+        assert_eq!(batch.jobs.len(), 1);
     }
 
     #[test]

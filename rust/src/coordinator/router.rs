@@ -70,10 +70,12 @@ impl Router {
         }
     }
 
-    /// Submit a request; fails fast on unknown routes or saturation.
-    /// Requests without an explicit noise seed are stamped with one
-    /// derived from the job id, so every admitted job is replayable (the
-    /// twin echoes the seed in its response).
+    /// Submit a request; fails fast on unknown routes, invalid ensemble
+    /// specs, or saturation. Requests without an explicit noise seed are
+    /// stamped with one derived from the job id, so every admitted job is
+    /// replayable (the twin echoes the seed in its response; ensemble
+    /// member `k` replays under
+    /// [`crate::twin::ensemble_member_seed`]`(seed, k)`).
     pub fn submit(
         &self,
         route: &str,
@@ -84,6 +86,10 @@ impl Router {
                 "unknown route '{route}' (available: {})",
                 self.registry.keys().join(", ")
             ));
+        }
+        if let Some(spec) = &req.ensemble {
+            spec.validate()
+                .map_err(|e| anyhow!("invalid ensemble spec: {e}"))?;
         }
         let permit = self.backpressure.try_acquire().ok_or_else(|| {
             self.telemetry.rejected.fetch_add(1, Ordering::Relaxed);
@@ -141,6 +147,7 @@ mod tests {
                 trajectory: crate::util::tensor::Trajectory::new(1),
                 backend: "null",
                 seed: r.seed.unwrap_or(0),
+                ensemble: None,
             })
         }
     }
@@ -188,6 +195,27 @@ mod tests {
             .unwrap();
         let pinned = rx.recv().unwrap();
         assert_eq!(pinned.req.seed, Some(77), "explicit seed overwritten");
+    }
+
+    #[test]
+    fn invalid_ensemble_spec_rejected_before_admission() {
+        use crate::twin::EnsembleSpec;
+        let (router, _rx) = setup(4);
+        let bad = TwinRequest::autonomous(vec![], 1)
+            .with_ensemble(EnsembleSpec::new(0));
+        let err = match router.submit("null", bad) {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("zero-member ensemble accepted"),
+        };
+        assert!(err.contains("ensemble"), "{err}");
+        let bad_p = TwinRequest::autonomous(vec![], 1).with_ensemble(
+            EnsembleSpec::new(4).with_percentiles(vec![120.0]),
+        );
+        assert!(router.submit("null", bad_p).is_err());
+        // A valid spec passes through untouched.
+        let ok = TwinRequest::autonomous(vec![], 1)
+            .with_ensemble(EnsembleSpec::new(8));
+        assert!(router.submit("null", ok).is_ok());
     }
 
     #[test]

@@ -190,6 +190,15 @@ fn spawn_worker(
                             // Replay handle: the noise seed this rollout
                             // actually used (run-twin --seed <s>).
                             telemetry.record_seed(job.id, resp.seed);
+                            if let Some(ens) = &resp.ensemble {
+                                telemetry
+                                    .ensemble_rollouts
+                                    .fetch_add(1, Ordering::Relaxed);
+                                telemetry.ensemble_members.fetch_add(
+                                    ens.members as u64,
+                                    Ordering::Relaxed,
+                                );
+                            }
                         }
                         Err(_) => {
                             telemetry.failed.fetch_add(1, Ordering::Relaxed);
@@ -239,6 +248,7 @@ mod tests {
                 trajectory: Trajectory::repeat_row(&req.h0, req.n_points),
                 backend: "echo",
                 seed: req.seed.unwrap_or(0),
+                ensemble: None,
             })
         }
     }
@@ -333,6 +343,7 @@ mod tests {
                     ),
                     backend: "probe",
                     seed: req.seed.unwrap_or(0),
+                    ensemble: None,
                 })
             }
             fn run_batch(

@@ -140,6 +140,7 @@ mod tests {
                 ),
                 backend: "counter",
                 seed: req.seed.unwrap_or(0),
+                ensemble: None,
             })
         }
     }
@@ -245,6 +246,7 @@ mod tests {
                     ),
                     backend: "probe",
                     seed: req.seed.unwrap_or(0),
+                    ensemble: None,
                 })
             }
             fn run_batch(
@@ -297,6 +299,59 @@ mod tests {
             seeds.iter().any(|&(_, s)| s == 4242),
             "seed not recorded in telemetry: {seeds:?}"
         );
+    }
+
+    #[test]
+    fn ensemble_request_served_end_to_end() {
+        use crate::analog::system::AnalogNoise;
+        use crate::device::taox::DeviceConfig;
+        use crate::models::loader::decay_mlp_weights;
+        use crate::twin::lorenz96::Lorenz96Twin;
+        use crate::twin::EnsembleSpec;
+
+        let mut reg = TwinRegistry::new();
+        reg.register("l96/analog", || {
+            let quiet = DeviceConfig {
+                fault_rate: 0.0,
+                pulse_sigma: 0.0,
+                ..Default::default()
+            };
+            Box::new(Lorenz96Twin::analog(
+                &decay_mlp_weights(3),
+                &quiet,
+                AnalogNoise { read: 0.05, prog: 0.0 },
+                7,
+            ))
+        });
+        let coord = Coordinator::start(reg, &cfg());
+        let resp = coord
+            .call(
+                "l96/analog",
+                TwinRequest::autonomous(vec![0.5, -0.2, 0.1], 6)
+                    .with_ensemble(
+                        EnsembleSpec::new(4)
+                            .with_percentiles(vec![5.0, 95.0]),
+                    ),
+            )
+            .unwrap();
+        let ens = resp.ensemble.expect("ensemble stats in response");
+        assert_eq!(ens.members, 4);
+        assert_eq!(ens.mean.len(), 6);
+        assert_eq!(ens.percentiles.len(), 2);
+        assert!(ens.member_trajectories.is_empty());
+        // The router stamped a replayable family seed.
+        assert_ne!(resp.seed, 0);
+        let s = coord.stats();
+        assert_eq!(s.ensemble_rollouts, 1);
+        assert_eq!(s.ensemble_members, 4);
+        // An invalid spec is rejected at the front door.
+        assert!(coord
+            .call(
+                "l96/analog",
+                TwinRequest::autonomous(vec![0.0; 3], 4)
+                    .with_ensemble(EnsembleSpec::new(0)),
+            )
+            .is_err());
     }
 
     #[test]

@@ -25,10 +25,20 @@ pub struct Telemetry {
     pub shard_rollouts: AtomicU64,
     /// Total shard-worker circuit steps across all sharded rollouts.
     pub shard_steps: AtomicU64,
+    /// Monte-Carlo ensemble rollouts served (one per ensemble request).
+    pub ensemble_rollouts: AtomicU64,
+    /// Total ensemble members across those rollouts.
+    pub ensemble_members: AtomicU64,
     latencies_us: Mutex<Ring<f64, RESERVOIR>>,
     /// Recent (job id, noise seed) pairs of completed jobs — enough for
     /// the serve CLI to print replay commands (`run-twin --seed <s>`).
     seeds: Mutex<Ring<(u64, u64), SEED_RING>>,
+    /// Reusable latency-stats scratch for [`Telemetry::snapshot`]: the
+    /// ring is *copied* out under its lock, then sorted and reduced here
+    /// with the ring lock released — the hot `record_latency` path never
+    /// waits behind a snapshot's sort. Guarded by its own (snapshot-only,
+    /// uncontended) mutex so `snapshot(&self)` stays shareable.
+    snapshot_scratch: Mutex<Vec<f64>>,
 }
 
 /// Bounded newest-wins ring: fills to `N`, then overwrites oldest-first.
@@ -86,17 +96,35 @@ impl Telemetry {
     }
 
     /// Point-in-time snapshot.
+    ///
+    /// Latency stats are computed from a single sort: the ring is copied
+    /// into the reusable scratch under the ring lock (cheap memcpy), the
+    /// lock is dropped, and p50/p95/mean come off the sorted scratch —
+    /// no per-percentile clone-and-sort, and no sorting under the lock
+    /// the request path records into. Non-finite samples are skipped so
+    /// one poisoned latency can never corrupt (or panic) a snapshot.
     pub fn snapshot(&self) -> TelemetrySnapshot {
-        let ring = self.latencies_us.lock().expect("telemetry lock");
-        let (p50, p95, mean) = if ring.buf.is_empty() {
+        let mut scratch =
+            self.snapshot_scratch.lock().expect("telemetry lock");
+        {
+            let ring = self.latencies_us.lock().expect("telemetry lock");
+            scratch.clear();
+            scratch
+                .extend(ring.buf.iter().copied().filter(|x| x.is_finite()));
+        }
+        let (p50, p95, mean) = if scratch.is_empty() {
             (f64::NAN, f64::NAN, f64::NAN)
         } else {
+            scratch.sort_unstable_by(f64::total_cmp);
+            let mean =
+                scratch.iter().sum::<f64>() / scratch.len() as f64;
             (
-                stats::median(&ring.buf),
-                stats::percentile(&ring.buf, 95.0),
-                stats::summary(&ring.buf).mean,
+                stats::percentile_of_sorted(&scratch[..], 50.0),
+                stats::percentile_of_sorted(&scratch[..], 95.0),
+                mean,
             )
         };
+        drop(scratch);
         let batches = self.batches.load(Ordering::Relaxed);
         TelemetrySnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
@@ -115,6 +143,12 @@ impl Telemetry {
             latency_mean_us: mean,
             shard_rollouts: self.shard_rollouts.load(Ordering::Relaxed),
             shard_steps: self.shard_steps.load(Ordering::Relaxed),
+            ensemble_rollouts: self
+                .ensemble_rollouts
+                .load(Ordering::Relaxed),
+            ensemble_members: self
+                .ensemble_members
+                .load(Ordering::Relaxed),
             recent_seeds: self
                 .seeds
                 .lock()
@@ -140,6 +174,11 @@ pub struct TelemetrySnapshot {
     pub shard_rollouts: u64,
     /// Shard-worker circuit steps across those rollouts.
     pub shard_steps: u64,
+    /// Monte-Carlo ensemble rollouts served.
+    pub ensemble_rollouts: u64,
+    /// Total ensemble members across those rollouts (mean ensemble width
+    /// = / ensemble_rollouts).
+    pub ensemble_members: u64,
     /// Recent (job id, noise seed) pairs — replay handles for the last
     /// completed jobs (bounded ring, oldest first; the tail is the most
     /// recent).
@@ -195,6 +234,29 @@ mod tests {
         }
         let ring = t.latencies_us.lock().unwrap();
         assert_eq!(ring.buf.len(), RESERVOIR);
+    }
+
+    #[test]
+    fn nan_latency_sample_cannot_poison_snapshot() {
+        let t = Telemetry::new();
+        t.record_latency(1e-3, 1e-3);
+        t.record_latency(f64::NAN, 0.0);
+        t.record_latency(3e-3, 1e-3);
+        let s = t.snapshot();
+        assert!(s.latency_p50_us.is_finite());
+        assert!((s.latency_p50_us - 3000.0).abs() < 1.0);
+        assert!((s.latency_p95_us - 3900.0).abs() < 1.0);
+        assert!(s.latency_mean_us.is_finite());
+    }
+
+    #[test]
+    fn ensemble_counters_surface_in_snapshot() {
+        let t = Telemetry::new();
+        t.ensemble_rollouts.fetch_add(2, Ordering::Relaxed);
+        t.ensemble_members.fetch_add(64, Ordering::Relaxed);
+        let s = t.snapshot();
+        assert_eq!(s.ensemble_rollouts, 2);
+        assert_eq!(s.ensemble_members, 64);
     }
 
     #[test]

@@ -172,6 +172,49 @@
 //! sequentially (or advances by the *visited* count instead of the full
 //! logical count) silently re-couples noise to the execution schedule.
 //!
+//! ## Ensemble invariants (Monte-Carlo ensembles as first-class requests)
+//!
+//! The paper treats device noise as part of the model (Fig. 2k's
+//! conductance-spread histograms; the Lorenz96 ensemble arguments for
+//! chaotic extrapolation), so the serving layer exposes noise *ensembles*
+//! as one request: [`twin::TwinRequest::ensemble`] carries an
+//! [`twin::EnsembleSpec`] (member count, percentile envelope, optional
+//! member trajectories) and the response carries pooled
+//! [`twin::EnsembleStats`]. Three rules, built on the noise-determinism
+//! invariants above:
+//!
+//! 1. **Lane derivation.** An ensemble request with family seed `s`
+//!    expands into N lanes inside **one** batched rollout — member `k`
+//!    runs on `NoiseLane::from_seed(ensemble_member_seed(s, k))`
+//!    ([`twin::ensemble_member_seed`] = `derive_stream_seed(s, k)`). The
+//!    key invariant: member `k` is bit-identical to a *standalone*
+//!    rollout submitted with that derived seed, across batch size, batch
+//!    composition, lane-capacity group splits and shard layout (serial
+//!    in-solver sharding and the parallel fan-out) — enforced by
+//!    `rust/tests/ensemble.rs`, release-gated in CI. There is no
+//!    per-member dispatch anywhere: N lanes ride the existing
+//!    `solve_batch_into` / sharded paths.
+//! 2. **Lane-counted batching.** Capacity accounting everywhere counts
+//!    *effective lanes* ([`twin::TwinRequest::lanes`]), not requests: the
+//!    coordinator's batcher matures a batch when pending lanes reach
+//!    `max_batch`, and the twins' `GroupPlan::plan_lanes` splits
+//!    sub-batches at [`twin::MAX_SUB_BATCH_LANES`] so one rollout's flat
+//!    state (and the solver scratch high-water marks behind it) stays
+//!    bounded. The router validates specs (member cap, percentile range)
+//!    before admission; [`coordinator::telemetry::Telemetry`] counts
+//!    `ensemble_rollouts` / `ensemble_members`.
+//! 3. **Pooled stats buffers (extends perf invariant 3).** Per-timestep
+//!    mean/std come from a streaming Welford accumulator
+//!    ([`util::stats::EnsembleAccumulator`]) whose output buffers are
+//!    drawn from the twin's `TrajectoryPool`; percentile envelopes sort
+//!    member values in reused scratch (`f64::total_cmp` — NaN samples
+//!    from diverged members are skipped and counted, never a panic); the
+//!    response's `trajectory` is a pooled copy of the ensemble mean; and
+//!    `recycle` reclaims every stats trajectory plus the emptied
+//!    [`twin::EnsembleStats`] shell. A warm ensemble batch therefore
+//!    performs zero heap allocations (enforced by the ensemble case in
+//!    `rust/tests/alloc.rs`).
+//!
 //! Python never runs on the request path: after `make artifacts` the Rust
 //! binary is self-contained.
 

@@ -22,7 +22,7 @@ use memode::device::taox::DeviceConfig;
 use memode::device::{programming, retention, taox, yield_model};
 use memode::runtime::service::PjrtService;
 use memode::twin::setup::{build_registry, TrainedWeights};
-use memode::twin::TwinRequest;
+use memode::twin::{EnsembleSpec, TwinRequest};
 use memode::util::cli::Args;
 use memode::util::rng::Pcg64;
 use memode::util::stats;
@@ -188,6 +188,11 @@ fn run_twin(argv: Vec<String>) -> Result<()> {
         .opt("steps", "200", "output samples")
         .opt("stimulus", "sine", "hp twins: sine|triangular|rectangular|modulated")
         .opt("seed", "", "noise-lane seed (replay a response's seed bit-exactly)")
+        .opt(
+            "ensemble",
+            "0",
+            "Monte-Carlo ensemble members (one batched rollout; 0 = plain)",
+        )
         .flag("pjrt", "start the PJRT runtime (needed for */pjrt routes)")
         .parse(argv)
         .map_err(|m| anyhow::anyhow!("{m}"))?;
@@ -225,6 +230,13 @@ fn run_twin(argv: Vec<String>) -> Result<()> {
             .map_err(|e| anyhow::anyhow!("--seed {seed_arg}: {e}"))?;
         req = req.with_seed(seed);
     }
+    let ensemble = args.get_usize("ensemble");
+    if ensemble > 0 {
+        req = req.with_ensemble(
+            EnsembleSpec::new(ensemble)
+                .with_percentiles(vec![5.0, 95.0]),
+        );
+    }
     let t0 = std::time::Instant::now();
     let resp = twin.run(&req)?;
     let dt_wall = t0.elapsed();
@@ -235,12 +247,15 @@ fn run_twin(argv: Vec<String>) -> Result<()> {
         dt_wall
     );
     // The replay command must pin everything the rollout depended on:
-    // seed, the stimulus for driven twins, and the runtime flags that
-    // register the route (config is assumed equal).
+    // seed, the stimulus for driven twins, the ensemble width, and the
+    // runtime flags that register the route (config is assumed equal).
     let mut replay_flags = String::new();
     if route.starts_with("hp/") {
         replay_flags.push_str(" --stimulus ");
         replay_flags.push_str(&args.get("stimulus"));
+    }
+    if ensemble > 0 {
+        replay_flags.push_str(&format!(" --ensemble {ensemble}"));
     }
     if args.get_bool("pjrt") {
         replay_flags.push_str(" --pjrt");
@@ -250,6 +265,25 @@ fn run_twin(argv: Vec<String>) -> Result<()> {
          {steps}{replay_flags} --seed {})",
         resp.seed, resp.seed
     );
+    if let Some(ens) = &resp.ensemble {
+        println!(
+            "ensemble: {} members, one batched rollout; trajectory below \
+             is the per-timestep mean ({} percentile envelope(s), {} NaN \
+             samples skipped)",
+            ens.members,
+            ens.percentiles.len(),
+            ens.nan_samples
+        );
+        if let (Some(m), Some(s)) = (ens.mean.last(), ens.std.last()) {
+            println!(
+                "  final sample mean±std: {:?}",
+                m.iter()
+                    .zip(s)
+                    .map(|(a, b)| format!("{a:.3}±{b:.3}"))
+                    .collect::<Vec<_>>()
+            );
+        }
+    }
     for (k, row) in resp.trajectory.iter().take(5).enumerate() {
         println!(
             "  t={:?}s: {:?}",
@@ -279,6 +313,11 @@ fn serve(argv: Vec<String>) -> Result<()> {
         .opt("requests", "64", "synthetic requests to issue")
         .opt("steps", "100", "samples per request")
         .opt("route", "lorenz96/digital", "route to load-test")
+        .opt(
+            "ensemble",
+            "0",
+            "ensemble members per synthetic request (0 = plain)",
+        )
         .flag("pjrt", "start the PJRT runtime")
         .parse(argv)
         .map_err(|m| anyhow::anyhow!("{m}"))?;
@@ -305,16 +344,29 @@ fn serve(argv: Vec<String>) -> Result<()> {
     let route = args.get("route");
     let n = args.get_usize("requests");
     let steps = args.get_usize("steps");
+    let ensemble = args.get_usize("ensemble");
     println!(
-        "serving {n} requests on {route} ({} workers, max batch {})",
-        cfg.serve.workers, cfg.serve.max_batch
+        "serving {n} requests on {route} ({} workers, max batch {} — \
+         counted in lanes{})",
+        cfg.serve.workers,
+        cfg.serve.max_batch,
+        if ensemble > 0 {
+            format!("; {ensemble}-member ensembles")
+        } else {
+            String::new()
+        }
     );
     let t0 = std::time::Instant::now();
     let pending: Vec<_> = (0..n)
         .filter_map(|_| {
-            coord
-                .submit(&route, TwinRequest::autonomous(vec![], steps))
-                .ok()
+            let mut req = TwinRequest::autonomous(vec![], steps);
+            if ensemble > 0 {
+                req = req.with_ensemble(
+                    EnsembleSpec::new(ensemble)
+                        .with_percentiles(vec![5.0, 95.0]),
+                );
+            }
+            coord.submit(&route, req).ok()
         })
         .collect();
     let accepted = pending.len();
@@ -332,15 +384,30 @@ fn serve(argv: Vec<String>) -> Result<()> {
     );
     let stats = coord.stats();
     println!("telemetry: {stats}");
+    if stats.ensemble_rollouts > 0 {
+        println!(
+            "ensembles: {} rollouts, {} members total (mean width {:.1})",
+            stats.ensemble_rollouts,
+            stats.ensemble_members,
+            stats.ensemble_members as f64
+                / stats.ensemble_rollouts as f64
+        );
+    }
     // Replay handles: every served rollout's noise seed is recorded, so
     // any noisy trajectory can be reproduced bit-exactly offline
-    // (recent_seeds is chronological; the tail is the newest).
+    // (recent_seeds is chronological; the tail is the newest). Ensemble
+    // jobs replay with the same family seed and --ensemble width.
     let pjrt_flag =
         if route.ends_with("/pjrt") { " --pjrt" } else { "" };
+    let ens_flag = if ensemble > 0 {
+        format!(" --ensemble {ensemble}")
+    } else {
+        String::new()
+    };
     for &(job, seed) in stats.recent_seeds.iter().rev().take(3) {
         println!(
             "replay job {job}: memode run-twin --route {route} --steps \
-             {steps}{pjrt_flag} --seed {seed}"
+             {steps}{ens_flag}{pjrt_flag} --seed {seed}"
         );
     }
     Ok(())

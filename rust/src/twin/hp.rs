@@ -17,8 +17,12 @@ use crate::models::loader::MlpWeights;
 use crate::models::mlp::{BatchDrivenMlpField, DrivenMlpField, Mlp};
 use crate::models::resnet::RecurrentResNet;
 use crate::ode::rk4::{self, Rk4};
-use crate::twin::{GroupPlan, RolloutFn, Twin, TwinRequest, TwinResponse};
+use crate::twin::{
+    assemble_ensemble_stats, ensemble_member_seed, EnsembleStats, GroupPlan,
+    RolloutFn, Twin, TwinRequest, TwinResponse, MAX_SUB_BATCH_LANES,
+};
 use crate::util::rng::{NoiseLane, SeedSequencer};
+use crate::util::stats::EnsembleAccumulator;
 use crate::util::tensor::{Trajectory, TrajectoryPool};
 use crate::workload::stimuli::Waveform;
 
@@ -66,17 +70,26 @@ struct HpScratch {
     slots: Vec<Option<Result<TwinResponse>>>,
     /// Valid request indices of the current group (submission order).
     members: Vec<usize>,
-    /// Per-member stimulus / initial state staging.
+    /// First lane slot of each valid request within the group's flat
+    /// batch (an ensemble request occupies `lanes()` consecutive slots).
+    lane_base: Vec<usize>,
+    /// Per-*lane* stimulus / initial state staging (ensemble members
+    /// replicate their request's stimulus and h0).
     waves: Vec<Waveform>,
     h0s: Vec<f64>,
-    /// Per-member resolved noise seeds (echoed in the responses).
+    /// Per-request resolved noise seeds (echoed in the responses; an
+    /// ensemble's members derive from it via [`ensemble_member_seed`]).
     seeds: Vec<u64>,
-    /// Per-member noise lanes (one per trajectory, rebuilt from seeds).
+    /// Per-lane noise lanes (one per trajectory, rebuilt from seeds).
     lanes: Vec<NoiseLane>,
     /// Flat batched rollout output (rows = one lockstep sample).
     flat: Trajectory,
     /// Response-trajectory pool (refilled via [`HpTwin::recycle`]).
     pool: TrajectoryPool,
+    /// Streaming ensemble moment accumulator (pooled output buffers).
+    acc: EnsembleAccumulator,
+    /// Recycled [`EnsembleStats`] container shells.
+    ens_shells: Vec<EnsembleStats>,
     solver: HpSolverScratch,
 }
 
@@ -158,13 +171,19 @@ impl HpTwin {
         }
     }
 
-    /// Return a response's trajectory buffer to the twin's pool.
+    /// Return a response's trajectory buffers to the twin's pool
+    /// (ensemble responses hand back every stats trajectory plus the
+    /// emptied container shell).
     ///
     /// Optional: callers that hand responses back make the next
     /// `run_batch` draw its output trajectories from the pool instead of
     /// the allocator — the zero-allocation steady state the allocation
     /// test (`rust/tests/alloc.rs`) pins down.
-    pub fn recycle(&mut self, resp: TwinResponse) {
+    pub fn recycle(&mut self, mut resp: TwinResponse) {
+        if let Some(mut ens) = resp.ensemble.take() {
+            ens.reclaim(&mut self.scratch.pool);
+            self.scratch.ens_shells.push(ens);
+        }
         self.scratch.pool.put(resp.trajectory);
     }
 
@@ -332,6 +351,13 @@ impl Twin for HpTwin {
     }
 
     fn run(&mut self, req: &TwinRequest) -> Result<TwinResponse> {
+        if req.ensemble.is_some() {
+            // Ensembles always execute as one batched rollout, even when
+            // submitted serially (one request = one sub-batch of N lanes).
+            let mut out = Vec::with_capacity(1);
+            self.run_batch_into(std::slice::from_ref(req), &mut out);
+            return out.pop().expect("one result per request");
+        }
         let wave = req
             .stimulus
             .ok_or_else(|| anyhow!("hp twin requires a stimulus"))?;
@@ -348,6 +374,7 @@ impl Twin for HpTwin {
             trajectory: Trajectory::from_data(1, h),
             backend,
             seed,
+            ensemble: None,
         })
     }
 
@@ -361,10 +388,14 @@ impl Twin for HpTwin {
     }
 
     /// Batched execution: requests are split into compatible sub-batches
-    /// (same `n_points`; stimulus and h0 are per-trajectory) and each
-    /// sub-batch runs as one batched rollout. Requests without a stimulus
-    /// fail individually without poisoning the batch. All bookkeeping and
-    /// the response trajectories come from the twin's reusable scratch.
+    /// (same `n_points`, lane-counted capacity; stimulus and h0 are
+    /// per-trajectory) and each sub-batch runs as one batched rollout. An
+    /// ensemble request expands into `EnsembleSpec::members` noise lanes
+    /// (member `k` seeded by [`ensemble_member_seed`]) inside that single
+    /// rollout, and its response carries pooled [`EnsembleStats`].
+    /// Requests without a stimulus (or with an invalid ensemble spec) fail
+    /// individually without poisoning the batch. All bookkeeping and the
+    /// response trajectories come from the twin's reusable scratch.
     fn run_batch_into(
         &mut self,
         reqs: &[TwinRequest],
@@ -372,56 +403,85 @@ impl Twin for HpTwin {
     ) {
         let backend = self.backend.label();
         let mut sc = std::mem::take(&mut self.scratch);
-        sc.plan.plan(reqs);
+        sc.plan.plan_lanes(reqs, MAX_SUB_BATCH_LANES);
         sc.slots.clear();
         sc.slots.resize_with(reqs.len(), || None);
         for g in 0..sc.plan.n_groups() {
             let n_points = reqs[sc.plan.group(g)[0]].n_points;
             sc.members.clear();
+            sc.lane_base.clear();
             sc.waves.clear();
             sc.h0s.clear();
             sc.seeds.clear();
             sc.lanes.clear();
             for &i in sc.plan.group(g) {
-                match reqs[i].stimulus {
-                    Some(w) => {
-                        sc.members.push(i);
-                        sc.waves.push(w);
-                        sc.h0s.push(if reqs[i].h0.is_empty() {
-                            crate::device::hp::H0
-                        } else {
-                            reqs[i].h0[0]
-                        });
-                        let seed = self.seeds.resolve(reqs[i].seed);
-                        sc.seeds.push(seed);
-                        sc.lanes.push(NoiseLane::from_seed(seed));
-                    }
+                let wave = match reqs[i].stimulus {
+                    Some(w) => w,
                     None => {
                         sc.slots[i] = Some(Err(anyhow!(
                             "hp twin requires a stimulus"
                         )));
+                        continue;
                     }
+                };
+                if let Some(spec) = &reqs[i].ensemble {
+                    if let Err(e) = spec.validate() {
+                        sc.slots[i] = Some(Err(e));
+                        continue;
+                    }
+                }
+                let h0 = if reqs[i].h0.is_empty() {
+                    crate::device::hp::H0
+                } else {
+                    reqs[i].h0[0]
+                };
+                let seed = self.seeds.resolve(reqs[i].seed);
+                sc.members.push(i);
+                sc.lane_base.push(sc.lanes.len());
+                sc.seeds.push(seed);
+                if reqs[i].ensemble.is_some() {
+                    for m in 0..reqs[i].lanes() {
+                        sc.waves.push(wave);
+                        sc.h0s.push(h0);
+                        sc.lanes.push(NoiseLane::from_seed(
+                            ensemble_member_seed(seed, m as u64),
+                        ));
+                    }
+                } else {
+                    sc.waves.push(wave);
+                    sc.h0s.push(h0);
+                    sc.lanes.push(NoiseLane::from_seed(seed));
                 }
             }
             if sc.members.is_empty() {
                 continue;
             }
             if matches!(self.backend, HpBackend::Pjrt(_)) {
-                // No batched artifact path yet: per-trajectory rollouts.
+                // No batched artifact path yet: per-trajectory rollouts
+                // (and therefore no single-rollout ensemble expansion).
                 for k in 0..sc.members.len() {
                     let i = sc.members[k];
+                    if reqs[i].ensemble.is_some() {
+                        sc.slots[i] = Some(Err(anyhow!(
+                            "ensemble requests are not supported on the \
+                             pjrt backend"
+                        )));
+                        continue;
+                    }
+                    let base = sc.lane_base[k];
                     let seed = sc.seeds[k];
                     let r = self
                         .simulate_lane(
-                            &sc.waves[k],
-                            sc.h0s[k],
+                            &sc.waves[base],
+                            sc.h0s[base],
                             n_points,
-                            &mut sc.lanes[k],
+                            &mut sc.lanes[base],
                         )
                         .map(|h| TwinResponse {
                             trajectory: Trajectory::from_data(1, h),
                             backend,
                             seed,
+                            ensemble: None,
                         });
                     sc.slots[i] = Some(r);
                 }
@@ -436,17 +496,47 @@ impl Twin for HpTwin {
                 &mut sc.flat,
             ) {
                 Ok(()) => {
-                    let batch = sc.members.len();
+                    let batch = sc.waves.len();
                     for (k, &i) in sc.members.iter().enumerate() {
-                        let mut t = sc.pool.get(1);
-                        crate::ode::batch::unbatch_into(
-                            &sc.flat, batch, 1, k, &mut t,
-                        );
-                        sc.slots[i] = Some(Ok(TwinResponse {
-                            trajectory: t,
-                            backend,
-                            seed: sc.seeds[k],
-                        }));
+                        let base = sc.lane_base[k];
+                        match &reqs[i].ensemble {
+                            None => {
+                                let mut t = sc.pool.get(1);
+                                crate::ode::batch::unbatch_into(
+                                    &sc.flat, batch, 1, base, &mut t,
+                                );
+                                sc.slots[i] = Some(Ok(TwinResponse {
+                                    trajectory: t,
+                                    backend,
+                                    seed: sc.seeds[k],
+                                    ensemble: None,
+                                }));
+                            }
+                            Some(spec) => {
+                                let shell = sc
+                                    .ens_shells
+                                    .pop()
+                                    .unwrap_or_default();
+                                let (t, stats) = assemble_ensemble_stats(
+                                    spec,
+                                    &sc.flat,
+                                    crate::twin::EnsembleSlot {
+                                        batch,
+                                        dim: 1,
+                                        base,
+                                    },
+                                    &mut sc.acc,
+                                    &mut sc.pool,
+                                    shell,
+                                );
+                                sc.slots[i] = Some(Ok(TwinResponse {
+                                    trajectory: t,
+                                    backend,
+                                    seed: sc.seeds[k],
+                                    ensemble: Some(stats),
+                                }));
+                            }
+                        }
                     }
                 }
                 Err(e) => {
@@ -665,6 +755,62 @@ mod tests {
                 "noisy request depends on batch position"
             );
         }
+    }
+
+    #[test]
+    fn ensemble_members_match_standalone_derived_seeds() {
+        use crate::twin::{ensemble_member_seed, EnsembleSpec};
+        // One ensemble request = one batched rollout of N noisy lanes;
+        // member k must equal a standalone rollout seeded with
+        // ensemble_member_seed(seed, k).
+        let cfg = DeviceConfig {
+            fault_rate: 0.0,
+            pulse_sigma: 0.0,
+            ..Default::default()
+        };
+        let noise = AnalogNoise { read: 0.05, prog: 0.0 };
+        let mut twin = HpTwin::analog(&toy_weights(), &cfg, noise, 3);
+        let n = 6;
+        let req = TwinRequest::driven(
+            vec![0.4],
+            8,
+            Waveform::sine(1.0, 4.0),
+        )
+        .with_seed(777)
+        .with_ensemble(
+            EnsembleSpec::new(n)
+                .with_percentiles(vec![10.0, 90.0])
+                .with_member_trajectories(),
+        );
+        let resp = twin.run(&req).unwrap();
+        assert_eq!(resp.seed, 777);
+        let ens = resp.ensemble.as_ref().expect("ensemble stats");
+        assert_eq!(ens.members, n);
+        assert_eq!(ens.mean.len(), 8);
+        assert_eq!(ens.std.len(), 8);
+        assert_eq!(ens.percentiles.len(), 2);
+        assert_eq!(ens.member_trajectories.len(), n);
+        assert_eq!(ens.nan_samples, 0);
+        // The response trajectory is the ensemble mean.
+        assert_eq!(resp.trajectory, ens.mean);
+        for (k, member) in ens.member_trajectories.iter().enumerate() {
+            let standalone = twin
+                .run(
+                    &TwinRequest::driven(
+                        vec![0.4],
+                        8,
+                        Waveform::sine(1.0, 4.0),
+                    )
+                    .with_seed(ensemble_member_seed(777, k as u64)),
+                )
+                .unwrap();
+            assert_eq!(
+                *member, standalone.trajectory,
+                "member {k} != standalone derived-seed rollout"
+            );
+        }
+        // Noise is real: the spread is non-zero past the initial sample.
+        assert!(ens.std.row(7)[0] > 0.0);
     }
 
     #[test]

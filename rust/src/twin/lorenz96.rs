@@ -22,8 +22,12 @@ use crate::models::rnn::{Recurrent, VanillaRnn};
 use crate::ode::batch::unbatch_into;
 use crate::ode::rk4::{self, Rk4};
 use crate::twin::shard::{ShardExecutor, ShardSnapshot, ShardedAnalogOde};
-use crate::twin::{GroupPlan, RolloutFn, Twin, TwinRequest, TwinResponse};
+use crate::twin::{
+    assemble_ensemble_stats, ensemble_member_seed, EnsembleStats, GroupPlan,
+    RolloutFn, Twin, TwinRequest, TwinResponse, MAX_SUB_BATCH_LANES,
+};
 use crate::util::rng::{NoiseLane, SeedSequencer};
+use crate::util::stats::EnsembleAccumulator;
 use crate::util::tensor::{Trajectory, TrajectoryPool};
 use crate::workload::lorenz96;
 
@@ -85,14 +89,23 @@ struct L96Scratch {
     plan: GroupPlan,
     slots: Vec<Option<Result<TwinResponse>>>,
     members: Vec<usize>,
-    /// Flat `[members * dim]` initial states of the current group.
+    /// First lane slot of each valid request within the group's flat
+    /// batch (an ensemble request occupies `lanes()` consecutive slots).
+    lane_base: Vec<usize>,
+    /// Flat `[lanes * dim]` initial states of the current group (ensemble
+    /// members replicate their request's h0).
     h0s: Vec<f64>,
-    /// Per-member resolved noise seeds (echoed in the responses).
+    /// Per-request resolved noise seeds (echoed in the responses; an
+    /// ensemble's members derive from it via [`ensemble_member_seed`]).
     seeds: Vec<u64>,
-    /// Per-member noise lanes (one per trajectory, rebuilt from seeds).
+    /// Per-lane noise lanes (one per trajectory, rebuilt from seeds).
     lanes: Vec<NoiseLane>,
     flat: Trajectory,
     pool: TrajectoryPool,
+    /// Streaming ensemble moment accumulator (pooled output buffers).
+    acc: EnsembleAccumulator,
+    /// Recycled [`EnsembleStats`] container shells.
+    ens_shells: Vec<EnsembleStats>,
     solver: L96SolverScratch,
 }
 
@@ -237,9 +250,14 @@ impl Lorenz96Twin {
         }
     }
 
-    /// Return a response's trajectory buffer to the twin's pool (see
-    /// [`crate::twin::hp::HpTwin::recycle`]).
-    pub fn recycle(&mut self, resp: TwinResponse) {
+    /// Return a response's trajectory buffers to the twin's pool (see
+    /// [`crate::twin::hp::HpTwin::recycle`]; ensemble responses hand back
+    /// every stats trajectory plus the emptied container shell).
+    pub fn recycle(&mut self, mut resp: TwinResponse) {
+        if let Some(mut ens) = resp.ensemble.take() {
+            ens.reclaim(&mut self.scratch.pool);
+            self.scratch.ens_shells.push(ens);
+        }
         self.scratch.pool.put(resp.trajectory);
     }
 
@@ -397,6 +415,13 @@ impl Twin for Lorenz96Twin {
     }
 
     fn run(&mut self, req: &TwinRequest) -> Result<TwinResponse> {
+        if req.ensemble.is_some() {
+            // Ensembles always execute as one batched rollout, even when
+            // submitted serially (one request = one sub-batch of N lanes).
+            let mut out = Vec::with_capacity(1);
+            self.run_batch_into(std::slice::from_ref(req), &mut out);
+            return out.pop().expect("one result per request");
+        }
         // The default-h0 copy keeps `self` free for the mutable simulate
         // call below; the batched path stages initial states without it.
         let default_h0;
@@ -416,7 +441,7 @@ impl Twin for Lorenz96Twin {
         let seed = self.seeds.resolve(req.seed);
         let mut lane = NoiseLane::from_seed(seed);
         let trajectory = self.simulate_lane(h0, req.n_points, &mut lane)?;
-        Ok(TwinResponse { trajectory, backend, seed })
+        Ok(TwinResponse { trajectory, backend, seed, ensemble: None })
     }
 
     fn run_batch(
@@ -429,8 +454,13 @@ impl Twin for Lorenz96Twin {
     }
 
     /// Batched execution: requests split into compatible sub-batches (same
-    /// `n_points`); initial states are resolved per request, and a request
-    /// with the wrong h0 dimension fails alone without poisoning the rest.
+    /// `n_points`, lane-counted capacity); initial states are resolved per
+    /// request, and a request with the wrong h0 dimension (or an invalid
+    /// ensemble spec) fails alone without poisoning the rest. An ensemble
+    /// request expands into `EnsembleSpec::members` noise lanes (member
+    /// `k` seeded by [`ensemble_member_seed`]) inside the group's single
+    /// batched rollout — including the tile-sharded execution forms — and
+    /// its response carries pooled [`EnsembleStats`].
     fn run_batch_into(
         &mut self,
         reqs: &[TwinRequest],
@@ -439,56 +469,88 @@ impl Twin for Lorenz96Twin {
         let backend = self.backend.label();
         let dim = self.dim;
         let mut sc = std::mem::take(&mut self.scratch);
-        sc.plan.plan(reqs);
+        sc.plan.plan_lanes(reqs, MAX_SUB_BATCH_LANES);
         sc.slots.clear();
         sc.slots.resize_with(reqs.len(), || None);
         for g in 0..sc.plan.n_groups() {
             let n_points = reqs[sc.plan.group(g)[0]].n_points;
             sc.members.clear();
+            sc.lane_base.clear();
             sc.h0s.clear();
             sc.seeds.clear();
             sc.lanes.clear();
+            let mut lane_count = 0;
             for &i in sc.plan.group(g) {
                 let h0: &[f64] = if reqs[i].h0.is_empty() {
                     &self.default_h0
                 } else {
                     &reqs[i].h0
                 };
-                if h0.len() == dim {
-                    sc.members.push(i);
-                    sc.h0s.extend_from_slice(h0);
-                } else {
+                if h0.len() != dim {
                     sc.slots[i] = Some(Err(anyhow::anyhow!(
                         "h0 dim {} != twin dim {}",
                         h0.len(),
                         dim
                     )));
+                    continue;
                 }
+                if let Some(spec) = &reqs[i].ensemble {
+                    if let Err(e) = spec.validate() {
+                        sc.slots[i] = Some(Err(e));
+                        continue;
+                    }
+                }
+                sc.members.push(i);
+                sc.lane_base.push(lane_count);
+                for _ in 0..reqs[i].lanes() {
+                    sc.h0s.extend_from_slice(h0);
+                }
+                lane_count += reqs[i].lanes();
             }
-            for k in 0..sc.members.len() {
-                let seed = self.seeds.resolve(reqs[sc.members[k]].seed);
+            // Seeds and lanes in a second pass: the sequencer lives on
+            // `self`, which the default-h0 borrow above keeps off-limits.
+            for &i in &sc.members {
+                let seed = self.seeds.resolve(reqs[i].seed);
                 sc.seeds.push(seed);
-                sc.lanes.push(NoiseLane::from_seed(seed));
+                if reqs[i].ensemble.is_some() {
+                    for m in 0..reqs[i].lanes() {
+                        sc.lanes.push(NoiseLane::from_seed(
+                            ensemble_member_seed(seed, m as u64),
+                        ));
+                    }
+                } else {
+                    sc.lanes.push(NoiseLane::from_seed(seed));
+                }
             }
             if sc.members.is_empty() {
                 continue;
             }
-            let batch = sc.members.len();
+            let batch = sc.lanes.len();
             if matches!(self.backend, L96Backend::Pjrt(_)) {
-                // No batched artifact path yet: per-trajectory rollouts.
-                for k in 0..batch {
+                // No batched artifact path yet: per-trajectory rollouts
+                // (and therefore no single-rollout ensemble expansion).
+                for k in 0..sc.members.len() {
                     let i = sc.members[k];
+                    if reqs[i].ensemble.is_some() {
+                        sc.slots[i] = Some(Err(anyhow::anyhow!(
+                            "ensemble requests are not supported on the \
+                             pjrt backend"
+                        )));
+                        continue;
+                    }
+                    let base = sc.lane_base[k];
                     let seed = sc.seeds[k];
                     let r = self
                         .simulate_lane(
-                            &sc.h0s[k * dim..(k + 1) * dim],
+                            &sc.h0s[base * dim..(base + 1) * dim],
                             n_points,
-                            &mut sc.lanes[k],
+                            &mut sc.lanes[base],
                         )
                         .map(|trajectory| TwinResponse {
                             trajectory,
                             backend,
                             seed,
+                            ensemble: None,
                         });
                     sc.slots[i] = Some(r);
                 }
@@ -504,13 +566,45 @@ impl Twin for Lorenz96Twin {
             ) {
                 Ok(()) => {
                     for (k, &i) in sc.members.iter().enumerate() {
-                        let mut t = sc.pool.get(dim);
-                        unbatch_into(&sc.flat, batch, dim, k, &mut t);
-                        sc.slots[i] = Some(Ok(TwinResponse {
-                            trajectory: t,
-                            backend,
-                            seed: sc.seeds[k],
-                        }));
+                        let base = sc.lane_base[k];
+                        match &reqs[i].ensemble {
+                            None => {
+                                let mut t = sc.pool.get(dim);
+                                unbatch_into(
+                                    &sc.flat, batch, dim, base, &mut t,
+                                );
+                                sc.slots[i] = Some(Ok(TwinResponse {
+                                    trajectory: t,
+                                    backend,
+                                    seed: sc.seeds[k],
+                                    ensemble: None,
+                                }));
+                            }
+                            Some(spec) => {
+                                let shell = sc
+                                    .ens_shells
+                                    .pop()
+                                    .unwrap_or_default();
+                                let (t, stats) = assemble_ensemble_stats(
+                                    spec,
+                                    &sc.flat,
+                                    crate::twin::EnsembleSlot {
+                                        batch,
+                                        dim,
+                                        base,
+                                    },
+                                    &mut sc.acc,
+                                    &mut sc.pool,
+                                    shell,
+                                );
+                                sc.slots[i] = Some(Ok(TwinResponse {
+                                    trajectory: t,
+                                    backend,
+                                    seed: sc.seeds[k],
+                                    ensemble: Some(stats),
+                                }));
+                            }
+                        }
                     }
                 }
                 Err(e) => {
@@ -778,6 +872,86 @@ mod tests {
                 );
                 assert_eq!(batched[k].as_ref().unwrap().seed, 900 + k as u64);
             }
+        }
+    }
+
+    #[test]
+    fn ensemble_identical_across_execution_forms() {
+        use crate::twin::{ensemble_member_seed, EnsembleSpec};
+        // One seed, 8 members, three execution forms: member k equals a
+        // standalone rollout seeded with ensemble_member_seed(seed, k),
+        // and the pooled stats are identical everywhere.
+        let d = 34;
+        let w = crate::models::loader::decay_mlp_weights(d);
+        let cfg = DeviceConfig {
+            fault_rate: 0.0,
+            pulse_sigma: 0.0,
+            ..Default::default()
+        };
+        let noise = AnalogNoise { read: 0.05, prog: 0.0 };
+        let opts = |shards, parallel| L96AnalogOpts {
+            substeps: 2,
+            shards,
+            parallel,
+        };
+        let h0: Vec<f64> =
+            (0..d).map(|i| (i as f64 * 0.17).sin() * 0.5).collect();
+        let n = 8;
+        let req = TwinRequest::autonomous(h0.clone(), 4)
+            .with_seed(4242)
+            .with_ensemble(
+                EnsembleSpec::new(n)
+                    .with_percentiles(vec![5.0, 95.0])
+                    .with_member_trajectories(),
+            );
+        let mut reference =
+            Lorenz96Twin::analog_opts(&w, &cfg, noise, 5, opts(1, false));
+        let want = reference.run(&req).unwrap();
+        let want_ens = want.ensemble.as_ref().unwrap();
+        assert_eq!(want_ens.members, n);
+        // Member k == standalone derived-seed rollout on a fresh twin.
+        let mut fresh =
+            Lorenz96Twin::analog_opts(&w, &cfg, noise, 5, opts(1, false));
+        for (k, member) in
+            want_ens.member_trajectories.iter().enumerate()
+        {
+            let standalone = fresh
+                .run(
+                    &TwinRequest::autonomous(h0.clone(), 4)
+                        .with_seed(ensemble_member_seed(4242, k as u64)),
+                )
+                .unwrap();
+            assert_eq!(
+                *member, standalone.trajectory,
+                "member {k} != standalone derived-seed rollout"
+            );
+        }
+        for (label, mut twin) in [
+            (
+                "serial sharded",
+                Lorenz96Twin::analog_opts(&w, &cfg, noise, 5, opts(2, false)),
+            ),
+            (
+                "parallel fan-out",
+                Lorenz96Twin::analog_opts(&w, &cfg, noise, 5, opts(2, true)),
+            ),
+        ] {
+            let got = twin.run(&req).unwrap();
+            let ens = got.ensemble.as_ref().unwrap();
+            assert_eq!(
+                got.trajectory, want.trajectory,
+                "{label}: ensemble mean diverged"
+            );
+            assert_eq!(ens.mean, want_ens.mean, "{label}: mean");
+            assert_eq!(ens.std, want_ens.std, "{label}: std");
+            assert_eq!(
+                ens.percentiles, want_ens.percentiles,
+                "{label}: percentiles"
+            );
+            assert_eq!(
+                ens.member_trajectories, want_ens.member_trajectories,
+                "{label}: members"
+            );
         }
     }
 

@@ -21,6 +21,11 @@
 //! vector so a warm worker's dispatch loop — and the twins' pooled
 //! response trajectories underneath — never touches the allocator in
 //! steady state.
+//!
+//! Monte-Carlo ensembles are first-class requests: a request carrying an
+//! [`EnsembleSpec`] expands into N per-member noise lanes executed as one
+//! batched rollout, and the response carries pooled per-timestep
+//! [`EnsembleStats`] (see the ensemble invariants in `lib.rs`).
 
 pub mod hp;
 pub mod lorenz96;
@@ -29,7 +34,10 @@ pub mod setup;
 pub mod shard;
 pub mod throughput;
 
-use crate::util::tensor::Trajectory;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::rng::derive_stream_seed;
+use crate::util::tensor::{Trajectory, TrajectoryPool};
 use crate::workload::stimuli::Waveform;
 
 /// A rollout executed on a PJRT artifact: (h0, optional stimulus sampled at
@@ -39,6 +47,79 @@ pub type RolloutFn = Box<
     dyn FnMut(&[f64], Option<&[f64]>) -> anyhow::Result<Vec<Vec<f64>>>
         + Send,
 >;
+
+/// Hard cap on ensemble member counts accepted by the serving layer (the
+/// router rejects wider specs before admission; one request is one batched
+/// rollout, so members bound the rollout's flat state width).
+pub const MAX_ENSEMBLE_MEMBERS: usize = 4096;
+
+/// Lane cap per twin sub-batch: group planning counts *effective lanes*
+/// (ensemble members, not requests) against this, so one batched solve's
+/// scratch footprint stays bounded no matter how many wide ensembles
+/// coalesce into a batch. A single request wider than the cap still runs
+/// as its own sub-batch (a request is never split across rollouts).
+pub const MAX_SUB_BATCH_LANES: usize = 256;
+
+/// Noise seed of ensemble member `k` under a request seed: the replay
+/// handle of the per-member lane derivation. The key invariant (enforced
+/// by `rust/tests/ensemble.rs`): member `k` of an ensemble rollout is
+/// bit-identical to a *standalone* rollout submitted with
+/// `TwinRequest::with_seed(ensemble_member_seed(seed, k))`, across batch
+/// composition, batch size and shard layout.
+pub fn ensemble_member_seed(seed: u64, member: u64) -> u64 {
+    derive_stream_seed(seed, member)
+}
+
+/// A Monte-Carlo ensemble specification: one seed, N noise lanes, one
+/// batched rollout, pooled statistics in the response.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnsembleSpec {
+    /// Member count (N per-member noise lanes in one batched rollout).
+    pub members: usize,
+    /// Percentile envelope trajectories to return (each in 0..=100, e.g.
+    /// `[5.0, 95.0]`); empty = mean/std only.
+    pub percentiles: Vec<f64>,
+    /// Also return every member trajectory in
+    /// [`EnsembleStats::member_trajectories`].
+    pub return_members: bool,
+}
+
+impl EnsembleSpec {
+    pub fn new(members: usize) -> Self {
+        Self { members, percentiles: Vec::new(), return_members: false }
+    }
+
+    /// Request a percentile envelope (values in 0..=100).
+    pub fn with_percentiles(mut self, ps: Vec<f64>) -> Self {
+        self.percentiles = ps;
+        self
+    }
+
+    /// Also return the per-member trajectories.
+    pub fn with_member_trajectories(mut self) -> Self {
+        self.return_members = true;
+        self
+    }
+
+    /// Validate the spec (the router calls this before admission; twins
+    /// re-check so direct callers get per-request errors, not panics).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.members >= 1, "ensemble needs >= 1 member");
+        anyhow::ensure!(
+            self.members <= MAX_ENSEMBLE_MEMBERS,
+            "ensemble of {} members exceeds the cap of {}",
+            self.members,
+            MAX_ENSEMBLE_MEMBERS
+        );
+        for &p in &self.percentiles {
+            anyhow::ensure!(
+                p.is_finite() && (0.0..=100.0).contains(&p),
+                "percentile {p} outside 0..=100"
+            );
+        }
+        Ok(())
+    }
+}
 
 /// A twin-inference request (what the coordinator routes).
 #[derive(Debug, Clone)]
@@ -56,15 +137,21 @@ pub struct TwinRequest {
     /// auto-derive); either way the seed actually used is echoed in
     /// [`TwinResponse::seed`] for replay.
     pub seed: Option<u64>,
+    /// Monte-Carlo ensemble: expand this request into
+    /// `EnsembleSpec::members` noise lanes (member `k` seeded by
+    /// [`ensemble_member_seed`]) executed as a single batched rollout, and
+    /// return pooled [`EnsembleStats`]. Twins without a batched ensemble
+    /// path report a per-request error rather than silently downgrading.
+    pub ensemble: Option<EnsembleSpec>,
 }
 
 impl TwinRequest {
     pub fn autonomous(h0: Vec<f64>, n_points: usize) -> Self {
-        Self { h0, n_points, stimulus: None, seed: None }
+        Self { h0, n_points, stimulus: None, seed: None, ensemble: None }
     }
 
     pub fn driven(h0: Vec<f64>, n_points: usize, w: Waveform) -> Self {
-        Self { h0, n_points, stimulus: Some(w), seed: None }
+        Self { h0, n_points, stimulus: Some(w), seed: None, ensemble: None }
     }
 
     /// Pin the noise-lane seed (replay a previous response's
@@ -73,6 +160,125 @@ impl TwinRequest {
         self.seed = Some(seed);
         self
     }
+
+    /// Attach a Monte-Carlo ensemble spec.
+    pub fn with_ensemble(mut self, spec: EnsembleSpec) -> Self {
+        self.ensemble = Some(spec);
+        self
+    }
+
+    /// Effective trajectory lanes this request contributes to a batched
+    /// rollout (ensemble members, else 1) — what the batcher and the
+    /// twins' group planning count against capacity.
+    pub fn lanes(&self) -> usize {
+        self.ensemble.as_ref().map_or(1, |e| e.members.max(1))
+    }
+}
+
+/// Per-timestep statistics of a Monte-Carlo ensemble rollout.
+///
+/// Every trajectory here is drawn from the twin's [`TrajectoryPool`];
+/// handing the response back via the twin's `recycle` returns them (and
+/// the emptied container shells) so a warm ensemble batch allocates
+/// nothing in steady state.
+#[derive(Debug, Clone, Default)]
+pub struct EnsembleStats {
+    /// Member count of the rollout.
+    pub members: usize,
+    /// Per-timestep ensemble mean, `[n_points][dim]`.
+    pub mean: Trajectory,
+    /// Per-timestep ensemble standard deviation (population), NaN where
+    /// no member produced a finite sample.
+    pub std: Trajectory,
+    /// Requested percentile envelopes: `(p, trajectory)` pairs in the
+    /// order of [`EnsembleSpec::percentiles`].
+    pub percentiles: Vec<(f64, Trajectory)>,
+    /// Per-member trajectories (only when
+    /// [`EnsembleSpec::return_members`] was set); member `k` replays
+    /// standalone under [`ensemble_member_seed`]`(seed, k)`.
+    pub member_trajectories: Vec<Trajectory>,
+    /// NaN samples the moment accumulator skipped (diverged members).
+    pub nan_samples: u64,
+}
+
+impl EnsembleStats {
+    /// Return every pooled trajectory to `pool`, leaving an empty shell
+    /// whose container capacities survive for reuse (the twins keep a
+    /// free-list of shells to close the zero-allocation loop).
+    pub fn reclaim(&mut self, pool: &mut TrajectoryPool) {
+        pool.put(std::mem::take(&mut self.mean));
+        pool.put(std::mem::take(&mut self.std));
+        for (_, t) in self.percentiles.drain(..) {
+            pool.put(t);
+        }
+        for t in self.member_trajectories.drain(..) {
+            pool.put(t);
+        }
+        self.members = 0;
+        self.nan_samples = 0;
+    }
+}
+
+/// Lane-slot location of one ensemble inside a flat batched rollout
+/// whose rows are `batch * dim` wide.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct EnsembleSlot {
+    /// Total lanes in the rollout.
+    pub batch: usize,
+    /// Per-trajectory state dimension.
+    pub dim: usize,
+    /// First lane slot of this ensemble.
+    pub base: usize,
+}
+
+/// Assemble pooled ensemble statistics for the ensemble occupying lane
+/// slots `slot.base .. slot.base + spec.members` of a flat batched
+/// rollout. Shared by the HP and Lorenz96 twins' batched paths; every
+/// output buffer comes from `pool` and the container shells are reused
+/// (`shell` should be a recycled [`EnsembleStats`]), so a warm call is
+/// allocation-free. Returns the response trajectory (a pooled copy of
+/// the ensemble mean) and the filled stats payload.
+pub(crate) fn assemble_ensemble_stats(
+    spec: &EnsembleSpec,
+    flat: &Trajectory,
+    slot: EnsembleSlot,
+    acc: &mut crate::util::stats::EnsembleAccumulator,
+    pool: &mut TrajectoryPool,
+    mut shell: EnsembleStats,
+) -> (Trajectory, EnsembleStats) {
+    let EnsembleSlot { batch, dim, base } = slot;
+    let n = spec.members;
+    acc.begin(dim, flat.len(), pool);
+    for m in 0..n {
+        let lo = (base + m) * dim;
+        acc.add_member_rows(flat.iter().map(|row| &row[lo..lo + dim]));
+    }
+    let (mean, std, nan) = acc.finish();
+    // One gather + sort per element serves every requested percentile.
+    for &p in &spec.percentiles {
+        shell.percentiles.push((p, pool.get(dim)));
+    }
+    acc.percentile_pairs_flat_into(flat, base, n, &mut shell.percentiles);
+    if spec.return_members {
+        for m in 0..n {
+            let mut t = pool.get(dim);
+            crate::ode::batch::unbatch_into(
+                flat,
+                batch,
+                dim,
+                base + m,
+                &mut t,
+            );
+            shell.member_trajectories.push(t);
+        }
+    }
+    let mut resp_traj = pool.get(dim);
+    resp_traj.extend_rows(&mean);
+    shell.members = n;
+    shell.mean = mean;
+    shell.std = std;
+    shell.nan_samples = nan;
+    (resp_traj, shell)
 }
 
 /// A twin-inference response.
@@ -81,17 +287,46 @@ impl TwinRequest {
 /// backend label is `&'static str` — both deliberate: a response carries
 /// exactly one heap buffer, and twins draw that buffer from a pool so a
 /// warm batch path allocates nothing (see the perf invariants in
-/// `lib.rs`).
+/// `lib.rs`). Ensemble responses additionally carry pooled
+/// [`EnsembleStats`].
 #[derive(Debug, Clone)]
 pub struct TwinResponse {
-    /// [n_points][state_dim] trajectory, stored flat.
+    /// [n_points][state_dim] trajectory, stored flat. For ensemble
+    /// requests this is the ensemble *mean* (the stats payload holds the
+    /// spread and, optionally, the members).
     pub trajectory: Trajectory,
     /// Which backend produced it (telemetry).
     pub backend: &'static str,
     /// The noise-lane seed this rollout used (the request's, or the
     /// auto-derived one): resubmitting with `TwinRequest::with_seed(seed)`
-    /// replays a noisy analogue rollout bit for bit.
+    /// replays a noisy analogue rollout bit for bit. For ensembles the
+    /// seed is the *family* root; member `k` replays standalone under
+    /// [`ensemble_member_seed`]`(seed, k)`.
     pub seed: u64,
+    /// Ensemble statistics (present iff the request carried an
+    /// [`EnsembleSpec`] and the twin served it).
+    pub ensemble: Option<EnsembleStats>,
+}
+
+/// Root of the trait fallback's auto-derived seed family (fixed constant:
+/// seeds exist for replay, not secrecy — see the router's seed root).
+const FALLBACK_SEED_ROOT: u64 = 0xfa11_bac5_eed0_0003;
+
+/// Process-global sequence behind [`fallback_auto_seed`]. Per-twin state
+/// would be nicer, but the trait default cannot carry any — a shared
+/// counter still guarantees the two properties that matter: every
+/// seedless fallback request gets a *distinct* seed, and the echoed seed
+/// replays the rollout bit for bit.
+static FALLBACK_SEED_SEQ: AtomicU64 = AtomicU64::new(1);
+
+/// Next auto-derived seed for a seedless request on the trait's serial
+/// fallback path — mirrors the twins' `SeedSequencer` resolution (a real
+/// replayable seed, echoed in the response) for twins without one.
+fn fallback_auto_seed() -> u64 {
+    derive_stream_seed(
+        FALLBACK_SEED_ROOT,
+        FALLBACK_SEED_SEQ.fetch_add(1, Ordering::Relaxed),
+    )
 }
 
 /// The object-safe twin interface the coordinator serves.
@@ -116,20 +351,34 @@ pub trait Twin: Send {
     /// its batch-mates.
     ///
     /// The default is the serial fallback (`run` per request), so every
-    /// twin keeps working under the coordinator's batch dispatch. Twins
-    /// with a real batched rollout (the analogue solver's multi-vector
-    /// crossbar reads, the digital backends' per-layer GEMMs) override
-    /// this (or [`Twin::run_batch_into`]); implementations split
-    /// incompatible requests into compatible sub-batches (see
-    /// [`GroupPlan`]) rather than padding, and their batched trajectories
-    /// are bit-identical to serial `run` calls with the same seeds —
-    /// noise off *and* noise on (per-trajectory noise lanes; see the
-    /// noise-determinism invariants in `lib.rs`).
+    /// twin keeps working under the coordinator's batch dispatch. Seedless
+    /// requests are stamped with a fresh auto-derived seed *before* `run`
+    /// sees them, so fallback twins echo a real, replayable seed instead
+    /// of a fake `0` (the seed-echo contract: resubmitting the echoed seed
+    /// reproduces the rollout bit for bit). Twins with a real batched
+    /// rollout (the analogue solver's multi-vector crossbar reads, the
+    /// digital backends' per-layer GEMMs) override this (or
+    /// [`Twin::run_batch_into`]); implementations split incompatible
+    /// requests into compatible sub-batches (see [`GroupPlan`]) rather
+    /// than padding, and their batched trajectories are bit-identical to
+    /// serial `run` calls with the same seeds — noise off *and* noise on
+    /// (per-trajectory noise lanes; see the noise-determinism invariants
+    /// in `lib.rs`).
     fn run_batch(
         &mut self,
         reqs: &[TwinRequest],
     ) -> Vec<anyhow::Result<TwinResponse>> {
-        reqs.iter().map(|r| self.run(r)).collect()
+        reqs.iter()
+            .map(|r| {
+                if r.seed.is_none() {
+                    let mut seeded = r.clone();
+                    seeded.seed = Some(fallback_auto_seed());
+                    self.run(&seeded)
+                } else {
+                    self.run(r)
+                }
+            })
+            .collect()
     }
 
     /// Append one result per request (in order) to `out` — the
@@ -156,6 +405,12 @@ pub trait Twin: Send {
 /// out in ascending `n_points`; submission order is preserved within each
 /// group, and nothing is padded — a mixed batch simply splits.
 ///
+/// Capacity is counted in *lanes*, not requests
+/// ([`GroupPlan::plan_lanes`]): an ensemble request weighs
+/// `EnsembleSpec::members` trajectories, so a sub-batch's flat rollout
+/// width stays bounded by the lane cap no matter how requests and
+/// ensembles mix.
+///
 /// The plan owns its index storage and sorts in place
 /// (`sort_unstable_by_key` allocates nothing), so replanning on a warm
 /// instance is allocation-free — this is what the twins' `run_batch_into`
@@ -173,21 +428,39 @@ impl GroupPlan {
         Self::default()
     }
 
-    /// Rebuild the plan for `reqs` (reuses internal buffers).
+    /// Rebuild the plan for `reqs` (reuses internal buffers) with no lane
+    /// cap — groups split on `n_points` only.
     pub fn plan(&mut self, reqs: &[TwinRequest]) {
+        self.plan_lanes(reqs, usize::MAX);
+    }
+
+    /// Rebuild the plan, additionally splitting groups so no sub-batch
+    /// exceeds `max_lanes` effective trajectories (requests weighted by
+    /// [`TwinRequest::lanes`]). A single request wider than the cap gets
+    /// its own group — a request is never split across rollouts.
+    pub fn plan_lanes(&mut self, reqs: &[TwinRequest], max_lanes: usize) {
         self.order.clear();
         self.order.extend(0..reqs.len());
         self.order.sort_unstable_by_key(|&i| (reqs[i].n_points, i));
         self.bounds.clear();
         let mut start = 0;
-        for k in 1..=self.order.len() {
-            if k == self.order.len()
-                || reqs[self.order[k]].n_points
-                    != reqs[self.order[start]].n_points
-            {
+        let mut lanes = 0usize;
+        for k in 0..self.order.len() {
+            let w = reqs[self.order[k]].lanes();
+            let split_n_points = k > start
+                && reqs[self.order[k]].n_points
+                    != reqs[self.order[start]].n_points;
+            let split_cap =
+                k > start && lanes.saturating_add(w) > max_lanes;
+            if split_n_points || split_cap {
                 self.bounds.push((start, k));
                 start = k;
+                lanes = 0;
             }
+            lanes = lanes.saturating_add(w);
+        }
+        if start < self.order.len() {
+            self.bounds.push((start, self.order.len()));
         }
     }
 
@@ -278,6 +551,7 @@ mod tests {
                     ),
                     backend: "echo",
                     seed: req.seed.unwrap_or(0),
+                    ensemble: None,
                 })
             }
         }
@@ -307,6 +581,8 @@ mod tests {
         let r = TwinRequest::autonomous(vec![1.0], 10);
         assert!(r.stimulus.is_none());
         assert!(r.seed.is_none());
+        assert!(r.ensemble.is_none());
+        assert_eq!(r.lanes(), 1);
         let d = TwinRequest::driven(
             vec![0.1],
             5,
@@ -316,5 +592,149 @@ mod tests {
         assert_eq!(d.n_points, 5);
         let s = TwinRequest::autonomous(vec![], 2).with_seed(99);
         assert_eq!(s.seed, Some(99));
+        let e = TwinRequest::autonomous(vec![], 2)
+            .with_ensemble(EnsembleSpec::new(16));
+        assert_eq!(e.lanes(), 16);
+    }
+
+    #[test]
+    fn ensemble_spec_validation() {
+        assert!(EnsembleSpec::new(1).validate().is_ok());
+        assert!(EnsembleSpec::new(32)
+            .with_percentiles(vec![5.0, 95.0])
+            .validate()
+            .is_ok());
+        assert!(EnsembleSpec::new(0).validate().is_err());
+        assert!(EnsembleSpec::new(MAX_ENSEMBLE_MEMBERS + 1)
+            .validate()
+            .is_err());
+        assert!(EnsembleSpec::new(4)
+            .with_percentiles(vec![101.0])
+            .validate()
+            .is_err());
+        assert!(EnsembleSpec::new(4)
+            .with_percentiles(vec![f64::NAN])
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn ensemble_member_seed_matches_lane_derivation() {
+        use crate::util::rng::NoiseLane;
+        // The replay contract: a standalone request seeded with
+        // ensemble_member_seed(s, k) builds exactly the lane the batched
+        // ensemble uses for member k.
+        let s = 0xfeed;
+        for k in 0..4 {
+            assert_eq!(
+                NoiseLane::from_seed(ensemble_member_seed(s, k)),
+                NoiseLane::from_seed(derive_stream_seed(s, k)),
+            );
+        }
+        assert_ne!(
+            ensemble_member_seed(s, 0),
+            ensemble_member_seed(s, 1)
+        );
+    }
+
+    #[test]
+    fn plan_lanes_counts_members_not_requests() {
+        let mut plan = GroupPlan::new();
+        let reqs = vec![
+            TwinRequest::autonomous(vec![], 10)
+                .with_ensemble(EnsembleSpec::new(6)),
+            TwinRequest::autonomous(vec![], 10),
+            TwinRequest::autonomous(vec![], 10)
+                .with_ensemble(EnsembleSpec::new(4)),
+            TwinRequest::autonomous(vec![], 10),
+        ];
+        // Cap 8 lanes: [6, 1] fits, the 4-wide ensemble splits off, the
+        // trailing plain request rides with it (4 + 1 <= 8).
+        plan.plan_lanes(&reqs, 8);
+        assert_eq!(plan.n_groups(), 2);
+        assert_eq!(plan.group(0), [0, 1]);
+        assert_eq!(plan.group(1), [2, 3]);
+        // A single over-cap ensemble still gets its own (whole) group.
+        let wide = vec![
+            TwinRequest::autonomous(vec![], 5)
+                .with_ensemble(EnsembleSpec::new(100)),
+            TwinRequest::autonomous(vec![], 5),
+        ];
+        plan.plan_lanes(&wide, 8);
+        assert_eq!(plan.n_groups(), 2);
+        assert_eq!(plan.group(0), [0]);
+        assert_eq!(plan.group(1), [1]);
+        // No cap: identical to plain planning.
+        plan.plan_lanes(&reqs, usize::MAX);
+        assert_eq!(plan.n_groups(), 1);
+        assert_eq!(plan.group(0), [0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn serial_fallback_stamps_real_seeds() {
+        // A fallback twin whose run echoes the request seed verbatim:
+        // seedless requests through run_batch must come back with
+        // distinct, non-placeholder seeds (the seed-echo bugfix).
+        struct Echo2;
+        impl Twin for Echo2 {
+            fn name(&self) -> &str {
+                "echo2"
+            }
+            fn state_dim(&self) -> usize {
+                1
+            }
+            fn dt(&self) -> f64 {
+                1.0
+            }
+            fn default_h0(&self) -> Vec<f64> {
+                vec![0.0]
+            }
+            fn run(
+                &mut self,
+                req: &TwinRequest,
+            ) -> anyhow::Result<TwinResponse> {
+                let seed =
+                    req.seed.expect("fallback must stamp a seed");
+                Ok(TwinResponse {
+                    trajectory: Trajectory::repeat_row(
+                        &[seed as f64],
+                        req.n_points,
+                    ),
+                    backend: "echo2",
+                    seed,
+                    ensemble: None,
+                })
+            }
+        }
+        let mut t = Echo2;
+        let reqs = vec![
+            TwinRequest::autonomous(vec![], 1),
+            TwinRequest::autonomous(vec![], 1),
+            TwinRequest::autonomous(vec![], 1).with_seed(42),
+        ];
+        let out = t.run_batch(&reqs);
+        let s0 = out[0].as_ref().unwrap().seed;
+        let s1 = out[1].as_ref().unwrap().seed;
+        assert_ne!(s0, 0, "fallback echoed the fake seed 0");
+        assert_ne!(s0, s1, "fallback reused a seed");
+        assert_eq!(out[2].as_ref().unwrap().seed, 42, "explicit seed");
+    }
+
+    #[test]
+    fn ensemble_stats_reclaim_returns_buffers() {
+        let mut pool = TrajectoryPool::new();
+        let mut stats = EnsembleStats {
+            members: 3,
+            mean: Trajectory::zeros(2, 4),
+            std: Trajectory::zeros(2, 4),
+            percentiles: vec![(5.0, Trajectory::zeros(2, 4))],
+            member_trajectories: vec![Trajectory::zeros(2, 4)],
+            nan_samples: 1,
+        };
+        stats.reclaim(&mut pool);
+        assert_eq!(pool.len(), 4);
+        assert_eq!(stats.members, 0);
+        assert!(stats.percentiles.is_empty());
+        assert!(stats.member_trajectories.is_empty());
     }
 }

@@ -93,6 +93,7 @@ mod tests {
                 ),
                 backend: "dummy",
                 seed: req.seed.unwrap_or(0),
+                ensemble: None,
             })
         }
     }

@@ -44,19 +44,34 @@ pub struct ThroughputEntry {
 /// `l96d64/analog-shard2` the *same deployment* fanned out across two
 /// tile-shard workers. Comparing the two routes' ns/trajectory-step (same
 /// B, same column) is the tracked sharding overhead/benefit.
-pub const ROUTES: [&str; 6] = [
+/// `l96d64/analog-ens32` submits 32-member Monte-Carlo ensemble requests
+/// on the monolithic d = 64 deployment: its "serial" column is one
+/// 32-lane ensemble rollout per request, its "batched" column coalesces B
+/// requests into one (B * 32)-lane rollout — the tracked cost of
+/// first-class ensembles.
+pub const ROUTES: [&str; 7] = [
     "hp/analog",
     "hp/digital",
     "l96/analog",
     "l96/digital",
     "l96d64/analog",
     "l96d64/analog-shard2",
+    "l96d64/analog-ens32",
 ];
 
 /// Circuit substeps for the d = 64 routes (smaller than the paper-default
 /// 20 so the smoke bench stays within tier-1 budget; identical for the
 /// monolithic and sharded rows, so the comparison is apples-to-apples).
 pub const D64_SUBSTEPS: usize = 5;
+
+/// Ensemble width of the `*-ens32` route.
+pub const ENS_BENCH_MEMBERS: usize = 32;
+
+/// Lane budget of one ensemble-route measurement cell: B requests expand
+/// to `B * ENS_BENCH_MEMBERS` lanes, so wider batch sizes (the full
+/// bench's B = 128) are skipped — loudly, never silently — to keep one
+/// cell's rollout under this many trajectories.
+pub const MAX_ENS_BENCH_LANES: usize = 1024;
 
 fn synth_mlp(
     dims: &[(usize, usize)],
@@ -142,6 +157,15 @@ pub fn make_twin(route: &str) -> Box<dyn Twin> {
             1,
             d64_opts(2, true),
         )),
+        // Same monolithic d = 64 deployment; the ensemble lives in the
+        // *requests* (see `requests`), not the twin.
+        "l96d64/analog-ens32" => Box::new(Lorenz96Twin::analog_opts(
+            &l96d64_weights(),
+            &device,
+            AnalogNoise::hardware(),
+            1,
+            d64_opts(1, false),
+        )),
         other => panic!("unknown throughput route '{other}'"),
     }
 }
@@ -181,12 +205,20 @@ pub fn make_quiet_twin(route: &str) -> Box<dyn Twin> {
             1,
             d64_opts(2, true),
         )),
+        "l96d64/analog-ens32" => Box::new(Lorenz96Twin::analog_opts(
+            &l96d64_weights(),
+            &quiet,
+            AnalogNoise::off(),
+            1,
+            d64_opts(1, false),
+        )),
         other => make_twin(other),
     }
 }
 
 /// Deterministic request batch for a route (driven for HP, autonomous for
-/// Lorenz96; per-request stimuli / initial states differ).
+/// Lorenz96; per-request stimuli / initial states differ; `*-ens32`
+/// routes carry a 32-member ensemble spec per request).
 pub fn requests(route: &str, b: usize, n_points: usize) -> Vec<TwinRequest> {
     let mut rng = Pcg64::seeded(7);
     let waves = [
@@ -198,7 +230,7 @@ pub fn requests(route: &str, b: usize, n_points: usize) -> Vec<TwinRequest> {
     let dim = route_dim(route);
     (0..b)
         .map(|k| {
-            if route.starts_with("hp/") {
+            let req = if route.starts_with("hp/") {
                 TwinRequest::driven(
                     vec![rng.uniform_in(0.1, 0.9)],
                     n_points,
@@ -209,6 +241,13 @@ pub fn requests(route: &str, b: usize, n_points: usize) -> Vec<TwinRequest> {
                     (0..dim).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
                     n_points,
                 )
+            };
+            if route.ends_with("-ens32") {
+                req.with_ensemble(
+                    crate::twin::EnsembleSpec::new(ENS_BENCH_MEMBERS),
+                )
+            } else {
+                req
             }
         })
         .collect()
@@ -258,7 +297,12 @@ pub fn assert_bit_identical(route: &str, b: usize, n_points: usize) {
     }
 }
 
-/// Measure one route at the given batch sizes.
+/// Measure one route at the given batch sizes. Ensemble routes skip
+/// batch sizes whose lane total would exceed [`MAX_ENS_BENCH_LANES`]
+/// (announced on stdout, so the coverage cut is never silent), and their
+/// per-step normaliser counts *lanes* — every member is a real rollout
+/// trajectory — keeping the ns/trajectory-step unit comparable across
+/// rows.
 pub fn measure_route(
     route: &'static str,
     batch_sizes: &[usize],
@@ -268,8 +312,18 @@ pub fn measure_route(
     let mut twin = make_twin(route);
     let mut entries = Vec::new();
     for &b in batch_sizes {
+        let lanes_per_req =
+            if route.ends_with("-ens32") { ENS_BENCH_MEMBERS } else { 1 };
+        if b * lanes_per_req > MAX_ENS_BENCH_LANES {
+            println!(
+                "skipping {route} B={b}: {} lanes exceeds the ensemble \
+                 bench budget of {MAX_ENS_BENCH_LANES}",
+                b * lanes_per_req
+            );
+            continue;
+        }
         let reqs = requests(route, b, n_points);
-        let steps = (b * n_points) as f64;
+        let steps = (b * lanes_per_req * n_points) as f64;
         let serial = bench.run(&format!("{route} serial x{b}"), || {
             let mut n_ok = 0;
             for r in &reqs {
@@ -527,6 +581,25 @@ mod tests {
     fn d64_requests_are_wide() {
         let reqs = requests("l96d64/analog-shard2", 2, 5);
         assert!(reqs.iter().all(|r| r.h0.len() == 64));
+    }
+
+    #[test]
+    fn ens_route_requests_carry_the_spec() {
+        let reqs = requests("l96d64/analog-ens32", 2, 5);
+        assert!(reqs.iter().all(|r| r.lanes() == ENS_BENCH_MEMBERS));
+        assert!(reqs.iter().all(|r| r.h0.len() == 64));
+        // Non-ensemble routes stay plain.
+        let plain = requests("l96d64/analog", 2, 5);
+        assert!(plain.iter().all(|r| r.ensemble.is_none()));
+    }
+
+    #[test]
+    fn ensemble_bench_cells_over_budget_are_skipped() {
+        // B=128 x 32 members would be 4096 lanes: the cell is skipped
+        // (loudly) rather than silently measured or silently dropped
+        // from smaller B values.
+        assert!(128 * ENS_BENCH_MEMBERS > MAX_ENS_BENCH_LANES);
+        assert!(32 * ENS_BENCH_MEMBERS <= MAX_ENS_BENCH_LANES);
     }
 
     #[test]

@@ -1,8 +1,17 @@
-//! Summary statistics, percentiles and histograms.
+//! Summary statistics, percentiles, histograms and the streaming ensemble
+//! accumulator.
 //!
 //! Backs the device-characterisation experiments (Fig. 2k programming-error
-//! histogram), the benchmark harness (median/p95 latency) and the
-//! noise-robustness grids (Fig. 4j averages over repetitions).
+//! histogram), the benchmark harness (median/p95 latency), the
+//! noise-robustness grids (Fig. 4j averages over repetitions) and the
+//! Monte-Carlo ensemble responses ([`EnsembleAccumulator`]).
+//!
+//! NaN policy: percentiles *skip* NaN samples (and report how many were
+//! skipped) instead of panicking — one diverged ensemble member or a
+//! poisoned latency sample must never crash a telemetry snapshot or an
+//! ensemble response. All-NaN inputs yield NaN.
+
+use crate::util::tensor::{Trajectory, TrajectoryPool};
 
 /// Basic summary of a sample.
 #[derive(Debug, Clone, PartialEq)]
@@ -41,11 +50,32 @@ pub fn summary(xs: &[f64]) -> Summary {
 }
 
 /// p-th percentile (0..=100) by linear interpolation on the sorted sample.
+/// NaN samples are skipped (see [`percentile_filtered`] to also get the
+/// skip count); a sample with no non-NaN values yields NaN.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    percentile_filtered(xs, p).0
+}
+
+/// [`percentile`] that also reports how many NaN samples were skipped.
+/// Total-order comparison (`f64::total_cmp`) — never panics on any input.
+pub fn percentile_filtered(xs: &[f64], p: f64) -> (f64, usize) {
     assert!(!xs.is_empty(), "percentile of empty sample");
     assert!((0.0..=100.0).contains(&p), "percentile out of range");
-    let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).expect("NaN in percentile"));
+    let mut s: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    let skipped = xs.len() - s.len();
+    if s.is_empty() {
+        return (f64::NAN, skipped);
+    }
+    s.sort_unstable_by(f64::total_cmp);
+    (percentile_of_sorted(&s, p), skipped)
+}
+
+/// p-th percentile of an already ascending-sorted, NaN-free sample — the
+/// allocation-free core shared by [`percentile`], the telemetry snapshot's
+/// sort-once latency scratch and the ensemble envelope computation.
+pub fn percentile_of_sorted(s: &[f64], p: f64) -> f64 {
+    assert!(!s.is_empty(), "percentile of empty sample");
+    assert!((0.0..=100.0).contains(&p), "percentile out of range");
     let idx = p / 100.0 * (s.len() - 1) as f64;
     let lo = idx.floor() as usize;
     let hi = idx.ceil() as usize;
@@ -118,6 +148,202 @@ impl Histogram {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Streaming per-timestep ensemble statistics (Welford)
+// ---------------------------------------------------------------------------
+
+/// Streaming per-timestep, per-dimension moment accumulator for
+/// Monte-Carlo ensemble rollouts.
+///
+/// Members are fed one at a time ([`EnsembleAccumulator::add_member_rows`])
+/// and mean/variance accumulate via Welford's update, so the whole-ensemble
+/// member matrix never needs to be materialised beyond the batched rollout
+/// the twins already hold. The mean and M2 buffers are [`Trajectory`]s
+/// drawn from the caller's [`TrajectoryPool`] at [`EnsembleAccumulator::begin`]
+/// and handed back (mean, std) by [`EnsembleAccumulator::finish`], so a
+/// warm ensemble batch stays inside the zero-allocation contract (the
+/// internal count and sort scratch are reused across batches too).
+///
+/// NaN policy: a NaN sample (diverged member) is skipped per element and
+/// counted ([`EnsembleAccumulator::nan_skipped`]); an element with no
+/// finite samples reports NaN mean/std. Variance is the population
+/// variance, matching [`summary`].
+#[derive(Debug, Default)]
+pub struct EnsembleAccumulator {
+    dim: usize,
+    n_points: usize,
+    members: usize,
+    /// Per-element finite-sample counts (`[n_points * dim]`, reused).
+    count: Vec<u64>,
+    mean: Trajectory,
+    m2: Trajectory,
+    nan_skipped: u64,
+    /// Per-element member-value sort scratch for percentile envelopes.
+    psort: Vec<f64>,
+}
+
+impl EnsembleAccumulator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start accumulating an ensemble of `[n_points][dim]` trajectories.
+    /// The mean/M2 buffers come from `pool`; call [`EnsembleAccumulator::finish`]
+    /// to take them back out (an abandoned accumulation drops them).
+    pub fn begin(
+        &mut self,
+        dim: usize,
+        n_points: usize,
+        pool: &mut TrajectoryPool,
+    ) {
+        self.dim = dim;
+        self.n_points = n_points;
+        self.members = 0;
+        self.nan_skipped = 0;
+        self.count.clear();
+        self.count.resize(dim * n_points, 0);
+        self.mean = pool.get(dim);
+        self.m2 = pool.get(dim);
+        self.mean.reserve_rows(n_points);
+        self.m2.reserve_rows(n_points);
+        for _ in 0..n_points {
+            self.mean.push_row_from_iter((0..dim).map(|_| 0.0));
+            self.m2.push_row_from_iter((0..dim).map(|_| 0.0));
+        }
+    }
+
+    /// Fold one member in: `rows` must yield exactly `n_points` rows of
+    /// width `dim` (e.g. per-member slices of the twins' flat batched
+    /// rollout).
+    pub fn add_member_rows<'a>(
+        &mut self,
+        rows: impl Iterator<Item = &'a [f64]>,
+    ) {
+        let dim = self.dim;
+        let mut n_rows = 0;
+        for (i, row) in rows.enumerate() {
+            assert!(i < self.n_points, "ensemble member has too many rows");
+            assert_eq!(row.len(), dim, "ensemble member row width");
+            let mean_row = self.mean.row_mut(i);
+            let m2_row = self.m2.row_mut(i);
+            let count_row = &mut self.count[i * dim..(i + 1) * dim];
+            for d in 0..dim {
+                let x = row[d];
+                if x.is_nan() {
+                    self.nan_skipped += 1;
+                    continue;
+                }
+                count_row[d] += 1;
+                let c = count_row[d] as f64;
+                let delta = x - mean_row[d];
+                mean_row[d] += delta / c;
+                m2_row[d] += delta * (x - mean_row[d]);
+            }
+            n_rows += 1;
+        }
+        assert_eq!(n_rows, self.n_points, "ensemble member row count");
+        self.members += 1;
+    }
+
+    /// Members folded in so far.
+    pub fn members(&self) -> usize {
+        self.members
+    }
+
+    /// NaN samples skipped so far.
+    pub fn nan_skipped(&self) -> u64 {
+        self.nan_skipped
+    }
+
+    /// Finish: return `(mean, std, nan_skipped)`, consuming the pooled
+    /// buffers (the M2 buffer is converted to std in place). Elements with
+    /// zero finite samples are NaN.
+    pub fn finish(&mut self) -> (Trajectory, Trajectory, u64) {
+        let dim = self.dim;
+        for i in 0..self.n_points {
+            let row = self.m2.row_mut(i);
+            let count_row = &self.count[i * dim..(i + 1) * dim];
+            for d in 0..dim {
+                row[d] = if count_row[d] == 0 {
+                    f64::NAN
+                } else {
+                    (row[d] / count_row[d] as f64).sqrt()
+                };
+            }
+            // NaN-out mean elements nothing contributed to.
+            let mean_row = self.mean.row_mut(i);
+            for d in 0..dim {
+                if count_row[d] == 0 {
+                    mean_row[d] = f64::NAN;
+                }
+            }
+        }
+        (
+            std::mem::take(&mut self.mean),
+            std::mem::take(&mut self.m2),
+            self.nan_skipped,
+        )
+    }
+
+    /// Fill every `(p, out)` pair with the per-timestep `p`-th percentile
+    /// across the `members` trajectories stored in a flat batched
+    /// rollout: `flat` rows are `batch * dim` wide and member `m`
+    /// occupies columns `(lane0 + m) * dim ..`. Each element's member
+    /// samples are gathered and sorted **once** for all requested
+    /// percentiles (the envelope is the per-response hot path). NaN
+    /// samples are skipped per element (all-NaN elements yield NaN); the
+    /// internal sort scratch is reused, so a warm call allocates nothing
+    /// beyond the outputs' pooled capacity. Each `out` must be a cleared
+    /// trajectory with row width `dim`.
+    pub fn percentile_pairs_flat_into(
+        &mut self,
+        flat: &Trajectory,
+        lane0: usize,
+        members: usize,
+        outs: &mut [(f64, Trajectory)],
+    ) {
+        let dim = self.dim;
+        assert_eq!(flat.len(), self.n_points, "flat rollout row count");
+        if outs.is_empty() {
+            return;
+        }
+        for (p, out) in outs.iter_mut() {
+            assert!(
+                (0.0..=100.0).contains(p),
+                "percentile out of range"
+            );
+            assert_eq!(out.dim(), dim, "percentile output row width");
+            out.reserve_rows(self.n_points);
+            for _ in 0..self.n_points {
+                out.push_row_from_iter((0..dim).map(|_| 0.0));
+            }
+        }
+        for i in 0..self.n_points {
+            let frow = flat.row(i);
+            for d in 0..dim {
+                self.psort.clear();
+                for m in 0..members {
+                    let x = frow[(lane0 + m) * dim + d];
+                    if !x.is_nan() {
+                        self.psort.push(x);
+                    }
+                }
+                if self.psort.is_empty() {
+                    for (_, out) in outs.iter_mut() {
+                        out.row_mut(i)[d] = f64::NAN;
+                    }
+                } else {
+                    self.psort.sort_unstable_by(f64::total_cmp);
+                    for (p, out) in outs.iter_mut() {
+                        out.row_mut(i)[d] =
+                            percentile_of_sorted(&self.psort, *p);
+                    }
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -150,6 +376,96 @@ mod tests {
     fn percentile_unsorted_input() {
         let xs = [30.0, 10.0, 40.0, 20.0];
         assert_eq!(median(&xs), 25.0);
+    }
+
+    #[test]
+    fn percentile_skips_nan_and_counts() {
+        let xs = [10.0, f64::NAN, 30.0, 20.0, f64::NAN, 40.0];
+        let (v, skipped) = percentile_filtered(&xs, 50.0);
+        assert_eq!(v, 25.0);
+        assert_eq!(skipped, 2);
+        // The plain form no longer panics on NaN.
+        assert_eq!(median(&xs), 25.0);
+        // All-NaN: NaN result, full skip count.
+        let (v, skipped) = percentile_filtered(&[f64::NAN, f64::NAN], 95.0);
+        assert!(v.is_nan());
+        assert_eq!(skipped, 2);
+    }
+
+    #[test]
+    fn percentile_of_sorted_matches_percentile() {
+        let xs = [10.0, 20.0, 30.0, 40.0];
+        for p in [0.0, 25.0, 50.0, 95.0, 100.0] {
+            assert_eq!(percentile_of_sorted(&xs, p), percentile(&xs, p));
+        }
+    }
+
+    #[test]
+    fn ensemble_accumulator_matches_direct_moments() {
+        // 3 members, 2 points, dim 2; compare against summary() per
+        // element.
+        let members = [
+            [[1.0, 2.0], [3.0, 4.0]],
+            [[2.0, 0.0], [5.0, 4.0]],
+            [[6.0, 1.0], [1.0, 10.0]],
+        ];
+        let mut pool = TrajectoryPool::new();
+        let mut acc = EnsembleAccumulator::new();
+        acc.begin(2, 2, &mut pool);
+        for m in &members {
+            acc.add_member_rows(m.iter().map(|r| &r[..]));
+        }
+        assert_eq!(acc.members(), 3);
+        let (mean, std, nan) = acc.finish();
+        assert_eq!(nan, 0);
+        for i in 0..2 {
+            for d in 0..2 {
+                let col: Vec<f64> =
+                    members.iter().map(|m| m[i][d]).collect();
+                let s = summary(&col);
+                assert!((mean.row(i)[d] - s.mean).abs() < 1e-12);
+                assert!((std.row(i)[d] - s.std).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn ensemble_accumulator_skips_nan_members() {
+        let mut pool = TrajectoryPool::new();
+        let mut acc = EnsembleAccumulator::new();
+        acc.begin(1, 2, &mut pool);
+        acc.add_member_rows([[2.0], [f64::NAN]].iter().map(|r| &r[..]));
+        acc.add_member_rows([[4.0], [f64::NAN]].iter().map(|r| &r[..]));
+        let (mean, std, nan) = acc.finish();
+        assert_eq!(nan, 2);
+        assert_eq!(mean.row(0), [3.0]);
+        assert_eq!(std.row(0), [1.0]);
+        // No finite samples at point 1: NaN, not a crash.
+        assert!(mean.row(1)[0].is_nan());
+        assert!(std.row(1)[0].is_nan());
+    }
+
+    #[test]
+    fn ensemble_percentile_envelope_from_flat_rollout() {
+        // Flat batched layout: 4 members, dim 1, 2 points; member m holds
+        // value (m+1) * 10 at point 0 and -(m as f64) at point 1.
+        let mut flat = Trajectory::new(4);
+        flat.push_row(&[10.0, 20.0, 30.0, 40.0]);
+        flat.push_row(&[0.0, -1.0, -2.0, -3.0]);
+        let mut pool = TrajectoryPool::new();
+        let mut acc = EnsembleAccumulator::new();
+        acc.begin(1, 2, &mut pool);
+        for m in 0..4 {
+            acc.add_member_rows(flat.iter().map(|r| &r[m..m + 1]));
+        }
+        let _ = acc.finish();
+        let mut outs =
+            vec![(50.0, pool.get(1)), (100.0, pool.get(1))];
+        acc.percentile_pairs_flat_into(&flat, 0, 4, &mut outs);
+        assert_eq!(outs[0].1.row(0), [25.0]);
+        assert_eq!(outs[0].1.row(1), [-1.5]);
+        assert_eq!(outs[1].1.row(0), [40.0]);
+        assert_eq!(outs[1].1.row(1), [0.0]);
     }
 
     #[test]

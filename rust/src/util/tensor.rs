@@ -478,6 +478,19 @@ impl Trajectory {
         self.n_points += 1;
     }
 
+    /// Append every row of `other` (row widths must match). Used by the
+    /// ensemble response path to materialise a pooled copy of a stats
+    /// trajectory — on a warm pooled buffer this performs no allocation.
+    pub fn extend_rows(&mut self, other: &Trajectory) {
+        assert_eq!(
+            other.dim, self.dim,
+            "extend_rows: dim {} != dim {}",
+            other.dim, self.dim
+        );
+        self.data.extend_from_slice(&other.data);
+        self.n_points += other.n_points;
+    }
+
     /// Append a copy of the final row (the fixed-step solvers' "advance
     /// in place from the previous sample" idiom; no scratch state vector).
     pub fn push_copy_of_last(&mut self) {
@@ -914,6 +927,28 @@ mod tests {
             assert_eq!(row, t.row(i));
         }
         assert_eq!(t.iter().len(), 3);
+    }
+
+    #[test]
+    fn trajectory_extend_rows_copies_all_rows() {
+        let src = Trajectory::from_nested(&[
+            vec![1.0, 2.0],
+            vec![3.0, 4.0],
+        ]);
+        let mut dst = Trajectory::new(2);
+        dst.push_row(&[0.0, 0.0]);
+        dst.extend_rows(&src);
+        assert_eq!(dst.len(), 3);
+        assert_eq!(dst.row(1), [1.0, 2.0]);
+        assert_eq!(dst.row(2), [3.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "extend_rows: dim")]
+    fn trajectory_extend_rows_checks_dim() {
+        let src = Trajectory::from_nested(&[vec![1.0]]);
+        let mut dst = Trajectory::new(2);
+        dst.extend_rows(&src);
     }
 
     #[test]

@@ -245,6 +245,35 @@ fn warm_run_batch_performs_zero_heap_allocations() {
         |t, resp| t.recycle(resp),
     );
 
+    // Lorenz96 analogue backend serving Monte-Carlo ensembles: the lane
+    // expansion, the Welford mean/std accumulator, the percentile
+    // envelopes, the member trajectories and the stats container shells
+    // must all come from pooled/reused scratch once warm.
+    let mut twin = Lorenz96Twin::analog(
+        &l96_toy_weights(3),
+        &quiet_device(),
+        AnalogNoise::off(),
+        7,
+    );
+    let ens_reqs = vec![
+        TwinRequest::autonomous(vec![0.4, -0.2, 0.1], 10).with_ensemble(
+            memode::twin::EnsembleSpec::new(8)
+                .with_percentiles(vec![10.0, 90.0])
+                .with_member_trajectories(),
+        ),
+        TwinRequest::autonomous(vec![1.0, -0.5, 0.25], 10),
+        TwinRequest::autonomous(vec![0.2, 0.1, -0.4], 16).with_ensemble(
+            memode::twin::EnsembleSpec::new(4),
+        ),
+        TwinRequest::autonomous(vec![-1.0, 0.7, 0.0], 16),
+    ];
+    assert_zero_alloc_steady_state(
+        "l96/analog-ensemble",
+        &mut twin,
+        &ens_reqs,
+        |t, resp| t.recycle(resp),
+    );
+
     // HP, digital RK4 backend (driven: per-trajectory stimulus closures).
     let mut twin = HpTwin::digital(&hp_toy_weights());
     assert_zero_alloc_steady_state(

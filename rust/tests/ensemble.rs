@@ -1,0 +1,378 @@
+//! First-class Monte-Carlo ensembles: the ensemble invariants end to end.
+//!
+//! The contract (see the ensemble invariants in `lib.rs`): an ensemble
+//! request with family seed `s` expands into N noise lanes inside **one**
+//! batched rollout, and member `k` is bit-identical to a *standalone*
+//! rollout seeded with `ensemble_member_seed(s, k)` — across batch sizes,
+//! batch compositions, shard counts (serial in-solver sharding and the
+//! parallel fan-out) and lane-capacity group splits. The pooled statistics
+//! (mean / std / percentile envelopes) are therefore bit-identical too.
+//!
+//! Also here: the seed-echo regression test for serial-fallback twins —
+//! a seedless request through the default `run_batch` must echo a real,
+//! replayable seed, never a fake `0`.
+//!
+//! Test names carry the `ensemble_determinism_` prefix so CI can gate
+//! them in release mode alongside the noisy-determinism suite.
+
+use memode::analog::system::AnalogNoise;
+use memode::device::taox::DeviceConfig;
+use memode::models::loader::decay_mlp_weights;
+use memode::twin::lorenz96::{L96AnalogOpts, Lorenz96Twin};
+use memode::twin::{
+    ensemble_member_seed, EnsembleSpec, Twin, TwinRequest, TwinResponse,
+};
+use memode::util::proptest::{check, gen_permutation, Config};
+use memode::util::rng::{NoiseLane, Pcg64};
+use memode::util::tensor::Trajectory;
+
+const DIM: usize = 34;
+const N_POINTS: usize = 4;
+
+/// Deterministic deployment with read noise ON (fault/pulse randomness
+/// off so the deployed weights depend only on the deploy seed).
+fn noisy_twin(shards: usize, parallel: bool) -> Lorenz96Twin {
+    let cfg = DeviceConfig {
+        fault_rate: 0.0,
+        pulse_sigma: 0.0,
+        ..Default::default()
+    };
+    Lorenz96Twin::analog_opts(
+        &decay_mlp_weights(DIM),
+        &cfg,
+        AnalogNoise { read: 0.05, prog: 0.0 },
+        7,
+        L96AnalogOpts { substeps: 2, shards, parallel },
+    )
+}
+
+fn h0_of(k: usize) -> Vec<f64> {
+    (0..DIM)
+        .map(|i| ((i as f64) * 0.31 + (k as f64) * 0.77).sin() * 0.6)
+        .collect()
+}
+
+/// Seeded ensemble request `k` with `members` lanes, full stats payload.
+fn ens_request(k: usize, members: usize) -> TwinRequest {
+    TwinRequest::autonomous(h0_of(k), N_POINTS)
+        .with_seed(20_000 + k as u64)
+        .with_ensemble(
+            EnsembleSpec::new(members)
+                .with_percentiles(vec![5.0, 95.0])
+                .with_member_trajectories(),
+        )
+}
+
+/// Seeded plain (non-ensemble) stranger request.
+fn plain_request(k: usize) -> TwinRequest {
+    TwinRequest::autonomous(h0_of(k), N_POINTS).with_seed(30_000 + k as u64)
+}
+
+/// Standalone reference for member `m` of ensemble request `k`: one
+/// serial rollout under the derived member seed on a monolithic twin
+/// (deployment is deterministic per deploy seed, so instances are
+/// interchangeable — `noisy_determinism` pins that separately).
+fn member_reference(
+    twin: &mut Lorenz96Twin,
+    k: usize,
+    m: u64,
+) -> Trajectory {
+    twin.run(
+        &TwinRequest::autonomous(h0_of(k), N_POINTS)
+            .with_seed(ensemble_member_seed(20_000 + k as u64, m)),
+    )
+    .unwrap()
+    .trajectory
+}
+
+fn unwrap_all(
+    results: Vec<anyhow::Result<TwinResponse>>,
+) -> Vec<TwinResponse> {
+    results.into_iter().map(|r| r.unwrap()).collect()
+}
+
+#[test]
+fn ensemble_determinism_member_bit_identity_across_forms() {
+    let members = 8;
+    // References: every member of ensembles 0 and 1 as standalone
+    // derived-seed rollouts.
+    let mut ref_twin = noisy_twin(1, false);
+    let refs: Vec<Vec<Trajectory>> = (0..2)
+        .map(|k| {
+            (0..members as u64)
+                .map(|m| member_reference(&mut ref_twin, k, m))
+                .collect()
+        })
+        .collect();
+
+    for (label, mut twin) in [
+        ("monolithic", noisy_twin(1, false)),
+        ("serial sharded x2", noisy_twin(2, false)),
+        ("parallel fan-out x2", noisy_twin(2, true)),
+    ] {
+        // B = 1: a lone ensemble request is still one batched rollout.
+        let got = unwrap_all(
+            twin.run_batch(std::slice::from_ref(&ens_request(0, members))),
+        );
+        let ens = got[0].ensemble.as_ref().expect("ensemble stats");
+        assert_eq!(ens.members, members);
+        assert_eq!(got[0].seed, 20_000, "{label}: family seed echo");
+        for (m, t) in ens.member_trajectories.iter().enumerate() {
+            assert_eq!(
+                *t, refs[0][m],
+                "{label}: B=1 member {m} != standalone derived-seed rollout"
+            );
+        }
+        // B = 8: two ensembles interleaved with six plain strangers.
+        let batch: Vec<TwinRequest> = vec![
+            plain_request(10),
+            ens_request(0, members),
+            plain_request(11),
+            plain_request(12),
+            ens_request(1, members),
+            plain_request(13),
+            plain_request(14),
+            plain_request(15),
+        ];
+        let got = unwrap_all(twin.run_batch(&batch));
+        for (slot, k) in [(1usize, 0usize), (4, 1)] {
+            let ens = got[slot].ensemble.as_ref().expect("ensemble stats");
+            for (m, t) in ens.member_trajectories.iter().enumerate() {
+                assert_eq!(
+                    *t, refs[k][m],
+                    "{label}: B=8 ensemble {k} member {m} diverged"
+                );
+            }
+            // Response trajectory is the mean.
+            assert_eq!(got[slot].trajectory, ens.mean, "{label}: mean echo");
+        }
+        // Plain batch-mates are untouched by the ensemble expansion.
+        let mut solo = noisy_twin(1, false);
+        let want_plain = solo.run(&plain_request(10)).unwrap();
+        assert_eq!(
+            got[0].trajectory, want_plain.trajectory,
+            "{label}: plain stranger perturbed by ensemble batch-mates"
+        );
+    }
+}
+
+#[test]
+fn ensemble_determinism_stats_invariant_under_shuffle() {
+    // Randomized batch compositions on a warm sharded twin: the pooled
+    // statistics of each ensemble must be bit-identical to the reference
+    // no matter which batch-mates surround it or in what order.
+    let members = 6;
+    let pool: Vec<TwinRequest> = vec![
+        ens_request(0, members),
+        plain_request(20),
+        ens_request(1, members),
+        plain_request(21),
+        plain_request(22),
+        plain_request(23),
+    ];
+    let mut reference = noisy_twin(2, false);
+    let want: Vec<TwinResponse> = pool
+        .iter()
+        .map(|r| reference.run(r).unwrap())
+        .collect();
+    let twin = std::cell::RefCell::new(noisy_twin(2, false));
+    check(
+        &Config { cases: 10, seed: 0xe75e, ..Default::default() },
+        |r: &mut Pcg64| {
+            let n = 2 + r.below(pool.len() as u64 - 1) as usize;
+            let mut perm = gen_permutation(r, pool.len());
+            perm.truncate(n);
+            perm
+        },
+        |perm: &Vec<usize>| {
+            let batch: Vec<TwinRequest> =
+                perm.iter().map(|&i| pool[i].clone()).collect();
+            let got = unwrap_all(twin.borrow_mut().run_batch(&batch));
+            perm.iter().zip(&got).all(|(&i, g)| {
+                if g.trajectory != want[i].trajectory {
+                    return false;
+                }
+                match (&g.ensemble, &want[i].ensemble) {
+                    (None, None) => true,
+                    (Some(a), Some(b)) => {
+                        a.mean == b.mean
+                            && a.std == b.std
+                            && a.percentiles == b.percentiles
+                            && a.member_trajectories
+                                == b.member_trajectories
+                    }
+                    _ => false,
+                }
+            })
+        },
+    );
+}
+
+#[test]
+fn ensemble_determinism_n32_sharded_with_lane_capacity_splits() {
+    // Nine 32-member ensembles = 288 lanes: past MAX_SUB_BATCH_LANES
+    // (256) the group planner splits the batch into two rollouts — member
+    // identity must survive the split, the shard fan-out, and both.
+    let members = 32;
+    let batch: Vec<TwinRequest> =
+        (0..9).map(|k| ens_request(k % 2, members)).collect();
+    let mut twin = noisy_twin(2, true);
+    let got = unwrap_all(twin.run_batch(&batch));
+    let mut ref_twin = noisy_twin(1, false);
+    for (slot, resp) in got.iter().enumerate() {
+        let k = slot % 2;
+        let ens = resp.ensemble.as_ref().expect("ensemble stats");
+        assert_eq!(ens.members, members);
+        assert_eq!(ens.nan_samples, 0);
+        for m in [0u64, 17, 31] {
+            assert_eq!(
+                ens.member_trajectories[m as usize],
+                member_reference(&mut ref_twin, k, m),
+                "request {slot} member {m} diverged across capacity split \
+                 + shard fan-out"
+            );
+        }
+    }
+    // Identical ensembles produced identical stats regardless of slot.
+    let a = got[0].ensemble.as_ref().unwrap();
+    let b = got[2].ensemble.as_ref().unwrap();
+    assert_eq!(a.mean, b.mean);
+    assert_eq!(a.std, b.std);
+    assert_eq!(a.percentiles, b.percentiles);
+}
+
+#[test]
+fn ensemble_determinism_hp_analog_n32() {
+    // Acceptance: an N = 32 ensemble on the HP analogue twin returns
+    // pooled mean/std/percentiles from one batched rollout, and member k
+    // replays standalone under the derived seed.
+    use memode::twin::hp::HpTwin;
+    use memode::util::tensor::Mat;
+    use memode::workload::stimuli::Waveform;
+
+    // f([v; h]) = 2v - h, exact via paired ReLUs (the HP toy field).
+    let w1 = Mat::from_vec(
+        2,
+        4,
+        vec![2.0, -2.0, 0.0, 0.0, 0.0, 0.0, 1.0, -1.0],
+    );
+    let w2 = Mat::from_vec(4, 1, vec![1.0, -1.0, -1.0, 1.0]);
+    let weights = memode::models::loader::MlpWeights {
+        layers: vec![(w1, vec![0.0; 4]), (w2, vec![0.0])],
+        dt: 1e-3,
+        kind: "node".into(),
+        task: "hp".into(),
+    };
+    let cfg = DeviceConfig {
+        fault_rate: 0.0,
+        pulse_sigma: 0.0,
+        ..Default::default()
+    };
+    let noise = AnalogNoise { read: 0.05, prog: 0.0 };
+    let mut twin = HpTwin::analog(&weights, &cfg, noise, 3);
+    let members = 32;
+    let req = TwinRequest::driven(vec![0.4], 6, Waveform::sine(1.0, 4.0))
+        .with_seed(808)
+        .with_ensemble(
+            EnsembleSpec::new(members)
+                .with_percentiles(vec![5.0, 95.0])
+                .with_member_trajectories(),
+        );
+    let resp = twin.run(&req).unwrap();
+    assert_eq!(resp.seed, 808);
+    let ens = resp.ensemble.as_ref().expect("ensemble stats");
+    assert_eq!(ens.members, members);
+    assert_eq!(ens.mean.len(), 6);
+    assert_eq!(ens.std.len(), 6);
+    assert_eq!(ens.percentiles.len(), 2);
+    assert_eq!(ens.member_trajectories.len(), members);
+    assert_eq!(resp.trajectory, ens.mean);
+    assert!(ens.std.row(5)[0] > 0.0, "noise produced zero spread");
+    for m in [0u64, 13, 31] {
+        let mut fresh = HpTwin::analog(&weights, &cfg, noise, 3);
+        let standalone = fresh
+            .run(
+                &TwinRequest::driven(
+                    vec![0.4],
+                    6,
+                    Waveform::sine(1.0, 4.0),
+                )
+                .with_seed(ensemble_member_seed(808, m)),
+            )
+            .unwrap();
+        assert_eq!(
+            ens.member_trajectories[m as usize], standalone.trajectory,
+            "hp member {m} != standalone derived-seed rollout"
+        );
+    }
+}
+
+#[test]
+fn ensemble_determinism_seed_echo_regression_serial_fallback() {
+    // The seed-echo bugfix: a twin on the default serial `run_batch`
+    // fallback, with genuinely seed-dependent output. Before the fix the
+    // fallback handed `run` a seedless request and the twin echoed a fake
+    // 0 — replaying that echoed seed did NOT reproduce the rollout.
+    struct LaneEcho;
+    impl Twin for LaneEcho {
+        fn name(&self) -> &str {
+            "lane-echo"
+        }
+        fn state_dim(&self) -> usize {
+            1
+        }
+        fn dt(&self) -> f64 {
+            1.0
+        }
+        fn default_h0(&self) -> Vec<f64> {
+            vec![0.0]
+        }
+        fn run(
+            &mut self,
+            req: &TwinRequest,
+        ) -> anyhow::Result<TwinResponse> {
+            // No seed machinery of its own: output depends on whatever
+            // seed arrives, and that seed is echoed verbatim.
+            let seed = req.seed.unwrap_or(0);
+            let lane = NoiseLane::from_seed(seed);
+            let mut t = Trajectory::new(1);
+            for i in 0..req.n_points {
+                t.push_row(&[lane.normal_at(i as u64)]);
+            }
+            Ok(TwinResponse {
+                trajectory: t,
+                backend: "lane-echo",
+                seed,
+                ensemble: None,
+            })
+        }
+    }
+
+    let mut twin = LaneEcho;
+    let reqs = vec![
+        TwinRequest::autonomous(vec![], 6),
+        TwinRequest::autonomous(vec![], 6),
+    ];
+    let first = unwrap_all(twin.run_batch(&reqs));
+    assert_ne!(first[0].seed, 0, "fallback echoed the fake seed 0");
+    assert_ne!(
+        first[0].seed, first[1].seed,
+        "fallback reused one seed for two requests"
+    );
+    assert_ne!(
+        first[0].trajectory, first[1].trajectory,
+        "distinct seeds must produce distinct noisy output"
+    );
+    // Replay: the echoed seed reproduces each rollout bit for bit,
+    // through both the batched fallback and a direct `run`.
+    for resp in &first {
+        let replay = TwinRequest::autonomous(vec![], 6)
+            .with_seed(resp.seed);
+        let batched =
+            unwrap_all(twin.run_batch(std::slice::from_ref(&replay)));
+        assert_eq!(batched[0].trajectory, resp.trajectory);
+        assert_eq!(batched[0].seed, resp.seed);
+        let direct = twin.run(&replay).unwrap();
+        assert_eq!(direct.trajectory, resp.trajectory);
+    }
+}
