@@ -1,0 +1,254 @@
+//! GEMM microkernel sweep: scalar vs SIMD vs SIMD+threads on the batched
+//! vector-matrix product that backs every crossbar read, model forward and
+//! analogue IVP step (`Mat::vecmat_batch_into`).
+//!
+//! Sweeps (rows, cols) × batch × kernel variant and writes machine-readable
+//! rows to `BENCH_gemm_kernels.json` at the repository root (override with
+//! `BENCH_GEMM_OUT`). The JSON is a machine-local CI artifact like
+//! `BENCH_batch_throughput.json` — uploaded, not committed.
+//!
+//! Before timing anything it asserts the SIMD and threaded variants are
+//! bit-identical to scalar on every swept shape (the lib.rs accumulation
+//! contract, checked here on the exact buffers about to be timed).
+//!
+//! The dense-vs-half-zero pair on the (64, 64) shape tracks the zero-input
+//! skip (`if xv == 0.0 { continue; }`): the skip is contractual (it shields
+//! non-finite weights behind zero inputs), and this pair measures what it
+//! costs on dense inputs — historically ~free, one predicted branch per row.
+//!
+//! Run: `cargo bench --bench gemm_kernels [-- --smoke]`
+//! (`--smoke` / `BENCH_SMOKE=1` = CI quick mode: fewer iters, fewer batches.)
+
+use std::time::Duration;
+
+use memode::util::bench::{black_box, Bencher, BenchResult};
+use memode::util::json::{self, Json};
+use memode::util::kernel::{self, KernelKind};
+use memode::util::tensor::Mat;
+
+/// Deterministic fill — xorshift so runs are comparable across machines.
+fn fill(seed: u64, buf: &mut [f64]) {
+    let mut s = seed | 1;
+    for v in buf.iter_mut() {
+        s ^= s << 13;
+        s ^= s >> 7;
+        s ^= s << 17;
+        // Map to roughly [-1, 1); never exactly zero, so the zero-skip
+        // branch stays cold on "dense" inputs.
+        *v = (s >> 11) as f64 / (1u64 << 52) as f64 - 1.0 + 1e-9;
+    }
+}
+
+struct Row {
+    rows: usize,
+    cols: usize,
+    batch: usize,
+    variant: &'static str,
+    ns_per_call: f64,
+    ns_per_madd: f64,
+}
+
+fn push_row(
+    rows_out: &mut Vec<Row>,
+    results: &mut Vec<BenchResult>,
+    r: BenchResult,
+    rows: usize,
+    cols: usize,
+    batch: usize,
+    variant: &'static str,
+) {
+    let ns_per_call = r.median.as_secs_f64() * 1e9;
+    let ns_per_madd = ns_per_call / (batch * rows * cols).max(1) as f64;
+    rows_out.push(Row { rows, cols, batch, variant, ns_per_call, ns_per_madd });
+    results.push(r);
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("BENCH_SMOKE").is_ok();
+    let (batches, bench): (&[usize], Bencher) = if smoke {
+        (
+            &[1, 32, 256],
+            Bencher {
+                min_iters: 3,
+                target_time: Duration::from_millis(40),
+                warmup: Duration::from_millis(10),
+            },
+        )
+    } else {
+        (&[1, 8, 32, 128, 512], Bencher::quick())
+    };
+    let shapes: &[(usize, usize)] =
+        &[(14, 14), (64, 64), (64, 128), (128, 128)];
+
+    let simd = kernel::detected();
+    println!(
+        "kernel detection: avx2 {}, active kind {:?}",
+        if kernel::simd_available() { "yes" } else { "no" },
+        kernel::active()
+    );
+
+    let mut rows_out: Vec<Row> = Vec::new();
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    for &(rows, cols) in shapes {
+        let mut w = Mat::zeros(rows, cols);
+        fill(0x9E37_79B9 ^ (rows * 1000 + cols) as u64, &mut w.data);
+        let max_b = *batches.iter().max().unwrap();
+        let mut xs = vec![0.0f64; max_b * rows];
+        fill(0xA5A5_5A5A ^ rows as u64, &mut xs);
+
+        // Bit-identity gate on the exact buffers about to be timed: SIMD
+        // and the threaded split must match scalar bit for bit.
+        {
+            let b = max_b.min(64);
+            let mut y_sc = vec![0.0f64; b * cols];
+            let mut y_simd = vec![0.0f64; b * cols];
+            let mut y_mt = vec![0.0f64; b * cols];
+            w.vecmat_batch_into_with(
+                KernelKind::Scalar,
+                1,
+                &xs[..b * rows],
+                b,
+                &mut y_sc,
+            );
+            w.vecmat_batch_into_with(simd, 1, &xs[..b * rows], b, &mut y_simd);
+            w.vecmat_batch_into_with(simd, 4, &xs[..b * rows], b, &mut y_mt);
+            assert_eq!(
+                y_sc.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                y_simd.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "SIMD not bit-identical to scalar on {rows}x{cols}"
+            );
+            assert_eq!(
+                y_sc.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                y_mt.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "threaded split not bit-identical on {rows}x{cols}"
+            );
+        }
+
+        for &b in batches {
+            let mut ys = vec![0.0f64; b * cols];
+            let name = |variant: &str| {
+                format!("{rows}x{cols} B={b} {variant}")
+            };
+            let r = bench.run(&name("scalar"), || {
+                w.vecmat_batch_into_with(
+                    KernelKind::Scalar,
+                    1,
+                    black_box(&xs[..b * rows]),
+                    b,
+                    &mut ys,
+                );
+                black_box(ys[0])
+            });
+            push_row(&mut rows_out, &mut results, r, rows, cols, b, "scalar");
+            let r = bench.run(&name("simd"), || {
+                w.vecmat_batch_into_with(
+                    simd,
+                    1,
+                    black_box(&xs[..b * rows]),
+                    b,
+                    &mut ys,
+                );
+                black_box(ys[0])
+            });
+            push_row(&mut rows_out, &mut results, r, rows, cols, b, "simd");
+            let r = bench.run(&name("simd+mt4"), || {
+                w.vecmat_batch_into_with(
+                    simd,
+                    4,
+                    black_box(&xs[..b * rows]),
+                    b,
+                    &mut ys,
+                );
+                black_box(ys[0])
+            });
+            push_row(&mut rows_out, &mut results, r, rows, cols, b, "simd+mt4");
+        }
+    }
+
+    // Zero-skip satellite: dense vs half-zero inputs on (64, 64), both
+    // kernels. The skip must stay ~free on dense inputs and win on sparse.
+    {
+        let (rows, cols) = (64usize, 64usize);
+        let b = *batches.iter().max().unwrap();
+        let mut w = Mat::zeros(rows, cols);
+        fill(0xDEAD_BEEF, &mut w.data);
+        let mut dense = vec![0.0f64; b * rows];
+        fill(0x1234_5678, &mut dense);
+        let mut half = dense.clone();
+        for v in half.iter_mut().skip(1).step_by(2) {
+            *v = 0.0;
+        }
+        let mut ys = vec![0.0f64; b * cols];
+        for (variant, kind) in
+            [("scalar", KernelKind::Scalar), ("simd", simd)]
+        {
+            for (input, xsrc) in [("dense", &dense), ("halfzero", &half)] {
+                let r = bench.run(
+                    &format!("zeroskip {variant} {input} B={b}"),
+                    || {
+                        w.vecmat_batch_into_with(
+                            kind,
+                            1,
+                            black_box(&xsrc[..]),
+                            b,
+                            &mut ys,
+                        );
+                        black_box(ys[0])
+                    },
+                );
+                let variant_name: &'static str = match (variant, input) {
+                    ("scalar", "dense") => "zeroskip/scalar/dense",
+                    ("scalar", "halfzero") => "zeroskip/scalar/halfzero",
+                    ("simd", "dense") => "zeroskip/simd/dense",
+                    _ => "zeroskip/simd/halfzero",
+                };
+                push_row(
+                    &mut rows_out,
+                    &mut results,
+                    r,
+                    rows,
+                    cols,
+                    b,
+                    variant_name,
+                );
+            }
+        }
+    }
+
+    memode::util::bench::print_table("GEMM kernel sweep", &results);
+
+    let json_rows: Vec<Json> = rows_out
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("rows", Json::Num(r.rows as f64)),
+                ("cols", Json::Num(r.cols as f64)),
+                ("batch", Json::Num(r.batch as f64)),
+                ("variant", Json::Str(r.variant.to_string())),
+                ("ns_per_call", Json::Num(r.ns_per_call)),
+                ("ns_per_madd", Json::Num(r.ns_per_madd)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("gemm_kernels".into())),
+        ("mode", Json::Str(if smoke { "smoke" } else { "full" }.into())),
+        ("simd_available", Json::Bool(kernel::simd_available())),
+        ("rows", Json::Arr(json_rows)),
+    ]);
+    let path = std::env::var("BENCH_GEMM_OUT")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| {
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+                .join("../BENCH_gemm_kernels.json")
+        });
+    json::to_file(&path, &doc).expect("write gemm kernel json");
+    println!(
+        "\nwrote {} ({} rows, mode {})",
+        path.display(),
+        rows_out.len(),
+        if smoke { "smoke" } else { "full" }
+    );
+}

@@ -11,6 +11,14 @@
 //! noisy analogue reads — exactly how the physical system continuously
 //! re-samples the crossbar — and feeds the integrators, whose capacitor
 //! voltages *are* the twin state.
+//!
+//! Every crossbar read in the loop goes through
+//! [`crate::crossbar::vmm::VmmEngine`] and therefore through the
+//! runtime-dispatched GEMM microkernels (`util::kernel`): the analogue
+//! IVP step is SIMD-accelerated (and, for large batches, multicore)
+//! without any change here, and rollouts stay bit-identical across
+//! kernel choices because the dispatch preserves the accumulation-order
+//! contract of `lib.rs`.
 
 use crate::analog::clamp::Clamp;
 use crate::analog::integrator::IvpIntegrator;

@@ -7,28 +7,51 @@
 //!
 //! Usage:
 //!   bench_gate [--baseline PATH] [--fresh PATH] [--max-regress FRAC]
-//!              [--update]
+//!              [--update] [--ratchet] [--allow-unseeded]
+//!              [--assert-speedup ROUTE:FACTOR]
 //!
-//! `--update` copies the fresh document over the baseline (seed or refresh
-//! it after an intentional perf change, on a quiet machine). Paths default
-//! to `$BENCH_BASELINE` / `BENCH_baseline.json` and `$BENCH_OUT` /
-//! `BENCH_batch_throughput.json` at the repository root. A missing or
-//! empty baseline passes vacuously so the gate can land before the first
-//! seeding.
+//! An unseeded (missing/empty) baseline is a **hard failure**: a gate
+//! that protects nothing must never look green. `--allow-unseeded`
+//! restores the old vacuous pass for the bootstrap window only (CI's
+//! seed job on the main branch closes it by committing a seeded
+//! baseline).
+//!
+//! `--update` copies the fresh document over the baseline
+//! unconditionally (manual seed/refresh on a quiet machine).
+//!
+//! `--ratchet` is the CI self-maintenance mode: seed the baseline when
+//! unseeded; rewrite it when the fresh run *improved* beyond the
+//! allowance (so future regressions are measured from the new, faster
+//! level); fail — without touching the baseline — on a regression.
+//!
+//! `--assert-speedup ROUTE:FACTOR` (repeatable) switches to the in-job
+//! comparison mode: assert the fresh document's batched
+//! ns/trajectory-step on ROUTE improved by at least FACTOR over the
+//! baseline document at the largest common batch size. No machine-speed
+//! normalisation is applied — this mode expects baseline and fresh to
+//! come from the *same machine* (e.g. a forced-scalar
+//! `MEMODE_KERNEL=scalar` run vs an auto run), where normalisation
+//! would cancel exactly the kernel-level speedup being asserted. The
+//! regression gate does not run in this mode.
 
 use std::path::PathBuf;
 use std::process::ExitCode;
 
 use memode::twin::throughput::{
     default_baseline_path, default_json_path, gate_against_baseline,
+    route_speedup,
 };
-use memode::util::json;
+use memode::util::json::{self, Json};
 
 struct Args {
     baseline: PathBuf,
     fresh: PathBuf,
     max_regress: f64,
     update: bool,
+    ratchet: bool,
+    allow_unseeded: bool,
+    /// (route, min factor) assertions from --assert-speedup.
+    speedups: Vec<(String, f64)>,
 }
 
 fn parse_args() -> Result<Args, String> {
@@ -37,6 +60,9 @@ fn parse_args() -> Result<Args, String> {
         fresh: default_json_path(),
         max_regress: 0.25,
         update: false,
+        ratchet: false,
+        allow_unseeded: false,
+        speedups: Vec::new(),
     };
     let mut it = std::env::args().skip(1);
     while let Some(a) = it.next() {
@@ -58,10 +84,27 @@ fn parse_args() -> Result<Args, String> {
                     .map_err(|e| format!("--max-regress {v}: {e}"))?;
             }
             "--update" => args.update = true,
+            "--ratchet" => args.ratchet = true,
+            "--allow-unseeded" => args.allow_unseeded = true,
+            "--assert-speedup" => {
+                let v = it
+                    .next()
+                    .ok_or("--assert-speedup needs ROUTE:FACTOR")?;
+                let (route, factor) = v
+                    .rsplit_once(':')
+                    .ok_or_else(|| {
+                        format!("--assert-speedup {v}: expected ROUTE:FACTOR")
+                    })?;
+                let factor = factor.parse::<f64>().map_err(|e| {
+                    format!("--assert-speedup {v}: bad factor: {e}")
+                })?;
+                args.speedups.push((route.to_string(), factor));
+            }
             "--help" | "-h" => {
                 return Err(
                     "usage: bench_gate [--baseline PATH] [--fresh PATH] \
-                     [--max-regress FRAC] [--update]"
+                     [--max-regress FRAC] [--update] [--ratchet] \
+                     [--allow-unseeded] [--assert-speedup ROUTE:FACTOR]"
                         .into(),
                 );
             }
@@ -71,23 +114,88 @@ fn parse_args() -> Result<Args, String> {
     Ok(args)
 }
 
-/// Loud vacuous-pass notice: the gate exits 0 (there is nothing to
-/// compare), but an unseeded baseline must never look like a green
-/// regression check — emit a CI annotation (GitHub renders `::warning`
-/// lines on the workflow summary) plus an unmissable stderr banner.
-fn warn_unseeded(reason: &str) {
+/// Unseeded-baseline notice. With `allow` (bootstrap window) the gate
+/// exits 0 but emits a CI annotation (GitHub renders `::warning` lines on
+/// the workflow summary) plus an unmissable stderr banner; without it,
+/// unseeded is a hard failure — a regression gate that compares nothing
+/// must never look green.
+fn report_unseeded(reason: &str, allow: bool) -> ExitCode {
+    let level = if allow { "warning" } else { "error" };
     println!(
-        "::warning title=bench_gate vacuous::BENCH_baseline.json is \
+        "::{level} title=bench_gate unseeded::BENCH_baseline.json is \
          unseeded ({reason}) — the bench-regression gate is NOT \
          protecting any route. Seed it on a quiet runner with `cargo \
          bench --bench batch_throughput -- --smoke && cargo run \
-         --release --bin bench_gate -- --update`, inspect, commit."
+         --release --bin bench_gate -- --ratchet`, inspect, commit (the \
+         main-branch CI job does this automatically)."
     );
-    eprintln!(
-        "bench gate: VACUOUS PASS — unseeded baseline ({reason}); no \
-         route is protected against perf regressions until a seeded \
-         BENCH_baseline.json is committed"
-    );
+    if allow {
+        eprintln!(
+            "bench gate: VACUOUS PASS (--allow-unseeded) — unseeded \
+             baseline ({reason}); no route is protected against perf \
+             regressions until a seeded BENCH_baseline.json is committed"
+        );
+        ExitCode::SUCCESS
+    } else {
+        eprintln!(
+            "bench gate: FAIL — unseeded baseline ({reason}). Seed it \
+             (see above) or pass --allow-unseeded during bootstrap."
+        );
+        ExitCode::FAILURE
+    }
+}
+
+fn load(path: &std::path::Path, what: &str) -> Result<Json, ExitCode> {
+    match json::from_file(path) {
+        Ok(doc) => Ok(doc),
+        Err(e) => {
+            eprintln!("reading {what} {}: {e:#}", path.display());
+            Err(ExitCode::FAILURE)
+        }
+    }
+}
+
+/// `--assert-speedup` mode: same-machine baseline-vs-fresh route
+/// speedups, no normalisation, no regression gate.
+fn run_speedup_asserts(args: &Args) -> ExitCode {
+    let baseline = match load(&args.baseline, "speedup baseline") {
+        Ok(d) => d,
+        Err(c) => return c,
+    };
+    let fresh = match load(&args.fresh, "fresh benchmark") {
+        Ok(d) => d,
+        Err(c) => return c,
+    };
+    let mut failed = false;
+    for (route, factor) in &args.speedups {
+        match route_speedup(&baseline, &fresh, route) {
+            Ok(Some((batch, batched, serial))) => {
+                let ok = batched >= *factor;
+                println!(
+                    "speedup {route} B={batch}: batched x{batched:.2} \
+                     (serial x{serial:.2}) vs required x{factor:.2} — {}",
+                    if ok { "PASS" } else { "FAIL" }
+                );
+                failed |= !ok;
+            }
+            Ok(None) => {
+                eprintln!(
+                    "speedup {route}: route missing from baseline or \
+                     fresh document — FAIL"
+                );
+                failed = true;
+            }
+            Err(e) => {
+                eprintln!("speedup {route}: {e:#}");
+                failed = true;
+            }
+        }
+    }
+    if failed {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
 }
 
 fn main() -> ExitCode {
@@ -98,6 +206,9 @@ fn main() -> ExitCode {
             return ExitCode::FAILURE;
         }
     };
+    if !args.speedups.is_empty() {
+        return run_speedup_asserts(&args);
+    }
     if args.update {
         match std::fs::copy(&args.fresh, &args.baseline) {
             Ok(_) => {
@@ -129,19 +240,14 @@ fn main() -> ExitCode {
         }
     };
     let baseline = if args.baseline.exists() {
-        match json::from_file(&args.baseline) {
-            Ok(doc) => doc,
-            Err(e) => {
-                eprintln!(
-                    "reading baseline {}: {e:#}",
-                    args.baseline.display()
-                );
-                return ExitCode::FAILURE;
-            }
+        match load(&args.baseline, "baseline") {
+            Ok(d) => d,
+            Err(c) => return c,
         }
+    } else if args.ratchet {
+        return seed_baseline(&args, "baseline file missing");
     } else {
-        warn_unseeded("baseline file missing");
-        return ExitCode::SUCCESS;
+        return report_unseeded("baseline file missing", args.allow_unseeded);
     };
     let report =
         match gate_against_baseline(&baseline, &fresh, args.max_regress) {
@@ -152,8 +258,10 @@ fn main() -> ExitCode {
             }
         };
     if report.unseeded() {
-        warn_unseeded("no comparable entries");
-        return ExitCode::SUCCESS;
+        if args.ratchet {
+            return seed_baseline(&args, "baseline has no entries");
+        }
+        return report_unseeded("no comparable entries", args.allow_unseeded);
     }
     println!(
         "bench gate: {} metrics compared, machine scale x{:.2}, allowance \
@@ -162,14 +270,51 @@ fn main() -> ExitCode {
         report.scale,
         args.max_regress * 100.0
     );
-    if report.passed() {
-        println!("bench gate: PASS");
-        ExitCode::SUCCESS
-    } else {
+    if !report.passed() {
         eprintln!("bench gate: FAIL — regressed routes:");
         for f in &report.failures {
             eprintln!("  {f}");
         }
-        ExitCode::FAILURE
+        if args.ratchet {
+            eprintln!(
+                "bench gate: baseline left untouched (never ratchet over \
+                 a regression)"
+            );
+        }
+        return ExitCode::FAILURE;
+    }
+    if args.ratchet {
+        if report.improved() {
+            println!("bench gate: improvements beyond the allowance:");
+            for s in &report.improvements {
+                println!("  {s}");
+            }
+            return seed_baseline(&args, "ratcheting improved baseline");
+        }
+        println!("bench gate: PASS (no improvements to ratchet)");
+        return ExitCode::SUCCESS;
+    }
+    println!("bench gate: PASS");
+    ExitCode::SUCCESS
+}
+
+/// Copy the fresh document over the baseline (seed or ratchet).
+fn seed_baseline(args: &Args, why: &str) -> ExitCode {
+    match std::fs::copy(&args.fresh, &args.baseline) {
+        Ok(_) => {
+            println!(
+                "bench gate: wrote baseline {} from {} ({why})",
+                args.baseline.display(),
+                args.fresh.display()
+            );
+            ExitCode::SUCCESS
+        }
+        Err(e) => {
+            eprintln!(
+                "bench gate: writing baseline {} failed: {e}",
+                args.baseline.display()
+            );
+            ExitCode::FAILURE
+        }
     }
 }

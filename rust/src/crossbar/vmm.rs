@@ -35,6 +35,16 @@
 //! bit-identical across serial, batched, and sharded execution; see the
 //! noise-determinism invariants in `lib.rs`.
 //!
+//! ## Kernel independence
+//!
+//! Both GEMMs (the clean read over W and the variance read over W2) run
+//! on the runtime-dispatched microkernels of [`crate::util::kernel`]
+//! (AVX2 / scalar / threaded), which are bit-identical to each other by
+//! construction. Noise is applied *after* the GEMM, addressed purely by
+//! lane cursor and column index — so kernel choice can never shift which
+//! draws a trajectory consumes, and seeded noisy reads replay exactly
+//! across `MEMODE_KERNEL` settings, CPU generations and thread counts.
+//!
 //! [`DifferentialArray::vmm_physical`]: crate::crossbar::differential::DifferentialArray::vmm_physical
 
 use crate::crossbar::differential::DifferentialArray;

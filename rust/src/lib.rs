@@ -72,7 +72,44 @@
 //!    order over the shared dimension — including the zero-input skip —
 //!    identical to the serial `vecmat_into`. That is what makes noise-off
 //!    batched rollouts bit-identical to serial ones, and it is the
-//!    invariant to re-verify before touching any kernel.
+//!    invariant to re-verify before touching any kernel. The SIMD and
+//!    multicore kernels (below) preserve this contract *by construction*
+//!    rather than re-pinning it.
+//!
+//! ## Kernel dispatch (SIMD + multicore GEMM)
+//!
+//! Every `Mat::vecmat*` call — crossbar reads, model forwards, analogue
+//! IVP steps — executes through the runtime-dispatched microkernels of
+//! [`util::kernel`]:
+//!
+//! * **Runtime detection.** x86_64 with AVX2 runs the vectorised tile
+//!   kernel (`is_x86_feature_detected!`, checked once and cached); every
+//!   other target runs the portable scalar kernel. There is no
+//!   compile-time feature requirement: one binary serves both.
+//! * **Forced-scalar override.** `MEMODE_KERNEL=scalar` pins the scalar
+//!   kernel process-wide (`simd` / `auto` analogously); the value is read
+//!   once into a `OnceLock`, so the override costs the warm path nothing
+//!   and the zero-allocation contract holds. Tests pin kernels through
+//!   the explicit `Mat::*_with` entry points instead of the environment.
+//! * **Threading threshold.** Batched GEMMs fan out over scoped threads
+//!   in disjoint trajectory blocks only past `kernel::THREAD_MIN_BATCH`
+//!   trajectories *and* `kernel::THREAD_MIN_WORK` multiply-adds (capped
+//!   by `MEMODE_GEMM_THREADS`); below, they stay on the caller's thread.
+//!   The threaded path allocates (thread spawn) and is deliberately
+//!   outside invariant 3, exactly like the shard fan-out of
+//!   `twin::shard` — the thresholds keep it off the warm zero-alloc
+//!   request path, which `rust/tests/alloc.rs` enforces.
+//! * **Surviving accumulation contract.** The AVX2 kernel vectorises
+//!   across output *columns* with plain mul+add (never FMA, whose single
+//!   rounding would diverge from scalar) and keeps the zero-input skip,
+//!   so each output element's accumulation order over the shared
+//!   dimension is exactly the serial order; the threaded path never
+//!   splits a trajectory. Scalar, SIMD and threaded outputs are
+//!   therefore bit-identical — enforced by kernel/tensor unit tests and
+//!   the property suite (`rust/tests/properties.rs`) — and noise-lane
+//!   draw indexing (invariant 2 of the noise rules below) is independent
+//!   of kernel choice because noise is applied by index *after* the
+//!   GEMM.
 //! 3. **Scratch-arena ownership.** Every hot-path worker object owns its
 //!    reusable scratch: solver steppers (`ode::rk4::Rk4`,
 //!    `ode::euler::Euler`) their stage buffers; the analogue loop its

@@ -5,7 +5,10 @@
 //! [`Mlp::forward_batch_into`] runs B stacked inputs through the net with
 //! one GEMM per layer ([`Mat::vecmat_batch_into`]); per trajectory it is
 //! bit-identical to [`Mlp::forward_into`], which is what lets the batched
-//! request path reproduce serial rollouts exactly.
+//! request path reproduce serial rollouts exactly. Both forwards inherit
+//! the runtime-dispatched SIMD/threaded microkernels of
+//! [`crate::util::kernel`] through `Mat` — no model code changes with the
+//! CPU, and outputs are bit-identical across kernel choices.
 
 use crate::models::loader::MlpWeights;
 use crate::ode::batch::BatchVectorField;

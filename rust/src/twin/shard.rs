@@ -38,6 +38,15 @@
 //! fan-out exists for the capacity scenario the paper's scalability claims
 //! rest on — states larger than one physical array, spread over workers —
 //! not for small-state latency.
+//!
+//! The batched GEMM's multicore path
+//! (`util::tensor::Mat::vecmat_batch_into` past the
+//! `util::kernel::plan_threads` thresholds) reuses this module's worker
+//! pattern — scoped threads over disjoint work blocks, joined before the
+//! call returns — but at the *batch* axis instead of the column axis, and
+//! with no exchange barriers: trajectory blocks share only the read-only
+//! weight matrix. The two fan-outs compose: each shard worker's reads
+//! dispatch through the same runtime-selected microkernel.
 
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, Ordering};

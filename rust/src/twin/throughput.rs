@@ -431,6 +431,12 @@ pub struct GateReport {
     /// Human-readable descriptions of every tracked metric whose
     /// normalised ratio exceeded the allowance.
     pub failures: Vec<String>,
+    /// Tracked metrics that *improved* beyond the allowance (normalised
+    /// ratio below `scale / (1 + max_regress)`) — the ratchet signal: a
+    /// kernel-level speedup shows up here, and `bench_gate --ratchet`
+    /// rewrites the baseline so the gate measures future regressions
+    /// from the new, faster level.
+    pub improvements: Vec<String>,
 }
 
 impl GateReport {
@@ -438,9 +444,17 @@ impl GateReport {
         self.failures.is_empty()
     }
 
-    /// True when the baseline carried no entries (gate passes vacuously).
+    /// True when the baseline carried no entries. The gate binary treats
+    /// this as a hard failure unless explicitly bootstrapping
+    /// (`--allow-unseeded`) — an unseeded baseline protects nothing.
     pub fn unseeded(&self) -> bool {
         self.compared == 0
+    }
+
+    /// True when at least one tracked metric improved beyond the
+    /// allowance (see [`GateReport::improvements`]).
+    pub fn improved(&self) -> bool {
+        !self.improvements.is_empty()
     }
 }
 
@@ -486,9 +500,10 @@ fn bench_rows(doc: &Json) -> anyhow::Result<Vec<(String, f64, f64)>> {
 /// `scale * (1 + max_regress)`. A *uniform* slowdown therefore passes (by
 /// design — it is indistinguishable from a slower runner), while any route
 /// that regressed *relative to the rest of the suite* fails. An empty or
-/// missing baseline passes vacuously with [`GateReport::unseeded`] set —
-/// seed it with `cargo run --release --bin bench_gate -- --update` after a
-/// smoke bench run on a quiet machine.
+/// missing baseline returns an empty report with [`GateReport::unseeded`]
+/// set — the `bench_gate` binary treats that as a hard failure (unless
+/// bootstrapping with `--allow-unseeded`) and seeds/ratchets the baseline
+/// in `--ratchet` mode.
 pub fn gate_against_baseline(
     baseline: &Json,
     fresh: &Json,
@@ -512,12 +527,14 @@ pub fn gate_against_baseline(
             compared: 0,
             scale: 1.0,
             failures: Vec::new(),
+            improvements: Vec::new(),
         });
     }
     let ratios: Vec<f64> =
         pairs.iter().map(|(_, base, fresh)| fresh / base).collect();
     let scale = crate::util::stats::median(&ratios);
     let allowance = scale * (1.0 + max_regress);
+    let improve_below = scale / (1.0 + max_regress);
     let failures = pairs
         .iter()
         .zip(&ratios)
@@ -530,7 +547,60 @@ pub fn gate_against_baseline(
             )
         })
         .collect();
-    Ok(GateReport { compared: pairs.len(), scale, failures })
+    let improvements = pairs
+        .iter()
+        .zip(&ratios)
+        .filter(|(_, &r)| r < improve_below)
+        .map(|((key, base, fresh), r)| {
+            format!(
+                "{key}: {fresh:.1} ns/step vs baseline {base:.1} \
+                 (x{r:.2} at machine scale {scale:.2})"
+            )
+        })
+        .collect();
+    Ok(GateReport { compared: pairs.len(), scale, failures, improvements })
+}
+
+/// Speedup of `fresh` over `baseline` on one route: the ratio
+/// `baseline / fresh` of the batched ns/trajectory-step at the largest
+/// batch size present in both documents (plus the serial-column ratio at
+/// that batch, for reporting). `None` when the route is missing from
+/// either side.
+///
+/// This is the in-job comparison the CI quick-bench uses to assert the
+/// SIMD kernels' end-to-end win: the "baseline" is a forced-scalar run
+/// (`MEMODE_KERNEL=scalar`) on the *same machine moments earlier*, so no
+/// machine-speed normalisation applies — unlike [`gate_against_baseline`],
+/// which would normalise a uniform kernel-level speedup away.
+pub fn route_speedup(
+    baseline: &Json,
+    fresh: &Json,
+    route: &str,
+) -> anyhow::Result<Option<(usize, f64, f64)>> {
+    let base = bench_rows(baseline)?;
+    let new = bench_rows(fresh)?;
+    let mut best: Option<(usize, f64, f64)> = None;
+    for (key, bs, bb) in &base {
+        let Some(rest) = key.strip_prefix(route) else { continue };
+        let Some(batch) = rest
+            .strip_prefix(" B=")
+            .and_then(|b| b.parse::<f64>().ok())
+            .map(|b| b as usize)
+        else {
+            continue;
+        };
+        let Some((_, ns, nb)) = new.iter().find(|(k, _, _)| k == key)
+        else {
+            continue;
+        };
+        if *bb <= 0.0 || *nb <= 0.0 || *bs <= 0.0 || *ns <= 0.0 {
+            continue;
+        }
+        if best.is_none_or(|(b, _, _)| batch > b) {
+            best = Some((batch, bb / nb, bs / ns));
+        }
+    }
+    Ok(best)
 }
 
 #[cfg(test)]
@@ -679,6 +749,60 @@ mod tests {
         let fresh = gate_doc(&[("hp/analog", 32, 100.0, 40.0)]);
         let r = gate_against_baseline(&base, &fresh, 0.25).unwrap();
         assert!(r.passed() && r.unseeded());
+    }
+
+    #[test]
+    fn gate_reports_improvements_for_the_ratchet() {
+        // One route 4x faster while the rest holds: an improvement, not a
+        // machine-speed artefact — the ratchet signal.
+        let base = gate_doc(&[
+            ("hp/analog", 32, 100.0, 40.0),
+            ("l96/analog", 32, 900.0, 300.0),
+            ("l96d64/analog", 32, 4000.0, 2000.0),
+        ]);
+        let fresh = gate_doc(&[
+            ("hp/analog", 32, 100.0, 40.0),
+            ("l96/analog", 32, 900.0, 300.0),
+            ("l96d64/analog", 32, 1000.0, 500.0),
+        ]);
+        let r = gate_against_baseline(&base, &fresh, 0.25).unwrap();
+        assert!(r.passed(), "{:?}", r.failures);
+        assert!(r.improved());
+        assert_eq!(r.improvements.len(), 2);
+        assert!(
+            r.improvements.iter().all(|s| s.contains("l96d64/analog")),
+            "{:?}",
+            r.improvements
+        );
+        // Identical documents: nothing to ratchet.
+        let same = gate_against_baseline(&base, &base, 0.25).unwrap();
+        assert!(!same.improved());
+    }
+
+    #[test]
+    fn route_speedup_compares_largest_common_batch() {
+        let scalar = gate_doc(&[
+            ("l96d64/analog", 8, 4000.0, 2400.0),
+            ("l96d64/analog", 32, 4000.0, 2000.0),
+            ("l96d64/analog-shard2", 32, 4000.0, 1800.0),
+        ]);
+        let simd = gate_doc(&[
+            ("l96d64/analog", 8, 1000.0, 600.0),
+            ("l96d64/analog", 32, 900.0, 400.0),
+            ("l96d64/analog-shard2", 32, 1000.0, 450.0),
+        ]);
+        let (batch, batched, serial) =
+            route_speedup(&scalar, &simd, "l96d64/analog")
+                .unwrap()
+                .expect("route present in both documents");
+        // Largest common batch (32), not the shard2 sibling route.
+        assert_eq!(batch, 32);
+        assert!((batched - 5.0).abs() < 1e-12, "batched {batched}");
+        assert!((serial - 4000.0 / 900.0).abs() < 1e-12);
+        // Missing routes report None, never a silent 1.0x.
+        assert!(route_speedup(&scalar, &simd, "hp/analog")
+            .unwrap()
+            .is_none());
     }
 
     #[test]

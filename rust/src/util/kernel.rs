@@ -1,0 +1,452 @@
+//! Runtime-dispatched GEMM microkernels — the SIMD / scalar / threading
+//! policy behind every `Mat::vecmat*` kernel, i.e. behind every crossbar
+//! read, model forward and analogue IVP step in the system.
+//!
+//! ## Dispatch rules
+//!
+//! * [`active`] picks the process-wide kernel once: the `MEMODE_KERNEL`
+//!   environment variable (`scalar` | `simd` | `auto`) overrides runtime
+//!   CPU detection (`is_x86_feature_detected!("avx2")`); the choice is
+//!   cached in a `OnceLock` so the warm request path never re-reads the
+//!   environment (reading an env var allocates — see the zero-allocation
+//!   contract in `lib.rs`). The scalar kernel is the portable fallback on
+//!   every non-x86_64 target.
+//! * Forcing `simd` on a machine without AVX2 falls back to scalar with a
+//!   loud stderr notice — the override is a testing aid, never a way to
+//!   execute unsupported instructions. Tests that must pin a kernel use
+//!   the explicit `Mat::*_with` entry points instead of mutating the
+//!   environment (per-test env writes race the parallel test harness).
+//! * [`plan_threads`] keeps small / latency-sensitive batches
+//!   single-threaded: the multicore path engages only when a batched GEMM
+//!   carries at least [`THREAD_MIN_BATCH`] trajectories *and* performs at
+//!   least [`THREAD_MIN_WORK`] multiply-adds, capped by
+//!   `MEMODE_GEMM_THREADS` (0 / unset = all available cores).
+//!
+//! ## Bit-identity
+//!
+//! Every kernel — scalar, AVX2, threaded — produces **bit-identical**
+//! output:
+//!
+//! * the AVX2 path vectorises across *output columns* (4 f64 per ymm
+//!   register) with plain mul+add, never FMA — FMA's single rounding
+//!   would change results relative to the scalar `*yc += xv * a` — so
+//!   each output element's floating-point accumulation order over the
+//!   shared dimension is exactly the serial order;
+//! * the zero-input skip (`if x[r] == 0.0 { continue; }`) is kept in
+//!   *both* kernels: it is part of the accumulation contract (skipping a
+//!   zero input differs from adding `0.0 * a` whenever a weight is
+//!   non-finite), and on dense inputs it costs one well-predicted branch
+//!   per row (measured by `benches/gemm_kernels.rs`);
+//! * the threaded path splits the batch into disjoint trajectory blocks
+//!   and runs the identical single-trajectory kernel on each, so it
+//!   cannot reorder any accumulation.
+//!
+//! Noise-lane draw indexing (`util::rng::NoiseLane`) addresses draws by
+//! explicit index *after* the GEMM, so kernel choice can never affect
+//! which noise a trajectory sees. See the perf-invariants section of the
+//! crate docs (`lib.rs`) for the full contract.
+
+use std::sync::OnceLock;
+
+/// Output-tile width of the GEMM microkernels: 32 f64 = 4 cache lines =
+/// 8 ymm registers, small enough that a full accumulator tile stays in
+/// registers across the whole shared-dimension loop. Shared by the
+/// full-width and the column-sharded kernels so both tile identically.
+pub const VECMAT_TILE_COLS: usize = 32;
+
+/// Trajectory-count floor below which batched GEMMs stay on the caller's
+/// thread (small batches are latency-sensitive; spawn cost dominates).
+pub const THREAD_MIN_BATCH: usize = 64;
+
+/// Multiply-add floor (`batch * rows * cols`) below which batched GEMMs
+/// stay single-threaded even at high trajectory counts.
+pub const THREAD_MIN_WORK: usize = 1 << 21;
+
+/// Which microkernel executes a `Mat::vecmat*` call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Portable scalar loops (the reference implementation).
+    Scalar,
+    /// AVX2 column-vectorised microkernel (x86_64 only; bit-identical to
+    /// `Scalar` by construction — see the module docs).
+    Simd,
+}
+
+/// True when the running CPU supports the AVX2 microkernel.
+pub fn simd_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// The kernel runtime detection would pick on this machine (ignoring the
+/// `MEMODE_KERNEL` override).
+pub fn detected() -> KernelKind {
+    if simd_available() {
+        KernelKind::Simd
+    } else {
+        KernelKind::Scalar
+    }
+}
+
+/// The process-wide kernel choice: `MEMODE_KERNEL` override if set, else
+/// runtime detection. Cached on first use (the hot path never re-reads
+/// the environment).
+pub fn active() -> KernelKind {
+    static ACTIVE: OnceLock<KernelKind> = OnceLock::new();
+    *ACTIVE.get_or_init(|| match std::env::var("MEMODE_KERNEL") {
+        Ok(v) if v == "scalar" => KernelKind::Scalar,
+        Ok(v) if v == "simd" => {
+            if simd_available() {
+                KernelKind::Simd
+            } else {
+                eprintln!(
+                    "MEMODE_KERNEL=simd: AVX2 unavailable on this CPU; \
+                     falling back to the scalar kernel"
+                );
+                KernelKind::Scalar
+            }
+        }
+        Ok(v) if v == "auto" || v.is_empty() => detected(),
+        Ok(v) => {
+            eprintln!(
+                "MEMODE_KERNEL={v}: unknown kernel (expected \
+                 scalar|simd|auto); using auto detection"
+            );
+            detected()
+        }
+        Err(_) => detected(),
+    })
+}
+
+/// Worker cap for the multicore batched GEMM: `MEMODE_GEMM_THREADS`
+/// (0 / unset / unparseable = all available cores), cached once per
+/// process.
+pub fn max_threads() -> usize {
+    static CAP: OnceLock<usize> = OnceLock::new();
+    *CAP.get_or_init(|| {
+        let auto = || {
+            std::thread::available_parallelism()
+                .map(std::num::NonZeroUsize::get)
+                .unwrap_or(1)
+        };
+        match std::env::var("MEMODE_GEMM_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+        {
+            Some(0) | None => auto(),
+            Some(n) => n,
+        }
+    })
+}
+
+/// Workers for one batched GEMM on this machine (1 = stay on the
+/// caller's thread). See [`plan_threads_with_cap`] for the policy.
+pub fn plan_threads(batch: usize, rows: usize, cols: usize) -> usize {
+    plan_threads_with_cap(max_threads(), batch, rows, cols)
+}
+
+/// The threading policy with an explicit worker cap (separated from
+/// [`plan_threads`] so the thresholds are testable independently of the
+/// machine): single-threaded below [`THREAD_MIN_BATCH`] trajectories or
+/// [`THREAD_MIN_WORK`] multiply-adds, otherwise up to `cap` workers while
+/// keeping at least `THREAD_MIN_BATCH / 2` trajectories per worker.
+pub fn plan_threads_with_cap(
+    cap: usize,
+    batch: usize,
+    rows: usize,
+    cols: usize,
+) -> usize {
+    let work = batch.saturating_mul(rows).saturating_mul(cols);
+    if cap <= 1 || batch < THREAD_MIN_BATCH || work < THREAD_MIN_WORK {
+        return 1;
+    }
+    cap.min(batch / (THREAD_MIN_BATCH / 2)).max(1)
+}
+
+/// One trajectory's `y += x^T A[:, c0..c1]` (`y.len() == c1 - c0`, `y`
+/// pre-zeroed by the caller), walked in [`VECMAT_TILE_COLS`]-wide output
+/// tiles so the accumulator tile stays register/L1-resident across the
+/// whole shared-dimension loop. Per output element the accumulation
+/// order over `r` — including the zero-input skip — is exactly the
+/// serial scalar order, whichever `kind` executes.
+pub(crate) fn vecmat_range(
+    kind: KernelKind,
+    x: &[f64],
+    a: &[f64],
+    cols: usize,
+    c0: usize,
+    c1: usize,
+    y: &mut [f64],
+) {
+    debug_assert_eq!(y.len(), c1 - c0);
+    let mut t0 = c0;
+    while t0 < c1 {
+        let t1 = (t0 + VECMAT_TILE_COLS).min(c1);
+        accumulate_tile(kind, x, a, cols, t0, &mut y[t0 - c0..t1 - c0]);
+        t0 = t1;
+    }
+}
+
+/// `yt[j] += Σ_r x[r] * a[r * cols + t0 + j]` for one output tile
+/// (`yt.len() <= VECMAT_TILE_COLS`), zero-input rows skipped, accumulated
+/// in exactly the serial scalar order per output element.
+#[inline]
+pub(crate) fn accumulate_tile(
+    kind: KernelKind,
+    x: &[f64],
+    a: &[f64],
+    cols: usize,
+    t0: usize,
+    yt: &mut [f64],
+) {
+    assert!(
+        t0 + yt.len() <= cols && x.len() * cols <= a.len(),
+        "accumulate_tile: tile {t0}+{} outside a {}x{cols} matrix",
+        yt.len(),
+        x.len()
+    );
+    match kind {
+        KernelKind::Scalar => accumulate_tile_scalar(x, a, cols, t0, yt),
+        KernelKind::Simd => {
+            #[cfg(target_arch = "x86_64")]
+            if simd_available() {
+                // SAFETY: AVX2 is present (checked on the line above),
+                // and the bounds assert above guarantees every row slice
+                // `a[r * cols + t0 ..][..yt.len()]` read by the kernel is
+                // in bounds.
+                unsafe { accumulate_tile_avx2(x, a, cols, t0, yt) };
+                return;
+            }
+            // Portable fallback: `Simd` requested but unavailable (other
+            // arch, or a hand-constructed kind on an old x86_64).
+            accumulate_tile_scalar(x, a, cols, t0, yt);
+        }
+    }
+}
+
+fn accumulate_tile_scalar(
+    x: &[f64],
+    a: &[f64],
+    cols: usize,
+    t0: usize,
+    yt: &mut [f64],
+) {
+    let w = yt.len();
+    for (r, &xv) in x.iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        let at = &a[r * cols + t0..r * cols + t0 + w];
+        for (yc, &av) in yt.iter_mut().zip(at) {
+            *yc += xv * av;
+        }
+    }
+}
+
+/// AVX2 tile kernel: 4 f64 per ymm register across output columns, plain
+/// mul+add (two roundings, exactly like the scalar kernel — never FMA),
+/// zero-input skip kept. A full 32-wide tile holds its 8 accumulators in
+/// registers for the whole shared-dimension loop (one load and one store
+/// of `yt` total); narrower tail tiles take a generic quad + remainder
+/// path.
+///
+/// # Safety
+///
+/// Caller must ensure AVX2 is available and
+/// `x.len() * cols <= a.len() && t0 + yt.len() <= cols` (every row slice
+/// read is then in bounds) — both are checked by [`accumulate_tile`].
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn accumulate_tile_avx2(
+    x: &[f64],
+    a: &[f64],
+    cols: usize,
+    t0: usize,
+    yt: &mut [f64],
+) {
+    use std::arch::x86_64::{
+        _mm256_add_pd, _mm256_loadu_pd, _mm256_mul_pd, _mm256_set1_pd,
+        _mm256_setzero_pd, _mm256_storeu_pd,
+    };
+    let w = yt.len();
+    debug_assert!(w <= VECMAT_TILE_COLS);
+    if w == VECMAT_TILE_COLS {
+        // Full tile: fixed-size accumulator array, unrolled by the
+        // compiler (the count is a compile-time constant).
+        let mut acc = [_mm256_setzero_pd(); VECMAT_TILE_COLS / 4];
+        for (k, a4) in acc.iter_mut().enumerate() {
+            *a4 = _mm256_loadu_pd(yt.as_ptr().add(4 * k));
+        }
+        for (r, &xv) in x.iter().enumerate() {
+            // Zero-input skip: part of the accumulation contract (and
+            // ~free on dense inputs — one predictable branch per row).
+            if xv == 0.0 {
+                continue;
+            }
+            let row = a.as_ptr().add(r * cols + t0);
+            let xb = _mm256_set1_pd(xv);
+            for (k, a4) in acc.iter_mut().enumerate() {
+                let prod = _mm256_mul_pd(xb, _mm256_loadu_pd(row.add(4 * k)));
+                *a4 = _mm256_add_pd(*a4, prod);
+            }
+        }
+        for (k, a4) in acc.iter().enumerate() {
+            _mm256_storeu_pd(yt.as_mut_ptr().add(4 * k), *a4);
+        }
+        return;
+    }
+    // Tail tile (w < 32): quads in ymm registers plus a scalar remainder
+    // of at most 3 columns, all held across the shared-dimension loop.
+    let quads = w / 4;
+    let rem = w % 4;
+    let mut acc = [_mm256_setzero_pd(); VECMAT_TILE_COLS / 4 - 1];
+    for (k, a4) in acc.iter_mut().enumerate().take(quads) {
+        *a4 = _mm256_loadu_pd(yt.as_ptr().add(4 * k));
+    }
+    let mut tail = [0.0f64; 3];
+    for (j, t) in tail.iter_mut().enumerate().take(rem) {
+        *t = yt[quads * 4 + j];
+    }
+    for (r, &xv) in x.iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        let row = a.as_ptr().add(r * cols + t0);
+        let xb = _mm256_set1_pd(xv);
+        for (k, a4) in acc.iter_mut().enumerate().take(quads) {
+            let prod = _mm256_mul_pd(xb, _mm256_loadu_pd(row.add(4 * k)));
+            *a4 = _mm256_add_pd(*a4, prod);
+        }
+        for (j, t) in tail.iter_mut().enumerate().take(rem) {
+            *t += xv * *row.add(quads * 4 + j);
+        }
+    }
+    for (k, a4) in acc.iter().enumerate().take(quads) {
+        _mm256_storeu_pd(yt.as_mut_ptr().add(4 * k), *a4);
+    }
+    for (j, &t) in tail.iter().enumerate().take(rem) {
+        yt[quads * 4 + j] = t;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reference(x: &[f64], a: &[f64], cols: usize, c0: usize, c1: usize) -> Vec<f64> {
+        let mut y = vec![0.0; c1 - c0];
+        for (r, &xv) in x.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            for (j, yv) in y.iter_mut().enumerate() {
+                *yv += xv * a[r * cols + c0 + j];
+            }
+        }
+        y
+    }
+
+    #[test]
+    fn simd_bit_identical_to_scalar_across_widths() {
+        // Every tile width 1..=70 (tail quads, remainders, full tiles,
+        // multi-tile ranges), with zeros sprinkled into the input. On
+        // machines without AVX2 the Simd kind falls back to scalar and
+        // the comparison is trivially true — the CI kernel-matrix legs
+        // cover both worlds.
+        let rows = 9;
+        for cols in 1..=70usize {
+            let a: Vec<f64> = (0..rows * cols)
+                .map(|k| ((k * 37 % 23) as f64) / 7.0 - 1.4)
+                .collect();
+            let x: Vec<f64> = (0..rows)
+                .map(|r| if r % 3 == 1 { 0.0 } else { (r as f64 * 0.61).sin() })
+                .collect();
+            let mut ys = vec![0.0; cols];
+            let mut yv = vec![0.0; cols];
+            vecmat_range(KernelKind::Scalar, &x, &a, cols, 0, cols, &mut ys);
+            vecmat_range(KernelKind::Simd, &x, &a, cols, 0, cols, &mut yv);
+            assert_eq!(ys, yv, "cols={cols}");
+            assert_eq!(ys, reference(&x, &a, cols, 0, cols), "cols={cols}");
+        }
+    }
+
+    #[test]
+    fn zero_skip_shields_non_finite_weights_in_both_kernels() {
+        // The zero-input skip is contractual: a skipped row must never
+        // touch its weights, so an infinite weight behind a zero input
+        // yields a finite output (0.0 * inf would be NaN). Both kernels
+        // must honour it.
+        let cols = 37;
+        let mut a = vec![1.0; 2 * cols];
+        for v in a.iter_mut().take(cols) {
+            *v = f64::INFINITY;
+        }
+        let x = [0.0, 2.0];
+        for kind in [KernelKind::Scalar, KernelKind::Simd] {
+            let mut y = vec![0.0; cols];
+            vecmat_range(kind, &x, &a, cols, 0, cols, &mut y);
+            assert!(
+                y.iter().all(|v| *v == 2.0),
+                "{kind:?}: zero-skip violated: {y:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn column_ranges_match_full_width_slices() {
+        let (rows, cols) = (7, 67);
+        let a: Vec<f64> = (0..rows * cols)
+            .map(|k| ((k * 29 % 19) as f64) / 6.0 - 1.1)
+            .collect();
+        let x: Vec<f64> =
+            (0..rows).map(|r| (r as f64 * 0.43).cos()).collect();
+        for kind in [KernelKind::Scalar, KernelKind::Simd] {
+            let mut full = vec![0.0; cols];
+            vecmat_range(kind, &x, &a, cols, 0, cols, &mut full);
+            for &(c0, c1) in
+                &[(0usize, 32usize), (32, 64), (64, 67), (3, 5), (0, 67)]
+            {
+                let mut y = vec![0.0; c1 - c0];
+                vecmat_range(kind, &x, &a, cols, c0, c1, &mut y);
+                assert_eq!(&y[..], &full[c0..c1], "{kind:?} {c0}..{c1}");
+            }
+        }
+    }
+
+    #[test]
+    fn thread_plan_respects_thresholds() {
+        // Below the trajectory floor: single-threaded however big the cap.
+        assert_eq!(plan_threads_with_cap(16, 32, 512, 512), 1);
+        // Below the work floor: single-threaded however many lanes.
+        assert_eq!(plan_threads_with_cap(16, 1024, 8, 8), 1);
+        // Cap 1 / no parallelism: never threads.
+        assert_eq!(plan_threads_with_cap(1, 1024, 64, 64), 1);
+        // Above both floors: threads, bounded by the cap and by
+        // THREAD_MIN_BATCH / 2 trajectories per worker.
+        assert_eq!(plan_threads_with_cap(4, 1024, 64, 64), 4);
+        assert_eq!(plan_threads_with_cap(16, 64, 128, 512), 2);
+        assert_eq!(plan_threads_with_cap(16, 128, 128, 512), 4);
+    }
+
+    #[test]
+    fn active_kind_is_stable_and_consistent_with_detection() {
+        // `active()` caches: two calls agree, and without an override the
+        // choice matches detection. (The override itself is exercised by
+        // the CI kernel-matrix leg running the suite under
+        // MEMODE_KERNEL=scalar — mutating the environment here would race
+        // the parallel test harness.)
+        assert_eq!(active(), active());
+        if std::env::var("MEMODE_KERNEL").is_err() {
+            assert_eq!(active(), detected());
+        }
+        if std::env::var("MEMODE_KERNEL").as_deref() == Ok("scalar") {
+            assert_eq!(active(), KernelKind::Scalar);
+        }
+    }
+}

@@ -9,10 +9,13 @@
 //! * [`bench`]   — warmup/iterate/median micro-benchmark harness (criterion
 //!   replacement; all `cargo bench` targets use it with `harness = false`)
 //! * [`proptest`] — randomized invariant-checking helpers (property tests)
+//! * [`kernel`]  — runtime-dispatched GEMM microkernels (AVX2 / scalar /
+//!   multicore) behind the `tensor` hot paths
 
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod kernel;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

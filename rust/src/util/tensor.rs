@@ -13,16 +13,20 @@
 //! rollouts bit-for-bit when no stochastic term intervenes — that exactness
 //! is what the batched-vs-serial equivalence tests pin down.
 //!
+//! Every `vecmat*` kernel executes through the runtime-dispatched
+//! microkernels of [`super::kernel`]: AVX2 when the CPU has it, portable
+//! scalar otherwise, scoped-thread fan-out over trajectory blocks for
+//! large batches — all bit-identical to each other (see the dispatch and
+//! bit-identity rules in that module's docs and in `lib.rs`). The
+//! `*_with` variants pin an explicit [`KernelKind`] / worker count for
+//! tests and benches; production callers use the auto entry points.
+//!
 //! [`Trajectory`] is the flat solver-output container (one row per sample)
 //! shared by every layer from the ODE steppers to `TwinResponse`; together
 //! with [`TrajectoryPool`] it is what keeps the warm batched request path
 //! free of steady-state heap allocations.
 
-/// Output-tile width of the batched GEMM microkernels: 32 f64 = 4 cache
-/// lines, small enough that the accumulator tile stays L1-resident across
-/// the whole shared-dimension loop. Shared by the full-width and the
-/// column-sharded batched kernels so both tile identically.
-const VECMAT_TILE_COLS: usize = 32;
+use super::kernel::{self, KernelKind};
 
 /// Row-major dense matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -112,20 +116,24 @@ impl Mat {
 
     /// Allocation-free form of [`Mat::vecmat`].
     pub fn vecmat_into(&self, x: &[f64], y: &mut [f64]) {
+        self.vecmat_into_with(kernel::active(), x, y);
+    }
+
+    /// [`Mat::vecmat_into`] with an explicit kernel (testing/benching —
+    /// the auto entry point dispatches once per process).
+    pub fn vecmat_into_with(
+        &self,
+        kind: KernelKind,
+        x: &[f64],
+        y: &mut [f64],
+    ) {
         assert_eq!(x.len(), self.rows, "vecmat: x length != rows");
         assert_eq!(y.len(), self.cols, "vecmat: y length != cols");
         y.fill(0.0);
-        // Row-major accumulate: y[c] += x[r] * A[r, c]; the inner loop is a
-        // contiguous axpy that autovectorises.
-        for (r, &xv) in x.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let row = self.row(r);
-            for (yc, &a) in y.iter_mut().zip(row) {
-                *yc += xv * a;
-            }
-        }
+        // Row-major accumulate: y[c] += x[r] * A[r, c], tiled and
+        // dispatched by util::kernel (AVX2 or scalar, same accumulation
+        // order per output element either way).
+        kernel::vecmat_range(kind, x, &self.data, self.cols, 0, self.cols, y);
     }
 
     /// Column-sharded [`Mat::vecmat_into`]: `y = x^T A[:, c0..c1]`, the
@@ -143,6 +151,18 @@ impl Mat {
         c1: usize,
         y: &mut [f64],
     ) {
+        self.vecmat_cols_into_with(kernel::active(), x, c0, c1, y);
+    }
+
+    /// [`Mat::vecmat_cols_into`] with an explicit kernel.
+    pub fn vecmat_cols_into_with(
+        &self,
+        kind: KernelKind,
+        x: &[f64],
+        c0: usize,
+        c1: usize,
+        y: &mut [f64],
+    ) {
         assert!(
             c0 <= c1 && c1 <= self.cols,
             "vecmat_cols: column range {c0}..{c1} outside 0..{}",
@@ -155,15 +175,7 @@ impl Mat {
             "vecmat_cols: y length != column range width"
         );
         y.fill(0.0);
-        for (r, &xv) in x.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let row = &self.data[r * self.cols + c0..r * self.cols + c1];
-            for (yc, &a) in y.iter_mut().zip(row) {
-                *yc += xv * a;
-            }
-        }
+        kernel::vecmat_range(kind, x, &self.data, self.cols, c0, c1, y);
     }
 
     /// y = A x (matrix times vector; `x.len() == cols`, output `rows`).
@@ -195,13 +207,46 @@ impl Mat {
     /// contiguously (front to back, once per column block), its output is
     /// accumulated into one hot `VECMAT_TILE_COLS`-wide tile at a time, and
     /// the matrix is streamed in contiguous row chunks — no batch-major
-    /// strides anywhere, so every inner loop autovectorises. For each
-    /// output element the accumulation order over `r` — including the
-    /// zero-input skip — is the same as [`Mat::vecmat_into`], so
+    /// strides anywhere. The tiles execute on the runtime-dispatched
+    /// microkernel (AVX2 where available, scalar elsewhere or under
+    /// `MEMODE_KERNEL=scalar`), and batches past the
+    /// [`kernel::plan_threads`] thresholds fan out over scoped threads in
+    /// trajectory blocks. For each output element the accumulation order
+    /// over `r` — including the zero-input skip — is the same as
+    /// [`Mat::vecmat_into`] under *every* kernel/thread choice, so
     /// per-trajectory outputs are bit-identical to B independent serial
     /// calls (the contract `rust/tests/batched.rs` pins down).
     pub fn vecmat_batch_into(
         &self,
+        xs: &[f64],
+        batch: usize,
+        ys: &mut [f64],
+    ) {
+        self.vecmat_batch_into_with(
+            kernel::active(),
+            kernel::plan_threads(batch, self.rows, self.cols),
+            xs,
+            batch,
+            ys,
+        );
+    }
+
+    /// [`Mat::vecmat_batch_into`] with an explicit kernel and worker
+    /// count (testing/benching; `threads` is clamped to `1..=batch`).
+    ///
+    /// `threads > 1` fans the batch out over scoped threads in disjoint
+    /// trajectory blocks — each block runs the identical
+    /// single-trajectory kernel, so the output is bit-identical to the
+    /// single-threaded call by construction. Spawning allocates: the
+    /// threaded path is deliberately outside the zero-allocation contract
+    /// (like the shard fan-out in `twin::shard`), and the auto entry
+    /// point's [`kernel::plan_threads`] threshold keeps small /
+    /// latency-sensitive batches (and therefore the warm zero-alloc hot
+    /// path) single-threaded.
+    pub fn vecmat_batch_into_with(
+        &self,
+        kind: KernelKind,
+        threads: usize,
         xs: &[f64],
         batch: usize,
         ys: &mut [f64],
@@ -218,25 +263,49 @@ impl Mat {
         );
         ys.fill(0.0);
         let (rows, cols) = (self.rows, self.cols);
-        for b in 0..batch {
-            let x = &xs[b * rows..(b + 1) * rows];
-            let y = &mut ys[b * cols..(b + 1) * cols];
-            let mut c0 = 0;
-            while c0 < cols {
-                let c1 = (c0 + VECMAT_TILE_COLS).min(cols);
-                let yt = &mut y[c0..c1];
-                for (r, &xv) in x.iter().enumerate() {
-                    if xv == 0.0 {
-                        continue;
-                    }
-                    let at = &self.data[r * cols + c0..r * cols + c1];
-                    for (yc, &a) in yt.iter_mut().zip(at) {
-                        *yc += xv * a;
-                    }
-                }
-                c0 = c1;
-            }
+        if cols == 0 || batch == 0 {
+            return;
         }
+        let data = self.data.as_slice();
+        let threads = threads.clamp(1, batch);
+        if threads <= 1 || rows == 0 {
+            for b in 0..batch {
+                kernel::vecmat_range(
+                    kind,
+                    &xs[b * rows..(b + 1) * rows],
+                    data,
+                    cols,
+                    0,
+                    cols,
+                    &mut ys[b * cols..(b + 1) * cols],
+                );
+            }
+            return;
+        }
+        // Multicore path: disjoint trajectory blocks on scoped threads
+        // (the worker pattern of twin::shard). No synchronisation beyond
+        // the scope join — blocks share only the read-only matrix.
+        let per = batch.div_ceil(threads);
+        std::thread::scope(|scope| {
+            for (xb, yb) in
+                xs.chunks(per * rows).zip(ys.chunks_mut(per * cols))
+            {
+                scope.spawn(move || {
+                    let nb = yb.len() / cols;
+                    for b in 0..nb {
+                        kernel::vecmat_range(
+                            kind,
+                            &xb[b * rows..(b + 1) * rows],
+                            data,
+                            cols,
+                            0,
+                            cols,
+                            &mut yb[b * cols..(b + 1) * cols],
+                        );
+                    }
+                });
+            }
+        });
     }
 
     /// Column-sharded [`Mat::vecmat_batch_into`]: `ys[b] = xs[b]^T
@@ -249,6 +318,29 @@ impl Mat {
     /// the corresponding column slice of the monolithic batched read.
     pub fn vecmat_batch_cols_into(
         &self,
+        xs: &[f64],
+        batch: usize,
+        c0: usize,
+        c1: usize,
+        ys: &mut [f64],
+    ) {
+        self.vecmat_batch_cols_into_with(
+            kernel::active(),
+            xs,
+            batch,
+            c0,
+            c1,
+            ys,
+        );
+    }
+
+    /// [`Mat::vecmat_batch_cols_into`] with an explicit kernel. Shard
+    /// reads stay single-threaded by design: the parallel shard fan-out
+    /// (`twin::shard`) already owns one worker per shard, and the serial
+    /// in-solver shard loop sits inside the zero-allocation contract.
+    pub fn vecmat_batch_cols_into_with(
+        &self,
+        kind: KernelKind,
         xs: &[f64],
         batch: usize,
         c0: usize,
@@ -276,21 +368,7 @@ impl Mat {
         for b in 0..batch {
             let x = &xs[b * rows..(b + 1) * rows];
             let y = &mut ys[b * width..(b + 1) * width];
-            let mut t0 = c0;
-            while t0 < c1 {
-                let t1 = (t0 + VECMAT_TILE_COLS).min(c1);
-                let yt = &mut y[t0 - c0..t1 - c0];
-                for (r, &xv) in x.iter().enumerate() {
-                    if xv == 0.0 {
-                        continue;
-                    }
-                    let at = &self.data[r * cols + t0..r * cols + t1];
-                    for (yc, &a) in yt.iter_mut().zip(at) {
-                        *yc += xv * a;
-                    }
-                }
-                t0 = t1;
-            }
+            kernel::vecmat_range(kind, x, &self.data, cols, c0, c1, y);
         }
     }
 
@@ -890,6 +968,69 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn vecmat_batch_threaded_bit_identical_to_single_thread() {
+        // The multicore fan-out must be invisible in the output: same
+        // kernel per trajectory, disjoint blocks, bitwise-equal results —
+        // including at thread counts that do not divide the batch.
+        let m = Mat::from_fn(19, 45, |r, c| {
+            ((r * 13 + c * 7) % 17) as f64 / 5.0 - 1.6
+        });
+        let batch = 13;
+        let mut xs = vec![0.0; batch * 19];
+        for (k, x) in xs.iter_mut().enumerate() {
+            *x = if k % 7 == 3 { 0.0 } else { (k as f64 * 0.29).sin() };
+        }
+        let kind = kernel::active();
+        let mut want = vec![0.0; batch * 45];
+        m.vecmat_batch_into_with(kind, 1, &xs, batch, &mut want);
+        for threads in [2usize, 3, 5, 13, 64] {
+            let mut got = vec![1.0; batch * 45];
+            m.vecmat_batch_into_with(kind, threads, &xs, batch, &mut got);
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn vecmat_kernels_bit_identical_across_kinds() {
+        // Forced scalar vs forced SIMD (falls back to scalar where AVX2
+        // is absent — the CI kernel-matrix legs cover both worlds) across
+        // all four kernel entry points.
+        let m = Mat::from_fn(11, 77, |r, c| {
+            ((r * 31 + c * 17) % 13) as f64 / 7.0 - 0.9
+        });
+        let batch = 5;
+        let mut xs = vec![0.0; batch * 11];
+        for (k, x) in xs.iter_mut().enumerate() {
+            *x = if k % 6 == 0 { 0.0 } else { (k as f64 * 0.47).cos() };
+        }
+        let kinds = [KernelKind::Scalar, KernelKind::Simd];
+        // vecmat_into / vecmat_cols_into.
+        let x = &xs[..11];
+        let mut y = [vec![0.0; 77], vec![0.0; 77]];
+        for (k, kind) in kinds.iter().enumerate() {
+            m.vecmat_into_with(*kind, x, &mut y[k]);
+        }
+        assert_eq!(y[0], y[1]);
+        let mut yc = [vec![0.0; 31], vec![0.0; 31]];
+        for (k, kind) in kinds.iter().enumerate() {
+            m.vecmat_cols_into_with(*kind, x, 33, 64, &mut yc[k]);
+        }
+        assert_eq!(yc[0], yc[1]);
+        assert_eq!(&yc[0][..], &y[0][33..64]);
+        // vecmat_batch_into / vecmat_batch_cols_into.
+        let mut ys = [vec![0.0; batch * 77], vec![0.0; batch * 77]];
+        for (k, kind) in kinds.iter().enumerate() {
+            m.vecmat_batch_into_with(*kind, 1, &xs, batch, &mut ys[k]);
+        }
+        assert_eq!(ys[0], ys[1]);
+        let mut yb = [vec![0.0; batch * 44], vec![0.0; batch * 44]];
+        for (k, kind) in kinds.iter().enumerate() {
+            m.vecmat_batch_cols_into_with(*kind, &xs, batch, 33, 77, &mut yb[k]);
+        }
+        assert_eq!(yb[0], yb[1]);
     }
 
     #[test]

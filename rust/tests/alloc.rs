@@ -14,7 +14,10 @@
 //! path (states wider than one 32x32 array, per-shard column reads) —
 //! sharding must not cost steady-state allocations. The parallel
 //! shard-worker fan-out is excluded by design: it spawns rollout-scoped
-//! threads (see `twin::shard`).
+//! threads (see `twin::shard`). A final section pins the GEMM kernel
+//! dispatch layer (`util::kernel`): warm auto-dispatched `Mat` batched
+//! products allocate nothing, and the explicit multicore path's per-call
+//! spawn cost never grows with reuse.
 //!
 //! Deliberately a single `#[test]`: the counter is process-global, so no
 //! other test may run (and allocate) concurrently in this binary.
@@ -296,4 +299,52 @@ fn warm_run_batch_performs_zero_heap_allocations() {
         &hp_requests(),
         |t, resp| t.recycle(resp),
     );
+
+    // GEMM kernel dispatch (util::kernel): a warm auto-dispatched batched
+    // product below the threading threshold must be allocation-free — the
+    // MEMODE_KERNEL env parse and AVX2 detection resolve into OnceLocks on
+    // the priming call, never on the hot path.
+    {
+        use memode::util::kernel;
+
+        let m = Mat::from_fn(24, 48, |r, c| ((r * 31 + c * 7) as f64).sin());
+        let batch = 16usize;
+        let xs: Vec<f64> =
+            (0..batch * 24).map(|i| (i as f64 * 0.13).cos()).collect();
+        let mut ys = vec![0.0; batch * 48];
+        // Priming call: caches kernel choice and thread cap.
+        m.vecmat_batch_into(&xs, batch, &mut ys);
+        let n = count_allocs(|| {
+            m.vecmat_batch_into(&xs, batch, &mut ys);
+        });
+        assert_eq!(
+            n, 0,
+            "gemm/auto: warm single-threaded batched GEMM performed {n} \
+             heap allocations"
+        );
+
+        // Threaded path: spawning scoped workers allocates per call by
+        // design (documented outside lib.rs invariant 3). The warm-state
+        // contract is that repeat calls don't *grow* — no buffer churn on
+        // top of the fixed spawn cost — and bits never change.
+        let kind = kernel::active();
+        let mut y_mt = vec![0.0; batch * 48];
+        m.vecmat_batch_into_with(kind, 2, &xs, batch, &mut y_mt);
+        let first = count_allocs(|| {
+            m.vecmat_batch_into_with(kind, 2, &xs, batch, &mut y_mt);
+        });
+        let second = count_allocs(|| {
+            m.vecmat_batch_into_with(kind, 2, &xs, batch, &mut y_mt);
+        });
+        assert!(
+            second <= first,
+            "gemm/threaded: warm allocations grew across calls \
+             ({first} -> {second})"
+        );
+        let same = ys
+            .iter()
+            .zip(&y_mt)
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same, "gemm/threaded: output differs from single-thread");
+    }
 }
