@@ -28,8 +28,41 @@ use crate::crossbar::tiling::{uniform_layer_plans, ShardPlan, TiledMatrix};
 use crate::crossbar::vmm::{NoiseMode, VmmEngine};
 use crate::device::noise::NoiseSource;
 use crate::device::taox::DeviceConfig;
-use crate::util::rng::{NoiseLane, Pcg64};
+use crate::util::rng::{derive_stream_seed, NoiseLane, Pcg64};
 use crate::util::tensor::{Mat, Trajectory};
+
+/// Stream tag for the aging RNG derived off a deployment seed, so an aging
+/// deployment's *deploy-time* RNG consumption stays bit-identical to
+/// [`AnalogMlp::deploy`] under the same seed (the aging walk draws from a
+/// separate derived stream, never from the deploy stream).
+const AGING_STREAM_TAG: u64 = 0xa9e5_11fe_0000_0001;
+
+/// Retained mortal-hardware state behind an aging deployment: the tiled
+/// arrays themselves (the engines cache only effective weights), the
+/// logical targets recalibration reprograms toward, and the deterministic
+/// virtual clock. Exists only for [`AnalogMlp::deploy_aging`] — the
+/// immortal fast path carries no such state and is untouched.
+#[derive(Debug, Clone)]
+pub struct AgingState {
+    /// Per-layer tiled deployments (same hardware the engines were built
+    /// from; yield maps live here and survive recalibration).
+    tiles: Vec<TiledMatrix>,
+    /// Per-layer logical weight targets (post-programming-noise), the
+    /// golden values recalibration reprograms toward.
+    targets: Vec<Mat>,
+    cfg: DeviceConfig,
+    /// Drift / write-noise randomness of the lifetime walk — derived from
+    /// the deploy seed via a separate stream, so the walk is replayable
+    /// from the deployment seed alone.
+    rng: Pcg64,
+    /// Virtual device age (s). Advanced only by explicit
+    /// [`AnalogMlp::advance_age`] calls, never by wall-clock reads.
+    age_s: f64,
+    /// Total write-verify pulses across all recalibrations.
+    pulses: u64,
+    /// Recalibrations performed.
+    recals: u64,
+}
 
 /// Noise operating point (the Fig. 4j grid axes).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -104,6 +137,9 @@ pub struct AnalogMlp {
     /// they persist across calls so repeated noisy reads keep sampling
     /// fresh draws).
     default_lanes: Vec<NoiseLane>,
+    /// Mortal-hardware state ([`AnalogMlp::deploy_aging`] only); `None`
+    /// on the immortal fast path, which stays byte-for-byte as before.
+    aging: Option<Box<AgingState>>,
 }
 
 impl AnalogMlp {
@@ -143,6 +179,171 @@ impl AnalogMlp {
         Self::from_engines(engines, seed)
     }
 
+    /// [`AnalogMlp::deploy`] variant that *retains* the tiled hardware so
+    /// the deployment can age, be health-probed and be recalibrated.
+    ///
+    /// The deploy-time RNG consumption is identical to `deploy` (same
+    /// seed ⇒ bit-identical engines at age 0); the lifetime walk's
+    /// randomness comes from a separate stream derived off the seed, so
+    /// the whole (deploy, age, recalibrate) history is replayable from
+    /// `(layers, cfg, noise, seed)` plus the sequence of explicit
+    /// [`AnalogMlp::advance_age`] / [`AnalogMlp::recalibrate`] calls.
+    pub fn deploy_aging(
+        layers: &[LayerWeights],
+        cfg: &DeviceConfig,
+        noise: AnalogNoise,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Pcg64::seeded(seed);
+        let mut engines = Vec::with_capacity(layers.len());
+        let mut tiles = Vec::with_capacity(layers.len());
+        let mut targets = Vec::with_capacity(layers.len());
+        for layer in layers {
+            let mut w = layer.w_aug.clone();
+            if noise.prog > 0.0 {
+                for x in &mut w.data {
+                    *x *= 1.0 + noise.prog * rng.normal();
+                }
+            }
+            let tiled = TiledMatrix::deploy(&w, cfg, &mut rng);
+            engines.push(VmmEngine::from_tiled(
+                &tiled,
+                NoiseSource::new(noise.read),
+                if noise.read > 0.0 {
+                    NoiseMode::Fast
+                } else {
+                    NoiseMode::Off
+                },
+            ));
+            tiles.push(tiled);
+            targets.push(w);
+        }
+        let mut this = Self::from_engines(engines, seed);
+        this.aging = Some(Box::new(AgingState {
+            tiles,
+            targets,
+            cfg: cfg.clone(),
+            rng: Pcg64::seeded(derive_stream_seed(seed, AGING_STREAM_TAG)),
+            age_s: 0.0,
+            pulses: 0,
+            recals: 0,
+        }));
+        this
+    }
+
+    /// Advance the deployment's virtual clock by `dt_s`: every cell of
+    /// every tile drifts per `retention::drift_factor` (+ diffusive walk)
+    /// and the engines' cached weights/variance kernels are refreshed.
+    /// Negative or zero `dt_s` is a strict no-op. Panics on an immortal
+    /// deployment — aging is opt-in via [`AnalogMlp::deploy_aging`].
+    pub fn advance_age(&mut self, dt_s: f64) {
+        let aging = self
+            .aging
+            .as_mut()
+            .expect("advance_age on a non-aging deployment (use deploy_aging)");
+        if !(dt_s > 0.0) {
+            return;
+        }
+        for tiled in &mut aging.tiles {
+            tiled.advance_age(dt_s, &mut aging.rng);
+        }
+        aging.age_s += dt_s;
+        for (engine, tiled) in self.engines.iter_mut().zip(&aging.tiles) {
+            engine.refresh_from_tiled(tiled);
+        }
+    }
+
+    /// Recalibrate: reprogram every tile toward its deployment target
+    /// (write-verify + stuck-at compensation on the *same* hardware — the
+    /// yield map survives, accumulated drift on healthy cells is erased)
+    /// and refresh the engines. Returns the write-verify pulse count,
+    /// also accumulated in [`AnalogMlp::lifetime_pulses`]. Panics on an
+    /// immortal deployment.
+    pub fn recalibrate(&mut self) -> u64 {
+        let aging = self
+            .aging
+            .as_mut()
+            .expect("recalibrate on a non-aging deployment (use deploy_aging)");
+        let mut pulses = 0;
+        for (tiled, target) in aging.tiles.iter_mut().zip(&aging.targets) {
+            pulses += tiled.reprogram(target, &aging.cfg, &mut aging.rng);
+        }
+        aging.pulses += pulses;
+        aging.recals += 1;
+        for (engine, tiled) in self.engines.iter_mut().zip(&aging.tiles) {
+            engine.refresh_from_tiled(tiled);
+        }
+        pulses
+    }
+
+    /// Whether this deployment carries mortal-hardware state.
+    pub fn is_aging(&self) -> bool {
+        self.aging.is_some()
+    }
+
+    /// Virtual device age (s); 0 for immortal deployments.
+    pub fn age_s(&self) -> f64 {
+        self.aging.as_ref().map_or(0.0, |a| a.age_s)
+    }
+
+    /// Total write-verify pulses spent on recalibration so far.
+    pub fn lifetime_pulses(&self) -> u64 {
+        self.aging.as_ref().map_or(0, |a| a.pulses)
+    }
+
+    /// Recalibrations performed so far.
+    pub fn recalibrations(&self) -> u64 {
+        self.aging.as_ref().map_or(0, |a| a.recals)
+    }
+
+    /// Healthy-cell fraction across the retained arrays (1.0 when the
+    /// deployment is immortal — nothing to be stuck).
+    pub fn array_health(&self) -> f64 {
+        match &self.aging {
+            None => 1.0,
+            Some(a) => {
+                let n = a.tiles.len() as f64;
+                a.tiles.iter().map(TiledMatrix::health).sum::<f64>() / n
+            }
+        }
+    }
+
+    /// Test/fault-campaign hook: mark a fraction of cells in every
+    /// retained array as stuck (alternating OFF/ON), making the
+    /// deployment progressively un-recalibratable. Deterministic in the
+    /// aging RNG stream. Panics on an immortal deployment.
+    pub fn inject_stuck_faults(&mut self, fraction: f64) {
+        use crate::device::taox::StuckMode;
+        let aging = self
+            .aging
+            .as_mut()
+            .expect("inject_stuck_faults on a non-aging deployment");
+        let mut flip = false;
+        for tiled in &mut aging.tiles {
+            for row_tiles in &mut tiled.tiles {
+                for tile in row_tiles {
+                    for rail in [&mut tile.pos, &mut tile.neg] {
+                        for r in 0..rail.rows {
+                            for c in 0..rail.cols {
+                                if aging.rng.chance(fraction) {
+                                    rail.cell_mut(r, c).stuck = Some(if flip {
+                                        StuckMode::StuckOn
+                                    } else {
+                                        StuckMode::StuckOff
+                                    });
+                                    flip = !flip;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        for (engine, tiled) in self.engines.iter_mut().zip(&aging.tiles) {
+            engine.refresh_from_tiled(tiled);
+        }
+    }
+
     /// Ideal (no hardware sampling) MLP — the digital reference path and
     /// the fast ablation baseline.
     pub fn ideal(layers: &[LayerWeights], seed: u64) -> Self {
@@ -172,6 +373,7 @@ impl AnalogMlp {
             bshard: Vec::new(),
             lane_root,
             default_lanes: Vec::new(),
+            aging: None,
         }
     }
 
@@ -970,6 +1172,75 @@ mod tests {
                 yr[0]
             );
         }
+    }
+
+    #[test]
+    fn aging_deployment_matches_deploy_at_age_zero() {
+        // deploy_aging's deploy-time RNG consumption is identical to
+        // deploy: same seed ⇒ bit-identical effective weights at age 0.
+        let cfg = DeviceConfig { fault_rate: 0.0, ..Default::default() };
+        let layers = linear_decay_layers();
+        let plain = AnalogMlp::deploy(&layers, &cfg, AnalogNoise::off(), 7);
+        let aging =
+            AnalogMlp::deploy_aging(&layers, &cfg, AnalogNoise::off(), 7);
+        for l in 0..plain.n_layers() {
+            assert_eq!(
+                plain.engine(l).weights().data,
+                aging.engine(l).weights().data,
+                "layer {l} diverged at age 0"
+            );
+        }
+        assert!(aging.is_aging() && !plain.is_aging());
+        assert_eq!(aging.age_s(), 0.0);
+    }
+
+    #[test]
+    fn advance_age_drifts_and_recalibrate_restores() {
+        let cfg = DeviceConfig { fault_rate: 0.0, ..Default::default() };
+        let layers = linear_decay_layers();
+        let mut mlp =
+            AnalogMlp::deploy_aging(&layers, &cfg, AnalogNoise::off(), 7);
+        let fresh = mlp.engine(0).weights().clone();
+        mlp.advance_age(1e7);
+        assert_eq!(mlp.age_s(), 1e7);
+        let aged = mlp.engine(0).weights().clone();
+        let dev = |a: &Mat, b: &Mat| {
+            a.data
+                .iter()
+                .zip(&b.data)
+                .map(|(&x, &y)| (x - y).abs())
+                .sum::<f64>()
+        };
+        assert!(dev(&aged, &fresh) > 0.0, "aging did not move the engine");
+        let pulses = mlp.recalibrate();
+        assert!(pulses > 0);
+        assert_eq!(mlp.recalibrations(), 1);
+        assert_eq!(mlp.lifetime_pulses(), pulses);
+        let recal = mlp.engine(0).weights().clone();
+        assert!(
+            dev(&recal, &fresh) < dev(&aged, &fresh),
+            "recalibration did not restore the weights"
+        );
+        // Negative dt is a strict no-op on the virtual clock.
+        mlp.advance_age(-1e6);
+        assert_eq!(mlp.age_s(), 1e7);
+    }
+
+    #[test]
+    fn injected_faults_lower_health_and_survive_recal() {
+        let cfg = DeviceConfig { fault_rate: 0.0, ..Default::default() };
+        let layers = linear_decay_layers();
+        let mut mlp =
+            AnalogMlp::deploy_aging(&layers, &cfg, AnalogNoise::off(), 3);
+        assert_eq!(mlp.array_health(), 1.0);
+        mlp.inject_stuck_faults(0.5);
+        let h = mlp.array_health();
+        assert!(h < 0.9, "fault injection inert (health {h})");
+        mlp.recalibrate();
+        assert!(
+            (mlp.array_health() - h).abs() < 1e-12,
+            "recalibration altered the yield map"
+        );
     }
 
     #[test]

@@ -93,12 +93,14 @@ impl Router {
         }
         let permit = self.backpressure.try_acquire().ok_or_else(|| {
             self.telemetry.rejected.fetch_add(1, Ordering::Relaxed);
+            self.telemetry.record_shed(route);
             anyhow!(
                 "overloaded: {} requests in flight (limit {})",
                 self.backpressure.in_flight(),
                 self.backpressure.limit()
             )
         })?;
+        self.telemetry.record_admitted(route);
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let mut req = req;
         if req.seed.is_none() {
@@ -148,6 +150,7 @@ mod tests {
                 backend: "null",
                 seed: r.seed.unwrap_or(0),
                 ensemble: None,
+                degraded: false,
             })
         }
     }
@@ -247,6 +250,29 @@ mod tests {
             Ok(_) => panic!("admission not enforced"),
         };
         assert!(err.contains("overloaded"));
+    }
+
+    #[test]
+    fn admission_gate_records_per_route_load() {
+        use crate::coordinator::telemetry::RouteLoad;
+        let mut reg = TwinRegistry::new();
+        reg.register("null", || Box::new(NullTwin));
+        let (tx, _rx) = mpsc::channel();
+        let tel = Arc::new(Telemetry::new());
+        let router =
+            Router::new(reg, tx, Backpressure::new(1), tel.clone());
+        let _held = router
+            .submit("null", TwinRequest::autonomous(vec![], 1))
+            .unwrap();
+        assert!(router
+            .submit("null", TwinRequest::autonomous(vec![], 1))
+            .is_err());
+        let s = tel.snapshot();
+        assert_eq!(
+            s.route_load,
+            vec![("null".to_string(), RouteLoad { admitted: 1, shed: 1 })]
+        );
+        assert!((s.route_load[0].1.shed_fraction() - 0.5).abs() < 1e-12);
     }
 
     #[test]

@@ -111,6 +111,16 @@ impl Drop for Scheduler {
     }
 }
 
+/// Best-effort panic payload rendering (panics carry a `String` or a
+/// `&'static str`; anything else prints a placeholder).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    payload
+        .downcast_ref::<String>()
+        .map(String::as_str)
+        .or_else(|| payload.downcast_ref::<&'static str>().copied())
+        .unwrap_or("opaque panic payload")
+}
+
 fn spawn_worker(
     index: usize,
     rx: mpsc::Receiver<Batch>,
@@ -150,13 +160,37 @@ fn spawn_worker(
                 };
                 let t0 = Instant::now();
                 results.clear();
+                let mut poisoned = false;
                 match twin {
                     Ok(t) => {
                         reqs.clear();
                         reqs.extend(
                             batch.jobs.iter().map(|j| j.req.clone()),
                         );
-                        t.run_batch_into(&reqs, &mut results);
+                        // A panicking twin must fail its batch, not kill
+                        // the worker thread (a dead worker would strand
+                        // every future batch routed to it).
+                        // AssertUnwindSafe is sound here because the twin
+                        // instance is discarded below on panic — nobody
+                        // observes its possibly-inconsistent state.
+                        let unwound = std::panic::catch_unwind(
+                            std::panic::AssertUnwindSafe(|| {
+                                t.run_batch_into(&reqs, &mut results);
+                            }),
+                        );
+                        if let Err(payload) = unwound {
+                            poisoned = true;
+                            let msg = format!(
+                                "twin '{route}' panicked: {} (instance \
+                                 discarded; the route rebuilds on next \
+                                 dispatch)",
+                                panic_message(payload.as_ref())
+                            );
+                            results.clear();
+                            results.extend((0..n).map(|_| {
+                                Err(anyhow::anyhow!(msg.clone()))
+                            }));
+                        }
                     }
                     Err(e) => {
                         let msg = format!("{e:#}");
@@ -165,6 +199,9 @@ fn spawn_worker(
                                 .map(|_| Err(anyhow::anyhow!(msg.clone()))),
                         );
                     }
+                }
+                if poisoned {
+                    twins.remove(&route);
                 }
                 // Defensive: a twin returning the wrong arity must not
                 // leave submitters hanging.
@@ -249,6 +286,7 @@ mod tests {
                 backend: "echo",
                 seed: req.seed.unwrap_or(0),
                 ensemble: None,
+                degraded: false,
             })
         }
     }
@@ -344,6 +382,7 @@ mod tests {
                     backend: "probe",
                     seed: req.seed.unwrap_or(0),
                     ensemble: None,
+                    degraded: false,
                 })
             }
             fn run_batch(
@@ -375,6 +414,75 @@ mod tests {
         }
         // One dispatch = one run_batch call covering all five jobs.
         assert_eq!(*sizes.lock().unwrap(), vec![5]);
+    }
+
+    #[test]
+    fn panicking_twin_fails_its_batch_without_killing_the_worker() {
+        // Panics on its first batch only; a rebuilt instance behaves.
+        struct Grenade {
+            armed: bool,
+        }
+        impl Twin for Grenade {
+            fn name(&self) -> &str {
+                "grenade"
+            }
+            fn state_dim(&self) -> usize {
+                1
+            }
+            fn dt(&self) -> f64 {
+                1.0
+            }
+            fn default_h0(&self) -> Vec<f64> {
+                vec![0.0]
+            }
+            fn run(
+                &mut self,
+                req: &TwinRequest,
+            ) -> anyhow::Result<TwinResponse> {
+                assert!(!self.armed, "boom: simulated twin defect");
+                Ok(TwinResponse {
+                    trajectory: Trajectory::repeat_row(
+                        &req.h0,
+                        req.n_points,
+                    ),
+                    backend: "grenade",
+                    seed: req.seed.unwrap_or(0),
+                    ensemble: None,
+                    degraded: false,
+                })
+            }
+        }
+
+        let builds: Arc<AtomicUsize> = Arc::default();
+        let b2 = Arc::clone(&builds);
+        let mut reg = TwinRegistry::new();
+        reg.register("grenade", move || {
+            let n = b2.fetch_add(1, Ordering::Relaxed);
+            Box::new(Grenade { armed: n == 0 })
+        });
+        let tel = Arc::new(Telemetry::new());
+        let sched = Scheduler::start(1, reg, Arc::clone(&tel));
+        // First batch: every job gets a typed panic error, nobody hangs.
+        let (batch, rxs) = batch_of(3, "grenade");
+        sched.dispatch(batch).unwrap();
+        for rx in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+            let err = r.result.expect_err("panic must surface as error");
+            let msg = format!("{err:#}");
+            assert!(msg.contains("panicked"), "{msg}");
+            assert!(msg.contains("grenade"), "{msg}");
+        }
+        assert_eq!(tel.snapshot().failed, 3);
+        // Same worker thread, same route: the poisoned instance was
+        // discarded and the rebuilt one serves.
+        let (batch, rxs) = batch_of(2, "grenade");
+        sched.dispatch(batch).unwrap();
+        for rx in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+            assert!(r.result.is_ok(), "worker did not recover");
+        }
+        assert_eq!(builds.load(Ordering::Relaxed), 2, "no rebuild");
+        assert_eq!(sched.outstanding(), 0);
     }
 
     #[test]

@@ -141,6 +141,7 @@ mod tests {
                 backend: "counter",
                 seed: req.seed.unwrap_or(0),
                 ensemble: None,
+                degraded: false,
             })
         }
     }
@@ -247,6 +248,7 @@ mod tests {
                     backend: "probe",
                     seed: req.seed.unwrap_or(0),
                     ensemble: None,
+                    degraded: false,
                 })
             }
             fn run_batch(

@@ -1,8 +1,12 @@
-//! Serving telemetry: lock-free counters plus a bounded latency reservoir.
+//! Serving telemetry: lock-free counters plus a bounded latency reservoir,
+//! per-route admission/shed counters, and per-route device-lifetime
+//! status published by health-monitored twins.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::twin::health::LifetimeSnapshot;
 use crate::util::stats;
 
 /// Maximum retained latency samples (reservoir, newest-wins ring).
@@ -33,12 +37,40 @@ pub struct Telemetry {
     /// Recent (job id, noise seed) pairs of completed jobs — enough for
     /// the serve CLI to print replay commands (`run-twin --seed <s>`).
     seeds: Mutex<Ring<(u64, u64), SEED_RING>>,
+    /// Per-route admission counters recorded at the router's backpressure
+    /// gate (admitted vs shed). Sorted map so snapshots print stably.
+    route_load: Mutex<BTreeMap<String, RouteLoad>>,
+    /// Latest per-route device-lifetime status, published by
+    /// health-monitored twins ([`crate::twin::health::MonitoredTwin`]).
+    lifetime: Mutex<BTreeMap<String, LifetimeSnapshot>>,
     /// Reusable latency-stats scratch for [`Telemetry::snapshot`]: the
     /// ring is *copied* out under its lock, then sorted and reduced here
     /// with the ring lock released — the hot `record_latency` path never
     /// waits behind a snapshot's sort. Guarded by its own (snapshot-only,
     /// uncontended) mutex so `snapshot(&self)` stays shareable.
     snapshot_scratch: Mutex<Vec<f64>>,
+}
+
+/// Per-route admission counters at the backpressure gate.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RouteLoad {
+    /// Requests admitted past the gate.
+    pub admitted: u64,
+    /// Requests shed (rejected for overload).
+    pub shed: u64,
+}
+
+impl RouteLoad {
+    /// Fraction of this route's submissions that were shed (NaN with no
+    /// traffic).
+    pub fn shed_fraction(&self) -> f64 {
+        let total = self.admitted + self.shed;
+        if total == 0 {
+            f64::NAN
+        } else {
+            self.shed as f64 / total as f64
+        }
+    }
 }
 
 /// Bounded newest-wins ring: fills to `N`, then overwrites oldest-first.
@@ -93,6 +125,40 @@ impl Telemetry {
     /// commands can be surfaced without holding every response.
     pub fn record_seed(&self, job_id: u64, seed: u64) {
         self.seeds.lock().expect("telemetry lock").push((job_id, seed));
+    }
+
+    /// Record a request admitted past the backpressure gate on `route`.
+    /// Allocation-free after the route's first record.
+    pub fn record_admitted(&self, route: &str) {
+        let mut map = self.route_load.lock().expect("telemetry lock");
+        if let Some(r) = map.get_mut(route) {
+            r.admitted += 1;
+        } else {
+            map.insert(
+                route.to_owned(),
+                RouteLoad { admitted: 1, shed: 0 },
+            );
+        }
+    }
+
+    /// Record a request shed at the backpressure gate on `route`.
+    pub fn record_shed(&self, route: &str) {
+        let mut map = self.route_load.lock().expect("telemetry lock");
+        if let Some(r) = map.get_mut(route) {
+            r.shed += 1;
+        } else {
+            map.insert(route.to_owned(), RouteLoad { admitted: 0, shed: 1 });
+        }
+    }
+
+    /// Publish a route's latest device-lifetime status (newest wins).
+    pub fn record_lifetime(&self, route: &str, snap: LifetimeSnapshot) {
+        let mut map = self.lifetime.lock().expect("telemetry lock");
+        if let Some(s) = map.get_mut(route) {
+            *s = snap;
+        } else {
+            map.insert(route.to_owned(), snap);
+        }
     }
 
     /// Point-in-time snapshot.
@@ -154,6 +220,20 @@ impl Telemetry {
                 .lock()
                 .expect("telemetry lock")
                 .chronological(),
+            route_load: self
+                .route_load
+                .lock()
+                .expect("telemetry lock")
+                .iter()
+                .map(|(k, v)| (k.clone(), *v))
+                .collect(),
+            lifetime: self
+                .lifetime
+                .lock()
+                .expect("telemetry lock")
+                .iter()
+                .map(|(k, v)| (k.clone(), *v))
+                .collect(),
         }
     }
 }
@@ -183,6 +263,23 @@ pub struct TelemetrySnapshot {
     /// completed jobs (bounded ring, oldest first; the tail is the most
     /// recent).
     pub recent_seeds: Vec<(u64, u64)>,
+    /// Per-route (admitted, shed) counters, route-name sorted.
+    pub route_load: Vec<(String, RouteLoad)>,
+    /// Latest per-route device-lifetime status, route-name sorted.
+    pub lifetime: Vec<(String, LifetimeSnapshot)>,
+}
+
+impl TelemetrySnapshot {
+    /// Overall shed fraction at the admission gate: rejected over
+    /// everything that reached the router (NaN with no traffic).
+    pub fn rejected_fraction(&self) -> f64 {
+        let total = self.submitted + self.rejected;
+        if total == 0 {
+            f64::NAN
+        } else {
+            self.rejected as f64 / total as f64
+        }
+    }
 }
 
 impl std::fmt::Display for TelemetrySnapshot {
@@ -199,7 +296,17 @@ impl std::fmt::Display for TelemetrySnapshot {
             self.mean_batch,
             self.latency_p50_us,
             self.latency_p95_us
-        )
+        )?;
+        let frac = self.rejected_fraction();
+        if frac.is_finite() {
+            write!(f, " shed_frac={frac:.3}")?;
+        }
+        for (route, s) in &self.lifetime {
+            if s.degraded {
+                write!(f, " DEGRADED[{route}]")?;
+            }
+        }
+        Ok(())
     }
 }
 
@@ -265,6 +372,63 @@ mod tests {
         t.batches.fetch_add(2, Ordering::Relaxed);
         t.batched_jobs.fetch_add(10, Ordering::Relaxed);
         assert!((t.snapshot().mean_batch - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn route_load_counters_and_shed_fraction() {
+        let t = Telemetry::new();
+        t.record_admitted("lorenz96/analog");
+        t.record_admitted("lorenz96/analog");
+        t.record_shed("lorenz96/analog");
+        t.record_admitted("hp/digital");
+        let s = t.snapshot();
+        assert_eq!(s.route_load.len(), 2);
+        // BTreeMap ordering: "hp/digital" < "lorenz96/analog".
+        assert_eq!(s.route_load[0].0, "hp/digital");
+        assert_eq!(
+            s.route_load[0].1,
+            RouteLoad { admitted: 1, shed: 0 }
+        );
+        let l96 = &s.route_load[1].1;
+        assert_eq!(*l96, RouteLoad { admitted: 2, shed: 1 });
+        assert!((l96.shed_fraction() - 1.0 / 3.0).abs() < 1e-12);
+        assert!(RouteLoad::default().shed_fraction().is_nan());
+    }
+
+    #[test]
+    fn rejected_fraction_tracks_gate_counters() {
+        let t = Telemetry::new();
+        assert!(t.snapshot().rejected_fraction().is_nan());
+        t.submitted.fetch_add(6, Ordering::Relaxed);
+        t.rejected.fetch_add(2, Ordering::Relaxed);
+        let s = t.snapshot();
+        assert!((s.rejected_fraction() - 0.25).abs() < 1e-12);
+        assert!(format!("{s}").contains("shed_frac=0.250"));
+    }
+
+    #[test]
+    fn lifetime_status_latest_wins_and_flags_degraded() {
+        use crate::twin::health::LifetimeSnapshot;
+        let t = Telemetry::new();
+        t.record_lifetime(
+            "lorenz96/analog-aged",
+            LifetimeSnapshot { age_s: 1.0, ..Default::default() },
+        );
+        t.record_lifetime(
+            "lorenz96/analog-aged",
+            LifetimeSnapshot {
+                age_s: 2.0,
+                degraded: true,
+                ..Default::default()
+            },
+        );
+        let s = t.snapshot();
+        assert_eq!(s.lifetime.len(), 1);
+        assert_eq!(s.lifetime[0].1.age_s, 2.0);
+        assert!(s.lifetime[0].1.degraded);
+        assert!(
+            format!("{s}").contains("DEGRADED[lorenz96/analog-aged]")
+        );
     }
 
     #[test]

@@ -171,6 +171,15 @@ impl CrossbarArray {
         i_out
     }
 
+    /// Advance every cell's virtual age by `dt_s` (drift + diffusive walk
+    /// per [`crate::device::retention::age_cell`]). Deterministic in
+    /// `(cells, dt_s, rng state)` — no wall-clock reads anywhere.
+    pub fn age(&mut self, dt_s: f64, rng: &mut Pcg64) {
+        for cell in &mut self.cells {
+            crate::device::retention::age_cell(cell, &self.cfg, dt_s, rng);
+        }
+    }
+
     /// Fraction of healthy cells.
     pub fn health(&self) -> f64 {
         let ok = self.cells.iter().filter(|c| c.is_healthy()).count();

@@ -56,16 +56,45 @@ impl DifferentialArray {
         this
     }
 
+    /// Reprogram the *same* hardware toward a (possibly new) weight
+    /// matrix: the recalibration flow. Stuck cells stay stuck
+    /// ([`crate::device::programming::program_cell`] never alters them),
+    /// so yield maps survive recalibration; drift accumulated since the
+    /// last write is erased on healthy cells (each successful write-verify
+    /// resets the cell's age). Returns the total number of programming
+    /// pulses issued (write-energy accounting) and refreshes
+    /// `prog_stats`.
+    pub fn reprogram(
+        &mut self,
+        w: &Mat,
+        cfg: &DeviceConfig,
+        rng: &mut Pcg64,
+    ) -> u64 {
+        assert_eq!(w.rows, self.pos.rows, "reprogram weight rows mismatch");
+        assert_eq!(w.cols, self.pos.cols, "reprogram weight cols mismatch");
+        self.mapping = WeightMapping::for_weights(w, cfg);
+        let (gp_t, gn_t) = self.mapping.map_matrix(w);
+        let rp = self.pos.program(&gp_t, rng);
+        let rn = self.neg.program(&gn_t, rng);
+        let mut pulses: u64 = rp.iter().chain(rn.iter()).map(|r| u64::from(r.iters)).sum();
+        self.prog_stats =
+            (crate::device::programming::summarize(&rp), crate::device::programming::summarize(&rn));
+        pulses += self.compensate_faults(w, cfg, rng);
+        pulses
+    }
+
     /// Re-target healthy rails opposite stuck cells so the differential
     /// weight is preserved: want g+ - g- = slope * w, so the healthy rail
     /// aims for `g_stuck -/+ slope * w` (clamped to the device window).
+    /// Returns the programming pulses spent on compensation.
     fn compensate_faults(
         &mut self,
         w: &Mat,
         cfg: &DeviceConfig,
         rng: &mut Pcg64,
-    ) {
+    ) -> u64 {
         use crate::device::programming::program_cell;
+        let mut pulses: u64 = 0;
         let slope = self.mapping.slope;
         for r in 0..w.rows {
             for c in 0..w.cols {
@@ -76,22 +105,24 @@ impl DifferentialArray {
                     (true, false) => {
                         let g_stuck = self.pos.cell(r, c).conductance(cfg);
                         let target = cfg.clamp_g(g_stuck - want);
-                        program_cell(
+                        let r_ = program_cell(
                             self.neg.cell_mut(r, c),
                             cfg,
                             target,
                             rng,
                         );
+                        pulses += u64::from(r_.iters);
                     }
                     (false, true) => {
                         let g_stuck = self.neg.cell(r, c).conductance(cfg);
                         let target = cfg.clamp_g(g_stuck + want);
-                        program_cell(
+                        let r_ = program_cell(
                             self.pos.cell_mut(r, c),
                             cfg,
                             target,
                             rng,
                         );
+                        pulses += u64::from(r_.iters);
                     }
                     // Both stuck (rare, ~fault_rate^2) or both healthy:
                     // nothing to compensate with / for.
@@ -99,6 +130,13 @@ impl DifferentialArray {
                 }
             }
         }
+        pulses
+    }
+
+    /// Advance both rails' virtual age by `dt_s`.
+    pub fn age(&mut self, dt_s: f64, rng: &mut Pcg64) {
+        self.pos.age(dt_s, rng);
+        self.neg.age(dt_s, rng);
     }
 
     /// Logical weight matrix as deployed (including programming error and
@@ -256,6 +294,50 @@ mod tests {
             "clipped weight should be ~0, got {}",
             eff.at(0, 0)
         );
+    }
+
+    #[test]
+    fn reprogram_restores_drifted_weights_and_counts_pulses() {
+        let cfg = DeviceConfig { fault_rate: 0.0, ..Default::default() };
+        let mut rng = Pcg64::seeded(21);
+        let w = Mat::from_fn(12, 12, |r, c| {
+            ((r * 12 + c) as f64 / 144.0 - 0.5) * 0.9
+        });
+        let mut d = DifferentialArray::deploy(&w, &cfg, &mut rng);
+        // Age hard enough that drift is visible, then recalibrate.
+        d.age(1e7, &mut rng);
+        let mean_err = |d: &DifferentialArray| {
+            let eff = d.effective_weights();
+            eff.data
+                .iter()
+                .zip(&w.data)
+                .map(|(&a, &b)| (a - b).abs() / d.mapping.w_max)
+                .sum::<f64>()
+                / w.data.len() as f64
+        };
+        let aged = mean_err(&d);
+        let pulses = d.reprogram(&w, &cfg, &mut rng);
+        let restored = mean_err(&d);
+        assert!(pulses > 0, "reprogramming issued no pulses");
+        assert!(
+            restored < aged,
+            "reprogram did not improve fidelity ({restored} vs {aged})"
+        );
+        assert!(restored < 0.05, "post-recal error too large: {restored}");
+    }
+
+    #[test]
+    fn reprogram_preserves_stuck_maps() {
+        let cfg = DeviceConfig { fault_rate: 0.0, ..Default::default() };
+        let mut rng = Pcg64::seeded(22);
+        let w = Mat::from_fn(6, 6, |r, c| ((r + c) as f64 / 12.0) - 0.4);
+        let mut d = DifferentialArray::deploy(&w, &cfg, &mut rng);
+        use crate::device::taox::StuckMode;
+        d.pos.cell_mut(1, 2).stuck = Some(StuckMode::StuckOff);
+        d.neg.cell_mut(4, 3).stuck = Some(StuckMode::StuckOn);
+        d.reprogram(&w, &cfg, &mut rng);
+        assert!(!d.pos.cell(1, 2).is_healthy(), "stuck map lost on pos rail");
+        assert!(!d.neg.cell(4, 3).is_healthy(), "stuck map lost on neg rail");
     }
 
     #[test]

@@ -49,6 +49,58 @@ impl TiledMatrix {
         self.tiles.iter().map(Vec::len).sum::<usize>() * 2
     }
 
+    /// Advance every tile's virtual age by `dt_s` (both rails, row-major
+    /// tile order — the deterministic aging walk of the device-lifetime
+    /// loop).
+    pub fn advance_age(&mut self, dt_s: f64, rng: &mut Pcg64) {
+        for row_tiles in &mut self.tiles {
+            for tile in row_tiles {
+                tile.age(dt_s, rng);
+            }
+        }
+    }
+
+    /// Reprogram the *same* tile grid toward `w` (the recalibration flow):
+    /// each tile re-runs write-verify + stuck-at compensation on its
+    /// existing hardware, preserving yield maps. Returns total programming
+    /// pulses across all tiles (write-energy accounting).
+    pub fn reprogram(
+        &mut self,
+        w: &Mat,
+        cfg: &DeviceConfig,
+        rng: &mut Pcg64,
+    ) -> u64 {
+        assert_eq!(w.rows, self.rows, "reprogram weight rows mismatch");
+        assert_eq!(w.cols, self.cols, "reprogram weight cols mismatch");
+        let mut pulses = 0;
+        for (i, row_tiles) in self.tiles.iter_mut().enumerate() {
+            let r0 = i * PHYSICAL_SIDE;
+            for (j, tile) in row_tiles.iter_mut().enumerate() {
+                let c0 = j * PHYSICAL_SIDE;
+                let sub = Mat::from_fn(tile.rows(), tile.cols(), |r, c| {
+                    w.at(r0 + r, c0 + c)
+                });
+                pulses += tile.reprogram(&sub, cfg, rng);
+            }
+        }
+        pulses
+    }
+
+    /// Fraction of healthy cells across every rail of every tile.
+    pub fn health(&self) -> f64 {
+        let (mut ok, mut total) = (0.0, 0.0);
+        for row_tiles in &self.tiles {
+            for tile in row_tiles {
+                for rail in [&tile.pos, &tile.neg] {
+                    let n = (rail.rows * rail.cols) as f64;
+                    ok += rail.health() * n;
+                    total += n;
+                }
+            }
+        }
+        ok / total
+    }
+
     /// Reassembled effective logical weights.
     pub fn effective_weights(&self) -> Mat {
         let mut w = Mat::zeros(self.rows, self.cols);
@@ -335,6 +387,34 @@ mod tests {
         let plans = uniform_layer_plans(&[96, 2], 4);
         assert!(plans.iter().all(|p| p.n_shards() == 2));
         assert_eq!(plans[0].dim(), 96);
+    }
+
+    #[test]
+    fn aging_drifts_and_reprogram_restores_across_tiles() {
+        let cfg = DeviceConfig { fault_rate: 0.0, ..Default::default() };
+        let mut rng = Pcg64::seeded(11);
+        let w = Mat::from_fn(40, 40, |r, c| {
+            (((r * 40 + c) % 13) as f64 / 13.0 - 0.5) * 0.8
+        });
+        let mut t = TiledMatrix::deploy(&w, &cfg, &mut rng);
+        let err = |t: &TiledMatrix| {
+            let eff = t.effective_weights();
+            eff.data
+                .iter()
+                .zip(&w.data)
+                .map(|(&a, &b)| (a - b).abs())
+                .sum::<f64>()
+                / w.data.len() as f64
+        };
+        let fresh = err(&t);
+        t.advance_age(1e7, &mut rng);
+        let aged = err(&t);
+        assert!(aged > fresh, "aging did not move weights ({aged} vs {fresh})");
+        let pulses = t.reprogram(&w, &cfg, &mut rng);
+        assert!(pulses > 0);
+        let recal = err(&t);
+        assert!(recal < aged, "recal did not restore ({recal} vs {aged})");
+        assert!((t.health() - 1.0).abs() < 1e-12, "fault-free grid health");
     }
 
     #[test]

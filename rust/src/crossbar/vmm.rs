@@ -153,6 +153,32 @@ impl VmmEngine {
         }
     }
 
+    /// Refresh the cached weights + variance kernel from the (aged or
+    /// reprogrammed) tiled deployment this engine was built from.
+    ///
+    /// Only the cached *values* change: `col_offset`, `full_cols`, mode,
+    /// scratch and `max_batch` are untouched, so [`VmmEngine::draws_per_read`]
+    /// and the draw-index scheme are provably unchanged — aging can never
+    /// re-couple noise lanes to the execution schedule (the device-lifetime
+    /// invariant in `lib.rs`). Cold path: runs only on explicit
+    /// `advance_age` / recalibration, never inside a rollout.
+    pub fn refresh_from_tiled(
+        &mut self,
+        tiled: &crate::crossbar::tiling::TiledMatrix,
+    ) {
+        assert_eq!(
+            (tiled.rows, tiled.cols),
+            (self.w_eff.rows, self.w_eff.cols),
+            "refresh must keep the engine's shape"
+        );
+        assert!(
+            self.col_offset == 0 && self.full_cols == self.w_eff.cols,
+            "refresh_from_tiled only supports monolithic engines"
+        );
+        self.w_eff = tiled.effective_weights();
+        self.var_kernel = tiled.variance_kernel();
+    }
+
     /// Build an *ideal* engine straight from logical weights (no hardware
     /// sampling) — used by digital baselines and unit tests.
     pub fn ideal(w: Mat) -> Self {

@@ -23,14 +23,22 @@ pub fn drift_factor(cfg: &DeviceConfig, age_s: f64) -> f64 {
 }
 
 /// Advance a cell's age by `dt_s`, applying drift + a small diffusive step.
+///
+/// `dt_s` is clamped to `>= 0` *before any branch touches the cell*: a
+/// negative dt is a strict no-op on both `g` and `age_s` (time never runs
+/// backwards on hardware), so callers integrating a virtual clock can pass
+/// raw deltas without pre-validating them.
 pub fn age_cell(
     cell: &mut Memristor,
     cfg: &DeviceConfig,
     dt_s: f64,
     rng: &mut Pcg64,
 ) {
-    if !cell.is_healthy() || dt_s <= 0.0 {
-        cell.age_s += dt_s.max(0.0);
+    if !(dt_s > 0.0) {
+        return;
+    }
+    if !cell.is_healthy() {
+        cell.age_s += dt_s;
         return;
     }
     let before = drift_factor(cfg, cell.age_s);
@@ -125,6 +133,25 @@ mod tests {
         assert_eq!(trace.len(), 11);
         assert_eq!(trace[0].0, 0.0);
         assert_eq!(trace[10].0, 100.0);
+    }
+
+    #[test]
+    fn negative_dt_is_a_strict_noop() {
+        let cfg = DeviceConfig::default();
+        let mut rng = Pcg64::seeded(4);
+        let mut cell = Memristor::new(&cfg);
+        program_cell(&mut cell, &cfg, 40e-6, &mut rng);
+        age_cell(&mut cell, &cfg, 100.0, &mut rng);
+        let (g0, age0) = (cell.g, cell.age_s);
+        for bad in [-1.0, -1e9, f64::NEG_INFINITY, f64::NAN, 0.0, -0.0] {
+            age_cell(&mut cell, &cfg, bad, &mut rng);
+            assert_eq!(cell.g, g0, "g mutated by dt={bad}");
+            assert_eq!(cell.age_s, age0, "age mutated by dt={bad}");
+        }
+        // Unhealthy branch: same contract.
+        cell.stuck = Some(crate::device::taox::StuckMode::StuckOff);
+        age_cell(&mut cell, &cfg, -5.0, &mut rng);
+        assert_eq!(cell.age_s, age0, "stuck-cell age mutated by dt<0");
     }
 
     #[test]

@@ -92,6 +92,21 @@ pub fn project_trajectory(
     }
 }
 
+/// Energy of one write-verify programming pulse (J).
+///
+/// A TaOx SET/RESET pulse is ~1 µs at ~1 V across a ~10 kΩ filament plus
+/// the write driver's overhead — order 100 pJ per pulse, consistent with
+/// the programming-energy regime the paper's Supplementary Note 2 assumes
+/// for on-chip write circuitry. Recalibration energy is pulses x this.
+pub const E_WRITE_PULSE_J: f64 = 1.0e-10;
+
+/// Energy charged for a recalibration that issued `pulses` write-verify
+/// pulses ([`crate::crossbar::tiling::TiledMatrix::reprogram`] returns the
+/// count). Reported per-route in the coordinator's telemetry snapshot.
+pub fn recalibration_energy(pulses: u64) -> f64 {
+    pulses as f64 * E_WRITE_PULSE_J
+}
+
 /// Physics-derived static power of a deployed differential array under a
 /// given RMS operating voltage: P = sum_cells G * V_rms^2 (both rails).
 /// Used to sanity-check the `power_w` presets against the simulated

@@ -19,6 +19,6 @@ pub mod analogue;
 pub mod digital;
 pub mod report;
 
-pub use analogue::AnalogCost;
+pub use analogue::{recalibration_energy, AnalogCost, E_WRITE_PULSE_J};
 pub use digital::{DigitalCost, ModelKind};
 pub use report::{ComparisonRow, comparison_table};

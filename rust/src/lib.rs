@@ -252,6 +252,48 @@
 //!    performs zero heap allocations (enforced by the ensemble case in
 //!    `rust/tests/alloc.rs`).
 //!
+//! ## Device-lifetime invariants (aging, recalibration, degradation)
+//!
+//! The analogue crossbar is a *mortal* device: conductances drift and
+//! diffuse with device age, cells get stuck, and reprogramming costs
+//! write-verify pulses. [`analog::system::AnalogMlp::deploy_aging`] makes
+//! that state explicit, and [`twin::health::MonitoredTwin`] runs the
+//! detect → recalibrate → degrade loop over it. Four rules:
+//!
+//! 1. **Virtual clock only.** Device age advances exclusively through
+//!    `advance_age(dt_s)` — per served rollout
+//!    ([`twin::health::LifetimeConfig::age_per_rollout_s`]), per
+//!    recalibration backoff, or explicitly in accelerated-aging
+//!    experiments. Wall-clock time never touches device state, so every
+//!    lifetime trajectory is replayable (`rust/tests/lifetime.rs`,
+//!    release-gated in CI).
+//! 2. **Aging never perturbs the read path.** `advance_age` mutates the
+//!    *cached* engine conductances in place (drift factor + seeded
+//!    diffusion from the deployment's own aging stream); reads, noise
+//!    draw-index counts and `draws_per_read` are untouched. An un-aged
+//!    `deploy_aging` twin is bit-identical to a plain `deploy` twin, and
+//!    the zero-allocation + noise-determinism contracts above hold
+//!    unchanged on the aged fast path.
+//! 3. **Detect → recalibrate → degrade, never silent failure.** Every
+//!    `probe_every` rollouts the monitor replays a fixed-seed probe on
+//!    the analogue hardware and its golden digital reference and compares
+//!    with the paper's MRE (Eq. 5). A threshold crossing triggers
+//!    reprogramming (pulses charged as energy via
+//!    [`energy::recalibration_energy`]) with bounded retries and
+//!    exponential virtual backoff; exhausting
+//!    [`twin::health::LifetimeConfig::max_recal_failures`] consecutive
+//!    episodes flips the route to digital fallback with
+//!    [`twin::TwinResponse::degraded`] stamped `true` — degraded service
+//!    is always flagged, never silent, and
+//!    [`coordinator::telemetry::Telemetry`] carries the per-route
+//!    [`twin::health::LifetimeSnapshot`].
+//! 4. **Fault campaigns are populations, replayable.** A
+//!    [`twin::FaultCampaign`] on an ensemble request samples one fresh
+//!    deployment per member (yield map from `derive_stream_seed(
+//!    yield_seed, k)`, noise from `ensemble_member_seed(seed, k)`), so
+//!    pooled stats describe a device population and replay bit-exactly
+//!    from the (request seed, yield seed) pair.
+//!
 //! Python never runs on the request path: after `make artifacts` the Rust
 //! binary is self-contained.
 

@@ -8,6 +8,8 @@
 //!   trajectory head and basic accuracy vs ground truth
 //! * `serve`        — start the coordinator and run a synthetic client
 //!   load, printing latency/throughput telemetry
+//! * `lifetime`     — scripted device-lifetime scenario: aging drift,
+//!   health probes, recalibration, forced faults, graceful degradation
 //! * `routes`       — list available twin routes
 //! * `config`       — print the effective configuration as JSON
 //!
@@ -46,6 +48,7 @@ fn run() -> Result<()> {
         "characterize" => characterize(argv),
         "run-twin" => run_twin(argv),
         "serve" => serve(argv),
+        "lifetime" => lifetime(argv),
         "routes" => routes(argv),
         "config" => config_cmd(argv),
         "help" | "-h" | "--help" => {
@@ -57,6 +60,7 @@ fn run() -> Result<()> {
                  \x20 characterize   Fig. 2 device experiments\n\
                  \x20 run-twin       one twin inference\n\
                  \x20 serve          coordinator + synthetic load\n\
+                 \x20 lifetime       device aging / recalibration scenario\n\
                  \x20 routes         list twin routes\n\
                  \x20 config         print effective config JSON\n",
                 memode::VERSION
@@ -241,10 +245,15 @@ fn run_twin(argv: Vec<String>) -> Result<()> {
     let resp = twin.run(&req)?;
     let dt_wall = t0.elapsed();
     println!(
-        "route {route} backend {} -> {} samples in {:?}",
+        "route {route} backend {} -> {} samples in {:?}{}",
         resp.backend,
         resp.trajectory.len(),
-        dt_wall
+        dt_wall,
+        if resp.degraded {
+            " [DEGRADED: digital fallback]"
+        } else {
+            ""
+        }
     );
     // The replay command must pin everything the rollout depended on:
     // seed, the stimulus for driven twins, the ensemble width, and the
@@ -384,6 +393,34 @@ fn serve(argv: Vec<String>) -> Result<()> {
     );
     let stats = coord.stats();
     println!("telemetry: {stats}");
+    // Admission-gate observability: per-route admitted/shed counts plus
+    // the pooled rejected fraction (NaN-free only once traffic arrived).
+    let shed = stats.rejected_fraction();
+    if shed.is_finite() {
+        println!("admission: rejected fraction {shed:.3}");
+    }
+    for (r, load) in &stats.route_load {
+        println!(
+            "  route {r}: admitted {} shed {} (shed fraction {:.3})",
+            load.admitted,
+            load.shed,
+            load.shed_fraction()
+        );
+    }
+    // Device-lifetime status of health-monitored routes.
+    for (r, lt) in &stats.lifetime {
+        println!(
+            "lifetime {r}: age {:.3e}s health {:.3} probes {} (last MRE \
+             {:.2e}) recals {} ({:.2e} J){}",
+            lt.age_s,
+            lt.array_health,
+            lt.probes,
+            lt.last_probe_mre,
+            lt.recalibrations,
+            lt.recal_energy_j,
+            if lt.degraded { " DEGRADED" } else { "" }
+        );
+    }
     if stats.ensemble_rollouts > 0 {
         println!(
             "ensembles: {} rollouts, {} members total (mean width {:.1})",
@@ -408,6 +445,145 @@ fn serve(argv: Vec<String>) -> Result<()> {
         println!(
             "replay job {job}: memode run-twin --route {route} --steps \
              {steps}{ens_flag}{pjrt_flag} --seed {seed}"
+        );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// lifetime — scripted device-aging scenario
+// ---------------------------------------------------------------------------
+
+fn lifetime(argv: Vec<String>) -> Result<()> {
+    use memode::twin::health::{LifetimeConfig, MonitoredTwin};
+    use memode::twin::{FaultCampaign, Twin};
+
+    let args = Args::new(
+        "memode lifetime",
+        "device-lifetime scenario: drift, recalibration, degradation",
+    )
+    .opt("seed", "11", "deployment seed (hardware sampling + noise lanes)")
+    .opt("rollouts", "8", "served rollouts in the healthy stage")
+    .opt("campaign", "6", "fault-campaign members (0 = skip the campaign)")
+    .parse(argv)
+    .map_err(|m| anyhow::anyhow!("{m}"))?;
+    let seed = args.get_u64("seed");
+    let rollouts = args.get_usize("rollouts");
+    let campaign = args.get_usize("campaign");
+
+    // Self-contained: the synthetic decaying MLP (f(h) = -h) stands in
+    // for trained weights so the scenario runs without artifacts. Quiet
+    // programming/read noise keeps the probe floor at the circuit-vs-RK4
+    // integrator mismatch, far below the recalibration threshold, so
+    // every stage transition below is driven by aging alone.
+    let weights = memode::models::loader::decay_mlp_weights(3);
+    let device = DeviceConfig {
+        fault_rate: 0.0,
+        pulse_sigma: 0.0,
+        read_noise: 0.0,
+        ..Default::default()
+    };
+    let lcfg = LifetimeConfig {
+        age_per_rollout_s: 1.0,
+        probe_every: 4,
+        probe_points: 50,
+        mre_threshold: 0.005,
+        max_retries: 2,
+        max_recal_failures: 1,
+        backoff_s: 60.0,
+        ..Default::default()
+    };
+    println!(
+        "monitored route: probe every {} rollouts, recalibrate above \
+         MRE {}, degrade after {} failed episode(s)",
+        lcfg.probe_every, lcfg.mre_threshold, lcfg.max_recal_failures
+    );
+    let mut twin = MonitoredTwin::lorenz96(
+        &weights, &device, AnalogNoise::off(), seed, 100, lcfg,
+    );
+    fn status(twin: &MonitoredTwin) {
+        let s = twin.lifetime();
+        println!(
+            "  age {:>10.3e} s | health {:.3} | probes {} (last MRE \
+             {:.2e}) | recals {} ({} pulses, {:.2e} J) | failures {} | \
+             degraded {}",
+            s.age_s,
+            s.array_health,
+            s.probes,
+            s.last_probe_mre,
+            s.recalibrations,
+            s.recal_pulses,
+            s.recal_energy_j,
+            s.recal_failures,
+            s.degraded
+        );
+    }
+
+    println!("\n== stage 1: healthy service ({rollouts} rollouts) ==");
+    let req = TwinRequest::autonomous(vec![], 40).with_seed(seed);
+    for _ in 0..rollouts {
+        let resp = twin.run(&req)?;
+        anyhow::ensure!(!resp.degraded, "healthy stage degraded early");
+    }
+    status(&twin);
+
+    println!("\n== stage 2: accelerated aging (+1e10 s virtual) ==");
+    twin.advance_age(1e10);
+    let drifted = twin.probe_now()?;
+    let s = twin.lifetime();
+    println!(
+        "  probe crossed the threshold, recalibration ran: final MRE \
+         {drifted:.2e} after {} recalibration(s), {:.2e} J of write pulses",
+        s.recalibrations, s.recal_energy_j
+    );
+    status(&twin);
+
+    println!("\n== stage 3: forced fault storm (60% stuck cells) ==");
+    twin.inject_stuck_faults(0.6);
+    let _ = twin.probe_now()?;
+    status(&twin);
+    anyhow::ensure!(
+        twin.is_degraded(),
+        "stuck-heavy array unexpectedly recovered"
+    );
+    let resp = twin.run(&req)?;
+    println!(
+        "  degraded service: backend {} (degraded flag {}), {} samples",
+        resp.backend,
+        resp.degraded,
+        resp.trajectory.len()
+    );
+
+    if campaign > 0 {
+        println!(
+            "\n== stage 4: fault-injection campaign ({campaign} sampled \
+             devices, 1e7 s horizon, 5% extra stuck) =="
+        );
+        // A fresh monitor: campaigns model a device *population*, not the
+        // degraded unit above.
+        let mut fleet = MonitoredTwin::lorenz96(
+            &weights,
+            &device,
+            AnalogNoise::off(),
+            seed,
+            100,
+            LifetimeConfig::default(),
+        );
+        let creq = TwinRequest::autonomous(vec![], 40)
+            .with_seed(seed)
+            .with_ensemble(
+                EnsembleSpec::new(campaign).with_fault_campaign(
+                    FaultCampaign::new(seed ^ 0x77)
+                        .aged(1e7)
+                        .with_fault_fraction(0.05),
+                ),
+            );
+        let cresp = fleet.run(&creq)?;
+        let s = fleet.lifetime();
+        println!(
+            "  backend {}: {} members pooled, {} above the degradation \
+             threshold (replay: same --seed and yield seed)",
+            cresp.backend, s.campaign_members, s.campaign_degraded
         );
     }
     Ok(())

@@ -1,0 +1,566 @@
+//! Device-lifetime health monitoring: the detect → recalibrate → degrade
+//! loop over an aging analogue deployment.
+//!
+//! [`MonitoredTwin`] wraps a mortal analogue Lorenz96 twin
+//! ([`Lorenz96Twin::analog_aging`]) together with its golden digital
+//! reference. Serving advances the hardware's *virtual* clock (never
+//! wall-clock — see the device-lifetime invariants in `lib.rs`); every
+//! `probe_every` rollouts a cheap probe rollout is compared against the
+//! digital reference with the paper's MRE metric (Eq. 5), and a probe
+//! crossing [`LifetimeConfig::mre_threshold`] triggers a recalibration
+//! episode: reprogram every array toward its logical target, charge the
+//! write-verify pulses as energy ([`crate::energy::recalibration_energy`]),
+//! wait out an exponentially growing virtual downtime, re-probe, retry up
+//! to [`LifetimeConfig::max_retries`] times.
+//!
+//! A stuck-heavy array cannot be written back to health: after
+//! [`LifetimeConfig::max_recal_failures`] consecutive failed episodes the
+//! route enters *degraded* service — requests are answered by the digital
+//! reference with [`TwinResponse::degraded`] stamped `true`, so clients
+//! always know when the analogue hardware is out of the loop.
+//!
+//! Fault-injection campaigns ride on ensemble requests
+//! ([`FaultCampaign`]): each member gets its own sampled deployment
+//! (yield map seeded from the campaign's `yield_seed`), extra stuck cells
+//! and an aging horizon, so the pooled statistics describe a *population
+//! of devices*. Campaigns are bit-replayable from the (request seed,
+//! yield seed) pair — `rust/tests/lifetime.rs` asserts it.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::analog::system::AnalogNoise;
+use crate::coordinator::telemetry::Telemetry;
+use crate::device::taox::DeviceConfig;
+use crate::metrics::mre::mre_eps;
+use crate::models::loader::MlpWeights;
+use crate::twin::lorenz96::Lorenz96Twin;
+use crate::twin::{
+    assemble_ensemble_stats, ensemble_member_seed, EnsembleSlot,
+    EnsembleSpec, EnsembleStats, FaultCampaign, Twin, TwinRequest,
+    TwinResponse,
+};
+use crate::util::rng::{derive_stream_seed, SeedSequencer};
+use crate::util::stats::EnsembleAccumulator;
+use crate::util::tensor::{Trajectory, TrajectoryPool};
+
+/// Stream tag of the monitor's own auto-seed family (distinct from the
+/// deploy and aging streams derived off the same deployment seed).
+const HEALTH_SEED_TAG: u64 = 0x4ea1_7400_0000_0002;
+
+/// Guard band of the probe MRE: relative error is meaningless where the
+/// golden trajectory grazes zero, so samples below this magnitude are
+/// excluded (the paper's Eq. 5 with a practical guard).
+const PROBE_MRE_EPS: f64 = 1e-2;
+
+/// Lifetime-management policy of a [`MonitoredTwin`].
+#[derive(Debug, Clone)]
+pub struct LifetimeConfig {
+    /// Virtual device time charged per served rollout (s).
+    pub age_per_rollout_s: f64,
+    /// Probe the hardware every this many served rollouts.
+    pub probe_every: u64,
+    /// Probe rollout length (samples) — cheap by construction.
+    pub probe_points: usize,
+    /// Fixed noise seed of the probe rollouts (probes are replayable).
+    pub probe_seed: u64,
+    /// Probe MRE above this triggers a recalibration episode.
+    pub mre_threshold: f64,
+    /// Write-verify retries per recalibration episode.
+    pub max_retries: u32,
+    /// Virtual downtime of the first retry (s); doubles per retry, and
+    /// the device keeps drifting while it is being serviced.
+    pub backoff_s: f64,
+    /// Consecutive failed episodes before the route degrades.
+    pub max_recal_failures: u32,
+}
+
+impl Default for LifetimeConfig {
+    fn default() -> Self {
+        Self {
+            age_per_rollout_s: 86_400.0,
+            probe_every: 8,
+            probe_points: 16,
+            probe_seed: 0x9043_e5ee_d000_0001,
+            mre_threshold: 0.05,
+            max_retries: 3,
+            backoff_s: 60.0,
+            max_recal_failures: 3,
+        }
+    }
+}
+
+/// Point-in-time lifetime status of a monitored route (what the
+/// coordinator's telemetry snapshot carries per route).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LifetimeSnapshot {
+    /// Virtual device age (s).
+    pub age_s: f64,
+    /// Healthy-cell fraction across the deployed arrays.
+    pub array_health: f64,
+    /// Probes run so far.
+    pub probes: u64,
+    /// Most recent probe MRE vs the digital reference.
+    pub last_probe_mre: f64,
+    /// Completed recalibrations (array reprogramming passes).
+    pub recalibrations: u64,
+    /// Lifetime write-verify pulses spent recalibrating.
+    pub recal_pulses: u64,
+    /// Energy of those pulses (J).
+    pub recal_energy_j: f64,
+    /// Recalibration episodes that exhausted their retries.
+    pub recal_failures: u64,
+    /// Whether the route serves degraded (digital fallback) responses.
+    pub degraded: bool,
+    /// Fault-campaign members simulated through this route.
+    pub campaign_members: u64,
+    /// Of those, members whose rollout error crossed the probe threshold.
+    pub campaign_degraded: u64,
+}
+
+/// Probe error between a rollout and its golden reference: MRE over the
+/// flat sample streams, zero-guarded (see [`PROBE_MRE_EPS`]).
+pub fn probe_mre(pred: &Trajectory, truth: &Trajectory) -> f64 {
+    mre_eps(pred.data(), truth.data(), PROBE_MRE_EPS)
+}
+
+/// An aging analogue twin under health management, with its digital
+/// reference as both probe oracle and degraded-service fallback.
+pub struct MonitoredTwin {
+    analog: Lorenz96Twin,
+    digital: Lorenz96Twin,
+    cfg: LifetimeConfig,
+    /// Deployment recipe retained for fault-campaign members (each member
+    /// is a fresh sampled deployment of the same logical model).
+    weights: MlpWeights,
+    device: DeviceConfig,
+    noise: AnalogNoise,
+    substeps: usize,
+    seeds: SeedSequencer,
+    route: String,
+    telemetry: Option<Arc<Telemetry>>,
+    served: u64,
+    probes: u64,
+    last_probe_mre: f64,
+    consecutive_failures: u32,
+    recal_failures: u64,
+    recal_pulses: u64,
+    degraded: bool,
+    campaign_members: u64,
+    campaign_degraded: u64,
+    pool: TrajectoryPool,
+    acc: EnsembleAccumulator,
+}
+
+impl MonitoredTwin {
+    /// Monitored Lorenz96 twin: mortal analogue deployment + digital
+    /// golden reference built from the same trained weights.
+    pub fn lorenz96(
+        weights: &MlpWeights,
+        device: &DeviceConfig,
+        noise: AnalogNoise,
+        seed: u64,
+        substeps: usize,
+        cfg: LifetimeConfig,
+    ) -> Self {
+        let analog =
+            Lorenz96Twin::analog_aging(weights, device, noise, seed, substeps);
+        let digital = Lorenz96Twin::digital(weights);
+        Self {
+            analog,
+            digital,
+            cfg,
+            weights: weights.clone(),
+            device: device.clone(),
+            noise,
+            substeps: substeps.max(1),
+            seeds: SeedSequencer::new(derive_stream_seed(
+                seed,
+                HEALTH_SEED_TAG,
+            )),
+            route: "lorenz96/analog-aged".into(),
+            telemetry: None,
+            served: 0,
+            probes: 0,
+            last_probe_mre: 0.0,
+            consecutive_failures: 0,
+            recal_failures: 0,
+            recal_pulses: 0,
+            degraded: false,
+            campaign_members: 0,
+            campaign_degraded: 0,
+            pool: TrajectoryPool::new(),
+            acc: EnsembleAccumulator::default(),
+        }
+    }
+
+    /// Publish lifetime snapshots into the coordinator's telemetry under
+    /// `route`.
+    pub fn with_telemetry(
+        mut self,
+        route: &str,
+        t: Arc<Telemetry>,
+    ) -> Self {
+        self.route = route.to_owned();
+        self.telemetry = Some(t);
+        self.publish();
+        self
+    }
+
+    /// Whether the route has entered degraded (digital-fallback) service.
+    pub fn is_degraded(&self) -> bool {
+        self.degraded
+    }
+
+    /// Current lifetime status.
+    pub fn lifetime(&self) -> LifetimeSnapshot {
+        LifetimeSnapshot {
+            age_s: self.analog.age_s(),
+            array_health: self.analog.array_health(),
+            probes: self.probes,
+            last_probe_mre: self.last_probe_mre,
+            recalibrations: self.analog.recalibrations(),
+            recal_pulses: self.recal_pulses,
+            recal_energy_j: crate::energy::recalibration_energy(
+                self.recal_pulses,
+            ),
+            recal_failures: self.recal_failures,
+            degraded: self.degraded,
+            campaign_members: self.campaign_members,
+            campaign_degraded: self.campaign_degraded,
+        }
+    }
+
+    /// Advance the hardware's virtual clock directly (accelerated-aging
+    /// experiments; serving already ages per rollout).
+    pub fn advance_age(&mut self, dt_s: f64) {
+        self.analog.advance_age(dt_s);
+        self.publish();
+    }
+
+    /// Mark a random fraction of cells stuck on the monitored deployment
+    /// (deterministic in its aging stream) — the forced-failure lever of
+    /// lifetime scenarios and tests.
+    pub fn inject_stuck_faults(&mut self, fraction: f64) {
+        self.analog.inject_stuck_faults(fraction);
+        self.publish();
+    }
+
+    /// Rollout error of the monitored hardware against its digital
+    /// reference on the standard probe request.
+    fn probe_error(&mut self) -> Result<f64> {
+        let req = TwinRequest::autonomous(
+            Vec::new(),
+            self.cfg.probe_points.max(2),
+        )
+        .with_seed(self.cfg.probe_seed);
+        let a = self.analog.run(&req)?;
+        let d = self.digital.run(&req)?;
+        Ok(probe_mre(&a.trajectory, &d.trajectory))
+    }
+
+    /// Run one health probe immediately; on a threshold crossing, run a
+    /// full recalibration episode (bounded retries, exponential virtual
+    /// backoff). Returns the final probe error.
+    pub fn probe_now(&mut self) -> Result<f64> {
+        let mut err = self.probe_error()?;
+        self.probes += 1;
+        if err > self.cfg.mre_threshold && !self.degraded {
+            let mut recovered = false;
+            for attempt in 0..self.cfg.max_retries {
+                let pulses = self.analog.recalibrate();
+                self.recal_pulses =
+                    self.recal_pulses.saturating_add(pulses);
+                // Write-verify downtime doubles per retry, in virtual
+                // time: the device drifts even while being serviced.
+                self.analog.advance_age(
+                    self.cfg.backoff_s
+                        * f64::from(1u32 << attempt.min(30)),
+                );
+                err = self.probe_error()?;
+                if err <= self.cfg.mre_threshold {
+                    recovered = true;
+                    break;
+                }
+            }
+            if recovered {
+                self.consecutive_failures = 0;
+            } else {
+                self.consecutive_failures += 1;
+                self.recal_failures += 1;
+                if self.consecutive_failures
+                    >= self.cfg.max_recal_failures.max(1)
+                {
+                    self.degraded = true;
+                }
+            }
+        } else if err <= self.cfg.mre_threshold {
+            self.consecutive_failures = 0;
+        }
+        self.last_probe_mre = err;
+        self.publish();
+        Ok(err)
+    }
+
+    fn publish(&self) {
+        if let Some(t) = &self.telemetry {
+            t.record_lifetime(&self.route, self.lifetime());
+        }
+    }
+
+    /// Execute a fault-injection campaign: each member is a *fresh
+    /// sampled deployment* (yield map from `derive_stream_seed(yield_seed,
+    /// k)`), salted with extra stuck cells, aged to the campaign horizon,
+    /// then rolled out under noise seed `ensemble_member_seed(seed, k)`.
+    /// Pooled stats come from the shared ensemble assembly, plus a pooled
+    /// degradation count against the digital reference.
+    fn run_fault_campaign(
+        &mut self,
+        req: &TwinRequest,
+        spec: &EnsembleSpec,
+        campaign: FaultCampaign,
+    ) -> Result<TwinResponse> {
+        spec.validate()?;
+        let seed = self.seeds.resolve(req.seed);
+        let n = spec.members;
+        let dim = self.analog.state_dim();
+        let mut plain = req.clone();
+        plain.ensemble = None;
+        plain.seed = Some(seed);
+        let golden = self.digital.run(&plain)?.trajectory;
+        let mut members: Vec<Trajectory> = Vec::with_capacity(n);
+        let mut degraded_members = 0u64;
+        for k in 0..n {
+            let dep_seed =
+                derive_stream_seed(campaign.yield_seed, k as u64);
+            let mut device = Lorenz96Twin::analog_aging(
+                &self.weights,
+                &self.device,
+                self.noise,
+                dep_seed,
+                self.substeps,
+            );
+            if campaign.fault_fraction > 0.0 {
+                device.inject_stuck_faults(campaign.fault_fraction);
+            }
+            if campaign.age_s > 0.0 {
+                device.advance_age(campaign.age_s);
+            }
+            let mut mreq = plain.clone();
+            mreq.seed = Some(ensemble_member_seed(seed, k as u64));
+            let resp = device.run(&mreq)?;
+            if probe_mre(&resp.trajectory, &golden)
+                > self.cfg.mre_threshold
+            {
+                degraded_members += 1;
+            }
+            members.push(resp.trajectory);
+        }
+        let n_points = members.first().map_or(0, Trajectory::len);
+        let mut flat = Trajectory::new(n * dim);
+        flat.reserve_rows(n_points);
+        for r in 0..n_points {
+            flat.push_row_from_iter(
+                members.iter().flat_map(|m| m.row(r).iter().copied()),
+            );
+        }
+        let (trajectory, stats) = assemble_ensemble_stats(
+            spec,
+            &flat,
+            EnsembleSlot { batch: n, dim, base: 0 },
+            &mut self.acc,
+            &mut self.pool,
+            EnsembleStats::default(),
+        );
+        self.campaign_members =
+            self.campaign_members.saturating_add(n as u64);
+        self.campaign_degraded =
+            self.campaign_degraded.saturating_add(degraded_members);
+        self.publish();
+        Ok(TwinResponse {
+            trajectory,
+            backend: "analog-aged-campaign",
+            seed,
+            ensemble: Some(stats),
+            degraded: false,
+        })
+    }
+}
+
+impl Twin for MonitoredTwin {
+    fn name(&self) -> &str {
+        &self.route
+    }
+
+    fn state_dim(&self) -> usize {
+        self.analog.state_dim()
+    }
+
+    fn dt(&self) -> f64 {
+        self.analog.dt()
+    }
+
+    fn default_h0(&self) -> Vec<f64> {
+        self.analog.default_h0()
+    }
+
+    fn run(&mut self, req: &TwinRequest) -> Result<TwinResponse> {
+        if let Some(c) =
+            req.ensemble.as_ref().and_then(|s| s.fault_campaign)
+        {
+            let spec = req.ensemble.clone().expect("campaign implies spec");
+            return self.run_fault_campaign(req, &spec, c);
+        }
+        if self.degraded {
+            // Graceful degradation: keep serving, from the digital
+            // reference, and say so.
+            let mut resp = self.digital.run(req)?;
+            resp.degraded = true;
+            self.publish();
+            return Ok(resp);
+        }
+        let resp = self.analog.run(req)?;
+        self.served += 1;
+        self.analog.advance_age(self.cfg.age_per_rollout_s);
+        if self.served % self.cfg.probe_every.max(1) == 0 {
+            self.probe_now()?;
+        } else {
+            self.publish();
+        }
+        Ok(resp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::loader::decay_mlp_weights;
+
+    fn quiet_cfg() -> DeviceConfig {
+        DeviceConfig {
+            fault_rate: 0.0,
+            pulse_sigma: 0.0,
+            read_noise: 0.0,
+            ..Default::default()
+        }
+    }
+
+    /// High substeps keep the circuit-integrator error floor far below
+    /// every probe threshold used here (the probe compares the analogue
+    /// circuit integration against digital RK4).
+    fn monitored(cfg: LifetimeConfig) -> MonitoredTwin {
+        MonitoredTwin::lorenz96(
+            &decay_mlp_weights(3),
+            &quiet_cfg(),
+            AnalogNoise::off(),
+            11,
+            100,
+            cfg,
+        )
+    }
+
+    #[test]
+    fn healthy_twin_serves_analog_and_probes_clean() {
+        let mut t = monitored(LifetimeConfig {
+            age_per_rollout_s: 1.0,
+            probe_every: 2,
+            ..Default::default()
+        });
+        for _ in 0..4 {
+            let r = t
+                .run(&TwinRequest::autonomous(vec![0.5, -0.5, 0.2], 6))
+                .unwrap();
+            assert_eq!(r.backend, "analog");
+            assert!(!r.degraded);
+        }
+        let s = t.lifetime();
+        assert_eq!(s.probes, 2);
+        assert!(s.last_probe_mre < 0.05, "mre {}", s.last_probe_mre);
+        assert_eq!(s.recalibrations, 0);
+        assert!(!s.degraded);
+        assert!(s.age_s > 0.0);
+    }
+
+    #[test]
+    fn drifted_twin_recalibrates_and_recovers() {
+        let mut t = monitored(LifetimeConfig {
+            mre_threshold: 0.005,
+            probe_points: 50,
+            ..Default::default()
+        });
+        t.advance_age(1e10);
+        let before = t.probe_error().unwrap();
+        assert!(before > 0.005, "drift inert: {before}");
+        let after = t.probe_now().unwrap();
+        let s = t.lifetime();
+        assert!(s.recalibrations >= 1);
+        assert!(s.recal_pulses > 0);
+        assert!(s.recal_energy_j > 0.0);
+        assert!(after <= 0.005, "not restored: {after}");
+        assert!(!s.degraded);
+    }
+
+    #[test]
+    fn stuck_heavy_twin_exhausts_retries_and_degrades() {
+        let mut t = monitored(LifetimeConfig {
+            mre_threshold: 1e-6,
+            max_retries: 2,
+            max_recal_failures: 1,
+            backoff_s: 1.0,
+            ..Default::default()
+        });
+        t.inject_stuck_faults(0.6);
+        assert!(t.array_health_below_one());
+        let _ = t.probe_now().unwrap();
+        assert!(t.is_degraded(), "over-faulted array failed to degrade");
+        let s = t.lifetime();
+        assert_eq!(s.recal_failures, 1);
+        assert!(s.recalibrations >= 1, "degradation without trying");
+        // Degraded service: digital fallback, flagged.
+        let r = t
+            .run(&TwinRequest::autonomous(vec![0.1, 0.2, 0.3], 5))
+            .unwrap();
+        assert!(r.degraded);
+        assert_eq!(r.backend, "digital-rk4");
+        assert_eq!(r.trajectory.len(), 5);
+    }
+
+    impl MonitoredTwin {
+        fn array_health_below_one(&self) -> bool {
+            self.analog.array_health() < 1.0
+        }
+    }
+
+    #[test]
+    fn fault_campaign_is_replayable_and_pools_degradation() {
+        let spec = EnsembleSpec::new(3).with_fault_campaign(
+            FaultCampaign::new(77).aged(1e7).with_fault_fraction(0.05),
+        );
+        let req = TwinRequest::autonomous(vec![0.4, -0.2, 0.6], 5)
+            .with_seed(2024)
+            .with_ensemble(spec);
+        let mut a = monitored(LifetimeConfig::default());
+        let mut b = monitored(LifetimeConfig::default());
+        let ra = a.run(&req).unwrap();
+        let rb = b.run(&req).unwrap();
+        assert_eq!(ra.trajectory, rb.trajectory, "campaign not replayable");
+        let (ea, eb) =
+            (ra.ensemble.as_ref().unwrap(), rb.ensemble.as_ref().unwrap());
+        assert_eq!(ea.mean, eb.mean);
+        assert_eq!(ea.std, eb.std);
+        assert_eq!(ea.members, 3);
+        assert_eq!(a.lifetime().campaign_members, 3);
+        // A different yield seed samples different hardware.
+        let other = TwinRequest::autonomous(vec![0.4, -0.2, 0.6], 5)
+            .with_seed(2024)
+            .with_ensemble(EnsembleSpec::new(3).with_fault_campaign(
+                FaultCampaign::new(78).aged(1e7).with_fault_fraction(0.05),
+            ));
+        let rc = a.run(&other).unwrap();
+        assert_ne!(
+            rc.trajectory, ra.trajectory,
+            "yield seed had no effect on the device population"
+        );
+    }
+}

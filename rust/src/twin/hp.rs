@@ -375,6 +375,7 @@ impl Twin for HpTwin {
             backend,
             seed,
             ensemble: None,
+            degraded: false,
         })
     }
 
@@ -482,6 +483,7 @@ impl Twin for HpTwin {
                             backend,
                             seed,
                             ensemble: None,
+                            degraded: false,
                         });
                     sc.slots[i] = Some(r);
                 }
@@ -510,6 +512,7 @@ impl Twin for HpTwin {
                                     backend,
                                     seed: sc.seeds[k],
                                     ensemble: None,
+                                    degraded: false,
                                 }));
                             }
                             Some(spec) => {
@@ -534,6 +537,7 @@ impl Twin for HpTwin {
                                     backend,
                                     seed: sc.seeds[k],
                                     ensemble: Some(stats),
+                                    degraded: false,
                                 }));
                             }
                         }

@@ -197,6 +197,109 @@ impl Lorenz96Twin {
         Self::assemble(backend, dt, dim, seed)
     }
 
+    /// Analogue-backend twin on *mortal* hardware: deployed via
+    /// [`AnalogMlp::deploy_aging`], so the crossbars keep their physical
+    /// state and expose the virtual-clock lifetime API
+    /// ([`Lorenz96Twin::advance_age`], [`Lorenz96Twin::recalibrate`], …).
+    /// Monolithic kernel only — aging engines refresh in place, which the
+    /// tile-shard execution forms do not support. At age 0 this twin is
+    /// bit-identical to [`Lorenz96Twin::analog`] under the same seed.
+    pub fn analog_aging(
+        weights: &MlpWeights,
+        cfg: &DeviceConfig,
+        noise: AnalogNoise,
+        seed: u64,
+        substeps: usize,
+    ) -> Self {
+        let layers: Vec<LayerWeights> = weights
+            .layers
+            .iter()
+            .map(|(w, b)| LayerWeights::new(w, b))
+            .collect();
+        let dim = weights.layers.last().unwrap().0.cols;
+        let mlp = AnalogMlp::deploy_aging(&layers, cfg, noise, seed);
+        let dt = weights.dt;
+        let substeps = substeps.max(1);
+        let ode = AnalogNeuralOde::new(mlp, dim, dt / substeps as f64);
+        Self::assemble(L96Backend::Analog(Box::new(ode)), dt, dim, seed)
+    }
+
+    /// The aging analogue deployment, if this twin was built with
+    /// [`Lorenz96Twin::analog_aging`].
+    fn aging_mlp(&mut self) -> Option<&mut AnalogMlp> {
+        match &mut self.backend {
+            L96Backend::Analog(ode) if ode.mlp.is_aging() => {
+                Some(&mut ode.mlp)
+            }
+            _ => None,
+        }
+    }
+
+    /// Whether this twin runs on mortal (aging) analogue hardware.
+    pub fn is_aging(&self) -> bool {
+        matches!(&self.backend, L96Backend::Analog(ode) if ode.mlp.is_aging())
+    }
+
+    /// Advance the hardware's virtual clock by `dt_s` seconds (drift +
+    /// diffusion on every cell, engines refreshed). No-op for `dt_s <= 0`;
+    /// panics on a non-aging twin.
+    pub fn advance_age(&mut self, dt_s: f64) {
+        self.aging_mlp()
+            .expect("advance_age requires an analog_aging twin")
+            .advance_age(dt_s);
+    }
+
+    /// Reprogram every array back to its target weights; returns the
+    /// write-verify pulse count (energy via
+    /// [`crate::energy::recalibration_energy`]).
+    pub fn recalibrate(&mut self) -> u64 {
+        self.aging_mlp()
+            .expect("recalibrate requires an analog_aging twin")
+            .recalibrate()
+    }
+
+    /// Virtual device age (s); 0 for immortal twins.
+    pub fn age_s(&self) -> f64 {
+        match &self.backend {
+            L96Backend::Analog(ode) => ode.mlp.age_s(),
+            _ => 0.0,
+        }
+    }
+
+    /// Healthy-cell fraction across every deployed array (1.0 if
+    /// immortal).
+    pub fn array_health(&self) -> f64 {
+        match &self.backend {
+            L96Backend::Analog(ode) => ode.mlp.array_health(),
+            _ => 1.0,
+        }
+    }
+
+    /// Lifetime write-verify pulses spent on recalibration.
+    pub fn lifetime_pulses(&self) -> u64 {
+        match &self.backend {
+            L96Backend::Analog(ode) => ode.mlp.lifetime_pulses(),
+            _ => 0,
+        }
+    }
+
+    /// Completed recalibration count.
+    pub fn recalibrations(&self) -> u64 {
+        match &self.backend {
+            L96Backend::Analog(ode) => ode.mlp.recalibrations(),
+            _ => 0,
+        }
+    }
+
+    /// Mark a random `fraction` of cells stuck (fault-injection campaigns;
+    /// deterministic in the deployment's aging stream). Panics on a
+    /// non-aging twin.
+    pub fn inject_stuck_faults(&mut self, fraction: f64) {
+        self.aging_mlp()
+            .expect("inject_stuck_faults requires an analog_aging twin")
+            .inject_stuck_faults(fraction);
+    }
+
     /// Digital (Rust RK4) twin.
     pub fn digital(weights: &MlpWeights) -> Self {
         let dim = weights.layers.last().unwrap().0.cols;
@@ -441,7 +544,13 @@ impl Twin for Lorenz96Twin {
         let seed = self.seeds.resolve(req.seed);
         let mut lane = NoiseLane::from_seed(seed);
         let trajectory = self.simulate_lane(h0, req.n_points, &mut lane)?;
-        Ok(TwinResponse { trajectory, backend, seed, ensemble: None })
+        Ok(TwinResponse {
+            trajectory,
+            backend,
+            seed,
+            ensemble: None,
+            degraded: false,
+        })
     }
 
     fn run_batch(
@@ -551,6 +660,7 @@ impl Twin for Lorenz96Twin {
                             backend,
                             seed,
                             ensemble: None,
+                            degraded: false,
                         });
                     sc.slots[i] = Some(r);
                 }
@@ -578,6 +688,7 @@ impl Twin for Lorenz96Twin {
                                     backend,
                                     seed: sc.seeds[k],
                                     ensemble: None,
+                                    degraded: false,
                                 }));
                             }
                             Some(spec) => {
@@ -602,6 +713,7 @@ impl Twin for Lorenz96Twin {
                                     backend,
                                     seed: sc.seeds[k],
                                     ensemble: Some(stats),
+                                    degraded: false,
                                 }));
                             }
                         }
@@ -662,6 +774,53 @@ mod tests {
             &d.to_nested(),
         );
         assert!(err < 0.01, "analog vs digital L1 {err}");
+    }
+
+    #[test]
+    fn aging_twin_matches_plain_at_age_zero_then_drifts_and_recals() {
+        let w = toy_weights(3);
+        let cfg = DeviceConfig {
+            fault_rate: 0.0,
+            pulse_sigma: 0.0,
+            read_noise: 0.0,
+            ..Default::default()
+        };
+        let h0 = [1.0, 0.5, -0.5];
+        let mut plain = Lorenz96Twin::analog(&w, &cfg, AnalogNoise::off(), 1);
+        let mut aging = Lorenz96Twin::analog_aging(
+            &w,
+            &cfg,
+            AnalogNoise::off(),
+            1,
+            ANALOG_SUBSTEPS,
+        );
+        assert!(aging.is_aging() && !plain.is_aging());
+        let fresh = aging.simulate(&h0, 20).unwrap();
+        assert_eq!(
+            fresh,
+            plain.simulate(&h0, 20).unwrap(),
+            "aging deployment diverged from plain at age 0"
+        );
+        aging.advance_age(1e7);
+        assert_eq!(aging.age_s(), 1e7);
+        let aged = aging.simulate(&h0, 20).unwrap();
+        let dev = |a: &Trajectory, b: &Trajectory| {
+            crate::metrics::l1::mean_l1_multi(
+                &a.to_nested(),
+                &b.to_nested(),
+            )
+        };
+        assert!(dev(&aged, &fresh) > 0.0, "aging left the rollout intact");
+        let pulses = aging.recalibrate();
+        assert!(pulses > 0);
+        assert_eq!(aging.recalibrations(), 1);
+        assert_eq!(aging.lifetime_pulses(), pulses);
+        let recal = aging.simulate(&h0, 20).unwrap();
+        assert!(
+            dev(&recal, &fresh) < dev(&aged, &fresh),
+            "recalibration did not move the rollout back"
+        );
+        assert_eq!(aging.array_health(), 1.0);
     }
 
     #[test]

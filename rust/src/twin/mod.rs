@@ -27,6 +27,7 @@
 //! batched rollout, and the response carries pooled per-timestep
 //! [`EnsembleStats`] (see the ensemble invariants in `lib.rs`).
 
+pub mod health;
 pub mod hp;
 pub mod lorenz96;
 pub mod registry;
@@ -70,6 +71,58 @@ pub fn ensemble_member_seed(seed: u64, member: u64) -> u64 {
     derive_stream_seed(seed, member)
 }
 
+/// A device-lifetime fault campaign riding on an ensemble request: every
+/// member gets its *own* simulated crossbar deployment (yield map seeded
+/// by `derive_stream_seed(yield_seed, k)`), optionally salted with extra
+/// stuck cells, and aged to `age_s` of virtual device time before the
+/// rollout. Pooled statistics then describe a *population of devices*,
+/// not noise lanes on one device — the paper's chip-to-chip variability
+/// question. Replay is two seeds: the request seed (noise lanes) plus
+/// `yield_seed` (hardware population); see `rust/tests/lifetime.rs`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultCampaign {
+    /// Root seed of the per-member hardware deployments.
+    pub yield_seed: u64,
+    /// Virtual device age applied to every member before its rollout (s).
+    pub age_s: f64,
+    /// Extra stuck-cell fraction injected on top of the device config's
+    /// intrinsic fault rate (0.0..=1.0).
+    pub fault_fraction: f64,
+}
+
+impl FaultCampaign {
+    pub fn new(yield_seed: u64) -> Self {
+        Self { yield_seed, age_s: 0.0, fault_fraction: 0.0 }
+    }
+
+    /// Age every member's hardware by `age_s` seconds of virtual time.
+    pub fn aged(mut self, age_s: f64) -> Self {
+        self.age_s = age_s;
+        self
+    }
+
+    /// Inject an extra stuck-cell fraction into every member's arrays.
+    pub fn with_fault_fraction(mut self, f: f64) -> Self {
+        self.fault_fraction = f;
+        self
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.age_s.is_finite() && self.age_s >= 0.0,
+            "fault-campaign age {} must be finite and >= 0",
+            self.age_s
+        );
+        anyhow::ensure!(
+            self.fault_fraction.is_finite()
+                && (0.0..=1.0).contains(&self.fault_fraction),
+            "fault fraction {} outside 0..=1",
+            self.fault_fraction
+        );
+        Ok(())
+    }
+}
+
 /// A Monte-Carlo ensemble specification: one seed, N noise lanes, one
 /// batched rollout, pooled statistics in the response.
 #[derive(Debug, Clone, PartialEq)]
@@ -82,11 +135,26 @@ pub struct EnsembleSpec {
     /// Also return every member trajectory in
     /// [`EnsembleStats::member_trajectories`].
     pub return_members: bool,
+    /// Device-lifetime fault campaign: members differ by sampled hardware
+    /// (yield map + age), not just noise lanes. Only routes with aging
+    /// hardware serve this (others report a per-request error).
+    pub fault_campaign: Option<FaultCampaign>,
 }
 
 impl EnsembleSpec {
     pub fn new(members: usize) -> Self {
-        Self { members, percentiles: Vec::new(), return_members: false }
+        Self {
+            members,
+            percentiles: Vec::new(),
+            return_members: false,
+            fault_campaign: None,
+        }
+    }
+
+    /// Attach a device-lifetime fault campaign (see [`FaultCampaign`]).
+    pub fn with_fault_campaign(mut self, c: FaultCampaign) -> Self {
+        self.fault_campaign = Some(c);
+        self
     }
 
     /// Request a percentile envelope (values in 0..=100).
@@ -116,6 +184,9 @@ impl EnsembleSpec {
                 p.is_finite() && (0.0..=100.0).contains(&p),
                 "percentile {p} outside 0..=100"
             );
+        }
+        if let Some(c) = &self.fault_campaign {
+            c.validate()?;
         }
         Ok(())
     }
@@ -306,6 +377,12 @@ pub struct TwinResponse {
     /// Ensemble statistics (present iff the request carried an
     /// [`EnsembleSpec`] and the twin served it).
     pub ensemble: Option<EnsembleStats>,
+    /// `true` iff a health-monitored route served this from its *fallback*
+    /// backend because the analogue hardware failed recalibration (see
+    /// [`health::MonitoredTwin`]). Plain twins always stamp `false` —
+    /// degraded service is flagged, never silent (lifetime invariant 3 in
+    /// `lib.rs`).
+    pub degraded: bool,
 }
 
 /// Root of the trait fallback's auto-derived seed family (fixed constant:
@@ -552,6 +629,7 @@ mod tests {
                     backend: "echo",
                     seed: req.seed.unwrap_or(0),
                     ensemble: None,
+                    degraded: false,
                 })
             }
         }
@@ -614,6 +692,23 @@ mod tests {
             .is_err());
         assert!(EnsembleSpec::new(4)
             .with_percentiles(vec![f64::NAN])
+            .validate()
+            .is_err());
+        // Fault campaigns validate through the spec.
+        assert!(EnsembleSpec::new(4)
+            .with_fault_campaign(
+                FaultCampaign::new(9).aged(1e6).with_fault_fraction(0.1)
+            )
+            .validate()
+            .is_ok());
+        assert!(EnsembleSpec::new(4)
+            .with_fault_campaign(FaultCampaign::new(9).aged(-1.0))
+            .validate()
+            .is_err());
+        assert!(EnsembleSpec::new(4)
+            .with_fault_campaign(
+                FaultCampaign::new(9).with_fault_fraction(1.5)
+            )
             .validate()
             .is_err());
     }
@@ -703,6 +798,7 @@ mod tests {
                     backend: "echo2",
                     seed,
                     ensemble: None,
+                    degraded: false,
                 })
             }
         }

@@ -94,6 +94,7 @@ mod tests {
                 backend: "dummy",
                 seed: req.seed.unwrap_or(0),
                 ensemble: None,
+                degraded: false,
             })
         }
     }

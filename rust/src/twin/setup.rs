@@ -10,6 +10,7 @@
 //! | `hp/pjrt`            | AOT HLO rollout via PJRT             |
 //! | `lorenz96/analog`    | memristive solver                    |
 //! | `lorenz96/analog-sharded` | memristive solver, tile-sharded fan-out |
+//! | `lorenz96/analog-aged` | aging crossbar behind the health monitor |
 //! | `lorenz96/digital`   | Rust RK4                             |
 //! | `lorenz96/rnn|gru|lstm` | recurrent baselines               |
 //! | `lorenz96/pjrt`      | AOT HLO rollout via PJRT             |
@@ -150,6 +151,32 @@ pub fn build_registry_with_telemetry(
         });
     }
     {
+        // Health-monitored aging route: the same deployment on a mortal
+        // crossbar. Served rollouts advance the device's virtual clock,
+        // periodic probes compare against the digital reference, failing
+        // probes trigger recalibration, and exhausted recalibration
+        // budgets flip the route to flagged digital fallback. Faults stay
+        // on here — yield is exactly what the lifetime loop manages.
+        let w = Arc::clone(&weights.l96_node);
+        let dev = device.clone();
+        let tel = telemetry.clone();
+        reg.register("lorenz96/analog-aged", move || {
+            let mut twin = crate::twin::health::MonitoredTwin::lorenz96(
+                &w,
+                &dev,
+                noise,
+                seed,
+                crate::twin::lorenz96::ANALOG_SUBSTEPS,
+                crate::twin::health::LifetimeConfig::default(),
+            );
+            if let Some(t) = &tel {
+                twin = twin
+                    .with_telemetry("lorenz96/analog-aged", Arc::clone(t));
+            }
+            Box::new(twin)
+        });
+    }
+    {
         let w = Arc::clone(&weights.l96_node);
         reg.register("lorenz96/digital", move || {
             Box::new(Lorenz96Twin::digital(&w))
@@ -250,6 +277,7 @@ mod tests {
             "hp/resnet",
             "lorenz96/analog",
             "lorenz96/analog-sharded",
+            "lorenz96/analog-aged",
             "lorenz96/digital",
             "lorenz96/rnn",
             "lorenz96/gru",

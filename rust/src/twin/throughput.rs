@@ -49,7 +49,12 @@ pub struct ThroughputEntry {
 /// 32-lane ensemble rollout per request, its "batched" column coalesces B
 /// requests into one (B * 32)-lane rollout — the tracked cost of
 /// first-class ensembles.
-pub const ROUTES: [&str; 7] = [
+/// `l96d64/analog-aged` is the same monolithic deployment on a *mortal*
+/// crossbar ([`Lorenz96Twin::analog_aging`]): comparing it against
+/// `l96d64/analog` at equal B tracks the lifetime bookkeeping's hot-path
+/// overhead — which must stay ~zero, since aging only mutates cached
+/// conductances at `advance_age` time, never per read.
+pub const ROUTES: [&str; 8] = [
     "hp/analog",
     "hp/digital",
     "l96/analog",
@@ -57,6 +62,7 @@ pub const ROUTES: [&str; 7] = [
     "l96d64/analog",
     "l96d64/analog-shard2",
     "l96d64/analog-ens32",
+    "l96d64/analog-aged",
 ];
 
 /// Circuit substeps for the d = 64 routes (smaller than the paper-default
@@ -166,6 +172,13 @@ pub fn make_twin(route: &str) -> Box<dyn Twin> {
             1,
             d64_opts(1, false),
         )),
+        "l96d64/analog-aged" => Box::new(Lorenz96Twin::analog_aging(
+            &l96d64_weights(),
+            &device,
+            AnalogNoise::hardware(),
+            1,
+            D64_SUBSTEPS,
+        )),
         other => panic!("unknown throughput route '{other}'"),
     }
 }
@@ -211,6 +224,13 @@ pub fn make_quiet_twin(route: &str) -> Box<dyn Twin> {
             AnalogNoise::off(),
             1,
             d64_opts(1, false),
+        )),
+        "l96d64/analog-aged" => Box::new(Lorenz96Twin::analog_aging(
+            &l96d64_weights(),
+            &quiet,
+            AnalogNoise::off(),
+            1,
+            D64_SUBSTEPS,
         )),
         other => make_twin(other),
     }
@@ -675,6 +695,21 @@ mod tests {
     #[test]
     fn sharded_route_bit_identical_to_monolithic_route() {
         assert_sharded_matches_monolithic(3, 4);
+    }
+
+    #[test]
+    fn aged_route_bit_identical_to_monolithic_at_age_zero() {
+        // The mortal deployment must cost nothing in accuracy while the
+        // device is fresh: same seed, same substeps, identical rollouts.
+        let mut plain = make_quiet_twin("l96d64/analog");
+        let mut aged = make_quiet_twin("l96d64/analog-aged");
+        for r in &requests("l96d64/analog", 2, 4) {
+            assert_eq!(
+                plain.run(r).unwrap().trajectory,
+                aged.run(r).unwrap().trajectory,
+                "aging bookkeeping changed a fresh device's rollout"
+            );
+        }
     }
 
     fn gate_doc(pairs: &[(&'static str, usize, f64, f64)]) -> Json {

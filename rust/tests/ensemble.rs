@@ -344,6 +344,7 @@ fn ensemble_determinism_seed_echo_regression_serial_fallback() {
                 backend: "lane-echo",
                 seed,
                 ensemble: None,
+                degraded: false,
             })
         }
     }

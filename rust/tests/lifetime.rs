@@ -1,0 +1,142 @@
+//! Device-lifetime integration gates. CI runs this file in release
+//! (`cargo test --release --test lifetime`) next to the determinism
+//! gates; the suite stays debug-cheap (dim-3 decay system, short probe
+//! horizons) so plain `cargo test` covers it too.
+//!
+//! Quiet device + noise-off deployments throughout: programming is exact
+//! and the probe floor is the circuit-vs-RK4 integrator mismatch (pushed
+//! far below every threshold by 100 circuit substeps), so each assertion
+//! isolates one lifetime mechanism — drift, recalibration, yield faults.
+
+use memode::analog::system::AnalogNoise;
+use memode::device::taox::DeviceConfig;
+use memode::models::loader::decay_mlp_weights;
+use memode::twin::health::{probe_mre, LifetimeConfig, MonitoredTwin};
+use memode::twin::lorenz96::Lorenz96Twin;
+use memode::twin::{EnsembleSpec, FaultCampaign, Twin, TwinRequest};
+
+fn quiet() -> DeviceConfig {
+    DeviceConfig {
+        fault_rate: 0.0,
+        pulse_sigma: 0.0,
+        read_noise: 0.0,
+        ..Default::default()
+    }
+}
+
+fn monitored(cfg: LifetimeConfig) -> MonitoredTwin {
+    MonitoredTwin::lorenz96(
+        &decay_mlp_weights(3),
+        &quiet(),
+        AnalogNoise::off(),
+        11,
+        100,
+        cfg,
+    )
+}
+
+/// Probe error of a fresh deployment aged (in one jump) to `age_s`.
+fn aged_probe_error(age_s: f64) -> f64 {
+    let w = decay_mlp_weights(3);
+    let mut analog =
+        Lorenz96Twin::analog_aging(&w, &quiet(), AnalogNoise::off(), 11, 100);
+    let mut digital = Lorenz96Twin::digital(&w);
+    if age_s > 0.0 {
+        analog.advance_age(age_s);
+    }
+    let req = TwinRequest::autonomous(vec![], 50).with_seed(9);
+    probe_mre(
+        &analog.run(&req).unwrap().trajectory,
+        &digital.run(&req).unwrap().trajectory,
+    )
+}
+
+#[test]
+fn probe_error_grows_with_aging_horizon() {
+    let fresh = aged_probe_error(0.0);
+    let mid = aged_probe_error(1e6);
+    let old = aged_probe_error(1e10);
+    // Fresh quiet hardware sits at the integrator floor...
+    assert!(fresh < 5e-3, "floor too high: {fresh}");
+    // ...and the error climbs with the horizon: log-drift plus the
+    // diffusion walk, decades apart so ordering is deterministic in
+    // practice despite the per-cell randomness.
+    assert!(mid > fresh, "1e6 s of aging inert: {mid} vs {fresh}");
+    assert!(old > mid, "1e10 s not worse than 1e6 s: {old} vs {mid}");
+}
+
+#[test]
+fn recalibration_restores_probe_error_on_a_healthy_array() {
+    let mut t = monitored(LifetimeConfig {
+        mre_threshold: 0.005,
+        probe_points: 50,
+        ..Default::default()
+    });
+    t.advance_age(1e10);
+    let after = t.probe_now().unwrap();
+    let s = t.lifetime();
+    assert!(s.recalibrations >= 1, "drift crossed, nobody recalibrated");
+    assert!(s.recal_pulses > 0);
+    assert!(s.recal_energy_j > 0.0, "pulses spent but no energy charged");
+    assert!(after <= 0.005, "recalibration did not restore MRE: {after}");
+    assert!(!s.degraded);
+}
+
+#[test]
+fn over_faulted_array_exhausts_retries_and_degrades() {
+    let mut t = monitored(LifetimeConfig {
+        mre_threshold: 1e-6,
+        max_retries: 2,
+        max_recal_failures: 1,
+        backoff_s: 1.0,
+        ..Default::default()
+    });
+    t.inject_stuck_faults(0.6);
+    let _ = t.probe_now().unwrap();
+    assert!(t.is_degraded(), "stuck-heavy array never gave up");
+    let s = t.lifetime();
+    assert_eq!(s.recal_failures, 1);
+    assert!(s.recalibrations >= 1, "degraded without attempting repair");
+    // Graceful degradation: still serving, from the digital reference,
+    // and every response says so.
+    let r = t.run(&TwinRequest::autonomous(vec![], 5)).unwrap();
+    assert!(r.degraded, "degraded response not flagged");
+    assert_eq!(r.backend, "digital-rk4");
+    assert_eq!(r.trajectory.len(), 5);
+}
+
+#[test]
+fn fault_campaigns_replay_bit_identically_from_the_seed_pair() {
+    let campaign =
+        FaultCampaign::new(99).aged(1e8).with_fault_fraction(0.1);
+    let req = TwinRequest::autonomous(vec![], 6)
+        .with_seed(4242)
+        .with_ensemble(EnsembleSpec::new(4).with_fault_campaign(campaign));
+    let mut a = monitored(LifetimeConfig::default());
+    let mut b = monitored(LifetimeConfig::default());
+    let ra = a.run(&req).unwrap();
+    let rb = b.run(&req).unwrap();
+    assert_eq!(ra.seed, rb.seed, "campaign seed echo not deterministic");
+    assert_eq!(
+        ra.trajectory, rb.trajectory,
+        "campaign not bit-replayable from (request seed, yield seed)"
+    );
+    let (ea, eb) =
+        (ra.ensemble.as_ref().unwrap(), rb.ensemble.as_ref().unwrap());
+    assert_eq!(ea.mean, eb.mean);
+    assert_eq!(ea.std, eb.std);
+    assert_eq!(ea.members, 4);
+    assert_eq!(ra.backend, "analog-aged-campaign");
+    // A different yield seed samples a different device population
+    // (noise is off here, so the yield map is the only random input).
+    let other_yield = TwinRequest::autonomous(vec![], 6)
+        .with_seed(4242)
+        .with_ensemble(EnsembleSpec::new(4).with_fault_campaign(
+            FaultCampaign::new(100).aged(1e8).with_fault_fraction(0.1),
+        ));
+    let rc = a.run(&other_yield).unwrap();
+    assert_ne!(
+        rc.trajectory, ra.trajectory,
+        "yield seed does not reach the sampled hardware"
+    );
+}
