@@ -1,0 +1,23 @@
+//! Standalone load generator for the memode network front door — the
+//! same driver as `memode loadgen`, packaged as its own binary so a
+//! bench box can hammer a remote server without the leader binary's
+//! artifact expectations.
+//!
+//! Usage:
+//!   loadgen [--addr HOST:PORT] [--conns N] [--duration S] [--rate HZ]
+//!           [--steps N] [--seed N] [--routes a,b,...]
+//!           [--ensemble-fraction F] [--ensemble-members N]
+//!           [--max-rejected F] [--out PATH] [--smoke]
+//!
+//! Reports p50/p99/p99.9 latency, throughput and the rejected fraction
+//! into `BENCH_serve.json` (see `docs/SERVING.md`); exits non-zero on
+//! wire-level protocol errors or a rejected fraction past
+//! `--max-rejected`.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = memode::coordinator::loadgen::cli("loadgen", argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -22,8 +22,13 @@ pub struct ServeConfig {
     pub max_batch: usize,
     /// Batching window (s): wait this long to fill a batch.
     pub batch_window_s: f64,
-    /// Bounded queue depth per worker (backpressure threshold).
+    /// Global in-flight cap at the admission gate (backpressure
+    /// threshold).
     pub queue_depth: usize,
+    /// Per-route in-flight cap at the admission gate: one hot route can
+    /// claim at most this many of the `queue_depth` slots, so it cannot
+    /// starve every other route out of the global budget.
+    pub route_queue_depth: usize,
 }
 
 impl Default for ServeConfig {
@@ -33,6 +38,29 @@ impl Default for ServeConfig {
             max_batch: 32,
             batch_window_s: 2e-3,
             queue_depth: 128,
+            route_queue_depth: 64,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Apply `MEMODE_*` environment overrides on top of the configured
+    /// values — the operator knobs `memode serve` documents in
+    /// `docs/SERVING.md`: `MEMODE_WORKERS`, `MEMODE_QUEUE_DEPTH`,
+    /// `MEMODE_ROUTE_QUEUE_DEPTH`. Unset or unparsable variables keep
+    /// the current value.
+    pub fn apply_env(&mut self) {
+        let read = |name: &str| -> Option<usize> {
+            std::env::var(name).ok()?.trim().parse().ok()
+        };
+        if let Some(v) = read("MEMODE_WORKERS") {
+            self.workers = v;
+        }
+        if let Some(v) = read("MEMODE_QUEUE_DEPTH") {
+            self.queue_depth = v;
+        }
+        if let Some(v) = read("MEMODE_ROUTE_QUEUE_DEPTH") {
+            self.route_queue_depth = v;
         }
     }
 }
@@ -114,6 +142,10 @@ impl SystemConfig {
                 f(s.get("batch_window_s"), cfg.serve.batch_window_s);
             cfg.serve.queue_depth =
                 u(s.get("queue_depth"), cfg.serve.queue_depth);
+            cfg.serve.route_queue_depth = u(
+                s.get("route_queue_depth"),
+                cfg.serve.route_queue_depth,
+            );
         }
         cfg
     }
@@ -159,6 +191,10 @@ impl SystemConfig {
                         "queue_depth",
                         Json::Num(self.serve.queue_depth as f64),
                     ),
+                    (
+                        "route_queue_depth",
+                        Json::Num(self.serve.route_queue_depth as f64),
+                    ),
                 ]),
             ),
         ])
@@ -189,6 +225,23 @@ mod tests {
         assert_eq!(c2.serve.workers, 7);
         assert_eq!(c2.seed, 99);
         assert_eq!(c2.device.levels, c.device.levels);
+    }
+
+    #[test]
+    fn route_queue_depth_roundtrips_and_defaults() {
+        let mut c = SystemConfig::default();
+        assert_eq!(c.serve.route_queue_depth, 64);
+        c.serve.route_queue_depth = 9;
+        let c2 = SystemConfig::from_json(&c.to_json());
+        assert_eq!(c2.serve.route_queue_depth, 9);
+        // Old configs without the key keep the default.
+        let doc = crate::util::json::parse(
+            r#"{"serve": {"queue_depth": 3}}"#,
+        )
+        .unwrap();
+        let c3 = SystemConfig::from_json(&doc);
+        assert_eq!(c3.serve.queue_depth, 3);
+        assert_eq!(c3.serve.route_queue_depth, 64);
     }
 
     #[test]

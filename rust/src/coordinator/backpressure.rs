@@ -1,31 +1,73 @@
-//! Global admission control: a bounded in-flight budget with fail-fast
-//! rejection (shed load at the door rather than queue unboundedly — the
-//! streaming-ingestion discipline a digital-twin front end needs when
-//! sensor bursts exceed solver throughput).
+//! Admission control: a bounded global in-flight budget plus optional
+//! per-route bounds, with fail-fast rejection (shed load at the door
+//! rather than queue unboundedly — the streaming-ingestion discipline a
+//! digital-twin front end needs when sensor bursts exceed solver
+//! throughput).
+//!
+//! Two gates stack:
+//!
+//! * the **global** gate caps total in-flight requests (a lock-free CAS
+//!   counter — the hot path when per-route bounds are off);
+//! * the **per-route** gate caps any single route's share, so one hot
+//!   route saturating its twins cannot starve every other route out of
+//!   the global budget.
+//!
+//! [`Backpressure::try_acquire_route`] reports *which* gate shed via
+//! [`Shed`], so the serving layer can type its rejection responses.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Shared in-flight budget.
 #[derive(Debug)]
 pub struct Backpressure {
     in_flight: AtomicUsize,
     limit: usize,
+    /// Per-route in-flight cap; `usize::MAX` disables the route gate
+    /// (and its map bookkeeping) entirely.
+    route_limit: usize,
+    routes: Mutex<BTreeMap<String, usize>>,
 }
 
-/// RAII permit: releases its slot on drop.
+/// Why an admission attempt was shed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Shed {
+    /// The global in-flight budget is exhausted.
+    Global { in_flight: usize, limit: usize },
+    /// This route's share of the budget is exhausted (the global gate
+    /// still had room).
+    Route { route: String, in_flight: usize, limit: usize },
+}
+
+/// RAII permit: releases its slot(s) on drop.
 pub struct Permit {
     ctrl: Arc<Backpressure>,
+    /// `Some` iff this permit also holds a per-route slot.
+    route: Option<String>,
 }
 
 impl Backpressure {
+    /// Global gate only (per-route bounds disabled).
     pub fn new(limit: usize) -> Arc<Self> {
-        assert!(limit > 0, "backpressure limit must be positive");
-        Arc::new(Self { in_flight: AtomicUsize::new(0), limit })
+        Self::with_route_limit(limit, usize::MAX)
     }
 
-    /// Try to admit one request; `None` means shed.
-    pub fn try_acquire(self: &Arc<Self>) -> Option<Permit> {
+    /// Global gate plus a per-route in-flight cap.
+    pub fn with_route_limit(limit: usize, route_limit: usize) -> Arc<Self> {
+        assert!(limit > 0, "backpressure limit must be positive");
+        assert!(route_limit > 0, "route limit must be positive");
+        Arc::new(Self {
+            in_flight: AtomicUsize::new(0),
+            limit,
+            route_limit,
+            routes: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    /// Reserve one global slot (CAS loop); `None` means the budget is
+    /// exhausted.
+    fn acquire_global(self: &Arc<Self>) -> Option<Permit> {
         let mut cur = self.in_flight.load(Ordering::Relaxed);
         loop {
             if cur >= self.limit {
@@ -37,10 +79,50 @@ impl Backpressure {
                 Ordering::AcqRel,
                 Ordering::Relaxed,
             ) {
-                Ok(_) => return Some(Permit { ctrl: Arc::clone(self) }),
+                Ok(_) => {
+                    return Some(Permit {
+                        ctrl: Arc::clone(self),
+                        route: None,
+                    })
+                }
                 Err(now) => cur = now,
             }
         }
+    }
+
+    /// Try to admit one request against the global gate only; `None`
+    /// means shed. (The network layer uses this for its connection cap.)
+    pub fn try_acquire(self: &Arc<Self>) -> Option<Permit> {
+        self.acquire_global()
+    }
+
+    /// Try to admit one request on `route` against both gates. The error
+    /// names the gate that shed, so rejections can be typed per scope.
+    pub fn try_acquire_route(
+        self: &Arc<Self>,
+        route: &str,
+    ) -> Result<Permit, Shed> {
+        let mut permit = self.acquire_global().ok_or_else(|| {
+            Shed::Global { in_flight: self.in_flight(), limit: self.limit }
+        })?;
+        if self.route_limit == usize::MAX {
+            return Ok(permit);
+        }
+        let mut map = self.routes.lock().expect("backpressure lock");
+        let count = map.entry(route.to_owned()).or_insert(0);
+        if *count >= self.route_limit {
+            let in_flight = *count;
+            drop(map);
+            // `permit` drops here, releasing the global slot.
+            return Err(Shed::Route {
+                route: route.to_owned(),
+                in_flight,
+                limit: self.route_limit,
+            });
+        }
+        *count += 1;
+        permit.route = Some(route.to_owned());
+        Ok(permit)
     }
 
     pub fn in_flight(&self) -> usize {
@@ -50,10 +132,35 @@ impl Backpressure {
     pub fn limit(&self) -> usize {
         self.limit
     }
+
+    /// Per-route cap (`usize::MAX` when the route gate is off).
+    pub fn route_limit(&self) -> usize {
+        self.route_limit
+    }
+
+    /// Current in-flight count on one route (0 when the route gate is
+    /// off — only route-gated permits are tracked per route).
+    pub fn route_in_flight(&self, route: &str) -> usize {
+        self.routes
+            .lock()
+            .expect("backpressure lock")
+            .get(route)
+            .copied()
+            .unwrap_or(0)
+    }
 }
 
 impl Drop for Permit {
     fn drop(&mut self) {
+        if let Some(route) = self.route.take() {
+            let mut map = self.ctrl.routes.lock().expect("backpressure lock");
+            if let Some(count) = map.get_mut(&route) {
+                *count -= 1;
+                if *count == 0 {
+                    map.remove(&route);
+                }
+            }
+        }
         self.ctrl.in_flight.fetch_sub(1, Ordering::AcqRel);
     }
 }
@@ -110,5 +217,116 @@ mod tests {
     #[should_panic(expected = "positive")]
     fn zero_limit_rejected() {
         let _ = Backpressure::new(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "route limit")]
+    fn zero_route_limit_rejected() {
+        let _ = Backpressure::with_route_limit(4, 0);
+    }
+
+    #[test]
+    fn route_gate_bounds_one_route_without_starving_others() {
+        let bp = Backpressure::with_route_limit(8, 2);
+        let a1 = bp.try_acquire_route("hot").unwrap();
+        let _a2 = bp.try_acquire_route("hot").unwrap();
+        // Third "hot" request sheds at the route gate, not the global one.
+        match bp.try_acquire_route("hot") {
+            Err(Shed::Route { route, in_flight, limit }) => {
+                assert_eq!(route, "hot");
+                assert_eq!(in_flight, 2);
+                assert_eq!(limit, 2);
+            }
+            other => panic!("expected route shed, got {other:?}"),
+        }
+        // A route-gate shed must not leak its global slot.
+        assert_eq!(bp.in_flight(), 2);
+        // Other routes still admit.
+        let _b = bp.try_acquire_route("cold").unwrap();
+        assert_eq!(bp.route_in_flight("cold"), 1);
+        // Releasing a "hot" permit reopens the route.
+        drop(a1);
+        assert_eq!(bp.route_in_flight("hot"), 1);
+        assert!(bp.try_acquire_route("hot").is_ok());
+    }
+
+    #[test]
+    fn global_gate_sheds_before_route_gate() {
+        let bp = Backpressure::with_route_limit(2, 2);
+        let _a = bp.try_acquire_route("a").unwrap();
+        let _b = bp.try_acquire_route("b").unwrap();
+        match bp.try_acquire_route("c") {
+            Err(Shed::Global { limit, .. }) => assert_eq!(limit, 2),
+            other => panic!("expected global shed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn route_bookkeeping_empties_when_idle() {
+        let bp = Backpressure::with_route_limit(4, 2);
+        let p = bp.try_acquire_route("r").unwrap();
+        assert_eq!(bp.route_in_flight("r"), 1);
+        drop(p);
+        assert_eq!(bp.route_in_flight("r"), 0);
+        assert_eq!(bp.in_flight(), 0);
+        // The map entry is removed, not left at zero.
+        assert!(bp.routes.lock().unwrap().is_empty());
+    }
+
+    #[test]
+    fn disabled_route_gate_skips_bookkeeping() {
+        let bp = Backpressure::new(4);
+        let _p = bp.try_acquire_route("r").unwrap();
+        assert_eq!(bp.route_limit(), usize::MAX);
+        assert_eq!(bp.route_in_flight("r"), 0);
+        assert_eq!(bp.in_flight(), 1);
+    }
+
+    #[test]
+    fn concurrent_route_admission_never_exceeds_route_limit() {
+        let bp = Backpressure::with_route_limit(64, 4);
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let bp = Arc::clone(&bp);
+            handles.push(std::thread::spawn(move || {
+                let mut max_seen = 0usize;
+                for _ in 0..5_000 {
+                    if let Ok(_p) = bp.try_acquire_route("shared") {
+                        max_seen = max_seen.max(bp.route_in_flight("shared"));
+                    }
+                }
+                max_seen
+            }));
+        }
+        for h in handles {
+            let max_seen = h.join().unwrap();
+            assert!(max_seen <= 4, "route limit exceeded: {max_seen}");
+        }
+        assert_eq!(bp.in_flight(), 0);
+        assert_eq!(bp.route_in_flight("shared"), 0);
+    }
+
+    #[test]
+    fn shed_rate_measured_at_the_gate() {
+        // Drive a bounded gate past saturation and check the arithmetic
+        // the serving layer reports: admitted + shed == offered, and the
+        // shed fraction is exactly the overflow.
+        let bp = Backpressure::with_route_limit(16, 4);
+        let mut held = Vec::new();
+        let (mut admitted, mut shed) = (0u64, 0u64);
+        for _ in 0..10 {
+            match bp.try_acquire_route("r") {
+                Ok(p) => {
+                    admitted += 1;
+                    held.push(p);
+                }
+                Err(_) => shed += 1,
+            }
+        }
+        assert_eq!(admitted, 4);
+        assert_eq!(shed, 6);
+        assert_eq!(admitted + shed, 10);
+        let frac = shed as f64 / (admitted + shed) as f64;
+        assert!((frac - 0.6).abs() < 1e-12);
     }
 }

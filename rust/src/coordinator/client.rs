@@ -1,0 +1,100 @@
+//! A small blocking client for the wire protocol — what the load
+//! generator, the CLI and the socket tests speak to a running server.
+//!
+//! One [`WireClient`] is one TCP connection. Requests can be pipelined:
+//! `send` several, then `recv` responses as they arrive (the server
+//! answers per-request, so responses are matched by `id`, not order —
+//! batching and scheduling may reorder completions).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::wire::{self, WireRequest, WireResponse};
+
+/// Default per-read timeout: a stuck server fails the client loudly
+/// instead of hanging it.
+const DEFAULT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// A blocking protocol client over one TCP connection.
+pub struct WireClient {
+    stream: TcpStream,
+}
+
+impl WireClient {
+    /// Connect to `addr` (e.g. `"127.0.0.1:7171"`) with the default
+    /// read timeout.
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to {addr}"))?;
+        stream
+            .set_read_timeout(Some(DEFAULT_TIMEOUT))
+            .context("setting the read timeout")?;
+        let _ = stream.set_nodelay(true);
+        Ok(Self { stream })
+    }
+
+    /// Override the per-read timeout (`None` blocks forever).
+    pub fn set_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        self.stream
+            .set_read_timeout(timeout)
+            .context("setting the read timeout")
+    }
+
+    /// Encode + frame + send one request (non-blocking submit is the
+    /// server's job; this just writes the bytes).
+    pub fn send(&mut self, req: &WireRequest) -> Result<()> {
+        self.send_raw(&wire::encode_request(req))
+    }
+
+    /// Send a raw payload verbatim (protocol tests use this to send
+    /// malformed frames).
+    pub fn send_raw(&mut self, payload: &str) -> Result<()> {
+        self.stream
+            .write_all(&wire::encode_frame(payload))
+            .context("writing a frame")
+    }
+
+    /// Block for the next response frame and decode it.
+    pub fn recv(&mut self) -> Result<WireResponse> {
+        let mut header = [0u8; 4];
+        self.stream
+            .read_exact(&mut header)
+            .context("reading a frame header")?;
+        let len = u32::from_be_bytes(header) as usize;
+        if len > wire::MAX_FRAME_BYTES {
+            bail!(
+                "server sent a {len}-byte frame (limit {})",
+                wire::MAX_FRAME_BYTES
+            );
+        }
+        let mut payload = vec![0u8; len];
+        self.stream
+            .read_exact(&mut payload)
+            .context("reading a frame payload")?;
+        wire::decode_response(&payload)
+            .map_err(|e| anyhow::anyhow!("decoding a response: {e}"))
+    }
+
+    /// Send one request and block for one response (the common
+    /// request/reply pattern; responses to pipelined requests should be
+    /// matched by `id` instead).
+    pub fn call(&mut self, req: &WireRequest) -> Result<WireResponse> {
+        self.send(req)?;
+        self.recv()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn connect_to_nothing_fails_loudly() {
+        // Port 1 on localhost is essentially never listening.
+        let err = WireClient::connect("127.0.0.1:1").unwrap_err();
+        assert!(err.to_string().contains("127.0.0.1:1"));
+    }
+}

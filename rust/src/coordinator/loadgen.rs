@@ -1,0 +1,479 @@
+//! Closed-loop load generator for the network front door.
+//!
+//! `memode loadgen` (and the standalone `loadgen` binary) drives a
+//! running server over real TCP: N concurrent connections, each issuing
+//! a **seeded, deterministic request mix** (plain rollouts, Monte-Carlo
+//! ensembles, and the aged route when present) and measuring
+//! request→response latency. An optional open-loop arrival rate paces
+//! each connection's next send instead of going back-to-back.
+//!
+//! The report lands in `BENCH_serve.json` (machine-local, gitignored —
+//! CI uploads it as an artifact like the other `BENCH_*` documents):
+//! p50/p99/p999 latency, throughput, and the **rejected fraction** —
+//! the share of requests the server shed with `rejected_overload`,
+//! which is the admission-control signal an operator tunes
+//! `MEMODE_QUEUE_DEPTH` / `MEMODE_ROUTE_QUEUE_DEPTH` against.
+//!
+//! Request ids encode `(connection, sequence)` so every id in a serving
+//! log maps back to one loadgen decision; the mix itself derives from
+//! `--seed`, making a run reproducible end to end.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::client::WireClient;
+use crate::coordinator::wire::{ErrorCode, WireRequest, WireResponse};
+use crate::twin::{EnsembleSpec, TwinRequest};
+use crate::util::json::Json;
+use crate::util::rng::{derive_stream_seed, Pcg64};
+use crate::util::stats;
+use crate::workload::stimuli::Waveform;
+
+/// Load-generator parameters.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Server address, e.g. `"127.0.0.1:7171"`.
+    pub addr: String,
+    /// Concurrent connections (one thread each).
+    pub conns: usize,
+    /// Run length (s).
+    pub duration_s: f64,
+    /// Open-loop arrival rate per connection (requests/s); 0 = closed
+    /// loop (send the next request as soon as the response arrives).
+    pub rate_hz: f64,
+    /// Trajectory points per request.
+    pub steps: usize,
+    /// Root seed of the request mix (route choice, ensemble cadence,
+    /// request seeds all derive from it).
+    pub seed: u64,
+    /// Route mix to sample from (weighted uniformly).
+    pub routes: Vec<String>,
+    /// Fraction of requests carrying an ensemble spec (0.0..=1.0).
+    pub ensemble_fraction: f64,
+    /// Ensemble width for those requests.
+    pub ensemble_members: usize,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7171".into(),
+            conns: 4,
+            duration_s: 10.0,
+            rate_hz: 0.0,
+            steps: 32,
+            seed: 42,
+            routes: vec![
+                "lorenz96/digital".into(),
+                "lorenz96/analog".into(),
+                "lorenz96/analog-aged".into(),
+                "hp/digital".into(),
+            ],
+            ensemble_fraction: 0.2,
+            ensemble_members: 8,
+        }
+    }
+}
+
+/// What one run measured.
+#[derive(Debug, Clone, Default)]
+pub struct LoadgenReport {
+    /// Requests sent.
+    pub sent: u64,
+    /// `ok:true` responses.
+    pub ok: u64,
+    /// `rejected_overload` responses (admission-control sheds).
+    pub rejected: u64,
+    /// Other typed error responses (`internal`, `unknown_route`, ...).
+    pub errors: u64,
+    /// Wire-level failures: undecodable frames, dropped connections,
+    /// timeouts. A healthy server keeps this at zero.
+    pub protocol_errors: u64,
+    /// Latency percentiles over completed request→response pairs (µs).
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub p999_us: f64,
+    pub mean_us: f64,
+    /// Completed responses per second of wall time.
+    pub throughput_rps: f64,
+    /// Measured wall time (s).
+    pub duration_s: f64,
+}
+
+impl LoadgenReport {
+    /// Share of sent requests the server shed at an admission gate.
+    pub fn rejected_fraction(&self) -> f64 {
+        if self.sent == 0 {
+            return 0.0;
+        }
+        self.rejected as f64 / self.sent as f64
+    }
+
+    /// Serialise to the tracked-benchmark JSON document.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bench", Json::Str("serve".into())),
+            ("sent", Json::Num(self.sent as f64)),
+            ("ok", Json::Num(self.ok as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("errors", Json::Num(self.errors as f64)),
+            ("protocol_errors", Json::Num(self.protocol_errors as f64)),
+            ("p50_us", Json::Num(self.p50_us)),
+            ("p99_us", Json::Num(self.p99_us)),
+            ("p999_us", Json::Num(self.p999_us)),
+            ("mean_us", Json::Num(self.mean_us)),
+            ("throughput_rps", Json::Num(self.throughput_rps)),
+            ("duration_s", Json::Num(self.duration_s)),
+            ("rejected_fraction", Json::Num(self.rejected_fraction())),
+        ])
+    }
+}
+
+/// Where the report lands: `$BENCH_SERVE_OUT` if set, else
+/// `BENCH_serve.json` at the repository root.
+pub fn default_json_path() -> PathBuf {
+    if let Ok(p) = std::env::var("BENCH_SERVE_OUT") {
+        return PathBuf::from(p);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_serve.json")
+}
+
+/// Write the report JSON.
+pub fn write_json(
+    path: &std::path::Path,
+    report: &LoadgenReport,
+) -> Result<()> {
+    crate::util::json::to_file(path, &report.to_json())
+}
+
+/// Shared CLI driver behind `memode loadgen` and the standalone
+/// `loadgen` binary (one flag surface, two entry points).
+///
+/// Exit contract (what CI gates on): non-zero when the server produced
+/// wire-level protocol errors, when `--max-rejected` is exceeded, or
+/// when a `--smoke` run completes zero requests.
+pub fn cli(prog: &str, argv: Vec<String>) -> Result<()> {
+    let defaults = LoadgenConfig::default();
+    let args = crate::util::cli::Args::new(
+        prog,
+        "drive a running memode server over TCP and report latency",
+    )
+    .opt("addr", &defaults.addr, "server address")
+    .opt("conns", "4", "concurrent connections (one thread each)")
+    .opt("duration", "10", "run length (s)")
+    .opt(
+        "rate",
+        "0",
+        "open-loop arrival rate per connection (req/s; 0 = closed loop)",
+    )
+    .opt("steps", "32", "trajectory points per request")
+    .opt("seed", "42", "root seed of the request mix")
+    .opt(
+        "routes",
+        "lorenz96/digital,lorenz96/analog,lorenz96/analog-aged,hp/digital",
+        "comma-separated route mix",
+    )
+    .opt(
+        "ensemble-fraction",
+        "0.2",
+        "fraction of requests carrying a Monte-Carlo ensemble",
+    )
+    .opt("ensemble-members", "8", "ensemble width for those requests")
+    .opt(
+        "max-rejected",
+        "",
+        "fail when the rejected fraction exceeds this (e.g. 0.05)",
+    )
+    .opt(
+        "out",
+        "",
+        "report path (default $BENCH_SERVE_OUT, else BENCH_serve.json)",
+    )
+    .flag("smoke", "CI preset: 2 connections, 3 s, 8 steps, must serve")
+    .parse(argv)
+    .map_err(|m| anyhow::anyhow!("{m}"))?;
+
+    let smoke = args.get_bool("smoke");
+    let cfg = LoadgenConfig {
+        addr: args.get("addr"),
+        conns: if smoke { 2 } else { args.get_usize("conns") },
+        duration_s: if smoke { 3.0 } else { args.get_f64("duration") },
+        rate_hz: args.get_f64("rate"),
+        steps: if smoke { 8 } else { args.get_usize("steps") },
+        seed: args.get_u64("seed"),
+        routes: args
+            .get("routes")
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect(),
+        ensemble_fraction: args.get_f64("ensemble-fraction"),
+        ensemble_members: args.get_usize("ensemble-members"),
+    };
+    let report = run(&cfg)?;
+    println!(
+        "loadgen: {} sent, {} ok, {} rejected (fraction {:.3}), {} \
+         errors, {} wire errors in {:.2}s",
+        report.sent,
+        report.ok,
+        report.rejected,
+        report.rejected_fraction(),
+        report.errors,
+        report.protocol_errors,
+        report.duration_s
+    );
+    println!(
+        "latency µs: p50 {:.0} | p99 {:.0} | p99.9 {:.0} | mean {:.0} \
+         ({:.1} req/s)",
+        report.p50_us,
+        report.p99_us,
+        report.p999_us,
+        report.mean_us,
+        report.throughput_rps
+    );
+    let out = match args.get("out").as_str() {
+        "" => default_json_path(),
+        p => PathBuf::from(p),
+    };
+    write_json(&out, &report)?;
+    println!("report -> {}", out.display());
+
+    anyhow::ensure!(
+        report.protocol_errors == 0,
+        "{} wire-level protocol errors (healthy servers report zero)",
+        report.protocol_errors
+    );
+    let max_rejected = args.get("max-rejected");
+    if !max_rejected.is_empty() {
+        let cap: f64 = max_rejected
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--max-rejected: {e}"))?;
+        anyhow::ensure!(
+            report.rejected_fraction() <= cap,
+            "rejected fraction {:.3} exceeds --max-rejected {cap}",
+            report.rejected_fraction()
+        );
+    }
+    if smoke {
+        anyhow::ensure!(
+            report.ok > 0,
+            "smoke run completed zero requests against {}",
+            cfg.addr
+        );
+    }
+    Ok(())
+}
+
+/// One worker thread's tally, merged into the final report.
+#[derive(Default)]
+struct WorkerTally {
+    sent: u64,
+    ok: u64,
+    rejected: u64,
+    errors: u64,
+    protocol_errors: u64,
+    latencies_us: Vec<f64>,
+}
+
+/// Build request `seq` of connection `conn` — pure function of the
+/// config seed, so a run's mix is reproducible.
+fn build_request(
+    cfg: &LoadgenConfig,
+    rng: &mut Pcg64,
+    conn: usize,
+    seq: u64,
+) -> WireRequest {
+    let route = cfg.routes[rng.below(cfg.routes.len() as u64) as usize]
+        .clone();
+    // Driven twins (hp/*) need a stimulus; autonomous ones ignore it.
+    let mut req = if route.starts_with("hp/") {
+        TwinRequest::driven(
+            Vec::new(),
+            cfg.steps.max(2),
+            Waveform::sine(1.0, 4.0),
+        )
+    } else {
+        TwinRequest::autonomous(Vec::new(), cfg.steps.max(2))
+    }
+    .with_seed(derive_stream_seed(cfg.seed, ((conn as u64) << 32) | seq));
+    if cfg.ensemble_members > 0 && rng.uniform() < cfg.ensemble_fraction {
+        req = req
+            .with_ensemble(EnsembleSpec::new(cfg.ensemble_members.max(1)));
+    }
+    // Ids encode (connection, sequence): unique across the whole run.
+    WireRequest { id: ((conn as u64) << 32) | seq, route, req }
+}
+
+/// Classify one response into the tally.
+fn record(tally: &mut WorkerTally, resp: Result<WireResponse>, t0: Instant) {
+    match resp {
+        Ok(WireResponse::Ok(_)) => {
+            tally.ok += 1;
+            tally
+                .latencies_us
+                .push(t0.elapsed().as_secs_f64() * 1e6);
+        }
+        Ok(WireResponse::Err(e)) => {
+            if e.code == ErrorCode::RejectedOverload {
+                tally.rejected += 1;
+            } else {
+                tally.errors += 1;
+            }
+            tally
+                .latencies_us
+                .push(t0.elapsed().as_secs_f64() * 1e6);
+        }
+        Err(_) => tally.protocol_errors += 1,
+    }
+}
+
+/// Drive the server at `cfg.addr` and return the merged report.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+    anyhow::ensure!(cfg.conns >= 1, "loadgen needs >= 1 connection");
+    anyhow::ensure!(!cfg.routes.is_empty(), "loadgen needs >= 1 route");
+    let started = Instant::now();
+    let deadline = started + Duration::from_secs_f64(cfg.duration_s.max(0.0));
+    let mut handles = Vec::new();
+    for conn in 0..cfg.conns {
+        let cfg = cfg.clone();
+        handles.push(std::thread::spawn(move || -> Result<WorkerTally> {
+            let mut client = WireClient::connect(&cfg.addr)?;
+            let mut rng =
+                Pcg64::new(derive_stream_seed(cfg.seed, conn as u64), 1);
+            let mut tally = WorkerTally::default();
+            let pace = if cfg.rate_hz > 0.0 {
+                Some(Duration::from_secs_f64(1.0 / cfg.rate_hz))
+            } else {
+                None
+            };
+            let mut next_send = Instant::now();
+            let mut seq = 0u64;
+            while Instant::now() < deadline {
+                if let Some(gap) = pace {
+                    let now = Instant::now();
+                    if now < next_send {
+                        std::thread::sleep(next_send - now);
+                    }
+                    next_send += gap;
+                }
+                seq += 1;
+                let w = build_request(&cfg, &mut rng, conn, seq);
+                let t0 = Instant::now();
+                tally.sent += 1;
+                record(&mut tally, client.call(&w), t0);
+            }
+            Ok(tally)
+        }));
+    }
+    let mut report = LoadgenReport::default();
+    let mut latencies = Vec::new();
+    for h in handles {
+        let tally = h
+            .join()
+            .map_err(|_| anyhow::anyhow!("loadgen worker panicked"))?
+            .context("loadgen worker failed")?;
+        report.sent += tally.sent;
+        report.ok += tally.ok;
+        report.rejected += tally.rejected;
+        report.errors += tally.errors;
+        report.protocol_errors += tally.protocol_errors;
+        latencies.extend(tally.latencies_us);
+    }
+    report.duration_s = started.elapsed().as_secs_f64();
+    if !latencies.is_empty() {
+        report.p50_us = stats::percentile(&latencies, 50.0);
+        report.p99_us = stats::percentile(&latencies, 99.0);
+        report.p999_us = stats::percentile(&latencies, 99.9);
+        report.mean_us =
+            latencies.iter().sum::<f64>() / latencies.len() as f64;
+        report.throughput_rps =
+            latencies.len() as f64 / report.duration_s.max(1e-9);
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_mix_is_deterministic_per_seed() {
+        let cfg = LoadgenConfig {
+            ensemble_fraction: 0.5,
+            ..LoadgenConfig::default()
+        };
+        let build = |seed: u64| -> Vec<(u64, String, Option<usize>)> {
+            let mut rng = Pcg64::new(derive_stream_seed(seed, 0), 1);
+            (1..=16)
+                .map(|seq| {
+                    let w = build_request(&cfg, &mut rng, 0, seq);
+                    (
+                        w.id,
+                        w.route,
+                        w.req.ensemble.map(|e| e.members),
+                    )
+                })
+                .collect()
+        };
+        assert_eq!(build(42), build(42), "same seed, same mix");
+        // The mix actually exercises ensembles at this fraction.
+        let mix = build(42);
+        assert!(mix.iter().any(|(_, _, e)| e.is_some()));
+        assert!(mix.iter().any(|(_, _, e)| e.is_none()));
+    }
+
+    #[test]
+    fn ids_encode_connection_and_sequence() {
+        let cfg = LoadgenConfig::default();
+        let mut rng = Pcg64::new(1, 1);
+        let w = build_request(&cfg, &mut rng, 3, 17);
+        assert_eq!(w.id, (3u64 << 32) | 17);
+        // Request seeds are pinned (stamped client-side, replayable).
+        assert!(w.req.seed.is_some());
+    }
+
+    #[test]
+    fn report_arithmetic_and_json_shape() {
+        let report = LoadgenReport {
+            sent: 10,
+            ok: 7,
+            rejected: 2,
+            errors: 1,
+            p50_us: 100.0,
+            p99_us: 400.0,
+            p999_us: 900.0,
+            ..LoadgenReport::default()
+        };
+        assert!((report.rejected_fraction() - 0.2).abs() < 1e-12);
+        let j = report.to_json();
+        assert_eq!(j.get("sent").and_then(Json::as_f64), Some(10.0));
+        assert_eq!(
+            j.get("rejected_fraction").and_then(Json::as_f64),
+            Some(0.2)
+        );
+        assert_eq!(j.get("p999_us").and_then(Json::as_f64), Some(900.0));
+        // Empty runs divide to zero, not NaN.
+        assert_eq!(LoadgenReport::default().rejected_fraction(), 0.0);
+    }
+
+    #[test]
+    fn zero_duration_run_reports_cleanly_against_nothing() {
+        // duration 0 => the workers exit before sending; no server
+        // needed beyond the TCP connect, so point at a bound listener.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let cfg = LoadgenConfig {
+            addr: listener.local_addr().unwrap().to_string(),
+            conns: 2,
+            duration_s: 0.0,
+            ..LoadgenConfig::default()
+        };
+        let report = run(&cfg).unwrap();
+        assert_eq!(report.sent, 0);
+        assert_eq!(report.protocol_errors, 0);
+        assert_eq!(report.rejected_fraction(), 0.0);
+    }
+}

@@ -4,12 +4,19 @@
 //! Architecture (std-thread + mpsc; tokio is not available offline):
 //!
 //! ```text
-//!   clients ──> Router ──> Batcher ──> Scheduler ──> Worker pool
-//!                 │ admission           (least-loaded)   │ owns twin
-//!                 └ Backpressure                          │ instances
-//!                        Telemetry <──────────────────────┘
+//!   TCP clients ──> Net ──> Router ──> Batcher ──> Scheduler ──> Workers
+//!   (wire proto)    │ conn     │ admission          (least-loaded) │ own
+//!                   │ cap      └ Backpressure                      │ twins
+//!                   └────────────> Telemetry <────────────────────┘
 //! ```
 //!
+//! * [`net`]          — non-blocking TCP front door (poll loop over
+//!   `std::net`) with a connection cap and graceful drain
+//! * [`wire`]         — the length-prefixed JSON protocol
+//!   (`docs/PROTOCOL.md`), shared by server and client
+//! * [`client`]       — blocking protocol client (loadgen, CLI, tests)
+//! * [`loadgen`]      — closed-loop load generator reporting
+//!   p50/p99/p999 + rejected fraction into `BENCH_serve.json`
 //! * [`router`]       — route-key validation + admission control
 //! * [`batcher`]      — groups same-route requests within a time window up
 //!   to `max_batch`
@@ -17,16 +24,26 @@
 //!   worker executes a whole batch as **one `Twin::run_batch` call**, so
 //!   batched backends roll all coalesced trajectories out together (one
 //!   multi-vector crossbar read / GEMM per step) instead of looping jobs
-//! * [`backpressure`] — global in-flight cap with fail-fast admission
+//! * [`backpressure`] — global + per-route in-flight caps with fail-fast,
+//!   typed admission
 //! * [`telemetry`]    — counters + latency distributions
 //! * [`service`]      — wires everything; public submit/blocking API
+//!
+//! In-process callers use [`service::Coordinator`] directly; network
+//! callers speak the wire protocol to [`net::NetServer`], which is a
+//! thin translation layer onto the same `try_submit` path (one
+//! admission discipline, whichever door a request came through).
 
 pub mod backpressure;
 pub mod batcher;
+pub mod client;
+pub mod loadgen;
+pub mod net;
 pub mod router;
 pub mod scheduler;
 pub mod service;
 pub mod telemetry;
+pub mod wire;
 
 use std::sync::mpsc;
 use std::time::Instant;

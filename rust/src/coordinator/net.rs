@@ -1,0 +1,726 @@
+//! The network front door: a non-blocking TCP server speaking the
+//! length-prefixed JSON protocol of [`crate::coordinator::wire`].
+//!
+//! Deliberately hand-rolled on `std::net` (the offline image has no
+//! async runtime or poll crate): one server thread owns a non-blocking
+//! listener and every connection, and turns over a poll loop —
+//!
+//! 1. **accept** new sockets (a connection cap sheds excess ones with a
+//!    typed `rejected_overload` frame before closing);
+//! 2. **read** whatever bytes each socket has, extracting complete
+//!    frames;
+//! 3. **process** each frame: decode, stamp a replay seed, submit to
+//!    the coordinator ([`Coordinator::try_submit`]), mapping typed
+//!    rejections onto protocol error codes;
+//! 4. **poll** in-flight jobs (`try_recv` on each pending reply
+//!    channel) and queue finished responses;
+//! 5. **write** queued bytes back without blocking.
+//!
+//! Admission control composes two [`Backpressure`] gates: the server's
+//! own connection cap, and the coordinator's global + per-route
+//! in-flight budget (requests shed there are answered with
+//! `rejected_overload` and recorded in the per-route shed counters).
+//!
+//! **Seed stamping happens before admission.** A seedless request gets
+//! `derive_stream_seed(NET_SEED_ROOT, id)` the moment it decodes, so
+//! even a request the admission gate rejects echoes the seed it *would
+//! have* used — an operator can replay any request in a serving log,
+//! shed or served (`ok:false` frames carry `"seed"` too).
+//!
+//! **Graceful drain**: [`NetHandle::shutdown`] stops accepting, answers
+//! new frames with `shutting_down`, waits for in-flight jobs to finish
+//! and flushes their responses (bounded by `drain_timeout_s`), then
+//! closes everything and returns the final [`NetStats`].
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::backpressure::{Backpressure, Permit};
+use crate::coordinator::router::{SubmitError, Submitted};
+use crate::coordinator::service::Coordinator;
+use crate::coordinator::telemetry::Telemetry;
+use crate::coordinator::wire::{self, ErrorCode};
+use crate::util::rng::derive_stream_seed;
+
+/// Root of the network layer's pre-admission seed family (fixed
+/// constant: seeds exist for replay, not secrecy — see the router's
+/// seed root).
+const NET_SEED_ROOT: u64 = 0x6e65_745f_5eed_0008;
+
+/// Network front-door configuration.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Listen address, e.g. `"127.0.0.1:7171"` (`:0` picks a free
+    /// port; [`NetHandle::addr`] reports the bound one).
+    pub addr: String,
+    /// Connection cap: sockets past it get `rejected_overload` and are
+    /// closed immediately.
+    pub max_conns: usize,
+    /// Per-frame payload cap (larger frames get `bad_frame` + close).
+    pub max_frame_bytes: usize,
+    /// Sleep between poll turns when nothing happened (µs).
+    pub idle_sleep_us: u64,
+    /// Drain budget on shutdown: in-flight responses not flushed within
+    /// this window are abandoned (s).
+    pub drain_timeout_s: f64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7171".into(),
+            max_conns: 64,
+            max_frame_bytes: wire::MAX_FRAME_BYTES,
+            idle_sleep_us: 500,
+            drain_timeout_s: 10.0,
+        }
+    }
+}
+
+impl NetConfig {
+    /// Apply `MEMODE_*` environment overrides (`docs/SERVING.md`):
+    /// `MEMODE_NET_MAX_CONNS`, `MEMODE_NET_MAX_FRAME_MB`. Unset or
+    /// unparsable variables keep the current value.
+    pub fn apply_env(&mut self) {
+        let read = |name: &str| -> Option<usize> {
+            std::env::var(name).ok()?.trim().parse().ok()
+        };
+        if let Some(v) = read("MEMODE_NET_MAX_CONNS") {
+            self.max_conns = v;
+        }
+        if let Some(v) = read("MEMODE_NET_MAX_FRAME_MB") {
+            self.max_frame_bytes = v * 1024 * 1024;
+        }
+    }
+}
+
+/// Final counters a server reports when it shuts down (the same values
+/// stream into [`Telemetry`] while it runs).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct NetStats {
+    /// Connections accepted.
+    pub connections: u64,
+    /// Connections refused at the cap.
+    pub conns_rejected: u64,
+    /// Request frames decoded.
+    pub frames_in: u64,
+    /// Response frames queued.
+    pub frames_out: u64,
+    /// Protocol violations (bad frames / bad JSON / oversized).
+    pub protocol_errors: u64,
+}
+
+/// Handle to a running server; dropping it shuts the server down.
+pub struct NetHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<NetStats>>,
+}
+
+impl NetHandle {
+    /// The actually-bound listen address (resolves `:0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Graceful drain: stop accepting, flush in-flight work, close, and
+    /// return the final counters.
+    pub fn shutdown(mut self) -> NetStats {
+        self.stop.store(true, Ordering::Relaxed);
+        self.thread
+            .take()
+            .map(|t| t.join().unwrap_or_default())
+            .unwrap_or_default()
+    }
+}
+
+impl Drop for NetHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// The server. [`NetServer::start`] binds and spawns the poll thread.
+pub struct NetServer;
+
+impl NetServer {
+    /// Bind `cfg.addr` and serve `coord` until the handle shuts down.
+    pub fn start(
+        coord: Arc<Coordinator>,
+        cfg: NetConfig,
+    ) -> Result<NetHandle> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        listener.set_nonblocking(true).context("non-blocking listener")?;
+        let addr = listener.local_addr().context("listener address")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let thread = std::thread::Builder::new()
+            .name("net".into())
+            .spawn(move || serve_loop(listener, coord, cfg, stop2))
+            .context("spawning the net thread")?;
+        Ok(NetHandle { addr, stop, thread: Some(thread) })
+    }
+}
+
+/// One job awaiting its result: the correlation id and pre-admission
+/// seed ride along so the response (or failure) can echo both.
+struct Pending {
+    id: u64,
+    seed: u64,
+    sub: Submitted,
+}
+
+/// One live connection's state.
+struct Conn {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    pending: Vec<Pending>,
+    /// Read side alive; `false` = close once `wbuf`/`pending` empty.
+    open: bool,
+    /// Socket failed; drop regardless of queued data.
+    dead: bool,
+    /// Connection-cap slot, released on drop.
+    _permit: Permit,
+}
+
+impl Conn {
+    fn done(&self, draining: bool) -> bool {
+        if self.dead {
+            return true;
+        }
+        let flushed = self.wbuf.is_empty() && self.pending.is_empty();
+        flushed && (!self.open || draining)
+    }
+}
+
+/// Queue one response frame on a connection.
+fn queue(
+    conn: &mut Conn,
+    payload: &str,
+    telemetry: &Telemetry,
+    stats: &mut NetStats,
+) {
+    conn.wbuf.extend_from_slice(&wire::encode_frame(payload));
+    telemetry.net_frames_out.fetch_add(1, Ordering::Relaxed);
+    stats.frames_out += 1;
+}
+
+fn submit_error_code(e: &SubmitError) -> ErrorCode {
+    match e {
+        SubmitError::UnknownRoute { .. } => ErrorCode::UnknownRoute,
+        SubmitError::InvalidRequest(_) => ErrorCode::BadRequest,
+        SubmitError::Overloaded { .. } => ErrorCode::RejectedOverload,
+        SubmitError::Stopped => ErrorCode::ShuttingDown,
+    }
+}
+
+/// Decode + admit one request frame, queueing either a pending job or
+/// an immediate error response.
+fn handle_frame(
+    conn: &mut Conn,
+    payload: &[u8],
+    draining: bool,
+    coord: &Coordinator,
+    telemetry: &Telemetry,
+    stats: &mut NetStats,
+) {
+    let mut w = match wire::decode_request(payload) {
+        Ok(w) => w,
+        Err(e) => {
+            telemetry.net_protocol_errors.fetch_add(1, Ordering::Relaxed);
+            stats.protocol_errors += 1;
+            let msg = wire::encode_error(e.id, e.code, &e.msg, None);
+            queue(conn, &msg, telemetry, stats);
+            if e.code == ErrorCode::BadFrame {
+                // The stream cannot be re-synchronised; stop reading
+                // and close once the error frame is flushed.
+                conn.open = false;
+                conn.rbuf.clear();
+            }
+            return;
+        }
+    };
+    // Stamp the replay seed *before* admission: even a shed request's
+    // error frame echoes the seed it would have used.
+    let seed = *w
+        .req
+        .seed
+        .get_or_insert_with(|| derive_stream_seed(NET_SEED_ROOT, w.id));
+    if draining {
+        let msg = wire::encode_error(
+            Some(w.id),
+            ErrorCode::ShuttingDown,
+            "server is draining",
+            Some(seed),
+        );
+        queue(conn, &msg, telemetry, stats);
+        return;
+    }
+    match coord.try_submit(&w.route, w.req) {
+        Ok(sub) => conn.pending.push(Pending { id: w.id, seed, sub }),
+        Err(e) => {
+            let msg = wire::encode_error(
+                Some(w.id),
+                submit_error_code(&e),
+                &e.to_string(),
+                Some(seed),
+            );
+            queue(conn, &msg, telemetry, stats);
+        }
+    }
+}
+
+/// Poll every pending job on a connection; queue finished responses.
+/// Returns `true` if any job completed this turn.
+fn poll_pending(
+    conn: &mut Conn,
+    telemetry: &Telemetry,
+    stats: &mut NetStats,
+) -> bool {
+    let mut progressed = false;
+    let mut i = 0;
+    while i < conn.pending.len() {
+        match conn.pending[i].sub.rx.try_recv() {
+            Ok(jr) => {
+                let p = conn.pending.remove(i);
+                progressed = true;
+                let wait_us = (jr.wait_s.max(0.0) * 1e6).round() as u64;
+                let exec_us = (jr.exec_s.max(0.0) * 1e6).round() as u64;
+                let msg = match jr.result {
+                    Ok(resp) => {
+                        wire::encode_response(p.id, &resp, wait_us, exec_us)
+                    }
+                    Err(e) => wire::encode_error(
+                        Some(p.id),
+                        ErrorCode::Internal,
+                        &format!("{e:#}"),
+                        Some(p.seed),
+                    ),
+                };
+                queue(conn, &msg, telemetry, stats);
+            }
+            Err(std::sync::mpsc::TryRecvError::Empty) => i += 1,
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                let p = conn.pending.remove(i);
+                progressed = true;
+                let msg = wire::encode_error(
+                    Some(p.id),
+                    ErrorCode::Internal,
+                    "coordinator dropped the job",
+                    Some(p.seed),
+                );
+                queue(conn, &msg, telemetry, stats);
+            }
+        }
+    }
+    progressed
+}
+
+/// Best-effort typed rejection for a connection past the cap.
+fn reject_connection(stream: TcpStream) {
+    let msg = wire::encode_error(
+        None,
+        ErrorCode::RejectedOverload,
+        "connection limit reached",
+        None,
+    );
+    // The socket may have inherited non-blocking mode from the
+    // listener on some platforms; a tiny blocking write is fine here.
+    let _ = stream.set_nonblocking(false);
+    let mut stream = stream;
+    let _ = stream.write_all(&wire::encode_frame(&msg));
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+}
+
+/// The server thread: turn the poll loop until shutdown + drain.
+fn serve_loop(
+    listener: TcpListener,
+    coord: Arc<Coordinator>,
+    cfg: NetConfig,
+    stop: Arc<AtomicBool>,
+) -> NetStats {
+    let telemetry = coord.telemetry();
+    let conn_gate = Backpressure::new(cfg.max_conns.max(1));
+    let mut listener = Some(listener);
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut stats = NetStats::default();
+    let mut drain_deadline: Option<Instant> = None;
+    let mut chunk = [0u8; 4096];
+
+    loop {
+        let mut active = false;
+        let draining = stop.load(Ordering::Relaxed);
+        if draining {
+            if listener.take().is_some() {
+                drain_deadline = Some(
+                    Instant::now()
+                        + Duration::from_secs_f64(
+                            cfg.drain_timeout_s.max(0.0),
+                        ),
+                );
+            }
+        } else if let Some(l) = &listener {
+            loop {
+                match l.accept() {
+                    Ok((stream, _)) => {
+                        active = true;
+                        match conn_gate.try_acquire() {
+                            Some(permit) => {
+                                if stream.set_nonblocking(true).is_err() {
+                                    continue;
+                                }
+                                let _ = stream.set_nodelay(true);
+                                telemetry
+                                    .net_connections
+                                    .fetch_add(1, Ordering::Relaxed);
+                                stats.connections += 1;
+                                conns.push(Conn {
+                                    stream,
+                                    rbuf: Vec::new(),
+                                    wbuf: Vec::new(),
+                                    pending: Vec::new(),
+                                    open: true,
+                                    dead: false,
+                                    _permit: permit,
+                                });
+                            }
+                            None => {
+                                telemetry
+                                    .net_conns_rejected
+                                    .fetch_add(1, Ordering::Relaxed);
+                                stats.conns_rejected += 1;
+                                reject_connection(stream);
+                            }
+                        }
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        break
+                    }
+                    Err(_) => break,
+                }
+            }
+        }
+
+        for conn in conns.iter_mut() {
+            // Read phase: drain the socket into the frame buffer.
+            while conn.open && !conn.dead {
+                match conn.stream.read(&mut chunk) {
+                    Ok(0) => conn.open = false,
+                    Ok(n) => {
+                        active = true;
+                        conn.rbuf.extend_from_slice(&chunk[..n]);
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        break
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                    Err(_) => conn.dead = true,
+                }
+            }
+            // Frame phase: process every complete frame.
+            while !conn.dead {
+                match wire::extract_frame(
+                    &mut conn.rbuf,
+                    cfg.max_frame_bytes,
+                ) {
+                    Ok(Some(payload)) => {
+                        active = true;
+                        telemetry
+                            .net_frames_in
+                            .fetch_add(1, Ordering::Relaxed);
+                        stats.frames_in += 1;
+                        handle_frame(
+                            conn, &payload, draining, &coord, &telemetry,
+                            &mut stats,
+                        );
+                    }
+                    Ok(None) => break,
+                    Err(e) => {
+                        active = true;
+                        telemetry
+                            .net_protocol_errors
+                            .fetch_add(1, Ordering::Relaxed);
+                        stats.protocol_errors += 1;
+                        let msg = wire::encode_error(
+                            None,
+                            ErrorCode::BadFrame,
+                            &e.to_string(),
+                            None,
+                        );
+                        queue(conn, &msg, &telemetry, &mut stats);
+                        conn.open = false;
+                        conn.rbuf.clear();
+                        break;
+                    }
+                }
+            }
+            // Completion phase: collect finished jobs.
+            if poll_pending(conn, &telemetry, &mut stats) {
+                active = true;
+            }
+            // Write phase: flush without blocking.
+            if !conn.wbuf.is_empty() && !conn.dead {
+                match conn.stream.write(&conn.wbuf) {
+                    Ok(0) => conn.dead = true,
+                    Ok(n) => {
+                        active = true;
+                        conn.wbuf.drain(..n);
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {}
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                    Err(_) => conn.dead = true,
+                }
+            }
+        }
+
+        conns.retain(|c| !c.done(draining));
+
+        if let Some(deadline) = drain_deadline {
+            let flushed = conns
+                .iter()
+                .all(|c| c.pending.is_empty() && c.wbuf.is_empty());
+            if flushed || Instant::now() >= deadline {
+                break;
+            }
+        }
+        if !active {
+            std::thread::sleep(Duration::from_micros(
+                cfg.idle_sleep_us.max(1),
+            ));
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServeConfig;
+    use crate::coordinator::client::WireClient;
+    use crate::coordinator::wire::{WireRequest, WireResponse};
+    use crate::twin::registry::TwinRegistry;
+    use crate::twin::{Twin, TwinRequest, TwinResponse};
+    use crate::util::tensor::Trajectory;
+
+    struct EchoTwin;
+    impl Twin for EchoTwin {
+        fn name(&self) -> &str {
+            "echo"
+        }
+        fn state_dim(&self) -> usize {
+            1
+        }
+        fn dt(&self) -> f64 {
+            1.0
+        }
+        fn default_h0(&self) -> Vec<f64> {
+            vec![0.0]
+        }
+        fn run(&mut self, req: &TwinRequest) -> anyhow::Result<TwinResponse> {
+            Ok(TwinResponse {
+                trajectory: Trajectory::repeat_row(&[1.0], req.n_points),
+                backend: "echo",
+                seed: req.seed.unwrap_or(0),
+                ensemble: None,
+                degraded: false,
+            })
+        }
+    }
+
+    fn start_server(max_conns: usize) -> (Arc<Coordinator>, NetHandle) {
+        let mut reg = TwinRegistry::new();
+        reg.register("echo", || Box::new(EchoTwin));
+        let coord = Arc::new(Coordinator::start(
+            reg,
+            &ServeConfig {
+                workers: 1,
+                max_batch: 4,
+                batch_window_s: 1e-4,
+                queue_depth: 16,
+                route_queue_depth: 16,
+            },
+        ));
+        let handle = NetServer::start(
+            Arc::clone(&coord),
+            NetConfig {
+                addr: "127.0.0.1:0".into(),
+                max_conns,
+                idle_sleep_us: 100,
+                ..NetConfig::default()
+            },
+        )
+        .expect("server starts");
+        (coord, handle)
+    }
+
+    #[test]
+    fn serves_a_request_end_to_end() {
+        let (_coord, handle) = start_server(4);
+        let mut client =
+            WireClient::connect(&handle.addr().to_string()).unwrap();
+        let resp = client
+            .call(&WireRequest {
+                id: 7,
+                route: "echo".into(),
+                req: TwinRequest::autonomous(vec![], 3).with_seed(99),
+            })
+            .unwrap();
+        match resp {
+            WireResponse::Ok(ok) => {
+                assert_eq!(ok.id, 7);
+                assert_eq!(ok.seed, 99);
+                assert_eq!(ok.backend, "echo");
+                assert_eq!(ok.trajectory.len(), 3);
+            }
+            other => panic!("expected ok, got {other:?}"),
+        }
+        let stats = handle.shutdown();
+        assert_eq!(stats.connections, 1);
+        assert_eq!(stats.frames_in, 1);
+        assert_eq!(stats.frames_out, 1);
+        assert_eq!(stats.protocol_errors, 0);
+    }
+
+    #[test]
+    fn seedless_requests_get_a_replay_seed_echo() {
+        let (_coord, handle) = start_server(4);
+        let mut client =
+            WireClient::connect(&handle.addr().to_string()).unwrap();
+        let req = WireRequest {
+            id: 3,
+            route: "echo".into(),
+            req: TwinRequest::autonomous(vec![], 2),
+        };
+        let seed = match client.call(&req).unwrap() {
+            WireResponse::Ok(ok) => {
+                assert_eq!(
+                    ok.seed,
+                    derive_stream_seed(NET_SEED_ROOT, 3),
+                    "net layer stamps id-derived seeds"
+                );
+                ok.seed
+            }
+            other => panic!("expected ok, got {other:?}"),
+        };
+        // Replaying under the echoed seed is accepted verbatim.
+        let replay = WireRequest {
+            id: 4,
+            route: "echo".into(),
+            req: TwinRequest::autonomous(vec![], 2).with_seed(seed),
+        };
+        match client.call(&replay).unwrap() {
+            WireResponse::Ok(ok) => assert_eq!(ok.seed, seed),
+            other => panic!("expected ok, got {other:?}"),
+        }
+        handle.shutdown();
+    }
+
+    #[test]
+    fn unknown_route_is_a_typed_error_with_seed() {
+        let (_coord, handle) = start_server(4);
+        let mut client =
+            WireClient::connect(&handle.addr().to_string()).unwrap();
+        let resp = client
+            .call(&WireRequest {
+                id: 11,
+                route: "ghost".into(),
+                req: TwinRequest::autonomous(vec![], 1),
+            })
+            .unwrap();
+        match resp {
+            WireResponse::Err(e) => {
+                assert_eq!(e.code, ErrorCode::UnknownRoute);
+                assert_eq!(e.id, Some(11));
+                assert!(
+                    e.seed.is_some(),
+                    "rejections echo the pre-admission seed"
+                );
+            }
+            other => panic!("expected error, got {other:?}"),
+        }
+        // The connection survives a per-request error.
+        let resp = client
+            .call(&WireRequest {
+                id: 12,
+                route: "echo".into(),
+                req: TwinRequest::autonomous(vec![], 1),
+            })
+            .unwrap();
+        assert!(matches!(resp, WireResponse::Ok(_)));
+        handle.shutdown();
+    }
+
+    #[test]
+    fn malformed_json_gets_bad_frame_and_close() {
+        let (_coord, handle) = start_server(4);
+        let mut client =
+            WireClient::connect(&handle.addr().to_string()).unwrap();
+        client.send_raw("this is not json").unwrap();
+        match client.recv().unwrap() {
+            WireResponse::Err(e) => {
+                assert_eq!(e.code, ErrorCode::BadFrame)
+            }
+            other => panic!("expected error, got {other:?}"),
+        }
+        // Server closes the stream after a bad frame.
+        assert!(client.recv().is_err());
+        let stats = handle.shutdown();
+        assert_eq!(stats.protocol_errors, 1);
+    }
+
+    #[test]
+    fn connection_cap_rejects_with_typed_frame() {
+        let (_coord, handle) = start_server(1);
+        let mut first =
+            WireClient::connect(&handle.addr().to_string()).unwrap();
+        // Ensure the first connection is registered server-side.
+        first
+            .call(&WireRequest {
+                id: 1,
+                route: "echo".into(),
+                req: TwinRequest::autonomous(vec![], 1),
+            })
+            .unwrap();
+        let mut second =
+            WireClient::connect(&handle.addr().to_string()).unwrap();
+        match second.recv().unwrap() {
+            WireResponse::Err(e) => {
+                assert_eq!(e.code, ErrorCode::RejectedOverload)
+            }
+            other => panic!("expected rejection, got {other:?}"),
+        }
+        drop(first);
+        let stats = handle.shutdown();
+        assert_eq!(stats.connections, 1);
+        assert_eq!(stats.conns_rejected, 1);
+    }
+
+    #[test]
+    fn shutdown_reports_telemetry_counters() {
+        let (coord, handle) = start_server(4);
+        let mut client =
+            WireClient::connect(&handle.addr().to_string()).unwrap();
+        client
+            .call(&WireRequest {
+                id: 1,
+                route: "echo".into(),
+                req: TwinRequest::autonomous(vec![], 1),
+            })
+            .unwrap();
+        let snap = coord.stats();
+        assert_eq!(snap.net_connections, 1);
+        assert_eq!(snap.net_frames_in, 1);
+        assert_eq!(snap.net_frames_out, 1);
+        handle.shutdown();
+    }
+}

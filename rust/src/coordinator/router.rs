@@ -4,6 +4,11 @@
 //! applies backpressure, stamps the job and forwards it to the batcher. It
 //! is deliberately synchronous and cheap — everything heavier happens
 //! behind the batcher.
+//!
+//! Rejections are **typed** ([`SubmitError`]) so upstream layers — the
+//! TCP front end in [`crate::coordinator::net`] in particular — can map
+//! them onto protocol error codes (`rejected_overload`, `unknown_route`,
+//! ...) instead of string-matching error text.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -11,7 +16,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::backpressure::{Backpressure, Permit};
+use crate::coordinator::backpressure::{Backpressure, Permit, Shed};
 use crate::coordinator::telemetry::Telemetry;
 use crate::coordinator::{Job, JobResult};
 use crate::twin::registry::TwinRegistry;
@@ -22,8 +27,45 @@ use crate::util::rng::derive_stream_seed;
 /// purpose: seeds exist for *replay*, not secrecy, and a deterministic
 /// family (keyed by job id) means a serving log alone identifies every
 /// rollout's noise stream. Requests that pin their own seed pass through
-/// untouched.
+/// untouched (the network layer stamps seedless requests *before*
+/// admission, so its requests always arrive pinned).
 const ROUTER_SEED_ROOT: u64 = 0xc0de_5eed_0a11_0001;
+
+/// Typed submission failure — the router's half of the wire protocol's
+/// error codes.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// The route key is not in the registry.
+    UnknownRoute { route: String, available: String },
+    /// The request failed validation (today: a bad ensemble spec).
+    InvalidRequest(String),
+    /// Shed at the admission gate; `scope` names the gate ("global" or
+    /// "route") per [`Shed`].
+    Overloaded { scope: &'static str, in_flight: usize, limit: usize },
+    /// The coordinator's pipeline has shut down.
+    Stopped,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::UnknownRoute { route, available } => {
+                write!(f, "unknown route '{route}' (available: {available})")
+            }
+            SubmitError::InvalidRequest(msg) => {
+                write!(f, "invalid ensemble spec: {msg}")
+            }
+            SubmitError::Overloaded { scope, in_flight, limit } => write!(
+                f,
+                "overloaded: {in_flight} requests in flight \
+                 ({scope} limit {limit})"
+            ),
+            SubmitError::Stopped => write!(f, "coordinator stopped"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// A submitted request: await the result on `rx`; dropping `permit`
 /// releases the admission slot (hold it until the reply is consumed).
@@ -71,35 +113,49 @@ impl Router {
     }
 
     /// Submit a request; fails fast on unknown routes, invalid ensemble
-    /// specs, or saturation. Requests without an explicit noise seed are
-    /// stamped with one derived from the job id, so every admitted job is
-    /// replayable (the twin echoes the seed in its response; ensemble
-    /// member `k` replays under
+    /// specs, or saturation — with a typed error. Requests without an
+    /// explicit noise seed are stamped with one derived from the job id,
+    /// so every admitted job is replayable (the twin echoes the seed in
+    /// its response; ensemble member `k` replays under
     /// [`crate::twin::ensemble_member_seed`]`(seed, k)`).
     pub fn submit(
         &self,
         route: &str,
         req: TwinRequest,
-    ) -> Result<Submitted> {
+    ) -> Result<Submitted, SubmitError> {
         if !self.registry.contains(route) {
-            return Err(anyhow!(
-                "unknown route '{route}' (available: {})",
-                self.registry.keys().join(", ")
-            ));
+            return Err(SubmitError::UnknownRoute {
+                route: route.to_owned(),
+                available: self.registry.keys().join(", "),
+            });
         }
         if let Some(spec) = &req.ensemble {
             spec.validate()
-                .map_err(|e| anyhow!("invalid ensemble spec: {e}"))?;
+                .map_err(|e| SubmitError::InvalidRequest(e.to_string()))?;
         }
-        let permit = self.backpressure.try_acquire().ok_or_else(|| {
-            self.telemetry.rejected.fetch_add(1, Ordering::Relaxed);
-            self.telemetry.record_shed(route);
-            anyhow!(
-                "overloaded: {} requests in flight (limit {})",
-                self.backpressure.in_flight(),
-                self.backpressure.limit()
-            )
-        })?;
+        let permit = self
+            .backpressure
+            .try_acquire_route(route)
+            .map_err(|shed| {
+                self.telemetry.rejected.fetch_add(1, Ordering::Relaxed);
+                self.telemetry.record_shed(route);
+                match shed {
+                    Shed::Global { in_flight, limit } => {
+                        SubmitError::Overloaded {
+                            scope: "global",
+                            in_flight,
+                            limit,
+                        }
+                    }
+                    Shed::Route { in_flight, limit, .. } => {
+                        SubmitError::Overloaded {
+                            scope: "route",
+                            in_flight,
+                            limit,
+                        }
+                    }
+                }
+            })?;
         self.telemetry.record_admitted(route);
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let mut req = req;
@@ -116,7 +172,7 @@ impl Router {
                 enqueued: Instant::now(),
                 reply,
             })
-            .map_err(|_| anyhow!("coordinator stopped"))?;
+            .map_err(|_| SubmitError::Stopped)?;
         Ok(Submitted { id, rx, permit })
     }
 
@@ -214,7 +270,10 @@ mod tests {
         let bad_p = TwinRequest::autonomous(vec![], 1).with_ensemble(
             EnsembleSpec::new(4).with_percentiles(vec![120.0]),
         );
-        assert!(router.submit("null", bad_p).is_err());
+        assert!(matches!(
+            router.submit("null", bad_p),
+            Err(SubmitError::InvalidRequest(_))
+        ));
         // A valid spec passes through untouched.
         let ok = TwinRequest::autonomous(vec![], 1)
             .with_ensemble(EnsembleSpec::new(8));
@@ -227,7 +286,10 @@ mod tests {
         let err = match router
             .submit("ghost", TwinRequest::autonomous(vec![], 1))
         {
-            Err(e) => e.to_string(),
+            Err(e) => {
+                assert!(matches!(e, SubmitError::UnknownRoute { .. }));
+                e.to_string()
+            }
             Ok(_) => panic!("ghost route accepted"),
         };
         assert!(err.contains("unknown route"));
@@ -238,18 +300,42 @@ mod tests {
     }
 
     #[test]
-    fn saturation_sheds_with_overloaded_error() {
+    fn saturation_sheds_with_typed_overload() {
         let (router, _rx) = setup(1);
         let _held = router
             .submit("null", TwinRequest::autonomous(vec![], 1))
             .unwrap();
-        let err = match router
+        match router.submit("null", TwinRequest::autonomous(vec![], 1)) {
+            Err(e @ SubmitError::Overloaded { scope, limit, .. }) => {
+                assert_eq!(scope, "global");
+                assert_eq!(limit, 1);
+                assert!(e.to_string().contains("overloaded"));
+            }
+            other => panic!("admission not enforced: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn route_scoped_overload_is_typed() {
+        let mut reg = TwinRegistry::new();
+        reg.register("null", || Box::new(NullTwin));
+        let (tx, _rx) = mpsc::channel();
+        let router = Router::new(
+            reg,
+            tx,
+            Backpressure::with_route_limit(8, 1),
+            Arc::new(Telemetry::new()),
+        );
+        let _held = router
             .submit("null", TwinRequest::autonomous(vec![], 1))
-        {
-            Err(e) => e.to_string(),
-            Ok(_) => panic!("admission not enforced"),
-        };
-        assert!(err.contains("overloaded"));
+            .unwrap();
+        match router.submit("null", TwinRequest::autonomous(vec![], 1)) {
+            Err(SubmitError::Overloaded { scope, limit, .. }) => {
+                assert_eq!(scope, "route");
+                assert_eq!(limit, 1);
+            }
+            other => panic!("route gate not enforced: {other:?}"),
+        }
     }
 
     #[test]

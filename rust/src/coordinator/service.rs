@@ -14,7 +14,7 @@ use anyhow::Result;
 use crate::config::ServeConfig;
 use crate::coordinator::backpressure::Backpressure;
 use crate::coordinator::batcher::{self, BatchPolicy};
-use crate::coordinator::router::{Router, Submitted};
+use crate::coordinator::router::{Router, SubmitError, Submitted};
 use crate::coordinator::scheduler::Scheduler;
 use crate::coordinator::telemetry::{Telemetry, TelemetrySnapshot};
 use crate::twin::registry::TwinRegistry;
@@ -46,7 +46,10 @@ impl Coordinator {
         cfg: &ServeConfig,
         telemetry: Arc<Telemetry>,
     ) -> Self {
-        let backpressure = Backpressure::new(cfg.queue_depth);
+        let backpressure = Backpressure::with_route_limit(
+            cfg.queue_depth,
+            cfg.route_queue_depth,
+        );
         let (jobs_tx, jobs_rx) = mpsc::channel();
         let (batches_tx, batches_rx) = mpsc::channel();
         let batcher = batcher::spawn(
@@ -91,6 +94,16 @@ impl Coordinator {
 
     /// Non-blocking submit (await via [`Submitted::wait`]).
     pub fn submit(&self, route: &str, req: TwinRequest) -> Result<Submitted> {
+        Ok(self.router.submit(route, req)?)
+    }
+
+    /// Non-blocking submit with a typed rejection — what the network
+    /// front end uses to map failures onto protocol error codes.
+    pub fn try_submit(
+        &self,
+        route: &str,
+        req: TwinRequest,
+    ) -> Result<Submitted, SubmitError> {
         self.router.submit(route, req)
     }
 
@@ -105,6 +118,12 @@ impl Coordinator {
 
     pub fn stats(&self) -> TelemetrySnapshot {
         self.telemetry.snapshot()
+    }
+
+    /// The coordinator's shared telemetry (the network layer records its
+    /// connection/frame counters into the same instance).
+    pub fn telemetry(&self) -> Arc<Telemetry> {
+        Arc::clone(&self.telemetry)
     }
 }
 
@@ -152,6 +171,7 @@ mod tests {
             max_batch: 4,
             batch_window_s: 1e-3,
             queue_depth: 64,
+            route_queue_depth: 64,
         }
     }
 

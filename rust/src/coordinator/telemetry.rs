@@ -33,6 +33,17 @@ pub struct Telemetry {
     pub ensemble_rollouts: AtomicU64,
     /// Total ensemble members across those rollouts.
     pub ensemble_members: AtomicU64,
+    /// TCP connections accepted by the network front door.
+    pub net_connections: AtomicU64,
+    /// Connections refused at the accept gate (connection cap reached).
+    pub net_conns_rejected: AtomicU64,
+    /// Request frames decoded off sockets.
+    pub net_frames_in: AtomicU64,
+    /// Response frames written back to sockets.
+    pub net_frames_out: AtomicU64,
+    /// Wire-protocol violations observed (unparsable frames, oversized
+    /// lengths, malformed requests).
+    pub net_protocol_errors: AtomicU64,
     latencies_us: Mutex<Ring<f64, RESERVOIR>>,
     /// Recent (job id, noise seed) pairs of completed jobs — enough for
     /// the serve CLI to print replay commands (`run-twin --seed <s>`).
@@ -178,8 +189,8 @@ impl Telemetry {
             scratch
                 .extend(ring.buf.iter().copied().filter(|x| x.is_finite()));
         }
-        let (p50, p95, mean) = if scratch.is_empty() {
-            (f64::NAN, f64::NAN, f64::NAN)
+        let (p50, p95, p99, mean) = if scratch.is_empty() {
+            (f64::NAN, f64::NAN, f64::NAN, f64::NAN)
         } else {
             scratch.sort_unstable_by(f64::total_cmp);
             let mean =
@@ -187,6 +198,7 @@ impl Telemetry {
             (
                 stats::percentile_of_sorted(&scratch[..], 50.0),
                 stats::percentile_of_sorted(&scratch[..], 95.0),
+                stats::percentile_of_sorted(&scratch[..], 99.0),
                 mean,
             )
         };
@@ -206,6 +218,7 @@ impl Telemetry {
             },
             latency_p50_us: p50,
             latency_p95_us: p95,
+            latency_p99_us: p99,
             latency_mean_us: mean,
             shard_rollouts: self.shard_rollouts.load(Ordering::Relaxed),
             shard_steps: self.shard_steps.load(Ordering::Relaxed),
@@ -214,6 +227,15 @@ impl Telemetry {
                 .load(Ordering::Relaxed),
             ensemble_members: self
                 .ensemble_members
+                .load(Ordering::Relaxed),
+            net_connections: self.net_connections.load(Ordering::Relaxed),
+            net_conns_rejected: self
+                .net_conns_rejected
+                .load(Ordering::Relaxed),
+            net_frames_in: self.net_frames_in.load(Ordering::Relaxed),
+            net_frames_out: self.net_frames_out.load(Ordering::Relaxed),
+            net_protocol_errors: self
+                .net_protocol_errors
                 .load(Ordering::Relaxed),
             recent_seeds: self
                 .seeds
@@ -249,6 +271,7 @@ pub struct TelemetrySnapshot {
     pub mean_batch: f64,
     pub latency_p50_us: f64,
     pub latency_p95_us: f64,
+    pub latency_p99_us: f64,
     pub latency_mean_us: f64,
     /// Tile-sharded rollouts served.
     pub shard_rollouts: u64,
@@ -259,6 +282,16 @@ pub struct TelemetrySnapshot {
     /// Total ensemble members across those rollouts (mean ensemble width
     /// = / ensemble_rollouts).
     pub ensemble_members: u64,
+    /// TCP connections accepted by the network front door.
+    pub net_connections: u64,
+    /// Connections refused at the accept gate.
+    pub net_conns_rejected: u64,
+    /// Request frames decoded off sockets.
+    pub net_frames_in: u64,
+    /// Response frames written back to sockets.
+    pub net_frames_out: u64,
+    /// Wire-protocol violations observed.
+    pub net_protocol_errors: u64,
     /// Recent (job id, noise seed) pairs — replay handles for the last
     /// completed jobs (bounded ring, oldest first; the tail is the most
     /// recent).
@@ -300,6 +333,17 @@ impl std::fmt::Display for TelemetrySnapshot {
         let frac = self.rejected_fraction();
         if frac.is_finite() {
             write!(f, " shed_frac={frac:.3}")?;
+        }
+        if self.net_connections + self.net_conns_rejected > 0 {
+            write!(
+                f,
+                " net[conns={} refused={} in={} out={} proto_err={}]",
+                self.net_connections,
+                self.net_conns_rejected,
+                self.net_frames_in,
+                self.net_frames_out,
+                self.net_protocol_errors
+            )?;
         }
         for (route, s) in &self.lifetime {
             if s.degraded {
@@ -429,6 +473,37 @@ mod tests {
         assert!(
             format!("{s}").contains("DEGRADED[lorenz96/analog-aged]")
         );
+    }
+
+    #[test]
+    fn net_counters_surface_in_snapshot_and_display() {
+        let t = Telemetry::new();
+        assert!(!format!("{}", t.snapshot()).contains("net["));
+        t.net_connections.fetch_add(3, Ordering::Relaxed);
+        t.net_conns_rejected.fetch_add(1, Ordering::Relaxed);
+        t.net_frames_in.fetch_add(10, Ordering::Relaxed);
+        t.net_frames_out.fetch_add(9, Ordering::Relaxed);
+        t.net_protocol_errors.fetch_add(2, Ordering::Relaxed);
+        let s = t.snapshot();
+        assert_eq!(s.net_connections, 3);
+        assert_eq!(s.net_conns_rejected, 1);
+        assert_eq!(s.net_frames_in, 10);
+        assert_eq!(s.net_frames_out, 9);
+        assert_eq!(s.net_protocol_errors, 2);
+        let line = format!("{s}");
+        assert!(line.contains("net[conns=3 refused=1"), "{line}");
+    }
+
+    #[test]
+    fn p99_comes_from_the_same_sorted_reservoir() {
+        let t = Telemetry::new();
+        for k in 1..=100 {
+            t.record_latency(k as f64 * 1e-6, 0.0);
+        }
+        let s = t.snapshot();
+        assert!(s.latency_p50_us <= s.latency_p95_us);
+        assert!(s.latency_p95_us <= s.latency_p99_us);
+        assert!((s.latency_p99_us - 99.0).abs() < 1.5);
     }
 
     #[test]

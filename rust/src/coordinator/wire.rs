@@ -1,0 +1,1042 @@
+//! The coordinator's wire protocol: length-prefixed JSON frames.
+//!
+//! Every message on a serving socket is one **frame**: a 4-byte
+//! big-endian payload length followed by that many bytes of UTF-8 JSON.
+//! Frames longer than the negotiated cap ([`MAX_FRAME_BYTES`] by
+//! default) are a protocol violation — the server answers `bad_frame`
+//! and closes the connection, because the stream can no longer be
+//! re-synchronised.
+//!
+//! The byte-level layout, every field and a set of canonical examples
+//! are documented in `docs/PROTOCOL.md`; `rust/tests/wire.rs` encodes
+//! the documented examples with this module and asserts the bytes match
+//! **verbatim**, so the document cannot drift from the code.
+//!
+//! Two properties make the canonical examples possible:
+//!
+//! * [`crate::util::json::Json`] objects are `BTreeMap`s, so encoding
+//!   always emits keys in sorted order;
+//! * integral numbers below 1e15 print without a decimal point.
+//!
+//! Together encoding is deterministic: the same message always produces
+//! the same bytes.
+//!
+//! **Seeds travel as decimal strings.** `Json::Num` is an `f64`, and
+//! the replay contract hands out full-range `u64` seeds (from
+//! `derive_stream_seed`) that do not fit in the 53-bit mantissa; a
+//! numeric seed field would silently corrupt them. Decoding also
+//! accepts plain numbers below 2^53 for hand-written requests.
+//!
+//! JSON has no NaN/Inf: non-finite trajectory samples encode as `null`
+//! and decode back to NaN (diverged ensemble members stay visible).
+
+use std::fmt;
+
+use crate::twin::{
+    EnsembleSpec, EnsembleStats, FaultCampaign, TwinRequest, TwinResponse,
+};
+use crate::util::json::{self, Json};
+use crate::util::tensor::Trajectory;
+use crate::workload::stimuli::Waveform;
+
+/// Default cap on one frame's payload (16 MiB) — bounds per-connection
+/// memory; a 4096-member ensemble response with members returned stays
+/// under it for the workloads in `docs/PROTOCOL.md`.
+pub const MAX_FRAME_BYTES: usize = 16 * 1024 * 1024;
+
+/// Largest integer JSON's f64 numbers carry exactly (2^53); ids and
+/// numeric seed fields beyond it are rejected rather than rounded.
+const MAX_EXACT_INT: f64 = 9_007_199_254_740_992.0;
+
+// ---------------------------------------------------------------------
+// Framing
+// ---------------------------------------------------------------------
+
+/// A frame declared a payload longer than the cap. Unrecoverable for
+/// the stream: the bytes after the header cannot be trusted as a
+/// boundary, so the connection must close.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FrameTooBig {
+    pub declared: usize,
+    pub limit: usize,
+}
+
+impl fmt::Display for FrameTooBig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "frame of {} bytes exceeds the {}-byte limit",
+            self.declared, self.limit
+        )
+    }
+}
+
+impl std::error::Error for FrameTooBig {}
+
+/// Wrap a JSON payload in a frame: 4-byte big-endian length + bytes.
+pub fn encode_frame(payload: &str) -> Vec<u8> {
+    let bytes = payload.as_bytes();
+    assert!(
+        bytes.len() <= u32::MAX as usize,
+        "payload exceeds the u32 length prefix"
+    );
+    let mut out = Vec::with_capacity(4 + bytes.len());
+    out.extend_from_slice(&(bytes.len() as u32).to_be_bytes());
+    out.extend_from_slice(bytes);
+    out
+}
+
+/// Incremental frame extraction from a connection's read buffer.
+///
+/// Returns `Ok(Some(payload))` when a whole frame is buffered (and
+/// drains it), `Ok(None)` when more bytes are needed, and
+/// `Err(FrameTooBig)` when the declared length exceeds `limit` (close
+/// the connection).
+pub fn extract_frame(
+    buf: &mut Vec<u8>,
+    limit: usize,
+) -> Result<Option<Vec<u8>>, FrameTooBig> {
+    if buf.len() < 4 {
+        return Ok(None);
+    }
+    let declared =
+        u32::from_be_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+    if declared > limit {
+        return Err(FrameTooBig { declared, limit });
+    }
+    if buf.len() < 4 + declared {
+        return Ok(None);
+    }
+    let payload = buf[4..4 + declared].to_vec();
+    buf.drain(..4 + declared);
+    Ok(Some(payload))
+}
+
+// ---------------------------------------------------------------------
+// Error codes
+// ---------------------------------------------------------------------
+
+/// Typed error codes carried in error frames (`docs/PROTOCOL.md` is the
+/// authoritative list).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// The frame was not valid UTF-8 JSON, or declared an oversized
+    /// length. The connection closes after this error.
+    BadFrame,
+    /// The JSON was well-formed but violated the request schema.
+    BadRequest,
+    /// The route key is not in the registry.
+    UnknownRoute,
+    /// Shed at the admission gate (global or per-route budget).
+    RejectedOverload,
+    /// The server is draining; no new work is accepted.
+    ShuttingDown,
+    /// The backend failed while executing the request.
+    Internal,
+}
+
+impl ErrorCode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::BadFrame => "bad_frame",
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::UnknownRoute => "unknown_route",
+            ErrorCode::RejectedOverload => "rejected_overload",
+            ErrorCode::ShuttingDown => "shutting_down",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "bad_frame" => ErrorCode::BadFrame,
+            "bad_request" => ErrorCode::BadRequest,
+            "unknown_route" => ErrorCode::UnknownRoute,
+            "rejected_overload" => ErrorCode::RejectedOverload,
+            "shutting_down" => ErrorCode::ShuttingDown,
+            "internal" => ErrorCode::Internal,
+            _ => return None,
+        })
+    }
+}
+
+impl fmt::Display for ErrorCode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Requests
+// ---------------------------------------------------------------------
+
+/// A decoded request frame: client-chosen correlation id, route key and
+/// the twin request itself.
+#[derive(Debug, Clone)]
+pub struct WireRequest {
+    /// Client-chosen correlation id (echoed on every response; must fit
+    /// in 2^53 so it survives the f64 JSON number).
+    pub id: u64,
+    /// Route key, e.g. `"lorenz96/analog"`.
+    pub route: String,
+    pub req: TwinRequest,
+}
+
+/// Why a request frame failed to decode. `id` is the correlation id if
+/// it could be extracted (so the error frame can still be correlated);
+/// `code` is `BadFrame` for non-JSON payloads and `BadRequest` for
+/// schema violations.
+#[derive(Debug, Clone)]
+pub struct RequestError {
+    pub id: Option<u64>,
+    pub code: ErrorCode,
+    pub msg: String,
+}
+
+fn seed_json(seed: u64) -> Json {
+    Json::Str(seed.to_string())
+}
+
+fn seed_from_json(j: &Json) -> Option<u64> {
+    match j {
+        Json::Str(s) => s.parse().ok(),
+        Json::Num(x)
+            if x.is_finite()
+                && *x >= 0.0
+                && *x < MAX_EXACT_INT
+                && *x == x.trunc() =>
+        {
+            Some(*x as u64)
+        }
+        _ => None,
+    }
+}
+
+fn stimulus_json(w: &Waveform) -> Json {
+    match *w {
+        Waveform::Sine { amp, freq, phase } => Json::obj(vec![
+            ("amp", Json::Num(amp)),
+            ("freq", Json::Num(freq)),
+            ("kind", Json::Str("sine".into())),
+            ("phase", Json::Num(phase)),
+        ]),
+        Waveform::Triangular { amp, freq } => Json::obj(vec![
+            ("amp", Json::Num(amp)),
+            ("freq", Json::Num(freq)),
+            ("kind", Json::Str("triangular".into())),
+        ]),
+        Waveform::Rectangular { amp, freq, duty } => Json::obj(vec![
+            ("amp", Json::Num(amp)),
+            ("duty", Json::Num(duty)),
+            ("freq", Json::Num(freq)),
+            ("kind", Json::Str("rectangular".into())),
+        ]),
+        Waveform::ModulatedSine { amp, freq, mod_freq } => Json::obj(vec![
+            ("amp", Json::Num(amp)),
+            ("freq", Json::Num(freq)),
+            ("kind", Json::Str("modulated".into())),
+            ("mod_freq", Json::Num(mod_freq)),
+        ]),
+    }
+}
+
+fn ensemble_json(s: &EnsembleSpec) -> Json {
+    let mut pairs = vec![
+        ("members", Json::Num(s.members as f64)),
+        ("percentiles", Json::arr_f64(&s.percentiles)),
+        ("return_members", Json::Bool(s.return_members)),
+    ];
+    if let Some(c) = &s.fault_campaign {
+        pairs.push((
+            "fault_campaign",
+            Json::obj(vec![
+                ("age_s", Json::Num(c.age_s)),
+                ("fault_fraction", Json::Num(c.fault_fraction)),
+                ("yield_seed", seed_json(c.yield_seed)),
+            ]),
+        ));
+    }
+    Json::obj(pairs)
+}
+
+/// Encode a request to its canonical JSON payload (sorted keys; absent
+/// optionals omitted). Frame it with [`encode_frame`] before sending.
+pub fn encode_request(w: &WireRequest) -> String {
+    let mut pairs = vec![
+        ("h0", Json::arr_f64(&w.req.h0)),
+        ("id", Json::Num(w.id as f64)),
+        ("route", Json::Str(w.route.clone())),
+        ("steps", Json::Num(w.req.n_points as f64)),
+    ];
+    if let Some(seed) = w.req.seed {
+        pairs.push(("seed", seed_json(seed)));
+    }
+    if let Some(stim) = &w.req.stimulus {
+        pairs.push(("stimulus", stimulus_json(stim)));
+    }
+    if let Some(spec) = &w.req.ensemble {
+        pairs.push(("ensemble", ensemble_json(spec)));
+    }
+    Json::obj(pairs).to_string()
+}
+
+fn decode_stimulus(j: &Json) -> Result<Waveform, String> {
+    let kind = j
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or("stimulus needs a 'kind' string")?;
+    let num = |key: &str| -> Result<f64, String> {
+        j.get(key)
+            .and_then(Json::as_f64)
+            .filter(|x| x.is_finite())
+            .ok_or_else(|| format!("stimulus '{kind}' needs finite '{key}'"))
+    };
+    let opt = |key: &str, default: f64| -> Result<f64, String> {
+        match j.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_f64()
+                .filter(|x| x.is_finite())
+                .ok_or_else(|| format!("stimulus '{key}' must be finite")),
+        }
+    };
+    match kind {
+        "sine" => Ok(Waveform::Sine {
+            amp: num("amp")?,
+            freq: num("freq")?,
+            phase: opt("phase", 0.0)?,
+        }),
+        "triangular" => Ok(Waveform::Triangular {
+            amp: num("amp")?,
+            freq: num("freq")?,
+        }),
+        "rectangular" => Ok(Waveform::Rectangular {
+            amp: num("amp")?,
+            freq: num("freq")?,
+            duty: opt("duty", 0.5)?,
+        }),
+        "modulated" => Ok(Waveform::ModulatedSine {
+            amp: num("amp")?,
+            freq: num("freq")?,
+            mod_freq: num("mod_freq")?,
+        }),
+        other => Err(format!(
+            "unknown stimulus kind '{other}' \
+             (sine|triangular|rectangular|modulated)"
+        )),
+    }
+}
+
+fn decode_ensemble(j: &Json) -> Result<EnsembleSpec, String> {
+    let members = j
+        .get("members")
+        .and_then(Json::as_f64)
+        .filter(|x| x.is_finite() && *x >= 0.0 && *x == x.trunc())
+        .ok_or("ensemble needs an integer 'members'")?
+        as usize;
+    let percentiles = match j.get("percentiles") {
+        None => Vec::new(),
+        Some(v) => v
+            .as_vec_f64()
+            .ok_or("ensemble 'percentiles' must be a numeric array")?,
+    };
+    let return_members = match j.get("return_members") {
+        None => false,
+        Some(v) => v
+            .as_bool()
+            .ok_or("ensemble 'return_members' must be a boolean")?,
+    };
+    let fault_campaign = match j.get("fault_campaign") {
+        None => None,
+        Some(c) => {
+            let yield_seed = c
+                .get("yield_seed")
+                .and_then(seed_from_json)
+                .ok_or("fault_campaign needs a 'yield_seed' seed")?;
+            let num_or = |key: &str| -> Result<f64, String> {
+                match c.get(key) {
+                    None => Ok(0.0),
+                    Some(v) => {
+                        v.as_f64().filter(|x| x.is_finite()).ok_or_else(
+                            || format!("fault_campaign '{key}' must be finite"),
+                        )
+                    }
+                }
+            };
+            Some(FaultCampaign {
+                yield_seed,
+                age_s: num_or("age_s")?,
+                fault_fraction: num_or("fault_fraction")?,
+            })
+        }
+    };
+    Ok(EnsembleSpec { members, percentiles, return_members, fault_campaign })
+}
+
+/// Decode a request payload. On failure the error still carries the
+/// correlation id whenever the frame got far enough to reveal one.
+pub fn decode_request(payload: &[u8]) -> Result<WireRequest, RequestError> {
+    let bad_frame = |msg: String| RequestError {
+        id: None,
+        code: ErrorCode::BadFrame,
+        msg,
+    };
+    let text = std::str::from_utf8(payload)
+        .map_err(|_| bad_frame("frame payload is not UTF-8".into()))?;
+    let doc = json::parse(text)
+        .map_err(|e| bad_frame(format!("frame payload is not JSON: {e}")))?;
+    if !matches!(doc, Json::Obj(_)) {
+        return Err(bad_frame("request must be a JSON object".into()));
+    }
+    let id = doc
+        .get("id")
+        .and_then(Json::as_f64)
+        .filter(|x| {
+            x.is_finite() && *x >= 0.0 && *x < MAX_EXACT_INT && *x == x.trunc()
+        })
+        .map(|x| x as u64);
+    let bad = |msg: String| RequestError {
+        id,
+        code: ErrorCode::BadRequest,
+        msg,
+    };
+    let id = id.ok_or_else(|| {
+        bad("request needs an integer 'id' below 2^53".into())
+    })?;
+    let route = doc
+        .get("route")
+        .and_then(Json::as_str)
+        .ok_or_else(|| bad("request needs a 'route' string".into()))?
+        .to_owned();
+    let steps = doc
+        .get("steps")
+        .and_then(Json::as_f64)
+        .filter(|x| x.is_finite() && *x >= 1.0 && *x == x.trunc())
+        .ok_or_else(|| bad("request needs an integer 'steps' >= 1".into()))?
+        as usize;
+    let h0 = match doc.get("h0") {
+        None => Vec::new(),
+        Some(v) => v
+            .as_vec_f64()
+            .ok_or_else(|| bad("'h0' must be a numeric array".into()))?,
+    };
+    let seed = match doc.get("seed") {
+        None => None,
+        Some(v) => Some(seed_from_json(v).ok_or_else(|| {
+            bad("'seed' must be a decimal string or an \
+                 integer below 2^53"
+                .into())
+        })?),
+    };
+    let stimulus = match doc.get("stimulus") {
+        None => None,
+        Some(v) => Some(decode_stimulus(v).map_err(&bad)?),
+    };
+    let ensemble = match doc.get("ensemble") {
+        None => None,
+        Some(v) => Some(decode_ensemble(v).map_err(&bad)?),
+    };
+    Ok(WireRequest {
+        id,
+        route,
+        req: TwinRequest { h0, n_points: steps, stimulus, seed, ensemble },
+    })
+}
+
+// ---------------------------------------------------------------------
+// Responses
+// ---------------------------------------------------------------------
+
+fn mat_json(t: &Trajectory) -> Json {
+    Json::Arr(t.iter().map(Json::arr_f64).collect())
+}
+
+fn stats_json(e: &EnsembleStats) -> Json {
+    let mut pairs = vec![
+        ("mean", mat_json(&e.mean)),
+        ("members", Json::Num(e.members as f64)),
+        ("nan_samples", Json::Num(e.nan_samples as f64)),
+        (
+            "percentiles",
+            Json::Arr(
+                e.percentiles
+                    .iter()
+                    .map(|(p, t)| {
+                        Json::obj(vec![
+                            ("p", Json::Num(*p)),
+                            ("trajectory", mat_json(t)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("std", mat_json(&e.std)),
+    ];
+    if !e.member_trajectories.is_empty() {
+        pairs.push((
+            "member_trajectories",
+            Json::Arr(e.member_trajectories.iter().map(mat_json).collect()),
+        ));
+    }
+    Json::obj(pairs)
+}
+
+/// Encode a success response. `wait_us`/`exec_us` are the job's queue
+/// wait and backend execution time in integer microseconds.
+pub fn encode_response(
+    id: u64,
+    r: &TwinResponse,
+    wait_us: u64,
+    exec_us: u64,
+) -> String {
+    let mut pairs = vec![
+        ("backend", Json::Str(r.backend.to_string())),
+        ("degraded", Json::Bool(r.degraded)),
+        ("exec_us", Json::Num(exec_us as f64)),
+        ("id", Json::Num(id as f64)),
+        ("ok", Json::Bool(true)),
+        ("seed", seed_json(r.seed)),
+        ("trajectory", mat_json(&r.trajectory)),
+        ("wait_us", Json::Num(wait_us as f64)),
+    ];
+    if let Some(e) = &r.ensemble {
+        pairs.push(("ensemble", stats_json(e)));
+    }
+    Json::obj(pairs).to_string()
+}
+
+/// Encode an error response. `id` is omitted when the frame never
+/// revealed one; `seed` carries the request's (possibly server-stamped)
+/// replay seed so even rejected requests are replayable.
+pub fn encode_error(
+    id: Option<u64>,
+    code: ErrorCode,
+    message: &str,
+    seed: Option<u64>,
+) -> String {
+    let mut pairs = vec![
+        (
+            "error",
+            Json::obj(vec![
+                ("code", Json::Str(code.as_str().into())),
+                ("message", Json::Str(message.into())),
+            ]),
+        ),
+        ("ok", Json::Bool(false)),
+    ];
+    if let Some(id) = id {
+        pairs.push(("id", Json::Num(id as f64)));
+    }
+    if let Some(seed) = seed {
+        pairs.push(("seed", seed_json(seed)));
+    }
+    Json::obj(pairs).to_string()
+}
+
+// ---------------------------------------------------------------------
+// Client-side response decoding
+// ---------------------------------------------------------------------
+
+/// A decoded response frame: success or a typed error.
+#[derive(Debug, Clone)]
+pub enum WireResponse {
+    Ok(WireOk),
+    Err(WireError),
+}
+
+/// A decoded success response.
+#[derive(Debug, Clone)]
+pub struct WireOk {
+    pub id: u64,
+    pub backend: String,
+    /// Replay seed (resubmit with `"seed": "<this>"` for a bit-exact
+    /// rerun).
+    pub seed: u64,
+    pub degraded: bool,
+    pub trajectory: Vec<Vec<f64>>,
+    pub ensemble: Option<WireEnsemble>,
+    pub wait_us: u64,
+    pub exec_us: u64,
+}
+
+/// Ensemble statistics on the wire (nested row form).
+#[derive(Debug, Clone)]
+pub struct WireEnsemble {
+    pub members: usize,
+    pub mean: Vec<Vec<f64>>,
+    pub std: Vec<Vec<f64>>,
+    pub percentiles: Vec<(f64, Vec<Vec<f64>>)>,
+    pub member_trajectories: Vec<Vec<Vec<f64>>>,
+    pub nan_samples: u64,
+}
+
+/// A decoded error response.
+#[derive(Debug, Clone)]
+pub struct WireError {
+    pub id: Option<u64>,
+    pub code: ErrorCode,
+    pub message: String,
+    /// Present when the server stamped a replay seed before rejecting.
+    pub seed: Option<u64>,
+}
+
+/// Numeric matrix that tolerates `null` entries (they decode to NaN —
+/// the encoder's image of non-finite samples).
+fn mat_lossy(j: &Json) -> Option<Vec<Vec<f64>>> {
+    j.as_arr()?
+        .iter()
+        .map(|row| {
+            row.as_arr()?
+                .iter()
+                .map(|v| match v {
+                    Json::Null => Some(f64::NAN),
+                    other => other.as_f64(),
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn u64_field(doc: &Json, key: &str) -> Result<u64, String> {
+    doc.get(key)
+        .and_then(Json::as_f64)
+        .filter(|x| {
+            x.is_finite() && *x >= 0.0 && *x < MAX_EXACT_INT && *x == x.trunc()
+        })
+        .map(|x| x as u64)
+        .ok_or_else(|| format!("response needs an integer '{key}'"))
+}
+
+fn decode_stats(j: &Json) -> Result<WireEnsemble, String> {
+    let mat = |key: &str| -> Result<Vec<Vec<f64>>, String> {
+        j.get(key)
+            .and_then(mat_lossy)
+            .ok_or_else(|| format!("ensemble '{key}' must be a matrix"))
+    };
+    let percentiles = j
+        .get("percentiles")
+        .and_then(Json::as_arr)
+        .ok_or("ensemble 'percentiles' must be an array")?
+        .iter()
+        .map(|entry| {
+            let p = entry.get("p").and_then(Json::as_f64)?;
+            let t = entry.get("trajectory").and_then(mat_lossy)?;
+            Some((p, t))
+        })
+        .collect::<Option<Vec<_>>>()
+        .ok_or("ensemble percentile entries need 'p' and 'trajectory'")?;
+    let member_trajectories = match j.get("member_trajectories") {
+        None => Vec::new(),
+        Some(v) => v
+            .as_arr()
+            .ok_or("'member_trajectories' must be an array")?
+            .iter()
+            .map(mat_lossy)
+            .collect::<Option<Vec<_>>>()
+            .ok_or("'member_trajectories' entries must be matrices")?,
+    };
+    Ok(WireEnsemble {
+        members: u64_field(j, "members")? as usize,
+        mean: mat("mean")?,
+        std: mat("std")?,
+        percentiles,
+        member_trajectories,
+        nan_samples: u64_field(j, "nan_samples")?,
+    })
+}
+
+/// Decode a response payload (client side of the protocol).
+pub fn decode_response(payload: &[u8]) -> Result<WireResponse, String> {
+    let text = std::str::from_utf8(payload)
+        .map_err(|_| "response payload is not UTF-8".to_string())?;
+    let doc = json::parse(text)
+        .map_err(|e| format!("response payload is not JSON: {e}"))?;
+    let ok = doc
+        .get("ok")
+        .and_then(Json::as_bool)
+        .ok_or("response needs a boolean 'ok'")?;
+    if !ok {
+        let err = doc.get("error").ok_or("error response needs 'error'")?;
+        let code = err
+            .get("code")
+            .and_then(Json::as_str)
+            .ok_or("error response needs 'error.code'")?;
+        let message = err
+            .get("message")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_owned();
+        return Ok(WireResponse::Err(WireError {
+            id: doc.get("id").and_then(seed_from_json),
+            // Unknown codes (a newer server) degrade to `internal`
+            // rather than failing the decode.
+            code: ErrorCode::parse(code).unwrap_or(ErrorCode::Internal),
+            message,
+            seed: doc.get("seed").and_then(seed_from_json),
+        }));
+    }
+    let ensemble = match doc.get("ensemble") {
+        None => None,
+        Some(e) => Some(decode_stats(e)?),
+    };
+    Ok(WireResponse::Ok(WireOk {
+        id: u64_field(&doc, "id")?,
+        backend: doc
+            .get("backend")
+            .and_then(Json::as_str)
+            .ok_or("response needs a 'backend' string")?
+            .to_owned(),
+        seed: doc
+            .get("seed")
+            .and_then(seed_from_json)
+            .ok_or("response needs a 'seed'")?,
+        degraded: doc
+            .get("degraded")
+            .and_then(Json::as_bool)
+            .ok_or("response needs a boolean 'degraded'")?,
+        trajectory: doc
+            .get("trajectory")
+            .and_then(mat_lossy)
+            .ok_or("response needs a 'trajectory' matrix")?,
+        ensemble,
+        wait_us: u64_field(&doc, "wait_us")?,
+        exec_us: u64_field(&doc, "exec_us")?,
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_layout_is_four_byte_be_length_plus_payload() {
+        assert_eq!(encode_frame("{}"), vec![0, 0, 0, 2, 0x7b, 0x7d]);
+    }
+
+    #[test]
+    fn extract_frame_is_incremental() {
+        let mut buf = Vec::new();
+        assert_eq!(extract_frame(&mut buf, 64).unwrap(), None);
+        let frame = encode_frame(r#"{"a":1}"#);
+        // Feed the frame one byte at a time: no partial extraction.
+        for &b in &frame[..frame.len() - 1] {
+            buf.push(b);
+            assert_eq!(extract_frame(&mut buf, 64).unwrap(), None);
+        }
+        buf.push(*frame.last().unwrap());
+        let payload = extract_frame(&mut buf, 64).unwrap().unwrap();
+        assert_eq!(payload, br#"{"a":1}"#);
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn extract_frame_handles_back_to_back_frames() {
+        let mut buf = encode_frame("{}");
+        buf.extend_from_slice(&encode_frame("[1]"));
+        assert_eq!(extract_frame(&mut buf, 64).unwrap().unwrap(), b"{}");
+        assert_eq!(extract_frame(&mut buf, 64).unwrap().unwrap(), b"[1]");
+        assert_eq!(extract_frame(&mut buf, 64).unwrap(), None);
+    }
+
+    #[test]
+    fn oversized_frame_is_a_protocol_error() {
+        let mut buf = encode_frame(&"x".repeat(100));
+        let err = extract_frame(&mut buf, 64).unwrap_err();
+        assert_eq!(err, FrameTooBig { declared: 100, limit: 64 });
+        assert!(err.to_string().contains("exceeds"));
+    }
+
+    #[test]
+    fn error_codes_roundtrip_their_names() {
+        for code in [
+            ErrorCode::BadFrame,
+            ErrorCode::BadRequest,
+            ErrorCode::UnknownRoute,
+            ErrorCode::RejectedOverload,
+            ErrorCode::ShuttingDown,
+            ErrorCode::Internal,
+        ] {
+            assert_eq!(ErrorCode::parse(code.as_str()), Some(code));
+        }
+        assert_eq!(ErrorCode::parse("nope"), None);
+    }
+
+    #[test]
+    fn plain_request_roundtrips() {
+        let w = WireRequest {
+            id: 1,
+            route: "lorenz96/digital".into(),
+            req: TwinRequest::autonomous(vec![], 32).with_seed(7),
+        };
+        let payload = encode_request(&w);
+        assert_eq!(
+            payload,
+            r#"{"h0":[],"id":1,"route":"lorenz96/digital","seed":"7","steps":32}"#
+        );
+        let back = decode_request(payload.as_bytes()).unwrap();
+        assert_eq!(back.id, 1);
+        assert_eq!(back.route, "lorenz96/digital");
+        assert_eq!(back.req.n_points, 32);
+        assert_eq!(back.req.seed, Some(7));
+        assert!(back.req.h0.is_empty());
+        assert!(back.req.stimulus.is_none());
+        assert!(back.req.ensemble.is_none());
+    }
+
+    #[test]
+    fn full_request_roundtrips() {
+        let spec = EnsembleSpec::new(8)
+            .with_percentiles(vec![5.0, 95.0])
+            .with_member_trajectories()
+            .with_fault_campaign(
+                FaultCampaign::new(u64::MAX).aged(3600.0),
+            );
+        let w = WireRequest {
+            id: 42,
+            route: "lorenz96/analog-aged".into(),
+            req: TwinRequest::driven(
+                vec![0.5, -1.0],
+                16,
+                Waveform::Rectangular { amp: 1.0, freq: 2.0, duty: 0.25 },
+            )
+            .with_seed(u64::MAX - 1)
+            .with_ensemble(spec.clone()),
+        };
+        let back = decode_request(encode_request(&w).as_bytes()).unwrap();
+        assert_eq!(back.id, 42);
+        assert_eq!(back.req.h0, vec![0.5, -1.0]);
+        // Full-range u64 seeds survive the string encoding exactly.
+        assert_eq!(back.req.seed, Some(u64::MAX - 1));
+        assert_eq!(
+            back.req.stimulus,
+            Some(Waveform::Rectangular { amp: 1.0, freq: 2.0, duty: 0.25 })
+        );
+        assert_eq!(back.req.ensemble, Some(spec));
+    }
+
+    #[test]
+    fn every_stimulus_kind_roundtrips() {
+        for stim in [
+            Waveform::Sine { amp: 1.0, freq: 2.0, phase: 0.5 },
+            Waveform::Triangular { amp: 0.3, freq: 1.5 },
+            Waveform::Rectangular { amp: 1.0, freq: 4.0, duty: 0.75 },
+            Waveform::ModulatedSine { amp: 1.0, freq: 8.0, mod_freq: 0.5 },
+        ] {
+            let w = WireRequest {
+                id: 1,
+                route: "r".into(),
+                req: TwinRequest::driven(vec![], 4, stim),
+            };
+            let back =
+                decode_request(encode_request(&w).as_bytes()).unwrap();
+            assert_eq!(back.req.stimulus, Some(stim));
+        }
+    }
+
+    #[test]
+    fn stimulus_defaults_fill_in_on_decode() {
+        let payload = br#"{"id":1,"route":"r","steps":2,
+            "stimulus":{"kind":"sine","amp":1,"freq":2}}"#;
+        let w = decode_request(payload).unwrap();
+        assert_eq!(
+            w.req.stimulus,
+            Some(Waveform::Sine { amp: 1.0, freq: 2.0, phase: 0.0 })
+        );
+        let payload = br#"{"id":1,"route":"r","steps":2,
+            "stimulus":{"kind":"rectangular","amp":1,"freq":2}}"#;
+        let w = decode_request(payload).unwrap();
+        assert_eq!(
+            w.req.stimulus,
+            Some(Waveform::Rectangular { amp: 1.0, freq: 2.0, duty: 0.5 })
+        );
+    }
+
+    #[test]
+    fn schema_violations_are_typed_and_keep_the_id() {
+        // Non-JSON: bad_frame, no id.
+        let e = decode_request(b"not json").unwrap_err();
+        assert_eq!(e.code, ErrorCode::BadFrame);
+        assert_eq!(e.id, None);
+        // Invalid UTF-8: bad_frame.
+        let e = decode_request(&[0xff, 0xfe]).unwrap_err();
+        assert_eq!(e.code, ErrorCode::BadFrame);
+        // Missing id: bad_request without correlation.
+        let e = decode_request(br#"{"route":"r","steps":2}"#).unwrap_err();
+        assert_eq!(e.code, ErrorCode::BadRequest);
+        assert_eq!(e.id, None);
+        // Later violations still surface the id for correlation.
+        for payload in [
+            br#"{"id":9,"steps":2}"#.as_slice(),
+            br#"{"id":9,"route":"r"}"#.as_slice(),
+            br#"{"id":9,"route":"r","steps":0}"#.as_slice(),
+            br#"{"id":9,"route":"r","steps":2,"seed":1.5}"#.as_slice(),
+            br#"{"id":9,"route":"r","steps":2,"h0":"x"}"#.as_slice(),
+            br#"{"id":9,"route":"r","steps":2,
+                "stimulus":{"kind":"saw","amp":1,"freq":1}}"#
+                .as_slice(),
+            br#"{"id":9,"route":"r","steps":2,"ensemble":{}}"#.as_slice(),
+        ] {
+            let e = decode_request(payload).unwrap_err();
+            assert_eq!(e.code, ErrorCode::BadRequest, "{}", e.msg);
+            assert_eq!(e.id, Some(9), "{}", e.msg);
+        }
+    }
+
+    #[test]
+    fn ok_response_roundtrips() {
+        let resp = TwinResponse {
+            trajectory: Trajectory::from_nested(&[
+                vec![1.0, 2.0],
+                vec![3.0, 4.0],
+            ]),
+            backend: "digital",
+            seed: u64::MAX,
+            ensemble: None,
+            degraded: true,
+        };
+        let payload = encode_response(5, &resp, 120, 4200);
+        match decode_response(payload.as_bytes()).unwrap() {
+            WireResponse::Ok(ok) => {
+                assert_eq!(ok.id, 5);
+                assert_eq!(ok.backend, "digital");
+                assert_eq!(ok.seed, u64::MAX);
+                assert!(ok.degraded);
+                assert_eq!(
+                    ok.trajectory,
+                    vec![vec![1.0, 2.0], vec![3.0, 4.0]]
+                );
+                assert_eq!(ok.wait_us, 120);
+                assert_eq!(ok.exec_us, 4200);
+                assert!(ok.ensemble.is_none());
+            }
+            other => panic!("expected ok, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn non_finite_samples_survive_as_nan() {
+        let resp = TwinResponse {
+            trajectory: Trajectory::from_nested(&[vec![
+                f64::NAN,
+                f64::INFINITY,
+                1.0,
+            ]]),
+            backend: "digital",
+            seed: 1,
+            ensemble: None,
+            degraded: false,
+        };
+        let payload = encode_response(1, &resp, 0, 0);
+        assert!(payload.contains("[null,null,1]"), "{payload}");
+        match decode_response(payload.as_bytes()).unwrap() {
+            WireResponse::Ok(ok) => {
+                assert!(ok.trajectory[0][0].is_nan());
+                assert!(ok.trajectory[0][1].is_nan());
+                assert_eq!(ok.trajectory[0][2], 1.0);
+            }
+            other => panic!("expected ok, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn ensemble_response_roundtrips() {
+        let stats = EnsembleStats {
+            members: 2,
+            mean: Trajectory::from_nested(&[vec![1.0], vec![2.0]]),
+            std: Trajectory::from_nested(&[vec![0.1], vec![0.2]]),
+            percentiles: vec![(
+                95.0,
+                Trajectory::from_nested(&[vec![1.5], vec![2.5]]),
+            )],
+            member_trajectories: vec![
+                Trajectory::from_nested(&[vec![0.9], vec![1.8]]),
+                Trajectory::from_nested(&[vec![1.1], vec![2.2]]),
+            ],
+            nan_samples: 3,
+        };
+        let resp = TwinResponse {
+            trajectory: Trajectory::from_nested(&[vec![1.0], vec![2.0]]),
+            backend: "analog",
+            seed: 9,
+            ensemble: Some(stats),
+            degraded: false,
+        };
+        let payload = encode_response(2, &resp, 10, 20);
+        match decode_response(payload.as_bytes()).unwrap() {
+            WireResponse::Ok(ok) => {
+                let e = ok.ensemble.expect("ensemble present");
+                assert_eq!(e.members, 2);
+                assert_eq!(e.mean, vec![vec![1.0], vec![2.0]]);
+                assert_eq!(e.std, vec![vec![0.1], vec![0.2]]);
+                assert_eq!(e.percentiles.len(), 1);
+                assert_eq!(e.percentiles[0].0, 95.0);
+                assert_eq!(e.member_trajectories.len(), 2);
+                assert_eq!(e.nan_samples, 3);
+            }
+            other => panic!("expected ok, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn error_response_roundtrips_with_seed_echo() {
+        let payload = encode_error(
+            Some(9),
+            ErrorCode::RejectedOverload,
+            "overloaded: 128 requests in flight (global limit 128)",
+            Some(u64::MAX - 3),
+        );
+        match decode_response(payload.as_bytes()).unwrap() {
+            WireResponse::Err(e) => {
+                assert_eq!(e.id, Some(9));
+                assert_eq!(e.code, ErrorCode::RejectedOverload);
+                assert!(e.message.contains("overloaded"));
+                assert_eq!(e.seed, Some(u64::MAX - 3));
+            }
+            other => panic!("expected error, got {other:?}"),
+        }
+        // Frame-level errors may omit both id and seed.
+        let payload =
+            encode_error(None, ErrorCode::BadFrame, "not JSON", None);
+        match decode_response(payload.as_bytes()).unwrap() {
+            WireResponse::Err(e) => {
+                assert_eq!(e.id, None);
+                assert_eq!(e.seed, None);
+                assert_eq!(e.code, ErrorCode::BadFrame);
+            }
+            other => panic!("expected error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_error_codes_degrade_to_internal() {
+        let payload = r#"{"error":{"code":"weird","message":"m"},"ok":false}"#;
+        match decode_response(payload.as_bytes()).unwrap() {
+            WireResponse::Err(e) => {
+                assert_eq!(e.code, ErrorCode::Internal)
+            }
+            other => panic!("expected error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn canonical_encoding_is_deterministic() {
+        let w = WireRequest {
+            id: 3,
+            route: "hp/digital".into(),
+            req: TwinRequest::driven(
+                vec![0.0, 0.0],
+                8,
+                Waveform::Sine { amp: 0.5, freq: 2.0, phase: 0.0 },
+            ),
+        };
+        let a = encode_request(&w);
+        let b = encode_request(&w);
+        assert_eq!(a, b);
+        // Sorted keys: "h0" < "id" < "route" < "steps" < "stimulus".
+        let h0 = a.find(r#""h0""#).unwrap();
+        let id = a.find(r#""id""#).unwrap();
+        let route = a.find(r#""route""#).unwrap();
+        let stim = a.find(r#""stimulus""#).unwrap();
+        assert!(h0 < id && id < route && route < stim);
+    }
+}

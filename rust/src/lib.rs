@@ -294,6 +294,45 @@
 //!    pooled stats describe a device population and replay bit-exactly
 //!    from the (request seed, yield seed) pair.
 //!
+//! ## The network front door (TCP serving + wire protocol)
+//!
+//! [`coordinator::net`] puts the coordinator behind a socket: a single
+//! poll-loop thread over non-blocking `std::net` (no async runtime —
+//! the dependency budget is `anyhow` only) speaking the length-prefixed
+//! JSON protocol of [`coordinator::wire`], specified byte-for-byte in
+//! `docs/PROTOCOL.md` and operated per `docs/SERVING.md`. Rules:
+//!
+//! 1. **One admission discipline.** The server decodes a frame into the
+//!    same `twin::TwinRequest` in-process callers build and submits it
+//!    through the same `coordinator::service::Coordinator::try_submit`
+//!    gates (global + per-route [`coordinator::backpressure`]); sheds
+//!    surface as typed `rejected_overload` error frames and land in the
+//!    same per-route shed counters. A connection cap guards the poll
+//!    loop itself; past it, sockets get one `rejected_overload` frame
+//!    and are closed. Nothing network-facing ever blocks the loop: all
+//!    sockets are non-blocking, responses queue per-connection.
+//! 2. **Seeds are stamped before admission.** The net layer assigns a
+//!    seedless request its job-derived replay seed *before* the
+//!    admission gates, so even a shed request's error frame echoes the
+//!    seed that a retry can pin (`seed` field of the error envelope) —
+//!    the replay contract of the noise rules above extends to
+//!    rejections. Seeds ride the wire as decimal strings (u64 exceeds
+//!    the f64 mantissa of JSON numbers).
+//! 3. **Canonical encoding.** [`coordinator::wire`] encodes objects
+//!    with sorted keys and deterministic number formatting, so protocol
+//!    examples in the docs round-trip bit-exactly
+//!    (`rust/tests/wire.rs`) and servers are byte-reproducible given
+//!    the same responses.
+//! 4. **Graceful drain.** Shutdown stops accepting, answers new frames
+//!    with `shutting_down`, flushes queued responses within the drain
+//!    budget, then joins — in-flight work is completed, never dropped
+//!    silently. Socket-level coverage lives in `rust/tests/serve_net.rs`.
+//!
+//! `memode serve --listen HOST:PORT` binds it (`--synthetic` serves
+//! fixture weights, no artifacts needed); `memode loadgen` (or the
+//! standalone `loadgen` binary) drives it and reports p50/p99/p99.9
+//! latency + rejected fraction into `BENCH_serve.json`.
+//!
 //! Python never runs on the request path: after `make artifacts` the Rust
 //! binary is self-contained.
 

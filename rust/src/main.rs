@@ -6,8 +6,11 @@
 //!   retention, letters/yield, programming-error histogram)
 //! * `run-twin`     — one twin inference on a chosen route, printing the
 //!   trajectory head and basic accuracy vs ground truth
-//! * `serve`        — start the coordinator and run a synthetic client
-//!   load, printing latency/throughput telemetry
+//! * `serve`        — start the coordinator; `--listen` binds the TCP
+//!   front door (`docs/SERVING.md`), otherwise an in-process synthetic
+//!   load prints latency/throughput telemetry
+//! * `loadgen`      — drive a running server over TCP and report
+//!   p50/p99/p99.9 latency + rejected fraction (`BENCH_serve.json`)
 //! * `lifetime`     — scripted device-lifetime scenario: aging drift,
 //!   health probes, recalibration, forced faults, graceful degradation
 //! * `routes`       — list available twin routes
@@ -19,6 +22,7 @@ use anyhow::Result;
 
 use memode::analog::system::AnalogNoise;
 use memode::config::SystemConfig;
+use memode::coordinator::net::{NetConfig, NetServer};
 use memode::coordinator::service::Coordinator;
 use memode::device::taox::DeviceConfig;
 use memode::device::{programming, retention, taox, yield_model};
@@ -48,6 +52,9 @@ fn run() -> Result<()> {
         "characterize" => characterize(argv),
         "run-twin" => run_twin(argv),
         "serve" => serve(argv),
+        "loadgen" => {
+            memode::coordinator::loadgen::cli("memode loadgen", argv)
+        }
         "lifetime" => lifetime(argv),
         "routes" => routes(argv),
         "config" => config_cmd(argv),
@@ -59,7 +66,8 @@ fn run() -> Result<()> {
                  Commands:\n\
                  \x20 characterize   Fig. 2 device experiments\n\
                  \x20 run-twin       one twin inference\n\
-                 \x20 serve          coordinator + synthetic load\n\
+                 \x20 serve          coordinator (--listen = TCP front door)\n\
+                 \x20 loadgen        drive a running server over TCP\n\
                  \x20 lifetime       device aging / recalibration scenario\n\
                  \x20 routes         list twin routes\n\
                  \x20 config         print effective config JSON\n",
@@ -317,39 +325,134 @@ fn run_twin(argv: Vec<String>) -> Result<()> {
 // ---------------------------------------------------------------------------
 
 fn serve(argv: Vec<String>) -> Result<()> {
-    let args = Args::new("memode serve", "coordinator + synthetic load")
-        .opt("config", "", "config JSON path")
-        .opt("requests", "64", "synthetic requests to issue")
-        .opt("steps", "100", "samples per request")
-        .opt("route", "lorenz96/digital", "route to load-test")
-        .opt(
-            "ensemble",
-            "0",
-            "ensemble members per synthetic request (0 = plain)",
-        )
-        .flag("pjrt", "start the PJRT runtime")
-        .parse(argv)
-        .map_err(|m| anyhow::anyhow!("{m}"))?;
-    let cfg = load_config(&args)?;
-    let weights = TrainedWeights::load(&cfg)?;
+    let args = Args::new(
+        "memode serve",
+        "coordinator + TCP front door or in-process synthetic load",
+    )
+    .opt("config", "", "config JSON path")
+    .opt(
+        "listen",
+        "",
+        "bind the TCP front door at host:port (also $MEMODE_LISTEN; \
+         port 0 picks a free one); empty = in-process load only",
+    )
+    .opt(
+        "duration",
+        "0",
+        "with --listen: seconds to serve before draining (0 = forever)",
+    )
+    .opt(
+        "stats-every",
+        "5",
+        "with --listen: telemetry print period (s; 0 = quiet)",
+    )
+    .flag(
+        "synthetic",
+        "serve synthetic fixture weights (no artifacts needed)",
+    )
+    .opt("requests", "64", "synthetic requests to issue")
+    .opt("steps", "100", "samples per request")
+    .opt("route", "lorenz96/digital", "route to load-test")
+    .opt(
+        "ensemble",
+        "0",
+        "ensemble members per synthetic request (0 = plain)",
+    )
+    .flag("pjrt", "start the PJRT runtime")
+    .parse(argv)
+    .map_err(|m| anyhow::anyhow!("{m}"))?;
+    let mut cfg = load_config(&args)?;
+    cfg.serve.apply_env();
+    let synthetic = args.get_bool("synthetic");
     let service = if args.get_bool("pjrt") {
+        anyhow::ensure!(
+            !synthetic,
+            "--pjrt needs trained artifacts (drop --synthetic)"
+        );
         Some(PjrtService::start(&cfg.artifacts_dir)?)
     } else {
         None
     };
-    // Shared serving telemetry: sharded-route shard workers report into
-    // the same counters the coordinator snapshots.
+    // Shared serving telemetry: sharded-route shard workers, the health
+    // monitor and the network front door all report into the same
+    // counters the coordinator snapshots.
     let telemetry = std::sync::Arc::new(
         memode::coordinator::telemetry::Telemetry::new(),
     );
-    let reg = memode::twin::setup::build_registry_with_telemetry(
-        &cfg,
-        &weights,
-        service.as_ref().map(|s| s.handle()),
-        Some(std::sync::Arc::clone(&telemetry)),
-    )?;
-    let coord =
-        Coordinator::start_with_telemetry(reg, &cfg.serve, telemetry);
+    let reg = if synthetic {
+        memode::twin::setup::build_synthetic_registry(Some(
+            std::sync::Arc::clone(&telemetry),
+        ))
+    } else {
+        let weights = TrainedWeights::load(&cfg)?;
+        memode::twin::setup::build_registry_with_telemetry(
+            &cfg,
+            &weights,
+            service.as_ref().map(|s| s.handle()),
+            Some(std::sync::Arc::clone(&telemetry)),
+        )?
+    };
+    let coord = std::sync::Arc::new(Coordinator::start_with_telemetry(
+        reg, &cfg.serve, telemetry,
+    ));
+
+    // --listen (or $MEMODE_LISTEN): real TCP serving instead of the
+    // in-process synthetic load.
+    let listen = {
+        let l = args.get("listen");
+        if l.is_empty() {
+            std::env::var("MEMODE_LISTEN").unwrap_or_default()
+        } else {
+            l
+        }
+    };
+    if !listen.is_empty() {
+        let mut ncfg = NetConfig { addr: listen, ..NetConfig::default() };
+        ncfg.apply_env();
+        let handle =
+            NetServer::start(std::sync::Arc::clone(&coord), ncfg.clone())?;
+        println!(
+            "listening on {} ({} workers, max batch {}, {} connection \
+             cap){}",
+            handle.addr(),
+            cfg.serve.workers,
+            cfg.serve.max_batch,
+            ncfg.max_conns,
+            if synthetic { " [synthetic routes]" } else { "" }
+        );
+        let duration = args.get_f64("duration");
+        let every = args.get_f64("stats-every");
+        let started = std::time::Instant::now();
+        loop {
+            let tick = if every > 0.0 { every } else { 1.0 };
+            let sleep = if duration > 0.0 {
+                let left = duration - started.elapsed().as_secs_f64();
+                if left <= 0.0 {
+                    break;
+                }
+                tick.min(left)
+            } else {
+                tick
+            };
+            std::thread::sleep(std::time::Duration::from_secs_f64(sleep));
+            if every > 0.0 {
+                println!("telemetry: {}", coord.stats());
+            }
+        }
+        let net = handle.shutdown();
+        println!(
+            "drained: {} connections ({} refused), {} frames in / {} \
+             out, {} protocol errors",
+            net.connections,
+            net.conns_rejected,
+            net.frames_in,
+            net.frames_out,
+            net.protocol_errors
+        );
+        report_stats(&coord.stats());
+        return Ok(());
+    }
+
     let route = args.get("route");
     let n = args.get_usize("requests");
     let steps = args.get_usize("steps");
@@ -392,6 +495,30 @@ fn serve(argv: Vec<String>) -> Result<()> {
         ok as f64 / wall
     );
     let stats = coord.stats();
+    report_stats(&stats);
+    // Replay handles: every served rollout's noise seed is recorded, so
+    // any noisy trajectory can be reproduced bit-exactly offline
+    // (recent_seeds is chronological; the tail is the newest). Ensemble
+    // jobs replay with the same family seed and --ensemble width.
+    let pjrt_flag =
+        if route.ends_with("/pjrt") { " --pjrt" } else { "" };
+    let ens_flag = if ensemble > 0 {
+        format!(" --ensemble {ensemble}")
+    } else {
+        String::new()
+    };
+    for &(job, seed) in stats.recent_seeds.iter().rev().take(3) {
+        println!(
+            "replay job {job}: memode run-twin --route {route} --steps \
+             {steps}{ens_flag}{pjrt_flag} --seed {seed}"
+        );
+    }
+    Ok(())
+}
+
+/// Shared end-of-run observability for both serving modes: telemetry
+/// line, admission gates, device-lifetime status, ensemble totals.
+fn report_stats(stats: &memode::coordinator::telemetry::TelemetrySnapshot) {
     println!("telemetry: {stats}");
     // Admission-gate observability: per-route admitted/shed counts plus
     // the pooled rejected fraction (NaN-free only once traffic arrived).
@@ -430,24 +557,6 @@ fn serve(argv: Vec<String>) -> Result<()> {
                 / stats.ensemble_rollouts as f64
         );
     }
-    // Replay handles: every served rollout's noise seed is recorded, so
-    // any noisy trajectory can be reproduced bit-exactly offline
-    // (recent_seeds is chronological; the tail is the newest). Ensemble
-    // jobs replay with the same family seed and --ensemble width.
-    let pjrt_flag =
-        if route.ends_with("/pjrt") { " --pjrt" } else { "" };
-    let ens_flag = if ensemble > 0 {
-        format!(" --ensemble {ensemble}")
-    } else {
-        String::new()
-    };
-    for &(job, seed) in stats.recent_seeds.iter().rev().take(3) {
-        println!(
-            "replay job {job}: memode run-twin --route {route} --steps \
-             {steps}{ens_flag}{pjrt_flag} --seed {seed}"
-        );
-    }
-    Ok(())
 }
 
 // ---------------------------------------------------------------------------

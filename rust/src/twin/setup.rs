@@ -228,6 +228,98 @@ pub fn build_registry_with_telemetry(
     Ok(reg)
 }
 
+/// A self-contained route table over **synthetic** weights — no
+/// `artifacts/` on disk required. This is what `memode serve
+/// --synthetic` and the CI serve-smoke job bind to a socket: the same
+/// coordinator + network stack as production, exercising every serving
+/// path (plain, ensemble, health-monitored aging) over fixture models:
+///
+/// | route                  | backend                                  |
+/// |------------------------|------------------------------------------|
+/// | `lorenz96/digital`     | RK4 on the decay fixture field           |
+/// | `lorenz96/analog`      | quiet memristive solver (no faults)      |
+/// | `lorenz96/analog-aged` | aging crossbar behind the health monitor |
+/// | `hp/digital`           | RK4 on the trained-shape HP field        |
+///
+/// Pass the coordinator's [`Telemetry`](crate::coordinator::telemetry)
+/// so the aged route's lifetime snapshots surface in served metrics.
+pub fn build_synthetic_registry(
+    telemetry: Option<Arc<crate::coordinator::telemetry::Telemetry>>,
+) -> TwinRegistry {
+    use crate::analog::system::AnalogNoise;
+    use crate::models::loader::decay_mlp_weights;
+    use crate::twin::health::{LifetimeConfig, MonitoredTwin};
+    use crate::twin::throughput::hp_weights;
+
+    // Solver resolution for the synthetic analogue routes: smaller than
+    // the paper-default substeps so a CI smoke run stays cheap, while
+    // still driving the full crossbar read/write path.
+    const SYNTH_SUBSTEPS: usize = 5;
+
+    let mut reg = TwinRegistry::new();
+    let noise = AnalogNoise { read: 0.01, prog: 0.0 };
+    let seed = 42;
+    {
+        let w = decay_mlp_weights(6);
+        reg.register("lorenz96/digital", move || {
+            Box::new(Lorenz96Twin::digital(&w))
+        });
+    }
+    {
+        let w = decay_mlp_weights(6);
+        let dev = DeviceConfig {
+            fault_rate: 0.0,
+            pulse_sigma: 0.0,
+            ..Default::default()
+        };
+        reg.register("lorenz96/analog", move || {
+            Box::new(Lorenz96Twin::analog_opts(
+                &w,
+                &dev,
+                noise,
+                seed,
+                crate::twin::lorenz96::L96AnalogOpts {
+                    substeps: SYNTH_SUBSTEPS,
+                    ..Default::default()
+                },
+            ))
+        });
+    }
+    {
+        // Aging crossbar behind the health monitor: light probe cadence
+        // so short smoke runs stay fast, but rollouts still age the
+        // device and can trigger recalibration / degraded fallback.
+        let w = decay_mlp_weights(6);
+        let dev = DeviceConfig::default();
+        let tel = telemetry.clone();
+        reg.register("lorenz96/analog-aged", move || {
+            let mut twin = MonitoredTwin::lorenz96(
+                &w,
+                &dev,
+                noise,
+                seed,
+                SYNTH_SUBSTEPS,
+                LifetimeConfig {
+                    age_per_rollout_s: 3600.0,
+                    probe_every: 64,
+                    probe_points: 8,
+                    ..Default::default()
+                },
+            );
+            if let Some(t) = &tel {
+                twin = twin
+                    .with_telemetry("lorenz96/analog-aged", Arc::clone(t));
+            }
+            Box::new(twin)
+        });
+    }
+    {
+        let w = hp_weights();
+        reg.register("hp/digital", move || Box::new(HpTwin::digital(&w)));
+    }
+    reg
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -286,6 +378,35 @@ mod tests {
             assert!(reg.contains(route), "missing {route}");
         }
         assert!(!reg.contains("hp/pjrt"));
+    }
+
+    #[test]
+    fn synthetic_registry_needs_no_artifacts() {
+        let reg = build_synthetic_registry(None);
+        for route in [
+            "lorenz96/digital",
+            "lorenz96/analog",
+            "lorenz96/analog-aged",
+            "hp/digital",
+        ] {
+            assert!(reg.contains(route), "missing {route}");
+        }
+        // Every factory must actually instantiate and serve a rollout
+        // (HP is a driven twin, so its smoke request carries a stimulus).
+        use crate::twin::TwinRequest;
+        use crate::workload::stimuli::Waveform;
+        for route in reg.keys() {
+            let mut twin = reg.create(&route).unwrap();
+            let req = if route.starts_with("hp/") {
+                TwinRequest::driven(vec![], 4, Waveform::sine(1.0, 50.0))
+            } else {
+                TwinRequest::autonomous(vec![], 4)
+            }
+            .with_seed(7);
+            let resp = twin.run(&req).unwrap();
+            assert_eq!(resp.trajectory.len(), 4, "short rollout on {route}");
+            assert_eq!(resp.seed, 7, "seed echo on {route}");
+        }
     }
 
     #[test]

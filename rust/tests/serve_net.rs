@@ -1,0 +1,266 @@
+//! Socket-level integration tests for the network front door: real TCP
+//! clients against a real [`NetServer`] over real registries — the
+//! acceptance scenarios of the serving layer.
+//!
+//! * concurrent clients served end to end over the synthetic registry
+//!   (plain digital, analogue ensemble, health-monitored aged route);
+//! * admission control past the queue bound: typed `rejected_overload`
+//!   frames that echo a replay seed, recorded in per-route shed
+//!   counters;
+//! * graceful drain completing in-flight work;
+//! * per-request errors leaving the connection usable.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use memode::config::ServeConfig;
+use memode::coordinator::client::WireClient;
+use memode::coordinator::net::{NetConfig, NetServer};
+use memode::coordinator::service::Coordinator;
+use memode::coordinator::wire::{ErrorCode, WireRequest, WireResponse};
+use memode::twin::registry::TwinRegistry;
+use memode::twin::setup::build_synthetic_registry;
+use memode::twin::{EnsembleSpec, Twin, TwinRequest, TwinResponse};
+use memode::util::tensor::Trajectory;
+
+/// A deliberately slow single-state twin: holds the one worker busy so
+/// pipelined submissions pile into (and overflow) the admission gates.
+struct SlowTwin {
+    delay: Duration,
+}
+
+impl Twin for SlowTwin {
+    fn name(&self) -> &str {
+        "slow"
+    }
+    fn state_dim(&self) -> usize {
+        1
+    }
+    fn dt(&self) -> f64 {
+        0.1
+    }
+    fn default_h0(&self) -> Vec<f64> {
+        vec![0.0]
+    }
+    fn run(&mut self, req: &TwinRequest) -> anyhow::Result<TwinResponse> {
+        std::thread::sleep(self.delay);
+        Ok(TwinResponse {
+            trajectory: Trajectory::zeros(1, req.n_points),
+            backend: "slow",
+            seed: req.seed.unwrap_or(0),
+            ensemble: None,
+            degraded: false,
+        })
+    }
+}
+
+fn start_slow_server(
+    delay: Duration,
+    queue_depth: usize,
+) -> (Arc<Coordinator>, memode::coordinator::net::NetHandle) {
+    let mut reg = TwinRegistry::new();
+    reg.register("slow", move || Box::new(SlowTwin { delay }));
+    let cfg = ServeConfig {
+        workers: 1,
+        max_batch: 1,
+        batch_window_s: 1e-4,
+        queue_depth,
+        route_queue_depth: queue_depth,
+    };
+    let coord = Arc::new(Coordinator::start(reg, &cfg));
+    let handle = NetServer::start(
+        Arc::clone(&coord),
+        NetConfig { addr: "127.0.0.1:0".into(), ..NetConfig::default() },
+    )
+    .expect("server starts");
+    (coord, handle)
+}
+
+fn plain(id: u64, route: &str, steps: usize) -> WireRequest {
+    WireRequest {
+        id,
+        route: route.into(),
+        req: TwinRequest::autonomous(vec![], steps),
+    }
+}
+
+#[test]
+fn concurrent_clients_are_served_across_synthetic_routes() {
+    let reg = build_synthetic_registry(None);
+    let cfg = ServeConfig {
+        workers: 2,
+        max_batch: 8,
+        batch_window_s: 1e-3,
+        queue_depth: 64,
+        route_queue_depth: 32,
+    };
+    let coord = Arc::new(Coordinator::start(reg, &cfg));
+    let handle = NetServer::start(
+        Arc::clone(&coord),
+        NetConfig { addr: "127.0.0.1:0".into(), ..NetConfig::default() },
+    )
+    .expect("server starts");
+    let addr = handle.addr().to_string();
+
+    // Client A: plain digital rollouts. Client B: an analogue ensemble
+    // and the health-monitored aged route. Both run concurrently over
+    // their own connections.
+    let addr_a = addr.clone();
+    let a = std::thread::spawn(move || {
+        let mut client = WireClient::connect(&addr_a).unwrap();
+        for id in 0..4u64 {
+            let mut w = plain(id, "lorenz96/digital", 8);
+            w.req = w.req.with_seed(1000 + id);
+            match client.call(&w).unwrap() {
+                WireResponse::Ok(ok) => {
+                    assert_eq!(ok.id, id);
+                    assert_eq!(ok.seed, 1000 + id);
+                    assert_eq!(ok.trajectory.len(), 8);
+                    assert_eq!(ok.trajectory[0].len(), 6);
+                }
+                other => panic!("client A expected ok, got {other:?}"),
+            }
+        }
+    });
+    let b = std::thread::spawn(move || {
+        let mut client = WireClient::connect(&addr).unwrap();
+        let mut w = plain(100, "lorenz96/analog", 6);
+        w.req = w
+            .req
+            .with_seed(7)
+            .with_ensemble(EnsembleSpec::new(4).with_percentiles(vec![50.0]));
+        match client.call(&w).unwrap() {
+            WireResponse::Ok(ok) => {
+                let e = ok.ensemble.expect("ensemble stats");
+                assert_eq!(e.members, 4);
+                assert_eq!(e.mean.len(), 6);
+                assert_eq!(e.percentiles.len(), 1);
+            }
+            other => panic!("ensemble expected ok, got {other:?}"),
+        }
+        let w = plain(101, "lorenz96/analog-aged", 6);
+        match client.call(&w).unwrap() {
+            WireResponse::Ok(ok) => {
+                assert_eq!(ok.id, 101);
+                assert_eq!(ok.trajectory.len(), 6);
+                // Server-stamped seed: echoed, replayable.
+                assert!(ok.seed != 0);
+            }
+            other => panic!("aged route expected ok, got {other:?}"),
+        }
+    });
+    a.join().unwrap();
+    b.join().unwrap();
+
+    let stats = coord.stats();
+    assert!(stats.completed >= 6, "completed {}", stats.completed);
+    let net = handle.shutdown();
+    assert_eq!(net.connections, 2);
+    assert_eq!(net.protocol_errors, 0);
+}
+
+#[test]
+fn overload_sheds_with_typed_frames_seed_echo_and_counters() {
+    let (coord, handle) =
+        start_slow_server(Duration::from_millis(150), 2);
+    let mut client =
+        WireClient::connect(&handle.addr().to_string()).unwrap();
+
+    // Pipeline far past the in-flight bound of 2 without reading, so
+    // the admission gate must shed; then collect every response.
+    const N: u64 = 10;
+    for id in 0..N {
+        client.send(&plain(id, "slow", 2)).unwrap();
+    }
+    let mut ok = 0u64;
+    let mut rejected = 0u64;
+    for _ in 0..N {
+        match client.recv().unwrap() {
+            WireResponse::Ok(_) => ok += 1,
+            WireResponse::Err(e) => {
+                assert_eq!(
+                    e.code,
+                    ErrorCode::RejectedOverload,
+                    "unexpected error: {}",
+                    e.message
+                );
+                // Sheds still echo the pre-admission replay seed.
+                assert!(e.seed.is_some(), "shed without seed echo");
+                assert!(e.id.is_some());
+                rejected += 1;
+            }
+        }
+    }
+    assert!(ok >= 1, "nothing completed");
+    assert!(rejected >= 1, "nothing was shed past a depth-2 gate");
+    assert_eq!(ok + rejected, N);
+
+    // The sheds landed in the per-route admission counters.
+    let stats = coord.stats();
+    let load = stats
+        .route_load
+        .iter()
+        .find(|(r, _)| r == "slow")
+        .map(|(_, l)| l)
+        .expect("route counters");
+    assert_eq!(load.admitted, ok);
+    assert_eq!(load.shed, rejected);
+    drop(client);
+    let net = handle.shutdown();
+    assert_eq!(net.frames_in, N);
+    assert_eq!(net.frames_out, N);
+    assert_eq!(net.protocol_errors, 0);
+}
+
+#[test]
+fn graceful_drain_completes_in_flight_work() {
+    let (_coord, handle) =
+        start_slow_server(Duration::from_millis(200), 8);
+    let mut client =
+        WireClient::connect(&handle.addr().to_string()).unwrap();
+    client.send(&plain(7, "slow", 3)).unwrap();
+    // Let the server admit the job, then drain while it is mid-flight.
+    std::thread::sleep(Duration::from_millis(50));
+    let stopper = std::thread::spawn(move || handle.shutdown());
+    match client.recv().expect("drained response arrives") {
+        WireResponse::Ok(ok) => assert_eq!(ok.id, 7),
+        other => panic!("expected the in-flight ok, got {other:?}"),
+    }
+    let net = stopper.join().unwrap();
+    assert_eq!(net.frames_in, 1);
+    assert_eq!(net.frames_out, 1);
+}
+
+#[test]
+fn per_request_errors_leave_the_connection_usable() {
+    let (_coord, handle) =
+        start_slow_server(Duration::from_millis(1), 8);
+    let mut client =
+        WireClient::connect(&handle.addr().to_string()).unwrap();
+
+    // Unknown route: typed error, connection stays up.
+    match client.call(&plain(1, "no/such", 2)).unwrap() {
+        WireResponse::Err(e) => {
+            assert_eq!(e.code, ErrorCode::UnknownRoute);
+            assert_eq!(e.id, Some(1));
+        }
+        other => panic!("expected unknown_route, got {other:?}"),
+    }
+    // Schema violation: typed error, connection stays up.
+    client.send_raw(r#"{"id":2,"route":"slow"}"#).unwrap();
+    match client.recv().unwrap() {
+        WireResponse::Err(e) => {
+            assert_eq!(e.code, ErrorCode::BadRequest);
+            assert_eq!(e.id, Some(2));
+        }
+        other => panic!("expected bad_request, got {other:?}"),
+    }
+    // The same socket still serves real work afterwards.
+    match client.call(&plain(3, "slow", 2)).unwrap() {
+        WireResponse::Ok(ok) => assert_eq!(ok.id, 3),
+        other => panic!("expected ok, got {other:?}"),
+    }
+    let net = handle.shutdown();
+    assert_eq!(net.connections, 1);
+    assert_eq!(net.protocol_errors, 1);
+}

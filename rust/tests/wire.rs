@@ -1,0 +1,182 @@
+//! `docs/PROTOCOL.md` enforcement: the documented wire examples must be
+//! exactly what the codec produces, byte for byte, and every JSON block
+//! in the document must parse. The doc carries
+//! `<!-- wire-example: NAME -->` markers in front of its canonical
+//! fenced blocks; this suite re-encodes each named example with the
+//! real codec and diffs against the file, so the spec cannot drift from
+//! `rust/src/coordinator/wire.rs`.
+
+use memode::coordinator::wire::{
+    self, encode_error, encode_frame, encode_request, encode_response,
+    ErrorCode, WireRequest, WireResponse,
+};
+use memode::twin::{EnsembleSpec, TwinRequest, TwinResponse};
+use memode::util::json;
+use memode::util::tensor::Trajectory;
+use memode::workload::stimuli::Waveform;
+
+fn protocol_md() -> String {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("../docs/PROTOCOL.md");
+    std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+}
+
+/// The fenced block following `<!-- wire-example: name -->`, with the
+/// fence lines stripped.
+fn example(doc: &str, name: &str) -> String {
+    let marker = format!("<!-- wire-example: {name} -->");
+    let after = doc
+        .split_once(&marker)
+        .unwrap_or_else(|| panic!("marker '{marker}' not in PROTOCOL.md"))
+        .1;
+    let fence_start = after
+        .find("```")
+        .unwrap_or_else(|| panic!("no fence after marker '{name}'"));
+    let body = &after[fence_start..];
+    let first_newline = body.find('\n').expect("fence line ends");
+    let rest = &body[first_newline + 1..];
+    let fence_end = rest
+        .find("```")
+        .unwrap_or_else(|| panic!("unterminated fence for '{name}'"));
+    rest[..fence_end].trim().to_string()
+}
+
+#[test]
+fn frame_hex_example_matches_the_encoder() {
+    let doc = protocol_md();
+    let hex: Vec<u8> = example(&doc, "frame-hex")
+        .split_whitespace()
+        .map(|b| u8::from_str_radix(b, 16).expect("hex byte"))
+        .collect();
+    assert_eq!(hex, encode_frame("{}"), "frame-hex drifted from the codec");
+}
+
+#[test]
+fn plain_request_example_is_canonical() {
+    let doc = protocol_md();
+    let w = WireRequest {
+        id: 1,
+        route: "lorenz96/digital".into(),
+        req: TwinRequest::autonomous(vec![], 32).with_seed(7),
+    };
+    assert_eq!(example(&doc, "plain-request"), encode_request(&w));
+}
+
+#[test]
+fn stimulus_request_example_is_canonical() {
+    let doc = protocol_md();
+    let w = WireRequest {
+        id: 3,
+        route: "hp/digital".into(),
+        req: TwinRequest::driven(
+            vec![0.5],
+            8,
+            Waveform::Sine { amp: 0.5, freq: 2.0, phase: 0.0 },
+        )
+        .with_seed(11),
+    };
+    assert_eq!(example(&doc, "stimulus-request"), encode_request(&w));
+}
+
+#[test]
+fn ensemble_request_example_is_canonical() {
+    let doc = protocol_md();
+    let w = WireRequest {
+        id: 2,
+        route: "lorenz96/analog".into(),
+        req: TwinRequest::autonomous(vec![], 16)
+            .with_seed(99)
+            .with_ensemble(
+                EnsembleSpec::new(8).with_percentiles(vec![5.0, 95.0]),
+            ),
+    };
+    assert_eq!(example(&doc, "ensemble-request"), encode_request(&w));
+}
+
+#[test]
+fn ok_response_example_is_canonical() {
+    let doc = protocol_md();
+    let resp = TwinResponse {
+        trajectory: Trajectory::from_nested(&[
+            vec![1.0, 2.0],
+            vec![3.0, 4.0],
+        ]),
+        backend: "digital",
+        seed: 7,
+        ensemble: None,
+        degraded: false,
+    };
+    assert_eq!(
+        example(&doc, "ok-response"),
+        encode_response(1, &resp, 120, 4200)
+    );
+}
+
+#[test]
+fn error_response_example_is_canonical() {
+    let doc = protocol_md();
+    assert_eq!(
+        example(&doc, "error-response"),
+        encode_error(
+            Some(9),
+            ErrorCode::RejectedOverload,
+            "route queue full",
+            Some(12345),
+        )
+    );
+}
+
+#[test]
+fn documented_requests_decode_and_reencode_identically() {
+    let doc = protocol_md();
+    for name in ["plain-request", "stimulus-request", "ensemble-request"] {
+        let text = example(&doc, name);
+        let w = wire::decode_request(text.as_bytes())
+            .unwrap_or_else(|e| panic!("decoding '{name}': {}", e.msg));
+        assert_eq!(encode_request(&w), text, "round-trip of '{name}'");
+    }
+}
+
+#[test]
+fn documented_responses_decode() {
+    let doc = protocol_md();
+    match wire::decode_response(example(&doc, "ok-response").as_bytes())
+        .expect("ok-response decodes")
+    {
+        WireResponse::Ok(ok) => {
+            assert_eq!(ok.id, 1);
+            assert_eq!(ok.seed, 7);
+            assert_eq!(ok.trajectory, vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        }
+        other => panic!("expected ok, got {other:?}"),
+    }
+    match wire::decode_response(example(&doc, "error-response").as_bytes())
+        .expect("error-response decodes")
+    {
+        WireResponse::Err(e) => {
+            assert_eq!(e.code, ErrorCode::RejectedOverload);
+            assert_eq!(e.id, Some(9));
+            assert_eq!(e.seed, Some(12345));
+        }
+        other => panic!("expected error, got {other:?}"),
+    }
+}
+
+#[test]
+fn every_json_block_in_the_doc_parses() {
+    let doc = protocol_md();
+    let mut rest = doc.as_str();
+    let mut blocks = 0;
+    while let Some(start) = rest.find("```json") {
+        let body = &rest[start + "```json".len()..];
+        let end = body.find("```").expect("unterminated json fence");
+        let block = body[..end].trim();
+        json::parse(block).unwrap_or_else(|e| {
+            panic!("json block {} fails to parse: {e}\n{block}", blocks + 1)
+        });
+        blocks += 1;
+        rest = &body[end + 3..];
+    }
+    assert!(blocks >= 5, "expected >= 5 json examples, found {blocks}");
+}
