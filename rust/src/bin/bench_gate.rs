@@ -6,9 +6,19 @@
 //! [`memode::twin::throughput::gate_against_baseline`] for the exact rule.
 //!
 //! Usage:
-//!   bench_gate [--baseline PATH] [--fresh PATH] [--max-regress FRAC]
-//!              [--update] [--ratchet] [--allow-unseeded]
-//!              [--assert-speedup ROUTE:FACTOR]
+//!   bench_gate [--serve] [--baseline PATH] [--fresh PATH]
+//!              [--max-regress FRAC] [--update] [--ratchet]
+//!              [--allow-unseeded] [--assert-speedup ROUTE:FACTOR]
+//!
+//! `--serve` switches to the serving-latency gate: compare the fresh
+//! `BENCH_serve.json` (a flat loadgen report) against the committed
+//! `BENCH_serve_baseline.json` under
+//! [`memode::coordinator::loadgen::gate_serve_against_baseline`] —
+//! p99 latency and throughput may not regress past the allowance and
+//! the rejected fraction may not grow past it. `--ratchet` /
+//! `--update` / `--allow-unseeded` behave exactly as in the
+//! batch-throughput mode. No machine-speed normalisation is applied,
+//! so CI passes a wider `--max-regress` here.
 //!
 //! An unseeded (missing/empty) baseline is a **hard failure**: a gate
 //! that protects nothing must never look green. `--allow-unseeded`
@@ -37,6 +47,7 @@
 use std::path::PathBuf;
 use std::process::ExitCode;
 
+use memode::coordinator::loadgen;
 use memode::twin::throughput::{
     default_baseline_path, default_json_path, gate_against_baseline,
     route_speedup,
@@ -44,38 +55,44 @@ use memode::twin::throughput::{
 use memode::util::json::{self, Json};
 
 struct Args {
+    /// `None` = mode default (throughput vs serve paths).
+    baseline_override: Option<PathBuf>,
+    fresh_override: Option<PathBuf>,
     baseline: PathBuf,
     fresh: PathBuf,
     max_regress: f64,
     update: bool,
     ratchet: bool,
     allow_unseeded: bool,
+    serve: bool,
     /// (route, min factor) assertions from --assert-speedup.
     speedups: Vec<(String, f64)>,
 }
 
 fn parse_args() -> Result<Args, String> {
     let mut args = Args {
+        baseline_override: None,
+        fresh_override: None,
         baseline: default_baseline_path(),
         fresh: default_json_path(),
         max_regress: 0.25,
         update: false,
         ratchet: false,
         allow_unseeded: false,
+        serve: false,
         speedups: Vec::new(),
     };
     let mut it = std::env::args().skip(1);
     while let Some(a) = it.next() {
         match a.as_str() {
             "--baseline" => {
-                args.baseline = it
-                    .next()
-                    .ok_or("--baseline needs a path")?
-                    .into();
+                args.baseline_override = Some(
+                    it.next().ok_or("--baseline needs a path")?.into(),
+                );
             }
             "--fresh" => {
-                args.fresh =
-                    it.next().ok_or("--fresh needs a path")?.into();
+                args.fresh_override =
+                    Some(it.next().ok_or("--fresh needs a path")?.into());
             }
             "--max-regress" => {
                 let v = it.next().ok_or("--max-regress needs a fraction")?;
@@ -86,6 +103,7 @@ fn parse_args() -> Result<Args, String> {
             "--update" => args.update = true,
             "--ratchet" => args.ratchet = true,
             "--allow-unseeded" => args.allow_unseeded = true,
+            "--serve" => args.serve = true,
             "--assert-speedup" => {
                 let v = it
                     .next()
@@ -102,14 +120,25 @@ fn parse_args() -> Result<Args, String> {
             }
             "--help" | "-h" => {
                 return Err(
-                    "usage: bench_gate [--baseline PATH] [--fresh PATH] \
-                     [--max-regress FRAC] [--update] [--ratchet] \
-                     [--allow-unseeded] [--assert-speedup ROUTE:FACTOR]"
+                    "usage: bench_gate [--serve] [--baseline PATH] \
+                     [--fresh PATH] [--max-regress FRAC] [--update] \
+                     [--ratchet] [--allow-unseeded] \
+                     [--assert-speedup ROUTE:FACTOR]"
                         .into(),
                 );
             }
             other => return Err(format!("unknown argument '{other}'")),
         }
+    }
+    if args.serve {
+        args.baseline = loadgen::default_baseline_path();
+        args.fresh = loadgen::default_json_path();
+    }
+    if let Some(p) = args.baseline_override.take() {
+        args.baseline = p;
+    }
+    if let Some(p) = args.fresh_override.take() {
+        args.fresh = p;
     }
     Ok(args)
 }
@@ -228,6 +257,9 @@ fn main() -> ExitCode {
             }
         }
     }
+    if args.serve {
+        return run_serve_gate(&args);
+    }
     let fresh = match json::from_file(&args.fresh) {
         Ok(doc) => doc,
         Err(e) => {
@@ -295,6 +327,77 @@ fn main() -> ExitCode {
         return ExitCode::SUCCESS;
     }
     println!("bench gate: PASS");
+    ExitCode::SUCCESS
+}
+
+/// `--serve` mode: gate the flat loadgen report against the committed
+/// serving baseline (p99 / throughput / rejected fraction).
+fn run_serve_gate(args: &Args) -> ExitCode {
+    let fresh = match json::from_file(&args.fresh) {
+        Ok(doc) => doc,
+        Err(e) => {
+            eprintln!(
+                "reading fresh serve report {}: {e:#} (run `memode \
+                 loadgen` against a live server first)",
+                args.fresh.display()
+            );
+            return ExitCode::FAILURE;
+        }
+    };
+    let baseline = if args.baseline.exists() {
+        match load(&args.baseline, "serve baseline") {
+            Ok(d) => d,
+            Err(c) => return c,
+        }
+    } else if args.ratchet {
+        return seed_baseline(args, "serve baseline file missing");
+    } else {
+        return report_unseeded(
+            "serve baseline file missing",
+            args.allow_unseeded,
+        );
+    };
+    let report = match loadgen::gate_serve_against_baseline(
+        &baseline,
+        &fresh,
+        args.max_regress,
+    ) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("serve gate error: {e:#}");
+            return ExitCode::FAILURE;
+        }
+    };
+    println!(
+        "serve gate: {} metrics compared, allowance {:.0}%",
+        report.compared,
+        args.max_regress * 100.0
+    );
+    if !report.passed() {
+        eprintln!("serve gate: FAIL — regressed metrics:");
+        for f in &report.failures {
+            eprintln!("  {f}");
+        }
+        if args.ratchet {
+            eprintln!(
+                "serve gate: baseline left untouched (never ratchet \
+                 over a regression)"
+            );
+        }
+        return ExitCode::FAILURE;
+    }
+    if args.ratchet {
+        if report.improved() {
+            println!("serve gate: improvements beyond the allowance:");
+            for s in &report.improvements {
+                println!("  {s}");
+            }
+            return seed_baseline(args, "ratcheting improved baseline");
+        }
+        println!("serve gate: PASS (no improvements to ratchet)");
+        return ExitCode::SUCCESS;
+    }
+    println!("serve gate: PASS");
     ExitCode::SUCCESS
 }
 

@@ -20,8 +20,28 @@ pub struct ServeConfig {
     pub workers: usize,
     /// Maximum batch the batcher will coalesce.
     pub max_batch: usize,
-    /// Batching window (s): wait this long to fill a batch.
+    /// Batching window (s): wait this long to fill a batch. Routes with
+    /// no observed execution time use this fixed window; it is also the
+    /// effective window for every route while the adaptive clamp below
+    /// is left at its (equal) defaults.
     pub batch_window_s: f64,
+    /// Lower clamp (s) of the adaptive per-route batch window. The
+    /// batcher sizes each route's window from its observed execution
+    /// EWMA, clamped to `[batch_window_min_s, batch_window_max_s]`.
+    /// Defaults equal `batch_window_s`, which disables adaptation.
+    pub batch_window_min_s: f64,
+    /// Upper clamp (s) of the adaptive per-route batch window.
+    pub batch_window_max_s: f64,
+    /// Work stealing between scheduler workers: an idle worker takes a
+    /// whole queued batch from the most-loaded peer, so light requests
+    /// are never stranded behind a wide ensemble campaign. Off by
+    /// default (today's strict least-loaded dispatch).
+    pub steal: bool,
+    /// Multi-trajectory shard co-scheduling: the tile-sharded backend
+    /// fuses the sub-batches of one dispatch into a single barrier
+    /// group, so shard workers hide exchange-barrier latency behind
+    /// other trajectories' work. Off by default.
+    pub coschedule: bool,
     /// Global in-flight cap at the admission gate (backpressure
     /// threshold).
     pub queue_depth: usize,
@@ -37,6 +57,10 @@ impl Default for ServeConfig {
             workers: 2,
             max_batch: 32,
             batch_window_s: 2e-3,
+            batch_window_min_s: 2e-3,
+            batch_window_max_s: 2e-3,
+            steal: false,
+            coschedule: false,
             queue_depth: 128,
             route_queue_depth: 64,
         }
@@ -47,10 +71,16 @@ impl ServeConfig {
     /// Apply `MEMODE_*` environment overrides on top of the configured
     /// values — the operator knobs `memode serve` documents in
     /// `docs/SERVING.md`: `MEMODE_WORKERS`, `MEMODE_QUEUE_DEPTH`,
-    /// `MEMODE_ROUTE_QUEUE_DEPTH`. Unset or unparsable variables keep
-    /// the current value.
+    /// `MEMODE_ROUTE_QUEUE_DEPTH`, the adaptive-window clamp
+    /// `MEMODE_BATCH_WINDOW_MIN` / `MEMODE_BATCH_WINDOW_MAX` (seconds),
+    /// and the scheduler toggles `MEMODE_STEAL` / `MEMODE_COSCHEDULE`
+    /// (`1`/`true`/`on` enable, `0`/`false`/`off` disable). Unset or
+    /// unparsable variables keep the current value.
     pub fn apply_env(&mut self) {
         let read = |name: &str| -> Option<usize> {
+            std::env::var(name).ok()?.trim().parse().ok()
+        };
+        let read_f64 = |name: &str| -> Option<f64> {
             std::env::var(name).ok()?.trim().parse().ok()
         };
         if let Some(v) = read("MEMODE_WORKERS") {
@@ -62,6 +92,29 @@ impl ServeConfig {
         if let Some(v) = read("MEMODE_ROUTE_QUEUE_DEPTH") {
             self.route_queue_depth = v;
         }
+        if let Some(v) = read_f64("MEMODE_BATCH_WINDOW_MIN") {
+            self.batch_window_min_s = v;
+        }
+        if let Some(v) = read_f64("MEMODE_BATCH_WINDOW_MAX") {
+            self.batch_window_max_s = v;
+        }
+        if let Some(v) = env_bool("MEMODE_STEAL") {
+            self.steal = v;
+        }
+        if let Some(v) = env_bool("MEMODE_COSCHEDULE") {
+            self.coschedule = v;
+        }
+    }
+}
+
+/// Parse a boolean `MEMODE_*` toggle: `1`/`true`/`on`/`yes` enable,
+/// `0`/`false`/`off`/`no` disable (case-insensitive); anything else —
+/// including unset — is `None` (keep the configured value).
+pub fn env_bool(name: &str) -> Option<bool> {
+    match std::env::var(name).ok()?.trim().to_ascii_lowercase().as_str() {
+        "1" | "true" | "on" | "yes" => Some(true),
+        "0" | "false" | "off" | "no" => Some(false),
+        _ => None,
     }
 }
 
@@ -140,6 +193,24 @@ impl SystemConfig {
             cfg.serve.max_batch = u(s.get("max_batch"), cfg.serve.max_batch);
             cfg.serve.batch_window_s =
                 f(s.get("batch_window_s"), cfg.serve.batch_window_s);
+            // An old config that sets only batch_window_s keeps the
+            // clamp pinned to it (adaptation stays off).
+            cfg.serve.batch_window_min_s = f(
+                s.get("batch_window_min_s"),
+                cfg.serve.batch_window_s,
+            );
+            cfg.serve.batch_window_max_s = f(
+                s.get("batch_window_max_s"),
+                cfg.serve.batch_window_s,
+            );
+            cfg.serve.steal = s
+                .get("steal")
+                .and_then(Json::as_bool)
+                .unwrap_or(cfg.serve.steal);
+            cfg.serve.coschedule = s
+                .get("coschedule")
+                .and_then(Json::as_bool)
+                .unwrap_or(cfg.serve.coschedule);
             cfg.serve.queue_depth =
                 u(s.get("queue_depth"), cfg.serve.queue_depth);
             cfg.serve.route_queue_depth = u(
@@ -187,6 +258,16 @@ impl SystemConfig {
                         "batch_window_s",
                         Json::Num(self.serve.batch_window_s),
                     ),
+                    (
+                        "batch_window_min_s",
+                        Json::Num(self.serve.batch_window_min_s),
+                    ),
+                    (
+                        "batch_window_max_s",
+                        Json::Num(self.serve.batch_window_max_s),
+                    ),
+                    ("steal", Json::Bool(self.serve.steal)),
+                    ("coschedule", Json::Bool(self.serve.coschedule)),
                     (
                         "queue_depth",
                         Json::Num(self.serve.queue_depth as f64),
@@ -242,6 +323,36 @@ mod tests {
         let c3 = SystemConfig::from_json(&doc);
         assert_eq!(c3.serve.queue_depth, 3);
         assert_eq!(c3.serve.route_queue_depth, 64);
+    }
+
+    #[test]
+    fn scheduler_knobs_roundtrip_and_default() {
+        let mut c = SystemConfig::default();
+        assert_eq!(c.serve.batch_window_min_s, 2e-3);
+        assert_eq!(c.serve.batch_window_max_s, 2e-3);
+        assert!(!c.serve.steal);
+        assert!(!c.serve.coschedule);
+        c.serve.batch_window_min_s = 0.5e-3;
+        c.serve.batch_window_max_s = 12e-3;
+        c.serve.steal = true;
+        c.serve.coschedule = true;
+        let c2 = SystemConfig::from_json(&c.to_json());
+        assert_eq!(c2.serve.batch_window_min_s, 0.5e-3);
+        assert_eq!(c2.serve.batch_window_max_s, 12e-3);
+        assert!(c2.serve.steal);
+        assert!(c2.serve.coschedule);
+        // Old configs with only batch_window_s pin the clamp to it,
+        // so adaptation stays off, and the toggles keep defaults.
+        let doc = crate::util::json::parse(
+            r#"{"serve": {"batch_window_s": 0.005}}"#,
+        )
+        .unwrap();
+        let c3 = SystemConfig::from_json(&doc);
+        assert_eq!(c3.serve.batch_window_s, 0.005);
+        assert_eq!(c3.serve.batch_window_min_s, 0.005);
+        assert_eq!(c3.serve.batch_window_max_s, 0.005);
+        assert!(!c3.serve.steal);
+        assert!(!c3.serve.coschedule);
     }
 
     #[test]

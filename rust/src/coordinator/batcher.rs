@@ -12,24 +12,75 @@
 //! batched rollout — so `max_batch` bounds actual rollout width, not job
 //! count. Requests inside a batch may still disagree on `n_points`; the
 //! twin splits those into compatible sub-batches rather than padding.
+//!
+//! **Adaptive windows.** The maturity window is *per route*, sized from
+//! the route's observed batch execution time (the EWMA scheduler workers
+//! record into [`Telemetry`]) and clamped to
+//! `[window_min, window_max]`: a route whose rollouts finish in
+//! microseconds flushes near-immediately, while a heavy ensemble route
+//! holds its window open long enough to saturate the lane cap. With the
+//! default clamp (`window_min == window_max == window`) every route gets
+//! the fixed window — exactly the pre-adaptive behaviour. A route's
+//! window is sampled when its queue forms (first pending job) and rides
+//! with the queue, so maturity checks and wake-up deadlines are
+//! per-route: one short-window route never forces early flushes — or
+//! busy polling — on the others.
 
+use std::collections::btree_map::Entry;
 use std::collections::BTreeMap;
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::coordinator::telemetry::Telemetry;
 use crate::coordinator::{Batch, Job};
 
 /// Batching policy.
 #[derive(Debug, Clone)]
 pub struct BatchPolicy {
     pub max_batch: usize,
+    /// Fixed window used for routes with no observed execution time yet
+    /// (and, with the default clamp, for every route).
     pub window: Duration,
+    /// Lower clamp of the adaptive per-route window.
+    pub window_min: Duration,
+    /// Upper clamp of the adaptive per-route window. Equal min and max
+    /// pin every route to that fixed window, disabling adaptation.
+    pub window_max: Duration,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        Self { max_batch: 32, window: Duration::from_millis(2) }
+        let window = Duration::from_millis(2);
+        Self { max_batch: 32, window, window_min: window, window_max: window }
     }
+}
+
+impl BatchPolicy {
+    /// A fixed-window policy (adaptation disabled): the historical
+    /// constructor shape, used by tests and by configs that leave the
+    /// clamp unset.
+    pub fn fixed(max_batch: usize, window: Duration) -> Self {
+        Self { max_batch, window, window_min: window, window_max: window }
+    }
+}
+
+/// Resolve one route's maturity window: the telemetry execution-time
+/// EWMA when available (else the fixed default), clamped to the policy
+/// bounds. A free function so [`Batcher::push`] can call it while the
+/// pending map is mutably borrowed.
+fn route_window(
+    policy: &BatchPolicy,
+    telemetry: Option<&Telemetry>,
+    route: &str,
+) -> Duration {
+    let lo = policy.window_min.min(policy.window_max);
+    let hi = policy.window_min.max(policy.window_max);
+    telemetry
+        .and_then(|t| t.route_exec_ewma(route))
+        .map(Duration::from_secs_f64)
+        .unwrap_or(policy.window)
+        .clamp(lo, hi)
 }
 
 /// Per-route pending queue: jobs plus their effective lane total.
@@ -39,11 +90,17 @@ struct RouteQueue {
     /// Sum of `TwinRequest::lanes()` across `jobs` — what `max_batch`
     /// caps (an ensemble job counts its member lanes, not 1).
     lanes: usize,
+    /// This queue's maturity window, sampled from the route's execution
+    /// EWMA when the queue formed.
+    window: Duration,
 }
 
 /// The batcher thread's state machine (pure, testable without threads).
 pub struct Batcher {
     policy: BatchPolicy,
+    /// Execution-time source for adaptive windows; `None` (or the
+    /// default equal clamp) falls back to the fixed window.
+    telemetry: Option<Arc<Telemetry>>,
     pending: BTreeMap<String, RouteQueue>,
     /// Scratch for matured route keys: [`Batcher::flush`] runs on every
     /// tick of the hot dispatch loop, so it must not snapshot the whole
@@ -55,7 +112,21 @@ pub struct Batcher {
 
 impl Batcher {
     pub fn new(policy: BatchPolicy) -> Self {
-        Self { policy, pending: BTreeMap::new(), mature: Vec::new() }
+        Self::with_telemetry(policy, None)
+    }
+
+    /// A batcher that sizes per-route windows from the telemetry's
+    /// execution-time EWMA (see the module docs for the clamp rule).
+    pub fn with_telemetry(
+        policy: BatchPolicy,
+        telemetry: Option<Arc<Telemetry>>,
+    ) -> Self {
+        Self {
+            policy,
+            telemetry,
+            pending: BTreeMap::new(),
+            mature: Vec::new(),
+        }
     }
 
     /// Add a job; returns a full batch immediately once the route's
@@ -63,7 +134,20 @@ impl Batcher {
     /// can mature a batch by itself).
     pub fn push(&mut self, job: Job) -> Option<Batch> {
         let route = job.route.clone();
-        let q = self.pending.entry(route.clone()).or_default();
+        let q = match self.pending.entry(route.clone()) {
+            Entry::Occupied(e) => e.into_mut(),
+            Entry::Vacant(v) => {
+                // Window sampled once per queue generation: each batch
+                // that flushes removes the queue, so the next job on the
+                // route re-reads the (possibly updated) EWMA.
+                let window = route_window(
+                    &self.policy,
+                    self.telemetry.as_deref(),
+                    v.key(),
+                );
+                v.insert(RouteQueue { window, ..RouteQueue::default() })
+            }
+        };
         q.lanes = q.lanes.saturating_add(job.req.lanes());
         q.jobs.push(job);
         if q.lanes >= self.policy.max_batch {
@@ -74,8 +158,8 @@ impl Batcher {
         None
     }
 
-    /// Flush every route whose oldest job exceeded the window (or all with
-    /// `force`). Returns the matured batches.
+    /// Flush every route whose oldest job exceeded *that route's* window
+    /// (or all with `force`). Returns the matured batches.
     ///
     /// The common tick — nothing matured — touches no key strings at all:
     /// matured keys are cloned once into the reusable `mature` scratch
@@ -90,7 +174,7 @@ impl Batcher {
             let is_mature = !q.jobs.is_empty()
                 && (force
                     || q.jobs.first().is_some_and(|j| {
-                        now.duration_since(j.enqueued) >= self.policy.window
+                        now.duration_since(j.enqueued) >= q.window
                     }));
             if is_mature {
                 mature.push(route.clone());
@@ -105,15 +189,18 @@ impl Batcher {
         out
     }
 
-    /// Time until the next window deadline (for the event-loop sleep).
+    /// Time until the next per-route window deadline (for the event-loop
+    /// sleep). Each route contributes its own deadline, so a short
+    /// adaptive window on one route wakes the loop exactly when that
+    /// route matures — not on some global cadence.
     pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
         self.pending
             .values()
-            .filter_map(|q| q.jobs.first())
-            .map(|j| {
-                self.policy
-                    .window
-                    .saturating_sub(now.duration_since(j.enqueued))
+            .filter_map(|q| {
+                q.jobs.first().map(|j| {
+                    q.window
+                        .saturating_sub(now.duration_since(j.enqueued))
+                })
             })
             .min()
     }
@@ -128,16 +215,20 @@ impl Batcher {
     }
 }
 
-/// Spawn the batcher event loop: receives jobs, emits batches.
+/// Spawn the batcher event loop: receives jobs, emits batches. Pass the
+/// coordinator's [`Telemetry`] to enable adaptive per-route windows
+/// (with the default equal clamp the telemetry is read but every window
+/// resolves to the fixed one).
 pub fn spawn(
     policy: BatchPolicy,
+    telemetry: Option<Arc<Telemetry>>,
     jobs_rx: mpsc::Receiver<Job>,
     batches_tx: mpsc::Sender<Batch>,
 ) -> std::thread::JoinHandle<()> {
     std::thread::Builder::new()
         .name("batcher".into())
         .spawn(move || {
-            let mut b = Batcher::new(policy);
+            let mut b = Batcher::with_telemetry(policy, telemetry);
             loop {
                 let now = Instant::now();
                 let timeout = b
@@ -191,10 +282,10 @@ mod tests {
 
     #[test]
     fn max_batch_triggers_immediate_dispatch() {
-        let mut b = Batcher::new(BatchPolicy {
-            max_batch: 3,
-            window: Duration::from_secs(10),
-        });
+        let mut b = Batcher::new(BatchPolicy::fixed(
+            3,
+            Duration::from_secs(10),
+        ));
         let (_keep1, _r1) = {
             let (j, r) = job("a");
             (b.push(j), r)
@@ -210,10 +301,10 @@ mod tests {
     #[test]
     fn ensemble_jobs_count_lanes_against_max_batch() {
         use crate::twin::EnsembleSpec;
-        let mut b = Batcher::new(BatchPolicy {
-            max_batch: 8,
-            window: Duration::from_secs(10),
-        });
+        let mut b = Batcher::new(BatchPolicy::fixed(
+            8,
+            Duration::from_secs(10),
+        ));
         // A 3-lane ensemble + 4 plain jobs = 7 lanes: still pending.
         let (mut j, _r) = job("a");
         j.req = TwinRequest::autonomous(vec![], 1)
@@ -243,10 +334,10 @@ mod tests {
 
     #[test]
     fn routes_batch_independently() {
-        let mut b = Batcher::new(BatchPolicy {
-            max_batch: 2,
-            window: Duration::from_secs(10),
-        });
+        let mut b = Batcher::new(BatchPolicy::fixed(
+            2,
+            Duration::from_secs(10),
+        ));
         let (ja, _ra) = job("a");
         let (jb, _rb) = job("b");
         assert!(b.push(ja).is_none());
@@ -261,10 +352,10 @@ mod tests {
 
     #[test]
     fn window_flush_matures_old_jobs() {
-        let mut b = Batcher::new(BatchPolicy {
-            max_batch: 100,
-            window: Duration::from_millis(1),
-        });
+        let mut b = Batcher::new(BatchPolicy::fixed(
+            100,
+            Duration::from_millis(1),
+        ));
         let (j, _r) = job("a");
         b.push(j);
         let later = Instant::now() + Duration::from_millis(5);
@@ -275,10 +366,10 @@ mod tests {
 
     #[test]
     fn flush_scratch_is_reused_across_ticks() {
-        let mut b = Batcher::new(BatchPolicy {
-            max_batch: 100,
-            window: Duration::from_millis(1),
-        });
+        let mut b = Batcher::new(BatchPolicy::fixed(
+            100,
+            Duration::from_millis(1),
+        ));
         let (j, _r) = job("a");
         b.push(j);
         let later = Instant::now() + Duration::from_millis(5);
@@ -305,10 +396,10 @@ mod tests {
 
     #[test]
     fn next_deadline_reflects_oldest() {
-        let mut b = Batcher::new(BatchPolicy {
-            max_batch: 10,
-            window: Duration::from_millis(100),
-        });
+        let mut b = Batcher::new(BatchPolicy::fixed(
+            10,
+            Duration::from_millis(100),
+        ));
         assert!(b.next_deadline(Instant::now()).is_none());
         let (j, _r) = job("a");
         b.push(j);
@@ -316,15 +407,100 @@ mod tests {
         assert!(d <= Duration::from_millis(100));
     }
 
+    /// An adaptive policy: fixed 2 ms default, clamp [1 ms, 10 ms].
+    fn adaptive_policy() -> BatchPolicy {
+        BatchPolicy {
+            max_batch: 100,
+            window: Duration::from_millis(2),
+            window_min: Duration::from_millis(1),
+            window_max: Duration::from_millis(10),
+        }
+    }
+
+    #[test]
+    fn adaptive_window_tracks_route_exec_ewma_with_clamp() {
+        let t = Arc::new(Telemetry::new());
+        // "heavy" observed at 50 ms -> clamped to window_max = 10 ms;
+        // "light" observed at 0.1 ms -> clamped to window_min = 1 ms;
+        // "fresh" has no observations -> fixed default 2 ms.
+        t.record_route_exec("heavy", 50e-3);
+        t.record_route_exec("light", 0.1e-3);
+        let mut b = Batcher::with_telemetry(adaptive_policy(), Some(t));
+        let t0 = Instant::now();
+        for route in ["heavy", "light", "fresh"] {
+            let (mut j, _r) = job(route);
+            j.enqueued = t0;
+            assert!(b.push(j).is_none());
+        }
+        // The wake-up deadline is the shortest pending window (light's).
+        let d = b.next_deadline(t0).unwrap();
+        assert!(d <= Duration::from_millis(1), "{d:?}");
+        // At +1.5 ms only "light" matured.
+        let batches = b.flush(t0 + Duration::from_micros(1500), false);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].route, "light");
+        // At +5 ms "fresh" (2 ms default) matured; "heavy" still waits.
+        let batches = b.flush(t0 + Duration::from_millis(5), false);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].route, "fresh");
+        assert_eq!(b.pending_jobs(), 1);
+        // At +11 ms "heavy" finally matures at the clamp ceiling.
+        let batches = b.flush(t0 + Duration::from_millis(11), false);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].route, "heavy");
+    }
+
+    #[test]
+    fn default_equal_clamp_reproduces_the_fixed_window() {
+        // Even with a wild EWMA on record, the default policy's equal
+        // clamp pins every route to the fixed 2 ms window — unset knobs
+        // must reproduce pre-adaptive behaviour exactly.
+        let t = Arc::new(Telemetry::new());
+        t.record_route_exec("a", 10.0);
+        let mut b =
+            Batcher::with_telemetry(BatchPolicy::default(), Some(t));
+        let t0 = Instant::now();
+        let (mut j, _r) = job("a");
+        j.enqueued = t0;
+        b.push(j);
+        assert!(b
+            .flush(t0 + Duration::from_millis(1), false)
+            .is_empty());
+        assert_eq!(
+            b.flush(t0 + Duration::from_millis(3), false).len(),
+            1
+        );
+    }
+
+    #[test]
+    fn route_window_resamples_on_each_queue_generation() {
+        let t = Arc::new(Telemetry::new());
+        let mut b =
+            Batcher::with_telemetry(adaptive_policy(), Some(Arc::clone(&t)));
+        let t0 = Instant::now();
+        // First generation: no EWMA yet -> 2 ms default window.
+        let (mut j, _r) = job("a");
+        j.enqueued = t0;
+        b.push(j);
+        assert_eq!(b.flush(t0 + Duration::from_millis(3), false).len(), 1);
+        // The route turns out to be slow; the next queue generation
+        // samples the updated EWMA and holds its window open longer.
+        t.record_route_exec("a", 8e-3);
+        let t1 = Instant::now();
+        let (mut j, _r2) = job("a");
+        j.enqueued = t1;
+        b.push(j);
+        assert!(b.flush(t1 + Duration::from_millis(3), false).is_empty());
+        assert_eq!(b.flush(t1 + Duration::from_millis(9), false).len(), 1);
+    }
+
     #[test]
     fn spawned_loop_batches_and_flushes() {
         let (jtx, jrx) = mpsc::channel();
         let (btx, brx) = mpsc::channel();
         let handle = spawn(
-            BatchPolicy {
-                max_batch: 2,
-                window: Duration::from_millis(5),
-            },
+            BatchPolicy::fixed(2, Duration::from_millis(5)),
+            None,
             jrx,
             btx,
         );

@@ -31,6 +31,20 @@ use crate::util::rng::{derive_stream_seed, Pcg64};
 use crate::util::stats;
 use crate::workload::stimuli::Waveform;
 
+/// Request-mix preset shaping the tail of the offered load.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mix {
+    /// Every request the same shape; ensembles at the configured width.
+    Uniform,
+    /// Heavy-tailed: most requests stay light, but a deterministic
+    /// minority are an order of magnitude heavier — 1-in-10 requests
+    /// carry 4x the trajectory points, and ensembles widen to 2x or 8x
+    /// the configured member count. This is the p99-dominating shape
+    /// the adaptive batch windows and work stealing are tuned against
+    /// (`docs/SERVING.md`).
+    HeavyTail,
+}
+
 /// Load-generator parameters.
 #[derive(Debug, Clone)]
 pub struct LoadgenConfig {
@@ -54,6 +68,8 @@ pub struct LoadgenConfig {
     pub ensemble_fraction: f64,
     /// Ensemble width for those requests.
     pub ensemble_members: usize,
+    /// Request-mix preset (see [`Mix`]).
+    pub mix: Mix,
 }
 
 impl Default for LoadgenConfig {
@@ -68,11 +84,13 @@ impl Default for LoadgenConfig {
             routes: vec![
                 "lorenz96/digital".into(),
                 "lorenz96/analog".into(),
+                "lorenz96/analog-sharded".into(),
                 "lorenz96/analog-aged".into(),
                 "hp/digital".into(),
             ],
             ensemble_fraction: 0.2,
             ensemble_members: 8,
+            mix: Mix::Uniform,
         }
     }
 }
@@ -142,6 +160,100 @@ pub fn default_json_path() -> PathBuf {
         .join("BENCH_serve.json")
 }
 
+/// The committed serving baseline `bench_gate --serve` compares
+/// against: `$BENCH_SERVE_BASELINE` if set, else
+/// `BENCH_serve_baseline.json` at the repository root.
+pub fn default_baseline_path() -> PathBuf {
+    if let Ok(p) = std::env::var("BENCH_SERVE_BASELINE") {
+        return PathBuf::from(p);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_serve_baseline.json")
+}
+
+/// Outcome of comparing a fresh serve report against the baseline.
+#[derive(Debug, Clone, Default)]
+pub struct ServeGateReport {
+    /// Human-readable regressions (non-empty => gate fails).
+    pub failures: Vec<String>,
+    /// Improvements beyond the allowance (ratchet candidates).
+    pub improvements: Vec<String>,
+    /// Metrics compared.
+    pub compared: usize,
+}
+
+impl ServeGateReport {
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+    pub fn improved(&self) -> bool {
+        !self.improvements.is_empty()
+    }
+}
+
+/// Gate rule for `BENCH_serve.json` documents — flat loadgen reports,
+/// not the per-route entry arrays the batch-throughput gate walks:
+///
+/// * `p99_us` (lower is better) may not regress past the allowance;
+/// * `throughput_rps` (higher is better) may not drop past it;
+/// * `rejected_fraction` may not grow past the allowance in absolute
+///   terms (a scheduler change that sheds more under the same offered
+///   load is a regression even when the survivors got faster).
+///
+/// No machine-speed normalisation is applied: serve latency mixes
+/// compute with socket and scheduling waits, so the allowance itself
+/// must absorb runner variance (CI passes a wider `--max-regress` here
+/// than the batch gate's default).
+pub fn gate_serve_against_baseline(
+    baseline: &Json,
+    fresh: &Json,
+    max_regress: f64,
+) -> Result<ServeGateReport> {
+    let field = |doc: &Json, name: &str, which: &str| -> Result<f64> {
+        doc.get(name).and_then(Json::as_f64).with_context(|| {
+            format!("{which} serve document has no numeric {name:?}")
+        })
+    };
+    let mut report = ServeGateReport::default();
+    // (name, higher_is_better)
+    for (name, higher_better) in
+        [("p99_us", false), ("throughput_rps", true)]
+    {
+        let base = field(baseline, name, "baseline")?;
+        let new = field(fresh, name, "fresh")?;
+        anyhow::ensure!(
+            base > 0.0 && new.is_finite(),
+            "{name}: baseline {base}, fresh {new} not comparable"
+        );
+        report.compared += 1;
+        let ratio = if higher_better { base / new } else { new / base };
+        if ratio > 1.0 + max_regress {
+            report.failures.push(format!(
+                "{name}: baseline {base:.1}, fresh {new:.1} \
+                 (x{ratio:.2} worse, allowance x{:.2})",
+                1.0 + max_regress
+            ));
+        } else if ratio < 1.0 / (1.0 + max_regress) {
+            report.improvements.push(format!(
+                "{name}: baseline {base:.1}, fresh {new:.1} \
+                 (x{:.2} better)",
+                1.0 / ratio
+            ));
+        }
+    }
+    let base_rej = field(baseline, "rejected_fraction", "baseline")?;
+    let new_rej = field(fresh, "rejected_fraction", "fresh")?;
+    report.compared += 1;
+    if new_rej > base_rej + max_regress {
+        report.failures.push(format!(
+            "rejected_fraction: baseline {base_rej:.3}, fresh \
+             {new_rej:.3} (grew past the +{max_regress:.2} allowance)"
+        ));
+    }
+    Ok(report)
+}
+
 /// Write the report JSON.
 pub fn write_json(
     path: &std::path::Path,
@@ -174,8 +286,15 @@ pub fn cli(prog: &str, argv: Vec<String>) -> Result<()> {
     .opt("seed", "42", "root seed of the request mix")
     .opt(
         "routes",
-        "lorenz96/digital,lorenz96/analog,lorenz96/analog-aged,hp/digital",
+        "lorenz96/digital,lorenz96/analog,lorenz96/analog-sharded,\
+         lorenz96/analog-aged,hp/digital",
         "comma-separated route mix",
+    )
+    .opt(
+        "mix",
+        "uniform",
+        "request-mix preset: uniform | heavy-tail (long rollouts and \
+         wide ensembles in the tail)",
     )
     .opt(
         "ensemble-fraction",
@@ -198,6 +317,13 @@ pub fn cli(prog: &str, argv: Vec<String>) -> Result<()> {
     .map_err(|m| anyhow::anyhow!("{m}"))?;
 
     let smoke = args.get_bool("smoke");
+    let mix = match args.get("mix").as_str() {
+        "" | "uniform" => Mix::Uniform,
+        "heavy-tail" | "heavytail" => Mix::HeavyTail,
+        other => anyhow::bail!(
+            "unknown --mix {other:?} (expected uniform | heavy-tail)"
+        ),
+    };
     let cfg = LoadgenConfig {
         addr: args.get("addr"),
         conns: if smoke { 2 } else { args.get_usize("conns") },
@@ -213,6 +339,7 @@ pub fn cli(prog: &str, argv: Vec<String>) -> Result<()> {
             .collect(),
         ensemble_fraction: args.get_f64("ensemble-fraction"),
         ensemble_members: args.get_usize("ensemble-members"),
+        mix,
     };
     let report = run(&cfg)?;
     println!(
@@ -289,20 +416,35 @@ fn build_request(
 ) -> WireRequest {
     let route = cfg.routes[rng.below(cfg.routes.len() as u64) as usize]
         .clone();
+    // The mix preset shapes the tail. Uniform draws nothing extra, so
+    // uniform runs stay byte-identical to earlier releases' mixes.
+    let (steps, widen) = match cfg.mix {
+        Mix::Uniform => (cfg.steps.max(2), 1),
+        Mix::HeavyTail => {
+            let steps = if rng.below(10) == 0 {
+                cfg.steps.max(2) * 4
+            } else {
+                cfg.steps.max(2)
+            };
+            let widen = match rng.below(20) {
+                0 => 8,
+                1..=3 => 2,
+                _ => 1,
+            };
+            (steps, widen)
+        }
+    };
     // Driven twins (hp/*) need a stimulus; autonomous ones ignore it.
     let mut req = if route.starts_with("hp/") {
-        TwinRequest::driven(
-            Vec::new(),
-            cfg.steps.max(2),
-            Waveform::sine(1.0, 4.0),
-        )
+        TwinRequest::driven(Vec::new(), steps, Waveform::sine(1.0, 4.0))
     } else {
-        TwinRequest::autonomous(Vec::new(), cfg.steps.max(2))
+        TwinRequest::autonomous(Vec::new(), steps)
     }
     .with_seed(derive_stream_seed(cfg.seed, ((conn as u64) << 32) | seq));
     if cfg.ensemble_members > 0 && rng.uniform() < cfg.ensemble_fraction {
-        req = req
-            .with_ensemble(EnsembleSpec::new(cfg.ensemble_members.max(1)));
+        req = req.with_ensemble(EnsembleSpec::new(
+            cfg.ensemble_members.max(1) * widen,
+        ));
     }
     // Ids encode (connection, sequence): unique across the whole run.
     WireRequest { id: ((conn as u64) << 32) | seq, route, req }
@@ -427,6 +569,36 @@ mod tests {
     }
 
     #[test]
+    fn heavy_tail_mix_is_deterministic_and_actually_heavy() {
+        let cfg = LoadgenConfig {
+            steps: 8,
+            ensemble_fraction: 0.5,
+            ensemble_members: 4,
+            mix: Mix::HeavyTail,
+            ..LoadgenConfig::default()
+        };
+        let build = |seed: u64| -> Vec<(usize, Option<usize>)> {
+            let mut rng = Pcg64::new(derive_stream_seed(seed, 0), 1);
+            (1..=128)
+                .map(|seq| {
+                    let w = build_request(&cfg, &mut rng, 0, seq);
+                    (w.req.n_points, w.req.ensemble.map(|e| e.members))
+                })
+                .collect()
+        };
+        assert_eq!(build(42), build(42), "same seed, same heavy tail");
+        let mix = build(42);
+        // The body of the distribution stays light...
+        assert!(mix.iter().any(|(n, e)| *n == 8 && e.is_none()));
+        // ...but the tail carries 4x rollouts and widened ensembles.
+        assert!(mix.iter().any(|(n, _)| *n == 32), "no long rollouts");
+        assert!(
+            mix.iter().any(|(_, e)| matches!(e, Some(m) if *m > 4)),
+            "no widened ensembles"
+        );
+    }
+
+    #[test]
     fn ids_encode_connection_and_sequence() {
         let cfg = LoadgenConfig::default();
         let mut rng = Pcg64::new(1, 1);
@@ -458,6 +630,67 @@ mod tests {
         assert_eq!(j.get("p999_us").and_then(Json::as_f64), Some(900.0));
         // Empty runs divide to zero, not NaN.
         assert_eq!(LoadgenReport::default().rejected_fraction(), 0.0);
+    }
+
+    #[test]
+    fn serve_gate_flags_p99_and_throughput_and_shed_regressions() {
+        let doc = |p99: f64, rps: f64, rej: f64| {
+            Json::obj(vec![
+                ("p99_us", Json::Num(p99)),
+                ("throughput_rps", Json::Num(rps)),
+                ("rejected_fraction", Json::Num(rej)),
+            ])
+        };
+        let base = doc(1000.0, 500.0, 0.01);
+        // Within the allowance: pass, nothing to ratchet.
+        let r = gate_serve_against_baseline(
+            &base,
+            &doc(1100.0, 480.0, 0.02),
+            0.25,
+        )
+        .unwrap();
+        assert!(r.passed() && !r.improved(), "{:?}", r);
+        assert_eq!(r.compared, 3);
+        // p99 blew the allowance.
+        let r = gate_serve_against_baseline(
+            &base,
+            &doc(1500.0, 500.0, 0.01),
+            0.25,
+        )
+        .unwrap();
+        assert!(!r.passed());
+        assert!(r.failures[0].contains("p99_us"), "{:?}", r.failures);
+        // Throughput collapsed.
+        let r = gate_serve_against_baseline(
+            &base,
+            &doc(1000.0, 300.0, 0.01),
+            0.25,
+        )
+        .unwrap();
+        assert!(!r.passed());
+        // Sheds grew past the absolute allowance.
+        let r = gate_serve_against_baseline(
+            &base,
+            &doc(1000.0, 500.0, 0.5),
+            0.25,
+        )
+        .unwrap();
+        assert!(!r.passed());
+        // A real improvement is a ratchet candidate.
+        let r = gate_serve_against_baseline(
+            &base,
+            &doc(600.0, 900.0, 0.0),
+            0.25,
+        )
+        .unwrap();
+        assert!(r.passed() && r.improved());
+        // Malformed documents are errors, not silent passes.
+        assert!(gate_serve_against_baseline(
+            &Json::obj(vec![]),
+            &base,
+            0.25
+        )
+        .is_err());
     }
 
     #[test]

@@ -9,9 +9,15 @@
 //!    typed `rejected_overload` frame before closing);
 //! 2. **read** whatever bytes each socket has, extracting complete
 //!    frames;
-//! 3. **process** each frame: decode, stamp a replay seed, submit to
-//!    the coordinator ([`Coordinator::try_submit`]), mapping typed
-//!    rejections onto protocol error codes;
+//! 3. **process** frames *fairly*: one frame per connection per sweep,
+//!    round-robin across connections until nobody makes progress, so a
+//!    pipelining client cannot starve its neighbours. Each frame is
+//!    decoded, stamped with a replay seed, and submitted to the
+//!    coordinator ([`Coordinator::try_submit`]), mapping typed
+//!    rejections onto protocol error codes. A connection already at
+//!    its in-flight cap (`conn_inflight`) keeps further request bytes
+//!    buffered — they are decoded only as its pending jobs complete,
+//!    instead of being shed;
 //! 4. **poll** in-flight jobs (`try_recv` on each pending reply
 //!    channel) and queue finished responses;
 //! 5. **write** queued bytes back without blocking.
@@ -63,6 +69,11 @@ pub struct NetConfig {
     pub max_conns: usize,
     /// Per-frame payload cap (larger frames get `bad_frame` + close).
     pub max_frame_bytes: usize,
+    /// Per-connection in-flight cap: a connection with this many jobs
+    /// pending has further request bytes left in its read buffer until
+    /// results come back, keeping one greedy pipeliner from monopolising
+    /// the coordinator's admission budget.
+    pub conn_inflight: usize,
     /// Sleep between poll turns when nothing happened (µs).
     pub idle_sleep_us: u64,
     /// Drain budget on shutdown: in-flight responses not flushed within
@@ -76,6 +87,7 @@ impl Default for NetConfig {
             addr: "127.0.0.1:7171".into(),
             max_conns: 64,
             max_frame_bytes: wire::MAX_FRAME_BYTES,
+            conn_inflight: 32,
             idle_sleep_us: 500,
             drain_timeout_s: 10.0,
         }
@@ -84,8 +96,9 @@ impl Default for NetConfig {
 
 impl NetConfig {
     /// Apply `MEMODE_*` environment overrides (`docs/SERVING.md`):
-    /// `MEMODE_NET_MAX_CONNS`, `MEMODE_NET_MAX_FRAME_MB`. Unset or
-    /// unparsable variables keep the current value.
+    /// `MEMODE_NET_MAX_CONNS`, `MEMODE_NET_MAX_FRAME_MB`,
+    /// `MEMODE_CONN_INFLIGHT`. Unset or unparsable variables keep the
+    /// current value.
     pub fn apply_env(&mut self) {
         let read = |name: &str| -> Option<usize> {
             std::env::var(name).ok()?.trim().parse().ok()
@@ -95,6 +108,9 @@ impl NetConfig {
         }
         if let Some(v) = read("MEMODE_NET_MAX_FRAME_MB") {
             self.max_frame_bytes = v * 1024 * 1024;
+        }
+        if let Some(v) = read("MEMODE_CONN_INFLIGHT") {
+            self.conn_inflight = v;
         }
     }
 }
@@ -198,7 +214,12 @@ impl Conn {
         if self.dead {
             return true;
         }
-        let flushed = self.wbuf.is_empty() && self.pending.is_empty();
+        // `rbuf` may still hold complete frames the in-flight cap has
+        // deferred; the connection is only finished once those are
+        // answered too (a trailing partial frame is cleared at EOF).
+        let flushed = self.wbuf.is_empty()
+            && self.pending.is_empty()
+            && self.rbuf.is_empty();
         flushed && (!self.open || draining)
     }
 }
@@ -411,8 +432,8 @@ fn serve_loop(
             }
         }
 
+        // Read phase: drain every socket into its frame buffer.
         for conn in conns.iter_mut() {
-            // Read phase: drain the socket into the frame buffer.
             while conn.open && !conn.dead {
                 match conn.stream.read(&mut chunk) {
                     Ok(0) => conn.open = false,
@@ -427,14 +448,27 @@ fn serve_loop(
                     Err(_) => conn.dead = true,
                 }
             }
-            // Frame phase: process every complete frame.
-            while !conn.dead {
+        }
+
+        // Frame phase, round-robin for fairness: one frame per
+        // connection per sweep, repeated until nobody progresses, so a
+        // pipelining client interleaves with its neighbours instead of
+        // draining first. A connection at the in-flight cap keeps its
+        // bytes buffered until pending jobs complete.
+        let inflight_cap = cfg.conn_inflight.max(1);
+        loop {
+            let mut progressed = false;
+            for conn in conns.iter_mut() {
+                if conn.dead || conn.pending.len() >= inflight_cap {
+                    continue;
+                }
                 match wire::extract_frame(
                     &mut conn.rbuf,
                     cfg.max_frame_bytes,
                 ) {
                     Ok(Some(payload)) => {
                         active = true;
+                        progressed = true;
                         telemetry
                             .net_frames_in
                             .fetch_add(1, Ordering::Relaxed);
@@ -444,9 +478,17 @@ fn serve_loop(
                             &mut stats,
                         );
                     }
-                    Ok(None) => break,
+                    Ok(None) => {
+                        if !conn.open && !conn.rbuf.is_empty() {
+                            // EOF with a trailing partial frame: it can
+                            // never complete, drop the bytes so the
+                            // connection can finish.
+                            conn.rbuf.clear();
+                        }
+                    }
                     Err(e) => {
                         active = true;
+                        progressed = true;
                         telemetry
                             .net_protocol_errors
                             .fetch_add(1, Ordering::Relaxed);
@@ -460,15 +502,19 @@ fn serve_loop(
                         queue(conn, &msg, &telemetry, &mut stats);
                         conn.open = false;
                         conn.rbuf.clear();
-                        break;
                     }
                 }
             }
-            // Completion phase: collect finished jobs.
+            if !progressed {
+                break;
+            }
+        }
+
+        // Completion + write phases.
+        for conn in conns.iter_mut() {
             if poll_pending(conn, &telemetry, &mut stats) {
                 active = true;
             }
-            // Write phase: flush without blocking.
             if !conn.wbuf.is_empty() && !conn.dead {
                 match conn.stream.write(&conn.wbuf) {
                     Ok(0) => conn.dead = true,
@@ -546,8 +592,11 @@ mod tests {
                 workers: 1,
                 max_batch: 4,
                 batch_window_s: 1e-4,
+                batch_window_min_s: 1e-4,
+                batch_window_max_s: 1e-4,
                 queue_depth: 16,
                 route_queue_depth: 16,
+                ..Default::default()
             },
         ));
         let handle = NetServer::start(

@@ -1,9 +1,10 @@
-//! Worker pool + least-loaded batch dispatch.
+//! Worker pool + least-loaded batch dispatch, with optional work stealing.
 //!
 //! Each worker owns private twin instances (created lazily from the
 //! registry the first time a route lands on it) so no twin state is ever
-//! shared across threads. The scheduler tracks per-worker outstanding-job
-//! counts and sends each batch to the least-loaded worker.
+//! shared across threads. The scheduler keeps one deque of batches per
+//! worker and sends each batch to the least-loaded worker (fewest
+//! outstanding jobs).
 //!
 //! A worker executes the **whole batch as one [`Twin::run_batch`] call**
 //! — the batched execution engine's dispatch point. Twins with batched
@@ -12,6 +13,17 @@
 //! plain twins on the serial per-job path. Failures stay per-job, and the
 //! recorded execution time is the batch execution time — which is exactly
 //! the latency each coalesced client observed.
+//!
+//! **Work stealing.** With stealing enabled
+//! ([`Scheduler::start_with_stealing`]), a worker whose own deque is
+//! empty takes a whole batch from the back of the longest peer deque
+//! instead of going idle. Stealing moves *entire batches*, never splits
+//! one: the batch still executes as a single `run_batch_into` call on
+//! exactly one worker, and because every response is a pure function of
+//! the seeded request (noise comes from counter-addressed streams, not
+//! thread state), which worker runs it cannot change a single output
+//! byte. Outstanding-job counts transfer with the stolen batch so
+//! least-loaded dispatch keeps seeing true load.
 //!
 //! **Tile-aware dispatch.** Routes whose state exceeds one physical
 //! crossbar array register tile-sharded twins
@@ -26,9 +38,9 @@
 //! [`Telemetry`] (`shard_rollouts` / `shard_steps`) so sharded load is
 //! visible next to batching metrics.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use crate::coordinator::telemetry::Telemetry;
@@ -38,76 +50,147 @@ use crate::twin::{Twin, TwinRequest, TwinResponse};
 
 /// Handle to the worker pool.
 pub struct Scheduler {
-    workers: Vec<WorkerHandle>,
+    shared: Arc<Shared>,
+    threads: Vec<std::thread::JoinHandle<()>>,
 }
 
-struct WorkerHandle {
-    tx: mpsc::Sender<Batch>,
-    outstanding: Arc<AtomicUsize>,
-    thread: Option<std::thread::JoinHandle<()>>,
+/// State shared between the dispatcher and every worker.
+struct Shared {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    steal: bool,
+    /// Per-worker outstanding-job counts (queued + executing). Kept
+    /// outside the mutex so `dispatch` picks a target without blocking
+    /// on a worker that holds the queue lock.
+    outstanding: Vec<AtomicUsize>,
+}
+
+struct Inner {
+    /// One FIFO of whole batches per worker. The owner pops the front;
+    /// thieves pop the back, so the oldest work keeps its worker
+    /// affinity (warm twin instances) and the youngest migrates.
+    queues: Vec<VecDeque<Batch>>,
+    stop: bool,
 }
 
 impl Scheduler {
-    /// Spawn `n_workers` workers over a shared registry.
+    /// Spawn `n_workers` workers over a shared registry (no stealing).
     pub fn start(
         n_workers: usize,
         registry: TwinRegistry,
         telemetry: Arc<Telemetry>,
     ) -> Self {
+        Self::start_with_stealing(n_workers, registry, telemetry, false)
+    }
+
+    /// Spawn `n_workers` workers; when `steal` is set, idle workers take
+    /// whole batches from the longest peer deque instead of sleeping.
+    pub fn start_with_stealing(
+        n_workers: usize,
+        registry: TwinRegistry,
+        telemetry: Arc<Telemetry>,
+        steal: bool,
+    ) -> Self {
         assert!(n_workers > 0);
-        let workers = (0..n_workers)
+        let shared = Arc::new(Shared {
+            inner: Mutex::new(Inner {
+                queues: (0..n_workers).map(|_| VecDeque::new()).collect(),
+                stop: false,
+            }),
+            cv: Condvar::new(),
+            steal,
+            outstanding: (0..n_workers)
+                .map(|_| AtomicUsize::new(0))
+                .collect(),
+        });
+        let threads = (0..n_workers)
             .map(|i| {
-                let (tx, rx) = mpsc::channel::<Batch>();
-                let outstanding = Arc::new(AtomicUsize::new(0));
-                let thread = spawn_worker(
+                spawn_worker(
                     i,
-                    rx,
+                    Arc::clone(&shared),
                     registry.clone(),
                     Arc::clone(&telemetry),
-                    Arc::clone(&outstanding),
-                );
-                WorkerHandle { tx, outstanding, thread: Some(thread) }
+                )
             })
             .collect();
-        Self { workers }
+        Self { shared, threads }
     }
 
     /// Dispatch a batch to the least-loaded worker.
     pub fn dispatch(&self, batch: Batch) -> anyhow::Result<()> {
-        let w = self
-            .workers
-            .iter()
-            .min_by_key(|w| w.outstanding.load(Ordering::Relaxed))
+        let target = (0..self.shared.outstanding.len())
+            .min_by_key(|&i| {
+                self.shared.outstanding[i].load(Ordering::Relaxed)
+            })
             .expect("at least one worker");
-        w.outstanding.fetch_add(batch.jobs.len(), Ordering::AcqRel);
-        w.tx.send(batch).map_err(|_| anyhow::anyhow!("worker stopped"))
+        let mut g = self.shared.inner.lock().expect("scheduler lock");
+        if g.stop {
+            anyhow::bail!("scheduler stopped");
+        }
+        self.shared.outstanding[target]
+            .fetch_add(batch.jobs.len(), Ordering::AcqRel);
+        g.queues[target].push_back(batch);
+        drop(g);
+        // Batch granularity makes notify_all cheap, and it guarantees an
+        // idle thief wakes even when the target worker is mid-batch.
+        self.shared.cv.notify_all();
+        Ok(())
     }
 
     /// Total outstanding jobs across workers.
     pub fn outstanding(&self) -> usize {
-        self.workers
+        self.shared
+            .outstanding
             .iter()
-            .map(|w| w.outstanding.load(Ordering::Relaxed))
+            .map(|o| o.load(Ordering::Relaxed))
             .sum()
     }
 
     pub fn n_workers(&self) -> usize {
-        self.workers.len()
+        self.shared.outstanding.len()
     }
 }
 
 impl Drop for Scheduler {
     fn drop(&mut self) {
-        // Close channels, then join workers.
-        for w in &mut self.workers {
-            let (tx, _) = mpsc::channel();
-            w.tx = tx;
+        {
+            let mut g = self.shared.inner.lock().expect("scheduler lock");
+            g.stop = true;
         }
-        for w in &mut self.workers {
-            if let Some(t) = w.thread.take() {
-                let _ = t.join();
+        self.shared.cv.notify_all();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Blocking fetch of the next batch for worker `index`; `None` = shut
+/// down. Own queue first (front), then — with stealing on — the back of
+/// the longest peer queue, transferring the outstanding count with the
+/// batch. After `stop`, workers keep draining until no fetchable batch
+/// remains so every accepted job still gets a reply.
+fn next_batch(index: usize, shared: &Shared) -> Option<Batch> {
+    let mut g = shared.inner.lock().expect("scheduler lock");
+    loop {
+        if let Some(b) = g.queues[index].pop_front() {
+            return Some(b);
+        }
+        if shared.steal {
+            let victim = (0..g.queues.len())
+                .filter(|&j| j != index && !g.queues[j].is_empty())
+                .max_by_key(|&j| g.queues[j].len());
+            if let Some(v) = victim {
+                let b = g.queues[v].pop_back().expect("non-empty victim");
+                let n = b.jobs.len();
+                shared.outstanding[v].fetch_sub(n, Ordering::AcqRel);
+                shared.outstanding[index].fetch_add(n, Ordering::AcqRel);
+                return Some(b);
             }
         }
+        if g.stop {
+            return None;
+        }
+        g = shared.cv.wait(g).expect("scheduler lock");
     }
 }
 
@@ -123,10 +206,9 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
 
 fn spawn_worker(
     index: usize,
-    rx: mpsc::Receiver<Batch>,
+    shared: Arc<Shared>,
     registry: TwinRegistry,
     telemetry: Arc<Telemetry>,
-    outstanding: Arc<AtomicUsize>,
 ) -> std::thread::JoinHandle<()> {
     std::thread::Builder::new()
         .name(format!("twin-worker-{index}"))
@@ -139,7 +221,7 @@ fn spawn_worker(
             let mut twins: BTreeMap<String, Box<dyn Twin>> = BTreeMap::new();
             let mut reqs: Vec<TwinRequest> = Vec::new();
             let mut results: Vec<anyhow::Result<TwinResponse>> = Vec::new();
-            while let Ok(batch) = rx.recv() {
+            while let Some(batch) = next_batch(index, &shared) {
                 let n = batch.jobs.len();
                 telemetry.batches.fetch_add(1, Ordering::Relaxed);
                 telemetry.batched_jobs.fetch_add(n as u64, Ordering::Relaxed);
@@ -216,6 +298,8 @@ fn spawn_worker(
                     );
                 }
                 let exec_s = t0.elapsed().as_secs_f64();
+                // Feeds the batcher's adaptive per-route window.
+                telemetry.record_route_exec(&route, exec_s);
                 for ((job, result), wait_s) in
                     batch.jobs.into_iter().zip(results.drain(..)).zip(waits)
                 {
@@ -242,7 +326,7 @@ fn spawn_worker(
                         }
                     }
                     telemetry.record_latency(wait_s, exec_s);
-                    outstanding.fetch_sub(1, Ordering::AcqRel);
+                    shared.outstanding[index].fetch_sub(1, Ordering::AcqRel);
                     let _ = job.reply.send(JobResult {
                         id: job.id,
                         result,
@@ -260,6 +344,7 @@ mod tests {
     use super::*;
     use crate::twin::{TwinRequest, TwinResponse};
     use crate::util::tensor::Trajectory;
+    use std::sync::mpsc;
     use std::time::Duration;
 
     struct EchoTwin;
@@ -352,8 +437,6 @@ mod tests {
 
     #[test]
     fn whole_batch_executes_as_one_run_batch_call() {
-        use std::sync::Mutex;
-
         struct Probe {
             sizes: Arc<Mutex<Vec<usize>>>,
         }
@@ -559,6 +642,141 @@ mod tests {
             }
         }
         // All replies received => outstanding must be 0.
+        assert_eq!(sched.outstanding(), 0);
+    }
+
+    /// Counting semaphore for gate twins: `run` blocks until a permit
+    /// is released, letting tests pin a worker mid-batch.
+    #[derive(Clone)]
+    struct Sem(Arc<(Mutex<u32>, Condvar)>);
+
+    impl Sem {
+        fn new() -> Self {
+            Sem(Arc::new((Mutex::new(0), Condvar::new())))
+        }
+        fn release(&self, n: u32) {
+            *self.0 .0.lock().unwrap() += n;
+            self.0 .1.notify_all();
+        }
+        fn acquire(&self) {
+            let mut g = self.0 .0.lock().unwrap();
+            while *g == 0 {
+                g = self.0 .1.wait(g).unwrap();
+            }
+            *g -= 1;
+        }
+    }
+
+    struct GateTwin {
+        sem: Sem,
+    }
+
+    impl Twin for GateTwin {
+        fn name(&self) -> &str {
+            "gate"
+        }
+        fn state_dim(&self) -> usize {
+            1
+        }
+        fn dt(&self) -> f64 {
+            1.0
+        }
+        fn default_h0(&self) -> Vec<f64> {
+            vec![0.0]
+        }
+        fn run(
+            &mut self,
+            req: &TwinRequest,
+        ) -> anyhow::Result<TwinResponse> {
+            self.sem.acquire();
+            Ok(TwinResponse {
+                trajectory: Trajectory::repeat_row(&req.h0, req.n_points),
+                backend: "gate",
+                seed: req.seed.unwrap_or(0),
+                ensemble: None,
+                degraded: false,
+            })
+        }
+    }
+
+    /// Registry with two independently gated routes plus `echo`.
+    fn gated_registry() -> (TwinRegistry, Sem, Sem) {
+        let sem_a = Sem::new();
+        let sem_b = Sem::new();
+        let mut reg = TwinRegistry::new();
+        let sa = sem_a.clone();
+        reg.register("gate-a", move || {
+            Box::new(GateTwin { sem: sa.clone() })
+        });
+        let sb = sem_b.clone();
+        reg.register("gate-b", move || {
+            Box::new(GateTwin { sem: sb.clone() })
+        });
+        reg.register("echo", || Box::new(EchoTwin));
+        (reg, sem_a, sem_b)
+    }
+
+    /// Pin both workers on gated batches and queue an echo batch behind
+    /// the lighter one; the worker freed first must steal and run it
+    /// while the other worker is still blocked.
+    #[test]
+    fn idle_worker_steals_stranded_batch_from_busy_peer() {
+        let (reg, sem_a, sem_b) = gated_registry();
+        let tel = Arc::new(Telemetry::new());
+        let sched =
+            Scheduler::start_with_stealing(2, reg, tel, true);
+        // Two gate-a jobs pin one worker; outstanding=2 routes the next
+        // dispatches away from it regardless of pickup timing.
+        let (b1, rx1) = batch_of(2, "gate-a");
+        sched.dispatch(b1).unwrap();
+        let (b2, rx2) = batch_of(1, "gate-b");
+        sched.dispatch(b2).unwrap();
+        // Lands in the gate-b worker's deque (1 outstanding vs 2) and
+        // strands there: that worker is blocked inside gate-b.
+        let (b3, rx3) = batch_of(1, "echo");
+        sched.dispatch(b3).unwrap();
+        // Free only the gate-a worker; it must steal the echo batch.
+        sem_a.release(2);
+        for rx in rx1 {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        let r = rx3[0]
+            .recv_timeout(Duration::from_secs(5))
+            .expect("echo batch was not stolen by the idle worker");
+        assert!(r.result.is_ok());
+        // Clean shutdown: unblock the gate-b worker too.
+        sem_b.release(1);
+        rx2[0].recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(sched.outstanding(), 0);
+    }
+
+    /// Same shape with stealing off: the stranded batch must wait for
+    /// its own worker (documents the pre-stealing behaviour the default
+    /// config keeps).
+    #[test]
+    fn without_stealing_stranded_batch_waits_for_its_worker() {
+        let (reg, sem_a, sem_b) = gated_registry();
+        let tel = Arc::new(Telemetry::new());
+        let sched = Scheduler::start(2, reg, tel);
+        let (b1, rx1) = batch_of(2, "gate-a");
+        sched.dispatch(b1).unwrap();
+        let (b2, rx2) = batch_of(1, "gate-b");
+        sched.dispatch(b2).unwrap();
+        let (b3, rx3) = batch_of(1, "echo");
+        sched.dispatch(b3).unwrap();
+        sem_a.release(2);
+        for rx in rx1 {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        // The gate-a worker is idle but must NOT take the echo batch.
+        assert!(
+            rx3[0].recv_timeout(Duration::from_millis(300)).is_err(),
+            "batch ran on a foreign worker with stealing disabled"
+        );
+        sem_b.release(1);
+        rx2[0].recv_timeout(Duration::from_secs(5)).unwrap();
+        let r = rx3[0].recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(r.result.is_ok());
         assert_eq!(sched.outstanding(), 0);
     }
 }

@@ -56,14 +56,18 @@ impl Coordinator {
             BatchPolicy {
                 max_batch: cfg.max_batch,
                 window: Duration::from_secs_f64(cfg.batch_window_s),
+                window_min: Duration::from_secs_f64(cfg.batch_window_min_s),
+                window_max: Duration::from_secs_f64(cfg.batch_window_max_s),
             },
+            Some(Arc::clone(&telemetry)),
             jobs_rx,
             batches_tx,
         );
-        let scheduler = Arc::new(Scheduler::start(
+        let scheduler = Arc::new(Scheduler::start_with_stealing(
             cfg.workers,
             registry.clone(),
             Arc::clone(&telemetry),
+            cfg.steal,
         ));
         // Dispatcher: batches -> least-loaded worker.
         let sched2 = Arc::clone(&scheduler);
@@ -170,8 +174,11 @@ mod tests {
             workers: 2,
             max_batch: 4,
             batch_window_s: 1e-3,
+            batch_window_min_s: 1e-3,
+            batch_window_max_s: 1e-3,
             queue_depth: 64,
             route_queue_depth: 64,
+            ..Default::default()
         }
     }
 

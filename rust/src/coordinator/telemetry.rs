@@ -15,6 +15,13 @@ const RESERVOIR: usize = 4096;
 /// Maximum retained (job id, noise seed) replay pairs.
 const SEED_RING: usize = 64;
 
+/// Smoothing factor of the per-route execution-time EWMA: each observed
+/// batch execution moves the estimate 20% of the way to the new sample,
+/// so the estimate settles within ~10 batches yet rides out one-off
+/// stragglers. The adaptive batcher reads this estimate to size each
+/// route's maturity window.
+const EXEC_EWMA_ALPHA: f64 = 0.2;
+
 /// Shared serving metrics.
 #[derive(Debug, Default)]
 pub struct Telemetry {
@@ -54,6 +61,10 @@ pub struct Telemetry {
     /// Latest per-route device-lifetime status, published by
     /// health-monitored twins ([`crate::twin::health::MonitoredTwin`]).
     lifetime: Mutex<BTreeMap<String, LifetimeSnapshot>>,
+    /// Per-route EWMA of observed batch execution time (s), recorded by
+    /// scheduler workers after every executed batch and read by the
+    /// adaptive batcher to size that route's maturity window.
+    route_exec_s: Mutex<BTreeMap<String, f64>>,
     /// Reusable latency-stats scratch for [`Telemetry::snapshot`]: the
     /// ring is *copied* out under its lock, then sorted and reduced here
     /// with the ring lock released — the hot `record_latency` path never
@@ -162,6 +173,32 @@ impl Telemetry {
         }
     }
 
+    /// Fold one observed batch execution time (s) into `route`'s EWMA.
+    /// Non-finite or negative samples are dropped — a poisoned timing
+    /// must never wedge a route's batch window. Allocation-free after
+    /// the route's first record.
+    pub fn record_route_exec(&self, route: &str, exec_s: f64) {
+        if !exec_s.is_finite() || exec_s < 0.0 {
+            return;
+        }
+        let mut map = self.route_exec_s.lock().expect("telemetry lock");
+        if let Some(e) = map.get_mut(route) {
+            *e += EXEC_EWMA_ALPHA * (exec_s - *e);
+        } else {
+            map.insert(route.to_owned(), exec_s);
+        }
+    }
+
+    /// Current execution-time EWMA (s) for `route`, if any batch has
+    /// completed on it yet.
+    pub fn route_exec_ewma(&self, route: &str) -> Option<f64> {
+        self.route_exec_s
+            .lock()
+            .expect("telemetry lock")
+            .get(route)
+            .copied()
+    }
+
     /// Publish a route's latest device-lifetime status (newest wins).
     pub fn record_lifetime(&self, route: &str, snap: LifetimeSnapshot) {
         let mut map = self.lifetime.lock().expect("telemetry lock");
@@ -256,6 +293,13 @@ impl Telemetry {
                 .iter()
                 .map(|(k, v)| (k.clone(), *v))
                 .collect(),
+            route_exec_s: self
+                .route_exec_s
+                .lock()
+                .expect("telemetry lock")
+                .iter()
+                .map(|(k, v)| (k.clone(), *v))
+                .collect(),
         }
     }
 }
@@ -300,6 +344,9 @@ pub struct TelemetrySnapshot {
     pub route_load: Vec<(String, RouteLoad)>,
     /// Latest per-route device-lifetime status, route-name sorted.
     pub lifetime: Vec<(String, LifetimeSnapshot)>,
+    /// Per-route batch execution-time EWMA (s), route-name sorted — the
+    /// signal the adaptive batcher sizes maturity windows from.
+    pub route_exec_s: Vec<(String, f64)>,
 }
 
 impl TelemetrySnapshot {
@@ -492,6 +539,29 @@ mod tests {
         assert_eq!(s.net_protocol_errors, 2);
         let line = format!("{s}");
         assert!(line.contains("net[conns=3 refused=1"), "{line}");
+    }
+
+    #[test]
+    fn route_exec_ewma_converges_and_rejects_poison() {
+        let t = Telemetry::new();
+        assert!(t.route_exec_ewma("lorenz96/analog").is_none());
+        // First sample seeds the estimate exactly.
+        t.record_route_exec("lorenz96/analog", 10e-3);
+        assert_eq!(t.route_exec_ewma("lorenz96/analog"), Some(10e-3));
+        // Subsequent samples blend at alpha = 0.2.
+        t.record_route_exec("lorenz96/analog", 20e-3);
+        let e = t.route_exec_ewma("lorenz96/analog").unwrap();
+        assert!((e - 12e-3).abs() < 1e-12, "{e}");
+        // NaN / negative samples are dropped, not folded in.
+        t.record_route_exec("lorenz96/analog", f64::NAN);
+        t.record_route_exec("lorenz96/analog", -1.0);
+        assert_eq!(t.route_exec_ewma("lorenz96/analog"), Some(e));
+        // Routes are independent; snapshot carries the sorted map.
+        t.record_route_exec("hp/digital", 1e-3);
+        let s = t.snapshot();
+        assert_eq!(s.route_exec_s.len(), 2);
+        assert_eq!(s.route_exec_s[0].0, "hp/digital");
+        assert_eq!(s.route_exec_s[0].1, 1e-3);
     }
 
     #[test]

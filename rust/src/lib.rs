@@ -333,6 +333,46 @@
 //! standalone `loadgen` binary) drives it and reports p50/p99/p99.9
 //! latency + rejected fraction into `BENCH_serve.json`.
 //!
+//! ## Scheduling invariants (throughput levers that cannot change bytes)
+//!
+//! Between admission and execution sit three throughput levers —
+//! adaptive batch windows, work stealing, shard co-scheduling
+//! (`docs/SERVING.md` documents the operator knobs). The rule that
+//! makes them safe to flip on a live fleet:
+//!
+//! 1. **Responses are pure functions of seeded requests.** By the noise
+//!    rules above, a request's response bytes depend only on the request
+//!    (and its seed) — never on batch composition, dispatch target, or
+//!    execution interleaving. Every scheduling lever exploits exactly
+//!    this freedom and nothing else.
+//! 2. **Adaptive windows only move time, not work.**
+//!    [`coordinator::batcher`] sizes each route's coalescing window from
+//!    the route's execution EWMA
+//!    ([`coordinator::telemetry::Telemetry::record_route_exec`]),
+//!    clamped to `[batch_window_min_s, batch_window_max_s]`; equal
+//!    bounds (the default) reproduce the fixed window exactly. Windows
+//!    change *when* a batch flushes and *what coalesces*, which by rule
+//!    1 cannot change any response.
+//! 3. **Stealing moves whole batches.** [`coordinator::scheduler`]
+//!    workers own per-worker deques; an idle worker (with `steal` on)
+//!    takes a complete queued batch from the most-loaded peer. A batch
+//!    is never split, so it still executes as one `run_batch` on one
+//!    worker's twin — relocation is invisible to the result.
+//! 4. **Co-scheduling fuses execution, not state.**
+//!    [`twin::shard::ShardedAnalogOde::solve_groups_into`] runs several
+//!    trajectory groups under one fused barrier schedule, but each group
+//!    keeps private integrator banks, noise lanes and exchange buffers,
+//!    and the fused active-set schedule is a pure function of group
+//!    shapes. Per-group operations execute in the same order on the
+//!    same private state as the sequential path — bit-identity by
+//!    construction.
+//!
+//! The cross-configuration contract (steal × co-schedule × submission
+//! order, mixed plain/ensemble/sharded streams) is pinned by
+//! `rust/tests/scheduling.rs`; the front-door fairness valve that keeps
+//! greedy pipeliners from distorting these levers (round-robin frame
+//! decoding + per-connection in-flight cap) by `rust/tests/serve_net.rs`.
+//!
 //! Python never runs on the request path: after `make artifacts` the Rust
 //! binary is self-contained.
 

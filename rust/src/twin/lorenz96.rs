@@ -21,7 +21,9 @@ use crate::models::mlp::{BatchMlpField, Mlp, MlpField};
 use crate::models::rnn::{Recurrent, VanillaRnn};
 use crate::ode::batch::unbatch_into;
 use crate::ode::rk4::{self, Rk4};
-use crate::twin::shard::{ShardExecutor, ShardSnapshot, ShardedAnalogOde};
+use crate::twin::shard::{
+    ShardExecutor, ShardGroup, ShardSnapshot, ShardedAnalogOde,
+};
 use crate::twin::{
     assemble_ensemble_stats, ensemble_member_seed, EnsembleStats, GroupPlan,
     RolloutFn, Twin, TwinRequest, TwinResponse, MAX_SUB_BATCH_LANES,
@@ -353,6 +355,16 @@ impl Lorenz96Twin {
         }
     }
 
+    /// Toggle co-scheduled group execution on the fan-out backend: batched
+    /// dispatches fuse their compatible sub-batch groups into one barrier
+    /// schedule ([`ShardedAnalogOde::solve_groups_into`]). No-op for
+    /// unsharded backends.
+    pub fn set_coschedule(&mut self, on: bool) {
+        if let L96Backend::AnalogSharded(ode) = &mut self.backend {
+            ode.set_coschedule(on);
+        }
+    }
+
     /// Return a response's trajectory buffers to the twin's pool (see
     /// [`crate::twin::hp::HpTwin::recycle`]; ensemble responses hand back
     /// every stats trajectory plus the emptied container shell).
@@ -498,6 +510,158 @@ impl Lorenz96Twin {
             }
         }
     }
+
+    /// Co-scheduled batched execution for the fan-out backend: stage
+    /// *every* compatible sub-batch group first, then run them all through
+    /// one fused fan-out ([`ShardedAnalogOde::solve_groups_into`]) instead
+    /// of one thread scope (and one barrier schedule) per group. Request
+    /// validation, seed-resolution order, lane derivation and response
+    /// assembly match `run_batch_into` exactly, so responses are
+    /// bit-identical with the toggle on or off. Staging is per-group owned
+    /// storage — the co-scheduled path sits outside the zero-allocation
+    /// contract, like the fan-out itself.
+    fn run_batch_coscheduled(
+        &mut self,
+        reqs: &[TwinRequest],
+        out: &mut Vec<Result<TwinResponse>>,
+    ) {
+        struct Stage {
+            members: Vec<usize>,
+            lane_base: Vec<usize>,
+            h0s: Vec<f64>,
+            seeds: Vec<u64>,
+            lanes: Vec<NoiseLane>,
+            n_points: usize,
+            flat: Trajectory,
+        }
+        let backend = self.backend.label();
+        let dim = self.dim;
+        let dt = self.dt;
+        let mut sc = std::mem::take(&mut self.scratch);
+        sc.plan.plan_lanes(reqs, MAX_SUB_BATCH_LANES);
+        sc.slots.clear();
+        sc.slots.resize_with(reqs.len(), || None);
+        let mut stages: Vec<Stage> = Vec::new();
+        for g in 0..sc.plan.n_groups() {
+            let n_points = reqs[sc.plan.group(g)[0]].n_points;
+            let mut st = Stage {
+                members: Vec::new(),
+                lane_base: Vec::new(),
+                h0s: Vec::new(),
+                seeds: Vec::new(),
+                lanes: Vec::new(),
+                n_points,
+                flat: Trajectory::new(dim),
+            };
+            let mut lane_count = 0;
+            for &i in sc.plan.group(g) {
+                let h0: &[f64] = if reqs[i].h0.is_empty() {
+                    &self.default_h0
+                } else {
+                    &reqs[i].h0
+                };
+                if h0.len() != dim {
+                    sc.slots[i] = Some(Err(anyhow::anyhow!(
+                        "h0 dim {} != twin dim {}",
+                        h0.len(),
+                        dim
+                    )));
+                    continue;
+                }
+                if let Some(spec) = &reqs[i].ensemble {
+                    if let Err(e) = spec.validate() {
+                        sc.slots[i] = Some(Err(e));
+                        continue;
+                    }
+                }
+                st.members.push(i);
+                st.lane_base.push(lane_count);
+                for _ in 0..reqs[i].lanes() {
+                    st.h0s.extend_from_slice(h0);
+                }
+                lane_count += reqs[i].lanes();
+            }
+            // Seeds and lanes in a second pass: the sequencer lives on
+            // `self`, which the default-h0 borrow above keeps off-limits.
+            for &i in &st.members {
+                let seed = self.seeds.resolve(reqs[i].seed);
+                st.seeds.push(seed);
+                if reqs[i].ensemble.is_some() {
+                    for m in 0..reqs[i].lanes() {
+                        st.lanes.push(NoiseLane::from_seed(
+                            ensemble_member_seed(seed, m as u64),
+                        ));
+                    }
+                } else {
+                    st.lanes.push(NoiseLane::from_seed(seed));
+                }
+            }
+            if !st.members.is_empty() {
+                stages.push(st);
+            }
+        }
+        match &mut self.backend {
+            L96Backend::AnalogSharded(ode) => {
+                let mut groups: Vec<ShardGroup<'_>> = stages
+                    .iter_mut()
+                    .map(|st| ShardGroup {
+                        h0s: &st.h0s,
+                        batch: st.lanes.len(),
+                        dt_out: dt,
+                        n_points: st.n_points,
+                        lanes: &mut st.lanes,
+                        out: &mut st.flat,
+                    })
+                    .collect();
+                ode.solve_groups_into(&mut groups);
+            }
+            _ => unreachable!(
+                "co-scheduled path requires the sharded backend"
+            ),
+        }
+        for st in &stages {
+            let batch = st.lanes.len();
+            for (k, &i) in st.members.iter().enumerate() {
+                let base = st.lane_base[k];
+                match &reqs[i].ensemble {
+                    None => {
+                        let mut t = sc.pool.get(dim);
+                        unbatch_into(&st.flat, batch, dim, base, &mut t);
+                        sc.slots[i] = Some(Ok(TwinResponse {
+                            trajectory: t,
+                            backend,
+                            seed: st.seeds[k],
+                            ensemble: None,
+                            degraded: false,
+                        }));
+                    }
+                    Some(spec) => {
+                        let shell =
+                            sc.ens_shells.pop().unwrap_or_default();
+                        let (t, stats) = assemble_ensemble_stats(
+                            spec,
+                            &st.flat,
+                            crate::twin::EnsembleSlot { batch, dim, base },
+                            &mut sc.acc,
+                            &mut sc.pool,
+                            shell,
+                        );
+                        sc.slots[i] = Some(Ok(TwinResponse {
+                            trajectory: t,
+                            backend,
+                            seed: st.seeds[k],
+                            ensemble: Some(stats),
+                            degraded: false,
+                        }));
+                    }
+                }
+            }
+        }
+        for s in sc.slots.drain(..) {
+            out.push(s.expect("every request receives a result"));
+        }
+        self.scratch = sc;
+    }
 }
 
 impl Twin for Lorenz96Twin {
@@ -575,6 +739,11 @@ impl Twin for Lorenz96Twin {
         reqs: &[TwinRequest],
         out: &mut Vec<Result<TwinResponse>>,
     ) {
+        if let L96Backend::AnalogSharded(ode) = &self.backend {
+            if ode.coschedule() {
+                return self.run_batch_coscheduled(reqs, out);
+            }
+        }
         let backend = self.backend.label();
         let dim = self.dim;
         let mut sc = std::mem::take(&mut self.scratch);
@@ -1112,6 +1281,78 @@ mod tests {
                 "{label}: members"
             );
         }
+    }
+
+    #[test]
+    fn coscheduled_batch_bit_identical_to_per_group_fanout() {
+        use crate::twin::EnsembleSpec;
+        // A mixed seeded batch that splits into several compatible groups
+        // (two n_points values, one ensemble expansion): co-scheduling
+        // fuses the groups into one barrier schedule and must not change
+        // one output byte — noise on, lane cursors and stats included.
+        let d = 34;
+        let w = crate::models::loader::decay_mlp_weights(d);
+        let cfg = DeviceConfig {
+            fault_rate: 0.0,
+            pulse_sigma: 0.0,
+            ..Default::default()
+        };
+        let noise = AnalogNoise { read: 0.05, prog: 0.0 };
+        let opts = L96AnalogOpts {
+            substeps: 2,
+            shards: 2,
+            parallel: true,
+        };
+        let h0 = |k: usize| -> Vec<f64> {
+            (0..d).map(|i| ((i + k) as f64 * 0.13).sin() * 0.4).collect()
+        };
+        let reqs = vec![
+            TwinRequest::autonomous(h0(0), 4).with_seed(11),
+            TwinRequest::autonomous(h0(1), 6).with_seed(12),
+            TwinRequest::autonomous(h0(2), 4)
+                .with_seed(13)
+                .with_ensemble(
+                    EnsembleSpec::new(3).with_percentiles(vec![10.0, 90.0]),
+                ),
+            TwinRequest::autonomous(h0(3), 6).with_seed(14),
+        ];
+        let mut plain = Lorenz96Twin::analog_opts(
+            &w, &cfg, noise, 5, opts.clone(),
+        );
+        let want = plain.run_batch(&reqs);
+        let mut fused =
+            Lorenz96Twin::analog_opts(&w, &cfg, noise, 5, opts);
+        fused.set_coschedule(true);
+        let got = fused.run_batch(&reqs);
+        for (k, (a, b)) in want.iter().zip(&got).enumerate() {
+            let a = a.as_ref().unwrap();
+            let b = b.as_ref().unwrap();
+            assert_eq!(
+                a.trajectory, b.trajectory,
+                "request {k} diverged under co-scheduling"
+            );
+            assert_eq!(a.seed, b.seed, "request {k} seed");
+            match (&a.ensemble, &b.ensemble) {
+                (None, None) => {}
+                (Some(x), Some(y)) => {
+                    assert_eq!(x.mean, y.mean, "request {k} mean");
+                    assert_eq!(x.std, y.std, "request {k} std");
+                    assert_eq!(
+                        x.percentiles, y.percentiles,
+                        "request {k} percentiles"
+                    );
+                }
+                _ => panic!("request {k}: ensemble presence diverged"),
+            }
+        }
+        // A bad request still fails alone on the co-scheduled path.
+        let mixed = vec![
+            TwinRequest::autonomous(h0(0), 4).with_seed(21),
+            TwinRequest::autonomous(vec![0.0; 3], 4).with_seed(22),
+        ];
+        let res = fused.run_batch(&mixed);
+        assert!(res[0].is_ok());
+        assert!(res[1].is_err(), "bad h0 dim must fail alone");
     }
 
     #[test]

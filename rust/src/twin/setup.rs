@@ -132,6 +132,7 @@ pub fn build_registry_with_telemetry(
         let w = Arc::clone(&weights.l96_node);
         let dev = DeviceConfig { fault_rate: 0.0, ..device.clone() };
         let tel = telemetry.clone();
+        let coschedule = cfg.serve.coschedule;
         reg.register("lorenz96/analog-sharded", move || {
             let mut twin = Lorenz96Twin::analog_opts(
                 &w,
@@ -144,6 +145,7 @@ pub fn build_registry_with_telemetry(
                     ..Default::default()
                 },
             );
+            twin.set_coschedule(coschedule);
             if let Some(t) = &tel {
                 twin.attach_coordinator_telemetry(Arc::clone(t));
             }
@@ -238,6 +240,7 @@ pub fn build_registry_with_telemetry(
 /// |------------------------|------------------------------------------|
 /// | `lorenz96/digital`     | RK4 on the decay fixture field           |
 /// | `lorenz96/analog`      | quiet memristive solver (no faults)      |
+/// | `lorenz96/analog-sharded` | quiet solver, tile-sharded fan-out (co-scheduling via `MEMODE_COSCHEDULE`) |
 /// | `lorenz96/analog-aged` | aging crossbar behind the health monitor |
 /// | `hp/digital`           | RK4 on the trained-shape HP field        |
 ///
@@ -283,6 +286,39 @@ pub fn build_synthetic_registry(
                     ..Default::default()
                 },
             ))
+        });
+    }
+    {
+        // Tile-sharded fan-out over the same quiet deployment, so the
+        // serve smoke / heavy-tail mixes exercise sharded execution over
+        // TCP. Co-scheduling follows the MEMODE_COSCHEDULE toggle (the
+        // synthetic registry has no SystemConfig to read it from).
+        let w = decay_mlp_weights(6);
+        let dev = DeviceConfig {
+            fault_rate: 0.0,
+            pulse_sigma: 0.0,
+            ..Default::default()
+        };
+        let tel = telemetry.clone();
+        reg.register("lorenz96/analog-sharded", move || {
+            let mut twin = Lorenz96Twin::analog_opts(
+                &w,
+                &dev,
+                noise,
+                seed,
+                crate::twin::lorenz96::L96AnalogOpts {
+                    substeps: SYNTH_SUBSTEPS,
+                    shards: 2,
+                    parallel: true,
+                },
+            );
+            twin.set_coschedule(
+                crate::twin::shard::coschedule_from_env(),
+            );
+            if let Some(t) = &tel {
+                twin.attach_coordinator_telemetry(Arc::clone(t));
+            }
+            Box::new(twin)
         });
     }
     {
@@ -386,6 +422,7 @@ mod tests {
         for route in [
             "lorenz96/digital",
             "lorenz96/analog",
+            "lorenz96/analog-sharded",
             "lorenz96/analog-aged",
             "hp/digital",
         ] {

@@ -39,6 +39,15 @@
 //! rest on — states larger than one physical array, spread over workers —
 //! not for small-state latency.
 //!
+//! **Co-scheduling** ([`ShardedAnalogOde::solve_groups_into`]) extends the
+//! fan-out to multiple trajectories' groups at once: the sub-batches of
+//! one dispatch share a single thread scope and a single fused barrier
+//! sequence, so each exchange barrier's latency amortises over every
+//! group's useful tile work instead of being paid once per group. Each
+//! group keeps fully private state (banks, lane copies, exchange buffers),
+//! which is why the fused output stays bit-identical to sequential
+//! rollouts.
+//!
 //! The batched GEMM's multicore path
 //! (`util::tensor::Mat::vecmat_batch_into` past the
 //! `util::kernel::plan_threads` thresholds) reuses this module's worker
@@ -116,20 +125,40 @@ pub struct ShardSnapshot {
 }
 
 /// Fan-out policy for sharded rollouts: how many shard workers one
-/// trajectory spreads across, and (optionally) the coordinator telemetry
-/// the workers report into.
+/// trajectory spreads across, whether the groups of one batched dispatch
+/// fuse into a single barrier schedule, and (optionally) the coordinator
+/// telemetry the workers report into.
 #[derive(Debug, Clone, Default)]
 pub struct ShardExecutor {
     /// Upper bound on shard workers (the shard count is additionally
     /// clamped to the narrowest layer width).
     pub max_workers: usize,
+    /// Co-schedule the sub-batch groups of one dispatch through
+    /// [`ShardedAnalogOde::solve_groups_into`] (one thread scope, one
+    /// fused barrier sequence) instead of one fan-out per group.
+    pub coschedule: bool,
     coord: Option<Arc<Telemetry>>,
 }
 
 impl ShardExecutor {
     pub fn new(max_workers: usize) -> Self {
-        Self { max_workers: max_workers.max(1), coord: None }
+        Self {
+            max_workers: max_workers.max(1),
+            coschedule: false,
+            coord: None,
+        }
     }
+
+    pub fn with_coschedule(mut self, on: bool) -> Self {
+        self.coschedule = on;
+        self
+    }
+}
+
+/// Co-schedule default for registries built without a [`SystemConfig`]:
+/// the `MEMODE_COSCHEDULE` toggle (unset or unparsable keeps it off).
+pub fn coschedule_from_env() -> bool {
+    crate::config::env_bool("MEMODE_COSCHEDULE").unwrap_or(false)
 }
 
 /// Everything a shard worker needs for one rollout, borrowed from the
@@ -178,6 +207,45 @@ struct ShardUnit {
     /// Sampled own-slice rows: `n_points * batch * width`, reused across
     /// rollouts.
     samples: Vec<f64>,
+    /// Per-group rollout state for co-scheduled fan-outs (reused across
+    /// calls; empty on the single-group path).
+    rolls: Vec<GroupRoll>,
+}
+
+/// One co-scheduled group's private per-worker state: the same bank /
+/// lane-copy / activation / sample set `run_rollout` keeps in the
+/// [`ShardUnit`] itself, duplicated per group so a worker can interleave
+/// several trajectories' circuit steps inside one barrier schedule.
+#[derive(Default)]
+struct GroupRoll {
+    bank: Vec<IvpIntegrator>,
+    lanes: Vec<NoiseLane>,
+    full: Vec<Vec<f64>>,
+    samples: Vec<f64>,
+}
+
+/// Per-group parameters of a co-scheduled fan-out.
+struct GroupCtx<'a> {
+    batch: usize,
+    substeps: usize,
+    dt: f64,
+    n_points: usize,
+    h0s: &'a [f64],
+    /// This group's private exchange buffers (slot 0 state, slot l >= 1
+    /// the full output of hidden layer l-1).
+    exchange: &'a [Mutex<Vec<f64>>],
+    lanes: &'a [NoiseLane],
+}
+
+/// Shared context of a co-scheduled fan-out: the per-group parameters
+/// plus the solver-wide plan/barrier/telemetry the workers share.
+struct FusedCtx<'a> {
+    d_state: usize,
+    plans: &'a [ShardPlan],
+    layer_cols: &'a [usize],
+    barrier: &'a Barrier,
+    telemetry: &'a ShardTelemetry,
+    groups: &'a [GroupCtx<'a>],
 }
 
 impl ShardUnit {
@@ -327,6 +395,185 @@ impl ShardUnit {
         c.busy_ns
             .fetch_add(wall.elapsed().as_nanos() as u64, Ordering::Relaxed);
     }
+
+    /// The co-scheduled form of [`ShardUnit::run_rollout`]: every group of
+    /// one dispatch advances through the *same* barrier sequence, so one
+    /// fused substep costs `2 + 2*(n_layers-1)` barriers no matter how
+    /// many groups ride it — each barrier's latency is hidden behind the
+    /// other groups' useful work. Per group, the operations touching its
+    /// state (bank charge, lane draws, layer order, integrator steps) are
+    /// exactly `run_rollout`'s, on private per-group buffers, so the
+    /// output is bit-identical to running the groups one at a time. The
+    /// active set at fused substep `t` is a pure function of the group
+    /// parameters, so every worker executes the same barrier count even
+    /// as short groups finish early.
+    fn run_groups(&mut self, s: usize, ctx: &FusedCtx<'_>) {
+        let wall = Instant::now();
+        let w = self.width();
+        let d = ctx.d_state;
+        let n_layers = self.engines.len();
+        let n_groups = ctx.groups.len();
+        if self.rolls.len() < n_groups {
+            self.rolls.resize_with(n_groups, GroupRoll::default);
+        }
+        let mut totals: Vec<usize> = Vec::with_capacity(n_groups);
+        for (gi, g) in ctx.groups.iter().enumerate() {
+            let roll = &mut self.rolls[gi];
+            roll.bank.clear();
+            roll.bank.reserve(g.batch * w);
+            for b in 0..g.batch {
+                for (i, src) in self.template.iter().enumerate() {
+                    let mut integ = src.clone();
+                    integ.stop();
+                    integ.set_initial(
+                        g.h0s[b * d + self.state_range.start + i],
+                    );
+                    integ.start_integration();
+                    roll.bank.push(integ);
+                }
+            }
+            if roll.full.len() != n_layers {
+                roll.full.resize_with(n_layers, Vec::new);
+            }
+            for (l, buf) in roll.full.iter_mut().enumerate() {
+                let width = if l == 0 { d } else { ctx.layer_cols[l - 1] };
+                buf.resize(g.batch * width, 0.0);
+            }
+            roll.lanes.clear();
+            roll.lanes.extend_from_slice(g.lanes);
+            roll.samples.clear();
+            roll.samples.reserve(g.n_points.max(1) * g.batch * w);
+            for b in 0..g.batch {
+                for integ in &roll.bank[b * w..(b + 1) * w] {
+                    roll.samples.push(integ.v);
+                }
+            }
+            totals.push(g.substeps * g.n_points.saturating_sub(1));
+        }
+        let max_total = totals.iter().copied().max().unwrap_or(0);
+        let mut steps: u64 = 0;
+        let mut reads: u64 = 0;
+        for t in 0..max_total {
+            // Publish every active group's state slice, then one barrier
+            // pair covers all of them.
+            for (gi, g) in ctx.groups.iter().enumerate() {
+                if t >= totals[gi] {
+                    continue;
+                }
+                let roll = &self.rolls[gi];
+                let mut sb = g.exchange[0].lock().expect("state exchange");
+                for b in 0..g.batch {
+                    for (i, integ) in
+                        roll.bank[b * w..(b + 1) * w].iter().enumerate()
+                    {
+                        sb[b * d + self.state_range.start + i] = integ.v;
+                    }
+                }
+            }
+            ctx.barrier.wait();
+            for (gi, g) in ctx.groups.iter().enumerate() {
+                if t >= totals[gi] {
+                    continue;
+                }
+                let sb = g.exchange[0].lock().expect("state exchange");
+                self.rolls[gi].full[0].copy_from_slice(&sb);
+            }
+            ctx.barrier.wait();
+            for l in 0..n_layers {
+                let is_last = l + 1 == n_layers;
+                for (gi, g) in ctx.groups.iter().enumerate() {
+                    if t >= totals[gi] {
+                        continue;
+                    }
+                    let roll = &mut self.rolls[gi];
+                    let rows = self.engines[l].rows();
+                    let src_dim = rows - 1;
+                    let cols = self.engines[l].cols();
+                    self.in_buf.resize(g.batch * rows, 0.0);
+                    for b in 0..g.batch {
+                        let dst =
+                            &mut self.in_buf[b * rows..(b + 1) * rows];
+                        dst[..src_dim].copy_from_slice(
+                            &roll.full[l]
+                                [b * src_dim..(b + 1) * src_dim],
+                        );
+                        dst[src_dim] = 1.0;
+                    }
+                    self.out_buf.resize(g.batch * cols, 0.0);
+                    self.engines[l].vmm_batch_into(
+                        &self.in_buf,
+                        g.batch,
+                        &mut self.out_buf,
+                        &mut roll.lanes,
+                    );
+                    reads += 1;
+                    self.tia.convert_slice(&mut self.out_buf);
+                    if !is_last {
+                        self.relu.activate_slice(&mut self.out_buf);
+                    }
+                    self.clamp.apply_slice(&mut self.out_buf);
+                    if is_last {
+                        for (integ, &dv) in
+                            roll.bank.iter_mut().zip(self.out_buf.iter())
+                        {
+                            integ.step(dv, g.dt);
+                        }
+                    } else {
+                        let rg = ctx.plans[l].range(s);
+                        let full_w = ctx.layer_cols[l];
+                        let mut hb = g.exchange[l + 1]
+                            .lock()
+                            .expect("hidden exchange");
+                        for b in 0..g.batch {
+                            hb[b * full_w + rg.start
+                                ..b * full_w + rg.end]
+                                .copy_from_slice(
+                                    &self.out_buf
+                                        [b * cols..(b + 1) * cols],
+                                );
+                        }
+                    }
+                }
+                if !is_last {
+                    ctx.barrier.wait();
+                    for (gi, g) in ctx.groups.iter().enumerate() {
+                        if t >= totals[gi] {
+                            continue;
+                        }
+                        let hb = g.exchange[l + 1]
+                            .lock()
+                            .expect("hidden exchange");
+                        self.rolls[gi].full[l + 1].copy_from_slice(&hb);
+                    }
+                    ctx.barrier.wait();
+                }
+            }
+            for (gi, g) in ctx.groups.iter().enumerate() {
+                if t >= totals[gi] {
+                    continue;
+                }
+                steps += 1;
+                if (t + 1) % g.substeps == 0 {
+                    let roll = &mut self.rolls[gi];
+                    for b in 0..g.batch {
+                        for i in 0..w {
+                            roll.samples.push(roll.bank[b * w + i].v);
+                        }
+                    }
+                }
+            }
+        }
+        for roll in self.rolls.iter_mut().take(n_groups) {
+            for integ in &mut roll.bank {
+                integ.stop();
+            }
+        }
+        let c = &ctx.telemetry.per_shard[s];
+        c.steps.fetch_add(steps, Ordering::Relaxed);
+        c.device_reads.fetch_add(reads, Ordering::Relaxed);
+        c.busy_ns
+            .fetch_add(wall.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
 }
 
 /// A closed-loop analogue solver whose rollouts fan out across parallel
@@ -398,6 +645,7 @@ impl ShardedAnalogOde {
                     out_buf: Vec::new(),
                     full: vec![Vec::new(); n_layers],
                     samples: Vec::new(),
+                    rolls: Vec::new(),
                 }
             })
             .collect();
@@ -439,6 +687,16 @@ impl ShardedAnalogOde {
     /// Report rollout counters into the coordinator's serving telemetry.
     pub fn attach_coordinator_telemetry(&mut self, t: Arc<Telemetry>) {
         self.executor.coord = Some(t);
+    }
+
+    /// Whether batched dispatches should fuse their sub-batch groups into
+    /// one co-scheduled fan-out ([`ShardedAnalogOde::solve_groups_into`]).
+    pub fn coschedule(&self) -> bool {
+        self.executor.coschedule
+    }
+
+    pub fn set_coschedule(&mut self, on: bool) {
+        self.executor.coschedule = on;
     }
 
     /// Batched sharded rollout: `batch` trajectories in lockstep from the
@@ -552,6 +810,152 @@ impl ShardedAnalogOde {
             out,
         );
     }
+
+    /// Co-scheduled fan-out: several independent batched rollouts
+    /// ("groups" — the compatible sub-batches of one dispatch) share the
+    /// shard workers of a *single* thread scope and a *single* fused
+    /// barrier schedule. Every fused circuit substep costs the same
+    /// `2 + 2*(n_layers-1)` barriers one group alone would pay, so each
+    /// barrier's synchronisation latency is hidden behind the other
+    /// groups' tile reads. Groups may differ in batch width, `n_points`
+    /// and `dt_out` (short groups drop out of the schedule
+    /// deterministically); each group's output and final lane cursors are
+    /// bit-identical to a sequence of [`ShardedAnalogOde::solve_batch_into`]
+    /// calls, because per group the fused schedule performs exactly the
+    /// same operations in the same order on private per-group state.
+    pub fn solve_groups_into(&mut self, groups: &mut [ShardGroup<'_>]) {
+        if groups.is_empty() {
+            return;
+        }
+        if groups.len() == 1 {
+            let g = &mut groups[0];
+            let (h0s, batch, dt_out, n_points) =
+                (g.h0s, g.batch, g.dt_out, g.n_points);
+            self.solve_batch_into(
+                h0s, batch, dt_out, n_points, g.lanes, g.out,
+            );
+            return;
+        }
+        let d = self.d_state;
+        let n_shards = self.units.len();
+        let n_layers = self.layer_cols.len();
+        // Per-group private exchange buffers (the co-scheduled path
+        // allocates per call, like the rest of the fan-out form).
+        let mut exchanges: Vec<Vec<Mutex<Vec<f64>>>> =
+            Vec::with_capacity(groups.len());
+        let mut substeps: Vec<usize> = Vec::with_capacity(groups.len());
+        for g in groups.iter() {
+            assert_eq!(
+                g.h0s.len(),
+                g.batch * d,
+                "co-scheduled solve: h0s length {} != batch {} * state \
+                 dim {}",
+                g.h0s.len(),
+                g.batch,
+                d
+            );
+            assert_eq!(
+                g.lanes.len(),
+                g.batch,
+                "co-scheduled solve: one noise lane per trajectory"
+            );
+            exchanges.push(
+                (0..n_layers)
+                    .map(|l| {
+                        let width = if l == 0 {
+                            d
+                        } else {
+                            self.layer_cols[l - 1]
+                        };
+                        Mutex::new(vec![0.0; g.batch * width])
+                    })
+                    .collect(),
+            );
+            substeps.push(
+                ((g.dt_out / self.dt_circuit).round() as usize).max(1),
+            );
+        }
+        let gctxs: Vec<GroupCtx<'_>> = groups
+            .iter()
+            .zip(&exchanges)
+            .zip(&substeps)
+            .map(|((g, ex), &ss)| GroupCtx {
+                batch: g.batch,
+                substeps: ss,
+                dt: g.dt_out / ss as f64,
+                n_points: g.n_points,
+                h0s: g.h0s,
+                exchange: ex,
+                lanes: &*g.lanes,
+            })
+            .collect();
+        let barrier = Barrier::new(n_shards);
+        let fctx = FusedCtx {
+            d_state: d,
+            plans: &self.plans,
+            layer_cols: &self.layer_cols,
+            barrier: &barrier,
+            telemetry: &self.telemetry,
+            groups: &gctxs,
+        };
+        std::thread::scope(|scope| {
+            for (s, unit) in self.units.iter_mut().enumerate() {
+                let fctx = &fctx;
+                scope.spawn(move || unit.run_groups(s, fctx));
+            }
+        });
+        drop(fctx);
+        drop(gctxs);
+        self.telemetry
+            .rollouts
+            .fetch_add(groups.len() as u64, Ordering::Relaxed);
+        if let Some(coord) = &self.executor.coord {
+            coord
+                .shard_rollouts
+                .fetch_add(groups.len() as u64, Ordering::Relaxed);
+            for (g, &ss) in groups.iter().zip(&substeps) {
+                let steps = (n_shards
+                    * ss
+                    * g.n_points.saturating_sub(1))
+                    as u64;
+                coord.shard_steps.fetch_add(steps, Ordering::Relaxed);
+            }
+        }
+        // Hand back lane cursors and stitch each group's pooled rows.
+        for (gi, g) in groups.iter_mut().enumerate() {
+            g.lanes.copy_from_slice(
+                &self.units[0].rolls[gi].lanes[..g.batch],
+            );
+            g.out.reset(g.batch * d);
+            g.out.reserve_rows(g.n_points.max(1));
+            self.row_buf.resize(g.batch * d, 0.0);
+            for p in 0..g.n_points.max(1) {
+                for unit in &self.units {
+                    let w = unit.width();
+                    let row = &unit.rolls[gi].samples
+                        [p * g.batch * w..(p + 1) * g.batch * w];
+                    for b in 0..g.batch {
+                        self.row_buf[b * d + unit.state_range.start
+                            ..b * d + unit.state_range.end]
+                            .copy_from_slice(&row[b * w..(b + 1) * w]);
+                    }
+                }
+                g.out.push_row(&self.row_buf);
+            }
+        }
+    }
+}
+
+/// One group of a co-scheduled fan-out
+/// ([`ShardedAnalogOde::solve_groups_into`]): the argument set of one
+/// [`ShardedAnalogOde::solve_batch_into`] call.
+pub struct ShardGroup<'a> {
+    pub h0s: &'a [f64],
+    pub batch: usize,
+    pub dt_out: f64,
+    pub n_points: usize,
+    pub lanes: &'a mut [NoiseLane],
+    pub out: &'a mut Trajectory,
 }
 
 impl std::fmt::Debug for ShardedAnalogOde {
@@ -715,6 +1119,150 @@ mod tests {
         let snap = tel.snapshot();
         assert_eq!(snap.shard_rollouts, 1);
         assert!(snap.shard_steps > 0);
+    }
+
+    #[test]
+    fn coscheduled_groups_bit_identical_to_sequential_rollouts() {
+        // Two ragged groups (different batch widths, lengths) fused into
+        // one barrier schedule must reproduce back-to-back
+        // solve_batch_into calls byte for byte, lanes included.
+        let d = 34;
+        let (_, mut seq) = deployed_pair(d, 2);
+        let (_, mut fused) = deployed_pair(d, 2);
+        let h0a: Vec<f64> = (0..2 * d)
+            .map(|k| ((k as f64) * 0.11).sin() * 0.4)
+            .collect();
+        let h0b: Vec<f64> = (0..3 * d)
+            .map(|k| ((k as f64) * 0.07).cos() * 0.6)
+            .collect();
+        let mut want_a = Trajectory::new(2 * d);
+        let mut want_b = Trajectory::new(3 * d);
+        let mut seq_lanes_a: Vec<NoiseLane> =
+            (0..2u64).map(|k| NoiseLane::from_seed(100 + k)).collect();
+        let mut seq_lanes_b: Vec<NoiseLane> =
+            (0..3u64).map(|k| NoiseLane::from_seed(200 + k)).collect();
+        seq.solve_batch_into(&h0a, 2, 0.1, 5, &mut seq_lanes_a, &mut want_a);
+        seq.solve_batch_into(&h0b, 3, 0.1, 7, &mut seq_lanes_b, &mut want_b);
+        let mut got_a = Trajectory::new(2 * d);
+        let mut got_b = Trajectory::new(3 * d);
+        let mut lanes_a: Vec<NoiseLane> =
+            (0..2u64).map(|k| NoiseLane::from_seed(100 + k)).collect();
+        let mut lanes_b: Vec<NoiseLane> =
+            (0..3u64).map(|k| NoiseLane::from_seed(200 + k)).collect();
+        let mut groups = [
+            ShardGroup {
+                h0s: &h0a,
+                batch: 2,
+                dt_out: 0.1,
+                n_points: 5,
+                lanes: &mut lanes_a,
+                out: &mut got_a,
+            },
+            ShardGroup {
+                h0s: &h0b,
+                batch: 3,
+                dt_out: 0.1,
+                n_points: 7,
+                lanes: &mut lanes_b,
+                out: &mut got_b,
+            },
+        ];
+        fused.solve_groups_into(&mut groups);
+        assert_eq!(got_a, want_a, "co-scheduled group A diverged");
+        assert_eq!(got_b, want_b, "co-scheduled group B diverged");
+        assert_eq!(lanes_a, seq_lanes_a, "group A lane cursors diverged");
+        assert_eq!(lanes_b, seq_lanes_b, "group B lane cursors diverged");
+        assert_eq!(
+            fused.telemetry().rollouts.load(Ordering::Relaxed),
+            2,
+            "each group counts as one rollout"
+        );
+    }
+
+    #[test]
+    fn noisy_coscheduled_groups_bit_identical_to_sequential() {
+        // With read noise on, the fused schedule must consume exactly the
+        // per-group draws the sequential rollouts do.
+        let d = 34;
+        let cfg = DeviceConfig {
+            fault_rate: 0.0,
+            pulse_sigma: 0.0,
+            ..Default::default()
+        };
+        let noise = AnalogNoise { read: 0.05, prog: 0.0 };
+        let build = || {
+            let mlp =
+                AnalogMlp::deploy(&wide_decay_layers(d), &cfg, noise, 13);
+            let ode = AnalogNeuralOde::new(mlp, d, 0.01);
+            ShardedAnalogOde::from_ode(&ode, ShardExecutor::new(2))
+        };
+        let mut seq = build();
+        let mut fused = build();
+        let h0a: Vec<f64> =
+            (0..d).map(|i| ((i as f64) * 0.19).sin() * 0.5).collect();
+        let h0b: Vec<f64> = (0..2 * d)
+            .map(|k| ((k as f64) * 0.23).cos() * 0.3)
+            .collect();
+        let mut want_a = Trajectory::new(d);
+        let mut want_b = Trajectory::new(2 * d);
+        let mut seq_lane_a = vec![NoiseLane::from_seed(77)];
+        let mut seq_lanes_b: Vec<NoiseLane> =
+            (0..2u64).map(|k| NoiseLane::from_seed(300 + k)).collect();
+        seq.solve_batch_into(&h0a, 1, 0.1, 4, &mut seq_lane_a, &mut want_a);
+        seq.solve_batch_into(&h0b, 2, 0.1, 6, &mut seq_lanes_b, &mut want_b);
+        let mut got_a = Trajectory::new(d);
+        let mut got_b = Trajectory::new(2 * d);
+        let mut lane_a = vec![NoiseLane::from_seed(77)];
+        let mut lanes_b: Vec<NoiseLane> =
+            (0..2u64).map(|k| NoiseLane::from_seed(300 + k)).collect();
+        let mut groups = [
+            ShardGroup {
+                h0s: &h0a,
+                batch: 1,
+                dt_out: 0.1,
+                n_points: 4,
+                lanes: &mut lane_a,
+                out: &mut got_a,
+            },
+            ShardGroup {
+                h0s: &h0b,
+                batch: 2,
+                dt_out: 0.1,
+                n_points: 6,
+                lanes: &mut lanes_b,
+                out: &mut got_b,
+            },
+        ];
+        fused.solve_groups_into(&mut groups);
+        assert_eq!(got_a, want_a, "noisy co-scheduled group A diverged");
+        assert_eq!(got_b, want_b, "noisy co-scheduled group B diverged");
+        assert_eq!(lane_a, seq_lane_a, "group A lane cursor diverged");
+        assert_eq!(lanes_b, seq_lanes_b, "group B lane cursors diverged");
+    }
+
+    #[test]
+    fn single_group_coschedule_delegates_to_batched_path() {
+        let d = 34;
+        let (_, mut seq) = deployed_pair(d, 2);
+        let (_, mut fused) = deployed_pair(d, 2);
+        let h0: Vec<f64> =
+            (0..d).map(|i| (i as f64) * 0.02 - 0.3).collect();
+        let mut want = Trajectory::new(d);
+        let mut seq_lane = vec![NoiseLane::from_seed(5)];
+        seq.solve_batch_into(&h0, 1, 0.1, 5, &mut seq_lane, &mut want);
+        let mut got = Trajectory::new(d);
+        let mut lane = vec![NoiseLane::from_seed(5)];
+        let mut groups = [ShardGroup {
+            h0s: &h0,
+            batch: 1,
+            dt_out: 0.1,
+            n_points: 5,
+            lanes: &mut lane,
+            out: &mut got,
+        }];
+        fused.solve_groups_into(&mut groups);
+        assert_eq!(got, want);
+        assert_eq!(lane, seq_lane);
     }
 
     #[test]

@@ -246,10 +246,10 @@ fn batcher_to_scheduler_executes_whole_batch_via_run_batch() {
     let scheduler = Scheduler::start(1, registry, Arc::clone(&telemetry));
 
     // Fill the batcher to max_batch: the 4th push emits the batch.
-    let mut batcher = Batcher::new(BatchPolicy {
-        max_batch: 4,
-        window: Duration::from_secs(100),
-    });
+    let mut batcher = Batcher::new(BatchPolicy::fixed(
+        4,
+        Duration::from_secs(100),
+    ));
     let h0s: Vec<Vec<f64>> = (0..4)
         .map(|k| vec![k as f64 * 0.3 - 0.5, 0.1, -0.2])
         .collect();

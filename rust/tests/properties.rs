@@ -497,10 +497,10 @@ fn prop_batcher_conserves_jobs() {
             (max_batch, routes)
         },
         |(max_batch, routes)| {
-            let mut b = Batcher::new(BatchPolicy {
-                max_batch: *max_batch,
-                window: Duration::from_secs(100),
-            });
+            let mut b = Batcher::new(BatchPolicy::fixed(
+                *max_batch,
+                Duration::from_secs(100),
+            ));
             let mut out_count = 0usize;
             let mut keep_rx = Vec::new();
             for (id, route) in routes.iter().enumerate() {

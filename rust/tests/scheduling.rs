@@ -1,0 +1,245 @@
+//! Scheduling-invariance acceptance tests: a seeded request's response
+//! bytes are a pure function of the request, never of *how* the
+//! coordinator ran it.
+//!
+//! A mixed stream (plain digital, noisy analogue, analogue ensembles,
+//! tile-sharded rollouts) is pushed through a real coordinator under
+//! every scheduler configuration this crate ships — work stealing
+//! on/off × shard co-scheduling on/off — and under random submission
+//! orders (`gen_permutation`). Every response must be bit-identical to
+//! the baseline configuration's: trajectories, replay seeds, ensemble
+//! means/stds/percentiles. This is the contract that lets the
+//! throughput levers (stealing, co-scheduling, adaptive batching)
+//! default on in production without a replay-fidelity audit.
+//!
+//! The suite is cheap in release but deliberately exercises parallel
+//! shard workers; CI runs it release-gated (`cargo test --release
+//! --test scheduling`).
+
+use std::sync::Arc;
+
+use memode::analog::system::AnalogNoise;
+use memode::config::ServeConfig;
+use memode::coordinator::service::Coordinator;
+use memode::device::taox::DeviceConfig;
+use memode::models::loader::decay_mlp_weights;
+use memode::twin::lorenz96::{L96AnalogOpts, Lorenz96Twin};
+use memode::twin::registry::TwinRegistry;
+use memode::twin::{EnsembleSpec, TwinRequest, TwinResponse};
+use memode::util::proptest::gen_permutation;
+use memode::util::rng::Pcg64;
+
+/// Three routes over the dim-6 decay field: plain digital, noisy
+/// analogue, and a tile-sharded analogue whose co-scheduling flag is
+/// set explicitly (not via the environment, so parallel tests cannot
+/// interfere).
+fn registry(coschedule: bool) -> TwinRegistry {
+    let mut reg = TwinRegistry::new();
+    let w = decay_mlp_weights(6);
+    let dev = DeviceConfig {
+        fault_rate: 0.0,
+        pulse_sigma: 0.0,
+        ..Default::default()
+    };
+    let noise = AnalogNoise { read: 0.02, prog: 0.0 };
+    {
+        let w = w.clone();
+        reg.register("l96/digital", move || {
+            Box::new(Lorenz96Twin::digital(&w))
+        });
+    }
+    {
+        let w = w.clone();
+        let dev = dev.clone();
+        reg.register("l96/analog", move || {
+            Box::new(Lorenz96Twin::analog(&w, &dev, noise, 21))
+        });
+    }
+    reg.register("l96/sharded", move || {
+        let mut twin = Lorenz96Twin::analog_opts(
+            &w,
+            &dev,
+            noise,
+            42,
+            L96AnalogOpts { substeps: 3, shards: 2, parallel: true },
+        );
+        twin.set_coschedule(coschedule);
+        Box::new(twin)
+    });
+    reg
+}
+
+/// The seeded mixed stream. Every request carries an explicit seed so
+/// the router never stamps one (stamped seeds derive from submission
+/// ids, which permutations would change).
+fn mixed_stream() -> Vec<(&'static str, TwinRequest)> {
+    let mut reqs: Vec<(&'static str, TwinRequest)> = Vec::new();
+    for (k, n_points) in [4usize, 7, 5].into_iter().enumerate() {
+        reqs.push((
+            "l96/digital",
+            TwinRequest::autonomous(vec![0.3; 6], n_points)
+                .with_seed(100 + k as u64),
+        ));
+    }
+    for (k, n_points) in [6usize, 4, 9].into_iter().enumerate() {
+        reqs.push((
+            "l96/analog",
+            TwinRequest::autonomous(vec![0.5; 6], n_points)
+                .with_seed(200 + k as u64),
+        ));
+    }
+    reqs.push((
+        "l96/analog",
+        TwinRequest::autonomous(vec![0.4; 6], 5)
+            .with_seed(300)
+            .with_ensemble(
+                EnsembleSpec::new(3).with_percentiles(vec![50.0]),
+            ),
+    ));
+    reqs.push((
+        "l96/analog",
+        TwinRequest::autonomous(vec![], 6)
+            .with_seed(301)
+            .with_ensemble(EnsembleSpec::new(5)),
+    ));
+    for (k, n_points) in [4usize, 6, 5].into_iter().enumerate() {
+        reqs.push((
+            "l96/sharded",
+            TwinRequest::autonomous(vec![0.2; 6], n_points)
+                .with_seed(400 + k as u64),
+        ));
+    }
+    reqs.push((
+        "l96/sharded",
+        TwinRequest::autonomous(vec![0.6; 6], 6)
+            .with_seed(500)
+            .with_ensemble(
+                EnsembleSpec::new(4).with_percentiles(vec![10.0, 90.0]),
+            ),
+    ));
+    reqs
+}
+
+/// Run the whole stream through a coordinator configured with the given
+/// scheduler toggles, submitting in `order`; responses come back keyed
+/// by the request's original index.
+fn run_stream(
+    steal: bool,
+    coschedule: bool,
+    order: &[usize],
+    reqs: &[(&'static str, TwinRequest)],
+) -> Vec<TwinResponse> {
+    let cfg = ServeConfig {
+        workers: 2,
+        max_batch: 4,
+        batch_window_s: 1e-3,
+        batch_window_min_s: 1e-3,
+        batch_window_max_s: 1e-3,
+        steal,
+        coschedule,
+        queue_depth: 64,
+        route_queue_depth: 64,
+    };
+    let coord = Arc::new(Coordinator::start(registry(coschedule), &cfg));
+    let mut pending: Vec<Option<_>> =
+        (0..reqs.len()).map(|_| None).collect();
+    for &i in order {
+        let (route, req) = &reqs[i];
+        pending[i] = Some(
+            coord
+                .try_submit(route, req.clone())
+                .expect("depth-64 gate admits the whole stream"),
+        );
+    }
+    pending
+        .into_iter()
+        .map(|sub| {
+            sub.expect("every index submitted")
+                .wait()
+                .expect("worker reply")
+                .result
+                .expect("every request in the stream is valid")
+        })
+        .collect()
+}
+
+/// Bit-identity across everything a response carries.
+fn assert_identical(a: &TwinResponse, b: &TwinResponse, ctx: &str) {
+    assert_eq!(a.seed, b.seed, "{ctx}: seed");
+    assert_eq!(a.backend, b.backend, "{ctx}: backend");
+    assert_eq!(a.trajectory, b.trajectory, "{ctx}: trajectory");
+    match (&a.ensemble, &b.ensemble) {
+        (None, None) => {}
+        (Some(x), Some(y)) => {
+            assert_eq!(x.members, y.members, "{ctx}: members");
+            assert_eq!(x.mean, y.mean, "{ctx}: ensemble mean");
+            assert_eq!(x.std, y.std, "{ctx}: ensemble std");
+            assert_eq!(
+                x.percentiles, y.percentiles,
+                "{ctx}: percentiles"
+            );
+            assert_eq!(x.nan_samples, y.nan_samples, "{ctx}: nans");
+        }
+        _ => panic!("{ctx}: ensemble presence differs"),
+    }
+}
+
+#[test]
+fn responses_are_bit_identical_across_all_scheduler_configs() {
+    let reqs = mixed_stream();
+    let identity: Vec<usize> = (0..reqs.len()).collect();
+    let baseline = run_stream(false, false, &identity, &reqs);
+    assert_eq!(baseline.len(), reqs.len());
+
+    let mut rng = Pcg64::new(0x5c4e_d01e, 9);
+    let mut orders = vec![identity.clone()];
+    orders.push(gen_permutation(&mut rng, reqs.len()));
+    orders.push(gen_permutation(&mut rng, reqs.len()));
+
+    for &(steal, coschedule) in
+        &[(true, false), (false, true), (true, true), (false, false)]
+    {
+        for (oi, order) in orders.iter().enumerate() {
+            let got = run_stream(steal, coschedule, order, &reqs);
+            for (i, (a, b)) in baseline.iter().zip(&got).enumerate() {
+                let ctx = format!(
+                    "req {i} (steal={steal} coschedule={coschedule} \
+                     order {oi})"
+                );
+                assert_identical(a, b, &ctx);
+            }
+        }
+    }
+}
+
+#[test]
+fn ensemble_members_replay_standalone_under_coscheduling() {
+    // Member k of a co-scheduled ensemble must equal a standalone
+    // rollout under ensemble_member_seed(seed, k) — the replay contract
+    // cannot depend on the fused execution path.
+    use memode::twin::ensemble_member_seed;
+    let reqs: Vec<(&'static str, TwinRequest)> = vec![(
+        "l96/sharded",
+        TwinRequest::autonomous(vec![0.25; 6], 5)
+            .with_seed(777)
+            .with_ensemble(
+                EnsembleSpec::new(3).with_member_trajectories(),
+            ),
+    )];
+    let identity = [0usize];
+    let ens = run_stream(false, true, &identity, &reqs);
+    let stats = ens[0].ensemble.as_ref().expect("ensemble stats");
+    assert_eq!(stats.member_trajectories.len(), 3);
+    for (k, member) in stats.member_trajectories.iter().enumerate() {
+        let replay: Vec<(&'static str, TwinRequest)> = vec![(
+            "l96/sharded",
+            TwinRequest::autonomous(vec![0.25; 6], 5)
+                .with_seed(ensemble_member_seed(777, k as u64)),
+        )];
+        let got = run_stream(false, true, &identity, &replay);
+        assert_eq!(
+            &got[0].trajectory, member,
+            "member {k} does not replay standalone"
+        );
+    }
+}

@@ -7,6 +7,9 @@
 //! * admission control past the queue bound: typed `rejected_overload`
 //!   frames that echo a replay seed, recorded in per-route shed
 //!   counters;
+//! * per-connection fairness: a greedy pipeliner is throttled at the
+//!   connection in-flight cap instead of monopolising the admission
+//!   budget, so a polite neighbour is never shed;
 //! * graceful drain completing in-flight work;
 //! * per-request errors leaving the connection usable.
 
@@ -64,8 +67,11 @@ fn start_slow_server(
         workers: 1,
         max_batch: 1,
         batch_window_s: 1e-4,
+        batch_window_min_s: 1e-4,
+        batch_window_max_s: 1e-4,
         queue_depth,
         route_queue_depth: queue_depth,
+        ..Default::default()
     };
     let coord = Arc::new(Coordinator::start(reg, &cfg));
     let handle = NetServer::start(
@@ -91,8 +97,11 @@ fn concurrent_clients_are_served_across_synthetic_routes() {
         workers: 2,
         max_batch: 8,
         batch_window_s: 1e-3,
+        batch_window_min_s: 1e-3,
+        batch_window_max_s: 1e-3,
         queue_depth: 64,
         route_queue_depth: 32,
+        ..Default::default()
     };
     let coord = Arc::new(Coordinator::start(reg, &cfg));
     let handle = NetServer::start(
@@ -209,6 +218,84 @@ fn overload_sheds_with_typed_frames_seed_echo_and_counters() {
     let net = handle.shutdown();
     assert_eq!(net.frames_in, N);
     assert_eq!(net.frames_out, N);
+    assert_eq!(net.protocol_errors, 0);
+}
+
+#[test]
+fn greedy_pipeliner_is_capped_so_a_polite_client_is_never_shed() {
+    // One slow worker, an admission gate of depth 4, and a per-
+    // connection in-flight cap of 2. A greedy client pipelines 12
+    // requests without reading; under the old greedy frame drain all 12
+    // would hit the admission gate at once (4 admitted, 8 shed) and a
+    // polite neighbour would find the gate full. With the fairness cap
+    // the greedy connection holds at most 2 jobs in flight — its spare
+    // frames wait in the server's read buffer — so the gate always has
+    // room: the polite client is served, and even the greedy client
+    // eventually gets 12 `ok` responses with zero sheds.
+    let mut reg = TwinRegistry::new();
+    reg.register("slow", move || {
+        Box::new(SlowTwin { delay: Duration::from_millis(30) })
+    });
+    let cfg = ServeConfig {
+        workers: 1,
+        max_batch: 1,
+        batch_window_s: 1e-4,
+        batch_window_min_s: 1e-4,
+        batch_window_max_s: 1e-4,
+        queue_depth: 4,
+        route_queue_depth: 4,
+        ..Default::default()
+    };
+    let coord = Arc::new(Coordinator::start(reg, &cfg));
+    let handle = NetServer::start(
+        Arc::clone(&coord),
+        NetConfig {
+            addr: "127.0.0.1:0".into(),
+            conn_inflight: 2,
+            ..NetConfig::default()
+        },
+    )
+    .expect("server starts");
+    let addr = handle.addr().to_string();
+
+    let mut greedy = WireClient::connect(&addr).unwrap();
+    const N: u64 = 12;
+    for id in 0..N {
+        greedy.send(&plain(id, "slow", 2)).unwrap();
+    }
+    // Let the server ingest the burst before the polite client arrives.
+    std::thread::sleep(Duration::from_millis(60));
+
+    let mut polite = WireClient::connect(&addr).unwrap();
+    match polite.call(&plain(100, "slow", 2)).unwrap() {
+        WireResponse::Ok(ok) => assert_eq!(ok.id, 100),
+        other => {
+            panic!("polite client shed behind a pipeliner: {other:?}")
+        }
+    }
+
+    // The greedy client is throttled, not punished: every request
+    // eventually completes, none shed at the admission gate.
+    for _ in 0..N {
+        match greedy.recv().unwrap() {
+            WireResponse::Ok(_) => {}
+            other => panic!("capped pipeliner saw a shed: {other:?}"),
+        }
+    }
+    let stats = coord.stats();
+    let load = stats
+        .route_load
+        .iter()
+        .find(|(r, _)| r == "slow")
+        .map(|(_, l)| l)
+        .expect("route counters");
+    assert_eq!(load.admitted, N + 1);
+    assert_eq!(load.shed, 0, "fairness cap must prevent sheds");
+    drop(greedy);
+    drop(polite);
+    let net = handle.shutdown();
+    assert_eq!(net.frames_in, N + 1);
+    assert_eq!(net.frames_out, N + 1);
     assert_eq!(net.protocol_errors, 0);
 }
 
