@@ -6,6 +6,7 @@
 //! Usage:
 //!   loadgen [--addr HOST:PORT] [--conns N] [--duration S] [--rate HZ]
 //!           [--steps N] [--seed N] [--routes a,b,...]
+//!           [--scenarios a.twin,b.twin,...]
 //!           [--ensemble-fraction F] [--ensemble-members N]
 //!           [--max-rejected F] [--out PATH] [--smoke]
 //!

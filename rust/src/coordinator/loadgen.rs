@@ -6,6 +6,9 @@
 //! ensembles, and the aged route when present) and measuring
 //! request→response latency. An optional open-loop arrival rate paces
 //! each connection's next send instead of going back-to-back.
+//! `--scenarios a.twin,b.twin` swaps the synthetic mix for committed
+//! scenario files (`docs/SCENARIOS.md`), so a load test can replay the
+//! exact rollouts CI accepts as fixtures.
 //!
 //! The report lands in `BENCH_serve.json` (machine-local, gitignored —
 //! CI uploads it as an artifact like the other `BENCH_*` documents):
@@ -70,6 +73,12 @@ pub struct LoadgenConfig {
     pub ensemble_members: usize,
     /// Request-mix preset (see [`Mix`]).
     pub mix: Mix,
+    /// Parsed `*.twin` scenario files. When non-empty they replace the
+    /// synthetic route mix entirely: each request is one scenario's
+    /// rollout (route, horizon, stimulus, ensemble from the file),
+    /// sampled uniformly, with a per-`(connection, sequence)` stream
+    /// seed stamped unless the file pins one.
+    pub scenarios: Vec<crate::twin::scenario::Scenario>,
 }
 
 impl Default for LoadgenConfig {
@@ -91,6 +100,7 @@ impl Default for LoadgenConfig {
             ensemble_fraction: 0.2,
             ensemble_members: 8,
             mix: Mix::Uniform,
+            scenarios: Vec::new(),
         }
     }
 }
@@ -303,6 +313,12 @@ pub fn cli(prog: &str, argv: Vec<String>) -> Result<()> {
     )
     .opt("ensemble-members", "8", "ensemble width for those requests")
     .opt(
+        "scenarios",
+        "",
+        "comma-separated *.twin scenario files replacing the synthetic \
+         request mix (docs/SCENARIOS.md)",
+    )
+    .opt(
         "max-rejected",
         "",
         "fail when the rejected fraction exceeds this (e.g. 0.05)",
@@ -324,6 +340,20 @@ pub fn cli(prog: &str, argv: Vec<String>) -> Result<()> {
             "unknown --mix {other:?} (expected uniform | heavy-tail)"
         ),
     };
+    let scenarios = {
+        let list = args.get("scenarios");
+        let mut out = Vec::new();
+        for path in
+            list.split(',').map(str::trim).filter(|s| !s.is_empty())
+        {
+            let src = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+            let sc = crate::twin::scenario::Scenario::parse(&src)
+                .map_err(|e| anyhow::anyhow!("{}", e.render(&src, path)))?;
+            out.push(sc);
+        }
+        out
+    };
     let cfg = LoadgenConfig {
         addr: args.get("addr"),
         conns: if smoke { 2 } else { args.get_usize("conns") },
@@ -340,6 +370,7 @@ pub fn cli(prog: &str, argv: Vec<String>) -> Result<()> {
         ensemble_fraction: args.get_f64("ensemble-fraction"),
         ensemble_members: args.get_usize("ensemble-members"),
         mix,
+        scenarios,
     };
     let report = run(&cfg)?;
     println!(
@@ -414,6 +445,26 @@ fn build_request(
     conn: usize,
     seq: u64,
 ) -> WireRequest {
+    // Scenario-driven mixes replace the synthetic route mix: each
+    // request replays one scenario file's rollout. The early return
+    // keeps the flag-driven path below byte-identical to earlier
+    // releases' mixes (no extra RNG draws) when no scenarios are given.
+    if !cfg.scenarios.is_empty() {
+        let sc = &cfg.scenarios
+            [rng.below(cfg.scenarios.len() as u64) as usize];
+        let mut req = sc.to_request();
+        if req.seed.is_none() {
+            req = req.with_seed(derive_stream_seed(
+                cfg.seed,
+                ((conn as u64) << 32) | seq,
+            ));
+        }
+        return WireRequest {
+            id: ((conn as u64) << 32) | seq,
+            route: sc.twin.clone(),
+            req,
+        };
+    }
     let route = cfg.routes[rng.below(cfg.routes.len() as u64) as usize]
         .clone();
     // The mix preset shapes the tail. Uniform draws nothing extra, so
@@ -476,7 +527,10 @@ fn record(tally: &mut WorkerTally, resp: Result<WireResponse>, t0: Instant) {
 /// Drive the server at `cfg.addr` and return the merged report.
 pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     anyhow::ensure!(cfg.conns >= 1, "loadgen needs >= 1 connection");
-    anyhow::ensure!(!cfg.routes.is_empty(), "loadgen needs >= 1 route");
+    anyhow::ensure!(
+        !cfg.routes.is_empty() || !cfg.scenarios.is_empty(),
+        "loadgen needs >= 1 route or scenario"
+    );
     let started = Instant::now();
     let deadline = started + Duration::from_secs_f64(cfg.duration_s.max(0.0));
     let mut handles = Vec::new();
@@ -596,6 +650,51 @@ mod tests {
             mix.iter().any(|(_, e)| matches!(e, Some(m) if *m > 4)),
             "no widened ensembles"
         );
+    }
+
+    #[test]
+    fn scenario_mix_replays_scenario_requests() {
+        use crate::twin::scenario::Scenario;
+        let pinned = Scenario::parse(
+            "twin kuramoto/digital\nsteps 12\nseed 5\n",
+        )
+        .unwrap();
+        let unpinned = Scenario::parse(
+            "twin hp/digital\nsteps 6\nstimulus sine 1.0 50.0\n\
+             ensemble 4\n",
+        )
+        .unwrap();
+        let cfg = LoadgenConfig {
+            scenarios: vec![pinned, unpinned],
+            ..LoadgenConfig::default()
+        };
+        let build = |seed: u64| -> Vec<(String, usize, Option<u64>)> {
+            let mut rng = Pcg64::new(derive_stream_seed(seed, 0), 1);
+            (1..=16)
+                .map(|seq| {
+                    let w = build_request(&cfg, &mut rng, 0, seq);
+                    (w.route, w.req.n_points, w.req.seed)
+                })
+                .collect()
+        };
+        assert_eq!(build(42), build(42), "same seed, same scenario mix");
+        let mix = build(42);
+        for (route, steps, seed) in &mix {
+            match route.as_str() {
+                "kuramoto/digital" => {
+                    assert_eq!(*steps, 12);
+                    assert_eq!(*seed, Some(5), "file-pinned seed kept");
+                }
+                "hp/digital" => {
+                    assert_eq!(*steps, 6);
+                    assert!(seed.is_some(), "stream seed stamped");
+                    assert_ne!(*seed, Some(5));
+                }
+                other => panic!("unexpected route {other}"),
+            }
+        }
+        assert!(mix.iter().any(|(r, _, _)| r == "kuramoto/digital"));
+        assert!(mix.iter().any(|(r, _, _)| r == "hp/digital"));
     }
 
     #[test]

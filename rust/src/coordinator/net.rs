@@ -240,6 +240,7 @@ fn submit_error_code(e: &SubmitError) -> ErrorCode {
     match e {
         SubmitError::UnknownRoute { .. } => ErrorCode::UnknownRoute,
         SubmitError::InvalidRequest(_) => ErrorCode::BadRequest,
+        SubmitError::BadDimension { .. } => ErrorCode::BadRequest,
         SubmitError::Overloaded { .. } => ErrorCode::RejectedOverload,
         SubmitError::Stopped => ErrorCode::ShuttingDown,
     }
@@ -585,7 +586,17 @@ mod tests {
 
     fn start_server(max_conns: usize) -> (Arc<Coordinator>, NetHandle) {
         let mut reg = TwinRegistry::new();
-        reg.register("echo", || Box::new(EchoTwin));
+        reg.register_info(
+            "echo",
+            crate::twin::registry::RouteInfo {
+                dim: 1,
+                dt: 1.0,
+                backend: "echo",
+                aged: false,
+                synthetic: true,
+            },
+            || Box::new(EchoTwin),
+        );
         let coord = Arc::new(Coordinator::start(
             reg,
             &ServeConfig {
@@ -703,6 +714,38 @@ mod tests {
                 id: 12,
                 route: "echo".into(),
                 req: TwinRequest::autonomous(vec![], 1),
+            })
+            .unwrap();
+        assert!(matches!(resp, WireResponse::Ok(_)));
+        handle.shutdown();
+    }
+
+    #[test]
+    fn wrong_y0_dimension_is_a_typed_bad_request() {
+        let (_coord, handle) = start_server(4);
+        let mut client =
+            WireClient::connect(&handle.addr().to_string()).unwrap();
+        let resp = client
+            .call(&WireRequest {
+                id: 21,
+                route: "echo".into(),
+                req: TwinRequest::autonomous(vec![0.0, 1.0], 2),
+            })
+            .unwrap();
+        match resp {
+            WireResponse::Err(e) => {
+                assert_eq!(e.code, ErrorCode::BadRequest);
+                assert_eq!(e.id, Some(21));
+                assert!(e.message.contains("dim"), "{}", e.message);
+            }
+            other => panic!("expected bad_request, got {other:?}"),
+        }
+        // The connection survives and a well-shaped request succeeds.
+        let resp = client
+            .call(&WireRequest {
+                id: 22,
+                route: "echo".into(),
+                req: TwinRequest::autonomous(vec![0.5], 2),
             })
             .unwrap();
         assert!(matches!(resp, WireResponse::Ok(_)));

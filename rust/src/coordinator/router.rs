@@ -35,10 +35,17 @@ const ROUTER_SEED_ROOT: u64 = 0xc0de_5eed_0a11_0001;
 /// error codes.
 #[derive(Debug)]
 pub enum SubmitError {
-    /// The route key is not in the registry.
+    /// The route key is not in the registry. `available` enumerates the
+    /// registered routes, annotated with their state dimension where the
+    /// registry carries [`crate::twin::registry::RouteInfo`].
     UnknownRoute { route: String, available: String },
     /// The request failed validation (today: a bad ensemble spec).
     InvalidRequest(String),
+    /// The request's explicit `y0` does not match the route's state
+    /// dimension (known from the registry's `RouteInfo`). Caught at
+    /// submit time so a malformed request never burns an admission slot
+    /// or a worker twin instantiation.
+    BadDimension { route: String, got: usize, want: usize },
     /// Shed at the admission gate; `scope` names the gate ("global" or
     /// "route") per [`Shed`].
     Overloaded { scope: &'static str, in_flight: usize, limit: usize },
@@ -55,6 +62,11 @@ impl std::fmt::Display for SubmitError {
             SubmitError::InvalidRequest(msg) => {
                 write!(f, "invalid ensemble spec: {msg}")
             }
+            SubmitError::BadDimension { route, got, want } => write!(
+                f,
+                "bad request: y0 has dim {got} but route '{route}' \
+                 integrates dim {want}"
+            ),
             SubmitError::Overloaded { scope, in_flight, limit } => write!(
                 f,
                 "overloaded: {in_flight} requests in flight \
@@ -126,8 +138,23 @@ impl Router {
         if !self.registry.contains(route) {
             return Err(SubmitError::UnknownRoute {
                 route: route.to_owned(),
-                available: self.registry.keys().join(", "),
+                available: self.registry.describe_routes().join(", "),
             });
+        }
+        // Pre-admission y0 validation: an explicit initial state must
+        // match the route's registered dimension. Empty `h0` means "use
+        // the twin's default" and always passes; routes registered
+        // without metadata (unit-test registries) are not checked.
+        if !req.h0.is_empty() {
+            if let Some(info) = self.registry.info(route) {
+                if req.h0.len() != info.dim {
+                    return Err(SubmitError::BadDimension {
+                        route: route.to_owned(),
+                        got: req.h0.len(),
+                        want: info.dim,
+                    });
+                }
+            }
         }
         if let Some(spec) = &req.ensemble {
             spec.validate()
@@ -278,6 +305,77 @@ mod tests {
         let ok = TwinRequest::autonomous(vec![], 1)
             .with_ensemble(EnsembleSpec::new(8));
         assert!(router.submit("null", ok).is_ok());
+    }
+
+    #[test]
+    fn bad_y0_dimension_rejected_before_admission() {
+        use crate::twin::registry::RouteInfo;
+        let mut reg = TwinRegistry::new();
+        reg.register_info(
+            "null",
+            RouteInfo {
+                dim: 1,
+                dt: 1.0,
+                backend: "null",
+                aged: false,
+                synthetic: false,
+            },
+            || Box::new(NullTwin),
+        );
+        let (tx, _rx) = mpsc::channel();
+        let router = Router::new(
+            reg,
+            tx,
+            Backpressure::new(4),
+            Arc::new(Telemetry::new()),
+        );
+        let bad = TwinRequest::autonomous(vec![0.0, 1.0, 2.0], 1);
+        let err = match router.submit("null", bad) {
+            Err(e @ SubmitError::BadDimension { .. }) => e.to_string(),
+            other => panic!("wrong-dim y0 not rejected: {other:?}"),
+        };
+        assert!(err.contains("dim 3"), "{err}");
+        assert!(err.contains("dim 1"), "{err}");
+        // Empty y0 (twin default) and the right dimension both pass.
+        assert!(router
+            .submit("null", TwinRequest::autonomous(vec![], 1))
+            .is_ok());
+        assert!(router
+            .submit("null", TwinRequest::autonomous(vec![0.5], 1))
+            .is_ok());
+    }
+
+    #[test]
+    fn unknown_route_errors_enumerate_dims_where_known() {
+        use crate::twin::registry::RouteInfo;
+        let mut reg = TwinRegistry::new();
+        reg.register_info(
+            "hp/analog",
+            RouteInfo {
+                dim: 1,
+                dt: 1e-3,
+                backend: "analog",
+                aged: false,
+                synthetic: false,
+            },
+            || Box::new(NullTwin),
+        );
+        reg.register("bare", || Box::new(NullTwin));
+        let (tx, _rx) = mpsc::channel();
+        let router = Router::new(
+            reg,
+            tx,
+            Backpressure::new(4),
+            Arc::new(Telemetry::new()),
+        );
+        let err = match router
+            .submit("ghost", TwinRequest::autonomous(vec![], 1))
+        {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("ghost route accepted"),
+        };
+        assert!(err.contains("hp/analog (dim 1)"), "{err}");
+        assert!(err.contains("bare"), "{err}");
     }
 
     #[test]

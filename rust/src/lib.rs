@@ -49,6 +49,36 @@
 //! batched trajectories are bit-identical to serial runs — a contract
 //! enforced by `rust/tests/batched.rs`.
 //!
+//! ## The twin zoo (generic core + scenario DSL)
+//!
+//! Every served dynamical system is one [`twin::core::DynamicsTwin`]: a
+//! declarative [`twin::core::TwinSpec`] (name, state dimension, `dt`,
+//! default initial state, seed root) bound to a
+//! [`twin::core::CoreBackend`] (analogue crossbar — plain, sharded or
+//! aging — digital RK4 on an MLP or closed-form field, recurrent,
+//! resnet, PJRT). The request-execution machinery — request validation,
+//! auto-seed stamping, ensemble lane expansion, group planning, pooled
+//! trajectories, batched dispatch — lives **once** in the core, so the
+//! cross-cutting invariants below are properties of the shared path,
+//! not of any particular twin. `twin::hp` and `twin::lorenz96` are thin
+//! configuration over the core (their public constructors are
+//! unchanged); `twin::kuramoto` and `twin::l96two` show the marginal
+//! cost of a new world: ~100 lines of [`ode::VectorField`] plus a
+//! registry stanza ([`twin::registry::TwinRegistry::register_info`],
+//! with [`twin::registry::RouteInfo`] powering route-table prints and
+//! dimension-checked admission).
+//!
+//! Scenarios make rollouts declarative too: a `*.twin` file
+//! ([`twin::scenario::Scenario`], format in `docs/SCENARIOS.md`) names a
+//! route, horizon, seed, stimulus program, ensemble sweep and
+//! expected-envelope assertions. Parse errors carry byte spans rendered
+//! as compiler-style `--> file:line:col` diagnostics (pinned by
+//! `rust/tests/scenarios.rs`); `memode scenario check` lints them,
+//! `memode run-twin --scenario` executes them, and `loadgen
+//! --scenarios` replays them as a request mix. The committed fixtures in
+//! `examples/scenarios/` run end to end against the synthetic registry
+//! in CI.
+//!
 //! ## Perf invariants (the zero-allocation hot path)
 //!
 //! Three structural invariants keep the steady-state request path off the

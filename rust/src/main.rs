@@ -13,6 +13,8 @@
 //!   p50/p99/p99.9 latency + rejected fraction (`BENCH_serve.json`)
 //! * `lifetime`     — scripted device-lifetime scenario: aging drift,
 //!   health probes, recalibration, forced faults, graceful degradation
+//! * `scenario`     — `scenario check <files...>` parse-lints `*.twin`
+//!   scenario files, printing byte-span diagnostics (`docs/SCENARIOS.md`)
 //! * `routes`       — list available twin routes
 //! * `config`       — print the effective configuration as JSON
 //!
@@ -56,6 +58,7 @@ fn run() -> Result<()> {
             memode::coordinator::loadgen::cli("memode loadgen", argv)
         }
         "lifetime" => lifetime(argv),
+        "scenario" => scenario_cmd(argv),
         "routes" => routes(argv),
         "config" => config_cmd(argv),
         "help" | "-h" | "--help" => {
@@ -69,6 +72,7 @@ fn run() -> Result<()> {
                  \x20 serve          coordinator (--listen = TCP front door)\n\
                  \x20 loadgen        drive a running server over TCP\n\
                  \x20 lifetime       device aging / recalibration scenario\n\
+                 \x20 scenario       check *.twin scenario files\n\
                  \x20 routes         list twin routes\n\
                  \x20 config         print effective config JSON\n",
                 memode::VERSION
@@ -205,50 +209,91 @@ fn run_twin(argv: Vec<String>) -> Result<()> {
             "0",
             "Monte-Carlo ensemble members (one batched rollout; 0 = plain)",
         )
+        .opt(
+            "scenario",
+            "",
+            "run a *.twin scenario file (route/steps/seed/stimulus/ensemble \
+             come from the file; overrides those flags)",
+        )
+        .flag(
+            "synthetic",
+            "use the synthetic fixture registry (no artifacts needed)",
+        )
         .flag("pjrt", "start the PJRT runtime (needed for */pjrt routes)")
         .parse(argv)
         .map_err(|m| anyhow::anyhow!("{m}"))?;
     let cfg = load_config(&args)?;
-    let weights = TrainedWeights::load(&cfg)?;
+    let synthetic = args.get_bool("synthetic");
     let service = if args.get_bool("pjrt") {
+        anyhow::ensure!(
+            !synthetic,
+            "--pjrt needs trained artifacts (drop --synthetic)"
+        );
         Some(PjrtService::start(&cfg.artifacts_dir)?)
     } else {
         None
     };
-    let reg = build_registry(
-        &cfg,
-        &weights,
-        service.as_ref().map(|s| s.handle()),
-    )?;
-    let route = args.get("route");
-    let steps = args.get_usize("steps");
-    let mut twin = reg.create(&route)?;
-    let mut req = if route.starts_with("hp/") {
-        let wave = match args.get("stimulus").as_str() {
-            "sine" => Waveform::sine(1.0, 4.0),
-            "triangular" => Waveform::triangular(1.0, 4.0),
-            "rectangular" => Waveform::rectangular(1.0, 4.0),
-            "modulated" => Waveform::modulated(1.0, 4.0, 1.0),
-            other => anyhow::bail!("unknown stimulus '{other}'"),
-        };
-        TwinRequest::driven(vec![], steps, wave)
+    let reg = if synthetic {
+        memode::twin::setup::build_synthetic_registry(None)
     } else {
-        TwinRequest::autonomous(vec![], steps)
+        let weights = TrainedWeights::load(&cfg)?;
+        build_registry(
+            &cfg,
+            &weights,
+            service.as_ref().map(|s| s.handle()),
+        )?
     };
-    let seed_arg = args.get("seed");
-    if !seed_arg.is_empty() {
-        let seed = seed_arg
-            .parse::<u64>()
-            .map_err(|e| anyhow::anyhow!("--seed {seed_arg}: {e}"))?;
-        req = req.with_seed(seed);
-    }
-    let ensemble = args.get_usize("ensemble");
-    if ensemble > 0 {
-        req = req.with_ensemble(
-            EnsembleSpec::new(ensemble)
-                .with_percentiles(vec![5.0, 95.0]),
-        );
-    }
+    // --scenario: the declarative file pins the whole request.
+    let scenario_path = args.get("scenario");
+    let scenario = if scenario_path.is_empty() {
+        None
+    } else {
+        let src = std::fs::read_to_string(&scenario_path)
+            .map_err(|e| anyhow::anyhow!("reading {scenario_path}: {e}"))?;
+        let sc = memode::twin::scenario::Scenario::parse(&src)
+            .map_err(|e| {
+                anyhow::anyhow!("{}", e.render(&src, &scenario_path))
+            })?;
+        Some(sc)
+    };
+    let (route, steps, req, ensemble) = match &scenario {
+        Some(sc) => {
+            let members = sc.ensemble.unwrap_or(0);
+            (sc.twin.clone(), sc.steps, sc.to_request(), members)
+        }
+        None => {
+            let route = args.get("route");
+            let steps = args.get_usize("steps");
+            let mut req = if route.starts_with("hp/") {
+                let wave = match args.get("stimulus").as_str() {
+                    "sine" => Waveform::sine(1.0, 4.0),
+                    "triangular" => Waveform::triangular(1.0, 4.0),
+                    "rectangular" => Waveform::rectangular(1.0, 4.0),
+                    "modulated" => Waveform::modulated(1.0, 4.0, 1.0),
+                    other => anyhow::bail!("unknown stimulus '{other}'"),
+                };
+                TwinRequest::driven(vec![], steps, wave)
+            } else {
+                TwinRequest::autonomous(vec![], steps)
+            };
+            let seed_arg = args.get("seed");
+            if !seed_arg.is_empty() {
+                let seed = seed_arg
+                    .parse::<u64>()
+                    .map_err(|e| anyhow::anyhow!("--seed {seed_arg}: {e}"))?;
+                req = req.with_seed(seed);
+            }
+            let ensemble = args.get_usize("ensemble");
+            if ensemble > 0 {
+                req = req.with_ensemble(
+                    EnsembleSpec::new(ensemble)
+                        .with_percentiles(vec![5.0, 95.0]),
+                );
+            }
+            (route, steps, req, ensemble)
+        }
+    };
+    let mut twin = reg.create(&route)?;
     let t0 = std::time::Instant::now();
     let resp = twin.run(&req)?;
     let dt_wall = t0.elapsed();
@@ -266,22 +311,42 @@ fn run_twin(argv: Vec<String>) -> Result<()> {
     // The replay command must pin everything the rollout depended on:
     // seed, the stimulus for driven twins, the ensemble width, and the
     // runtime flags that register the route (config is assumed equal).
-    let mut replay_flags = String::new();
-    if route.starts_with("hp/") {
-        replay_flags.push_str(" --stimulus ");
-        replay_flags.push_str(&args.get("stimulus"));
+    match &scenario {
+        Some(sc) => {
+            let synth_flag = if synthetic { " --synthetic" } else { "" };
+            let seed_note = if sc.seed.is_none() {
+                format!(" after adding `seed {}` to the file", resp.seed)
+            } else {
+                String::new()
+            };
+            println!(
+                "noise seed {} (replay: memode run-twin --scenario \
+                 {scenario_path}{synth_flag}{seed_note})",
+                resp.seed
+            );
+        }
+        None => {
+            let mut replay_flags = String::new();
+            if route.starts_with("hp/") {
+                replay_flags.push_str(" --stimulus ");
+                replay_flags.push_str(&args.get("stimulus"));
+            }
+            if ensemble > 0 {
+                replay_flags.push_str(&format!(" --ensemble {ensemble}"));
+            }
+            if synthetic {
+                replay_flags.push_str(" --synthetic");
+            }
+            if args.get_bool("pjrt") {
+                replay_flags.push_str(" --pjrt");
+            }
+            println!(
+                "noise seed {} (replay: memode run-twin --route {route} \
+                 --steps {steps}{replay_flags} --seed {})",
+                resp.seed, resp.seed
+            );
+        }
     }
-    if ensemble > 0 {
-        replay_flags.push_str(&format!(" --ensemble {ensemble}"));
-    }
-    if args.get_bool("pjrt") {
-        replay_flags.push_str(" --pjrt");
-    }
-    println!(
-        "noise seed {} (replay: memode run-twin --route {route} --steps \
-         {steps}{replay_flags} --seed {})",
-        resp.seed, resp.seed
-    );
     if let Some(ens) = &resp.ensemble {
         println!(
             "ensemble: {} members, one batched rollout; trajectory below \
@@ -317,6 +382,73 @@ fn run_twin(argv: Vec<String>) -> Result<()> {
         );
         println!("  mean L1 vs ground truth over horizon: {l1:.4}");
     }
+    // Scenario acceptance: every `expect` assertion must hold.
+    if let Some(sc) = &scenario {
+        let failures = sc.check(&resp);
+        if failures.is_empty() {
+            println!(
+                "scenario: all {} expectation(s) hold",
+                sc.expectations.len()
+            );
+        } else {
+            for f in &failures {
+                eprintln!("scenario FAIL: {f}");
+            }
+            anyhow::bail!(
+                "{} scenario expectation(s) failed",
+                failures.len()
+            );
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// scenario — *.twin file tooling
+// ---------------------------------------------------------------------------
+
+fn scenario_cmd(argv: Vec<String>) -> Result<()> {
+    let args = Args::new(
+        "memode scenario",
+        "scenario tooling: `memode scenario check <files...>` parse-lints \
+         *.twin files, printing byte-span diagnostics on failure",
+    )
+    .parse(argv)
+    .map_err(|m| anyhow::anyhow!("{m}"))?;
+    let pos = args.positionals();
+    let Some((action, files)) = pos.split_first() else {
+        anyhow::bail!("usage: memode scenario check <file.twin>...");
+    };
+    anyhow::ensure!(
+        action.as_str() == "check",
+        "unknown scenario action '{action}' (try 'check')"
+    );
+    anyhow::ensure!(
+        !files.is_empty(),
+        "no scenario files given (usage: memode scenario check \
+         <file.twin>...)"
+    );
+    let mut failed = 0usize;
+    for path in files {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+        match memode::twin::scenario::Scenario::parse(&src) {
+            Ok(sc) => println!(
+                "{path}: ok (twin {}, {} steps, {} expectation(s))",
+                sc.twin,
+                sc.steps,
+                sc.expectations.len()
+            ),
+            Err(e) => {
+                eprintln!("{}", e.render(&src, path));
+                failed += 1;
+            }
+        }
+    }
+    anyhow::ensure!(
+        failed == 0,
+        "{failed} scenario file(s) failed to parse"
+    );
     Ok(())
 }
 
@@ -392,6 +524,7 @@ fn serve(argv: Vec<String>) -> Result<()> {
             Some(std::sync::Arc::clone(&telemetry)),
         )?
     };
+    print_route_table(&reg);
     let coord = std::sync::Arc::new(Coordinator::start_with_telemetry(
         reg, &cfg.serve, telemetry,
     ));
@@ -514,6 +647,25 @@ fn serve(argv: Vec<String>) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// Startup route table: one line per registered route with its
+/// [`memode::twin::registry::RouteInfo`] metadata where known.
+fn print_route_table(reg: &memode::twin::registry::TwinRegistry) {
+    println!("routes ({}):", reg.len());
+    for key in reg.keys() {
+        match reg.info(&key) {
+            Some(i) => println!(
+                "  {key:<26} dim {:>3}  dt {:>9.2e} s  backend {}{}{}",
+                i.dim,
+                i.dt,
+                i.backend,
+                if i.aged { " [aged]" } else { "" },
+                if i.synthetic { " [synthetic]" } else { "" }
+            ),
+            None => println!("  {key}"),
+        }
+    }
 }
 
 /// Shared end-of-run observability for both serving modes: telemetry

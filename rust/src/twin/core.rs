@@ -1,0 +1,1210 @@
+//! The generic twin core: one request-execution engine shared by every
+//! registered twin.
+//!
+//! Historically the HP and Lorenz96 twins each hand-rolled the same
+//! machinery — group planning, stimulus/initial-state staging, seed
+//! resolution, per-lane noise derivation, ensemble expansion, pooled
+//! response assembly and the sharded/co-scheduled dispatch forms. That
+//! machinery now lives here once, in [`DynamicsTwin`]: a twin is a
+//! [`TwinSpec`] (name, dimension, sampling step, default initial state,
+//! stimulus kind) plus a [`CoreBackend`] (where the vector field actually
+//! executes). The HP and Lorenz96 twins are thin configuration wrappers
+//! over this type, and new worlds (Kuramoto, two-level Lorenz96) are a
+//! [`DynField`] implementation plus a registry stanza — see
+//! `docs/ARCHITECTURE.md` for the ~100-line recipe.
+//!
+//! Every cross-twin invariant is therefore enforced against *this* path:
+//! batched rollouts bit-identical to serial ones (noise on or off),
+//! allocation-free warm batches on the Analog/Digital backends, seeded
+//! noise-lane determinism across batch composition and shard layout, and
+//! ensemble member replay via
+//! [`ensemble_member_seed`](crate::twin::ensemble_member_seed).
+
+use anyhow::{anyhow, Result};
+
+use crate::analog::system::{AnalogMlp, AnalogNeuralOde};
+use crate::models::mlp::{
+    BatchDrivenMlpField, BatchMlpField, DrivenMlpField, Mlp, MlpField,
+};
+use crate::models::resnet::RecurrentResNet;
+use crate::models::rnn::Recurrent;
+use crate::ode::batch::{unbatch_into, BatchVectorField};
+use crate::ode::func::VectorField;
+use crate::ode::rk4::{self, Rk4};
+use crate::twin::shard::{ShardGroup, ShardSnapshot, ShardedAnalogOde};
+use crate::twin::{
+    assemble_ensemble_stats, ensemble_member_seed, EnsembleStats, GroupPlan,
+    RolloutFn, Twin, TwinRequest, TwinResponse, MAX_SUB_BATCH_LANES,
+};
+use crate::util::rng::{NoiseLane, SeedSequencer};
+use crate::util::stats::EnsembleAccumulator;
+use crate::util::tensor::{Trajectory, TrajectoryPool};
+use crate::workload::stimuli::Waveform;
+
+/// How a twin consumes the request's [`Waveform`] stimulus.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StimulusKind {
+    /// The system evolves on its own; request stimuli are ignored.
+    Autonomous,
+    /// A scalar drive `u(t)` is written into input slot 0 each substep;
+    /// requests without a stimulus are rejected per-request.
+    DrivenScalar,
+}
+
+/// Static configuration of a [`DynamicsTwin`]: everything about a twin
+/// that is not "where does the vector field execute".
+#[derive(Debug, Clone)]
+pub struct TwinSpec {
+    /// Twin name (the route-key prefix, e.g. `"lorenz96"`).
+    pub name: &'static str,
+    /// Diagnostic label surfaced by solver dim asserts (route key).
+    pub field_label: &'static str,
+    /// State dimension.
+    pub dim: usize,
+    /// Sampling interval of one output step (s).
+    pub dt: f64,
+    /// Default initial condition (used when a request's `h0` is empty).
+    pub default_h0: Vec<f64>,
+    /// Stimulus contract of the twin.
+    pub stimulus: StimulusKind,
+    /// RK4 substeps per output sample on the digital backend.
+    pub digital_substeps: usize,
+}
+
+/// An object-safe autonomous vector field dx/dt = f(t, x): the ~100-line
+/// surface a new twin implements. `eval_into` takes `&self` so one boxed
+/// field serves both the serial and the lane-looped batched adapters
+/// without scratch aliasing.
+pub trait DynField: Send {
+    /// State dimension.
+    fn dim(&self) -> usize;
+
+    /// Evaluate f(t, x) into `out` (len == dim()).
+    fn eval_into(&self, t: f64, x: &[f64], out: &mut [f64]);
+}
+
+/// Serial [`VectorField`] view of a [`DynField`].
+struct SerialDynField<'a> {
+    field: &'a dyn DynField,
+    label: &'static str,
+}
+
+impl VectorField for SerialDynField<'_> {
+    fn dim(&self) -> usize {
+        self.field.dim()
+    }
+
+    fn label(&self) -> &str {
+        self.label
+    }
+
+    fn eval_into(&mut self, t: f64, x: &[f64], out: &mut [f64]) {
+        self.field.eval_into(t, x, out);
+    }
+}
+
+/// Batched [`BatchVectorField`] view of a [`DynField`]: lanes advance in
+/// lockstep by looping the scalar field over per-lane subslices, so the
+/// batched solve stays allocation-free and bit-identical to serial.
+struct BatchDynField<'a> {
+    field: &'a dyn DynField,
+    batch: usize,
+    label: &'static str,
+}
+
+impl BatchVectorField for BatchDynField<'_> {
+    fn dim(&self) -> usize {
+        self.field.dim()
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn label(&self) -> &str {
+        self.label
+    }
+
+    fn eval_batch_into(&mut self, t: f64, xs: &[f64], out: &mut [f64]) {
+        let d = self.field.dim();
+        for b in 0..self.batch {
+            let lo = b * d;
+            self.field.eval_into(t, &xs[lo..lo + d], &mut out[lo..lo + d]);
+        }
+    }
+}
+
+/// The model behind the digital (Rust RK4) backend.
+pub enum DigitalModel {
+    /// A trained neural-ODE field (per-layer GEMM batched path).
+    Mlp(Mlp),
+    /// A closed-form vector field ([`DynField`]) — how the zoo's
+    /// analytical worlds (Kuramoto, two-level Lorenz96) plug in.
+    Field(Box<dyn DynField>),
+}
+
+/// Execution backend of a [`DynamicsTwin`] — the union of every backend
+/// the HP and Lorenz96 twins historically supported.
+pub enum CoreBackend {
+    /// Simulated memristive solver at a noise operating point.
+    Analog(Box<AnalogNeuralOde>),
+    /// Tile-sharded fan-out: one rollout spread across parallel shard
+    /// workers (states wider than one physical array).
+    AnalogSharded(Box<ShardedAnalogOde>),
+    /// Rust-native RK4 over a trained MLP or a closed-form field.
+    Digital(DigitalModel),
+    /// Recurrent baseline (RNN / GRU / LSTM).
+    Recurrent(Box<dyn Recurrent + Send>),
+    /// Recurrent-ResNet discrete baseline (driven twins only).
+    Resnet(RecurrentResNet),
+    /// AOT HLO rollout via PJRT.
+    Pjrt(RolloutFn),
+}
+
+impl CoreBackend {
+    /// Telemetry label stamped into responses.
+    pub fn label(&self) -> &'static str {
+        match self {
+            CoreBackend::Analog(_) => "analog",
+            CoreBackend::AnalogSharded(_) => "analog-sharded",
+            CoreBackend::Digital(_) => "digital-rk4",
+            CoreBackend::Recurrent(_) => "recurrent",
+            CoreBackend::Resnet(_) => "resnet",
+            CoreBackend::Pjrt(_) => "pjrt",
+        }
+    }
+
+    /// Backend *family* name for route metadata (see
+    /// [`crate::twin::registry::RouteInfo`]).
+    pub fn family(&self) -> &'static str {
+        self.label()
+    }
+}
+
+/// Reusable batch scratch: everything `run_batch_into` needs between the
+/// request slice and the response vector lives here so a warm twin never
+/// allocates. Taken out of `self` with `mem::take` for the duration of a
+/// batch (its `Default` is allocation-free) to sidestep borrow conflicts
+/// with the backend.
+#[derive(Default)]
+struct CoreScratch {
+    plan: GroupPlan,
+    /// One slot per request; drained into the caller's vector in order.
+    slots: Vec<Option<Result<TwinResponse>>>,
+    /// Valid request indices of the current group (submission order).
+    members: Vec<usize>,
+    /// First lane slot of each valid request within the group's flat
+    /// batch (an ensemble request occupies `lanes()` consecutive slots).
+    lane_base: Vec<usize>,
+    /// Per-lane stimulus staging (driven twins only; ensemble members
+    /// replicate their request's stimulus).
+    waves: Vec<Waveform>,
+    /// Flat `[lanes * dim]` initial states of the current group (ensemble
+    /// members replicate their request's h0).
+    h0s: Vec<f64>,
+    /// Per-request resolved noise seeds (echoed in the responses; an
+    /// ensemble's members derive from it via [`ensemble_member_seed`]).
+    seeds: Vec<u64>,
+    /// Per-lane noise lanes (one per trajectory, rebuilt from seeds).
+    lanes: Vec<NoiseLane>,
+    /// Flat batched rollout output (rows = one lockstep sample).
+    flat: Trajectory,
+    /// Response-trajectory pool (refilled via [`DynamicsTwin::recycle`]).
+    pool: TrajectoryPool,
+    /// Streaming ensemble moment accumulator (pooled output buffers).
+    acc: EnsembleAccumulator,
+    /// Recycled [`EnsembleStats`] container shells.
+    ens_shells: Vec<EnsembleStats>,
+    solver: CoreSolverScratch,
+}
+
+/// Digital-backend solver scratch (stage buffers + stacked drive rows).
+struct CoreSolverScratch {
+    rk4: Rk4,
+    u: Vec<f64>,
+}
+
+impl Default for CoreSolverScratch {
+    fn default() -> Self {
+        Self { rk4: Rk4::new(0), u: Vec::new() }
+    }
+}
+
+/// The generic twin: a [`TwinSpec`] executed on a [`CoreBackend`]. Every
+/// registered route is an instance of this type (the HP and Lorenz96
+/// twins wrap it to keep their historical constructor surfaces).
+pub struct DynamicsTwin {
+    pub(crate) spec: TwinSpec,
+    pub(crate) backend: CoreBackend,
+    /// Auto-seed source for requests without an explicit noise seed.
+    seeds: SeedSequencer,
+    scratch: CoreScratch,
+}
+
+impl DynamicsTwin {
+    /// Assemble a twin from its spec, backend and auto-seed root.
+    pub fn new(
+        spec: TwinSpec,
+        backend: CoreBackend,
+        lane_root: u64,
+    ) -> Self {
+        Self {
+            spec,
+            backend,
+            seeds: SeedSequencer::new(lane_root),
+            scratch: CoreScratch::default(),
+        }
+    }
+
+    /// The aging analogue deployment, if this twin was built on mortal
+    /// hardware (`AnalogMlp::deploy_aging`).
+    fn aging_mlp(&mut self) -> Option<&mut AnalogMlp> {
+        match &mut self.backend {
+            CoreBackend::Analog(ode) if ode.mlp.is_aging() => {
+                Some(&mut ode.mlp)
+            }
+            _ => None,
+        }
+    }
+
+    /// Whether this twin runs on mortal (aging) analogue hardware.
+    pub fn is_aging(&self) -> bool {
+        matches!(
+            &self.backend,
+            CoreBackend::Analog(ode) if ode.mlp.is_aging()
+        )
+    }
+
+    /// Advance the hardware's virtual clock by `dt_s` seconds (drift +
+    /// diffusion on every cell, engines refreshed). No-op for `dt_s <= 0`;
+    /// panics on a non-aging twin.
+    pub fn advance_age(&mut self, dt_s: f64) {
+        self.aging_mlp()
+            .expect("advance_age requires an analog_aging twin")
+            .advance_age(dt_s);
+    }
+
+    /// Reprogram every array back to its target weights; returns the
+    /// write-verify pulse count (energy via
+    /// [`crate::energy::recalibration_energy`]).
+    pub fn recalibrate(&mut self) -> u64 {
+        self.aging_mlp()
+            .expect("recalibrate requires an analog_aging twin")
+            .recalibrate()
+    }
+
+    /// Virtual device age (s); 0 for immortal twins.
+    pub fn age_s(&self) -> f64 {
+        match &self.backend {
+            CoreBackend::Analog(ode) => ode.mlp.age_s(),
+            _ => 0.0,
+        }
+    }
+
+    /// Healthy-cell fraction across every deployed array (1.0 if
+    /// immortal).
+    pub fn array_health(&self) -> f64 {
+        match &self.backend {
+            CoreBackend::Analog(ode) => ode.mlp.array_health(),
+            _ => 1.0,
+        }
+    }
+
+    /// Lifetime write-verify pulses spent on recalibration.
+    pub fn lifetime_pulses(&self) -> u64 {
+        match &self.backend {
+            CoreBackend::Analog(ode) => ode.mlp.lifetime_pulses(),
+            _ => 0,
+        }
+    }
+
+    /// Completed recalibration count.
+    pub fn recalibrations(&self) -> u64 {
+        match &self.backend {
+            CoreBackend::Analog(ode) => ode.mlp.recalibrations(),
+            _ => 0,
+        }
+    }
+
+    /// Mark a random `fraction` of cells stuck (fault-injection
+    /// campaigns; deterministic in the deployment's aging stream). Panics
+    /// on a non-aging twin.
+    pub fn inject_stuck_faults(&mut self, fraction: f64) {
+        self.aging_mlp()
+            .expect("inject_stuck_faults requires an analog_aging twin")
+            .inject_stuck_faults(fraction);
+    }
+
+    /// Per-shard serving counters of the fan-out backend, if sharded.
+    pub fn shard_telemetry(&self) -> Option<Vec<ShardSnapshot>> {
+        match &self.backend {
+            CoreBackend::AnalogSharded(ode) => {
+                Some(ode.telemetry().snapshot())
+            }
+            _ => None,
+        }
+    }
+
+    /// Wire the fan-out backend's rollout counters into the coordinator's
+    /// serving telemetry (no-op for unsharded backends).
+    pub fn attach_coordinator_telemetry(
+        &mut self,
+        t: std::sync::Arc<crate::coordinator::telemetry::Telemetry>,
+    ) {
+        if let CoreBackend::AnalogSharded(ode) = &mut self.backend {
+            ode.attach_coordinator_telemetry(t);
+        }
+    }
+
+    /// Toggle co-scheduled group execution on the fan-out backend:
+    /// batched dispatches fuse their compatible sub-batch groups into one
+    /// barrier schedule ([`ShardedAnalogOde::solve_groups_into`]). No-op
+    /// for unsharded backends.
+    pub fn set_coschedule(&mut self, on: bool) {
+        if let CoreBackend::AnalogSharded(ode) = &mut self.backend {
+            ode.set_coschedule(on);
+        }
+    }
+
+    /// Return a response's trajectory buffers to the twin's pool
+    /// (ensemble responses hand back every stats trajectory plus the
+    /// emptied container shell).
+    ///
+    /// Optional: callers that hand responses back make the next
+    /// `run_batch` draw its output trajectories from the pool instead of
+    /// the allocator — the zero-allocation steady state the allocation
+    /// test (`rust/tests/alloc.rs`) pins down.
+    pub fn recycle(&mut self, mut resp: TwinResponse) {
+        if let Some(mut ens) = resp.ensemble.take() {
+            ens.reclaim(&mut self.scratch.pool);
+            self.scratch.ens_shells.push(ens);
+        }
+        self.scratch.pool.put(resp.trajectory);
+    }
+
+    /// Roll out the twin from `h0` for `n_points` samples (with the
+    /// stimulus for driven twins). Noise draws come from the next
+    /// auto-derived lane; use [`Twin::run`] with a seeded request for
+    /// replayable rollouts.
+    pub fn simulate(
+        &mut self,
+        wave: Option<Waveform>,
+        h0: &[f64],
+        n_points: usize,
+    ) -> Result<Trajectory> {
+        let mut lane = NoiseLane::from_seed(self.seeds.next_seed());
+        self.simulate_lane(wave, h0, n_points, &mut lane)
+    }
+
+    /// [`DynamicsTwin::simulate`] drawing noise from an explicit
+    /// trajectory lane — the replayable request path.
+    fn simulate_lane(
+        &mut self,
+        wave: Option<Waveform>,
+        h0: &[f64],
+        n_points: usize,
+        lane: &mut NoiseLane,
+    ) -> Result<Trajectory> {
+        let dim = self.spec.dim;
+        let dt = self.spec.dt;
+        let substeps = self.spec.digital_substeps;
+        let label = self.spec.field_label;
+        match &mut self.backend {
+            CoreBackend::Analog(ode) => {
+                let mut out = Trajectory::new(dim);
+                match wave {
+                    Some(w) => ode.solve_into(
+                        h0,
+                        &mut |t, x: &mut [f64]| x[0] = w.eval(t),
+                        dt,
+                        n_points,
+                        lane,
+                        &mut out,
+                    ),
+                    None => ode.solve_into(
+                        h0,
+                        &mut |_t, _x: &mut [f64]| {},
+                        dt,
+                        n_points,
+                        lane,
+                        &mut out,
+                    ),
+                }
+                Ok(out)
+            }
+            CoreBackend::AnalogSharded(ode) => {
+                let mut out = Trajectory::new(dim);
+                ode.solve_into(h0, dt, n_points, lane, &mut out);
+                Ok(out)
+            }
+            CoreBackend::Digital(DigitalModel::Mlp(mlp)) => match wave {
+                Some(w) => {
+                    let mut field = DrivenMlpField::new(
+                        mlp,
+                        move |t| w.eval(t),
+                        label,
+                    );
+                    Ok(rk4::solve(&mut field, h0, dt, n_points, substeps))
+                }
+                None => {
+                    let mut field = MlpField { mlp, label };
+                    Ok(rk4::solve(&mut field, h0, dt, n_points, substeps))
+                }
+            },
+            CoreBackend::Digital(DigitalModel::Field(field)) => {
+                let mut f = SerialDynField { field: &**field, label };
+                Ok(rk4::solve(&mut f, h0, dt, n_points, substeps))
+            }
+            CoreBackend::Recurrent(cell) => {
+                Ok(Trajectory::from_nested(&cell.rollout(h0, n_points)))
+            }
+            CoreBackend::Resnet(resnet) => {
+                let w = wave.ok_or_else(|| {
+                    anyhow!("resnet backend requires a stimulus")
+                })?;
+                let xs: Vec<Vec<f64>> = (0..n_points.saturating_sub(1))
+                    .map(|k| vec![w.eval(k as f64 * dt)])
+                    .collect();
+                Ok(Trajectory::from_nested(&resnet.rollout(h0, &xs)))
+            }
+            CoreBackend::Pjrt(rollout) => match wave {
+                Some(w) => {
+                    let xs_half = w.sample_half_steps(n_points, dt);
+                    Ok(Trajectory::from_nested(&rollout(
+                        h0,
+                        Some(&xs_half),
+                    )?))
+                }
+                None => Ok(Trajectory::from_nested(&rollout(h0, None)?)),
+            },
+        }
+    }
+
+    /// Batched rollout of one compatible sub-batch into `out` (flat rows
+    /// of width `batch * dim`; shared `n_points`, per-trajectory initial
+    /// states stacked in `h0s`, per-lane stimuli in `waves` for driven
+    /// twins). Analog and Digital backends are allocation-free with warm
+    /// scratch — one multi-vector device read / per-layer GEMM per step
+    /// for the whole batch; Recurrent and Resnet run their true batched
+    /// rollouts with staging allocations. Per-trajectory noise lanes ⇒
+    /// bit-identical to serial, noise on or off. Pjrt is handled by the
+    /// caller's serial fallback.
+    #[allow(clippy::too_many_arguments)]
+    fn simulate_batch_flat(
+        &mut self,
+        waves: &[Waveform],
+        h0s: &[f64],
+        batch: usize,
+        n_points: usize,
+        solver: &mut CoreSolverScratch,
+        lanes: &mut [NoiseLane],
+        out: &mut Trajectory,
+    ) -> Result<()> {
+        let dim = self.spec.dim;
+        debug_assert_eq!(h0s.len(), batch * dim);
+        let dt = self.spec.dt;
+        let substeps = self.spec.digital_substeps;
+        let label = self.spec.field_label;
+        let driven = !waves.is_empty();
+        match &mut self.backend {
+            CoreBackend::Analog(ode) => {
+                if driven {
+                    ode.solve_batch_into(
+                        h0s,
+                        batch,
+                        &mut |b, t, x: &mut [f64]| {
+                            x[0] = waves[b].eval(t)
+                        },
+                        dt,
+                        n_points,
+                        lanes,
+                        out,
+                    );
+                } else {
+                    ode.solve_batch_into(
+                        h0s,
+                        batch,
+                        &mut |_b, _t, _x: &mut [f64]| {},
+                        dt,
+                        n_points,
+                        lanes,
+                        out,
+                    );
+                }
+                Ok(())
+            }
+            CoreBackend::AnalogSharded(ode) => {
+                ode.solve_batch_into(h0s, batch, dt, n_points, lanes, out);
+                Ok(())
+            }
+            CoreBackend::Digital(DigitalModel::Mlp(mlp)) => {
+                if driven {
+                    let mut field = BatchDrivenMlpField::new(
+                        mlp,
+                        batch,
+                        |b, t| waves[b].eval(t),
+                        &mut solver.u,
+                        label,
+                    );
+                    rk4::solve_batch_into(
+                        &mut field,
+                        h0s,
+                        dt,
+                        n_points,
+                        substeps,
+                        &mut solver.rk4,
+                        out,
+                    );
+                } else {
+                    let mut field = BatchMlpField { mlp, batch, label };
+                    rk4::solve_batch_into(
+                        &mut field,
+                        h0s,
+                        dt,
+                        n_points,
+                        substeps,
+                        &mut solver.rk4,
+                        out,
+                    );
+                }
+                Ok(())
+            }
+            CoreBackend::Digital(DigitalModel::Field(field)) => {
+                let mut bf =
+                    BatchDynField { field: &**field, batch, label };
+                rk4::solve_batch_into(
+                    &mut bf,
+                    h0s,
+                    dt,
+                    n_points,
+                    substeps,
+                    &mut solver.rk4,
+                    out,
+                );
+                Ok(())
+            }
+            CoreBackend::Recurrent(cell) => {
+                let h0_nested: Vec<Vec<f64>> = (0..batch)
+                    .map(|b| h0s[b * dim..(b + 1) * dim].to_vec())
+                    .collect();
+                let trajs = cell.rollout_batch(&h0_nested, n_points);
+                out.reset(batch * dim);
+                out.reserve_rows(n_points.max(1));
+                for k in 0..trajs.first().map_or(0, Vec::len) {
+                    out.push_row_from_iter((0..batch).flat_map(|b| {
+                        trajs[b][k].iter().copied()
+                    }));
+                }
+                Ok(())
+            }
+            CoreBackend::Resnet(resnet) => {
+                let xs: Vec<Vec<f64>> = (0..n_points.saturating_sub(1))
+                    .map(|k| {
+                        waves
+                            .iter()
+                            .map(|w| w.eval(k as f64 * dt))
+                            .collect()
+                    })
+                    .collect();
+                let trajs = resnet.rollout_batch(h0s, batch, &xs);
+                out.reset(batch * dim);
+                out.reserve_rows(n_points.max(1));
+                for k in 0..trajs.first().map_or(0, Vec::len) {
+                    out.push_row_from_iter((0..batch).flat_map(|b| {
+                        trajs[b][k].iter().copied()
+                    }));
+                }
+                Ok(())
+            }
+            CoreBackend::Pjrt(_) => {
+                unreachable!("pjrt uses the serial fallback")
+            }
+        }
+    }
+
+    /// Co-scheduled batched execution for the fan-out backend: stage
+    /// *every* compatible sub-batch group first, then run them all
+    /// through one fused fan-out
+    /// ([`ShardedAnalogOde::solve_groups_into`]) instead of one thread
+    /// scope (and one barrier schedule) per group. Request validation,
+    /// seed-resolution order, lane derivation and response assembly match
+    /// `run_batch_into` exactly, so responses are bit-identical with the
+    /// toggle on or off. Staging is per-group owned storage — the
+    /// co-scheduled path sits outside the zero-allocation contract, like
+    /// the fan-out itself.
+    fn run_batch_coscheduled(
+        &mut self,
+        reqs: &[TwinRequest],
+        out: &mut Vec<Result<TwinResponse>>,
+    ) {
+        struct Stage {
+            members: Vec<usize>,
+            lane_base: Vec<usize>,
+            h0s: Vec<f64>,
+            seeds: Vec<u64>,
+            lanes: Vec<NoiseLane>,
+            n_points: usize,
+            flat: Trajectory,
+        }
+        let backend = self.backend.label();
+        let dim = self.spec.dim;
+        let dt = self.spec.dt;
+        let driven =
+            matches!(self.spec.stimulus, StimulusKind::DrivenScalar);
+        let mut sc = std::mem::take(&mut self.scratch);
+        sc.plan.plan_lanes(reqs, MAX_SUB_BATCH_LANES);
+        sc.slots.clear();
+        sc.slots.resize_with(reqs.len(), || None);
+        let mut stages: Vec<Stage> = Vec::new();
+        for g in 0..sc.plan.n_groups() {
+            let n_points = reqs[sc.plan.group(g)[0]].n_points;
+            let mut st = Stage {
+                members: Vec::new(),
+                lane_base: Vec::new(),
+                h0s: Vec::new(),
+                seeds: Vec::new(),
+                lanes: Vec::new(),
+                n_points,
+                flat: Trajectory::new(dim),
+            };
+            let mut lane_count = 0;
+            for &i in sc.plan.group(g) {
+                if driven && reqs[i].stimulus.is_none() {
+                    sc.slots[i] = Some(Err(anyhow!(
+                        "{} twin requires a stimulus",
+                        self.spec.name
+                    )));
+                    continue;
+                }
+                let h0: &[f64] = if reqs[i].h0.is_empty() {
+                    &self.spec.default_h0
+                } else {
+                    &reqs[i].h0
+                };
+                if h0.len() != dim {
+                    sc.slots[i] = Some(Err(anyhow!(
+                        "h0 dim {} != twin dim {}",
+                        h0.len(),
+                        dim
+                    )));
+                    continue;
+                }
+                if let Some(spec) = &reqs[i].ensemble {
+                    if let Err(e) = spec.validate() {
+                        sc.slots[i] = Some(Err(e));
+                        continue;
+                    }
+                }
+                st.members.push(i);
+                st.lane_base.push(lane_count);
+                for _ in 0..reqs[i].lanes() {
+                    st.h0s.extend_from_slice(h0);
+                }
+                lane_count += reqs[i].lanes();
+            }
+            // Seeds and lanes in a second pass: the sequencer lives on
+            // `self`, which the default-h0 borrow above keeps off-limits.
+            for &i in &st.members {
+                let seed = self.seeds.resolve(reqs[i].seed);
+                st.seeds.push(seed);
+                if reqs[i].ensemble.is_some() {
+                    for m in 0..reqs[i].lanes() {
+                        st.lanes.push(NoiseLane::from_seed(
+                            ensemble_member_seed(seed, m as u64),
+                        ));
+                    }
+                } else {
+                    st.lanes.push(NoiseLane::from_seed(seed));
+                }
+            }
+            if !st.members.is_empty() {
+                stages.push(st);
+            }
+        }
+        match &mut self.backend {
+            CoreBackend::AnalogSharded(ode) => {
+                let mut groups: Vec<ShardGroup<'_>> = stages
+                    .iter_mut()
+                    .map(|st| ShardGroup {
+                        h0s: &st.h0s,
+                        batch: st.lanes.len(),
+                        dt_out: dt,
+                        n_points: st.n_points,
+                        lanes: &mut st.lanes,
+                        out: &mut st.flat,
+                    })
+                    .collect();
+                ode.solve_groups_into(&mut groups);
+            }
+            _ => unreachable!(
+                "co-scheduled path requires the sharded backend"
+            ),
+        }
+        for st in &stages {
+            let batch = st.lanes.len();
+            for (k, &i) in st.members.iter().enumerate() {
+                let base = st.lane_base[k];
+                match &reqs[i].ensemble {
+                    None => {
+                        let mut t = sc.pool.get(dim);
+                        unbatch_into(&st.flat, batch, dim, base, &mut t);
+                        sc.slots[i] = Some(Ok(TwinResponse {
+                            trajectory: t,
+                            backend,
+                            seed: st.seeds[k],
+                            ensemble: None,
+                            degraded: false,
+                        }));
+                    }
+                    Some(spec) => {
+                        let shell =
+                            sc.ens_shells.pop().unwrap_or_default();
+                        let (t, stats) = assemble_ensemble_stats(
+                            spec,
+                            &st.flat,
+                            crate::twin::EnsembleSlot { batch, dim, base },
+                            &mut sc.acc,
+                            &mut sc.pool,
+                            shell,
+                        );
+                        sc.slots[i] = Some(Ok(TwinResponse {
+                            trajectory: t,
+                            backend,
+                            seed: st.seeds[k],
+                            ensemble: Some(stats),
+                            degraded: false,
+                        }));
+                    }
+                }
+            }
+        }
+        for s in sc.slots.drain(..) {
+            out.push(s.expect("every request receives a result"));
+        }
+        self.scratch = sc;
+    }
+}
+
+impl Twin for DynamicsTwin {
+    fn name(&self) -> &str {
+        self.spec.name
+    }
+
+    fn state_dim(&self) -> usize {
+        self.spec.dim
+    }
+
+    fn dt(&self) -> f64 {
+        self.spec.dt
+    }
+
+    fn default_h0(&self) -> Vec<f64> {
+        self.spec.default_h0.clone()
+    }
+
+    fn run(&mut self, req: &TwinRequest) -> Result<TwinResponse> {
+        if req.ensemble.is_some() {
+            // Ensembles always execute as one batched rollout, even when
+            // submitted serially (one request = one sub-batch of N lanes).
+            let mut out = Vec::with_capacity(1);
+            self.run_batch_into(std::slice::from_ref(req), &mut out);
+            return out.pop().expect("one result per request");
+        }
+        let wave = match self.spec.stimulus {
+            StimulusKind::DrivenScalar => {
+                Some(req.stimulus.ok_or_else(|| {
+                    anyhow!(
+                        "{} twin requires a stimulus",
+                        self.spec.name
+                    )
+                })?)
+            }
+            StimulusKind::Autonomous => None,
+        };
+        // The default-h0 copy keeps `self` free for the mutable simulate
+        // call below; the batched path stages initial states without it.
+        let default_h0;
+        let h0: &[f64] = if req.h0.is_empty() {
+            default_h0 = self.spec.default_h0.clone();
+            &default_h0
+        } else {
+            &req.h0
+        };
+        anyhow::ensure!(
+            h0.len() == self.spec.dim,
+            "h0 dim {} != twin dim {}",
+            h0.len(),
+            self.spec.dim
+        );
+        let backend = self.backend.label();
+        let seed = self.seeds.resolve(req.seed);
+        let mut lane = NoiseLane::from_seed(seed);
+        let trajectory =
+            self.simulate_lane(wave, h0, req.n_points, &mut lane)?;
+        Ok(TwinResponse {
+            trajectory,
+            backend,
+            seed,
+            ensemble: None,
+            degraded: false,
+        })
+    }
+
+    fn run_batch(
+        &mut self,
+        reqs: &[TwinRequest],
+    ) -> Vec<Result<TwinResponse>> {
+        let mut out = Vec::with_capacity(reqs.len());
+        self.run_batch_into(reqs, &mut out);
+        out
+    }
+
+    /// Batched execution: requests split into compatible sub-batches
+    /// (same `n_points`, lane-counted capacity); stimuli and initial
+    /// states are resolved per request, and a request with a missing
+    /// stimulus, the wrong h0 dimension or an invalid ensemble spec fails
+    /// alone without poisoning the rest. An ensemble request expands into
+    /// `EnsembleSpec::members` noise lanes (member `k` seeded by
+    /// [`ensemble_member_seed`]) inside the group's single batched
+    /// rollout — including the tile-sharded execution forms — and its
+    /// response carries pooled [`EnsembleStats`].
+    fn run_batch_into(
+        &mut self,
+        reqs: &[TwinRequest],
+        out: &mut Vec<Result<TwinResponse>>,
+    ) {
+        if let CoreBackend::AnalogSharded(ode) = &self.backend {
+            if ode.coschedule() {
+                return self.run_batch_coscheduled(reqs, out);
+            }
+        }
+        let backend = self.backend.label();
+        let dim = self.spec.dim;
+        let driven =
+            matches!(self.spec.stimulus, StimulusKind::DrivenScalar);
+        let mut sc = std::mem::take(&mut self.scratch);
+        sc.plan.plan_lanes(reqs, MAX_SUB_BATCH_LANES);
+        sc.slots.clear();
+        sc.slots.resize_with(reqs.len(), || None);
+        for g in 0..sc.plan.n_groups() {
+            let n_points = reqs[sc.plan.group(g)[0]].n_points;
+            sc.members.clear();
+            sc.lane_base.clear();
+            sc.waves.clear();
+            sc.h0s.clear();
+            sc.seeds.clear();
+            sc.lanes.clear();
+            let mut lane_count = 0;
+            for &i in sc.plan.group(g) {
+                let wave = match (driven, reqs[i].stimulus) {
+                    (true, Some(w)) => Some(w),
+                    (true, None) => {
+                        sc.slots[i] = Some(Err(anyhow!(
+                            "{} twin requires a stimulus",
+                            self.spec.name
+                        )));
+                        continue;
+                    }
+                    (false, _) => None,
+                };
+                let h0: &[f64] = if reqs[i].h0.is_empty() {
+                    &self.spec.default_h0
+                } else {
+                    &reqs[i].h0
+                };
+                if h0.len() != dim {
+                    sc.slots[i] = Some(Err(anyhow!(
+                        "h0 dim {} != twin dim {}",
+                        h0.len(),
+                        dim
+                    )));
+                    continue;
+                }
+                if let Some(spec) = &reqs[i].ensemble {
+                    if let Err(e) = spec.validate() {
+                        sc.slots[i] = Some(Err(e));
+                        continue;
+                    }
+                }
+                sc.members.push(i);
+                sc.lane_base.push(lane_count);
+                for _ in 0..reqs[i].lanes() {
+                    sc.h0s.extend_from_slice(h0);
+                    if let Some(w) = wave {
+                        sc.waves.push(w);
+                    }
+                }
+                lane_count += reqs[i].lanes();
+            }
+            // Seeds and lanes in a second pass: the sequencer lives on
+            // `self`, which the default-h0 borrow above keeps off-limits.
+            for &i in &sc.members {
+                let seed = self.seeds.resolve(reqs[i].seed);
+                sc.seeds.push(seed);
+                if reqs[i].ensemble.is_some() {
+                    for m in 0..reqs[i].lanes() {
+                        sc.lanes.push(NoiseLane::from_seed(
+                            ensemble_member_seed(seed, m as u64),
+                        ));
+                    }
+                } else {
+                    sc.lanes.push(NoiseLane::from_seed(seed));
+                }
+            }
+            if sc.members.is_empty() {
+                continue;
+            }
+            let batch = sc.lanes.len();
+            if matches!(self.backend, CoreBackend::Pjrt(_)) {
+                // No batched artifact path yet: per-trajectory rollouts
+                // (and therefore no single-rollout ensemble expansion).
+                for k in 0..sc.members.len() {
+                    let i = sc.members[k];
+                    if reqs[i].ensemble.is_some() {
+                        sc.slots[i] = Some(Err(anyhow!(
+                            "ensemble requests are not supported on the \
+                             pjrt backend"
+                        )));
+                        continue;
+                    }
+                    let base = sc.lane_base[k];
+                    let seed = sc.seeds[k];
+                    let wave =
+                        if driven { Some(sc.waves[base]) } else { None };
+                    let r = self
+                        .simulate_lane(
+                            wave,
+                            &sc.h0s[base * dim..(base + 1) * dim],
+                            n_points,
+                            &mut sc.lanes[base],
+                        )
+                        .map(|trajectory| TwinResponse {
+                            trajectory,
+                            backend,
+                            seed,
+                            ensemble: None,
+                            degraded: false,
+                        });
+                    sc.slots[i] = Some(r);
+                }
+                continue;
+            }
+            match self.simulate_batch_flat(
+                &sc.waves,
+                &sc.h0s,
+                batch,
+                n_points,
+                &mut sc.solver,
+                &mut sc.lanes,
+                &mut sc.flat,
+            ) {
+                Ok(()) => {
+                    for (k, &i) in sc.members.iter().enumerate() {
+                        let base = sc.lane_base[k];
+                        match &reqs[i].ensemble {
+                            None => {
+                                let mut t = sc.pool.get(dim);
+                                unbatch_into(
+                                    &sc.flat, batch, dim, base, &mut t,
+                                );
+                                sc.slots[i] = Some(Ok(TwinResponse {
+                                    trajectory: t,
+                                    backend,
+                                    seed: sc.seeds[k],
+                                    ensemble: None,
+                                    degraded: false,
+                                }));
+                            }
+                            Some(spec) => {
+                                let shell = sc
+                                    .ens_shells
+                                    .pop()
+                                    .unwrap_or_default();
+                                let (t, stats) = assemble_ensemble_stats(
+                                    spec,
+                                    &sc.flat,
+                                    crate::twin::EnsembleSlot {
+                                        batch,
+                                        dim,
+                                        base,
+                                    },
+                                    &mut sc.acc,
+                                    &mut sc.pool,
+                                    shell,
+                                );
+                                sc.slots[i] = Some(Ok(TwinResponse {
+                                    trajectory: t,
+                                    backend,
+                                    seed: sc.seeds[k],
+                                    ensemble: Some(stats),
+                                    degraded: false,
+                                }));
+                            }
+                        }
+                    }
+                }
+                Err(e) => {
+                    // Group-level failure: broadcast without touching
+                    // other groups.
+                    let msg = format!("{e:#}");
+                    for &i in &sc.members {
+                        sc.slots[i] =
+                            Some(Err(anyhow!(msg.clone())));
+                    }
+                }
+            }
+        }
+        for s in sc.slots.drain(..) {
+            out.push(s.expect("every request receives a result"));
+        }
+        self.scratch = sc;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Element-wise decay, the shared analytic fixture: dx/dt = -x.
+    struct Decay {
+        dim: usize,
+    }
+
+    impl DynField for Decay {
+        fn dim(&self) -> usize {
+            self.dim
+        }
+
+        fn eval_into(&self, _t: f64, x: &[f64], out: &mut [f64]) {
+            for (o, &v) in out.iter_mut().zip(x) {
+                *o = -v;
+            }
+        }
+    }
+
+    fn decay_twin(dim: usize) -> DynamicsTwin {
+        DynamicsTwin::new(
+            TwinSpec {
+                name: "decay",
+                field_label: "decay/digital",
+                dim,
+                dt: 0.05,
+                default_h0: vec![1.0; dim],
+                stimulus: StimulusKind::Autonomous,
+                digital_substeps: 1,
+            },
+            CoreBackend::Digital(DigitalModel::Field(Box::new(Decay {
+                dim,
+            }))),
+            7,
+        )
+    }
+
+    #[test]
+    fn dyn_field_twin_solves_and_uses_default_h0() {
+        let mut twin = decay_twin(3);
+        assert_eq!(twin.name(), "decay");
+        assert_eq!(twin.state_dim(), 3);
+        let resp =
+            twin.run(&TwinRequest::autonomous(vec![], 41)).unwrap();
+        assert_eq!(resp.backend, "digital-rk4");
+        assert_eq!(resp.trajectory.row(0), [1.0, 1.0, 1.0]);
+        let last = resp.trajectory.last().unwrap();
+        let exact = (-2.0f64).exp();
+        for &v in last {
+            assert!((v - exact).abs() < 1e-5, "decay err {v}");
+        }
+    }
+
+    #[test]
+    fn dyn_field_batch_bit_identical_to_serial() {
+        let mut twin = decay_twin(2);
+        let reqs = vec![
+            TwinRequest::autonomous(vec![1.0, -2.0], 20),
+            TwinRequest::autonomous(vec![0.25, 0.5], 9),
+            TwinRequest::autonomous(vec![], 20),
+        ];
+        let serial: Vec<_> =
+            reqs.iter().map(|r| twin.run(r).unwrap()).collect();
+        let batched = twin.run_batch(&reqs);
+        for (k, (b, s)) in batched.iter().zip(&serial).enumerate() {
+            let b = b.as_ref().unwrap();
+            assert_eq!(b.trajectory, s.trajectory, "request {k}");
+        }
+        // Warm pass with recycling: pooled buffers stay clean.
+        for (resp, s) in twin.run_batch(&reqs).into_iter().zip(&serial) {
+            let resp = resp.unwrap();
+            assert_eq!(resp.trajectory, s.trajectory);
+            twin.recycle(resp);
+        }
+        let third = twin.run_batch(&reqs);
+        for (b, s) in third.iter().zip(&serial) {
+            assert_eq!(b.as_ref().unwrap().trajectory, s.trajectory);
+        }
+    }
+
+    #[test]
+    fn dyn_field_twin_rejects_bad_h0_dim_per_request() {
+        let mut twin = decay_twin(3);
+        let results = twin.run_batch(&[
+            TwinRequest::autonomous(vec![1.0, 2.0, 3.0], 5),
+            TwinRequest::autonomous(vec![1.0], 5),
+            TwinRequest::autonomous(vec![0.5, 0.5, 0.5], 5),
+        ]);
+        assert!(results[0].is_ok());
+        let err = results[1].as_ref().err().unwrap().to_string();
+        assert!(err.contains("h0 dim 1 != twin dim 3"), "{err}");
+        assert!(results[2].is_ok());
+    }
+
+    #[test]
+    fn driven_spec_requires_stimulus() {
+        let mut twin = DynamicsTwin::new(
+            TwinSpec {
+                name: "driven-decay",
+                field_label: "driven-decay/digital",
+                dim: 1,
+                dt: 0.05,
+                default_h0: vec![1.0],
+                stimulus: StimulusKind::DrivenScalar,
+                digital_substeps: 1,
+            },
+            CoreBackend::Digital(DigitalModel::Field(Box::new(Decay {
+                dim: 1,
+            }))),
+            7,
+        );
+        let err = twin
+            .run(&TwinRequest::autonomous(vec![], 5))
+            .err()
+            .unwrap()
+            .to_string();
+        assert!(
+            err.contains("driven-decay twin requires a stimulus"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn dyn_field_ensemble_members_replay_standalone() {
+        use crate::twin::EnsembleSpec;
+        let mut twin = decay_twin(2);
+        let req = TwinRequest::autonomous(vec![0.5, -0.5], 6)
+            .with_seed(99)
+            .with_ensemble(
+                EnsembleSpec::new(4).with_member_trajectories(),
+            );
+        let resp = twin.run(&req).unwrap();
+        let ens = resp.ensemble.as_ref().unwrap();
+        assert_eq!(ens.members, 4);
+        for (k, member) in ens.member_trajectories.iter().enumerate() {
+            let standalone = twin
+                .run(
+                    &TwinRequest::autonomous(vec![0.5, -0.5], 6)
+                        .with_seed(ensemble_member_seed(99, k as u64)),
+                )
+                .unwrap();
+            assert_eq!(*member, standalone.trajectory, "member {k}");
+        }
+    }
+}

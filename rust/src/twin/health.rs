@@ -1,9 +1,11 @@
 //! Device-lifetime health monitoring: the detect → recalibrate → degrade
 //! loop over an aging analogue deployment.
 //!
-//! [`MonitoredTwin`] wraps a mortal analogue Lorenz96 twin
-//! ([`Lorenz96Twin::analog_aging`]) together with its golden digital
-//! reference. Serving advances the hardware's *virtual* clock (never
+//! [`MonitoredTwin`] wraps a mortal analogue twin
+//! ([`Lorenz96Twin::analog_aging`] or the HP equivalent — monitoring
+//! composes at the generic-core layer, so any [`DynamicsTwin`] family
+//! fits) together with its golden digital reference. Serving advances
+//! the hardware's *virtual* clock (never
 //! wall-clock — see the device-lifetime invariants in `lib.rs`); every
 //! `probe_every` rollouts a cheap probe rollout is compared against the
 //! digital reference with the paper's MRE metric (Eq. 5), and a probe
@@ -35,6 +37,8 @@ use crate::coordinator::telemetry::Telemetry;
 use crate::device::taox::DeviceConfig;
 use crate::metrics::mre::mre_eps;
 use crate::models::loader::MlpWeights;
+use crate::twin::core::DynamicsTwin;
+use crate::twin::hp::HpTwin;
 use crate::twin::lorenz96::Lorenz96Twin;
 use crate::twin::{
     assemble_ensemble_stats, ensemble_member_seed, EnsembleSlot,
@@ -44,6 +48,7 @@ use crate::twin::{
 use crate::util::rng::{derive_stream_seed, SeedSequencer};
 use crate::util::stats::EnsembleAccumulator;
 use crate::util::tensor::{Trajectory, TrajectoryPool};
+use crate::workload::stimuli::Waveform;
 
 /// Stream tag of the monitor's own auto-seed family (distinct from the
 /// deploy and aging streams derived off the same deployment seed).
@@ -125,11 +130,22 @@ pub fn probe_mre(pred: &Trajectory, truth: &Trajectory) -> f64 {
     mre_eps(pred.data(), truth.data(), PROBE_MRE_EPS)
 }
 
+/// Which twin family a monitor wraps — the recipe fault campaigns use to
+/// sample fresh per-member deployments of the same logical model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum MonitoredKind {
+    Lorenz96,
+    Hp,
+}
+
 /// An aging analogue twin under health management, with its digital
 /// reference as both probe oracle and degraded-service fallback.
 pub struct MonitoredTwin {
-    analog: Lorenz96Twin,
-    digital: Lorenz96Twin,
+    analog: DynamicsTwin,
+    digital: DynamicsTwin,
+    kind: MonitoredKind,
+    /// Probe stimulus for driven families (autonomous probes pass none).
+    probe_wave: Option<Waveform>,
     cfg: LifetimeConfig,
     /// Deployment recipe retained for fault-campaign members (each member
     /// is a fresh sampled deployment of the same logical model).
@@ -165,11 +181,73 @@ impl MonitoredTwin {
         cfg: LifetimeConfig,
     ) -> Self {
         let analog =
-            Lorenz96Twin::analog_aging(weights, device, noise, seed, substeps);
-        let digital = Lorenz96Twin::digital(weights);
+            Lorenz96Twin::analog_aging(weights, device, noise, seed, substeps)
+                .into_core();
+        let digital = Lorenz96Twin::digital(weights).into_core();
+        Self::assemble(
+            MonitoredKind::Lorenz96,
+            analog,
+            digital,
+            None,
+            "lorenz96/analog-aged",
+            weights,
+            device,
+            noise,
+            seed,
+            substeps,
+            cfg,
+        )
+    }
+
+    /// Monitored HP twin: the driven scalar family under the same
+    /// detect → recalibrate → degrade loop. Probes carry the standard
+    /// probe stimulus (driven twins reject stimulus-free requests).
+    pub fn hp(
+        weights: &MlpWeights,
+        device: &DeviceConfig,
+        noise: AnalogNoise,
+        seed: u64,
+        substeps: usize,
+        cfg: LifetimeConfig,
+    ) -> Self {
+        let analog =
+            HpTwin::analog_aging(weights, device, noise, seed, substeps)
+                .into_core();
+        let digital = HpTwin::digital(weights).into_core();
+        Self::assemble(
+            MonitoredKind::Hp,
+            analog,
+            digital,
+            Some(Waveform::sine(1.0, 50.0)),
+            "hp/analog-aged",
+            weights,
+            device,
+            noise,
+            seed,
+            substeps,
+            cfg,
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn assemble(
+        kind: MonitoredKind,
+        analog: DynamicsTwin,
+        digital: DynamicsTwin,
+        probe_wave: Option<Waveform>,
+        route: &str,
+        weights: &MlpWeights,
+        device: &DeviceConfig,
+        noise: AnalogNoise,
+        seed: u64,
+        substeps: usize,
+        cfg: LifetimeConfig,
+    ) -> Self {
         Self {
             analog,
             digital,
+            kind,
+            probe_wave,
             cfg,
             weights: weights.clone(),
             device: device.clone(),
@@ -179,7 +257,7 @@ impl MonitoredTwin {
                 seed,
                 HEALTH_SEED_TAG,
             )),
-            route: "lorenz96/analog-aged".into(),
+            route: route.into(),
             telemetry: None,
             served: 0,
             probes: 0,
@@ -250,10 +328,11 @@ impl MonitoredTwin {
     /// Rollout error of the monitored hardware against its digital
     /// reference on the standard probe request.
     fn probe_error(&mut self) -> Result<f64> {
-        let req = TwinRequest::autonomous(
-            Vec::new(),
-            self.cfg.probe_points.max(2),
-        )
+        let n = self.cfg.probe_points.max(2);
+        let req = match self.probe_wave {
+            Some(wave) => TwinRequest::driven(Vec::new(), n, wave),
+            None => TwinRequest::autonomous(Vec::new(), n),
+        }
         .with_seed(self.cfg.probe_seed);
         let a = self.analog.run(&req)?;
         let d = self.digital.run(&req)?;
@@ -334,13 +413,24 @@ impl MonitoredTwin {
         for k in 0..n {
             let dep_seed =
                 derive_stream_seed(campaign.yield_seed, k as u64);
-            let mut device = Lorenz96Twin::analog_aging(
-                &self.weights,
-                &self.device,
-                self.noise,
-                dep_seed,
-                self.substeps,
-            );
+            let mut device = match self.kind {
+                MonitoredKind::Lorenz96 => Lorenz96Twin::analog_aging(
+                    &self.weights,
+                    &self.device,
+                    self.noise,
+                    dep_seed,
+                    self.substeps,
+                )
+                .into_core(),
+                MonitoredKind::Hp => HpTwin::analog_aging(
+                    &self.weights,
+                    &self.device,
+                    self.noise,
+                    dep_seed,
+                    self.substeps,
+                )
+                .into_core(),
+            };
             if campaign.fault_fraction > 0.0 {
                 device.inject_stuck_faults(campaign.fault_fraction);
             }
@@ -530,6 +620,36 @@ mod tests {
         fn array_health_below_one(&self) -> bool {
             self.analog.array_health() < 1.0
         }
+    }
+
+    #[test]
+    fn hp_monitored_twin_serves_and_probes_driven() {
+        let mut t = MonitoredTwin::hp(
+            &crate::twin::throughput::hp_weights(),
+            &quiet_cfg(),
+            AnalogNoise::off(),
+            13,
+            100,
+            LifetimeConfig {
+                age_per_rollout_s: 1.0,
+                probe_every: 2,
+                ..Default::default()
+            },
+        );
+        assert_eq!(t.name(), "hp/analog-aged");
+        assert_eq!(t.state_dim(), 1);
+        let wave = Waveform::sine(1.0, 50.0);
+        for _ in 0..4 {
+            let r = t
+                .run(&TwinRequest::driven(vec![], 6, wave))
+                .unwrap();
+            assert_eq!(r.backend, "analog");
+            assert!(!r.degraded);
+        }
+        let s = t.lifetime();
+        assert_eq!(s.probes, 2);
+        assert!(s.last_probe_mre < 0.05, "mre {}", s.last_probe_mre);
+        assert!(!s.degraded);
     }
 
     #[test]

@@ -4,26 +4,24 @@
 //! voltage stimulus. Backends: analogue solver, Rust RK4, recurrent-ResNet
 //! baseline, or the AOT PJRT artifact.
 //!
-//! The batched request path is allocation-free in steady state: grouping,
-//! stimulus/initial-state staging, the rollout itself and the per-request
-//! response trajectories all come from reusable scratch owned by the twin
-//! (see [`Twin::run_batch_into`] and the perf invariants in `lib.rs`).
+//! Since the generic-core refactor this type is thin configuration over
+//! [`DynamicsTwin`]: every constructor builds a [`TwinSpec`] (scalar-driven,
+//! dim 1, `hp::H0` initial condition) plus a [`CoreBackend`], and all
+//! request execution — batching, stimulus staging, seed stamping, ensemble
+//! expansion, pooled responses — happens on the shared core path that
+//! `twin/core.rs` enforces the invariants on.
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
 use crate::analog::system::{AnalogMlp, AnalogNeuralOde, AnalogNoise, LayerWeights};
 use crate::device::taox::DeviceConfig;
 use crate::models::loader::MlpWeights;
-use crate::models::mlp::{BatchDrivenMlpField, DrivenMlpField, Mlp};
+use crate::models::mlp::Mlp;
 use crate::models::resnet::RecurrentResNet;
-use crate::ode::rk4::{self, Rk4};
-use crate::twin::{
-    assemble_ensemble_stats, ensemble_member_seed, EnsembleStats, GroupPlan,
-    RolloutFn, Twin, TwinRequest, TwinResponse, MAX_SUB_BATCH_LANES,
+use crate::twin::core::{
+    CoreBackend, DigitalModel, DynamicsTwin, StimulusKind, TwinSpec,
 };
-use crate::util::rng::{NoiseLane, SeedSequencer};
-use crate::util::stats::EnsembleAccumulator;
-use crate::util::tensor::{Trajectory, TrajectoryPool};
+use crate::twin::{RolloutFn, Twin, TwinRequest, TwinResponse};
 use crate::workload::stimuli::Waveform;
 
 /// Default circuit substeps per output sample for the analogue backend.
@@ -35,86 +33,31 @@ pub const DIGITAL_SUBSTEPS: usize = 1;
 /// resnet, pjrt — the seed is still resolved and echoed for replay).
 const HP_AUTO_ROOT: u64 = 0x4870_5eed_0000_0001;
 
-/// Execution backend of the HP twin.
-pub enum HpBackend {
-    /// Simulated memristive solver at a noise operating point.
-    Analog(Box<AnalogNeuralOde>),
-    /// Rust-native RK4 over the trained field.
-    Digital(Mlp),
-    /// Recurrent-ResNet discrete baseline.
-    Resnet(RecurrentResNet),
-    /// AOT HLO rollout via PJRT (expects the full half-step stimulus).
-    Pjrt(RolloutFn),
-}
-
-impl HpBackend {
-    fn label(&self) -> &'static str {
-        match self {
-            HpBackend::Analog(_) => "analog",
-            HpBackend::Digital(_) => "digital-rk4",
-            HpBackend::Resnet(_) => "resnet",
-            HpBackend::Pjrt(_) => "pjrt",
-        }
-    }
-}
-
-/// Reusable batch scratch: everything `run_batch_into` needs between the
-/// request slice and the response vector lives here so a warm twin never
-/// allocates. Taken out of `self` with `mem::take` for the duration of a
-/// batch (its `Default` is allocation-free) to sidestep borrow conflicts
-/// with the backend.
-#[derive(Default)]
-struct HpScratch {
-    plan: GroupPlan,
-    /// One slot per request; drained into the caller's vector in order.
-    slots: Vec<Option<Result<TwinResponse>>>,
-    /// Valid request indices of the current group (submission order).
-    members: Vec<usize>,
-    /// First lane slot of each valid request within the group's flat
-    /// batch (an ensemble request occupies `lanes()` consecutive slots).
-    lane_base: Vec<usize>,
-    /// Per-*lane* stimulus / initial state staging (ensemble members
-    /// replicate their request's stimulus and h0).
-    waves: Vec<Waveform>,
-    h0s: Vec<f64>,
-    /// Per-request resolved noise seeds (echoed in the responses; an
-    /// ensemble's members derive from it via [`ensemble_member_seed`]).
-    seeds: Vec<u64>,
-    /// Per-lane noise lanes (one per trajectory, rebuilt from seeds).
-    lanes: Vec<NoiseLane>,
-    /// Flat batched rollout output (rows = one lockstep sample).
-    flat: Trajectory,
-    /// Response-trajectory pool (refilled via [`HpTwin::recycle`]).
-    pool: TrajectoryPool,
-    /// Streaming ensemble moment accumulator (pooled output buffers).
-    acc: EnsembleAccumulator,
-    /// Recycled [`EnsembleStats`] container shells.
-    ens_shells: Vec<EnsembleStats>,
-    solver: HpSolverScratch,
-}
-
-/// Digital-backend solver scratch (stage buffers + stacked drive rows).
-struct HpSolverScratch {
-    rk4: Rk4,
-    u: Vec<f64>,
-}
-
-impl Default for HpSolverScratch {
-    fn default() -> Self {
-        Self { rk4: Rk4::new(0), u: Vec::new() }
-    }
-}
-
-/// The HP-memristor twin.
+/// The HP-memristor twin: configuration of the generic [`DynamicsTwin`]
+/// core.
 pub struct HpTwin {
-    backend: HpBackend,
-    dt: f64,
-    /// Auto-seed source for requests without an explicit noise seed.
-    seeds: SeedSequencer,
-    scratch: HpScratch,
+    core: DynamicsTwin,
 }
 
 impl HpTwin {
+    fn spec(dt: f64) -> TwinSpec {
+        TwinSpec {
+            name: "hp",
+            field_label: "hp/digital",
+            dim: 1,
+            dt,
+            default_h0: vec![crate::device::hp::H0],
+            stimulus: StimulusKind::DrivenScalar,
+            digital_substeps: DIGITAL_SUBSTEPS,
+        }
+    }
+
+    fn assemble(backend: CoreBackend, dt: f64, lane_root: u64) -> Self {
+        Self {
+            core: DynamicsTwin::new(Self::spec(dt), backend, lane_root),
+        }
+    }
+
     /// Build the analogue-backend twin from trained weights.
     pub fn analog(
         weights: &MlpWeights,
@@ -131,44 +74,109 @@ impl HpTwin {
         let dt = weights.dt;
         let ode =
             AnalogNeuralOde::new(mlp, 1, dt / ANALOG_SUBSTEPS as f64);
-        Self {
-            backend: HpBackend::Analog(Box::new(ode)),
-            dt,
-            seeds: SeedSequencer::new(seed),
-            scratch: HpScratch::default(),
-        }
+        Self::assemble(CoreBackend::Analog(Box::new(ode)), dt, seed)
+    }
+
+    /// Analogue-backend twin on *mortal* hardware: deployed via
+    /// [`AnalogMlp::deploy_aging`], so the crossbars keep their physical
+    /// state and expose the virtual-clock lifetime API
+    /// ([`HpTwin::advance_age`], [`HpTwin::recalibrate`], …). At age 0
+    /// this twin is bit-identical to [`HpTwin::analog`] under the same
+    /// seed and substeps.
+    pub fn analog_aging(
+        weights: &MlpWeights,
+        cfg: &DeviceConfig,
+        noise: AnalogNoise,
+        seed: u64,
+        substeps: usize,
+    ) -> Self {
+        let layers: Vec<LayerWeights> = weights
+            .layers
+            .iter()
+            .map(|(w, b)| LayerWeights::new(w, b))
+            .collect();
+        let mlp = AnalogMlp::deploy_aging(&layers, cfg, noise, seed);
+        let dt = weights.dt;
+        let substeps = substeps.max(1);
+        let ode = AnalogNeuralOde::new(mlp, 1, dt / substeps as f64);
+        Self::assemble(CoreBackend::Analog(Box::new(ode)), dt, seed)
     }
 
     /// Build the digital (Rust RK4) twin.
     pub fn digital(weights: &MlpWeights) -> Self {
-        Self {
-            backend: HpBackend::Digital(Mlp::from_weights(weights)),
-            dt: weights.dt,
-            seeds: SeedSequencer::new(HP_AUTO_ROOT),
-            scratch: HpScratch::default(),
-        }
+        Self::assemble(
+            CoreBackend::Digital(DigitalModel::Mlp(Mlp::from_weights(
+                weights,
+            ))),
+            weights.dt,
+            HP_AUTO_ROOT,
+        )
     }
 
     /// Build the recurrent-ResNet baseline twin.
     pub fn resnet(weights: &MlpWeights) -> Self {
-        Self {
-            backend: HpBackend::Resnet(RecurrentResNet::new(
-                Mlp::from_weights(weights),
-            )),
-            dt: weights.dt,
-            seeds: SeedSequencer::new(HP_AUTO_ROOT),
-            scratch: HpScratch::default(),
-        }
+        Self::assemble(
+            CoreBackend::Resnet(RecurrentResNet::new(Mlp::from_weights(
+                weights,
+            ))),
+            weights.dt,
+            HP_AUTO_ROOT,
+        )
     }
 
     /// Build the PJRT-artifact twin.
     pub fn pjrt(rollout: RolloutFn, dt: f64) -> Self {
-        Self {
-            backend: HpBackend::Pjrt(rollout),
-            dt,
-            seeds: SeedSequencer::new(HP_AUTO_ROOT),
-            scratch: HpScratch::default(),
-        }
+        Self::assemble(CoreBackend::Pjrt(rollout), dt, HP_AUTO_ROOT)
+    }
+
+    /// Unwrap into the generic core (health monitoring composes twins at
+    /// the core layer).
+    pub(crate) fn into_core(self) -> DynamicsTwin {
+        self.core
+    }
+
+    /// Whether this twin runs on mortal (aging) analogue hardware.
+    pub fn is_aging(&self) -> bool {
+        self.core.is_aging()
+    }
+
+    /// Advance the hardware's virtual clock by `dt_s` seconds. Panics on
+    /// a non-aging twin.
+    pub fn advance_age(&mut self, dt_s: f64) {
+        self.core.advance_age(dt_s);
+    }
+
+    /// Reprogram every array back to its target weights; returns the
+    /// write-verify pulse count.
+    pub fn recalibrate(&mut self) -> u64 {
+        self.core.recalibrate()
+    }
+
+    /// Virtual device age (s); 0 for immortal twins.
+    pub fn age_s(&self) -> f64 {
+        self.core.age_s()
+    }
+
+    /// Healthy-cell fraction across every deployed array (1.0 if
+    /// immortal).
+    pub fn array_health(&self) -> f64 {
+        self.core.array_health()
+    }
+
+    /// Lifetime write-verify pulses spent on recalibration.
+    pub fn lifetime_pulses(&self) -> u64 {
+        self.core.lifetime_pulses()
+    }
+
+    /// Completed recalibration count.
+    pub fn recalibrations(&self) -> u64 {
+        self.core.recalibrations()
+    }
+
+    /// Mark a random `fraction` of cells stuck. Panics on a non-aging
+    /// twin.
+    pub fn inject_stuck_faults(&mut self, fraction: f64) {
+        self.core.inject_stuck_faults(fraction);
     }
 
     /// Return a response's trajectory buffers to the twin's pool
@@ -179,12 +187,8 @@ impl HpTwin {
     /// `run_batch` draw its output trajectories from the pool instead of
     /// the allocator — the zero-allocation steady state the allocation
     /// test (`rust/tests/alloc.rs`) pins down.
-    pub fn recycle(&mut self, mut resp: TwinResponse) {
-        if let Some(mut ens) = resp.ensemble.take() {
-            ens.reclaim(&mut self.scratch.pool);
-            self.scratch.ens_shells.push(ens);
-        }
-        self.scratch.pool.put(resp.trajectory);
+    pub fn recycle(&mut self, resp: TwinResponse) {
+        self.core.recycle(resp);
     }
 
     /// Simulate under a stimulus; returns the scalar state trajectory.
@@ -196,367 +200,46 @@ impl HpTwin {
         h0: f64,
         n_points: usize,
     ) -> Result<Vec<f64>> {
-        let mut lane = NoiseLane::from_seed(self.seeds.next_seed());
-        self.simulate_lane(wave, h0, n_points, &mut lane)
-    }
-
-    /// [`HpTwin::simulate`] drawing noise from an explicit trajectory
-    /// lane — the replayable request path.
-    fn simulate_lane(
-        &mut self,
-        wave: &Waveform,
-        h0: f64,
-        n_points: usize,
-        lane: &mut NoiseLane,
-    ) -> Result<Vec<f64>> {
-        let dt = self.dt;
-        match &mut self.backend {
-            HpBackend::Analog(ode) => {
-                let w = *wave;
-                let mut traj = Trajectory::new(1);
-                ode.solve_into(
-                    &[h0],
-                    &mut |t, x: &mut [f64]| x[0] = w.eval(t),
-                    dt,
-                    n_points,
-                    lane,
-                    &mut traj,
-                );
-                Ok(traj.into_data())
-            }
-            HpBackend::Digital(mlp) => {
-                let w = *wave;
-                let mut field = DrivenMlpField::new(
-                    mlp,
-                    move |t| w.eval(t),
-                    "hp/digital",
-                );
-                let traj = rk4::solve(
-                    &mut field,
-                    &[h0],
-                    dt,
-                    n_points,
-                    DIGITAL_SUBSTEPS,
-                );
-                Ok(traj.into_data())
-            }
-            HpBackend::Resnet(resnet) => {
-                let xs: Vec<Vec<f64>> = (0..n_points.saturating_sub(1))
-                    .map(|k| vec![wave.eval(k as f64 * dt)])
-                    .collect();
-                let traj = resnet.rollout(&[h0], &xs);
-                Ok(traj.into_iter().map(|r| r[0]).collect())
-            }
-            HpBackend::Pjrt(rollout) => {
-                let xs_half = wave.sample_half_steps(n_points, dt);
-                let traj = rollout(&[h0], Some(&xs_half))?;
-                Ok(traj.into_iter().map(|r| r[0]).collect())
-            }
-        }
-    }
-
-    /// Batched simulation of one compatible sub-batch into `out` (flat
-    /// rows of width `batch`): all trajectories share `n_points` but carry
-    /// their own stimulus and initial state. Analog and Digital backends
-    /// are allocation-free with warm scratch (one device read / GEMM per
-    /// step for the whole batch); Resnet runs a true batched rollout with
-    /// staging allocations. With per-trajectory noise lanes the batched
-    /// trajectories are bit-identical to serial ones — noise on or off.
-    /// Pjrt is handled by the caller's serial fallback.
-    fn simulate_batch_flat(
-        &mut self,
-        waves: &[Waveform],
-        h0s: &[f64],
-        n_points: usize,
-        solver: &mut HpSolverScratch,
-        lanes: &mut [NoiseLane],
-        out: &mut Trajectory,
-    ) -> Result<()> {
-        let batch = waves.len();
-        debug_assert_eq!(h0s.len(), batch);
-        let dt = self.dt;
-        match &mut self.backend {
-            HpBackend::Analog(ode) => {
-                ode.solve_batch_into(
-                    h0s,
-                    batch,
-                    &mut |b, t, x: &mut [f64]| x[0] = waves[b].eval(t),
-                    dt,
-                    n_points,
-                    lanes,
-                    out,
-                );
-                Ok(())
-            }
-            HpBackend::Digital(mlp) => {
-                let mut field = BatchDrivenMlpField::new(
-                    mlp,
-                    batch,
-                    |b, t| waves[b].eval(t),
-                    &mut solver.u,
-                    "hp/digital",
-                );
-                rk4::solve_batch_into(
-                    &mut field,
-                    h0s,
-                    dt,
-                    n_points,
-                    DIGITAL_SUBSTEPS,
-                    &mut solver.rk4,
-                    out,
-                );
-                Ok(())
-            }
-            HpBackend::Resnet(resnet) => {
-                let xs: Vec<Vec<f64>> = (0..n_points.saturating_sub(1))
-                    .map(|k| {
-                        waves
-                            .iter()
-                            .map(|w| w.eval(k as f64 * dt))
-                            .collect()
-                    })
-                    .collect();
-                let trajs = resnet.rollout_batch(h0s, batch, &xs);
-                out.reset(batch);
-                out.reserve_rows(n_points.max(1));
-                for k in 0..trajs.first().map_or(0, Vec::len) {
-                    out.push_row_from_iter(
-                        (0..batch).map(|b| trajs[b][k][0]),
-                    );
-                }
-                Ok(())
-            }
-            HpBackend::Pjrt(_) => {
-                unreachable!("pjrt uses the serial fallback")
-            }
-        }
+        self.core
+            .simulate(Some(*wave), &[h0], n_points)
+            .map(|t| t.into_data())
     }
 }
 
 impl Twin for HpTwin {
     fn name(&self) -> &str {
-        "hp"
+        self.core.name()
     }
 
     fn state_dim(&self) -> usize {
-        1
+        self.core.state_dim()
     }
 
     fn dt(&self) -> f64 {
-        self.dt
+        self.core.dt()
     }
 
     fn default_h0(&self) -> Vec<f64> {
-        vec![crate::device::hp::H0]
+        self.core.default_h0()
     }
 
     fn run(&mut self, req: &TwinRequest) -> Result<TwinResponse> {
-        if req.ensemble.is_some() {
-            // Ensembles always execute as one batched rollout, even when
-            // submitted serially (one request = one sub-batch of N lanes).
-            let mut out = Vec::with_capacity(1);
-            self.run_batch_into(std::slice::from_ref(req), &mut out);
-            return out.pop().expect("one result per request");
-        }
-        let wave = req
-            .stimulus
-            .ok_or_else(|| anyhow!("hp twin requires a stimulus"))?;
-        let h0 = if req.h0.is_empty() {
-            crate::device::hp::H0
-        } else {
-            req.h0[0]
-        };
-        let backend = self.backend.label();
-        let seed = self.seeds.resolve(req.seed);
-        let mut lane = NoiseLane::from_seed(seed);
-        let h = self.simulate_lane(&wave, h0, req.n_points, &mut lane)?;
-        Ok(TwinResponse {
-            trajectory: Trajectory::from_data(1, h),
-            backend,
-            seed,
-            ensemble: None,
-            degraded: false,
-        })
+        self.core.run(req)
     }
 
     fn run_batch(
         &mut self,
         reqs: &[TwinRequest],
     ) -> Vec<Result<TwinResponse>> {
-        let mut out = Vec::with_capacity(reqs.len());
-        self.run_batch_into(reqs, &mut out);
-        out
+        self.core.run_batch(reqs)
     }
 
-    /// Batched execution: requests are split into compatible sub-batches
-    /// (same `n_points`, lane-counted capacity; stimulus and h0 are
-    /// per-trajectory) and each sub-batch runs as one batched rollout. An
-    /// ensemble request expands into `EnsembleSpec::members` noise lanes
-    /// (member `k` seeded by [`ensemble_member_seed`]) inside that single
-    /// rollout, and its response carries pooled [`EnsembleStats`].
-    /// Requests without a stimulus (or with an invalid ensemble spec) fail
-    /// individually without poisoning the batch. All bookkeeping and the
-    /// response trajectories come from the twin's reusable scratch.
     fn run_batch_into(
         &mut self,
         reqs: &[TwinRequest],
         out: &mut Vec<Result<TwinResponse>>,
     ) {
-        let backend = self.backend.label();
-        let mut sc = std::mem::take(&mut self.scratch);
-        sc.plan.plan_lanes(reqs, MAX_SUB_BATCH_LANES);
-        sc.slots.clear();
-        sc.slots.resize_with(reqs.len(), || None);
-        for g in 0..sc.plan.n_groups() {
-            let n_points = reqs[sc.plan.group(g)[0]].n_points;
-            sc.members.clear();
-            sc.lane_base.clear();
-            sc.waves.clear();
-            sc.h0s.clear();
-            sc.seeds.clear();
-            sc.lanes.clear();
-            for &i in sc.plan.group(g) {
-                let wave = match reqs[i].stimulus {
-                    Some(w) => w,
-                    None => {
-                        sc.slots[i] = Some(Err(anyhow!(
-                            "hp twin requires a stimulus"
-                        )));
-                        continue;
-                    }
-                };
-                if let Some(spec) = &reqs[i].ensemble {
-                    if let Err(e) = spec.validate() {
-                        sc.slots[i] = Some(Err(e));
-                        continue;
-                    }
-                }
-                let h0 = if reqs[i].h0.is_empty() {
-                    crate::device::hp::H0
-                } else {
-                    reqs[i].h0[0]
-                };
-                let seed = self.seeds.resolve(reqs[i].seed);
-                sc.members.push(i);
-                sc.lane_base.push(sc.lanes.len());
-                sc.seeds.push(seed);
-                if reqs[i].ensemble.is_some() {
-                    for m in 0..reqs[i].lanes() {
-                        sc.waves.push(wave);
-                        sc.h0s.push(h0);
-                        sc.lanes.push(NoiseLane::from_seed(
-                            ensemble_member_seed(seed, m as u64),
-                        ));
-                    }
-                } else {
-                    sc.waves.push(wave);
-                    sc.h0s.push(h0);
-                    sc.lanes.push(NoiseLane::from_seed(seed));
-                }
-            }
-            if sc.members.is_empty() {
-                continue;
-            }
-            if matches!(self.backend, HpBackend::Pjrt(_)) {
-                // No batched artifact path yet: per-trajectory rollouts
-                // (and therefore no single-rollout ensemble expansion).
-                for k in 0..sc.members.len() {
-                    let i = sc.members[k];
-                    if reqs[i].ensemble.is_some() {
-                        sc.slots[i] = Some(Err(anyhow!(
-                            "ensemble requests are not supported on the \
-                             pjrt backend"
-                        )));
-                        continue;
-                    }
-                    let base = sc.lane_base[k];
-                    let seed = sc.seeds[k];
-                    let r = self
-                        .simulate_lane(
-                            &sc.waves[base],
-                            sc.h0s[base],
-                            n_points,
-                            &mut sc.lanes[base],
-                        )
-                        .map(|h| TwinResponse {
-                            trajectory: Trajectory::from_data(1, h),
-                            backend,
-                            seed,
-                            ensemble: None,
-                            degraded: false,
-                        });
-                    sc.slots[i] = Some(r);
-                }
-                continue;
-            }
-            match self.simulate_batch_flat(
-                &sc.waves,
-                &sc.h0s,
-                n_points,
-                &mut sc.solver,
-                &mut sc.lanes,
-                &mut sc.flat,
-            ) {
-                Ok(()) => {
-                    let batch = sc.waves.len();
-                    for (k, &i) in sc.members.iter().enumerate() {
-                        let base = sc.lane_base[k];
-                        match &reqs[i].ensemble {
-                            None => {
-                                let mut t = sc.pool.get(1);
-                                crate::ode::batch::unbatch_into(
-                                    &sc.flat, batch, 1, base, &mut t,
-                                );
-                                sc.slots[i] = Some(Ok(TwinResponse {
-                                    trajectory: t,
-                                    backend,
-                                    seed: sc.seeds[k],
-                                    ensemble: None,
-                                    degraded: false,
-                                }));
-                            }
-                            Some(spec) => {
-                                let shell = sc
-                                    .ens_shells
-                                    .pop()
-                                    .unwrap_or_default();
-                                let (t, stats) = assemble_ensemble_stats(
-                                    spec,
-                                    &sc.flat,
-                                    crate::twin::EnsembleSlot {
-                                        batch,
-                                        dim: 1,
-                                        base,
-                                    },
-                                    &mut sc.acc,
-                                    &mut sc.pool,
-                                    shell,
-                                );
-                                sc.slots[i] = Some(Ok(TwinResponse {
-                                    trajectory: t,
-                                    backend,
-                                    seed: sc.seeds[k],
-                                    ensemble: Some(stats),
-                                    degraded: false,
-                                }));
-                            }
-                        }
-                    }
-                }
-                Err(e) => {
-                    // Group-level failure: broadcast without touching
-                    // other groups.
-                    let msg = format!("{e:#}");
-                    for &i in &sc.members {
-                        sc.slots[i] = Some(Err(anyhow!(msg.clone())));
-                    }
-                }
-            }
-        }
-        for s in sc.slots.drain(..) {
-            out.push(s.expect("every request receives a result"));
-        }
-        self.scratch = sc;
+        self.core.run_batch_into(reqs, out);
     }
 }
 
@@ -613,6 +296,48 @@ mod tests {
         let hd = dig.simulate(&wave, 0.2, 200).unwrap();
         let err = mre(&ha, &hd);
         assert!(err < 0.05, "analog vs digital MRE {err}");
+    }
+
+    #[test]
+    fn aging_twin_matches_plain_at_age_zero() {
+        let w = toy_weights();
+        let cfg = DeviceConfig {
+            fault_rate: 0.0,
+            pulse_sigma: 0.0,
+            read_noise: 0.0,
+            ..Default::default()
+        };
+        let mut plain = HpTwin::analog(&w, &cfg, AnalogNoise::off(), 1);
+        let mut aging = HpTwin::analog_aging(
+            &w,
+            &cfg,
+            AnalogNoise::off(),
+            1,
+            ANALOG_SUBSTEPS,
+        );
+        assert!(aging.is_aging() && !plain.is_aging());
+        let wave = Waveform::sine(1.0, 4.0);
+        let fresh = aging.simulate(&wave, 0.3, 20).unwrap();
+        assert_eq!(
+            fresh,
+            plain.simulate(&wave, 0.3, 20).unwrap(),
+            "aging deployment diverged from plain at age 0"
+        );
+        aging.advance_age(1e7);
+        assert_eq!(aging.age_s(), 1e7);
+        let aged = aging.simulate(&wave, 0.3, 20).unwrap();
+        let dev = |a: &[f64], b: &[f64]| {
+            a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum::<f64>()
+        };
+        assert!(dev(&aged, &fresh) > 0.0, "aging left the rollout intact");
+        let pulses = aging.recalibrate();
+        assert!(pulses > 0);
+        assert_eq!(aging.recalibrations(), 1);
+        let recal = aging.simulate(&wave, 0.3, 20).unwrap();
+        assert!(
+            dev(&recal, &fresh) < dev(&aged, &fresh),
+            "recalibration did not move the rollout back"
+        );
     }
 
     #[test]

@@ -1,0 +1,183 @@
+//! Two-level (multi-scale) Lorenz96 twin — the second analytical world in
+//! the zoo, exercising a wider state than any trained route (dim 30).
+//!
+//! K slow variables X_k each drive J fast variables Y_j (Lorenz's 1996
+//! two-scale system):
+//!
+//! ```text
+//! dX_k = -X_{k-1}(X_{k-2} - X_{k+1}) - X_k + F - (h c / b) Σ_{j∈J_k} Y_j
+//! dY_j = -c b Y_{j+1}(Y_{j+2} - Y_{j-1}) - c Y_j + (h c / b) X_{k(j)}
+//! ```
+//!
+//! State layout: `[X_0 .. X_{K-1}, Y_0 .. Y_{KJ-1}]`, both levels
+//! periodic. With the fast level zeroed the slow field reduces exactly to
+//! the one-level [`crate::workload::lorenz96`] field — pinned by a test.
+
+use crate::twin::core::{
+    CoreBackend, DigitalModel, DynField, DynamicsTwin, StimulusKind,
+    TwinSpec,
+};
+use crate::workload::lorenz96;
+
+/// Slow variables.
+pub const K: usize = 6;
+/// Fast variables per slow variable.
+pub const J: usize = 4;
+/// Total state dimension.
+pub const DIM: usize = K + K * J;
+/// Forcing on the slow level.
+pub const FORCING: f64 = 8.0;
+/// Coupling strength h.
+pub const H: f64 = 1.0;
+/// Timescale separation c.
+pub const C: f64 = 10.0;
+/// Amplitude ratio b.
+pub const B: f64 = 10.0;
+/// Output sample interval (s) — finer than the one-level twin because
+/// the fast level evolves c times quicker.
+pub const DT: f64 = 0.01;
+/// RK4 substeps per output sample.
+const SUBSTEPS: usize = 2;
+/// Auto-seed root for noise lanes on this twin.
+const L96TWO_AUTO_ROOT: u64 = 0x1962_5eed_0000_0005;
+
+/// Deterministic default initial condition: slow sites near the F = 8
+/// attractor, fast sites a small bounded ripple.
+pub fn default_y0(k: usize, j: usize) -> Vec<f64> {
+    let mut y0 = Vec::with_capacity(k + k * j);
+    for i in 0..k {
+        y0.push(FORCING + ((i as f64) * 0.9).sin());
+    }
+    for i in 0..k * j {
+        y0.push(0.1 * ((i as f64) * 0.77).cos());
+    }
+    y0
+}
+
+/// The two-level Lorenz96 vector field.
+pub struct L96TwoField {
+    k: usize,
+    j: usize,
+}
+
+impl L96TwoField {
+    pub fn new(k: usize, j: usize) -> Self {
+        assert!(k > 3, "slow level needs K > 3");
+        assert!(j > 2, "fast level needs J > 2");
+        Self { k, j }
+    }
+}
+
+impl DynField for L96TwoField {
+    fn dim(&self) -> usize {
+        self.k + self.k * self.j
+    }
+
+    fn eval_into(&self, _t: f64, x: &[f64], out: &mut [f64]) {
+        let (k, j) = (self.k, self.j);
+        let (xs, ys) = x.split_at(k);
+        let (out_x, out_y) = out.split_at_mut(k);
+        let hcb = H * C / B;
+        for i in 0..k {
+            let ip1 = xs[(i + 1) % k];
+            let im1 = xs[(i + k - 1) % k];
+            let im2 = xs[(i + k - 2) % k];
+            let fast_sum: f64 = ys[i * j..(i + 1) * j].iter().sum();
+            out_x[i] =
+                (ip1 - im2) * im1 - xs[i] + FORCING - hcb * fast_sum;
+        }
+        let n = k * j;
+        for i in 0..n {
+            let ip1 = ys[(i + 1) % n];
+            let ip2 = ys[(i + 2) % n];
+            let im1 = ys[(i + n - 1) % n];
+            out_y[i] =
+                -C * B * ip1 * (ip2 - im1) - C * ys[i] + hcb * xs[i / j];
+        }
+    }
+}
+
+/// The default registry twin: K = 6 slow, J = 4 fast sites (dim 30).
+pub fn twin() -> DynamicsTwin {
+    twin_with(K, J)
+}
+
+/// A two-level twin with explicit level sizes.
+pub fn twin_with(k: usize, j: usize) -> DynamicsTwin {
+    let spec = TwinSpec {
+        name: "l96two",
+        field_label: "l96two/digital",
+        dim: k + k * j,
+        dt: DT,
+        default_h0: default_y0(k, j),
+        stimulus: StimulusKind::Autonomous,
+        digital_substeps: SUBSTEPS,
+    };
+    DynamicsTwin::new(
+        spec,
+        CoreBackend::Digital(DigitalModel::Field(Box::new(
+            L96TwoField::new(k, j),
+        ))),
+        L96TWO_AUTO_ROOT,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::twin::{Twin, TwinRequest};
+
+    #[test]
+    fn zero_fast_level_reduces_to_one_level_field() {
+        let f = L96TwoField::new(6, 4);
+        let mut x = vec![0.0; DIM];
+        let slow = [1.0, -0.5, 2.0, 0.3, -1.2, 0.8];
+        x[..6].copy_from_slice(&slow);
+        let mut out = vec![0.0; DIM];
+        f.eval_into(0.0, &x, &mut out);
+        let mut want = vec![0.0; 6];
+        lorenz96::field_into(&slow, FORCING, &mut want);
+        for i in 0..6 {
+            assert!(
+                (out[i] - want[i]).abs() < 1e-12,
+                "slow site {i}: {} vs one-level {}",
+                out[i],
+                want[i]
+            );
+        }
+        // With Y = 0 the fast tendency is pure coupling: (hc/b) X_{k(j)}.
+        for i in 0..24 {
+            let want = H * C / B * slow[i / 4];
+            assert!((out[6 + i] - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn coupling_feeds_energy_into_the_fast_level() {
+        let mut twin = twin();
+        let resp =
+            twin.run(&TwinRequest::autonomous(vec![], 200)).unwrap();
+        let last = resp.trajectory.row(199);
+        let fast_amp: f64 =
+            last[K..].iter().map(|v| v.abs()).fold(0.0, f64::max);
+        assert!(fast_amp > 1e-3, "fast level never excited: {fast_amp}");
+    }
+
+    #[test]
+    fn trajectory_stays_on_the_attractor() {
+        let mut twin = twin();
+        let resp =
+            twin.run(&TwinRequest::autonomous(vec![], 400)).unwrap();
+        assert_eq!(resp.trajectory.dim(), DIM);
+        for s in 0..resp.trajectory.len() {
+            for (i, &v) in resp.trajectory.row(s).iter().enumerate() {
+                assert!(v.is_finite(), "sample {s} component {i} diverged");
+                let bound = if i < K { 30.0 } else { 15.0 };
+                assert!(
+                    v.abs() < bound,
+                    "sample {s} component {i} escaped: {v}"
+                );
+            }
+        }
+    }
+}

@@ -4,11 +4,13 @@
 //! Backends: analogue solver, Rust RK4, the recurrent baselines
 //! (RNN/GRU/LSTM, Fig. 4g-i), or the AOT PJRT artifact.
 //!
-//! Like the HP twin, the batched request path draws every buffer —
-//! grouping, flat initial states, the lockstep rollout and the per-request
-//! response trajectories — from reusable twin-owned scratch, so a warm
-//! `run_batch` performs no steady-state heap allocations on the Analog
-//! and Digital backends.
+//! Since the generic-core refactor this type is thin configuration over
+//! [`DynamicsTwin`]: every constructor builds a [`TwinSpec`] (autonomous,
+//! dimension from the weights, `lorenz96::default_y0` initial condition)
+//! plus a [`CoreBackend`], and all request execution — batching,
+//! grouping, seed stamping, ensemble expansion, sharded/co-scheduled
+//! dispatch, pooled responses — happens on the shared core path that
+//! `twin/core.rs` enforces the invariants on.
 
 use anyhow::Result;
 
@@ -17,20 +19,14 @@ use crate::device::taox::DeviceConfig;
 use crate::models::gru::Gru;
 use crate::models::loader::{MlpWeights, RnnWeights};
 use crate::models::lstm::Lstm;
-use crate::models::mlp::{BatchMlpField, Mlp, MlpField};
+use crate::models::mlp::Mlp;
 use crate::models::rnn::{Recurrent, VanillaRnn};
-use crate::ode::batch::unbatch_into;
-use crate::ode::rk4::{self, Rk4};
-use crate::twin::shard::{
-    ShardExecutor, ShardGroup, ShardSnapshot, ShardedAnalogOde,
+use crate::twin::core::{
+    CoreBackend, DigitalModel, DynamicsTwin, StimulusKind, TwinSpec,
 };
-use crate::twin::{
-    assemble_ensemble_stats, ensemble_member_seed, EnsembleStats, GroupPlan,
-    RolloutFn, Twin, TwinRequest, TwinResponse, MAX_SUB_BATCH_LANES,
-};
-use crate::util::rng::{NoiseLane, SeedSequencer};
-use crate::util::stats::EnsembleAccumulator;
-use crate::util::tensor::{Trajectory, TrajectoryPool};
+use crate::twin::shard::{ShardExecutor, ShardSnapshot, ShardedAnalogOde};
+use crate::twin::{RolloutFn, Twin, TwinRequest, TwinResponse};
+use crate::util::tensor::Trajectory;
 use crate::workload::lorenz96;
 
 /// Default circuit substeps per output sample for the analogue backend.
@@ -41,29 +37,6 @@ pub const DIGITAL_SUBSTEPS: usize = 1;
 /// Auto-seed root for backends built without an explicit seed (digital,
 /// recurrent, pjrt — the seed is still resolved and echoed for replay).
 const L96_AUTO_ROOT: u64 = 0x1963_5eed_0000_0002;
-
-/// Execution backend of the Lorenz96 twin.
-pub enum L96Backend {
-    Analog(Box<AnalogNeuralOde>),
-    /// Tile-sharded fan-out: one rollout spread across parallel shard
-    /// workers (states wider than one physical array).
-    AnalogSharded(Box<ShardedAnalogOde>),
-    Digital(Mlp),
-    Recurrent(Box<dyn Recurrent + Send>),
-    Pjrt(RolloutFn),
-}
-
-impl L96Backend {
-    fn label(&self) -> &'static str {
-        match self {
-            L96Backend::Analog(_) => "analog",
-            L96Backend::AnalogSharded(_) => "analog-sharded",
-            L96Backend::Digital(_) => "digital-rk4",
-            L96Backend::Recurrent(_) => "recurrent",
-            L96Backend::Pjrt(_) => "pjrt",
-        }
-    }
-}
 
 /// Analogue-backend options: circuit substeps plus the tile-shard layout.
 #[derive(Debug, Clone)]
@@ -84,70 +57,36 @@ impl Default for L96AnalogOpts {
     }
 }
 
-/// Reusable batch scratch (see `HpScratch` — same shape, flat dim-`d`
-/// initial states instead of scalar ones).
-#[derive(Default)]
-struct L96Scratch {
-    plan: GroupPlan,
-    slots: Vec<Option<Result<TwinResponse>>>,
-    members: Vec<usize>,
-    /// First lane slot of each valid request within the group's flat
-    /// batch (an ensemble request occupies `lanes()` consecutive slots).
-    lane_base: Vec<usize>,
-    /// Flat `[lanes * dim]` initial states of the current group (ensemble
-    /// members replicate their request's h0).
-    h0s: Vec<f64>,
-    /// Per-request resolved noise seeds (echoed in the responses; an
-    /// ensemble's members derive from it via [`ensemble_member_seed`]).
-    seeds: Vec<u64>,
-    /// Per-lane noise lanes (one per trajectory, rebuilt from seeds).
-    lanes: Vec<NoiseLane>,
-    flat: Trajectory,
-    pool: TrajectoryPool,
-    /// Streaming ensemble moment accumulator (pooled output buffers).
-    acc: EnsembleAccumulator,
-    /// Recycled [`EnsembleStats`] container shells.
-    ens_shells: Vec<EnsembleStats>,
-    solver: L96SolverScratch,
-}
-
-/// Digital-backend solver scratch.
-struct L96SolverScratch {
-    rk4: Rk4,
-}
-
-impl Default for L96SolverScratch {
-    fn default() -> Self {
-        Self { rk4: Rk4::new(0) }
-    }
-}
-
-/// The Lorenz96 twin.
+/// The Lorenz96 twin: configuration of the generic [`DynamicsTwin`] core.
 pub struct Lorenz96Twin {
-    backend: L96Backend,
-    dt: f64,
-    dim: usize,
-    /// Dimension-appropriate default initial condition.
-    default_h0: Vec<f64>,
-    /// Auto-seed source for requests without an explicit noise seed.
-    seeds: SeedSequencer,
-    scratch: L96Scratch,
+    core: DynamicsTwin,
 }
 
 impl Lorenz96Twin {
+    fn spec(dim: usize, dt: f64) -> TwinSpec {
+        TwinSpec {
+            name: "lorenz96",
+            field_label: "lorenz96/digital",
+            dim,
+            dt,
+            default_h0: lorenz96::default_y0(dim),
+            stimulus: StimulusKind::Autonomous,
+            digital_substeps: DIGITAL_SUBSTEPS,
+        }
+    }
+
     fn assemble(
-        backend: L96Backend,
+        backend: CoreBackend,
         dt: f64,
         dim: usize,
         lane_root: u64,
     ) -> Self {
         Self {
-            backend,
-            dt,
-            dim,
-            default_h0: lorenz96::default_y0(dim),
-            seeds: SeedSequencer::new(lane_root),
-            scratch: L96Scratch::default(),
+            core: DynamicsTwin::new(
+                Self::spec(dim, dt),
+                backend,
+                lane_root,
+            ),
         }
     }
 
@@ -190,11 +129,11 @@ impl Lorenz96Twin {
                 &ode,
                 ShardExecutor::new(opts.shards),
             );
-            L96Backend::AnalogSharded(Box::new(sharded))
+            CoreBackend::AnalogSharded(Box::new(sharded))
         } else if opts.shards > 1 {
-            L96Backend::Analog(Box::new(ode.with_shards(opts.shards)))
+            CoreBackend::Analog(Box::new(ode.with_shards(opts.shards)))
         } else {
-            L96Backend::Analog(Box::new(ode))
+            CoreBackend::Analog(Box::new(ode))
         };
         Self::assemble(backend, dt, dim, seed)
     }
@@ -223,90 +162,63 @@ impl Lorenz96Twin {
         let dt = weights.dt;
         let substeps = substeps.max(1);
         let ode = AnalogNeuralOde::new(mlp, dim, dt / substeps as f64);
-        Self::assemble(L96Backend::Analog(Box::new(ode)), dt, dim, seed)
-    }
-
-    /// The aging analogue deployment, if this twin was built with
-    /// [`Lorenz96Twin::analog_aging`].
-    fn aging_mlp(&mut self) -> Option<&mut AnalogMlp> {
-        match &mut self.backend {
-            L96Backend::Analog(ode) if ode.mlp.is_aging() => {
-                Some(&mut ode.mlp)
-            }
-            _ => None,
-        }
+        Self::assemble(CoreBackend::Analog(Box::new(ode)), dt, dim, seed)
     }
 
     /// Whether this twin runs on mortal (aging) analogue hardware.
     pub fn is_aging(&self) -> bool {
-        matches!(&self.backend, L96Backend::Analog(ode) if ode.mlp.is_aging())
+        self.core.is_aging()
     }
 
     /// Advance the hardware's virtual clock by `dt_s` seconds (drift +
     /// diffusion on every cell, engines refreshed). No-op for `dt_s <= 0`;
     /// panics on a non-aging twin.
     pub fn advance_age(&mut self, dt_s: f64) {
-        self.aging_mlp()
-            .expect("advance_age requires an analog_aging twin")
-            .advance_age(dt_s);
+        self.core.advance_age(dt_s);
     }
 
     /// Reprogram every array back to its target weights; returns the
     /// write-verify pulse count (energy via
     /// [`crate::energy::recalibration_energy`]).
     pub fn recalibrate(&mut self) -> u64 {
-        self.aging_mlp()
-            .expect("recalibrate requires an analog_aging twin")
-            .recalibrate()
+        self.core.recalibrate()
     }
 
     /// Virtual device age (s); 0 for immortal twins.
     pub fn age_s(&self) -> f64 {
-        match &self.backend {
-            L96Backend::Analog(ode) => ode.mlp.age_s(),
-            _ => 0.0,
-        }
+        self.core.age_s()
     }
 
     /// Healthy-cell fraction across every deployed array (1.0 if
     /// immortal).
     pub fn array_health(&self) -> f64 {
-        match &self.backend {
-            L96Backend::Analog(ode) => ode.mlp.array_health(),
-            _ => 1.0,
-        }
+        self.core.array_health()
     }
 
     /// Lifetime write-verify pulses spent on recalibration.
     pub fn lifetime_pulses(&self) -> u64 {
-        match &self.backend {
-            L96Backend::Analog(ode) => ode.mlp.lifetime_pulses(),
-            _ => 0,
-        }
+        self.core.lifetime_pulses()
     }
 
     /// Completed recalibration count.
     pub fn recalibrations(&self) -> u64 {
-        match &self.backend {
-            L96Backend::Analog(ode) => ode.mlp.recalibrations(),
-            _ => 0,
-        }
+        self.core.recalibrations()
     }
 
     /// Mark a random `fraction` of cells stuck (fault-injection campaigns;
     /// deterministic in the deployment's aging stream). Panics on a
     /// non-aging twin.
     pub fn inject_stuck_faults(&mut self, fraction: f64) {
-        self.aging_mlp()
-            .expect("inject_stuck_faults requires an analog_aging twin")
-            .inject_stuck_faults(fraction);
+        self.core.inject_stuck_faults(fraction);
     }
 
     /// Digital (Rust RK4) twin.
     pub fn digital(weights: &MlpWeights) -> Self {
         let dim = weights.layers.last().unwrap().0.cols;
         Self::assemble(
-            L96Backend::Digital(Mlp::from_weights(weights)),
+            CoreBackend::Digital(DigitalModel::Mlp(Mlp::from_weights(
+                weights,
+            ))),
             weights.dt,
             dim,
             L96_AUTO_ROOT,
@@ -322,7 +234,7 @@ impl Lorenz96Twin {
             other => anyhow::bail!("unknown recurrent kind '{other}'"),
         };
         Ok(Self::assemble(
-            L96Backend::Recurrent(cell),
+            CoreBackend::Recurrent(cell),
             weights.dt,
             weights.d_in,
             L96_AUTO_ROOT,
@@ -331,17 +243,18 @@ impl Lorenz96Twin {
 
     /// PJRT-artifact twin.
     pub fn pjrt(rollout: RolloutFn, dt: f64, dim: usize) -> Self {
-        Self::assemble(L96Backend::Pjrt(rollout), dt, dim, L96_AUTO_ROOT)
+        Self::assemble(CoreBackend::Pjrt(rollout), dt, dim, L96_AUTO_ROOT)
+    }
+
+    /// Unwrap into the generic core (health monitoring composes twins at
+    /// the core layer).
+    pub(crate) fn into_core(self) -> DynamicsTwin {
+        self.core
     }
 
     /// Per-shard serving counters of the fan-out backend, if sharded.
     pub fn shard_telemetry(&self) -> Option<Vec<ShardSnapshot>> {
-        match &self.backend {
-            L96Backend::AnalogSharded(ode) => {
-                Some(ode.telemetry().snapshot())
-            }
-            _ => None,
-        }
+        self.core.shard_telemetry()
     }
 
     /// Wire the fan-out backend's rollout counters into the coordinator's
@@ -350,9 +263,7 @@ impl Lorenz96Twin {
         &mut self,
         t: std::sync::Arc<crate::coordinator::telemetry::Telemetry>,
     ) {
-        if let L96Backend::AnalogSharded(ode) = &mut self.backend {
-            ode.attach_coordinator_telemetry(t);
-        }
+        self.core.attach_coordinator_telemetry(t);
     }
 
     /// Toggle co-scheduled group execution on the fan-out backend: batched
@@ -360,20 +271,14 @@ impl Lorenz96Twin {
     /// schedule ([`ShardedAnalogOde::solve_groups_into`]). No-op for
     /// unsharded backends.
     pub fn set_coschedule(&mut self, on: bool) {
-        if let L96Backend::AnalogSharded(ode) = &mut self.backend {
-            ode.set_coschedule(on);
-        }
+        self.core.set_coschedule(on);
     }
 
     /// Return a response's trajectory buffers to the twin's pool (see
     /// [`crate::twin::hp::HpTwin::recycle`]; ensemble responses hand back
     /// every stats trajectory plus the emptied container shell).
-    pub fn recycle(&mut self, mut resp: TwinResponse) {
-        if let Some(mut ens) = resp.ensemble.take() {
-            ens.reclaim(&mut self.scratch.pool);
-            self.scratch.ens_shells.push(ens);
-        }
-        self.scratch.pool.put(resp.trajectory);
+    pub fn recycle(&mut self, resp: TwinResponse) {
+        self.core.recycle(resp);
     }
 
     /// Roll out the twin from `h0` for `n_points` samples. Noise draws
@@ -384,523 +289,44 @@ impl Lorenz96Twin {
         h0: &[f64],
         n_points: usize,
     ) -> Result<Trajectory> {
-        let mut lane = NoiseLane::from_seed(self.seeds.next_seed());
-        self.simulate_lane(h0, n_points, &mut lane)
-    }
-
-    /// [`Lorenz96Twin::simulate`] drawing noise from an explicit
-    /// trajectory lane — the replayable request path.
-    fn simulate_lane(
-        &mut self,
-        h0: &[f64],
-        n_points: usize,
-        lane: &mut NoiseLane,
-    ) -> Result<Trajectory> {
-        let dt = self.dt;
-        match &mut self.backend {
-            L96Backend::Analog(ode) => {
-                let mut out = Trajectory::new(self.dim);
-                ode.solve_into(
-                    h0,
-                    &mut |_t, _x: &mut [f64]| {},
-                    dt,
-                    n_points,
-                    lane,
-                    &mut out,
-                );
-                Ok(out)
-            }
-            L96Backend::AnalogSharded(ode) => {
-                let mut out = Trajectory::new(self.dim);
-                ode.solve_into(h0, dt, n_points, lane, &mut out);
-                Ok(out)
-            }
-            L96Backend::Digital(mlp) => {
-                let mut field =
-                    MlpField { mlp, label: "lorenz96/digital" };
-                Ok(rk4::solve(
-                    &mut field,
-                    h0,
-                    dt,
-                    n_points,
-                    DIGITAL_SUBSTEPS,
-                ))
-            }
-            L96Backend::Recurrent(cell) => {
-                Ok(Trajectory::from_nested(&cell.rollout(h0, n_points)))
-            }
-            L96Backend::Pjrt(rollout) => {
-                Ok(Trajectory::from_nested(&rollout(h0, None)?))
-            }
-        }
-    }
-
-    /// Batched rollout of one compatible sub-batch into `out` (flat rows
-    /// of width `batch * dim`; shared `n_points`, per-trajectory initial
-    /// states stacked in `h0s`). Analog and Digital backends are
-    /// allocation-free with warm scratch — one multi-vector device read /
-    /// per-layer GEMM per step for the whole batch; Recurrent runs its
-    /// true batched rollout with staging allocations. Per-trajectory
-    /// noise lanes ⇒ bit-identical to serial, noise on or off. Pjrt is
-    /// handled by the caller's serial fallback.
-    fn simulate_batch_flat(
-        &mut self,
-        h0s: &[f64],
-        batch: usize,
-        n_points: usize,
-        solver: &mut L96SolverScratch,
-        lanes: &mut [NoiseLane],
-        out: &mut Trajectory,
-    ) -> Result<()> {
-        let dim = self.dim;
-        debug_assert_eq!(h0s.len(), batch * dim);
-        let dt = self.dt;
-        match &mut self.backend {
-            L96Backend::Analog(ode) => {
-                ode.solve_batch_into(
-                    h0s,
-                    batch,
-                    &mut |_b, _t, _x: &mut [f64]| {},
-                    dt,
-                    n_points,
-                    lanes,
-                    out,
-                );
-                Ok(())
-            }
-            L96Backend::AnalogSharded(ode) => {
-                ode.solve_batch_into(h0s, batch, dt, n_points, lanes, out);
-                Ok(())
-            }
-            L96Backend::Digital(mlp) => {
-                let mut field = BatchMlpField {
-                    mlp,
-                    batch,
-                    label: "lorenz96/digital",
-                };
-                rk4::solve_batch_into(
-                    &mut field,
-                    h0s,
-                    dt,
-                    n_points,
-                    DIGITAL_SUBSTEPS,
-                    &mut solver.rk4,
-                    out,
-                );
-                Ok(())
-            }
-            L96Backend::Recurrent(cell) => {
-                let h0_nested: Vec<Vec<f64>> = (0..batch)
-                    .map(|b| h0s[b * dim..(b + 1) * dim].to_vec())
-                    .collect();
-                let trajs = cell.rollout_batch(&h0_nested, n_points);
-                out.reset(batch * dim);
-                out.reserve_rows(n_points.max(1));
-                for k in 0..trajs.first().map_or(0, Vec::len) {
-                    out.push_row_from_iter(
-                        (0..batch).flat_map(|b| {
-                            trajs[b][k].iter().copied()
-                        }),
-                    );
-                }
-                Ok(())
-            }
-            L96Backend::Pjrt(_) => {
-                unreachable!("pjrt uses the serial fallback")
-            }
-        }
-    }
-
-    /// Co-scheduled batched execution for the fan-out backend: stage
-    /// *every* compatible sub-batch group first, then run them all through
-    /// one fused fan-out ([`ShardedAnalogOde::solve_groups_into`]) instead
-    /// of one thread scope (and one barrier schedule) per group. Request
-    /// validation, seed-resolution order, lane derivation and response
-    /// assembly match `run_batch_into` exactly, so responses are
-    /// bit-identical with the toggle on or off. Staging is per-group owned
-    /// storage — the co-scheduled path sits outside the zero-allocation
-    /// contract, like the fan-out itself.
-    fn run_batch_coscheduled(
-        &mut self,
-        reqs: &[TwinRequest],
-        out: &mut Vec<Result<TwinResponse>>,
-    ) {
-        struct Stage {
-            members: Vec<usize>,
-            lane_base: Vec<usize>,
-            h0s: Vec<f64>,
-            seeds: Vec<u64>,
-            lanes: Vec<NoiseLane>,
-            n_points: usize,
-            flat: Trajectory,
-        }
-        let backend = self.backend.label();
-        let dim = self.dim;
-        let dt = self.dt;
-        let mut sc = std::mem::take(&mut self.scratch);
-        sc.plan.plan_lanes(reqs, MAX_SUB_BATCH_LANES);
-        sc.slots.clear();
-        sc.slots.resize_with(reqs.len(), || None);
-        let mut stages: Vec<Stage> = Vec::new();
-        for g in 0..sc.plan.n_groups() {
-            let n_points = reqs[sc.plan.group(g)[0]].n_points;
-            let mut st = Stage {
-                members: Vec::new(),
-                lane_base: Vec::new(),
-                h0s: Vec::new(),
-                seeds: Vec::new(),
-                lanes: Vec::new(),
-                n_points,
-                flat: Trajectory::new(dim),
-            };
-            let mut lane_count = 0;
-            for &i in sc.plan.group(g) {
-                let h0: &[f64] = if reqs[i].h0.is_empty() {
-                    &self.default_h0
-                } else {
-                    &reqs[i].h0
-                };
-                if h0.len() != dim {
-                    sc.slots[i] = Some(Err(anyhow::anyhow!(
-                        "h0 dim {} != twin dim {}",
-                        h0.len(),
-                        dim
-                    )));
-                    continue;
-                }
-                if let Some(spec) = &reqs[i].ensemble {
-                    if let Err(e) = spec.validate() {
-                        sc.slots[i] = Some(Err(e));
-                        continue;
-                    }
-                }
-                st.members.push(i);
-                st.lane_base.push(lane_count);
-                for _ in 0..reqs[i].lanes() {
-                    st.h0s.extend_from_slice(h0);
-                }
-                lane_count += reqs[i].lanes();
-            }
-            // Seeds and lanes in a second pass: the sequencer lives on
-            // `self`, which the default-h0 borrow above keeps off-limits.
-            for &i in &st.members {
-                let seed = self.seeds.resolve(reqs[i].seed);
-                st.seeds.push(seed);
-                if reqs[i].ensemble.is_some() {
-                    for m in 0..reqs[i].lanes() {
-                        st.lanes.push(NoiseLane::from_seed(
-                            ensemble_member_seed(seed, m as u64),
-                        ));
-                    }
-                } else {
-                    st.lanes.push(NoiseLane::from_seed(seed));
-                }
-            }
-            if !st.members.is_empty() {
-                stages.push(st);
-            }
-        }
-        match &mut self.backend {
-            L96Backend::AnalogSharded(ode) => {
-                let mut groups: Vec<ShardGroup<'_>> = stages
-                    .iter_mut()
-                    .map(|st| ShardGroup {
-                        h0s: &st.h0s,
-                        batch: st.lanes.len(),
-                        dt_out: dt,
-                        n_points: st.n_points,
-                        lanes: &mut st.lanes,
-                        out: &mut st.flat,
-                    })
-                    .collect();
-                ode.solve_groups_into(&mut groups);
-            }
-            _ => unreachable!(
-                "co-scheduled path requires the sharded backend"
-            ),
-        }
-        for st in &stages {
-            let batch = st.lanes.len();
-            for (k, &i) in st.members.iter().enumerate() {
-                let base = st.lane_base[k];
-                match &reqs[i].ensemble {
-                    None => {
-                        let mut t = sc.pool.get(dim);
-                        unbatch_into(&st.flat, batch, dim, base, &mut t);
-                        sc.slots[i] = Some(Ok(TwinResponse {
-                            trajectory: t,
-                            backend,
-                            seed: st.seeds[k],
-                            ensemble: None,
-                            degraded: false,
-                        }));
-                    }
-                    Some(spec) => {
-                        let shell =
-                            sc.ens_shells.pop().unwrap_or_default();
-                        let (t, stats) = assemble_ensemble_stats(
-                            spec,
-                            &st.flat,
-                            crate::twin::EnsembleSlot { batch, dim, base },
-                            &mut sc.acc,
-                            &mut sc.pool,
-                            shell,
-                        );
-                        sc.slots[i] = Some(Ok(TwinResponse {
-                            trajectory: t,
-                            backend,
-                            seed: st.seeds[k],
-                            ensemble: Some(stats),
-                            degraded: false,
-                        }));
-                    }
-                }
-            }
-        }
-        for s in sc.slots.drain(..) {
-            out.push(s.expect("every request receives a result"));
-        }
-        self.scratch = sc;
+        self.core.simulate(None, h0, n_points)
     }
 }
 
 impl Twin for Lorenz96Twin {
     fn name(&self) -> &str {
-        "lorenz96"
+        self.core.name()
     }
 
     fn state_dim(&self) -> usize {
-        self.dim
+        self.core.state_dim()
     }
 
     fn dt(&self) -> f64 {
-        self.dt
+        self.core.dt()
     }
 
     fn default_h0(&self) -> Vec<f64> {
-        self.default_h0.clone()
+        self.core.default_h0()
     }
 
     fn run(&mut self, req: &TwinRequest) -> Result<TwinResponse> {
-        if req.ensemble.is_some() {
-            // Ensembles always execute as one batched rollout, even when
-            // submitted serially (one request = one sub-batch of N lanes).
-            let mut out = Vec::with_capacity(1);
-            self.run_batch_into(std::slice::from_ref(req), &mut out);
-            return out.pop().expect("one result per request");
-        }
-        // The default-h0 copy keeps `self` free for the mutable simulate
-        // call below; the batched path stages initial states without it.
-        let default_h0;
-        let h0: &[f64] = if req.h0.is_empty() {
-            default_h0 = self.default_h0.clone();
-            &default_h0
-        } else {
-            &req.h0
-        };
-        anyhow::ensure!(
-            h0.len() == self.dim,
-            "h0 dim {} != twin dim {}",
-            h0.len(),
-            self.dim
-        );
-        let backend = self.backend.label();
-        let seed = self.seeds.resolve(req.seed);
-        let mut lane = NoiseLane::from_seed(seed);
-        let trajectory = self.simulate_lane(h0, req.n_points, &mut lane)?;
-        Ok(TwinResponse {
-            trajectory,
-            backend,
-            seed,
-            ensemble: None,
-            degraded: false,
-        })
+        self.core.run(req)
     }
 
     fn run_batch(
         &mut self,
         reqs: &[TwinRequest],
     ) -> Vec<Result<TwinResponse>> {
-        let mut out = Vec::with_capacity(reqs.len());
-        self.run_batch_into(reqs, &mut out);
-        out
+        self.core.run_batch(reqs)
     }
 
-    /// Batched execution: requests split into compatible sub-batches (same
-    /// `n_points`, lane-counted capacity); initial states are resolved per
-    /// request, and a request with the wrong h0 dimension (or an invalid
-    /// ensemble spec) fails alone without poisoning the rest. An ensemble
-    /// request expands into `EnsembleSpec::members` noise lanes (member
-    /// `k` seeded by [`ensemble_member_seed`]) inside the group's single
-    /// batched rollout — including the tile-sharded execution forms — and
-    /// its response carries pooled [`EnsembleStats`].
     fn run_batch_into(
         &mut self,
         reqs: &[TwinRequest],
         out: &mut Vec<Result<TwinResponse>>,
     ) {
-        if let L96Backend::AnalogSharded(ode) = &self.backend {
-            if ode.coschedule() {
-                return self.run_batch_coscheduled(reqs, out);
-            }
-        }
-        let backend = self.backend.label();
-        let dim = self.dim;
-        let mut sc = std::mem::take(&mut self.scratch);
-        sc.plan.plan_lanes(reqs, MAX_SUB_BATCH_LANES);
-        sc.slots.clear();
-        sc.slots.resize_with(reqs.len(), || None);
-        for g in 0..sc.plan.n_groups() {
-            let n_points = reqs[sc.plan.group(g)[0]].n_points;
-            sc.members.clear();
-            sc.lane_base.clear();
-            sc.h0s.clear();
-            sc.seeds.clear();
-            sc.lanes.clear();
-            let mut lane_count = 0;
-            for &i in sc.plan.group(g) {
-                let h0: &[f64] = if reqs[i].h0.is_empty() {
-                    &self.default_h0
-                } else {
-                    &reqs[i].h0
-                };
-                if h0.len() != dim {
-                    sc.slots[i] = Some(Err(anyhow::anyhow!(
-                        "h0 dim {} != twin dim {}",
-                        h0.len(),
-                        dim
-                    )));
-                    continue;
-                }
-                if let Some(spec) = &reqs[i].ensemble {
-                    if let Err(e) = spec.validate() {
-                        sc.slots[i] = Some(Err(e));
-                        continue;
-                    }
-                }
-                sc.members.push(i);
-                sc.lane_base.push(lane_count);
-                for _ in 0..reqs[i].lanes() {
-                    sc.h0s.extend_from_slice(h0);
-                }
-                lane_count += reqs[i].lanes();
-            }
-            // Seeds and lanes in a second pass: the sequencer lives on
-            // `self`, which the default-h0 borrow above keeps off-limits.
-            for &i in &sc.members {
-                let seed = self.seeds.resolve(reqs[i].seed);
-                sc.seeds.push(seed);
-                if reqs[i].ensemble.is_some() {
-                    for m in 0..reqs[i].lanes() {
-                        sc.lanes.push(NoiseLane::from_seed(
-                            ensemble_member_seed(seed, m as u64),
-                        ));
-                    }
-                } else {
-                    sc.lanes.push(NoiseLane::from_seed(seed));
-                }
-            }
-            if sc.members.is_empty() {
-                continue;
-            }
-            let batch = sc.lanes.len();
-            if matches!(self.backend, L96Backend::Pjrt(_)) {
-                // No batched artifact path yet: per-trajectory rollouts
-                // (and therefore no single-rollout ensemble expansion).
-                for k in 0..sc.members.len() {
-                    let i = sc.members[k];
-                    if reqs[i].ensemble.is_some() {
-                        sc.slots[i] = Some(Err(anyhow::anyhow!(
-                            "ensemble requests are not supported on the \
-                             pjrt backend"
-                        )));
-                        continue;
-                    }
-                    let base = sc.lane_base[k];
-                    let seed = sc.seeds[k];
-                    let r = self
-                        .simulate_lane(
-                            &sc.h0s[base * dim..(base + 1) * dim],
-                            n_points,
-                            &mut sc.lanes[base],
-                        )
-                        .map(|trajectory| TwinResponse {
-                            trajectory,
-                            backend,
-                            seed,
-                            ensemble: None,
-                            degraded: false,
-                        });
-                    sc.slots[i] = Some(r);
-                }
-                continue;
-            }
-            match self.simulate_batch_flat(
-                &sc.h0s,
-                batch,
-                n_points,
-                &mut sc.solver,
-                &mut sc.lanes,
-                &mut sc.flat,
-            ) {
-                Ok(()) => {
-                    for (k, &i) in sc.members.iter().enumerate() {
-                        let base = sc.lane_base[k];
-                        match &reqs[i].ensemble {
-                            None => {
-                                let mut t = sc.pool.get(dim);
-                                unbatch_into(
-                                    &sc.flat, batch, dim, base, &mut t,
-                                );
-                                sc.slots[i] = Some(Ok(TwinResponse {
-                                    trajectory: t,
-                                    backend,
-                                    seed: sc.seeds[k],
-                                    ensemble: None,
-                                    degraded: false,
-                                }));
-                            }
-                            Some(spec) => {
-                                let shell = sc
-                                    .ens_shells
-                                    .pop()
-                                    .unwrap_or_default();
-                                let (t, stats) = assemble_ensemble_stats(
-                                    spec,
-                                    &sc.flat,
-                                    crate::twin::EnsembleSlot {
-                                        batch,
-                                        dim,
-                                        base,
-                                    },
-                                    &mut sc.acc,
-                                    &mut sc.pool,
-                                    shell,
-                                );
-                                sc.slots[i] = Some(Ok(TwinResponse {
-                                    trajectory: t,
-                                    backend,
-                                    seed: sc.seeds[k],
-                                    ensemble: Some(stats),
-                                    degraded: false,
-                                }));
-                            }
-                        }
-                    }
-                }
-                Err(e) => {
-                    let msg = format!("{e:#}");
-                    for &i in &sc.members {
-                        sc.slots[i] =
-                            Some(Err(anyhow::anyhow!(msg.clone())));
-                    }
-                }
-            }
-        }
-        for s in sc.slots.drain(..) {
-            out.push(s.expect("every request receives a result"));
-        }
-        self.scratch = sc;
+        self.core.run_batch_into(reqs, out);
     }
 }
 
@@ -1099,10 +525,12 @@ mod tests {
             1,
             L96AnalogOpts { shards: 2, ..Default::default() },
         );
-        assert_eq!(sharded.backend.label(), "analog");
         let reqs = mixed_requests();
         let a = mono.run_batch(&reqs);
         let b = sharded.run_batch(&reqs);
+        // Serial sharding stays inside the monolithic solver: the backend
+        // label must read "analog", not "analog-sharded".
+        assert_eq!(b[0].as_ref().unwrap().backend, "analog");
         for (k, (x, y)) in a.iter().zip(&b).enumerate() {
             assert_eq!(
                 x.as_ref().unwrap().trajectory,

@@ -27,10 +27,14 @@
 //! batched rollout, and the response carries pooled per-timestep
 //! [`EnsembleStats`] (see the ensemble invariants in `lib.rs`).
 
+pub mod core;
 pub mod health;
 pub mod hp;
+pub mod kuramoto;
+pub mod l96two;
 pub mod lorenz96;
 pub mod registry;
+pub mod scenario;
 pub mod setup;
 pub mod shard;
 pub mod throughput;

@@ -16,10 +16,28 @@ use crate::twin::Twin;
 /// A thread-safe twin factory.
 pub type TwinFactory = Arc<dyn Fn() -> Box<dyn Twin> + Send + Sync>;
 
+/// Static metadata describing a registered route: what the serve-time
+/// route table prints, what `unknown_route` errors enumerate, and what
+/// the router's pre-admission `y0` dimension check validates against.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RouteInfo {
+    /// State dimension the route's twin integrates.
+    pub dim: usize,
+    /// Output sample interval (s).
+    pub dt: f64,
+    /// Backend family label (e.g. `"analog"`, `"digital-rk4"`).
+    pub backend: &'static str,
+    /// Whether the route runs on mortal (health-monitored) hardware.
+    pub aged: bool,
+    /// Whether the route serves synthetic weights (no trained artifact).
+    pub synthetic: bool,
+}
+
 /// Registry of available twins.
 #[derive(Clone, Default)]
 pub struct TwinRegistry {
     factories: BTreeMap<String, TwinFactory>,
+    infos: BTreeMap<String, RouteInfo>,
 }
 
 impl TwinRegistry {
@@ -34,6 +52,34 @@ impl TwinRegistry {
         factory: impl Fn() -> Box<dyn Twin> + Send + Sync + 'static,
     ) {
         self.factories.insert(key.to_string(), Arc::new(factory));
+    }
+
+    /// Register a factory together with its route metadata.
+    pub fn register_info(
+        &mut self,
+        key: &str,
+        info: RouteInfo,
+        factory: impl Fn() -> Box<dyn Twin> + Send + Sync + 'static,
+    ) {
+        self.register(key, factory);
+        self.infos.insert(key.to_string(), info);
+    }
+
+    /// Metadata of a route, when it was registered with any.
+    pub fn info(&self, key: &str) -> Option<&RouteInfo> {
+        self.infos.get(key)
+    }
+
+    /// Route keys annotated with their state dimension where known —
+    /// the payload of `unknown_route` errors.
+    pub fn describe_routes(&self) -> Vec<String> {
+        self.keys()
+            .into_iter()
+            .map(|k| match self.infos.get(&k) {
+                Some(i) => format!("{k} (dim {})", i.dim),
+                None => k,
+            })
+            .collect()
     }
 
     /// Instantiate a twin.
@@ -137,5 +183,31 @@ mod tests {
         reg.register("dummy", || Box::new(DummyTwin));
         let reg2 = reg.clone();
         assert!(reg2.contains("dummy"));
+    }
+
+    #[test]
+    fn route_info_is_stored_and_described() {
+        let mut reg = TwinRegistry::new();
+        reg.register_info(
+            "hp/analog",
+            RouteInfo {
+                dim: 1,
+                dt: 1e-3,
+                backend: "analog",
+                aged: false,
+                synthetic: false,
+            },
+            || Box::new(DummyTwin),
+        );
+        reg.register("bare/route", || Box::new(DummyTwin));
+        let info = reg.info("hp/analog").expect("info registered");
+        assert_eq!(info.dim, 1);
+        assert_eq!(info.backend, "analog");
+        assert!(reg.info("bare/route").is_none());
+        let described = reg.describe_routes();
+        assert_eq!(
+            described,
+            vec!["bare/route".to_string(), "hp/analog (dim 1)".to_string()]
+        );
     }
 }

@@ -1,0 +1,766 @@
+//! Scenario DSL: declarative `*.twin` files describing one twin rollout.
+//!
+//! A scenario names a registry route plus everything needed to reproduce a
+//! run — horizon, seed, initial state, stimulus program, ensemble sweep —
+//! and optionally a set of expected-envelope assertions that turn the file
+//! into an executable acceptance fixture. The format is line-oriented:
+//!
+//! ```text
+//! # Lorenz96 reference rollout (comments run to end of line).
+//! twin lorenz96/digital
+//! steps 64
+//! seed 42
+//! y0 2.1 8.0 8.0 8.0 8.0 8.0        # omit to use the twin's default
+//! ensemble 16
+//! percentiles 10 90
+//! expect dim 6
+//! expect samples 64
+//! expect within -25 25
+//! expect final_within -25 25
+//! expect mean_abs_below 20
+//! ```
+//!
+//! Driven twins add a stimulus program, e.g. `stimulus sine 1.0 50.0`
+//! (kind, amplitude, frequency, and a modulation frequency for
+//! `modulated`).
+//!
+//! Parsing never returns a bare `Err(String)`: every failure is a
+//! [`ScenarioError`] carrying the *byte span* of the offending range, and
+//! [`ScenarioError::render`] prints a compiler-style diagnostic with the
+//! source line and a caret underline. Golden tests pin the exact spans
+//! (`rust/tests/scenarios.rs`), and every committed
+//! `examples/scenarios/*.twin` round-trips through the synthetic registry.
+
+use crate::twin::{EnsembleSpec, TwinRequest, TwinResponse};
+use crate::workload::stimuli::Waveform;
+
+/// Half-open byte range `[start, end)` into the scenario source.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    pub start: usize,
+    pub end: usize,
+}
+
+impl Span {
+    pub fn new(start: usize, end: usize) -> Self {
+        Self { start, end }
+    }
+}
+
+/// A parse failure pointing at the offending byte range.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ScenarioError {
+    pub message: String,
+    pub span: Span,
+}
+
+impl ScenarioError {
+    fn new(span: Span, message: impl Into<String>) -> Self {
+        Self { message: message.into(), span }
+    }
+
+    /// Render a compiler-style diagnostic against the source text:
+    ///
+    /// ```text
+    /// error: unknown directive 'stims'
+    ///  --> fixtures/bad.twin:3:1
+    ///  |
+    /// 3 | stims sine 1.0 4.0
+    ///  | ^^^^^
+    /// ```
+    pub fn render(&self, src: &str, origin: &str) -> String {
+        let mut line_start = 0usize;
+        let mut line_no = 1usize;
+        let mut line_text = "";
+        for (n, raw) in src.split('\n').enumerate() {
+            let end = line_start + raw.len();
+            if self.span.start <= end {
+                line_no = n + 1;
+                line_text = raw;
+                break;
+            }
+            line_start = end + 1;
+        }
+        let col = self.span.start.saturating_sub(line_start);
+        let width = self
+            .span
+            .end
+            .saturating_sub(self.span.start)
+            .clamp(1, line_text.len().saturating_sub(col).max(1));
+        let gutter = format!("{line_no}").len();
+        let pad = " ".repeat(gutter);
+        let carets = format!("{}{}", " ".repeat(col), "^".repeat(width));
+        format!(
+            "error: {}\n{} --> {}:{}:{}\n{} |\n{} | {}\n{} | {}",
+            self.message,
+            pad,
+            origin,
+            line_no,
+            col + 1,
+            pad,
+            line_no,
+            line_text,
+            pad,
+            carets
+        )
+    }
+}
+
+impl std::fmt::Display for ScenarioError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} (bytes {}..{})",
+            self.message, self.span.start, self.span.end
+        )
+    }
+}
+
+impl std::error::Error for ScenarioError {}
+
+/// One expected-envelope assertion from an `expect` directive.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expectation {
+    /// `expect dim N` — response state dimension.
+    Dim(usize),
+    /// `expect samples N` — trajectory length.
+    Samples(usize),
+    /// `expect within LO HI` — every sample of every component in range.
+    Within(f64, f64),
+    /// `expect final_within LO HI` — every component of the last sample.
+    FinalWithin(f64, f64),
+    /// `expect mean_abs_below X` — mean |sample| across the trajectory.
+    MeanAbsBelow(f64),
+}
+
+/// A parsed scenario: the declarative description of one twin rollout.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Registry route, e.g. `lorenz96/digital`.
+    pub twin: String,
+    /// Output samples to produce.
+    pub steps: usize,
+    /// Replay seed; `None` lets the twin auto-derive one.
+    pub seed: Option<u64>,
+    /// Initial state; empty means the twin's default.
+    pub y0: Vec<f64>,
+    /// Stimulus program for driven twins.
+    pub stimulus: Option<Waveform>,
+    /// Ensemble sweep size (1 lane when absent).
+    pub ensemble: Option<usize>,
+    /// Percentile bands for the ensemble sweep.
+    pub percentiles: Vec<f64>,
+    /// Expected-envelope assertions.
+    pub expectations: Vec<Expectation>,
+}
+
+#[derive(Clone, Copy)]
+struct Tok<'a> {
+    text: &'a str,
+    span: Span,
+}
+
+fn tokens(line: &str, base: usize) -> Vec<Tok<'_>> {
+    let mut out = Vec::new();
+    let mut start = None;
+    for (i, c) in line.char_indices() {
+        if c.is_whitespace() {
+            if let Some(s) = start.take() {
+                out.push(Tok {
+                    text: &line[s..i],
+                    span: Span::new(base + s, base + i),
+                });
+            }
+        } else if start.is_none() {
+            start = Some(i);
+        }
+    }
+    if let Some(s) = start {
+        out.push(Tok {
+            text: &line[s..],
+            span: Span::new(base + s, base + line.len()),
+        });
+    }
+    out
+}
+
+fn args_span(dir: &Tok<'_>, args: &[Tok<'_>]) -> Span {
+    match (args.first(), args.last()) {
+        (Some(a), Some(b)) => Span::new(a.span.start, b.span.end),
+        _ => dir.span,
+    }
+}
+
+fn parse_f64(tok: &Tok<'_>) -> Result<f64, ScenarioError> {
+    tok.text.parse().map_err(|_| {
+        ScenarioError::new(
+            tok.span,
+            format!("expected a number, found '{}'", tok.text),
+        )
+    })
+}
+
+fn parse_usize(tok: &Tok<'_>) -> Result<usize, ScenarioError> {
+    tok.text.parse().map_err(|_| {
+        ScenarioError::new(
+            tok.span,
+            format!("expected a non-negative integer, found '{}'", tok.text),
+        )
+    })
+}
+
+fn parse_u64(tok: &Tok<'_>) -> Result<u64, ScenarioError> {
+    tok.text.parse().map_err(|_| {
+        ScenarioError::new(
+            tok.span,
+            format!("expected an unsigned integer, found '{}'", tok.text),
+        )
+    })
+}
+
+fn expect_args<'a>(
+    dir: &Tok<'a>,
+    args: &'a [Tok<'a>],
+    n: usize,
+    usage: &str,
+) -> Result<&'a [Tok<'a>], ScenarioError> {
+    if args.len() < n {
+        return Err(ScenarioError::new(
+            dir.span,
+            format!("'{}' expects {usage}", dir.text),
+        ));
+    }
+    if args.len() > n {
+        return Err(ScenarioError::new(
+            args_span(dir, &args[n..]),
+            format!("'{}' expects {usage} (extra arguments)", dir.text),
+        ));
+    }
+    Ok(args)
+}
+
+fn reject_duplicate(
+    seen: &mut Option<Span>,
+    dir: &Tok<'_>,
+) -> Result<(), ScenarioError> {
+    if seen.is_some() {
+        return Err(ScenarioError::new(
+            dir.span,
+            format!("duplicate '{}' directive", dir.text),
+        ));
+    }
+    *seen = Some(dir.span);
+    Ok(())
+}
+
+impl Scenario {
+    /// Parse scenario source text. On failure the error's span points at
+    /// the offending byte range of `src`.
+    pub fn parse(src: &str) -> Result<Self, ScenarioError> {
+        let mut twin: Option<String> = None;
+        let mut twin_seen = None;
+        let mut steps: Option<usize> = None;
+        let mut steps_seen = None;
+        let mut seed: Option<u64> = None;
+        let mut seed_seen = None;
+        let mut y0: Vec<f64> = Vec::new();
+        let mut y0_seen = None;
+        let mut stimulus: Option<Waveform> = None;
+        let mut stimulus_seen = None;
+        let mut ensemble: Option<usize> = None;
+        let mut ensemble_seen = None;
+        let mut percentiles: Vec<f64> = Vec::new();
+        let mut percentiles_seen: Option<Span> = None;
+        let mut expectations = Vec::new();
+
+        let mut offset = 0usize;
+        for raw in src.split('\n') {
+            let line_start = offset;
+            offset += raw.len() + 1;
+            let line = match raw.find('#') {
+                Some(i) => &raw[..i],
+                None => raw,
+            };
+            let toks = tokens(line, line_start);
+            let Some((dir, args)) = toks.split_first() else {
+                continue;
+            };
+            match dir.text {
+                "twin" => {
+                    reject_duplicate(&mut twin_seen, dir)?;
+                    let a = expect_args(dir, args, 1, "one route argument")?;
+                    if !a[0].text.contains('/') {
+                        return Err(ScenarioError::new(
+                            a[0].span,
+                            format!(
+                                "route '{}' is not of the form \
+                                 family/backend",
+                                a[0].text
+                            ),
+                        ));
+                    }
+                    twin = Some(a[0].text.to_string());
+                }
+                "steps" => {
+                    reject_duplicate(&mut steps_seen, dir)?;
+                    let a =
+                        expect_args(dir, args, 1, "one integer argument")?;
+                    let n = parse_usize(&a[0])?;
+                    if n == 0 {
+                        return Err(ScenarioError::new(
+                            a[0].span,
+                            "steps must be at least 1",
+                        ));
+                    }
+                    steps = Some(n);
+                }
+                "seed" => {
+                    reject_duplicate(&mut seed_seen, dir)?;
+                    let a =
+                        expect_args(dir, args, 1, "one integer argument")?;
+                    seed = Some(parse_u64(&a[0])?);
+                }
+                "y0" => {
+                    reject_duplicate(&mut y0_seen, dir)?;
+                    if args.is_empty() {
+                        return Err(ScenarioError::new(
+                            dir.span,
+                            "'y0' expects at least one number \
+                             (omit the directive for the twin default)",
+                        ));
+                    }
+                    for tok in args {
+                        y0.push(parse_f64(tok)?);
+                    }
+                }
+                "stimulus" => {
+                    reject_duplicate(&mut stimulus_seen, dir)?;
+                    if args.is_empty() {
+                        return Err(ScenarioError::new(
+                            dir.span,
+                            "'stimulus' expects a waveform kind \
+                             (sine|triangular|rectangular|modulated)",
+                        ));
+                    }
+                    let kind = &args[0];
+                    let rest = &args[1..];
+                    stimulus = Some(match kind.text {
+                        "sine" => {
+                            let a = expect_args(
+                                kind,
+                                rest,
+                                2,
+                                "amplitude and frequency",
+                            )?;
+                            Waveform::sine(
+                                parse_f64(&a[0])?,
+                                parse_f64(&a[1])?,
+                            )
+                        }
+                        "triangular" => {
+                            let a = expect_args(
+                                kind,
+                                rest,
+                                2,
+                                "amplitude and frequency",
+                            )?;
+                            Waveform::triangular(
+                                parse_f64(&a[0])?,
+                                parse_f64(&a[1])?,
+                            )
+                        }
+                        "rectangular" => {
+                            let a = expect_args(
+                                kind,
+                                rest,
+                                2,
+                                "amplitude and frequency",
+                            )?;
+                            Waveform::rectangular(
+                                parse_f64(&a[0])?,
+                                parse_f64(&a[1])?,
+                            )
+                        }
+                        "modulated" => {
+                            let a = expect_args(
+                                kind,
+                                rest,
+                                3,
+                                "amplitude, frequency and \
+                                 modulation frequency",
+                            )?;
+                            Waveform::modulated(
+                                parse_f64(&a[0])?,
+                                parse_f64(&a[1])?,
+                                parse_f64(&a[2])?,
+                            )
+                        }
+                        other => {
+                            return Err(ScenarioError::new(
+                                kind.span,
+                                format!(
+                                    "unknown waveform '{other}' (expected \
+                                     sine|triangular|rectangular|\
+                                     modulated)"
+                                ),
+                            ));
+                        }
+                    });
+                }
+                "ensemble" => {
+                    reject_duplicate(&mut ensemble_seen, dir)?;
+                    let a =
+                        expect_args(dir, args, 1, "one integer argument")?;
+                    let n = parse_usize(&a[0])?;
+                    if n == 0 {
+                        return Err(ScenarioError::new(
+                            a[0].span,
+                            "ensemble must have at least 1 member",
+                        ));
+                    }
+                    ensemble = Some(n);
+                }
+                "percentiles" => {
+                    reject_duplicate(&mut percentiles_seen, dir)?;
+                    if args.is_empty() {
+                        return Err(ScenarioError::new(
+                            dir.span,
+                            "'percentiles' expects at least one number",
+                        ));
+                    }
+                    for tok in args {
+                        let p = parse_f64(tok)?;
+                        if !(0.0..=100.0).contains(&p) {
+                            return Err(ScenarioError::new(
+                                tok.span,
+                                format!(
+                                    "percentile {p} outside 0..=100"
+                                ),
+                            ));
+                        }
+                        percentiles.push(p);
+                    }
+                }
+                "expect" => {
+                    if args.is_empty() {
+                        return Err(ScenarioError::new(
+                            dir.span,
+                            "'expect' needs an assertion kind (dim|\
+                             samples|within|final_within|mean_abs_below)",
+                        ));
+                    }
+                    let kind = &args[0];
+                    let rest = &args[1..];
+                    expectations.push(match kind.text {
+                        "dim" => {
+                            let a = expect_args(
+                                kind,
+                                rest,
+                                1,
+                                "one integer argument",
+                            )?;
+                            Expectation::Dim(parse_usize(&a[0])?)
+                        }
+                        "samples" => {
+                            let a = expect_args(
+                                kind,
+                                rest,
+                                1,
+                                "one integer argument",
+                            )?;
+                            Expectation::Samples(parse_usize(&a[0])?)
+                        }
+                        "within" => {
+                            let a = expect_args(
+                                kind,
+                                rest,
+                                2,
+                                "a low and a high bound",
+                            )?;
+                            Expectation::Within(
+                                parse_f64(&a[0])?,
+                                parse_f64(&a[1])?,
+                            )
+                        }
+                        "final_within" => {
+                            let a = expect_args(
+                                kind,
+                                rest,
+                                2,
+                                "a low and a high bound",
+                            )?;
+                            Expectation::FinalWithin(
+                                parse_f64(&a[0])?,
+                                parse_f64(&a[1])?,
+                            )
+                        }
+                        "mean_abs_below" => {
+                            let a = expect_args(
+                                kind,
+                                rest,
+                                1,
+                                "one numeric bound",
+                            )?;
+                            Expectation::MeanAbsBelow(parse_f64(&a[0])?)
+                        }
+                        other => {
+                            return Err(ScenarioError::new(
+                                kind.span,
+                                format!(
+                                    "unknown expectation '{other}' \
+                                     (expected dim|samples|within|\
+                                     final_within|mean_abs_below)"
+                                ),
+                            ));
+                        }
+                    });
+                }
+                other => {
+                    return Err(ScenarioError::new(
+                        dir.span,
+                        format!("unknown directive '{other}'"),
+                    ));
+                }
+            }
+        }
+
+        let twin = twin.ok_or_else(|| {
+            ScenarioError::new(
+                Span::new(0, 0),
+                "missing required 'twin' directive",
+            )
+        })?;
+        let steps = steps.ok_or_else(|| {
+            ScenarioError::new(
+                Span::new(0, 0),
+                "missing required 'steps' directive",
+            )
+        })?;
+        if let (Some(span), None) = (percentiles_seen, ensemble) {
+            return Err(ScenarioError::new(
+                span,
+                "'percentiles' requires an 'ensemble' directive",
+            ));
+        }
+
+        Ok(Self {
+            twin,
+            steps,
+            seed,
+            y0,
+            stimulus,
+            ensemble,
+            percentiles,
+            expectations,
+        })
+    }
+
+    /// Build the [`TwinRequest`] this scenario describes.
+    pub fn to_request(&self) -> TwinRequest {
+        let mut req = match self.stimulus {
+            Some(wave) => {
+                TwinRequest::driven(self.y0.clone(), self.steps, wave)
+            }
+            None => TwinRequest::autonomous(self.y0.clone(), self.steps),
+        };
+        if let Some(seed) = self.seed {
+            req = req.with_seed(seed);
+        }
+        if let Some(members) = self.ensemble {
+            let mut spec = EnsembleSpec::new(members);
+            if !self.percentiles.is_empty() {
+                spec = spec.with_percentiles(self.percentiles.clone());
+            }
+            req = req.with_ensemble(spec);
+        }
+        req
+    }
+
+    /// Evaluate every `expect` assertion against a response. Returns the
+    /// list of violated assertions (empty = all pass).
+    pub fn check(&self, resp: &TwinResponse) -> Vec<String> {
+        let traj = &resp.trajectory;
+        let mut failures = Vec::new();
+        for exp in &self.expectations {
+            match *exp {
+                Expectation::Dim(want) => {
+                    if traj.dim() != want {
+                        failures.push(format!(
+                            "expect dim {want}: response dim is {}",
+                            traj.dim()
+                        ));
+                    }
+                }
+                Expectation::Samples(want) => {
+                    if traj.len() != want {
+                        failures.push(format!(
+                            "expect samples {want}: response has {} \
+                             samples",
+                            traj.len()
+                        ));
+                    }
+                }
+                Expectation::Within(lo, hi) => {
+                    let bad = (0..traj.len())
+                        .flat_map(|i| traj.row(i).iter().copied())
+                        .find(|v| !(lo..=hi).contains(v));
+                    if let Some(v) = bad {
+                        failures.push(format!(
+                            "expect within {lo} {hi}: sample {v} escapes \
+                             the envelope"
+                        ));
+                    }
+                }
+                Expectation::FinalWithin(lo, hi) => {
+                    let bad = traj
+                        .last()
+                        .into_iter()
+                        .flat_map(|row| row.iter().copied())
+                        .find(|v| !(lo..=hi).contains(v));
+                    if let Some(v) = bad {
+                        failures.push(format!(
+                            "expect final_within {lo} {hi}: final \
+                             component {v} escapes the envelope"
+                        ));
+                    }
+                }
+                Expectation::MeanAbsBelow(bound) => {
+                    let mut sum = 0.0;
+                    let mut count = 0usize;
+                    for i in 0..traj.len() {
+                        for v in traj.row(i) {
+                            sum += v.abs();
+                            count += 1;
+                        }
+                    }
+                    let mean = if count == 0 { 0.0 } else { sum / count as f64 };
+                    // NaN means also fail the envelope, so compare via
+                    // the negation rather than `mean >= bound`.
+                    let passes = mean < bound;
+                    if !passes {
+                        failures.push(format!(
+                            "expect mean_abs_below {bound}: mean |x| is \
+                             {mean}"
+                        ));
+                    }
+                }
+            }
+        }
+        failures
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tensor::Trajectory;
+
+    const GOOD: &str = "\
+# reference rollout
+twin lorenz96/digital
+steps 16
+seed 42
+y0 2.1 8.0 8.0 8.0 8.0 8.0
+ensemble 4
+percentiles 10 90
+expect dim 6
+expect samples 16
+expect within -30 30
+";
+
+    #[test]
+    fn parses_a_full_scenario() {
+        let s = Scenario::parse(GOOD).unwrap();
+        assert_eq!(s.twin, "lorenz96/digital");
+        assert_eq!(s.steps, 16);
+        assert_eq!(s.seed, Some(42));
+        assert_eq!(s.y0.len(), 6);
+        assert!(s.stimulus.is_none());
+        assert_eq!(s.ensemble, Some(4));
+        assert_eq!(s.percentiles, vec![10.0, 90.0]);
+        assert_eq!(s.expectations.len(), 3);
+        let req = s.to_request();
+        assert_eq!(req.n_points, 16);
+        assert_eq!(req.seed, Some(42));
+        assert_eq!(req.lanes(), 4);
+    }
+
+    #[test]
+    fn driven_scenario_builds_a_driven_request() {
+        let s = Scenario::parse(
+            "twin hp/digital\nsteps 8\nstimulus sine 1.0 50.0\n",
+        )
+        .unwrap();
+        let wave = s.stimulus.expect("stimulus parsed");
+        assert_eq!(wave, Waveform::sine(1.0, 50.0));
+        assert!(s.to_request().stimulus.is_some());
+    }
+
+    #[test]
+    fn unknown_directive_spans_the_token() {
+        let src = "twin hp/digital\nsteps 8\nstims sine 1.0 4.0\n";
+        let err = Scenario::parse(src).unwrap_err();
+        assert_eq!(err.span, Span::new(24, 29));
+        assert_eq!(&src[err.span.start..err.span.end], "stims");
+        let pretty = err.render(src, "bad.twin");
+        assert!(pretty.contains("bad.twin:3:1"), "{pretty}");
+        assert!(pretty.contains("^^^^^"), "{pretty}");
+    }
+
+    #[test]
+    fn bad_number_spans_the_argument() {
+        let src = "twin hp/digital\nsteps eight\n";
+        let err = Scenario::parse(src).unwrap_err();
+        assert_eq!(&src[err.span.start..err.span.end], "eight");
+    }
+
+    #[test]
+    fn duplicate_directive_is_rejected() {
+        let src = "twin hp/digital\nsteps 4\ntwin hp/analog\n";
+        let err = Scenario::parse(src).unwrap_err();
+        assert!(err.message.contains("duplicate 'twin'"), "{err}");
+        assert_eq!(&src[err.span.start..err.span.end], "twin");
+        assert_eq!(err.span.start, 24);
+    }
+
+    #[test]
+    fn missing_twin_is_reported() {
+        let err = Scenario::parse("steps 4\n").unwrap_err();
+        assert!(err.message.contains("missing required 'twin'"));
+    }
+
+    #[test]
+    fn percentiles_require_ensemble() {
+        let src = "twin a/b\nsteps 4\npercentiles 10 90\n";
+        let err = Scenario::parse(src).unwrap_err();
+        assert!(err.message.contains("requires an 'ensemble'"), "{err}");
+        assert_eq!(&src[err.span.start..err.span.end], "percentiles");
+    }
+
+    #[test]
+    fn expectations_flag_envelope_escapes() {
+        let s = Scenario::parse(
+            "twin a/b\nsteps 2\nexpect dim 1\nexpect samples 2\n\
+             expect within -1 1\nexpect final_within -1 1\n\
+             expect mean_abs_below 0.5\n",
+        )
+        .unwrap();
+        let ok = TwinResponse {
+            trajectory: Trajectory::from_data(1, vec![0.1, 0.2]),
+            backend: "digital-rk4",
+            seed: 0,
+            ensemble: None,
+            degraded: false,
+        };
+        assert!(s.check(&ok).is_empty());
+        let bad = TwinResponse {
+            trajectory: Trajectory::from_data(1, vec![0.1, 3.0]),
+            backend: "digital-rk4",
+            seed: 0,
+            ensemble: None,
+            degraded: false,
+        };
+        let failures = s.check(&bad);
+        assert_eq!(failures.len(), 3, "{failures:?}");
+    }
+}

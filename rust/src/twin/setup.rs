@@ -5,6 +5,7 @@
 //! | route                | backend                              |
 //! |----------------------|--------------------------------------|
 //! | `hp/analog`          | memristive solver (simulated chip)   |
+//! | `hp/analog-aged`     | aging crossbar behind the health monitor |
 //! | `hp/digital`         | Rust RK4 on the trained field        |
 //! | `hp/resnet`          | recurrent-ResNet baseline            |
 //! | `hp/pjrt`            | AOT HLO rollout via PJRT             |
@@ -14,6 +15,13 @@
 //! | `lorenz96/digital`   | Rust RK4                             |
 //! | `lorenz96/rnn|gru|lstm` | recurrent baselines               |
 //! | `lorenz96/pjrt`      | AOT HLO rollout via PJRT             |
+//! | `kuramoto/digital`   | RK4 on the closed-form coupled-oscillator field |
+//! | `l96two/digital`     | RK4 on the closed-form two-level Lorenz96 field |
+//!
+//! Every route is registered with a [`RouteInfo`] (dim, dt, backend
+//! family, aged/synthetic flags): `memode serve` prints the table at
+//! startup, `unknown_route` wire errors enumerate it, and the router
+//! validates request `y0` dimensions against it before admission.
 
 use std::sync::Arc;
 
@@ -30,7 +38,8 @@ use crate::runtime::artifacts::{
 use crate::runtime::service::PjrtHandle;
 use crate::twin::hp::HpTwin;
 use crate::twin::lorenz96::Lorenz96Twin;
-use crate::twin::registry::TwinRegistry;
+use crate::twin::registry::{RouteInfo, TwinRegistry};
+use crate::twin::{kuramoto, l96two};
 
 /// All trained weights from `artifacts/weights/`.
 #[derive(Debug, Clone)]
@@ -68,6 +77,34 @@ impl TrainedWeights {
     }
 }
 
+/// Immortal-route metadata shorthand (aged/synthetic flags default off).
+fn info(dim: usize, dt: f64, backend: &'static str) -> RouteInfo {
+    RouteInfo { dim, dt, backend, aged: false, synthetic: false }
+}
+
+/// Register the closed-form analytic worlds. They need no trained
+/// artifacts (the vector fields are exact), so both the production and
+/// the synthetic registry carry them — each is one [`DynField`]
+/// (`crate::twin::core::DynField`) impl plus this stanza.
+fn register_analytic_worlds(reg: &mut TwinRegistry) {
+    reg.register_info(
+        "kuramoto/digital",
+        RouteInfo {
+            synthetic: true,
+            ..info(kuramoto::DIM, kuramoto::DT, "digital-rk4")
+        },
+        || Box::new(kuramoto::twin()),
+    );
+    reg.register_info(
+        "l96two/digital",
+        RouteInfo {
+            synthetic: true,
+            ..info(l96two::DIM, l96two::DT, "digital-rk4")
+        },
+        || Box::new(l96two::twin()),
+    );
+}
+
 /// Build the route table. `pjrt` is optional: CPU-only flows (device
 /// characterisation, analogue-only experiments) work without artifacts
 /// compiled into a PJRT service.
@@ -94,22 +131,60 @@ pub fn build_registry_with_telemetry(
     let device = cfg.device.clone();
     let noise = cfg.noise;
     let seed = cfg.seed;
+    let hp_dt = weights.hp_node.dt;
+    let l96_dt = weights.l96_node.dt;
+    let l96_dim = weights.l96_node.layers.last().unwrap().0.cols;
 
     // -- HP memristor twin ------------------------------------------------
     {
         let w = Arc::clone(&weights.hp_node);
         let dev = device.clone();
-        reg.register("hp/analog", move || {
+        reg.register_info("hp/analog", info(1, hp_dt, "analog"), move || {
             Box::new(HpTwin::analog(&w, &dev, noise, seed))
         });
     }
     {
+        // Health-monitored aging HP route: the paper's physically-deployed
+        // twin on a mortal crossbar, under the same detect → recalibrate →
+        // degrade loop as `lorenz96/analog-aged`. Faults stay on — yield
+        // is what the lifetime loop manages.
         let w = Arc::clone(&weights.hp_node);
-        reg.register("hp/digital", move || Box::new(HpTwin::digital(&w)));
+        let dev = device.clone();
+        let tel = telemetry.clone();
+        reg.register_info(
+            "hp/analog-aged",
+            RouteInfo { aged: true, ..info(1, hp_dt, "analog") },
+            move || {
+                let mut twin = crate::twin::health::MonitoredTwin::hp(
+                    &w,
+                    &dev,
+                    noise,
+                    seed,
+                    crate::twin::hp::ANALOG_SUBSTEPS,
+                    crate::twin::health::LifetimeConfig::default(),
+                );
+                if let Some(t) = &tel {
+                    twin = twin
+                        .with_telemetry("hp/analog-aged", Arc::clone(t));
+                }
+                Box::new(twin)
+            },
+        );
+    }
+    {
+        let w = Arc::clone(&weights.hp_node);
+        reg.register_info(
+            "hp/digital",
+            info(1, hp_dt, "digital-rk4"),
+            move || Box::new(HpTwin::digital(&w)),
+        );
     }
     {
         let w = Arc::clone(&weights.hp_resnet);
-        reg.register("hp/resnet", move || Box::new(HpTwin::resnet(&w)));
+        let dt = w.dt;
+        reg.register_info("hp/resnet", info(1, dt, "resnet"), move || {
+            Box::new(HpTwin::resnet(&w))
+        });
     }
 
     // -- Lorenz96 twin ----------------------------------------------------
@@ -121,9 +196,11 @@ pub fn build_registry_with_telemetry(
         // yield faults. Mirror that convention — faults stay on for the
         // HP twin and the Fig. 2 characterisation.
         let dev = DeviceConfig { fault_rate: 0.0, ..device.clone() };
-        reg.register("lorenz96/analog", move || {
-            Box::new(Lorenz96Twin::analog(&w, &dev, noise, seed))
-        });
+        reg.register_info(
+            "lorenz96/analog",
+            info(l96_dim, l96_dt, "analog"),
+            move || Box::new(Lorenz96Twin::analog(&w, &dev, noise, seed)),
+        );
     }
     {
         // Tile-sharded fan-out route: the same deployment split across
@@ -133,24 +210,28 @@ pub fn build_registry_with_telemetry(
         let dev = DeviceConfig { fault_rate: 0.0, ..device.clone() };
         let tel = telemetry.clone();
         let coschedule = cfg.serve.coschedule;
-        reg.register("lorenz96/analog-sharded", move || {
-            let mut twin = Lorenz96Twin::analog_opts(
-                &w,
-                &dev,
-                noise,
-                seed,
-                crate::twin::lorenz96::L96AnalogOpts {
-                    shards: 2,
-                    parallel: true,
-                    ..Default::default()
-                },
-            );
-            twin.set_coschedule(coschedule);
-            if let Some(t) = &tel {
-                twin.attach_coordinator_telemetry(Arc::clone(t));
-            }
-            Box::new(twin)
-        });
+        reg.register_info(
+            "lorenz96/analog-sharded",
+            info(l96_dim, l96_dt, "analog-sharded"),
+            move || {
+                let mut twin = Lorenz96Twin::analog_opts(
+                    &w,
+                    &dev,
+                    noise,
+                    seed,
+                    crate::twin::lorenz96::L96AnalogOpts {
+                        shards: 2,
+                        parallel: true,
+                        ..Default::default()
+                    },
+                );
+                twin.set_coschedule(coschedule);
+                if let Some(t) = &tel {
+                    twin.attach_coordinator_telemetry(Arc::clone(t));
+                }
+                Box::new(twin)
+            },
+        );
     }
     {
         // Health-monitored aging route: the same deployment on a mortal
@@ -162,69 +243,85 @@ pub fn build_registry_with_telemetry(
         let w = Arc::clone(&weights.l96_node);
         let dev = device.clone();
         let tel = telemetry.clone();
-        reg.register("lorenz96/analog-aged", move || {
-            let mut twin = crate::twin::health::MonitoredTwin::lorenz96(
-                &w,
-                &dev,
-                noise,
-                seed,
-                crate::twin::lorenz96::ANALOG_SUBSTEPS,
-                crate::twin::health::LifetimeConfig::default(),
-            );
-            if let Some(t) = &tel {
-                twin = twin
-                    .with_telemetry("lorenz96/analog-aged", Arc::clone(t));
-            }
-            Box::new(twin)
-        });
+        reg.register_info(
+            "lorenz96/analog-aged",
+            RouteInfo { aged: true, ..info(l96_dim, l96_dt, "analog") },
+            move || {
+                let mut twin =
+                    crate::twin::health::MonitoredTwin::lorenz96(
+                        &w,
+                        &dev,
+                        noise,
+                        seed,
+                        crate::twin::lorenz96::ANALOG_SUBSTEPS,
+                        crate::twin::health::LifetimeConfig::default(),
+                    );
+                if let Some(t) = &tel {
+                    twin = twin.with_telemetry(
+                        "lorenz96/analog-aged",
+                        Arc::clone(t),
+                    );
+                }
+                Box::new(twin)
+            },
+        );
     }
     {
         let w = Arc::clone(&weights.l96_node);
-        reg.register("lorenz96/digital", move || {
-            Box::new(Lorenz96Twin::digital(&w))
-        });
+        reg.register_info(
+            "lorenz96/digital",
+            info(l96_dim, l96_dt, "digital-rk4"),
+            move || Box::new(Lorenz96Twin::digital(&w)),
+        );
     }
     for (route, w) in [
         ("lorenz96/rnn", Arc::clone(&weights.l96_rnn)),
         ("lorenz96/gru", Arc::clone(&weights.l96_gru)),
         ("lorenz96/lstm", Arc::clone(&weights.l96_lstm)),
     ] {
-        reg.register(route, move || {
+        let ri = info(w.d_in, w.dt, "recurrent");
+        reg.register_info(route, ri, move || {
             Box::new(
                 Lorenz96Twin::recurrent(&w)
                     .expect("validated at load time"),
             )
         });
     }
+    register_analytic_worlds(&mut reg);
 
     // -- PJRT routes (when a runtime service is up) -------------------------
     if let Some(handle) = pjrt {
         let manifest = ArtifactManifest::load(&cfg.artifacts_dir)?;
         let hp_meta = manifest.get("hp_rollout")?.clone();
         let l96_meta = manifest.get("l96_rollout")?.clone();
-        let hp_dt = weights.hp_node.dt;
-        let l96_dt = weights.l96_node.dt;
-        let dim = weights.l96_node.layers.last().unwrap().0.cols;
         {
             let h = handle.clone();
             let meta = hp_meta;
-            reg.register("hp/pjrt", move || {
-                Box::new(HpTwin::pjrt(
-                    driven_rollout_fn(h.clone(), &meta),
-                    hp_dt,
-                ))
-            });
+            reg.register_info(
+                "hp/pjrt",
+                info(1, hp_dt, "pjrt"),
+                move || {
+                    Box::new(HpTwin::pjrt(
+                        driven_rollout_fn(h.clone(), &meta),
+                        hp_dt,
+                    ))
+                },
+            );
         }
         {
             let h = handle;
             let meta = l96_meta;
-            reg.register("lorenz96/pjrt", move || {
-                Box::new(Lorenz96Twin::pjrt(
-                    autonomous_rollout_fn(h.clone(), &meta),
-                    l96_dt,
-                    dim,
-                ))
-            });
+            reg.register_info(
+                "lorenz96/pjrt",
+                info(l96_dim, l96_dt, "pjrt"),
+                move || {
+                    Box::new(Lorenz96Twin::pjrt(
+                        autonomous_rollout_fn(h.clone(), &meta),
+                        l96_dt,
+                        l96_dim,
+                    ))
+                },
+            );
         }
     }
     Ok(reg)
@@ -243,6 +340,9 @@ pub fn build_registry_with_telemetry(
 /// | `lorenz96/analog-sharded` | quiet solver, tile-sharded fan-out (co-scheduling via `MEMODE_COSCHEDULE`) |
 /// | `lorenz96/analog-aged` | aging crossbar behind the health monitor |
 /// | `hp/digital`           | RK4 on the trained-shape HP field        |
+/// | `hp/analog-aged`       | aging crossbar behind the health monitor |
+/// | `kuramoto/digital`     | RK4 on the coupled-oscillator field      |
+/// | `l96two/digital`       | RK4 on the two-level Lorenz96 field      |
 ///
 /// Pass the coordinator's [`Telemetry`](crate::coordinator::telemetry)
 /// so the aged route's lifetime snapshots surface in served metrics.
@@ -262,31 +362,44 @@ pub fn build_synthetic_registry(
     let mut reg = TwinRegistry::new();
     let noise = AnalogNoise { read: 0.01, prog: 0.0 };
     let seed = 42;
+    let synth =
+        |dim: usize, dt: f64, backend: &'static str| RouteInfo {
+            synthetic: true,
+            ..info(dim, dt, backend)
+        };
     {
         let w = decay_mlp_weights(6);
-        reg.register("lorenz96/digital", move || {
-            Box::new(Lorenz96Twin::digital(&w))
-        });
+        let dt = w.dt;
+        reg.register_info(
+            "lorenz96/digital",
+            synth(6, dt, "digital-rk4"),
+            move || Box::new(Lorenz96Twin::digital(&w)),
+        );
     }
     {
         let w = decay_mlp_weights(6);
+        let dt = w.dt;
         let dev = DeviceConfig {
             fault_rate: 0.0,
             pulse_sigma: 0.0,
             ..Default::default()
         };
-        reg.register("lorenz96/analog", move || {
-            Box::new(Lorenz96Twin::analog_opts(
-                &w,
-                &dev,
-                noise,
-                seed,
-                crate::twin::lorenz96::L96AnalogOpts {
-                    substeps: SYNTH_SUBSTEPS,
-                    ..Default::default()
-                },
-            ))
-        });
+        reg.register_info(
+            "lorenz96/analog",
+            synth(6, dt, "analog"),
+            move || {
+                Box::new(Lorenz96Twin::analog_opts(
+                    &w,
+                    &dev,
+                    noise,
+                    seed,
+                    crate::twin::lorenz96::L96AnalogOpts {
+                        substeps: SYNTH_SUBSTEPS,
+                        ..Default::default()
+                    },
+                ))
+            },
+        );
     }
     {
         // Tile-sharded fan-out over the same quiet deployment, so the
@@ -299,60 +412,111 @@ pub fn build_synthetic_registry(
             pulse_sigma: 0.0,
             ..Default::default()
         };
+        let dt = w.dt;
         let tel = telemetry.clone();
-        reg.register("lorenz96/analog-sharded", move || {
-            let mut twin = Lorenz96Twin::analog_opts(
-                &w,
-                &dev,
-                noise,
-                seed,
-                crate::twin::lorenz96::L96AnalogOpts {
-                    substeps: SYNTH_SUBSTEPS,
-                    shards: 2,
-                    parallel: true,
-                },
-            );
-            twin.set_coschedule(
-                crate::twin::shard::coschedule_from_env(),
-            );
-            if let Some(t) = &tel {
-                twin.attach_coordinator_telemetry(Arc::clone(t));
-            }
-            Box::new(twin)
-        });
+        reg.register_info(
+            "lorenz96/analog-sharded",
+            synth(6, dt, "analog-sharded"),
+            move || {
+                let mut twin = Lorenz96Twin::analog_opts(
+                    &w,
+                    &dev,
+                    noise,
+                    seed,
+                    crate::twin::lorenz96::L96AnalogOpts {
+                        substeps: SYNTH_SUBSTEPS,
+                        shards: 2,
+                        parallel: true,
+                    },
+                );
+                twin.set_coschedule(
+                    crate::twin::shard::coschedule_from_env(),
+                );
+                if let Some(t) = &tel {
+                    twin.attach_coordinator_telemetry(Arc::clone(t));
+                }
+                Box::new(twin)
+            },
+        );
     }
     {
         // Aging crossbar behind the health monitor: light probe cadence
         // so short smoke runs stay fast, but rollouts still age the
         // device and can trigger recalibration / degraded fallback.
         let w = decay_mlp_weights(6);
+        let dt = w.dt;
         let dev = DeviceConfig::default();
         let tel = telemetry.clone();
-        reg.register("lorenz96/analog-aged", move || {
-            let mut twin = MonitoredTwin::lorenz96(
-                &w,
-                &dev,
-                noise,
-                seed,
-                SYNTH_SUBSTEPS,
-                LifetimeConfig {
-                    age_per_rollout_s: 3600.0,
-                    probe_every: 64,
-                    probe_points: 8,
-                    ..Default::default()
-                },
-            );
-            if let Some(t) = &tel {
-                twin = twin
-                    .with_telemetry("lorenz96/analog-aged", Arc::clone(t));
-            }
-            Box::new(twin)
-        });
+        reg.register_info(
+            "lorenz96/analog-aged",
+            RouteInfo { aged: true, ..synth(6, dt, "analog") },
+            move || {
+                let mut twin = MonitoredTwin::lorenz96(
+                    &w,
+                    &dev,
+                    noise,
+                    seed,
+                    SYNTH_SUBSTEPS,
+                    LifetimeConfig {
+                        age_per_rollout_s: 3600.0,
+                        probe_every: 64,
+                        probe_points: 8,
+                        ..Default::default()
+                    },
+                );
+                if let Some(t) = &tel {
+                    twin = twin.with_telemetry(
+                        "lorenz96/analog-aged",
+                        Arc::clone(t),
+                    );
+                }
+                Box::new(twin)
+            },
+        );
     }
     {
         let w = hp_weights();
-        reg.register("hp/digital", move || Box::new(HpTwin::digital(&w)));
+        let dt = w.dt;
+        reg.register_info(
+            "hp/digital",
+            synth(1, dt, "digital-rk4"),
+            move || Box::new(HpTwin::digital(&w)),
+        );
     }
+    {
+        // Aging HP route over the same trained-shape synthetic weights:
+        // the driven family behind the health monitor, light probe
+        // cadence for smoke runs.
+        let w = hp_weights();
+        let dt = w.dt;
+        let dev = DeviceConfig::default();
+        let tel = telemetry.clone();
+        reg.register_info(
+            "hp/analog-aged",
+            RouteInfo { aged: true, ..synth(1, dt, "analog") },
+            move || {
+                let mut twin = MonitoredTwin::hp(
+                    &w,
+                    &dev,
+                    noise,
+                    seed,
+                    SYNTH_SUBSTEPS,
+                    LifetimeConfig {
+                        age_per_rollout_s: 3600.0,
+                        probe_every: 64,
+                        probe_points: 8,
+                        ..Default::default()
+                    },
+                );
+                if let Some(t) = &tel {
+                    twin = twin
+                        .with_telemetry("hp/analog-aged", Arc::clone(t));
+                }
+                Box::new(twin)
+            },
+        );
+    }
+    register_analytic_worlds(&mut reg);
     reg
 }
 
@@ -401,6 +565,7 @@ mod tests {
         let reg = build_registry(&c, &w, None).unwrap();
         for route in [
             "hp/analog",
+            "hp/analog-aged",
             "hp/digital",
             "hp/resnet",
             "lorenz96/analog",
@@ -410,10 +575,19 @@ mod tests {
             "lorenz96/rnn",
             "lorenz96/gru",
             "lorenz96/lstm",
+            "kuramoto/digital",
+            "l96two/digital",
         ] {
             assert!(reg.contains(route), "missing {route}");
+            assert!(reg.info(route).is_some(), "no metadata for {route}");
         }
         assert!(!reg.contains("hp/pjrt"));
+        let aged = reg.info("hp/analog-aged").unwrap();
+        assert!(aged.aged);
+        assert_eq!(aged.dim, 1);
+        let kur = reg.info("kuramoto/digital").unwrap();
+        assert_eq!(kur.dim, crate::twin::kuramoto::DIM);
+        assert_eq!(kur.backend, "digital-rk4");
     }
 
     #[test]
@@ -425,8 +599,13 @@ mod tests {
             "lorenz96/analog-sharded",
             "lorenz96/analog-aged",
             "hp/digital",
+            "hp/analog-aged",
+            "kuramoto/digital",
+            "l96two/digital",
         ] {
             assert!(reg.contains(route), "missing {route}");
+            let info = reg.info(route).expect("synthetic route metadata");
+            assert!(info.synthetic, "{route} not flagged synthetic");
         }
         // Every factory must actually instantiate and serve a rollout
         // (HP is a driven twin, so its smoke request carries a stimulus).

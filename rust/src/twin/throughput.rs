@@ -54,7 +54,10 @@ pub struct ThroughputEntry {
 /// `l96d64/analog` at equal B tracks the lifetime bookkeeping's hot-path
 /// overhead — which must stay ~zero, since aging only mutates cached
 /// conductances at `advance_age` time, never per read.
-pub const ROUTES: [&str; 8] = [
+/// `kuramoto/digital` and `l96two/digital` are the zoo's closed-form
+/// analytic worlds on the generic core's `DynField` digital path — their
+/// rows track the shared request-execution machinery at dims 16 and 30.
+pub const ROUTES: [&str; 10] = [
     "hp/analog",
     "hp/digital",
     "l96/analog",
@@ -63,6 +66,8 @@ pub const ROUTES: [&str; 8] = [
     "l96d64/analog-shard2",
     "l96d64/analog-ens32",
     "l96d64/analog-aged",
+    "kuramoto/digital",
+    "l96two/digital",
 ];
 
 /// Circuit substeps for the d = 64 routes (smaller than the paper-default
@@ -117,10 +122,14 @@ pub fn l96d64_weights() -> MlpWeights {
     synth_mlp(&[(64, 64), (64, 64)], 0.02, "l96", 77)
 }
 
-/// Per-route state dimension of the Lorenz96 routes.
+/// Per-route state dimension of the autonomous routes.
 fn route_dim(route: &str) -> usize {
     if route.starts_with("l96d64/") {
         64
+    } else if route.starts_with("kuramoto/") {
+        crate::twin::kuramoto::DIM
+    } else if route.starts_with("l96two/") {
+        crate::twin::l96two::DIM
     } else {
         6
     }
@@ -179,6 +188,8 @@ pub fn make_twin(route: &str) -> Box<dyn Twin> {
             1,
             D64_SUBSTEPS,
         )),
+        "kuramoto/digital" => Box::new(crate::twin::kuramoto::twin()),
+        "l96two/digital" => Box::new(crate::twin::l96two::twin()),
         other => panic!("unknown throughput route '{other}'"),
     }
 }
@@ -665,6 +676,16 @@ mod tests {
     fn bit_identity_gate_holds_on_quiet_twins() {
         assert_bit_identical("hp/analog", 4, 8);
         assert_bit_identical("l96/digital", 4, 8);
+        assert_bit_identical("kuramoto/digital", 4, 8);
+        assert_bit_identical("l96two/digital", 4, 8);
+    }
+
+    #[test]
+    fn analytic_route_requests_are_route_shaped() {
+        let kur = requests("kuramoto/digital", 2, 5);
+        assert!(kur.iter().all(|r| r.h0.len() == 16));
+        let two = requests("l96two/digital", 2, 5);
+        assert!(two.iter().all(|r| r.h0.len() == 30));
     }
 
     #[test]

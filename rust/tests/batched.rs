@@ -142,6 +142,27 @@ fn prop_l96_analog_run_batch_reproduces_serial_exactly() {
 }
 
 #[test]
+fn prop_analytic_worlds_run_batch_reproduces_serial_exactly() {
+    // The closed-form worlds (Kuramoto, two-level Lorenz96) register as
+    // bare `DynamicsTwin`s, so this pins the shared core's batched path
+    // directly rather than through a wrapper type. Empty h0 falls back
+    // to the twin's own default state, which is valid here — only the
+    // wrong-dimension requests must fail, and on both paths.
+    let kuramoto = RefCell::new(memode::twin::kuramoto::twin());
+    check(
+        &Config { cases: 12, ..Default::default() },
+        |r| gen_l96_requests(r, memode::twin::kuramoto::DIM),
+        |reqs| batch_equals_serial(&mut *kuramoto.borrow_mut(), reqs),
+    );
+    let l96two = RefCell::new(memode::twin::l96two::twin());
+    check(
+        &Config { cases: 12, ..Default::default() },
+        |r| gen_l96_requests(r, memode::twin::l96two::DIM),
+        |reqs| batch_equals_serial(&mut *l96two.borrow_mut(), reqs),
+    );
+}
+
+#[test]
 fn prop_hp_run_batch_reproduces_serial_exactly() {
     let waves = [
         Waveform::sine(1.0, 4.0),

@@ -1,0 +1,121 @@
+//! Scenario DSL acceptance.
+//!
+//! Two halves:
+//! * golden diagnostics — the parser's byte spans and rendered
+//!   compiler-style output are pinned exactly, so a refactor cannot
+//!   silently regress the `--> file:line:col` + caret pointing;
+//! * round-trip — every committed `examples/scenarios/*.twin` fixture
+//!   parses, builds its request, executes against the synthetic
+//!   registry and satisfies its own `expect` assertions.
+
+use memode::twin::scenario::{Scenario, Span};
+use memode::twin::setup::build_synthetic_registry;
+use memode::twin::Twin;
+
+fn scenarios_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("examples")
+        .join("scenarios")
+}
+
+#[test]
+fn golden_unknown_directive_diagnostic() {
+    let src = "twin hp/digital\nsteps 8\nstims sine 1.0 4.0\n";
+    let err = Scenario::parse(src).unwrap_err();
+    assert_eq!(err.span, Span::new(24, 29));
+    assert_eq!(&src[err.span.start..err.span.end], "stims");
+    let expected = [
+        "error: unknown directive 'stims'",
+        "  --> fixtures/bad.twin:3:1",
+        "  |",
+        "3 | stims sine 1.0 4.0",
+        "  | ^^^^^",
+    ]
+    .join("\n");
+    assert_eq!(err.render(src, "fixtures/bad.twin"), expected);
+}
+
+#[test]
+fn golden_bad_argument_diagnostic_points_mid_line() {
+    let src = "twin l96two/digital\nsteps twelve\n";
+    let err = Scenario::parse(src).unwrap_err();
+    assert_eq!(err.span, Span::new(26, 32));
+    assert_eq!(&src[err.span.start..err.span.end], "twelve");
+    let expected = [
+        "error: expected a non-negative integer, found 'twelve'",
+        "  --> bad.twin:2:7",
+        "  |",
+        "2 | steps twelve",
+        "  |       ^^^^^^",
+    ]
+    .join("\n");
+    assert_eq!(err.render(src, "bad.twin"), expected);
+}
+
+#[test]
+fn golden_percentile_range_diagnostic() {
+    let src = "twin a/b\nsteps 4\nensemble 8\npercentiles 10 120\n";
+    let err = Scenario::parse(src).unwrap_err();
+    assert_eq!(&src[err.span.start..err.span.end], "120");
+    assert!(err.message.contains("outside 0..=100"), "{err}");
+}
+
+#[test]
+fn committed_scenarios_execute_against_the_synthetic_registry() {
+    let dir = scenarios_dir();
+    let mut paths: Vec<_> = std::fs::read_dir(&dir)
+        .expect("examples/scenarios exists")
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().and_then(|x| x.to_str()) == Some("twin"))
+        .collect();
+    paths.sort();
+    assert!(
+        paths.len() >= 4,
+        "expected >= 4 committed scenario fixtures, found {}",
+        paths.len()
+    );
+    let reg = build_synthetic_registry(None);
+    for path in paths {
+        let name = path.display().to_string();
+        let src = std::fs::read_to_string(&path).unwrap();
+        let sc = Scenario::parse(&src)
+            .unwrap_or_else(|e| panic!("{}", e.render(&src, &name)));
+        let mut twin = reg
+            .create(&sc.twin)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        let resp = twin
+            .run(&sc.to_request())
+            .unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        let failures = sc.check(&resp);
+        assert!(failures.is_empty(), "{name}: {failures:?}");
+        // Fixtures pin their seed so reruns are bit-identical; enforce
+        // that convention on everything committed.
+        assert_eq!(
+            resp.seed,
+            sc.seed.expect("committed fixtures pin a seed"),
+            "{name}: response does not echo the pinned seed"
+        );
+    }
+}
+
+#[test]
+fn committed_scenarios_route_to_registered_twins() {
+    // Pure parse-level lint (what `memode scenario check` runs in CI):
+    // every fixture names a synthetic-registry route.
+    let reg = build_synthetic_registry(None);
+    for entry in std::fs::read_dir(scenarios_dir()).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|x| x.to_str()) != Some("twin") {
+            continue;
+        }
+        let src = std::fs::read_to_string(&path).unwrap();
+        let sc = Scenario::parse(&src).unwrap();
+        assert!(
+            reg.contains(&sc.twin),
+            "{}: route '{}' is not in the synthetic registry",
+            path.display(),
+            sc.twin
+        );
+    }
+}
